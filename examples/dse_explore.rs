@@ -1,0 +1,61 @@
+//! Design-space exploration demo (paper Table I / §IV-B): sweep the HLS
+//! pragma space for one GEMM layer on the PL and the tile allocations on
+//! the AIE, print the Pareto frontiers, and show what the DSE winner
+//! looks like.
+//!
+//! ```bash
+//! cargo run --release --example dse_explore -- [n]
+//! ```
+
+use apdrl::graph::LayerKind;
+use apdrl::hw::{vek280, Component, Format};
+use apdrl::profile::dse::{explore_aie, explore_pl, partition_factors, unroll_factors};
+
+fn main() {
+    let n: usize = std::env::args().nth(1).and_then(|v| v.parse().ok()).unwrap_or(512);
+    let platform = vek280();
+    let kind = LayerKind::Mm { m: n, k: n, n };
+
+    println!("Table I design space for a {n}x{n}x{n} GEMM:");
+    println!("  dataflow: 2, func pipeline: 2, loop pipeline: 2");
+    println!("  loop unroll points: {} (log2 progression)", unroll_factors((n * n).min(4096)).len());
+    println!("  array partition points (fp16): {}", partition_factors(Format::Fp16).len());
+
+    println!("\nPL Pareto frontier (COMBA-substitute, fp16):");
+    let pl = explore_pl(platform.spec(Component::PL), &kind, Format::Fp16, platform.pl_dsp);
+    for d in &pl {
+        println!(
+            "  {:>6} DSP  {:>7.1} kLUT  {:>12.1} µs   (DF={} FP={} LP={} LU={} AP={})",
+            d.resource,
+            d.kluts,
+            d.latency_us,
+            d.config.dataflow as u8,
+            d.config.func_pipeline as u8,
+            d.config.loop_pipeline as u8,
+            d.config.unroll,
+            d.config.array_partition
+        );
+    }
+
+    println!("\nAIE Pareto frontier (CHARM-substitute, bf16):");
+    let aie = explore_aie(
+        platform.spec(Component::AIE),
+        &kind,
+        Format::Bf16,
+        platform.aie_tiles,
+        platform.aie_lanes_per_tile,
+    );
+    for d in &aie {
+        println!("  {:>6} tiles {:>12.1} µs", d.resource, d.latency_us);
+    }
+
+    let pl_best = pl.last().unwrap();
+    let aie_best = aie.last().unwrap();
+    println!(
+        "\nDSE winners: PL {:.1} µs vs AIE {:.1} µs -> {} wins at n={n}",
+        pl_best.latency_us,
+        aie_best.latency_us,
+        if pl_best.latency_us < aie_best.latency_us { "PL" } else { "AIE" }
+    );
+    println!("(crossover behaviour is the paper's Fig 6; sweep n to see it move)");
+}

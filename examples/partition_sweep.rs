@@ -1,0 +1,52 @@
+//! Partitioning-behaviour sweep (paper Fig 15 + §V-C analysis): how the
+//! ILP's PL/AIE split of DDPG-LunarCont evolves with batch size, and how
+//! the ILP compares against the greedy and HEFT baselines (the ablation
+//! DESIGN.md calls out).
+//!
+//! ```bash
+//! cargo run --release --example partition_sweep
+//! ```
+
+use apdrl::coordinator::combo;
+use apdrl::graph::build_train_graph;
+use apdrl::hw::vek280;
+use apdrl::partition::heuristics::{greedy, heft};
+use apdrl::partition::{solve_ilp, Problem};
+use apdrl::profile::profile_dag;
+
+fn main() {
+    let c = combo("ddpg_lunar");
+    let platform = vek280();
+    println!("DDPG-LunarCont partitioning vs batch size (paper Fig 15)\n");
+    println!(
+        "{:>6} | {:>10} | {:>12} | {:>12} | {:>12} | ILP gain",
+        "batch", "AIE nodes", "ILP µs", "HEFT µs", "greedy µs"
+    );
+    for bs in [64usize, 128, 256, 512, 1024, 2048] {
+        let dag = build_train_graph(&c.train_spec(bs));
+        let profiles = profile_dag(&dag, &platform, true);
+        let problem = Problem::new(&dag, &profiles, &platform, true);
+        let ilp = solve_ilp(&problem);
+        let h = heft(&problem);
+        let g = greedy(&problem);
+        println!(
+            "{bs:>6} | {:>4} of {:>2}  | {:>12.1} | {:>12.1} | {:>12.1} | {:.2}x vs greedy",
+            ilp.aie_nodes(&dag),
+            dag.mm_nodes().len(),
+            ilp.makespan_us,
+            h.makespan_us,
+            g.makespan_us,
+            g.makespan_us / ilp.makespan_us
+        );
+    }
+    println!("\nAIE-resident layers at bs=1024:");
+    let dag = build_train_graph(&c.train_spec(1024));
+    let profiles = profile_dag(&dag, &platform, true);
+    let problem = Problem::new(&dag, &profiles, &platform, true);
+    let ilp = solve_ilp(&problem);
+    for (i, p) in ilp.assignment.iter().enumerate() {
+        if p.component == apdrl::hw::Component::AIE {
+            println!("  {}", dag.nodes[i].name);
+        }
+    }
+}

@@ -1,0 +1,7 @@
+"""Build-time compile path of the AP-DRL reproduction (L1 + L2).
+
+Never imported at runtime: `make artifacts` runs `python -m compile.aot`,
+which lowers every (algorithm, environment, precision) train/act step to
+HLO text under artifacts/, and the rust coordinator is self-contained from
+then on.
+"""

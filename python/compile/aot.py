@@ -1,0 +1,134 @@
+"""AOT lowering: every (combo, kind, mode) train/act step -> HLO text.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the rust `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Also emits ``artifacts/manifest.json`` describing each artifact's
+positional I/O layout for the rust marshaling layer, and skips lowering
+when sources are unchanged (content hash) so `make artifacts` is a no-op
+on a built tree.
+
+Usage: cd python && python -m compile.aot [--out-dir ../artifacts]
+       [--only NAME_SUBSTR] [--force]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import combos, trainstep
+from .kernels.gemm import gemm as gemm_kernel
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _source_hash():
+    """Hash of every compile/ source file — the artifact invalidation key."""
+    h = hashlib.sha256()
+    root = os.path.dirname(__file__)
+    for dirpath, _, files in sorted(os.walk(root)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(dirpath, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def _spec_list(args):
+    """Flatten example args into [(shape, dtype), ...] in pytree order —
+    the positional convention the rust executor follows."""
+    flat, _ = jax.tree_util.tree_flatten(args)
+    return [
+        {"shape": list(a.shape), "dtype": jnp.dtype(a.dtype).name} for a in flat
+    ]
+
+
+def _gemm_artifact(n, fmt):
+    """Square-GEMM artifact for §Perf L1 wallclock (Fig 6's ladder)."""
+
+    def fn(x, w):
+        return (gemm_kernel(x, w, fmt=fmt),)
+
+    spec = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    return fn, (spec, spec), dict(kind="gemm", n=n, fmt=fmt)
+
+
+def artifact_list():
+    """Yield (name, fn, args, meta) for everything we lower."""
+    for combo_name, cfg in combos.COMBOS.items():
+        for mode in combos.MODES:
+            for kind in ("train", "act"):
+                # bf16 act == same graph as bf16 train's forward; still
+                # lowered (cheap) so any mode is runnable end-to-end.
+                name = f"{combo_name}_{mode}_{kind}"
+                fn, args, meta = trainstep.build(cfg, kind, mode)
+                meta = dict(meta, combo=combo_name, env=cfg["env"])
+                yield name, fn, args, meta
+    for n in combos.GEMM_SIZES:
+        for fmt in combos.GEMM_FMTS:
+            name = f"gemm_{n}_{fmt}"
+            fn, args, meta = _gemm_artifact(n, fmt)
+            yield name, fn, args, meta
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    ap.add_argument("--force", action="store_true")
+    ns = ap.parse_args()
+    os.makedirs(ns.out_dir, exist_ok=True)
+    manifest_path = os.path.join(ns.out_dir, "manifest.json")
+    src_hash = _source_hash()
+
+    old = {}
+    if os.path.exists(manifest_path) and not ns.force:
+        with open(manifest_path) as f:
+            old = json.load(f)
+        if old.get("source_hash") == src_hash and ns.only is None:
+            print("artifacts up to date (source hash match); nothing to do")
+            return 0
+
+    entries = dict(old.get("artifacts", {})) if ns.only else {}
+    t_all = time.time()
+    for name, fn, args, meta in artifact_list():
+        if ns.only and ns.only not in name:
+            continue
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(ns.out_dir, fname), "w") as f:
+            f.write(text)
+        entries[name] = {
+            "file": fname,
+            "inputs": _spec_list(args),
+            "outputs": _spec_list(jax.eval_shape(fn, *args)),
+            "meta": meta,
+        }
+        print(f"  {name}: {len(text) / 1e6:.2f} MB HLO in {time.time() - t0:.1f}s")
+
+    with open(manifest_path, "w") as f:
+        json.dump({"source_hash": src_hash, "artifacts": entries}, f, indent=1)
+    print(f"wrote {len(entries)} artifacts in {time.time() - t_all:.1f}s -> {ns.out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

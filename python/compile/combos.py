@@ -1,0 +1,100 @@
+"""Experiment combinations (paper Table III), shared by aot.py and tests.
+
+Two families:
+
+  * full-shape configs — exactly Table III; used for the *timing* figures
+    (profiled analytically by the rust hw model, so no artifact needed at
+    84x84 Atari scale), and for the MLP combos' convergence artifacts;
+  * ``*_mini`` Atari configs — scaled-down pixel environments
+    (DESIGN.md §Substitutions) whose artifacts are actually trained to
+    convergence on this 1-core testbed.
+
+``batch`` is baked into each train artifact (XLA shapes are static); the
+rust coordinator requests the artifact matching its configured batch size.
+"""
+
+# (cout, ksize, stride) triples of the Nature-DQN trunk (Table III).
+ATARI_CONV = [(32, 8, 4), (64, 4, 2), (64, 3, 1)]
+# Scaled-down trunk for the mini pixel envs (12x12x4 observations).
+MINI_CONV = [(8, 4, 2), (16, 3, 1)]
+
+COMBOS = {
+    # --- MLP combos: trained end-to-end through PJRT ---
+    "dqn_cartpole": dict(
+        algo="dqn",
+        env="cartpole",
+        obs_dim=4,
+        act_dim=2,  # |A| (discrete)
+        sizes=[4, 64, 64, 2],
+        batch=64,
+        gamma=0.99,
+        lr=1e-3,
+    ),
+    "a2c_invpend": dict(
+        algo="a2c",
+        env="invpendulum",
+        obs_dim=4,
+        act_dim=1,  # continuous
+        sizes=[4, 64, 64, 1],
+        batch=64,  # rollout length
+        gamma=0.99,
+        lr=7e-4,
+    ),
+    "ddpg_lunar": dict(
+        algo="ddpg",
+        env="lunarcont",
+        obs_dim=8,
+        act_dim=2,
+        sizes=[8, 400, 300, 2],  # actor; critic gets obs+act inputs
+        batch=64,
+        gamma=0.99,
+        lr=1e-3,
+        tau=0.005,
+    ),
+    "ddpg_mntncar": dict(
+        algo="ddpg",
+        env="mntncarcont",
+        obs_dim=2,
+        act_dim=1,
+        sizes=[2, 400, 300, 1],
+        batch=64,
+        gamma=0.99,
+        lr=1e-3,
+        tau=0.005,
+    ),
+    # --- mini pixel combos: conv nets trained end-to-end ---
+    "dqn_breakout_mini": dict(
+        algo="dqn_conv",
+        env="breakout_mini",
+        in_hw=12,
+        in_ch=4,
+        conv=MINI_CONV,
+        fc=[128, 4],
+        act_dim=4,
+        batch=32,
+        gamma=0.99,
+        lr=5e-4,
+    ),
+    "ppo_mspacman_mini": dict(
+        algo="ppo_conv",
+        env="mspacman_mini",
+        in_hw=12,
+        in_ch=4,
+        conv=MINI_CONV,
+        fc=[128],  # shared trunk FC; heads: pi (A), v (1)
+        act_dim=9,
+        batch=64,  # rollout minibatch
+        gamma=0.99,
+        lr=3e-4,
+    ),
+}
+
+#: Precision modes lowered for every combo.  "fp32" is the paper's control,
+#: "mixed" is AP-DRL's FP32+FP16+BF16 coordination, "bf16" is the all-AIE
+#: datapath used by Table IV's BF16 column.
+MODES = ("fp32", "mixed", "bf16")
+
+#: Square GEMM artifacts for the §Perf L1 wallclock measurements (Fig 6's
+#: synthetic-GEMM ladder, truncated to 1-core-feasible sizes).
+GEMM_SIZES = (64, 256, 512)
+GEMM_FMTS = ("fp32", "bf16")

@@ -1,0 +1,5 @@
+"""L1: Pallas kernels for AP-DRL's compute hot-spot (mixed-precision GEMM)
+plus the precision-emulation casts, with pure-jnp oracles in ref.py."""
+
+from .gemm import gemm, matmul, vmem_footprint_bytes, mxu_alignment  # noqa: F401
+from .quantize import quantize, quantize_bf16, quantize_fp16, FORMATS  # noqa: F401

@@ -1,0 +1,157 @@
+"""L1 hot-spot kernel: tiled mixed-precision GEMM (Pallas).
+
+The paper's bottleneck analysis (Fig 5/6) shows DRL training time is
+dominated by the GEMMs of forward/backward propagation, and its hardware
+mapping runs them in BF16 on the AIE-ML array (bf16 multiply, fp32
+accumulate) or FP16 on the PL DSP slices.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the AIE-ML tile array
+maps onto the MXU-style systolic model Pallas exposes —
+
+  * (M, N, K) is tiled into VMEM-resident blocks via BlockSpec (the
+    HBM<->VMEM schedule standing in for CHARM's PLIO double-buffering),
+  * the grid iterates (M/bm, N/bn, K/bk) with an f32 VMEM accumulator
+    (the AIE-ML cascade/accumulator registers),
+  * inputs are rounded to the compute format (bf16/fp16) at tile load,
+    mirroring the vector-register width of the target component.
+
+interpret=True everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls; real-TPU efficiency is estimated from VMEM footprint + MXU
+alignment in DESIGN.md/EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .quantize import INTERPRET
+
+# Default VMEM tile: MXU-aligned (128 lanes) but clamped to the operand
+# shape so the small DRL MLPs (e.g. 4x64) do not pad 100x.  The §Perf pass
+# sweeps these (see python/tests/test_kernel.py::test_block_sweep and
+# EXPERIMENTS.md §Perf L1).
+DEFAULT_BM = 512
+DEFAULT_BN = 512
+DEFAULT_BK = 512
+
+
+def _cast(x, fmt):
+    if fmt == "fp32":
+        return x
+    if fmt == "bf16":
+        return x.astype(jnp.bfloat16).astype(jnp.float32)
+    if fmt == "fp16":
+        return x.astype(jnp.float16).astype(jnp.float32)
+    raise ValueError(f"unknown format {fmt!r}")
+
+
+def _gemm_kernel(x_ref, w_ref, o_ref, *, fmt):
+    """One (bm, bn) output tile; grid dim 2 walks the K blocks.
+
+    The f32 output block doubles as the accumulator (it stays VMEM-resident
+    across the K steps because its index map ignores the K grid axis) —
+    emulating the AIE-ML cascade/accumulator registers without a scratch
+    buffer.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Round tile operands to the component's compute format at load —
+    # this is where the bf16 multiply / f32 accumulate datapath of the
+    # AIE-ML (or the fp16 DSP path on the PL) is emulated.
+    x = _cast(x_ref[...], fmt)
+    w = _cast(w_ref[...], fmt)
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def gemm(x, w, *, fmt="fp32", bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """``x @ w`` with operands rounded to ``fmt`` and f32 accumulation.
+
+    x: (M, K) f32, w: (K, N) f32 -> (M, N) f32.
+    Shapes are padded up to the tile grid and the result sliced back, so
+    arbitrary DRL layer shapes are accepted.
+    """
+    if x.ndim != 2 or w.ndim != 2 or x.shape[1] != w.shape[0]:
+        raise ValueError(f"gemm shape mismatch: {x.shape} @ {w.shape}")
+    m, k = x.shape
+    n = w.shape[1]
+    bm = min(bm, max(m, 1))
+    bn = min(bn, max(n, 1))
+    bk = min(bk, max(k, 1))
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w, bk, 0), bn, 1)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    nk = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_gemm_kernel, fmt=fmt),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=INTERPRET,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def matmul(x, w, fmt="fp32"):
+    """Differentiable mixed-precision matmul used by every dense layer.
+
+    Forward and both backward GEMMs (dx = g @ w.T, dw = x.T @ g) run the
+    Pallas kernel in the same compute format — the whole layer lives on one
+    component under AP-DRL's per-layer partitioning, so its backward pass
+    shares that component's precision (paper Alg. 1: "Execute current node
+    in BF16" covers fwd, bwd and update).
+    """
+    return gemm(x, w, fmt=fmt)
+
+
+def _matmul_fwd(x, w, fmt):
+    return gemm(x, w, fmt=fmt), (x, w)
+
+
+def _matmul_bwd(fmt, res, g):
+    x, w = res
+    dx = gemm(g, w.T, fmt=fmt)
+    dw = gemm(x.T, g, fmt=fmt)
+    return dx, dw
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def vmem_footprint_bytes(bm, bn, bk, fmt="bf16"):
+    """Estimated VMEM bytes for one grid step: x tile + w tile + f32 acc.
+
+    Used by the §Perf L1 analysis (and `figures`'s kernel report) to bound
+    tile sizes against the ~16 MiB VMEM of a TPU core — the stand-in for
+    the AIE-ML tile-local memory budget CHARM enforces.
+    """
+    in_bytes = 2 if fmt in ("bf16", "fp16") else 4
+    return bm * bk * in_bytes + bk * bn * in_bytes + bm * bn * 4
+
+
+def mxu_alignment(bm, bn, bk):
+    """Fraction of the (128, 128) MXU tile each block dimension fills —
+    the utilisation *estimate* reported in §Perf (interpret=True gives no
+    hardware timing)."""
+    def frac(d):
+        return min(d, 128) / 128.0 if d % 128 else 1.0
+    return min(frac(bm), frac(bn), frac(bk))

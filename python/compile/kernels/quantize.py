@@ -1,0 +1,92 @@
+"""L1 precision-emulation kernels.
+
+AP-DRL coordinates three numeric formats across the Versal ACAP components
+(paper Table II / Fig 3):
+
+  * FP32 on the PS (Cortex-A72),
+  * FP16 on the PL/DSP (requires master weights + dynamic loss scaling),
+  * BF16 on the AIE-ML (same exponent range as FP32 -> no scaling needed).
+
+On this testbed the "hardware" formats are emulated in software with
+bit-exact round-to-nearest-even casts.  The casts are wrapped as Pallas
+kernels (interpret=True) so the rounding lives at L1 next to the GEMM, and a
+pure-jnp oracle in ref.py checks them (plus a manual bit-twiddling RNE
+implementation in the tests to guard against astype semantics drifting).
+
+Everything here is build-time only: the kernels lower into the train-step
+HLO emitted by aot.py and execute under the rust PJRT client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Pallas kernels must be lowered with interpret=True: the CPU PJRT plugin
+# cannot execute Mosaic custom-calls (see /opt/xla-example/README.md).
+INTERPRET = True
+
+#: Formats AP-DRL coordinates.  "fp32" is the identity (PS native format).
+FORMATS = ("fp32", "fp16", "bf16")
+
+
+def _round_kernel(x_ref, o_ref, *, dtype):
+    """Elementwise round-trip through ``dtype`` (RNE, like the hardware MAC
+    input registers on the PL DSP slices / AIE-ML vector lanes)."""
+    o_ref[...] = x_ref[...].astype(dtype).astype(x_ref.dtype)
+
+
+def _round_via_pallas(x, dtype):
+    if x.ndim == 0:  # pallas wants >=1D blocks; scalars are cheap anyway
+        return x.astype(dtype).astype(x.dtype)
+    return pl.pallas_call(
+        functools.partial(_round_kernel, dtype=dtype),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=INTERPRET,
+    )(x)
+
+
+def _make_quantizer(dtype, name):
+    """Differentiable precision round-trip.
+
+    VJP: the cotangent is itself rounded to the component format (the
+    backward pass of a layer runs on the same component as its forward
+    under per-layer partitioning — paper Alg. 1), composed with a
+    straight-through identity for the rounding nonlinearity.
+    """
+
+    @jax.custom_vjp
+    def q(x):
+        return _round_via_pallas(x, dtype)
+
+    def q_fwd(x):
+        return q(x), None
+
+    def q_bwd(_, g):
+        return (_round_via_pallas(g, dtype),)
+
+    q.defvjp(q_fwd, q_bwd)
+    q.__name__ = name
+    return q
+
+
+#: Round f32 -> bf16 -> f32 (AIE-ML compute format, RNE).
+quantize_bf16 = _make_quantizer(jnp.bfloat16, "quantize_bf16")
+
+#: Round f32 -> fp16 -> f32 (PL/DSP compute format, RNE).  Out-of-range
+#: magnitudes saturate to +/-inf exactly like an IEEE-754 binary16 cast;
+#: AP-DRL's dynamic loss scaling (L3 ``quant::LossScaler``) keeps scaled
+#: gradients inside the representable range.
+quantize_fp16 = _make_quantizer(jnp.float16, "quantize_fp16")
+
+
+def quantize(x, fmt):
+    """Round ``x`` into compute format ``fmt`` (and back to f32 storage)."""
+    if fmt == "fp32":
+        return x
+    if fmt == "bf16":
+        return quantize_bf16(x)
+    if fmt == "fp16":
+        return quantize_fp16(x)
+    raise ValueError(f"unknown format {fmt!r}; expected one of {FORMATS}")

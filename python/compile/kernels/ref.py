@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the L1 kernels.
+
+These are the correctness ground truth: pytest (python/tests/) asserts the
+Pallas kernels match them with `assert_allclose`, and hypothesis sweeps
+shapes/formats.  Nothing here is ever lowered into an artifact.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def round_format(x, fmt):
+    """Reference RNE round-trip through ``fmt`` (f32 storage)."""
+    x = jnp.asarray(x, jnp.float32)
+    if fmt == "fp32":
+        return x
+    if fmt == "bf16":
+        return x.astype(jnp.bfloat16).astype(jnp.float32)
+    if fmt == "fp16":
+        return x.astype(jnp.float16).astype(jnp.float32)
+    raise ValueError(fmt)
+
+
+def round_bf16_bits(x):
+    """Manual bit-twiddling RNE f32 -> bf16 -> f32, independent of any
+    dtype-cast implementation.  Guards the astype semantics the kernels
+    rely on (paper Fig 3: bf16 = top 16 bits of f32 with round-to-nearest-
+    even on bit 16)."""
+    x = np.asarray(x, np.float32)
+    bits = x.view(np.uint32)
+    nan = np.isnan(x)
+    rounding_bias = ((bits >> 16) & 1).astype(np.uint32) + np.uint32(0x7FFF)
+    rounded = ((bits + rounding_bias) & np.uint32(0xFFFF0000)).view(np.float32)
+    out = np.where(nan, x, rounded)
+    return jnp.asarray(out)
+
+
+def gemm(x, w, fmt="fp32"):
+    """Reference mixed-precision GEMM: round operands, multiply-accumulate
+    in f32 (highest-precision accumulation, like the MXU / AIE-ML MAC)."""
+    xq = round_format(x, fmt)
+    wq = round_format(w, fmt)
+    return jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+
+
+def matmul_grads(x, w, g, fmt="fp32"):
+    """Reference VJP of the mixed-precision matmul (both backward GEMMs in
+    the same component format — see kernels/gemm.py::matmul)."""
+    dx = gemm(g, w.T, fmt=fmt)
+    dw = gemm(x.T, g, fmt=fmt)
+    return dx, dw

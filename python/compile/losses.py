@@ -1,0 +1,73 @@
+"""DRL loss functions (paper §II-A / Eq. 1) for the four evaluated
+algorithms.  All operate on flat param lists + batch arrays and are pure,
+so jax.grad closes over them directly in trainstep.py."""
+
+import jax
+import jax.numpy as jnp
+
+LOG_2PI = 1.8378770664093453
+
+
+def dqn_loss(q_online, q_target_max, a, r, done, gamma):
+    """Eq. 1: squared TD error with a decoupled target network.
+
+    q_online: (bs, A) online Q(s, ·); q_target_max: (bs,) max_a' Q_t(s',a');
+    a: (bs,) i32 actions; r, done: (bs,) f32.
+    """
+    bs = q_online.shape[0]
+    q_sa = q_online[jnp.arange(bs), a]
+    y = r + gamma * (1.0 - done) * q_target_max
+    y = jax.lax.stop_gradient(y)
+    return jnp.mean((y - q_sa) ** 2)
+
+
+def ddpg_critic_loss(q, q_target_next, r, done, gamma):
+    """MSE TD error for the critic; q, q_target_next, r, done: (bs,)."""
+    y = jax.lax.stop_gradient(r + gamma * (1.0 - done) * q_target_next)
+    return jnp.mean((y - q) ** 2)
+
+
+def ddpg_actor_loss(q_of_pi):
+    """Deterministic policy gradient: maximize Q(s, pi(s))."""
+    return -jnp.mean(q_of_pi)
+
+
+def gaussian_logp(a, mean, log_std):
+    """Diagonal-Gaussian log-density, summed over action dims.
+    a, mean: (bs, da); log_std: (da,)."""
+    std = jnp.exp(log_std)
+    z = (a - mean) / std
+    per_dim = -0.5 * z * z - log_std - 0.5 * LOG_2PI
+    return jnp.sum(per_dim, axis=-1)
+
+
+def gaussian_entropy(log_std):
+    return jnp.sum(log_std + 0.5 * (LOG_2PI + 1.0))
+
+
+def a2c_loss(logp, adv, value, ret, entropy, vf_coef=0.5, ent_coef=0.01):
+    """Advantage actor-critic: policy gradient + value MSE - entropy bonus."""
+    pg = -jnp.mean(logp * jax.lax.stop_gradient(adv))
+    vf = jnp.mean((value - ret) ** 2)
+    return pg + vf_coef * vf - ent_coef * entropy
+
+
+def categorical_logp(logits, a):
+    """Log pi(a|s) for discrete policies; logits: (bs, A), a: (bs,) i32."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    return logits[jnp.arange(logits.shape[0]), a] - logz
+
+
+def categorical_entropy(logits):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(jnp.exp(logp) * logp, axis=-1))
+
+
+def ppo_loss(logp, logp_old, adv, value, ret, entropy, clip=0.2, vf_coef=0.5, ent_coef=0.01):
+    """Clipped-surrogate PPO objective."""
+    adv = jax.lax.stop_gradient(adv)
+    ratio = jnp.exp(logp - logp_old)
+    surr = jnp.minimum(ratio * adv, jnp.clip(ratio, 1.0 - clip, 1.0 + clip) * adv)
+    pg = -jnp.mean(surr)
+    vf = jnp.mean((value - ret) ** 2)
+    return pg + vf_coef * vf - ent_coef * entropy

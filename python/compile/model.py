@@ -1,0 +1,23 @@
+"""L2 entry point (prescribed layout shim).
+
+The actual model code is factored across sibling modules:
+
+  * nets.py       — MLP / conv forward passes calling the L1 kernels
+  * losses.py     — DQN / DDPG / A2C / PPO objectives
+  * optim.py      — Adam + loss-scaled gradients + bf16 weight storage
+  * precision.py  — per-layer precision assignment (AP-DRL partition -> fmt)
+  * trainstep.py  — per-artifact jitted train/act step builders
+  * aot.py        — lowering to artifacts/*.hlo.txt
+
+This module re-exports the public surface for tests and interactive use.
+"""
+
+from .nets import (  # noqa: F401
+    conv_forward,
+    conv_net_spec,
+    init_scale,
+    mlp_forward,
+    mlp_param_shapes,
+)
+from .precision import assign_conv, assign_mlp, LayerPrecision  # noqa: F401
+from .trainstep import build, BUILDERS  # noqa: F401

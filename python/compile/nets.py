@@ -1,0 +1,129 @@
+"""L2 network definitions (paper Table III architectures).
+
+Parameters are *flat lists of f32 arrays* in a documented order — the rust
+coordinator owns initialization, storage (master weights) and marshaling,
+so the convention must be dead simple:
+
+    MLP:      [W0, b0, W1, b1, ...]          W: (din, dout), b: (dout,)
+    ConvNet:  [K0, b0, K1, b1, ..., Wfc, bfc, ...]
+              K: (kh, kw, cin, cout) HWIO, b: (cout,)
+
+Dense layers run through the L1 Pallas mixed-precision matmul; conv layers
+use lax.conv (XLA) with the same operand-rounding emulation (conv *is* an
+MM node in the paper's taxonomy — im2col GEMM — and the analytic hw model
+profiles it as such; see DESIGN.md).
+
+Every forward takes a per-layer precision assignment (compile.precision),
+so one code path serves the fp32 control and the mixed AP-DRL artifacts.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import matmul, quantize
+
+
+def _dense(x, w, b, prec):
+    """One dense layer on component ``prec.component``: operands rounded to
+    the component format, f32 accumulate, bias add in f32."""
+    y = matmul(x, w, prec.fmt)
+    return y + quantize(b, prec.fmt)
+
+
+def mlp_forward(params, x, assignment, hidden_act=jnp.tanh, final_act=None):
+    """3-or-more-layer MLP forward.  ``assignment`` has one LayerPrecision
+    per weight matrix."""
+    n_layers = len(params) // 2
+    assert len(assignment) == n_layers, (len(assignment), n_layers)
+    h = x
+    for i in range(n_layers):
+        w, b = params[2 * i], params[2 * i + 1]
+        h = _dense(h, w, b, assignment[i])
+        if i < n_layers - 1:
+            h = hidden_act(h)
+    if final_act is not None:
+        h = final_act(h)
+    return h
+
+
+def mlp_param_shapes(sizes):
+    """[(din,dout), (dout,), ...] for rust-side init/marshaling."""
+    shapes = []
+    for din, dout in zip(sizes[:-1], sizes[1:]):
+        shapes.append((din, dout))
+        shapes.append((dout,))
+    return shapes
+
+
+# ---------------------------------------------------------------------------
+# Conv net (Table III Breakout/MsPacman: Conv(8,4)-Conv(4,2)-Conv(3,1)-FC-FC)
+# ---------------------------------------------------------------------------
+
+
+def _conv(x, k, b, stride, prec):
+    """NHWC conv, HWIO kernel, VALID padding (the Nature-DQN trunk uses no
+    padding).  Operands rounded to the component format like the GEMM."""
+    xq = quantize(x, prec.fmt)
+    kq = quantize(k, prec.fmt)
+    y = lax.conv_general_dilated(
+        xq,
+        kq,
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + quantize(b, prec.fmt)
+
+
+def conv_net_spec(in_hw, in_ch, conv_layers, fc_sizes):
+    """Compute the flattened-dim + per-layer per-row FLOPs of a conv trunk.
+
+    conv_layers: [(cout, ksize, stride), ...];  fc_sizes: [h1, ..., out].
+    Returns (param_shapes, flat_dim, per_layer_flops).
+    """
+    h = w = in_hw
+    c = in_ch
+    shapes = []
+    flops = []
+    for cout, k, s in conv_layers:
+        oh = (h - k) // s + 1
+        ow = (w - k) // s + 1
+        shapes.append((k, k, c, cout))
+        shapes.append((cout,))
+        flops.append(2 * oh * ow * k * k * c * cout)
+        h, w, c = oh, ow, cout
+    flat = h * w * c
+    sizes = [flat] + list(fc_sizes)
+    for din, dout in zip(sizes[:-1], sizes[1:]):
+        shapes.append((din, dout))
+        shapes.append((dout,))
+        flops.append(2 * din * dout)
+    return shapes, flat, flops
+
+
+def conv_forward(params, x, conv_layers, assignment, hidden_act=jax.nn.relu):
+    """Conv trunk + FC head.  ``assignment`` covers conv layers then FC
+    layers, in order."""
+    n_conv = len(conv_layers)
+    h = x
+    for i, (cout, k, s) in enumerate(conv_layers):
+        kk, b = params[2 * i], params[2 * i + 1]
+        h = hidden_act(_conv(h, kk, b, s, assignment[i]))
+    h = h.reshape(h.shape[0], -1)
+    n_fc = (len(params) - 2 * n_conv) // 2
+    for j in range(n_fc):
+        w, b = params[2 * (n_conv + j)], params[2 * (n_conv + j) + 1]
+        h = _dense(h, w, b, assignment[n_conv + j])
+        if j < n_fc - 1:
+            h = hidden_act(h)
+    return h
+
+
+def init_scale(shape):
+    """He-uniform bound used by the rust initializer (documented here so
+    python tests and rust agree): U(-lim, lim), lim = sqrt(6 / fan_in)."""
+    fan_in = shape[0] if len(shape) == 2 else shape[0] * shape[1] * shape[2]
+    return math.sqrt(6.0 / fan_in)

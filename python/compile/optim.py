@@ -1,0 +1,86 @@
+"""Adam + loss-scaled gradient machinery (L2 side of paper Alg. 1 / Fig 9).
+
+The *policy* of dynamic loss scaling (grow/backoff/skip) is L3 coordination
+(rust `quant::LossScaler`); this module implements the per-step mechanics
+that must live inside the lowered artifact:
+
+  * the loss is multiplied by the ``loss_scale`` input before backprop,
+  * gradients are unscaled by 1/scale,
+  * ``found_inf`` (f32 0/1) reports any non-finite gradient,
+  * the Adam update is *skipped* (params and moments passed through) when
+    found_inf is set — Fig 9's "conditional update skipping",
+  * AIE-assigned (bf16) layers have their updated weights re-rounded to
+    bf16: the paper keeps no master copy for AIE nodes, so the stored
+    value must be bf16-representable (Table II "Master Weight Backup
+    Required? No").
+
+Optimizer state marshaling convention (rust `drl::network` mirrors it):
+``opt_state = [m_0..m_{k-1}, v_0..v_{k-1}, t]`` with t a f32 scalar.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import quantize
+
+
+def init_opt_state(params):
+    zeros = [jnp.zeros_like(p) for p in params]
+    return zeros + [jnp.zeros_like(p) for p in params] + [jnp.zeros((), jnp.float32)]
+
+
+def unscale_and_check(grads, loss_scale):
+    """Unscale gradients and compute the found-inf flag (f32 0/1)."""
+    inv = 1.0 / loss_scale
+    unscaled = [g * inv for g in grads]
+    finite = jnp.ones((), jnp.bool_)
+    for g in grads:  # check the *scaled* grads: that's where fp16 overflows
+        finite = jnp.logical_and(finite, jnp.all(jnp.isfinite(g)))
+    return unscaled, (1.0 - finite.astype(jnp.float32))
+
+
+def adam_update(
+    params,
+    grads,
+    opt_state,
+    found_inf,
+    *,
+    lr,
+    bf16_mask=None,
+    betas=(0.9, 0.999),
+    eps=1e-8,
+):
+    """One Adam step, skipped elementwise-uniformly when found_inf == 1.
+
+    ``bf16_mask`` (optional, one bool per tensor) re-rounds AIE-resident
+    tensors to bf16 after the update (weights and their biases alike).
+    """
+    k = len(params)
+    m, v, t = opt_state[:k], opt_state[k : 2 * k], opt_state[2 * k]
+    b1, b2 = betas
+    keep = found_inf  # 1.0 -> keep old values, 0.0 -> apply update
+    t_new = t + (1.0 - keep)
+    new_params, new_m, new_v = [], [], []
+    # bias correction uses the *post-increment* step count; guard t=0 (all
+    # first steps skipped) with a max to avoid 0^0 division surprises.
+    t_safe = jnp.maximum(t_new, 1.0)
+    c1 = 1.0 - b1**t_safe
+    c2 = 1.0 - b2**t_safe
+    for i, (p, g, mi, vi) in enumerate(zip(params, grads, m, v)):
+        g = jnp.where(keep > 0, jnp.zeros_like(g), g)  # poison-free skip
+        mi2 = b1 * mi + (1 - b1) * g
+        vi2 = b2 * vi + (1 - b2) * g * g
+        step = lr * (mi2 / c1) / (jnp.sqrt(vi2 / c2) + eps)
+        p2 = p - step
+        if bf16_mask is not None and bf16_mask[i]:
+            # AIE node: no master copy — the stored weight is the bf16 value.
+            p2 = quantize(p2, "bf16")
+        new_params.append(jnp.where(keep > 0, p, p2))
+        new_m.append(jnp.where(keep > 0, mi, mi2))
+        new_v.append(jnp.where(keep > 0, vi, vi2))
+    return new_params, new_m + new_v + [t_new]
+
+
+def soft_update(target_params, params, tau):
+    """Polyak averaging for target networks (DDPG)."""
+    return [tau * p + (1.0 - tau) * tp for tp, p in zip(target_params, params)]

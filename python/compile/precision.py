@@ -1,0 +1,90 @@
+"""Per-layer precision assignment (the L2 face of AP-DRL's partitioning).
+
+The rust L3 partitioner assigns every layer node of the training DAG to a
+Versal component (PL / AIE, with non-MM layers pinned to PL); each
+component implies a compute format (paper Alg. 1):
+
+    AIE  -> bf16    (no master weights, no loss scaling)
+    PL   -> fp16    (fp32/bf16 master weights + dynamic loss scaling)
+    PS   -> fp32
+
+Artifacts are lowered per *precision mode*:
+
+  * ``fp32``  — everything in fp32 (the paper's non-quantized control),
+  * ``mixed`` — each layer rounded to the format of the component the
+    default partitioning rule assigns it to.
+
+The default rule mirrors the paper's observed behaviour (§V-C, Fig 15):
+high-FLOPs MM layers go to the AIE (bf16), low-FLOPs MM layers and all
+non-MM layers go to the PL (fp16).  The rust ILP partitioner implements the
+full cost model; this build-time rule only has to pick *formats*, and the
+threshold below reproduces the paper's assignments for every Table III
+network (cross-checked by rust tests against the ILP output).
+"""
+
+from dataclasses import dataclass
+
+#: MM layers with at least this many forward FLOPs (per batch row) are
+#: AIE-resident under the default rule.  2 * in * out FLOPs per row; the
+#: (400, 300) DDPG trunk lands on AIE, the (64, 64) control MLPs on PL —
+#: matching Fig 15 at batch size >= 512 and Fig 4's crossover.
+AIE_FLOPS_THRESHOLD = 2 * 64 * 128
+
+
+@dataclass(frozen=True)
+class LayerPrecision:
+    """Compute format + loss-scaling participation for one layer."""
+
+    fmt: str  # "fp32" | "fp16" | "bf16"
+    component: str  # "PS" | "PL" | "AIE"
+
+    @property
+    def scaled(self):
+        """FP16/PL layers participate in dynamic loss scaling."""
+        return self.fmt == "fp16"
+
+
+def assign_mlp(sizes, mode):
+    """Precision per dense layer of an MLP with ``sizes`` = [d0, d1, ...].
+
+    Returns a list of LayerPrecision, one per weight matrix (d_i x d_{i+1}).
+    """
+    out = []
+    for din, dout in zip(sizes[:-1], sizes[1:]):
+        if mode == "fp32":
+            out.append(LayerPrecision("fp32", "PS"))
+        elif mode == "bf16":
+            out.append(LayerPrecision("bf16", "AIE"))
+        elif mode == "mixed":
+            if 2 * din * dout >= AIE_FLOPS_THRESHOLD:
+                out.append(LayerPrecision("bf16", "AIE"))
+            else:
+                out.append(LayerPrecision("fp16", "PL"))
+        else:
+            raise ValueError(f"unknown precision mode {mode!r}")
+    return out
+
+
+def assign_conv(channels_flops, mode):
+    """Precision per conv/dense layer of a conv net, given each layer's
+    per-row forward FLOPs (conv layers are always MM nodes: im2col GEMM)."""
+    out = []
+    for flops in channels_flops:
+        if mode == "fp32":
+            out.append(LayerPrecision("fp32", "PS"))
+        elif mode == "bf16":
+            out.append(LayerPrecision("bf16", "AIE"))
+        elif mode == "mixed":
+            if flops >= AIE_FLOPS_THRESHOLD:
+                out.append(LayerPrecision("bf16", "AIE"))
+            else:
+                out.append(LayerPrecision("fp16", "PL"))
+        else:
+            raise ValueError(f"unknown precision mode {mode!r}")
+    return out
+
+
+def any_scaled(assignment):
+    """True if any layer runs FP16 => the artifact's loss-scale input is
+    live and the L3 LossScaler FSM must drive it."""
+    return any(p.scaled for p in assignment)

@@ -1,0 +1,532 @@
+"""L2 train/act step builders — one jitted function per artifact.
+
+Every builder returns ``(fn, example_args, meta)``:
+
+  * ``fn(*args)`` is pure and jit-lowerable; list-valued arguments flatten
+    in list order, so the rust marshaling convention is positional;
+  * ``example_args`` are ShapeDtypeStructs (or lists thereof);
+  * ``meta`` describes the I/O layout for artifacts/manifest.json.
+
+Input layout (train steps)
+    [params...] [extra param groups...] [opt state...] [batch arrays...] loss_scale
+Output layout
+    ([new params...], [new opt...], aux scalars..., loss, found_inf)
+
+Dynamic loss scaling: the scale is an *input* and found_inf an *output*;
+the growth/backoff policy lives in rust (`quant::LossScaler`), because it
+is stateful across steps — exactly the paper's Fig 9 split between the
+per-step MPT dataflow (here) and coordination (L3).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import losses, nets, optim, precision
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _mask_from_assignment(assignment, extra_tensors=0):
+    """Per-tensor bf16 mask from per-layer assignment ([W,b] per layer,
+    then ``extra_tensors`` non-layer tensors like log_std, never bf16)."""
+    mask = []
+    for prec in assignment:
+        mask += [prec.fmt == "bf16"] * 2
+    mask += [False] * extra_tensors
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# DQN (MLP)
+# ---------------------------------------------------------------------------
+
+
+def build_dqn_train(cfg, mode):
+    sizes = cfg["sizes"]
+    assign = precision.assign_mlp(sizes, mode)
+    bs = cfg["batch"]
+    gamma, lr = cfg["gamma"], cfg["lr"]
+    mask = _mask_from_assignment(assign)
+
+    def step(params, tparams, opt_state, s, a, r, s2, done, loss_scale):
+        def loss_fn(p):
+            q = nets.mlp_forward(p, s, assign)
+            qt = nets.mlp_forward(tparams, s2, assign)
+            q_t_max = jnp.max(qt, axis=-1)
+            loss = losses.dqn_loss(q, q_t_max, a, r, done, gamma)
+            return loss * loss_scale
+
+        scaled_loss, grads = jax.value_and_grad(loss_fn)(params)
+        grads, found_inf = optim.unscale_and_check(grads, loss_scale)
+        new_params, new_opt = optim.adam_update(
+            params, grads, opt_state, found_inf, lr=lr, bf16_mask=mask
+        )
+        return new_params, new_opt, scaled_loss / loss_scale, found_inf
+
+    shapes = nets.mlp_param_shapes(sizes)
+    params = [_spec(sh) for sh in shapes]
+    opt = [_spec(sh) for sh in shapes] * 2 + [_spec(())]
+    ds, na = cfg["obs_dim"], cfg["act_dim"]
+    args = (
+        params,
+        params,
+        opt,
+        _spec((bs, ds)),
+        _spec((bs,), I32),
+        _spec((bs,)),
+        _spec((bs, ds)),
+        _spec((bs,)),
+        _spec(()),
+    )
+    meta = dict(
+        kind="train",
+        algo="dqn",
+        mode=mode,
+        batch=bs,
+        param_shapes=[list(sh) for sh in shapes],
+        n_param_groups=2,  # params + target params
+        aux_outputs=["loss", "found_inf"],
+        scaled=precision.any_scaled(assign),
+        assignment=[p.component for p in assign],
+    )
+    return step, args, meta
+
+
+def build_dqn_act(cfg, mode):
+    sizes = cfg["sizes"]
+    assign = precision.assign_mlp(sizes, mode)
+
+    def act(params, s):
+        return nets.mlp_forward(params, s, assign)
+
+    shapes = nets.mlp_param_shapes(sizes)
+    args = ([_spec(sh) for sh in shapes], _spec((1, cfg["obs_dim"])))
+    meta = dict(
+        kind="act",
+        algo="dqn",
+        mode=mode,
+        param_shapes=[list(sh) for sh in shapes],
+        outputs=["qvalues"],
+    )
+    return act, args, meta
+
+
+# ---------------------------------------------------------------------------
+# DDPG (MLP actor + critic, target networks, soft updates)
+# ---------------------------------------------------------------------------
+
+
+def _ddpg_shapes(cfg):
+    ds, da = cfg["obs_dim"], cfg["act_dim"]
+    h1, h2 = cfg["sizes"][1], cfg["sizes"][2]
+    actor_sizes = [ds, h1, h2, da]
+    critic_sizes = [ds + da, h1, h2, 1]
+    return actor_sizes, critic_sizes
+
+
+def build_ddpg_train(cfg, mode):
+    actor_sizes, critic_sizes = _ddpg_shapes(cfg)
+    a_assign = precision.assign_mlp(actor_sizes, mode)
+    c_assign = precision.assign_mlp(critic_sizes, mode)
+    bs = cfg["batch"]
+    gamma, lr, tau = cfg["gamma"], cfg["lr"], cfg["tau"]
+    a_mask = _mask_from_assignment(a_assign)
+    c_mask = _mask_from_assignment(c_assign)
+
+    def actor_fwd(p, s):
+        return jnp.tanh(nets.mlp_forward(p, s, a_assign))
+
+    def critic_fwd(p, s, a):
+        return nets.mlp_forward(p, jnp.concatenate([s, a], axis=-1), c_assign)[:, 0]
+
+    def step(actor, critic, t_actor, t_critic, opt_a, opt_c, s, a, r, s2, done, loss_scale):
+        def c_loss_fn(cp):
+            a2 = actor_fwd(t_actor, s2)
+            q_next = critic_fwd(t_critic, s2, a2)
+            q = critic_fwd(cp, s, a)
+            return losses.ddpg_critic_loss(q, q_next, r, done, gamma) * loss_scale
+
+        def a_loss_fn(ap):
+            q = critic_fwd(critic, s, actor_fwd(ap, s))
+            return losses.ddpg_actor_loss(q) * loss_scale
+
+        closs, c_grads = jax.value_and_grad(c_loss_fn)(critic)
+        aloss, a_grads = jax.value_and_grad(a_loss_fn)(actor)
+        c_grads, inf_c = optim.unscale_and_check(c_grads, loss_scale)
+        a_grads, inf_a = optim.unscale_and_check(a_grads, loss_scale)
+        found_inf = jnp.maximum(inf_c, inf_a)
+        new_critic, new_opt_c = optim.adam_update(
+            critic, c_grads, opt_c, found_inf, lr=lr, bf16_mask=c_mask
+        )
+        new_actor, new_opt_a = optim.adam_update(
+            actor, a_grads, opt_a, found_inf, lr=lr, bf16_mask=a_mask
+        )
+        # Soft target updates track the (possibly skipped) new params.
+        new_t_actor = optim.soft_update(t_actor, new_actor, tau)
+        new_t_critic = optim.soft_update(t_critic, new_critic, tau)
+        return (
+            new_actor,
+            new_critic,
+            new_t_actor,
+            new_t_critic,
+            new_opt_a,
+            new_opt_c,
+            closs / loss_scale,
+            aloss / loss_scale,
+            found_inf,
+        )
+
+    a_shapes = nets.mlp_param_shapes(actor_sizes)
+    c_shapes = nets.mlp_param_shapes(critic_sizes)
+    pa = [_spec(sh) for sh in a_shapes]
+    pc = [_spec(sh) for sh in c_shapes]
+    oa = [_spec(sh) for sh in a_shapes] * 2 + [_spec(())]
+    oc = [_spec(sh) for sh in c_shapes] * 2 + [_spec(())]
+    ds, da = cfg["obs_dim"], cfg["act_dim"]
+    args = (
+        pa,
+        pc,
+        pa,
+        pc,
+        oa,
+        oc,
+        _spec((bs, ds)),
+        _spec((bs, da)),
+        _spec((bs,)),
+        _spec((bs, ds)),
+        _spec((bs,)),
+        _spec(()),
+    )
+    meta = dict(
+        kind="train",
+        algo="ddpg",
+        mode=mode,
+        batch=bs,
+        actor_shapes=[list(sh) for sh in a_shapes],
+        critic_shapes=[list(sh) for sh in c_shapes],
+        aux_outputs=["critic_loss", "actor_loss", "found_inf"],
+        scaled=precision.any_scaled(a_assign) or precision.any_scaled(c_assign),
+        assignment=[p.component for p in a_assign + c_assign],
+    )
+    return step, args, meta
+
+
+def build_ddpg_act(cfg, mode):
+    actor_sizes, _ = _ddpg_shapes(cfg)
+    assign = precision.assign_mlp(actor_sizes, mode)
+
+    def act(actor, s):
+        return jnp.tanh(nets.mlp_forward(actor, s, assign))
+
+    shapes = nets.mlp_param_shapes(actor_sizes)
+    args = ([_spec(sh) for sh in shapes], _spec((1, cfg["obs_dim"])))
+    meta = dict(
+        kind="act",
+        algo="ddpg",
+        mode=mode,
+        param_shapes=[list(sh) for sh in shapes],
+        outputs=["action"],
+    )
+    return act, args, meta
+
+
+# ---------------------------------------------------------------------------
+# A2C (Gaussian policy + separate value MLP; continuous control)
+# ---------------------------------------------------------------------------
+
+
+def _a2c_param_shapes(cfg):
+    ds, da = cfg["obs_dim"], cfg["act_dim"]
+    h1, h2 = cfg["sizes"][1], cfg["sizes"][2]
+    pi_shapes = nets.mlp_param_shapes([ds, h1, h2, da])
+    v_shapes = nets.mlp_param_shapes([ds, h1, h2, 1])
+    return pi_shapes, v_shapes, da
+
+
+def build_a2c_train(cfg, mode):
+    ds, da = cfg["obs_dim"], cfg["act_dim"]
+    h1, h2 = cfg["sizes"][1], cfg["sizes"][2]
+    pi_sizes = [ds, h1, h2, da]
+    v_sizes = [ds, h1, h2, 1]
+    pi_assign = precision.assign_mlp(pi_sizes, mode)
+    v_assign = precision.assign_mlp(v_sizes, mode)
+    bs, lr = cfg["batch"], cfg["lr"]
+    # trainables: pi params + [log_std] + v params, one optimizer.
+    mask = _mask_from_assignment(pi_assign, extra_tensors=1) + _mask_from_assignment(v_assign)
+    n_pi = len(pi_assign) * 2
+
+    def split(train):
+        return train[:n_pi], train[n_pi], train[n_pi + 1 :]
+
+    def step(train, opt_state, s, a, ret, adv, loss_scale):
+        def loss_fn(tr):
+            pi_p, log_std, v_p = split(tr)
+            mean = nets.mlp_forward(pi_p, s, pi_assign)
+            value = nets.mlp_forward(v_p, s, v_assign)[:, 0]
+            logp = losses.gaussian_logp(a, mean, log_std)
+            ent = losses.gaussian_entropy(log_std)
+            return losses.a2c_loss(logp, adv, value, ret, ent) * loss_scale
+
+        scaled_loss, grads = jax.value_and_grad(loss_fn)(train)
+        grads, found_inf = optim.unscale_and_check(grads, loss_scale)
+        new_train, new_opt = optim.adam_update(
+            train, grads, opt_state, found_inf, lr=lr, bf16_mask=mask
+        )
+        return new_train, new_opt, scaled_loss / loss_scale, found_inf
+
+    pi_shapes = nets.mlp_param_shapes(pi_sizes)
+    v_shapes = nets.mlp_param_shapes(v_sizes)
+    all_shapes = pi_shapes + [(da,)] + v_shapes
+    train = [_spec(sh) for sh in all_shapes]
+    opt = [_spec(sh) for sh in all_shapes] * 2 + [_spec(())]
+    args = (
+        train,
+        opt,
+        _spec((bs, ds)),
+        _spec((bs, da)),
+        _spec((bs,)),
+        _spec((bs,)),
+        _spec(()),
+    )
+    meta = dict(
+        kind="train",
+        algo="a2c",
+        mode=mode,
+        batch=bs,
+        param_shapes=[list(sh) for sh in all_shapes],
+        aux_outputs=["loss", "found_inf"],
+        scaled=precision.any_scaled(pi_assign) or precision.any_scaled(v_assign),
+        assignment=[p.component for p in pi_assign + v_assign],
+    )
+    return step, args, meta
+
+
+def build_a2c_act(cfg, mode):
+    ds, da = cfg["obs_dim"], cfg["act_dim"]
+    h1, h2 = cfg["sizes"][1], cfg["sizes"][2]
+    pi_sizes = [ds, h1, h2, da]
+    v_sizes = [ds, h1, h2, 1]
+    pi_assign = precision.assign_mlp(pi_sizes, mode)
+    v_assign = precision.assign_mlp(v_sizes, mode)
+    n_pi = len(pi_assign) * 2
+
+    def act(train, s):
+        pi_p, log_std, v_p = train[:n_pi], train[n_pi], train[n_pi + 1 :]
+        mean = nets.mlp_forward(pi_p, s, pi_assign)
+        value = nets.mlp_forward(v_p, s, v_assign)[:, 0]
+        return mean, jnp.broadcast_to(log_std, (1, da)), value
+
+    pi_shapes = nets.mlp_param_shapes(pi_sizes)
+    v_shapes = nets.mlp_param_shapes(v_sizes)
+    all_shapes = pi_shapes + [(da,)] + v_shapes
+    args = ([_spec(sh) for sh in all_shapes], _spec((1, ds)))
+    meta = dict(
+        kind="act",
+        algo="a2c",
+        mode=mode,
+        param_shapes=[list(sh) for sh in all_shapes],
+        outputs=["mean", "log_std", "value"],
+    )
+    return act, args, meta
+
+
+# ---------------------------------------------------------------------------
+# DQN (conv, mini-Breakout)
+# ---------------------------------------------------------------------------
+
+
+def build_dqn_conv_train(cfg, mode):
+    shapes, flat, flops = nets.conv_net_spec(cfg["in_hw"], cfg["in_ch"], cfg["conv"], cfg["fc"])
+    assign = precision.assign_conv(flops, mode)
+    bs, gamma, lr = cfg["batch"], cfg["gamma"], cfg["lr"]
+    mask = _mask_from_assignment(assign)
+    hw, ch = cfg["in_hw"], cfg["in_ch"]
+
+    def step(params, tparams, opt_state, s, a, r, s2, done, loss_scale):
+        def loss_fn(p):
+            q = nets.conv_forward(p, s, cfg["conv"], assign)
+            qt = nets.conv_forward(tparams, s2, cfg["conv"], assign)
+            loss = losses.dqn_loss(q, jnp.max(qt, axis=-1), a, r, done, gamma)
+            return loss * loss_scale
+
+        scaled_loss, grads = jax.value_and_grad(loss_fn)(params)
+        grads, found_inf = optim.unscale_and_check(grads, loss_scale)
+        new_params, new_opt = optim.adam_update(
+            params, grads, opt_state, found_inf, lr=lr, bf16_mask=mask
+        )
+        return new_params, new_opt, scaled_loss / loss_scale, found_inf
+
+    params = [_spec(sh) for sh in shapes]
+    opt = [_spec(sh) for sh in shapes] * 2 + [_spec(())]
+    args = (
+        params,
+        params,
+        opt,
+        _spec((bs, hw, hw, ch)),
+        _spec((bs,), I32),
+        _spec((bs,)),
+        _spec((bs, hw, hw, ch)),
+        _spec((bs,)),
+        _spec(()),
+    )
+    meta = dict(
+        kind="train",
+        algo="dqn_conv",
+        mode=mode,
+        batch=bs,
+        param_shapes=[list(sh) for sh in shapes],
+        n_param_groups=2,
+        aux_outputs=["loss", "found_inf"],
+        scaled=precision.any_scaled(assign),
+        assignment=[p.component for p in assign],
+    )
+    return step, args, meta
+
+
+def build_dqn_conv_act(cfg, mode):
+    shapes, flat, flops = nets.conv_net_spec(cfg["in_hw"], cfg["in_ch"], cfg["conv"], cfg["fc"])
+    assign = precision.assign_conv(flops, mode)
+    hw, ch = cfg["in_hw"], cfg["in_ch"]
+
+    def act(params, s):
+        return nets.conv_forward(params, s, cfg["conv"], assign)
+
+    args = ([_spec(sh) for sh in shapes], _spec((1, hw, hw, ch)))
+    meta = dict(
+        kind="act",
+        algo="dqn_conv",
+        mode=mode,
+        param_shapes=[list(sh) for sh in shapes],
+        outputs=["qvalues"],
+    )
+    return act, args, meta
+
+
+# ---------------------------------------------------------------------------
+# PPO (conv actor-critic with shared trunk, mini-MsPacman)
+# ---------------------------------------------------------------------------
+
+
+def _ppo_conv_shapes(cfg):
+    """Shared trunk (conv + one FC) then pi/v heads."""
+    trunk_fc = cfg["fc"][0]
+    shapes, flat, flops = nets.conv_net_spec(cfg["in_hw"], cfg["in_ch"], cfg["conv"], [trunk_fc])
+    na = cfg["act_dim"]
+    head_shapes = [(trunk_fc, na), (na,), (trunk_fc, 1), (1,)]
+    head_flops = [2 * trunk_fc * na, 2 * trunk_fc]
+    return shapes + head_shapes, flops + head_flops
+
+
+def build_ppo_conv_train(cfg, mode):
+    all_shapes, flops = _ppo_conv_shapes(cfg)
+    assign = precision.assign_conv(flops, mode)
+    n_trunk_layers = len(cfg["conv"]) + 1
+    trunk_assign = assign[:n_trunk_layers]
+    pi_assign, v_assign = assign[n_trunk_layers], assign[n_trunk_layers + 1]
+    bs, lr = cfg["batch"], cfg["lr"]
+    mask = _mask_from_assignment(assign)
+    hw, ch, na = cfg["in_hw"], cfg["in_ch"], cfg["act_dim"]
+    n_trunk = n_trunk_layers * 2
+
+    def fwd(params, s):
+        trunk = params[:n_trunk]
+        w_pi, b_pi, w_v, b_v = params[n_trunk : n_trunk + 4]
+        h = nets.conv_forward(trunk, s, cfg["conv"], trunk_assign)
+        h = jax.nn.relu(h)
+        logits = nets._dense(h, w_pi, b_pi, pi_assign)
+        value = nets._dense(h, w_v, b_v, v_assign)[:, 0]
+        return logits, value
+
+    def step(params, opt_state, s, a, logp_old, ret, adv, loss_scale):
+        def loss_fn(p):
+            logits, value = fwd(p, s)
+            logp = losses.categorical_logp(logits, a)
+            ent = losses.categorical_entropy(logits)
+            return losses.ppo_loss(logp, logp_old, adv, value, ret, ent) * loss_scale
+
+        scaled_loss, grads = jax.value_and_grad(loss_fn)(params)
+        grads, found_inf = optim.unscale_and_check(grads, loss_scale)
+        new_params, new_opt = optim.adam_update(
+            params, grads, opt_state, found_inf, lr=lr, bf16_mask=mask
+        )
+        return new_params, new_opt, scaled_loss / loss_scale, found_inf
+
+    params = [_spec(sh) for sh in all_shapes]
+    opt = [_spec(sh) for sh in all_shapes] * 2 + [_spec(())]
+    args = (
+        params,
+        opt,
+        _spec((bs, hw, hw, ch)),
+        _spec((bs,), I32),
+        _spec((bs,)),
+        _spec((bs,)),
+        _spec((bs,)),
+        _spec(()),
+    )
+    meta = dict(
+        kind="train",
+        algo="ppo_conv",
+        mode=mode,
+        batch=bs,
+        param_shapes=[list(sh) for sh in all_shapes],
+        aux_outputs=["loss", "found_inf"],
+        scaled=precision.any_scaled(assign),
+        assignment=[p.component for p in assign],
+    )
+    return step, args, meta
+
+
+def build_ppo_conv_act(cfg, mode):
+    all_shapes, flops = _ppo_conv_shapes(cfg)
+    assign = precision.assign_conv(flops, mode)
+    n_trunk_layers = len(cfg["conv"]) + 1
+    trunk_assign = assign[:n_trunk_layers]
+    pi_assign, v_assign = assign[n_trunk_layers], assign[n_trunk_layers + 1]
+    hw, ch = cfg["in_hw"], cfg["in_ch"]
+    n_trunk = n_trunk_layers * 2
+
+    def act(params, s):
+        trunk = params[:n_trunk]
+        w_pi, b_pi, w_v, b_v = params[n_trunk : n_trunk + 4]
+        h = jax.nn.relu(nets.conv_forward(trunk, s, cfg["conv"], trunk_assign))
+        logits = nets._dense(h, w_pi, b_pi, pi_assign)
+        value = nets._dense(h, w_v, b_v, v_assign)[:, 0]
+        return logits, value
+
+    args = ([_spec(sh) for sh in all_shapes], _spec((1, hw, hw, ch)))
+    meta = dict(
+        kind="act",
+        algo="ppo_conv",
+        mode=mode,
+        param_shapes=[list(sh) for sh in all_shapes],
+        outputs=["logits", "value"],
+    )
+    return act, args, meta
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+BUILDERS = {
+    "dqn": (build_dqn_train, build_dqn_act),
+    "ddpg": (build_ddpg_train, build_ddpg_act),
+    "a2c": (build_a2c_train, build_a2c_act),
+    "dqn_conv": (build_dqn_conv_train, build_dqn_conv_act),
+    "ppo_conv": (build_ppo_conv_train, build_ppo_conv_act),
+}
+
+
+def build(cfg, kind, mode):
+    """Build the (fn, args, meta) triple for one artifact."""
+    train_b, act_b = BUILDERS[cfg["algo"]]
+    builder = train_b if kind == "train" else act_b
+    fn, args, meta = builder(cfg, mode)
+    return fn, args, meta

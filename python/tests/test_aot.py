@@ -1,0 +1,87 @@
+"""AOT pipeline: manifest consistency + HLO text parseability probes."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, combos, trainstep
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART_DIR, "manifest.json")
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first"
+)
+
+
+def test_to_hlo_text_produces_hlo_module():
+    def fn(x):
+        return (x * 2.0,)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((2, 2), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule"), text[:50]
+    assert "ENTRY" in text
+
+
+def test_artifact_list_complete():
+    names = [name for name, *_ in aot.artifact_list()]
+    assert len(names) == len(set(names))
+    expected = len(combos.COMBOS) * len(combos.MODES) * 2 + len(combos.GEMM_SIZES) * len(
+        combos.GEMM_FMTS
+    )
+    assert len(names) == expected
+    assert "dqn_cartpole_mixed_train" in names
+    assert "gemm_256_bf16" in names
+
+
+def test_spec_list_flattening_order():
+    """Rust relies on pytree flattening == positional list order."""
+    args = ([jax.ShapeDtypeStruct((2, 3), jnp.float32), jax.ShapeDtypeStruct((3,), jnp.float32)],
+            jax.ShapeDtypeStruct((), jnp.float32))
+    specs = aot._spec_list(args)
+    assert specs == [
+        {"shape": [2, 3], "dtype": "float32"},
+        {"shape": [3], "dtype": "float32"},
+        {"shape": [], "dtype": "float32"},
+    ]
+
+
+@needs_artifacts
+def test_manifest_matches_builders():
+    with open(MANIFEST) as f:
+        manifest = json.load(f)
+    arts = manifest["artifacts"]
+    for name, fn, args, meta in aot.artifact_list():
+        assert name in arts, f"missing artifact {name}"
+        entry = arts[name]
+        assert entry["inputs"] == aot._spec_list(args)
+        assert os.path.exists(os.path.join(ART_DIR, entry["file"]))
+
+
+@needs_artifacts
+def test_hlo_files_look_like_hlo():
+    with open(MANIFEST) as f:
+        manifest = json.load(f)
+    for name, entry in manifest["artifacts"].items():
+        path = os.path.join(ART_DIR, entry["file"])
+        with open(path) as f:
+            head = f.read(64)
+        assert head.startswith("HloModule"), f"{name}: {head!r}"
+
+
+@needs_artifacts
+def test_train_artifact_io_counts():
+    """Every train artifact ends with loss_scale input and has found_inf
+    as its last output (the rust LossScaler contract)."""
+    with open(MANIFEST) as f:
+        manifest = json.load(f)
+    for name, entry in manifest["artifacts"].items():
+        if entry["meta"].get("kind") != "train":
+            continue
+        assert entry["inputs"][-1]["shape"] == []
+        assert entry["outputs"][-1]["shape"] == []
+        assert entry["meta"]["aux_outputs"][-1] == "found_inf"

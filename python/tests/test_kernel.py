@@ -1,0 +1,114 @@
+"""L1 GEMM kernel vs pure-jnp oracle — the core correctness signal.
+
+Hypothesis sweeps shapes and formats; every case asserts allclose against
+ref.gemm (same operand rounding, f32 accumulate).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.gemm import (
+    gemm,
+    matmul,
+    mxu_alignment,
+    vmem_footprint_bytes,
+)
+
+FMTS = ["fp32", "bf16", "fp16"]
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+@pytest.mark.parametrize(
+    "m,k,n",
+    [(1, 4, 2), (4, 64, 64), (64, 64, 2), (7, 13, 5), (128, 128, 128), (130, 70, 33)],
+)
+def test_gemm_matches_ref(fmt, m, k, n):
+    x, w = rand((m, k), seed=m * 1000 + k), rand((k, n), seed=n)
+    out = gemm(jnp.array(x), jnp.array(w), fmt=fmt)
+    expect = ref.gemm(x, w, fmt=fmt)
+    np.testing.assert_allclose(np.array(out), np.array(expect), rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    fmt=st.sampled_from(FMTS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gemm_hypothesis_shapes(m, k, n, fmt, seed):
+    x, w = rand((m, k), seed=seed), rand((k, n), seed=seed + 1)
+    out = gemm(jnp.array(x), jnp.array(w), fmt=fmt)
+    expect = ref.gemm(x, w, fmt=fmt)
+    np.testing.assert_allclose(np.array(out), np.array(expect), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (32, 16, 8), (128, 128, 128)])
+def test_gemm_block_shape_invariance(fmt, bm, bn, bk):
+    """Tiling must never change the numbers (padding is sliced away and
+    K-blocking only reorders f32 additions of identical products when the
+    pad is zero).  The §Perf L1 sweep relies on this."""
+    x, w = rand((48, 40), seed=3), rand((40, 24), seed=4)
+    base = gemm(jnp.array(x), jnp.array(w), fmt=fmt)
+    tiled = gemm(jnp.array(x), jnp.array(w), fmt=fmt, bm=bm, bn=bn, bk=bk)
+    # K-split changes f32 summation order; bound stays tight.
+    np.testing.assert_allclose(np.array(base), np.array(tiled), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+def test_matmul_vjp_matches_ref(fmt):
+    x, w = rand((9, 17), seed=10), rand((17, 6), seed=11)
+    g = rand((9, 6), seed=12)
+
+    def f(a, b):
+        return jnp.sum(matmul(a, b, fmt) * jnp.array(g))
+
+    dx, dw = jax.grad(f, argnums=(0, 1))(jnp.array(x), jnp.array(w))
+    rdx, rdw = ref.matmul_grads(x, w, g, fmt=fmt)
+    np.testing.assert_allclose(np.array(dx), np.array(rdx), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.array(dw), np.array(rdw), rtol=1e-6, atol=1e-6)
+
+
+def test_gemm_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        gemm(jnp.zeros((2, 3)), jnp.zeros((4, 5)))
+
+
+def test_bf16_gemm_differs_from_fp32_when_it_should():
+    """Sanity: the precision emulation actually loses precision."""
+    x, w = rand((32, 32), seed=5), rand((32, 32), seed=6)
+    out32 = np.array(gemm(jnp.array(x), jnp.array(w), fmt="fp32"))
+    out16 = np.array(gemm(jnp.array(x), jnp.array(w), fmt="bf16"))
+    assert not np.allclose(out32, out16, rtol=1e-7, atol=0)
+    # ... but only by a bf16-sized relative error.
+    np.testing.assert_allclose(out16, out32, rtol=3e-2, atol=3e-2)
+
+
+def test_fp16_gemm_saturates_to_inf():
+    """FP16's narrow exponent range overflows where bf16 does not — the
+    very motivation for AP-DRL's format coordination (Table II)."""
+    x = np.full((4, 4), 1e6, np.float32)
+    w = np.ones((4, 4), dtype=np.float32)
+    out16 = np.array(gemm(jnp.array(x), jnp.array(w), fmt="fp16"))
+    outbf = np.array(gemm(jnp.array(x), jnp.array(w), fmt="bf16"))
+    # 1e6 saturates to +inf in fp16; inf · 1 accumulates to inf.
+    assert not np.any(np.isfinite(out16))
+    assert np.all(np.isfinite(outbf))
+
+
+def test_vmem_footprint_and_alignment_helpers():
+    assert vmem_footprint_bytes(128, 128, 128, "bf16") == 128 * 128 * 2 * 2 + 128 * 128 * 4
+    assert vmem_footprint_bytes(128, 128, 128, "fp32") == 3 * 128 * 128 * 4
+    assert mxu_alignment(128, 128, 128) == 1.0
+    assert mxu_alignment(64, 128, 128) == 0.5

@@ -1,0 +1,97 @@
+"""DRL objectives: closed-form checks and gradient-direction sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import losses
+
+
+def test_dqn_loss_closed_form():
+    q = jnp.array([[1.0, 2.0], [3.0, 0.0]], jnp.float32)
+    qt_max = jnp.array([1.0, 2.0], jnp.float32)
+    a = jnp.array([1, 0], jnp.int32)
+    r = jnp.array([0.5, 1.0], jnp.float32)
+    done = jnp.array([0.0, 1.0], jnp.float32)
+    # y = [0.5 + 0.9*1, 1.0]; q_sa = [2, 3]; mse = ((1.4-2)^2 + (1-3)^2)/2
+    out = float(losses.dqn_loss(q, qt_max, a, r, done, gamma=0.9))
+    assert np.isclose(out, ((1.4 - 2.0) ** 2 + (1.0 - 3.0) ** 2) / 2, atol=1e-6)
+
+
+def test_dqn_loss_target_not_differentiated():
+    """stop_gradient on y: d loss / d qt_max must be zero."""
+    def f(qt_max):
+        q = jnp.array([[1.0, 2.0]], jnp.float32)
+        return losses.dqn_loss(
+            q, qt_max, jnp.array([0], jnp.int32), jnp.ones(1), jnp.zeros(1), 0.9
+        )
+
+    g = jax.grad(f)(jnp.array([1.0], jnp.float32))
+    np.testing.assert_array_equal(np.array(g), 0.0)
+
+
+def test_ddpg_losses():
+    q = jnp.array([1.0, 2.0], jnp.float32)
+    qn = jnp.array([0.5, 0.5], jnp.float32)
+    r = jnp.array([1.0, 0.0], jnp.float32)
+    done = jnp.array([0.0, 0.0], jnp.float32)
+    y = 1.0 + 0.99 * 0.5
+    expect = ((y - 1.0) ** 2 + (0.99 * 0.5 - 2.0) ** 2) / 2
+    assert np.isclose(float(losses.ddpg_critic_loss(q, qn, r, done, 0.99)), expect, atol=1e-6)
+    assert float(losses.ddpg_actor_loss(q)) == -1.5
+
+
+def test_gaussian_logp_standard_normal():
+    a = jnp.zeros((1, 1))
+    mean = jnp.zeros((1, 1))
+    log_std = jnp.zeros(1)
+    out = float(losses.gaussian_logp(a, mean, log_std)[0])
+    assert np.isclose(out, -0.5 * losses.LOG_2PI, atol=1e-6)
+
+
+def test_gaussian_entropy_monotone_in_std():
+    lo = float(losses.gaussian_entropy(jnp.array([-1.0])))
+    hi = float(losses.gaussian_entropy(jnp.array([1.0])))
+    assert hi > lo
+
+
+def test_categorical_logp_softmax():
+    logits = jnp.array([[1.0, 2.0, 3.0]], jnp.float32)
+    a = jnp.array([2], jnp.int32)
+    p = np.exp(3.0) / np.sum(np.exp([1.0, 2.0, 3.0]))
+    assert np.isclose(float(losses.categorical_logp(logits, a)[0]), np.log(p), atol=1e-6)
+
+
+def test_categorical_entropy_uniform_max():
+    uni = float(losses.categorical_entropy(jnp.zeros((1, 4))))
+    peaked = float(losses.categorical_entropy(jnp.array([[10.0, 0, 0, 0]])))
+    assert np.isclose(uni, np.log(4), atol=1e-5)
+    assert peaked < uni
+
+
+def test_ppo_clip_blocks_large_ratio_gain():
+    """With adv>0, pushing logp far above logp_old must stop improving the
+    clipped objective."""
+    adv = jnp.ones(1)
+    v = jnp.zeros(1)
+    ret = jnp.zeros(1)
+
+    def surrogate(delta):
+        return -float(
+            losses.ppo_loss(
+                jnp.array([delta]), jnp.zeros(1), adv, v, ret, entropy=0.0, ent_coef=0.0, vf_coef=0.0
+            )
+        )
+
+    assert np.isclose(surrogate(np.log(1.2)), surrogate(2.0), atol=1e-6)
+    assert surrogate(0.1) > surrogate(0.0)
+
+
+def test_a2c_loss_direction():
+    """Increasing logp of positive-advantage actions lowers the loss."""
+    adv = jnp.ones(2)
+    v = jnp.zeros(2)
+    ret = jnp.zeros(2)
+    lo = float(losses.a2c_loss(jnp.zeros(2), adv, v, ret, entropy=0.0, ent_coef=0.0))
+    hi = float(losses.a2c_loss(jnp.ones(2), adv, v, ret, entropy=0.0, ent_coef=0.0))
+    assert hi < lo

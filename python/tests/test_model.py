@@ -1,0 +1,151 @@
+"""L2 network forwards: shapes, precision assignment, oracle agreement."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import nets, precision
+from compile.kernels import ref
+
+
+def rand(shape, seed=0, scale=0.3):
+    rng = np.random.default_rng(seed)
+    return jnp.array((rng.standard_normal(shape) * scale).astype(np.float32))
+
+
+def mlp_params(sizes, seed=0):
+    ps = []
+    for i, sh in enumerate(nets.mlp_param_shapes(sizes)):
+        ps.append(rand(sh, seed=seed + i))
+    return ps
+
+
+class TestMLP:
+    def test_shapes(self):
+        sizes = [4, 64, 64, 2]
+        ps = mlp_params(sizes)
+        assign = precision.assign_mlp(sizes, "fp32")
+        out = nets.mlp_forward(ps, rand((7, 4), seed=9), assign)
+        assert out.shape == (7, 2)
+
+    def test_fp32_matches_pure_jnp(self):
+        sizes = [4, 16, 16, 2]
+        ps = mlp_params(sizes)
+        x = rand((5, 4), seed=42)
+        assign = precision.assign_mlp(sizes, "fp32")
+        out = nets.mlp_forward(ps, x, assign)
+
+        h = x
+        for i in range(3):
+            h = h @ ps[2 * i] + ps[2 * i + 1]
+            if i < 2:
+                h = jnp.tanh(h)
+        np.testing.assert_allclose(np.array(out), np.array(h), rtol=2e-5, atol=2e-5)
+
+    def test_mixed_matches_reference_rounding(self):
+        """Mixed forward == manually rounding operands per layer with the
+        ref oracle."""
+        sizes = [8, 400, 300, 2]  # DDPG-Lunar actor: PL, AIE, AIE... by rule
+        ps = mlp_params(sizes, seed=3)
+        x = rand((4, 8), seed=5)
+        assign = precision.assign_mlp(sizes, "mixed")
+        out = nets.mlp_forward(ps, x, assign)
+
+        h = x
+        for i in range(3):
+            fmt = assign[i].fmt
+            y = ref.gemm(h, ps[2 * i], fmt=fmt) + ref.round_format(ps[2 * i + 1], fmt)
+            h = jnp.tanh(y) if i < 2 else y
+        np.testing.assert_allclose(np.array(out), np.array(h), rtol=1e-6, atol=1e-6)
+
+    def test_grads_finite(self):
+        sizes = [4, 64, 64, 2]
+        ps = mlp_params(sizes, seed=1)
+        assign = precision.assign_mlp(sizes, "mixed")
+
+        def loss(p):
+            return jnp.sum(nets.mlp_forward(p, rand((6, 4), seed=2), assign) ** 2)
+
+        grads = jax.grad(loss)(ps)
+        assert all(bool(jnp.all(jnp.isfinite(g))) for g in grads)
+
+
+class TestAssignment:
+    def test_fp32_mode_all_ps(self):
+        a = precision.assign_mlp([4, 64, 64, 2], "fp32")
+        assert all(p.component == "PS" and p.fmt == "fp32" for p in a)
+
+    def test_mixed_small_mlp_all_pl(self):
+        """CartPole's (64,64) MLP is low-FLOPs -> PL/fp16 everywhere
+        (Fig 15 / §V-B: low-FLOP nets stay on the PL)."""
+        a = precision.assign_mlp([4, 64, 64, 2], "mixed")
+        assert all(p.component == "PL" and p.fmt == "fp16" for p in a)
+
+    def test_mixed_large_mlp_uses_aie(self):
+        """DDPG's (400,300) trunk crosses the FLOPs threshold -> AIE/bf16
+        for the fat layers, PL for the skinny head."""
+        a = precision.assign_mlp([8, 400, 300, 2], "mixed")
+        # the 400x300 trunk crosses the threshold; the skinny 8x400 input
+        # layer and 300x2 head stay on the PL (batch-independent rule)
+        assert a[1].component == "AIE" and a[1].fmt == "bf16"
+        assert a[2].component == "PL"
+
+    def test_scaled_flag(self):
+        a = precision.assign_mlp([4, 64, 64, 2], "mixed")
+        assert precision.any_scaled(a)
+        b = precision.assign_mlp([4, 64, 64, 2], "bf16")
+        assert not precision.any_scaled(b)
+
+    def test_unknown_mode_raises(self):
+        with pytest.raises(ValueError):
+            precision.assign_mlp([4, 8, 2], "int4")
+        with pytest.raises(ValueError):
+            precision.assign_conv([100], "int4")
+
+
+class TestConvNet:
+    CONV = [(8, 4, 2), (16, 3, 1)]
+
+    def test_spec_dims(self):
+        shapes, flat, flops = nets.conv_net_spec(12, 4, self.CONV, [128, 4])
+        # 12x12 -k4s2-> 5x5x8 -k3s1-> 3x3x16 = 144
+        assert flat == 144
+        assert shapes[0] == (4, 4, 4, 8)
+        assert shapes[-2] == (128, 4)
+        assert len(flops) == 4
+
+    def test_nature_dqn_spec_matches_table3(self):
+        """Full-shape Breakout trunk (Table III): conv dims 84->20->9->7,
+        flatten 3136, FC 512 -> 4."""
+        shapes, flat, flops = nets.conv_net_spec(
+            84, 4, [(32, 8, 4), (64, 4, 2), (64, 3, 1)], [512, 4]
+        )
+        assert flat == 3136
+        assert shapes[-4] == (3136, 512)
+        assert shapes[-2] == (512, 4)
+
+    def test_forward_shapes(self):
+        shapes, flat, flops = nets.conv_net_spec(12, 4, self.CONV, [128, 4])
+        ps = [rand(sh, seed=i) for i, sh in enumerate(shapes)]
+        assign = precision.assign_conv(flops, "mixed")
+        x = rand((3, 12, 12, 4), seed=100)
+        out = nets.conv_forward(ps, x, self.CONV, assign)
+        assert out.shape == (3, 4)
+
+    def test_conv_grads_finite(self):
+        shapes, flat, flops = nets.conv_net_spec(12, 4, self.CONV, [128, 4])
+        ps = [rand(sh, seed=i + 50) for i, sh in enumerate(shapes)]
+        assign = precision.assign_conv(flops, "bf16")
+
+        def loss(p):
+            x = rand((2, 12, 12, 4), seed=7)
+            return jnp.sum(nets.conv_forward(p, x, self.CONV, assign) ** 2)
+
+        grads = jax.grad(loss)(ps)
+        assert all(bool(jnp.all(jnp.isfinite(g))) for g in grads)
+
+
+def test_init_scale():
+    assert np.isclose(nets.init_scale((64, 64)), np.sqrt(6 / 64))
+    assert np.isclose(nets.init_scale((4, 4, 4, 8)), np.sqrt(6 / 64))

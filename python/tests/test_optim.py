@@ -1,0 +1,104 @@
+"""Adam + loss-scaling mechanics (paper Alg. 1 / Fig 9 per-step dataflow)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import optim
+from compile.kernels import ref
+
+
+def params_pair():
+    w = jnp.array([[1.0, -2.0], [0.5, 3.0]], jnp.float32)
+    b = jnp.array([0.1, -0.1], jnp.float32)
+    return [w, b]
+
+
+def test_init_opt_state_layout():
+    ps = params_pair()
+    st = optim.init_opt_state(ps)
+    assert len(st) == 2 * len(ps) + 1
+    assert st[-1].shape == ()
+    assert all(bool(jnp.all(s == 0)) for s in st[:-1])
+
+
+def test_unscale_and_check_clean():
+    grads = [jnp.ones((2, 2)) * 4.0]
+    un, found = optim.unscale_and_check(grads, jnp.float32(4.0))
+    np.testing.assert_allclose(np.array(un[0]), 1.0)
+    assert float(found) == 0.0
+
+
+@pytest.mark.parametrize("bad", [np.inf, -np.inf, np.nan])
+def test_unscale_and_check_flags_nonfinite(bad):
+    grads = [jnp.ones(3), jnp.array([1.0, bad, 2.0], jnp.float32)]
+    _, found = optim.unscale_and_check(grads, jnp.float32(2.0))
+    assert float(found) == 1.0
+
+
+def reference_adam(params, grads, m, v, t, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = t + 1
+    out_p, out_m, out_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = b1 * mi + (1 - b1) * g
+        vi = b2 * vi + (1 - b2) * g * g
+        mhat = mi / (1 - b1**t)
+        vhat = vi / (1 - b2**t)
+        out_p.append(p - lr * mhat / (np.sqrt(vhat) + eps))
+        out_m.append(mi)
+        out_v.append(vi)
+    return out_p, out_m, out_v, t
+
+
+def test_adam_matches_reference_over_steps():
+    ps = [np.array([[1.0, -2.0]], np.float32), np.array([0.5], np.float32)]
+    m = [np.zeros_like(p) for p in ps]
+    v = [np.zeros_like(p) for p in ps]
+    t = 0
+    jps = [jnp.array(p) for p in ps]
+    jst = optim.init_opt_state(jps)
+    for step in range(5):
+        grads = [np.full_like(p, 0.1 * (step + 1)) for p in ps]
+        ps, m, v, t = reference_adam(ps, grads, m, v, t, lr=1e-2)
+        jps, jst = optim.adam_update(
+            jps, [jnp.array(g) for g in grads], jst, jnp.float32(0.0), lr=1e-2
+        )
+    for a, b in zip(jps, ps):
+        np.testing.assert_allclose(np.array(a), b, rtol=1e-5, atol=1e-7)
+    assert float(jst[-1]) == 5.0
+
+
+def test_adam_skip_on_found_inf():
+    """found_inf=1 must pass params, moments AND step count through
+    unchanged (Fig 9 'conditional update skipping')."""
+    ps = params_pair()
+    st = optim.init_opt_state(ps)
+    grads = [jnp.full_like(p, 1e9) for p in ps]
+    new_ps, new_st = optim.adam_update(ps, grads, st, jnp.float32(1.0), lr=1e-3)
+    for a, b in zip(new_ps, ps):
+        np.testing.assert_array_equal(np.array(a), np.array(b))
+    for a, b in zip(new_st, st):
+        np.testing.assert_array_equal(np.array(a), np.array(b))
+
+
+def test_adam_bf16_mask_stores_bf16_weights():
+    """AIE tensors carry no master copy: stored value must be
+    bf16-representable after the update (Table II)."""
+    ps = params_pair()
+    st = optim.init_opt_state(ps)
+    grads = [jnp.full_like(p, 0.333333) for p in ps]
+    new_ps, _ = optim.adam_update(
+        ps, grads, st, jnp.float32(0.0), lr=1e-3, bf16_mask=[True, False]
+    )
+    w = np.array(new_ps[0])
+    np.testing.assert_array_equal(w, np.array(ref.round_bf16_bits(w)))
+    # the un-masked tensor is NOT bf16-rounded
+    b = np.array(new_ps[1])
+    assert not np.array_equal(b, np.array(ref.round_bf16_bits(b)))
+
+
+def test_soft_update():
+    tp = [jnp.zeros(3)]
+    p = [jnp.ones(3)]
+    out = optim.soft_update(tp, p, tau=0.1)
+    np.testing.assert_allclose(np.array(out[0]), 0.1)

@@ -1,0 +1,84 @@
+"""Precision-emulation kernels vs bit-level references (paper Fig 3 /
+Table II semantics)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.quantize import quantize, quantize_bf16, quantize_fp16
+
+finite_f32 = st.floats(allow_nan=False, allow_infinity=False, width=32)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(finite_f32, min_size=1, max_size=64))
+def test_bf16_roundtrip_matches_bit_twiddle(vals):
+    """astype-based kernel == independent integer RNE implementation."""
+    x = np.array(vals, np.float32)
+    out = np.array(quantize_bf16(jnp.array(x)))
+    expect = np.array(ref.round_bf16_bits(x))
+    np.testing.assert_array_equal(out, expect)
+
+
+def test_bf16_exponent_range_preserved():
+    """BF16 keeps FP32's exponent range (Table II): huge/tiny magnitudes
+    survive the round-trip finite/nonzero."""
+    x = jnp.array([1e38, -1e38, 1e-38, -1e-38], jnp.float32)
+    out = np.array(quantize_bf16(x))
+    assert np.all(np.isfinite(out))
+    assert np.all(out[:2] != 0) and np.all(out[2:] != 0)
+
+
+def test_fp16_narrow_range():
+    """FP16 overflows beyond 65504 and flushes tiny values (paper: why PL
+    nodes need loss scaling)."""
+    x = jnp.array([1e6, -1e6, 1e-9], jnp.float32)
+    out = np.array(quantize_fp16(x))
+    assert np.isinf(out[0]) and np.isinf(out[1])
+    assert out[2] == 0.0
+
+
+def test_fp16_representable_exact():
+    x = jnp.array([1.0, -2.5, 0.09997558593750001, 65504.0], jnp.float32)
+    out = np.array(quantize_fp16(x))
+    expect = x.astype(jnp.float16).astype(jnp.float32)
+    np.testing.assert_array_equal(out, np.array(expect))
+
+
+def test_quantize_dispatch_and_identity():
+    x = jnp.array([[1.2345678]], jnp.float32)
+    assert quantize(x, "fp32") is x
+    assert float(quantize(x, "bf16")[0, 0]) != float(x[0, 0])
+    with pytest.raises(ValueError):
+        quantize(x, "int8")
+
+
+def test_quantize_scalar_and_nd():
+    s = quantize(jnp.float32(1.7), "bf16")
+    assert s.shape == ()
+    t = quantize(jnp.ones((2, 3, 4), jnp.float32) * 1.1, "fp16")
+    assert t.shape == (2, 3, 4)
+
+
+def test_quantize_grad_is_rounded_cotangent():
+    """VJP = cotangent rounded to the same format (backward runs on the
+    same component as forward under per-layer partitioning)."""
+    x = jnp.array([1.0, 2.0, 3.0], jnp.float32)
+    g_in = np.array([1.0001, -2.5, 1e-9], np.float32)
+
+    def f(v):
+        return jnp.sum(quantize_fp16(v) * jnp.array(g_in))
+
+    g = np.array(jax.grad(f)(x))
+    expect = np.array(jnp.array(g_in).astype(jnp.float16).astype(jnp.float32))
+    np.testing.assert_array_equal(g, expect)
+
+
+def test_nan_propagates():
+    x = jnp.array([np.nan], jnp.float32)
+    assert np.isnan(np.array(quantize_bf16(x))[0])
+    assert np.isnan(np.array(quantize_fp16(x))[0])
+    assert np.isnan(np.array(ref.round_bf16_bits(np.array([np.nan], np.float32)))[0])

@@ -1,0 +1,195 @@
+"""Executable train-step semantics — the same functions that get lowered
+into artifacts, run eagerly on small synthetic batches."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import combos, nets, optim, trainstep
+
+
+def init_params(shapes, seed=0, scale=0.1):
+    rng = np.random.default_rng(seed)
+    return [jnp.array((rng.standard_normal(sh) * scale).astype(np.float32)) for sh in shapes]
+
+
+def shapes_of(args_entry):
+    return [tuple(a.shape) for a in args_entry]
+
+
+def make_inputs(args, seed=0, zero_opt=True):
+    """Concrete arrays for a builder's ShapeDtypeStruct example args.
+
+    Optimizer-state arguments (the lists matching ``init_opt_state``'s
+    ``2k+1`` layout, i.e. any list argument ending in a scalar) are zeroed —
+    a random Adam step-count makes no sense.
+    """
+    rng = np.random.default_rng(seed)
+
+    def concrete(a):
+        if a.dtype == jnp.int32:
+            return jnp.array(rng.integers(0, 2, a.shape), jnp.int32)
+        return jnp.array((rng.standard_normal(a.shape) * 0.1).astype(np.float32))
+
+    out = []
+    for arg in args:
+        if (
+            zero_opt
+            and isinstance(arg, list)
+            and len(arg) >= 3
+            and arg[-1].shape == ()
+            and len(arg) % 2 == 1
+        ):
+            out.append([jnp.zeros(a.shape, a.dtype) for a in arg])
+        else:
+            out.append(jax.tree_util.tree_map(concrete, arg))
+    return tuple(out)
+
+
+class TestDQN:
+    CFG = combos.COMBOS["dqn_cartpole"]
+
+    @pytest.mark.parametrize("mode", ["fp32", "mixed", "bf16"])
+    def test_step_runs_and_updates(self, mode):
+        fn, args, meta = trainstep.build(self.CFG, "train", mode)
+        params, tparams, opt, s, a, r, s2, done, _ = make_inputs(args, seed=1)
+        scale = jnp.float32(1024.0 if meta["scaled"] else 1.0)
+        new_params, new_opt, loss, found_inf = fn(
+            params, tparams, opt, s, a, r, s2, done, scale
+        )
+        assert float(found_inf) == 0.0
+        assert np.isfinite(float(loss))
+        changed = any(
+            not np.array_equal(np.array(p0), np.array(p1))
+            for p0, p1 in zip(params, new_params)
+        )
+        assert changed
+        assert float(new_opt[-1]) == 1.0
+
+    def test_loss_decreases_over_steps(self):
+        """Few steps on a fixed batch must reduce the TD loss (fp32)."""
+        fn, args, meta = trainstep.build(self.CFG, "train", "fp32")
+        jit_fn = jax.jit(fn)
+        params, tparams, opt, s, a, r, s2, done, scale = make_inputs(args, seed=2)
+        scale = jnp.float32(1.0)
+        first = None
+        for i in range(30):
+            params, opt, loss, found_inf = jit_fn(
+                params, tparams, opt, s, a, r, s2, done, scale
+            )
+            if first is None:
+                first = float(loss)
+        assert float(loss) < first
+
+    def test_act_matches_forward(self):
+        fn, args, meta = trainstep.build(self.CFG, "act", "fp32")
+        params, s = make_inputs(args, seed=3)
+        q = fn(params, s)
+        assert q.shape == (1, self.CFG["act_dim"])
+
+    def test_scaled_loss_invariance_fp32(self):
+        """In fp32 the reported (unscaled) loss must not depend on the
+        scale input."""
+        fn, args, _ = trainstep.build(self.CFG, "train", "fp32")
+        inputs = make_inputs(args, seed=4)
+        params, tparams, opt, s, a, r, s2, done, _ = inputs
+        _, _, loss1, _ = fn(params, tparams, opt, s, a, r, s2, done, jnp.float32(1.0))
+        _, _, loss2, _ = fn(params, tparams, opt, s, a, r, s2, done, jnp.float32(4096.0))
+        np.testing.assert_allclose(float(loss1), float(loss2), rtol=1e-4)
+
+    def test_overflow_sets_found_inf_and_skips(self):
+        """A scale large enough to overflow f32 must set found_inf and
+        leave params untouched."""
+        fn, args, _ = trainstep.build(self.CFG, "train", "fp32")
+        params, tparams, opt, s, a, r, s2, done, _ = make_inputs(args, seed=5)
+        r_huge = r + 1e25
+        new_params, new_opt, loss, found_inf = fn(
+            params, tparams, opt, s, a, r_huge, s2, done, jnp.float32(1e30)
+        )
+        assert float(found_inf) == 1.0
+        for p0, p1 in zip(params, new_params):
+            np.testing.assert_array_equal(np.array(p0), np.array(p1))
+
+
+class TestDDPG:
+    CFG = combos.COMBOS["ddpg_mntncar"]  # smallest DDPG net
+
+    def test_step_runs(self):
+        fn, args, meta = trainstep.build(self.CFG, "train", "mixed")
+        inputs = make_inputs(args, seed=6)
+        out = fn(*inputs[:-1], jnp.float32(256.0))
+        (na, nc, nta, ntc, noa, noc, closs, aloss, found_inf) = out
+        assert float(found_inf) == 0.0
+        assert np.isfinite(float(closs)) and np.isfinite(float(aloss))
+        assert len(na) == len(inputs[0])
+
+    def test_soft_update_moves_targets(self):
+        fn, args, meta = trainstep.build(self.CFG, "train", "fp32")
+        inputs = make_inputs(args, seed=7)
+        out = fn(*inputs[:-1], jnp.float32(1.0))
+        t_actor_before, t_actor_after = inputs[2], out[2]
+        moved = any(
+            not np.array_equal(np.array(a), np.array(b))
+            for a, b in zip(t_actor_before, t_actor_after)
+        )
+        assert moved
+
+    def test_act_bounded(self):
+        fn, args, _ = trainstep.build(self.CFG, "act", "fp32")
+        params, s = make_inputs(args, seed=8)
+        a = fn(params, 10.0 * s)
+        assert np.all(np.abs(np.array(a)) <= 1.0)
+
+
+class TestA2C:
+    CFG = combos.COMBOS["a2c_invpend"]
+
+    def test_step_runs(self):
+        fn, args, meta = trainstep.build(self.CFG, "train", "mixed")
+        train, opt, s, a, ret, adv, _ = make_inputs(args, seed=9)
+        new_train, new_opt, loss, found_inf = fn(
+            train, opt, s, a, ret, adv, jnp.float32(512.0)
+        )
+        assert float(found_inf) == 0.0
+        assert np.isfinite(float(loss))
+
+    def test_act_outputs(self):
+        fn, args, _ = trainstep.build(self.CFG, "act", "fp32")
+        train, s = make_inputs(args, seed=10)
+        mean, log_std, value = fn(train, s)
+        assert mean.shape == (1, 1) and log_std.shape == (1, 1) and value.shape == (1,)
+
+
+class TestConv:
+    def test_dqn_conv_step(self):
+        cfg = combos.COMBOS["dqn_breakout_mini"]
+        fn, args, meta = trainstep.build(cfg, "train", "mixed")
+        params, tparams, opt, s, a, r, s2, done, _ = make_inputs(args, seed=11)
+        new_params, new_opt, loss, found_inf = fn(
+            params, tparams, opt, s, a, r, s2, done, jnp.float32(256.0)
+        )
+        assert float(found_inf) == 0.0
+        assert np.isfinite(float(loss))
+
+    def test_ppo_conv_step_and_act(self):
+        cfg = combos.COMBOS["ppo_mspacman_mini"]
+        fn, args, meta = trainstep.build(cfg, "train", "fp32")
+        params, opt, s, a, logp_old, ret, adv, _ = make_inputs(args, seed=12)
+        new_params, new_opt, loss, found_inf = fn(
+            params, opt, s, a, logp_old, ret, adv, jnp.float32(1.0)
+        )
+        assert np.isfinite(float(loss))
+        act_fn, act_args, _ = trainstep.build(cfg, "act", "fp32")
+        p2, s1 = make_inputs(act_args, seed=13)
+        logits, value = act_fn(p2, s1)
+        assert logits.shape == (1, cfg["act_dim"]) and value.shape == (1,)
+
+
+def test_every_combo_builds_every_mode():
+    for name, cfg in combos.COMBOS.items():
+        for mode in combos.MODES:
+            for kind in ("train", "act"):
+                fn, args, meta = trainstep.build(cfg, kind, mode)
+                jax.eval_shape(fn, *args)  # must trace cleanly
+                assert meta["mode"] == mode and meta["kind"] == kind

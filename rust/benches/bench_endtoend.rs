@@ -1,0 +1,57 @@
+//! Bench: end-to-end PJRT hot path — act and train step latency per
+//! combo (the L3 request-loop cost Fig 12/13's throughput depends on).
+//! Skips gracefully if artifacts are absent.
+
+use std::time::Duration;
+
+use apdrl::coordinator::combo;
+use apdrl::drl::dqn::{DqnAgent, DqnConfig};
+use apdrl::drl::Agent;
+use apdrl::envs::Env;
+use apdrl::runtime::Runtime;
+use apdrl::util::bench::bench;
+use apdrl::util::Rng;
+
+fn main() {
+    println!("== bench_endtoend: PJRT act/train latency ==");
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    let Ok(mut rt) = Runtime::new(&dir) else {
+        println!("(artifacts missing; run `make artifacts`)");
+        return;
+    };
+    for (name, mode) in
+        [("dqn_cartpole", "mixed"), ("dqn_cartpole", "fp32"), ("dqn_breakout_mini", "mixed")]
+    {
+        let c = combo(name);
+        let obs_shape = match &c.net {
+            apdrl::graph::NetSpec::Mlp { .. } => vec![c.obs_dim],
+            apdrl::graph::NetSpec::Conv { in_hw, in_ch, .. } => vec![*in_hw, *in_hw, *in_ch],
+        };
+        let cfg = DqnConfig {
+            warmup: 64,
+            ..DqnConfig::for_combo(c.batch, obs_shape, c.act_dim)
+        };
+        let mut agent = DqnAgent::new(&mut rt, name, mode, cfg, 1).unwrap();
+        let mut env = c.make_env();
+        let mut rng = Rng::new(1);
+        let mut obs = env.reset(&mut rng);
+        // warm the replay buffer so observe() trains every step
+        for _ in 0..80 {
+            let a = agent.act(&obs, &mut rng).unwrap();
+            let t = env.step(&a, &mut rng);
+            agent.observe(&obs, &a, t.reward as f32, &t.obs, t.done, &mut rng).unwrap();
+            obs = if t.done { env.reset(&mut rng) } else { t.obs };
+        }
+        let r = bench(&format!("act/{name}/{mode}"), Duration::from_secs(2), || {
+            let _ = agent.act_greedy(&obs).unwrap();
+        });
+        r.print();
+        let r = bench(&format!("env_act_train_step/{name}/{mode}"), Duration::from_secs(4), || {
+            let a = agent.act(&obs, &mut rng).unwrap();
+            let t = env.step(&a, &mut rng);
+            agent.observe(&obs, &a, t.reward as f32, &t.obs, t.done, &mut rng).unwrap();
+            obs = if t.done { env.reset(&mut rng) } else { t.obs };
+        });
+        r.print();
+    }
+}

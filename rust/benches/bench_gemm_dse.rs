@@ -1,0 +1,31 @@
+//! Bench: Fig 6 machinery — DSE sweeps per GEMM size on PL and AIE.
+
+use apdrl::graph::LayerKind;
+use apdrl::hw::{vek280, Component, Format};
+use apdrl::profile::dse::{explore_aie, explore_pl};
+use apdrl::util::bench::{observe, run};
+
+fn main() {
+    println!("== bench_gemm_dse: Table-I sweep cost per GEMM size ==");
+    let platform = vek280();
+    for n in [64usize, 256, 1024] {
+        let kind = LayerKind::Mm { m: n, k: n, n };
+        run(&format!("explore_pl/{n}"), || {
+            observe(explore_pl(
+                platform.spec(Component::PL),
+                &kind,
+                Format::Fp16,
+                platform.pl_dsp,
+            ));
+        });
+        run(&format!("explore_aie/{n}"), || {
+            observe(explore_aie(
+                platform.spec(Component::AIE),
+                &kind,
+                Format::Bf16,
+                platform.aie_tiles,
+                platform.aie_lanes_per_tile,
+            ));
+        });
+    }
+}

@@ -1,0 +1,87 @@
+//! Bench: L3 coordinator hot paths — ILP solve, schedule evaluation,
+//! replay sampling, env stepping, RNG, JSON parse.  The §Perf iteration
+//! log in EXPERIMENTS.md tracks these.
+
+use apdrl::coordinator::combo;
+use apdrl::drl::replay::{ReplayBuffer, StoredAction};
+use apdrl::envs::{Action, Env};
+use apdrl::graph::build_train_graph;
+use apdrl::hw::vek280;
+use apdrl::partition::heuristics::heft;
+use apdrl::partition::{evaluate, solve_ilp, Problem};
+use apdrl::profile::profile_dag;
+use apdrl::util::bench::{observe, run};
+use apdrl::util::json::Json;
+use apdrl::util::Rng;
+
+fn main() {
+    println!("== bench_hotpath: L3 coordinator internals ==");
+    let platform = vek280();
+    let c = combo("ddpg_lunar");
+    let dag = build_train_graph(&c.train_spec(512));
+    let profiles = profile_dag(&dag, &platform, true);
+    let problem = Problem::new(&dag, &profiles, &platform, true);
+    let sol = solve_ilp(&problem);
+
+    run("ilp_solve/ddpg_lunar_512", || {
+        observe(solve_ilp(&problem));
+    });
+    run("heft/ddpg_lunar_512", || {
+        observe(heft(&problem));
+    });
+    run("schedule_evaluate/ddpg_lunar_512", || {
+        observe(evaluate(&problem, &sol.assignment));
+    });
+
+    let mut replay = ReplayBuffer::new(50_000, 8);
+    let mut rng = Rng::new(1);
+    for i in 0..50_000 {
+        replay.push(
+            &[i as f32; 8],
+            StoredAction::Continuous(vec![0.1, 0.2]),
+            1.0,
+            &[i as f32; 8],
+            false,
+        );
+    }
+    run("replay_sample_256/obs8", || {
+        observe(replay.sample(256, &mut rng));
+    });
+
+    let mut env = apdrl::envs::LunarLanderCont::new();
+    env.reset(&mut rng);
+    run("env_step/lunar_lander", || {
+        let t = env.step(&Action::Continuous(vec![0.4, -0.2]), &mut rng);
+        if t.done {
+            env.reset(&mut rng);
+        }
+        observe(t.reward);
+    });
+
+    let mut breakout = apdrl::envs::MiniBreakout::mini();
+    breakout.reset(&mut rng);
+    run("env_step/mini_breakout(render)", || {
+        let t = breakout.step(&Action::Discrete(0), &mut rng);
+        if t.done {
+            breakout.reset(&mut rng);
+        }
+        observe(t.reward);
+    });
+
+    run("rng_normal/1k", || {
+        let mut s = 0.0;
+        for _ in 0..1000 {
+            s += rng.normal();
+        }
+        observe(s);
+    });
+
+    let manifest_text = std::fs::read_to_string(format!(
+        "{}/artifacts/manifest.json",
+        env!("CARGO_MANIFEST_DIR")
+    ))
+    .unwrap_or_else(|_| "{}".into());
+    run("json_parse/manifest", || {
+        observe(Json::parse(&manifest_text).unwrap());
+    });
+}

@@ -1,0 +1,23 @@
+//! Bench: Fig 4 regeneration cost + per-component profile evaluation.
+//! (`cargo bench` target; custom harness — criterion is not vendored.)
+
+use apdrl::coordinator::combo;
+use apdrl::graph::build_train_graph;
+use apdrl::hw::vek280;
+use apdrl::profile::profile_dag;
+use apdrl::util::bench::{observe, run};
+
+fn main() {
+    println!("== bench_platforms: profiling/DSE costs (Fig 4 machinery) ==");
+    let platform = vek280();
+    for name in ["dqn_cartpole", "ddpg_lunar", "dqn_breakout"] {
+        let c = combo(name);
+        let dag = build_train_graph(&c.train_spec(c.batch));
+        run(&format!("build_train_graph/{name}"), || {
+            observe(build_train_graph(&c.train_spec(c.batch)));
+        });
+        run(&format!("profile_dag/{name}"), || {
+            observe(profile_dag(&dag, &platform, true));
+        });
+    }
+}

@@ -1,0 +1,24 @@
+//! Bench: Table IV regeneration — the full static phase (profile + ILP +
+//! schedule) per network size, FP32 vs quantized.
+
+use apdrl::coordinator::{combo, static_phase};
+use apdrl::graph::NetSpec;
+use apdrl::util::bench::{observe, run};
+
+fn main() {
+    println!("== bench_table4: static phase per Table-IV network ==");
+    for (label, sizes) in [
+        ("64x64", vec![4usize, 64, 64, 2]),
+        ("400x300", vec![4, 400, 300, 2]),
+        ("4096x3072", vec![4, 4096, 3072, 2]),
+    ] {
+        let mut c = combo("dqn_cartpole");
+        c.net = NetSpec::Mlp { sizes };
+        run(&format!("static_phase_quant/{label}"), || {
+            observe(static_phase(&c, 64, true));
+        });
+        run(&format!("static_phase_fp32/{label}"), || {
+            observe(static_phase(&c, 64, false));
+        });
+    }
+}

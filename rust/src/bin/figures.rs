@@ -1,0 +1,609 @@
+//! `figures` — regenerate every table and figure of the paper's
+//! evaluation (DESIGN.md §3 experiment index).  Outputs print to stdout
+//! and are mirrored as TSV under reports/.
+//!
+//!   figures fig4            platform comparison (PS/PL/AIE × batch)
+//!   figures fig5            PS train-step phase breakdown
+//!   figures fig6            synthetic GEMM ladder on PL vs AIE
+//!   figures fig8            DQN-Breakout per-layer FLOPs
+//!   figures table1          PL DSE design-point counts
+//!   figures table2          format comparison
+//!   figures fig11 [--combo C] [--seeds N] [--steps N] [--full]
+//!                           convergence: quantized vs fp32 (+ Table III
+//!                           reward-error column) — runs real training
+//!   figures table4          FP32-vs-BF16 training time across net sizes
+//!   figures fig12           normalized total training time (3 systems)
+//!   figures fig13           normalized training throughput
+//!   figures fig14           DDPG-LunarCont operation-sequence Gantt
+//!   figures fig15           DDPG-LunarCont partition vs batch size
+//!   figures headline        max speedups vs the paper's 4.17× / 3.82×
+//!   figures all             everything except fig11 (which trains)
+
+use anyhow::{bail, Result};
+
+use apdrl::coordinator::baselines::{aie_only_step_time, fixar_step_time};
+use apdrl::coordinator::metrics::reward_error_pct;
+use apdrl::coordinator::report::{ascii_bars, ascii_table, write_tsv};
+use apdrl::coordinator::{combo, static_phase, train_combo, TrainLimits};
+use apdrl::graph::{build_train_graph, Phase};
+use apdrl::hw::{vek280, Component, Format};
+use apdrl::profile::dse::{explore_aie, explore_pl, partition_factors, unroll_factors};
+use apdrl::profile::ps_model::ps_latency;
+use apdrl::quant::formats::format_info;
+use apdrl::runtime::Runtime;
+
+fn reports_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/reports"))
+}
+
+fn artifacts_dir() -> String {
+    std::env::var("APDRL_ARTIFACTS")
+        .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")))
+}
+
+/// Fig 4: log-normalized single-train-step time on PS/PL/AIE for the
+/// three algo-env combos across batch sizes.
+fn fig4() -> Result<()> {
+    println!("== Fig 4: train-step time on PS / PL / AIE (modeled VEK280) ==");
+    let platform = vek280();
+    let combos = [
+        ("dqn_cartpole", vec![32usize, 64, 128, 256]),
+        ("ddpg_lunar", vec![64, 256, 1024]),
+        ("dqn_breakout", vec![16, 32, 64]),
+    ];
+    let mut rows = Vec::new();
+    for (name, batches) in &combos {
+        let c = combo(name);
+        for &bs in batches {
+            let dag = build_train_graph(&c.train_spec(bs));
+            let profiles = apdrl::profile::profile_dag(&dag, &platform, false);
+            // Serial per-component totals (what Fig 4 measures: the whole
+            // step on ONE component, fp32).
+            let ps: f64 = profiles.iter().map(|p| p.ps_latency_us).sum();
+            let pl: f64 = profiles
+                .iter()
+                .map(|p| p.pl.first().map(|c| c.latency_us).unwrap_or(0.0))
+                .sum();
+            let aie: f64 = profiles
+                .iter()
+                .map(|p| {
+                    p.aie
+                        .first()
+                        .map(|c| c.latency_us)
+                        // non-MM nodes run on the PL even in the AIE-only
+                        // deployment (paper §IV-A)
+                        .unwrap_or_else(|| p.pl.first().map(|c| c.latency_us).unwrap_or(0.0))
+                })
+                .sum();
+            println!(
+                "{name:16} bs={bs:<5} PS {:>12.1} µs   PL {:>11.1} µs   AIE {:>11.1} µs",
+                ps, pl, aie
+            );
+            rows.push(vec![
+                name.to_string(),
+                bs.to_string(),
+                format!("{ps:.2}"),
+                format!("{pl:.2}"),
+                format!("{aie:.2}"),
+            ]);
+        }
+        let last = rows.last().unwrap().clone();
+        let labels = vec!["PS".to_string(), "PL".to_string(), "AIE".to_string()];
+        let vals = vec![
+            last[2].parse::<f64>().unwrap(),
+            last[3].parse::<f64>().unwrap(),
+            last[4].parse::<f64>().unwrap(),
+        ];
+        println!("{}", ascii_bars(&format!("  log-scale, {name} @ largest bs"), &labels, &vals, true));
+    }
+    write_tsv(reports_dir().join("fig4.tsv"), &["combo", "batch", "ps_us", "pl_us", "aie_us"], &rows)?;
+    println!("paper check: PL wins at low FLOPs; AIE wins at high FLOPs (crossover visible above)");
+    Ok(())
+}
+
+/// Fig 5: PS execution-time breakdown per training phase.
+fn fig5() -> Result<()> {
+    println!("== Fig 5: PS train-step phase breakdown ==");
+    let platform = vek280();
+    let mut rows = Vec::new();
+    for name in ["dqn_cartpole", "ddpg_lunar", "dqn_breakout"] {
+        let c = combo(name);
+        let dag = build_train_graph(&c.train_spec(c.batch));
+        let mut per_phase = [0.0f64; 4];
+        let mut total = 0.0;
+        for node in &dag.nodes {
+            let t = ps_latency(platform.spec(Component::PS), &node.kind, Format::Fp32);
+            let idx = match node.phase {
+                Phase::Forward => 0,
+                Phase::Loss => 1,
+                Phase::Backward => 2,
+                Phase::Update => 3,
+            };
+            per_phase[idx] += t;
+            total += t;
+        }
+        println!(
+            "{name:16} fwd {:5.1}%  loss {:4.1}%  bwd {:5.1}%  update {:4.1}%   (total {:.1} µs)",
+            100.0 * per_phase[0] / total,
+            100.0 * per_phase[1] / total,
+            100.0 * per_phase[2] / total,
+            100.0 * per_phase[3] / total,
+            total
+        );
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.4}", per_phase[0] / total),
+            format!("{:.4}", per_phase[1] / total),
+            format!("{:.4}", per_phase[2] / total),
+            format!("{:.4}", per_phase[3] / total),
+        ]);
+    }
+    write_tsv(reports_dir().join("fig5.tsv"), &["combo", "forward", "loss", "backward", "update"], &rows)?;
+    println!("paper check: forward + backward dominate across all three combos");
+    Ok(())
+}
+
+/// Fig 6: synthetic n×n GEMM ladder on PL vs AIE.
+fn fig6() -> Result<()> {
+    println!("== Fig 6: synthetic GEMM on PL vs AIE (init | body) ==");
+    let platform = vek280();
+    let mut rows = Vec::new();
+    for n in [64usize, 128, 256, 512, 1024, 2048] {
+        let kind = apdrl::graph::LayerKind::Mm { m: n, k: n, n };
+        let pl_best = explore_pl(platform.spec(Component::PL), &kind, Format::Fp16, platform.pl_dsp)
+            .last()
+            .map(|d| d.latency_us)
+            .unwrap();
+        let aie_best = explore_aie(
+            platform.spec(Component::AIE),
+            &kind,
+            Format::Bf16,
+            platform.aie_tiles,
+            platform.aie_lanes_per_tile,
+        )
+        .last()
+        .map(|d| d.latency_us)
+        .unwrap();
+        let pl_init = platform.pl.init_us.min(pl_best);
+        let aie_init = platform.aie.init_us.min(aie_best);
+        println!(
+            "GEMM {n:<5} PL {pl_best:>10.1} µs (init {:4.1}%)   AIE {aie_best:>10.1} µs (init {:5.1}%)   PL/AIE = {:.2}",
+            100.0 * pl_init / pl_best,
+            100.0 * aie_init / aie_best,
+            pl_best / aie_best
+        );
+        rows.push(vec![
+            n.to_string(),
+            format!("{pl_best:.2}"),
+            format!("{:.4}", pl_init / pl_best),
+            format!("{aie_best:.2}"),
+            format!("{:.4}", aie_init / aie_best),
+        ]);
+    }
+    write_tsv(
+        reports_dir().join("fig6.tsv"),
+        &["n", "pl_us", "pl_init_frac", "aie_us", "aie_init_frac"],
+        &rows,
+    )?;
+    println!("paper check: AIE init dominates small GEMMs; large-GEMM PL/AIE ratio ≈ clock ratio (4.08)");
+    Ok(())
+}
+
+/// Fig 8: DQN-Breakout per-layer FLOPs (fwd + bwd MM nodes).
+fn fig8() -> Result<()> {
+    println!("== Fig 8: DQN-Breakout per-layer FLOPs (batch=1 rows) ==");
+    let c = combo("dqn_breakout");
+    let dag = build_train_graph(&c.train_spec(1));
+    let mut rows = Vec::new();
+    let (mut labels, mut vals) = (Vec::new(), Vec::new());
+    for node in dag.nodes.iter().filter(|n| n.kind.is_mm()) {
+        rows.push(vec![node.name.clone(), format!("{:.3e}", node.flops())]);
+        labels.push(node.name.clone());
+        vals.push(node.flops());
+    }
+    println!("{}", ascii_bars("  per-MM-layer FLOPs (log scale)", &labels, &vals, true));
+    let min = vals.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = vals.iter().cloned().fold(0.0f64, f64::max);
+    println!(
+        "{} MM layers; min {:.2} KFLOPs, max {:.2} MFLOPs (paper: 15 layers, 4.10 K – 10.61 M)",
+        vals.len(),
+        min / 1e3,
+        max / 1e6
+    );
+    write_tsv(reports_dir().join("fig8.tsv"), &["layer", "flops"], &rows)?;
+    Ok(())
+}
+
+/// Table I: the DSE design-point counts.
+fn table1() -> Result<()> {
+    println!("== Table I: PL DSE design points ==");
+    let lb = 4096usize;
+    let rows = vec![
+        vec!["Dataflow (DF)".to_string(), "Enable/Disable".to_string(), "2".to_string()],
+        vec!["Function Pipeline (FP)".to_string(), "Enable/Disable".to_string(), "2".to_string()],
+        vec!["Loop Pipeline (LP)".to_string(), "Enable/Disable".to_string(), "2".to_string()],
+        vec![
+            "Loop Unroll (LU)".to_string(),
+            format!("factors up to LB={lb}"),
+            unroll_factors(lb).len().to_string(),
+        ],
+        vec![
+            "Array Partition (AP)".to_string(),
+            "bounded by B_M/B_D (fp16)".to_string(),
+            partition_factors(Format::Fp16).len().to_string(),
+        ],
+    ];
+    println!("{}", ascii_table(&["Pragma", "Configurations", "#Design Points"], &rows));
+    write_tsv(reports_dir().join("table1.tsv"), &["pragma", "configurations", "points"], &rows)?;
+    Ok(())
+}
+
+/// Table II: FP16 / FP32 / BF16 comparison.
+fn table2() -> Result<()> {
+    println!("== Table II: format comparison ==");
+    let rows: Vec<Vec<String>> = [Format::Fp16, Format::Fp32, Format::Bf16]
+        .iter()
+        .map(|&f| {
+            let i = format_info(f);
+            vec![
+                i.name.to_string(),
+                format!("(1, {}, {})", i.exp_bits, i.frac_bits),
+                format!("[{}, {}]", i.exp_min, i.exp_max),
+                i.bytes.to_string(),
+                (if i.needs_master_weight { "Yes" } else { "No" }).to_string(),
+                (if i.needs_loss_scaling { "Yes" } else { "No" }).to_string(),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        ascii_table(
+            &["Format", "(S,E,F)", "Exp range", "Bytes", "Master wt?", "Loss scaling?"],
+            &rows
+        )
+    );
+    write_tsv(
+        reports_dir().join("table2.tsv"),
+        &["format", "sef", "exp_range", "bytes", "master", "scaling"],
+        &rows,
+    )?;
+    Ok(())
+}
+
+/// Fig 11 + Table III reward-error column: real training, quantized vs
+/// fp32, across seeds.
+fn fig11(args: &Args) -> Result<()> {
+    let seeds = args.usize_flag("seeds", 3);
+    let only: Option<&str> = args.flag("combo");
+    let full = args.flag("full").is_some();
+    let combos: Vec<&str> = match only {
+        Some(c) => vec![c],
+        None => vec!["dqn_cartpole", "a2c_invpend", "ddpg_mntncar", "ddpg_lunar"],
+    };
+    let mut runtime = Runtime::new(artifacts_dir())?;
+    println!("== Fig 11 / Table III: convergence of quantized vs FP32 ({seeds} seeds) ==");
+    let mut rows = Vec::new();
+    for name in combos {
+        let c = combo(name);
+        let default_steps: usize = if full { 120_000 } else { 15_000 };
+        let limits = TrainLimits {
+            max_env_steps: args.usize_flag("steps", default_steps) as u64,
+            max_episodes: if full { 2_000 } else { 400 },
+        };
+        let mut fp32_rewards = Vec::new();
+        let mut mixed_rewards = Vec::new();
+        for seed in 1..=seeds as u64 {
+            for mode in ["fp32", "mixed"] {
+                let r = train_combo(&mut runtime, &c, mode, seed, limits, true)?;
+                let conv = r.metrics.converged_reward(50);
+                println!(
+                    "  {name} [{mode}] seed {seed}: converged {conv:.2} ({} eps, {} train steps, {} overflows)",
+                    r.metrics.episode_rewards.len(),
+                    r.metrics.train_steps,
+                    r.metrics.overflows
+                );
+                let curve: Vec<Vec<String>> = r
+                    .metrics
+                    .smoothed_rewards()
+                    .iter()
+                    .enumerate()
+                    .map(|(i, v)| vec![i.to_string(), format!("{v:.3}")])
+                    .collect();
+                write_tsv(
+                    reports_dir().join(format!("fig11_{name}_{mode}_s{seed}.tsv")),
+                    &["episode", "reward_ma100"],
+                    &curve,
+                )?;
+                if mode == "fp32" {
+                    fp32_rewards.push(conv);
+                } else {
+                    mixed_rewards.push(conv);
+                }
+            }
+        }
+        let err = reward_error_pct(&fp32_rewards, &mixed_rewards);
+        println!(
+            "  -> {name}: fp32 {:.2} vs mixed {:.2} | reward error {err:.2}% (paper: {:.2}%)",
+            apdrl::util::stats::mean(&fp32_rewards),
+            apdrl::util::stats::mean(&mixed_rewards),
+            c.paper_reward_error_pct
+        );
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.3}", apdrl::util::stats::mean(&fp32_rewards)),
+            format!("{:.3}", apdrl::util::stats::mean(&mixed_rewards)),
+            format!("{err:.2}"),
+            format!("{:.2}", c.paper_reward_error_pct),
+        ]);
+    }
+    write_tsv(
+        reports_dir().join("table3_reward_error.tsv"),
+        &["combo", "fp32_reward", "mixed_reward", "error_pct", "paper_error_pct"],
+        &rows,
+    )?;
+    Ok(())
+}
+
+/// Table IV: FP32 vs quantized training time across network sizes.
+fn table4() -> Result<()> {
+    println!("== Table IV: DQN-CartPole step time, FP32 vs AP-DRL quantized ==");
+    let sizes: [(&str, Vec<usize>); 3] = [
+        ("(64, 64)", vec![4, 64, 64, 2]),
+        ("(400, 300)", vec![4, 400, 300, 2]),
+        ("(4096, 3072)", vec![4, 4096, 3072, 2]),
+    ];
+    let mut rows = Vec::new();
+    for (label, sizes_v) in &sizes {
+        let mut c = combo("dqn_cartpole");
+        c.net = apdrl::graph::NetSpec::mlp(sizes_v);
+        let fp32 = static_phase(&c, 64, false);
+        let quant = static_phase(&c, 64, true);
+        let speedup = fp32.step_time_us() / quant.step_time_us();
+        println!(
+            "{label:14} FP32 {:>12.1} µs   quantized {:>12.1} µs   speedup {speedup:.2}x   (sync exposed {:.1} µs)",
+            fp32.step_time_us(),
+            quant.step_time_us(),
+            quant.schedule.sync_us
+        );
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.2}", fp32.step_time_us()),
+            format!("{:.2}", quant.step_time_us()),
+            format!("{speedup:.3}"),
+            format!("{:.2}", quant.schedule.sync_us),
+        ]);
+    }
+    write_tsv(
+        reports_dir().join("table4.tsv"),
+        &["hidden", "fp32_us", "quant_us", "speedup", "sync_us"],
+        &rows,
+    )?;
+    println!("paper check: 0.78x (sync-bound) -> 1.13x -> 2.98x with growing FLOPs");
+    Ok(())
+}
+
+/// Fig 12/13 shared sweep: (combo, batch) × {AIE-only, FIXAR, AP-DRL}.
+fn speedup_matrix() -> Vec<(String, usize, f64, f64, f64)> {
+    let mut out = Vec::new();
+    let grid: [(&str, [usize; 3]); 6] = [
+        ("dqn_cartpole", [64, 128, 256]),
+        ("a2c_invpend", [64, 128, 256]),
+        ("ddpg_lunar", [256, 512, 1024]),
+        ("ddpg_mntncar", [256, 512, 1024]),
+        ("dqn_breakout", [16, 32, 64]),
+        ("ppo_mspacman", [16, 32, 64]),
+    ];
+    for (name, batches) in grid {
+        let c = combo(name);
+        for bs in batches {
+            let aie = aie_only_step_time(&c, bs);
+            let fixar = fixar_step_time(&c, bs);
+            let apdrl = static_phase(&c, bs, true).schedule.makespan_us;
+            out.push((name.to_string(), bs, aie, fixar, apdrl));
+        }
+    }
+    out
+}
+
+fn fig12_13() -> Result<()> {
+    println!("== Fig 12/13: AIE-only vs FIXAR vs AP-DRL (per-step time, normalized) ==");
+    let matrix = speedup_matrix();
+    let mut rows12 = Vec::new();
+    let mut rows13 = Vec::new();
+    for (name, bs, aie, fixar, apdrl) in &matrix {
+        let max = aie.max(*fixar).max(*apdrl);
+        println!(
+            "{name:16} bs={bs:<5} AIE-only {:>6.3}  FIXAR {:>6.3}  AP-DRL {:>6.3}   (AP-DRL vs FIXAR {:.2}x, vs AIE {:.2}x)",
+            aie / max,
+            fixar / max,
+            apdrl / max,
+            fixar / apdrl,
+            aie / apdrl
+        );
+        rows12.push(vec![
+            name.clone(),
+            bs.to_string(),
+            format!("{:.4}", aie / max),
+            format!("{:.4}", fixar / max),
+            format!("{:.4}", apdrl / max),
+        ]);
+        rows13.push(vec![
+            name.clone(),
+            bs.to_string(),
+            format!("{:.4}", apdrl / aie),
+            format!("{:.4}", apdrl / fixar),
+            "1.0000".to_string(),
+        ]);
+    }
+    write_tsv(
+        reports_dir().join("fig12.tsv"),
+        &["combo", "batch", "aie_only_norm", "fixar_norm", "apdrl_norm"],
+        &rows12,
+    )?;
+    write_tsv(
+        reports_dir().join("fig13.tsv"),
+        &["combo", "batch", "aie_only_tput_rel", "fixar_tput_rel", "apdrl_tput_rel"],
+        &rows13,
+    )?;
+    Ok(())
+}
+
+/// Fig 14: operation sequence (Gantt) of DDPG-LunarCont @ bs 256.
+fn fig14() -> Result<()> {
+    println!("== Fig 14: DDPG-LunarCont operation sequence (batch 256) ==");
+    let c = combo("ddpg_lunar");
+    let plan = static_phase(&c, 256, true);
+    let span = plan.schedule.makespan_us;
+    let width = 60.0;
+    let mut rows = Vec::new();
+    for e in &plan.schedule.entries {
+        let node = &plan.dag.nodes[e.node];
+        let pre = (((e.start_us / span) * width) as usize).min(60);
+        let len = ((((e.finish_us - e.start_us) / span) * width).ceil() as usize)
+            .max(1)
+            .min(61 - pre);
+        let ch = match e.component {
+            Component::PL => '#',
+            Component::AIE => '%',
+            Component::PS => '.',
+        };
+        println!(
+            "{:4} {:26} {:3} |{}{}|",
+            e.node,
+            node.name,
+            e.component.name(),
+            " ".repeat(pre),
+            ch.to_string().repeat(len)
+        );
+        rows.push(vec![
+            node.name.clone(),
+            e.component.name().to_string(),
+            format!("{:.2}", e.start_us),
+            format!("{:.2}", e.finish_us),
+        ]);
+    }
+    println!("makespan {:.1} µs (# PL  % AIE  . PS)", span);
+    write_tsv(reports_dir().join("fig14.tsv"), &["node", "unit", "start_us", "finish_us"], &rows)?;
+    Ok(())
+}
+
+/// Fig 15: DDPG-LunarCont partitioning vs batch size.
+fn fig15() -> Result<()> {
+    println!("== Fig 15: DDPG-LunarCont partition vs batch size ==");
+    let c = combo("ddpg_lunar");
+    let mut rows = Vec::new();
+    for bs in [64usize, 128, 256, 512, 1024] {
+        let plan = static_phase(&c, bs, true);
+        let total_mm = plan.dag.mm_nodes().len();
+        let aie = plan.solution.aie_nodes(&plan.dag);
+        let names: Vec<String> = plan
+            .solution
+            .assignment
+            .iter()
+            .enumerate()
+            .filter(|(i, p)| plan.dag.nodes[*i].kind.is_mm() && p.component == Component::AIE)
+            .map(|(i, _)| plan.dag.nodes[i].name.clone())
+            .collect();
+        println!("bs={bs:<6} AIE {aie}/{total_mm} MM nodes: {}", names.join(", "));
+        rows.push(vec![bs.to_string(), aie.to_string(), total_mm.to_string(), names.join(",")]);
+    }
+    write_tsv(
+        reports_dir().join("fig15.tsv"),
+        &["batch", "aie_mm_nodes", "total_mm_nodes", "aie_layers"],
+        &rows,
+    )?;
+    println!("paper check: AIE node count grows with batch size");
+    Ok(())
+}
+
+/// Headline speedups (§V-C / abstract): extremes over the Fig 12 matrix.
+fn headline() -> Result<()> {
+    println!("== headline speedups ==");
+    let matrix = speedup_matrix();
+    let best_vs_fixar = matrix.iter().map(|(_, _, _, f, a)| f / a).fold(0.0f64, f64::max);
+    let worst_vs_fixar =
+        matrix.iter().map(|(_, _, _, f, a)| f / a).fold(f64::INFINITY, f64::min);
+    let best_vs_aie = matrix.iter().map(|(_, _, ai, _, a)| ai / a).fold(0.0f64, f64::max);
+    let worst_vs_aie =
+        matrix.iter().map(|(_, _, ai, _, a)| ai / a).fold(f64::INFINITY, f64::min);
+    println!("AP-DRL vs FIXAR (PL baseline): {worst_vs_fixar:.2}x - {best_vs_fixar:.2}x   (paper: 0.98x - 4.17x)");
+    println!("AP-DRL vs AIE-only:            {worst_vs_aie:.2}x - {best_vs_aie:.2}x   (paper: 1.61x - 3.82x)");
+    write_tsv(
+        reports_dir().join("headline.tsv"),
+        &["metric", "min", "max", "paper_min", "paper_max"],
+        &[
+            vec!["vs_fixar".to_string(), format!("{worst_vs_fixar:.3}"), format!("{best_vs_fixar:.3}"), "0.98".to_string(), "4.17".to_string()],
+            vec!["vs_aie_only".to_string(), format!("{worst_vs_aie:.3}"), format!("{best_vs_aie:.3}"), "1.61".to_string(), "3.82".to_string()],
+        ],
+    )?;
+    Ok(())
+}
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Args {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut it = std::env::args().skip(1).peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let val = if it.peek().map_or(false, |v| !v.starts_with("--")) {
+                    it.next().unwrap()
+                } else {
+                    "true".to_string()
+                };
+                flags.insert(name.to_string(), val);
+            } else {
+                positional.push(a);
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    fn usize_flag(&self, name: &str, default: usize) -> usize {
+        self.flag(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let which = args.positional.first().map(String::as_str).unwrap_or("all");
+    match which {
+        "fig4" => fig4()?,
+        "fig5" => fig5()?,
+        "fig6" => fig6()?,
+        "fig8" => fig8()?,
+        "table1" => table1()?,
+        "table2" => table2()?,
+        "fig11" => fig11(&args)?,
+        "table4" => table4()?,
+        "fig12" | "fig13" => fig12_13()?,
+        "fig14" => fig14()?,
+        "fig15" => fig15()?,
+        "headline" => headline()?,
+        "all" => {
+            fig4()?;
+            fig5()?;
+            fig6()?;
+            fig8()?;
+            table1()?;
+            table2()?;
+            table4()?;
+            fig12_13()?;
+            fig14()?;
+            fig15()?;
+            headline()?;
+            println!("\n(fig11 runs real training; invoke `figures fig11` separately)");
+        }
+        other => bail!("unknown figure {other}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! Baseline timing models (paper §V-C): AIE-only (CHARM-optimized FP32)
+//! and FIXAR (CPU–FPGA @164 MHz, 16-bit fixed point, quantization-aware
+//! training), evaluated on the same CDFG + schedule machinery as AP-DRL.
+
+use crate::graph::build_train_graph;
+use crate::hw::{fixar_platform, vek280, Component};
+use crate::partition::model::{Assignment, Placement, Problem};
+use crate::partition::evaluate;
+use crate::profile::profile_dag;
+use crate::Micros;
+
+use super::config::ComboConfig;
+
+/// AIE-only (paper baseline 1): every MM node on the AIE in FP32
+/// (CHARM-optimized), non-MM nodes on the PL in FP32, no quantization.
+pub fn aie_only_step_time(combo: &ComboConfig, bs: usize) -> Micros {
+    let platform = vek280();
+    let dag = build_train_graph(&combo.train_spec(bs));
+    let profiles = profile_dag(&dag, &platform, false);
+    let problem = Problem::new(&dag, &profiles, &platform, false);
+    let assignment: Assignment = (0..dag.len())
+        .map(|i| {
+            if profiles[i].aie.is_empty() {
+                Placement { component: Component::PL, candidate: 0 }
+            } else {
+                Placement { component: Component::AIE, candidate: 0 }
+            }
+        })
+        .collect();
+    evaluate(&problem, &assignment).makespan_us
+}
+
+/// FIXAR (paper baseline 2, [27]): everything on the 164 MHz fabric with
+/// fx16 quantization-aware training (no master-weight sync — fixed point
+/// trains in-place), CPU host loop.
+pub fn fixar_step_time(combo: &ComboConfig, bs: usize) -> Micros {
+    let platform = fixar_platform();
+    let dag = build_train_graph(&combo.train_spec(bs));
+    // FIXAR's fabric computes in fixed point; our PL fx16 path maps onto
+    // the fp16 datapath width.  Profile quantized=true (fp16 widths) but
+    // evaluate without AP-DRL's master-weight sync (quantized=false in
+    // the Problem => no sync overhead; fixed-point QAT needs none).
+    let profiles = profile_dag(&dag, &platform, true);
+    let problem = Problem::new(&dag, &profiles, &platform, false);
+    let assignment: Assignment = (0..dag.len())
+        .map(|_| Placement { component: Component::PL, candidate: 0 })
+        .collect();
+    evaluate(&problem, &assignment).makespan_us
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::combo;
+    use crate::coordinator::pipeline::static_phase;
+
+    /// §V-C bullet 1: AIE-only loses to FIXAR at low FLOPs (launch
+    /// overhead), wins at high FLOPs (clock).
+    #[test]
+    fn aie_vs_fixar_crossover() {
+        let low = combo("dqn_cartpole");
+        let t_aie = aie_only_step_time(&low, 64);
+        let t_fix = fixar_step_time(&low, 64);
+        assert!(t_aie > t_fix, "low FLOPs: AIE-only {t_aie} should lose to FIXAR {t_fix}");
+
+        let high = combo("dqn_breakout");
+        let t_aie = aie_only_step_time(&high, 128);
+        let t_fix = fixar_step_time(&high, 128);
+        assert!(t_aie < t_fix, "high FLOPs: AIE-only {t_aie} should beat FIXAR {t_fix}");
+    }
+
+    /// §V-C bullet 3: AP-DRL beats AIE-only across the board
+    /// (1.61×–3.82× in the paper).
+    #[test]
+    fn apdrl_beats_aie_only_everywhere() {
+        for name in ["dqn_cartpole", "ddpg_lunar", "dqn_breakout"] {
+            let c = combo(name);
+            let plan = static_phase(&c, c.batch, true);
+            let t_aie = aie_only_step_time(&c, c.batch);
+            let ratio = t_aie / plan.schedule.makespan_us;
+            assert!(
+                ratio > 1.0,
+                "{name}: AP-DRL {} should beat AIE-only {t_aie}",
+                plan.schedule.makespan_us
+            );
+            assert!(ratio < 50.0, "{name}: speedup {ratio} implausibly large");
+        }
+    }
+
+    /// §V-C bullet 2: AP-DRL's advantage over FIXAR grows with FLOPs
+    /// (0.98× → 4.17× in the paper).
+    #[test]
+    fn apdrl_vs_fixar_grows_with_flops() {
+        let low = combo("dqn_cartpole");
+        let plan_low = static_phase(&low, 64, true);
+        let r_low = fixar_step_time(&low, 64) / plan_low.schedule.makespan_us;
+
+        let high = combo("dqn_breakout");
+        let plan_high = static_phase(&high, 128, true);
+        let r_high = fixar_step_time(&high, 128) / plan_high.schedule.makespan_us;
+
+        assert!(r_high > r_low, "speedup should grow: low {r_low} high {r_high}");
+        assert!(r_high > 1.5, "high-FLOPs speedup too small: {r_high}");
+    }
+}

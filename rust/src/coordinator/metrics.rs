@@ -1,0 +1,75 @@
+//! Training metrics: episodic-reward tracking (Fig 11's 100-episode
+//! moving average), reward-error computation (Table III) and loss-scale
+//! telemetry.
+
+use crate::util::stats;
+
+/// Accumulated telemetry for one training run.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub episode_rewards: Vec<f64>,
+    pub losses: Vec<f64>,
+    pub env_steps: u64,
+    pub train_steps: u64,
+    pub overflows: u64,
+    pub wallclock_s: f64,
+}
+
+impl RunMetrics {
+    /// Paper Fig 11's smoothing: 100-episode sliding-window average.
+    pub fn smoothed_rewards(&self) -> Vec<f64> {
+        stats::moving_average(&self.episode_rewards, 100)
+    }
+
+    /// Converged reward = mean of the last `tail` episodes (the value the
+    /// paper compares between quantized and FP32 runs).
+    pub fn converged_reward(&self, tail: usize) -> f64 {
+        if self.episode_rewards.is_empty() {
+            return 0.0;
+        }
+        let n = self.episode_rewards.len();
+        let start = n.saturating_sub(tail);
+        stats::mean(&self.episode_rewards[start..])
+    }
+}
+
+/// Table III reward error (%): |quantized − fp32| / |fp32| over converged
+/// rewards, averaged across seeds.
+pub fn reward_error_pct(fp32_rewards: &[f64], quant_rewards: &[f64]) -> f64 {
+    let f = stats::mean(fp32_rewards);
+    let q = stats::mean(quant_rewards);
+    stats::relative_error(q, f) * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converged_reward_tail() {
+        let m = RunMetrics {
+            episode_rewards: vec![0.0, 0.0, 10.0, 10.0],
+            ..Default::default()
+        };
+        assert_eq!(m.converged_reward(2), 10.0);
+        assert_eq!(m.converged_reward(100), 5.0);
+        assert_eq!(RunMetrics::default().converged_reward(5), 0.0);
+    }
+
+    #[test]
+    fn reward_error_pct_basic() {
+        assert!((reward_error_pct(&[100.0], &[98.0]) - 2.0).abs() < 1e-9);
+        assert!((reward_error_pct(&[100.0, 100.0], &[101.0, 101.0]) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn smoothing_window() {
+        let m = RunMetrics {
+            episode_rewards: (0..200).map(|i| i as f64).collect(),
+            ..Default::default()
+        };
+        let s = m.smoothed_rewards();
+        assert_eq!(s.len(), 200);
+        assert!((s[199] - 149.5).abs() < 1e-9); // mean of 100..199
+    }
+}

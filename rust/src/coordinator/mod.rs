@@ -1,0 +1,16 @@
+//! The AP-DRL coordinator (L3 proper): experiment configs (Table III),
+//! the static phase (build → profile → partition, paper Fig 7 left), the
+//! dynamic phase (env/train loop over PJRT artifacts with the
+//! quantization FSM, Fig 7 right), baseline timing models (AIE-only,
+//! FIXAR) and report emission.
+
+pub mod baselines;
+pub mod config;
+pub mod metrics;
+pub mod pipeline;
+pub mod report;
+pub mod trainer;
+
+pub use config::{combo, ComboConfig, COMBO_NAMES};
+pub use pipeline::{static_phase, StaticPlan};
+pub use trainer::{train_combo, TrainLimits, TrainResult};

@@ -1,0 +1,126 @@
+//! Static phase (paper Fig 7, left column): build the layer CDFG,
+//! profile it per component (DSE), select the PS–PL interface (TAPCA),
+//! solve the partitioning ILP and derive the precision policy.
+
+use crate::graph::{build_train_graph, Dag};
+use crate::hw::{vek280, Platform};
+use crate::partition::{evaluate, solve_ilp, Solution};
+use crate::partition::schedule::Schedule;
+use crate::profile::tapca::{select_interface, DrlTraffic, PsPlInterface};
+use crate::profile::{profile_dag, NodeProfile};
+use crate::quant::PrecisionPolicy;
+use crate::Micros;
+
+use super::config::ComboConfig;
+
+/// Everything the dynamic phase needs, decided before deployment.
+pub struct StaticPlan {
+    pub dag: Dag,
+    pub profiles: Vec<NodeProfile>,
+    pub platform: Platform,
+    pub solution: Solution,
+    pub schedule: Schedule,
+    pub policy: PrecisionPolicy,
+    pub interface: PsPlInterface,
+    /// Per-step PS–PL pipeline time (inference I/O + batch + model sync)
+    /// over the selected interface.
+    pub ps_pl_us: Micros,
+}
+
+/// Run the static phase for `combo` at batch size `bs`.
+/// `quantized` selects AP-DRL's mixed-precision mode vs the FP32 control.
+pub fn static_phase(combo: &ComboConfig, bs: usize, quantized: bool) -> StaticPlan {
+    let platform = vek280();
+    let dag = build_train_graph(&combo.train_spec(bs));
+    let profiles = profile_dag(&dag, &platform, quantized);
+    let problem = crate::partition::Problem::new(&dag, &profiles, &platform, quantized);
+    let solution = solve_ilp(&problem);
+    let schedule = evaluate(&problem, &solution.assignment);
+    let policy = PrecisionPolicy::from_assignment(&dag, &solution.assignment, quantized);
+
+    // TAPCA: PS–PL traffic of the Inference → Buffer → Batch → Model
+    // pipeline (paper Fig 10).
+    let elem_bytes = 4.0; // PS side is always fp32
+    let weights = combo.net.weight_elems() as f64;
+    let traffic = DrlTraffic {
+        infer_bytes: (combo.obs_dim + combo.act_dim) as f64 * elem_bytes,
+        infer_transfers: 1.0,
+        batch_bytes: bs as f64 * (2.0 * combo.obs_dim as f64 + combo.act_dim as f64 + 2.0) * elem_bytes,
+        // The model is accelerator-resident; the PS master copy is only
+        // refreshed periodically (checkpoint cadence ~1/100 steps), so
+        // the per-step charge is amortized.
+        model_bytes: weights * elem_bytes / 100.0,
+    };
+    let (interface, ps_pl_us) = select_interface(&traffic);
+
+    StaticPlan { dag, profiles, platform, solution, schedule, policy, interface, ps_pl_us }
+}
+
+impl StaticPlan {
+    /// Full per-training-step time on the modeled platform: the
+    /// partitioned train-stage makespan + the PS–PL pipeline (Fig 12's
+    /// "total training time within one timestep").
+    pub fn step_time_us(&self) -> Micros {
+        self.schedule.makespan_us + self.ps_pl_us
+    }
+
+    /// Training throughput (batches/second), Fig 13's metric.
+    pub fn throughput(&self) -> f64 {
+        1e6 / self.step_time_us()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::combo;
+    use crate::hw::Component;
+
+    #[test]
+    fn cartpole_plan_is_all_pl() {
+        // Fig 15 / §V-C: tiny nets stay on the PL.
+        let plan = static_phase(&combo("dqn_cartpole"), 64, true);
+        assert_eq!(plan.solution.aie_nodes(&plan.dag), 0);
+        assert!(plan.policy.needs_loss_scaling);
+        assert!(plan.step_time_us() > 0.0);
+    }
+
+    #[test]
+    fn breakout_plan_uses_aie() {
+        // High-FLOPs conv nodes must migrate to the AIE.
+        let plan = static_phase(&combo("dqn_breakout"), 32, true);
+        assert!(
+            plan.solution.aie_nodes(&plan.dag) >= 3,
+            "got {}",
+            plan.solution.aie_nodes(&plan.dag)
+        );
+    }
+
+    #[test]
+    fn quantized_never_slower_at_high_flops() {
+        // Table IV large net: BF16/AIE quantization must speed up the
+        // step substantially.
+        let c = combo("ddpg_lunar");
+        let q = static_phase(&c, 1024, true);
+        let f = static_phase(&c, 1024, false);
+        assert!(
+            q.step_time_us() < f.step_time_us(),
+            "quantized {} vs fp32 {}",
+            q.step_time_us(),
+            f.step_time_us()
+        );
+    }
+
+    #[test]
+    fn schedule_components_match_policy() {
+        let plan = static_phase(&combo("ddpg_lunar"), 512, true);
+        for e in &plan.schedule.entries {
+            let fmt = plan.policy.node_format[e.node];
+            match e.component {
+                Component::PL => assert_eq!(fmt, crate::hw::Format::Fp16),
+                Component::AIE => assert_eq!(fmt, crate::hw::Format::Bf16),
+                Component::PS => assert_eq!(fmt, crate::hw::Format::Fp32),
+            }
+        }
+    }
+}

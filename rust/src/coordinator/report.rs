@@ -1,0 +1,107 @@
+//! Report emitters: TSV series + ASCII tables/charts for the figure
+//! harness, written under `reports/`.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// Write a TSV file with a header row.
+pub fn write_tsv(path: impl AsRef<Path>, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
+    let mut out = String::new();
+    out.push_str(&header.join("\t"));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&row.join("\t"));
+        out.push('\n');
+    }
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+/// Render a fixed-width ASCII table.
+pub fn ascii_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let sep = |out: &mut String| {
+        for w in &widths {
+            let _ = write!(out, "+{}", "-".repeat(w + 2));
+        }
+        out.push_str("+\n");
+    };
+    sep(&mut out);
+    for (i, h) in header.iter().enumerate() {
+        let _ = write!(out, "| {:w$} ", h, w = widths[i]);
+    }
+    out.push_str("|\n");
+    sep(&mut out);
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            let _ = write!(out, "| {:w$} ", cell, w = widths[i]);
+        }
+        out.push_str("|\n");
+    }
+    sep(&mut out);
+    out
+}
+
+/// Simple horizontal bar chart (log or linear) for figure-style series.
+pub fn ascii_bars(title: &str, labels: &[String], values: &[f64], log: bool) -> String {
+    let mut out = format!("{title}\n");
+    let transformed: Vec<f64> = values
+        .iter()
+        .map(|&v| if log { (v.max(1e-12)).log10() } else { v })
+        .collect();
+    let lo = transformed.iter().cloned().fold(f64::INFINITY, f64::min).min(0.0);
+    let hi = transformed.iter().cloned().fold(f64::NEG_INFINITY, f64::max).max(lo + 1e-9);
+    let width = 48.0;
+    let label_w = labels.iter().map(|l| l.len()).max().unwrap_or(0);
+    for (label, (&v, &t)) in labels.iter().zip(values.iter().zip(&transformed)) {
+        let frac = ((t - lo) / (hi - lo)).clamp(0.0, 1.0);
+        let bar = "#".repeat((frac * width) as usize + 1);
+        let _ = writeln!(out, "  {label:label_w$} | {bar:<49} {v:.4}");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tsv_roundtrip() {
+        let dir = std::env::temp_dir().join("apdrl_test_reports");
+        let path = dir.join("t.tsv");
+        write_tsv(&path, &["a", "b"], &[vec!["1".into(), "2".into()]]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a\tb\n1\t2\n");
+    }
+
+    #[test]
+    fn table_aligns() {
+        let t = ascii_table(&["name", "v"], &[vec!["x".into(), "1.5".into()]]);
+        assert!(t.contains("| name |"));
+        assert!(t.lines().count() >= 5);
+    }
+
+    #[test]
+    fn bars_render() {
+        let s = ascii_bars(
+            "demo",
+            &["a".into(), "bb".into()],
+            &[1.0, 10.0],
+            true,
+        );
+        assert!(s.contains("demo"));
+        assert!(s.lines().count() == 3);
+    }
+}

@@ -1,0 +1,145 @@
+//! Dynamic phase (paper Fig 7, right column): the Inference →
+//! Environment Step → Train loop, fully in rust, with network compute on
+//! PJRT artifacts and the hardware-aware quantization FSM live.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::drl::a2c::{A2cAgent, A2cConfig};
+use crate::drl::ddpg::{DdpgAgent, DdpgConfig};
+use crate::drl::dqn::{DqnAgent, DqnConfig};
+use crate::drl::ppo::{PpoAgent, PpoConfig};
+use crate::drl::Agent;
+use crate::graph::Algo;
+use crate::runtime::Runtime;
+use crate::util::Rng;
+
+use super::config::ComboConfig;
+use super::metrics::RunMetrics;
+
+/// Run-length limits (scaled for this 1-core testbed; `--full` in the
+/// figures harness restores larger budgets).
+#[derive(Clone, Copy, Debug)]
+pub struct TrainLimits {
+    pub max_env_steps: u64,
+    pub max_episodes: usize,
+}
+
+impl Default for TrainLimits {
+    fn default() -> Self {
+        TrainLimits { max_env_steps: 20_000, max_episodes: 300 }
+    }
+}
+
+/// Result of one seeded training run.
+pub struct TrainResult {
+    pub metrics: RunMetrics,
+    pub combo: String,
+    pub mode: String,
+    pub seed: u64,
+}
+
+fn make_agent(
+    runtime: &mut Runtime,
+    combo: &ComboConfig,
+    mode: &str,
+    seed: u64,
+) -> Result<Box<dyn Agent>> {
+    Ok(match combo.algo {
+        Algo::Dqn => {
+            let obs_shape = match &combo.net {
+                crate::graph::NetSpec::Mlp { .. } => vec![combo.obs_dim],
+                crate::graph::NetSpec::Conv { in_hw, in_ch, .. } => vec![*in_hw, *in_hw, *in_ch],
+            };
+            Box::new(DqnAgent::new(
+                runtime,
+                combo.name,
+                mode,
+                DqnConfig::for_combo(combo.batch, obs_shape, combo.act_dim),
+                seed,
+            )?)
+        }
+        Algo::Ddpg => Box::new(DdpgAgent::new(
+            runtime,
+            combo.name,
+            mode,
+            DdpgConfig::for_combo(combo.batch, combo.obs_dim, combo.act_dim),
+            seed,
+        )?),
+        Algo::A2c => Box::new(A2cAgent::new(
+            runtime,
+            combo.name,
+            mode,
+            A2cConfig::for_combo(combo.batch, combo.obs_dim, combo.act_dim),
+            seed,
+        )?),
+        Algo::Ppo => {
+            let obs_shape = match &combo.net {
+                crate::graph::NetSpec::Mlp { .. } => vec![combo.obs_dim],
+                crate::graph::NetSpec::Conv { in_hw, in_ch, .. } => vec![*in_hw, *in_hw, *in_ch],
+            };
+            Box::new(PpoAgent::new(
+                runtime,
+                combo.name,
+                mode,
+                PpoConfig::for_combo(combo.batch, obs_shape, combo.act_dim),
+                seed,
+            )?)
+        }
+    })
+}
+
+/// Train `combo` in `mode` ("fp32" | "mixed" | "bf16") for one seed.
+pub fn train_combo(
+    runtime: &mut Runtime,
+    combo: &ComboConfig,
+    mode: &str,
+    seed: u64,
+    limits: TrainLimits,
+    verbose: bool,
+) -> Result<TrainResult> {
+    let t0 = Instant::now();
+    let mut agent = make_agent(runtime, combo, mode, seed)?;
+    let mut env = combo.make_env();
+    let mut rng = Rng::new(seed);
+    let mut env_rng = rng.fork(0xE74);
+    let mut metrics = RunMetrics::default();
+
+    let mut obs = env.reset(&mut env_rng);
+    let mut ep_reward = 0.0f64;
+    while metrics.env_steps < limits.max_env_steps
+        && metrics.episode_rewards.len() < limits.max_episodes
+    {
+        let action = agent.act(&obs, &mut rng)?;
+        let tr = env.step(&action, &mut env_rng);
+        if let Some(stats) =
+            agent.observe(&obs, &action, tr.reward as f32, &tr.obs, tr.done, &mut rng)?
+        {
+            metrics.losses.push(stats.loss as f64);
+            if stats.found_inf {
+                metrics.overflows += 1;
+            }
+        }
+        ep_reward += tr.reward;
+        metrics.env_steps += 1;
+        if tr.done {
+            metrics.episode_rewards.push(ep_reward);
+            if verbose && metrics.episode_rewards.len() % 25 == 0 {
+                let n = metrics.episode_rewards.len();
+                let recent = metrics.converged_reward(25);
+                eprintln!(
+                    "  [{}/{} seed {seed}] ep {n}: avg25 {recent:.1} (steps {})",
+                    combo.name, mode, metrics.env_steps
+                );
+            }
+            ep_reward = 0.0;
+            obs = env.reset(&mut env_rng);
+        } else {
+            obs = tr.obs;
+        }
+    }
+    metrics.train_steps = agent.train_steps();
+    metrics.wallclock_s = t0.elapsed().as_secs_f64();
+    Ok(TrainResult { metrics, combo: combo.name.into(), mode: mode.into(), seed })
+}

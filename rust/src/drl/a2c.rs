@@ -1,0 +1,167 @@
+//! A2C agent (continuous control): Gaussian policy + value net trained
+//! jointly from fixed-horizon GAE rollouts.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::envs::Action;
+use crate::quant::LossScaler;
+use crate::runtime::executor::{literal_f32, scalar_f32, scalar_of, to_vec_f32};
+use crate::runtime::{Executor, Runtime};
+use crate::util::Rng;
+
+use super::agent::{Agent, StepStats};
+use super::network::ParamSet;
+use super::rollout::{RolloutBuffer, RolloutStep};
+
+#[derive(Clone, Debug)]
+pub struct A2cConfig {
+    pub horizon: usize,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    pub gamma: f64,
+    pub gae_lambda: f64,
+}
+
+impl A2cConfig {
+    pub fn for_combo(horizon: usize, obs_dim: usize, act_dim: usize) -> Self {
+        A2cConfig { horizon, obs_dim, act_dim, gamma: 0.99, gae_lambda: 0.95 }
+    }
+}
+
+pub struct A2cAgent {
+    cfg: A2cConfig,
+    act_exe: Arc<Executor>,
+    train_exe: Arc<Executor>,
+    params: ParamSet,
+    opt: Vec<xla::Literal>,
+    rollout: RolloutBuffer,
+    scaler: LossScaler,
+    /// Cached policy outputs from the last `act` (reused in `observe`).
+    last: Option<(Vec<f32>, Vec<f32>, f32)>, // (mean, log_std, value)
+    train_steps: u64,
+}
+
+impl A2cAgent {
+    pub fn new(
+        runtime: &mut Runtime,
+        combo: &str,
+        mode: &str,
+        cfg: A2cConfig,
+        seed: u64,
+    ) -> Result<Self> {
+        let act_exe = runtime.load(&format!("{combo}_{mode}_act"))?;
+        let train_exe = runtime.load(&format!("{combo}_{mode}_train"))?;
+        let shapes = train_exe.spec().param_shapes();
+        let mut rng = Rng::new(seed ^ 0xA2C);
+        let params = ParamSet::init(&shapes, &mut rng)?;
+        let opt = ParamSet::opt_state(&shapes)?;
+        let scaled =
+            train_exe.spec().meta.get("scaled").and_then(|b| b.as_bool()).unwrap_or(false);
+        let scaler = if scaled { LossScaler::default() } else { LossScaler::disabled() };
+        let rollout = RolloutBuffer::new(cfg.horizon, cfg.gamma, cfg.gae_lambda);
+        Ok(A2cAgent { cfg, act_exe, train_exe, params, opt, rollout, scaler, last: None, train_steps: 0 })
+    }
+
+    fn policy(&self, obs: &[f32]) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        let obs_lit = literal_f32(obs, &[1, self.cfg.obs_dim])?;
+        let mut inputs: Vec<&xla::Literal> = self.params.tensors.iter().collect();
+        inputs.push(&obs_lit);
+        let outs = self.act_exe.run(&inputs)?;
+        let mean = to_vec_f32(&outs[0])?;
+        let log_std = to_vec_f32(&outs[1])?;
+        let value = scalar_of(&outs[2])?;
+        Ok((mean, log_std, value))
+    }
+
+    fn gaussian_logp(a: &[f32], mean: &[f32], log_std: &[f32]) -> f32 {
+        const LOG_2PI: f32 = 1.837_877_1;
+        a.iter()
+            .zip(mean)
+            .zip(log_std)
+            .map(|((ai, mi), li)| {
+                let std = li.exp();
+                let z = (ai - mi) / std;
+                -0.5 * z * z - li - 0.5 * LOG_2PI
+            })
+            .sum()
+    }
+
+    fn train_rollout(&mut self, last_value: f32) -> Result<StepStats> {
+        let batch = self.rollout.finish(last_value, true);
+        let bs = batch.size;
+        let scratch = [
+            literal_f32(&batch.obs, &[bs, self.cfg.obs_dim])?,
+            literal_f32(&batch.actions_f32, &[bs, self.cfg.act_dim])?,
+            literal_f32(&batch.returns, &[bs])?,
+            literal_f32(&batch.advantages, &[bs])?,
+            scalar_f32(self.scaler.scale())?,
+        ];
+        let mut inputs: Vec<&xla::Literal> = self.params.tensors.iter().collect();
+        inputs.extend(self.opt.iter());
+        inputs.extend(scratch.iter());
+        let mut outs = self.train_exe.run(&inputs)?;
+        let k = self.params.len();
+        let found_inf = scalar_of(&outs.pop().unwrap())? > 0.5;
+        let loss = scalar_of(&outs.pop().unwrap())?;
+        let opt = outs.split_off(k);
+        self.params.replace(outs);
+        self.opt = opt;
+        if self.scaler.update(found_inf) {
+            self.train_steps += 1;
+        }
+        Ok(StepStats { loss, found_inf, loss_scale: self.scaler.scale() })
+    }
+}
+
+impl Agent for A2cAgent {
+    fn act(&mut self, obs: &[f32], rng: &mut Rng) -> Result<Action> {
+        let (mean, log_std, value) = self.policy(obs)?;
+        let action: Vec<f32> = mean
+            .iter()
+            .zip(&log_std)
+            .map(|(m, l)| (m + l.exp() * rng.normal() as f32).clamp(-1.0, 1.0))
+            .collect();
+        self.last = Some((mean, log_std, value));
+        Ok(Action::Continuous(action))
+    }
+
+    fn act_greedy(&mut self, obs: &[f32]) -> Result<Action> {
+        let (mean, _, _) = self.policy(obs)?;
+        Ok(Action::Continuous(mean.iter().map(|m| m.clamp(-1.0, 1.0)).collect()))
+    }
+
+    fn observe(
+        &mut self,
+        obs: &[f32],
+        action: &Action,
+        reward: f32,
+        next_obs: &[f32],
+        done: bool,
+        _rng: &mut Rng,
+    ) -> Result<Option<StepStats>> {
+        let (mean, log_std, value) =
+            self.last.take().unwrap_or((vec![0.0; self.cfg.act_dim], vec![0.0; self.cfg.act_dim], 0.0));
+        let a = action.continuous();
+        let logp = Self::gaussian_logp(a, &mean, &log_std);
+        self.rollout.push(RolloutStep {
+            obs: obs.to_vec(),
+            action_i: 0,
+            action_c: a.to_vec(),
+            logp,
+            value,
+            reward,
+            done,
+        });
+        if self.rollout.full() {
+            let last_value = if done { 0.0 } else { self.policy(next_obs)?.2 };
+            return self.train_rollout(last_value).map(Some);
+        }
+        Ok(None)
+    }
+
+    fn train_steps(&self) -> u64 {
+        self.train_steps
+    }
+}

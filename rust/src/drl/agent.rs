@@ -1,0 +1,39 @@
+//! Common agent interface driven by the coordinator's env loop.
+
+use anyhow::Result;
+
+use crate::envs::Action;
+use crate::util::Rng;
+
+/// Telemetry from one executed train step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepStats {
+    pub loss: f32,
+    pub found_inf: bool,
+    pub loss_scale: f32,
+}
+
+/// A DRL agent: picks actions and learns from transitions.  All network
+/// math goes through PJRT artifacts; the implementations only coordinate.
+pub trait Agent {
+    /// Select an action for `obs` (exploration noise included).
+    fn act(&mut self, obs: &[f32], rng: &mut Rng) -> Result<Action>;
+
+    /// Record a transition; returns train-step stats whenever the agent
+    /// decided to run one (buffer warm, rollout full, ...).
+    fn observe(
+        &mut self,
+        obs: &[f32],
+        action: &Action,
+        reward: f32,
+        next_obs: &[f32],
+        done: bool,
+        rng: &mut Rng,
+    ) -> Result<Option<StepStats>>;
+
+    /// Greedy action (evaluation, no exploration).
+    fn act_greedy(&mut self, obs: &[f32]) -> Result<Action>;
+
+    /// Number of optimizer steps taken so far.
+    fn train_steps(&self) -> u64;
+}

@@ -1,0 +1,229 @@
+//! DDPG agent: deterministic actor + Q critic with target networks and
+//! soft updates (inside the artifact), OU exploration noise at L3.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::envs::Action;
+use crate::quant::LossScaler;
+use crate::runtime::executor::{literal_f32, scalar_f32, scalar_of, to_vec_f32};
+use crate::runtime::{Executor, Runtime};
+use crate::util::Rng;
+
+use super::agent::{Agent, StepStats};
+use super::network::ParamSet;
+use super::replay::{ReplayBuffer, StoredAction};
+
+#[derive(Clone, Debug)]
+pub struct DdpgConfig {
+    pub batch: usize,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    pub replay_capacity: usize,
+    pub warmup: usize,
+    pub train_every: usize,
+    /// OU noise parameters.
+    pub ou_theta: f64,
+    pub ou_sigma: f64,
+}
+
+impl DdpgConfig {
+    pub fn for_combo(batch: usize, obs_dim: usize, act_dim: usize) -> Self {
+        DdpgConfig {
+            batch,
+            obs_dim,
+            act_dim,
+            replay_capacity: 50_000,
+            warmup: 1_000,
+            train_every: 1,
+            ou_theta: 0.15,
+            ou_sigma: 0.2,
+        }
+    }
+}
+
+pub struct DdpgAgent {
+    cfg: DdpgConfig,
+    act_exe: Arc<Executor>,
+    train_exe: Arc<Executor>,
+    actor: ParamSet,
+    critic: ParamSet,
+    t_actor: Vec<xla::Literal>,
+    t_critic: Vec<xla::Literal>,
+    opt_a: Vec<xla::Literal>,
+    opt_c: Vec<xla::Literal>,
+    replay: ReplayBuffer,
+    scaler: LossScaler,
+    ou_state: Vec<f64>,
+    env_steps: u64,
+    train_steps: u64,
+}
+
+impl DdpgAgent {
+    pub fn new(
+        runtime: &mut Runtime,
+        combo: &str,
+        mode: &str,
+        cfg: DdpgConfig,
+        seed: u64,
+    ) -> Result<Self> {
+        let act_exe = runtime.load(&format!("{combo}_{mode}_act"))?;
+        let train_exe = runtime.load(&format!("{combo}_{mode}_train"))?;
+        let spec = train_exe.spec();
+        let actor_shapes = meta_shapes(spec, "actor_shapes")?;
+        let critic_shapes = meta_shapes(spec, "critic_shapes")?;
+        let mut rng = Rng::new(seed ^ 0xDD96);
+        let actor = ParamSet::init(&actor_shapes, &mut rng)?;
+        let critic = ParamSet::init(&critic_shapes, &mut rng)?;
+        let t_actor = actor.clone_literals();
+        let t_critic = critic.clone_literals();
+        let opt_a = ParamSet::opt_state(&actor_shapes)?;
+        let opt_c = ParamSet::opt_state(&critic_shapes)?;
+        let scaled =
+            spec.meta.get("scaled").and_then(|b| b.as_bool()).unwrap_or(false);
+        let scaler = if scaled { LossScaler::default() } else { LossScaler::disabled() };
+        let replay = ReplayBuffer::new(cfg.replay_capacity, cfg.obs_dim);
+        let ou_state = vec![0.0; cfg.act_dim];
+        Ok(DdpgAgent {
+            cfg,
+            act_exe,
+            train_exe,
+            actor,
+            critic,
+            t_actor,
+            t_critic,
+            opt_a,
+            opt_c,
+            replay,
+            scaler,
+            ou_state,
+            env_steps: 0,
+            train_steps: 0,
+        })
+    }
+
+    fn policy(&self, obs: &[f32]) -> Result<Vec<f32>> {
+        let obs_lit = literal_f32(obs, &[1, self.cfg.obs_dim])?;
+        let mut inputs: Vec<&xla::Literal> = self.actor.tensors.iter().collect();
+        inputs.push(&obs_lit);
+        let outs = self.act_exe.run(&inputs)?;
+        to_vec_f32(&outs[0])
+    }
+
+    fn ou_noise(&mut self, rng: &mut Rng) -> Vec<f64> {
+        for x in self.ou_state.iter_mut() {
+            *x += -self.cfg.ou_theta * *x + self.cfg.ou_sigma * rng.normal();
+        }
+        self.ou_state.clone()
+    }
+
+    fn train_batch(&mut self, rng: &mut Rng) -> Result<StepStats> {
+        let bs = self.cfg.batch;
+        let batch = self.replay.sample(bs, rng);
+        let scratch = [
+            literal_f32(&batch.obs, &[bs, self.cfg.obs_dim])?,
+            literal_f32(&batch.actions_f32, &[bs, self.cfg.act_dim])?,
+            literal_f32(&batch.rewards, &[bs])?,
+            literal_f32(&batch.next_obs, &[bs, self.cfg.obs_dim])?,
+            literal_f32(&batch.dones, &[bs])?,
+            scalar_f32(self.scaler.scale())?,
+        ];
+        let mut inputs: Vec<&xla::Literal> = self.actor.tensors.iter().collect();
+        inputs.extend(self.critic.tensors.iter());
+        inputs.extend(self.t_actor.iter());
+        inputs.extend(self.t_critic.iter());
+        inputs.extend(self.opt_a.iter());
+        inputs.extend(self.opt_c.iter());
+        inputs.extend(scratch.iter());
+        let mut outs = self.train_exe.run(&inputs)?;
+        // outputs: actor, critic, t_actor, t_critic, opt_a, opt_c,
+        //          closs, aloss, found_inf
+        let ka = self.actor.len();
+        let kc = self.critic.len();
+        let found_inf = scalar_of(&outs.pop().unwrap())? > 0.5;
+        let _aloss = scalar_of(&outs.pop().unwrap())?;
+        let closs = scalar_of(&outs.pop().unwrap())?;
+        let opt_c = outs.split_off(outs.len() - (2 * kc + 1));
+        let opt_a = outs.split_off(outs.len() - (2 * ka + 1));
+        let t_critic = outs.split_off(outs.len() - kc);
+        let t_actor = outs.split_off(outs.len() - ka);
+        let critic = outs.split_off(ka);
+        self.actor.replace(outs);
+        self.critic.replace(critic);
+        self.t_actor = t_actor;
+        self.t_critic = t_critic;
+        self.opt_a = opt_a;
+        self.opt_c = opt_c;
+        if self.scaler.update(found_inf) {
+            self.train_steps += 1;
+        }
+        Ok(StepStats { loss: closs, found_inf, loss_scale: self.scaler.scale() })
+    }
+}
+
+fn meta_shapes(
+    spec: &crate::runtime::ArtifactSpec,
+    key: &str,
+) -> Result<Vec<Vec<usize>>> {
+    let arr = spec
+        .meta
+        .get(key)
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("artifact {}: missing {key}", spec.name))?;
+    Ok(arr
+        .iter()
+        .map(|sh| {
+            sh.as_arr()
+                .map(|d| d.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default()
+        })
+        .collect())
+}
+
+impl Agent for DdpgAgent {
+    fn act(&mut self, obs: &[f32], rng: &mut Rng) -> Result<Action> {
+        self.env_steps += 1;
+        let mut a = self.policy(obs)?;
+        let noise = self.ou_noise(rng);
+        for (ai, ni) in a.iter_mut().zip(noise) {
+            *ai = (*ai + ni as f32).clamp(-1.0, 1.0);
+        }
+        Ok(Action::Continuous(a))
+    }
+
+    fn act_greedy(&mut self, obs: &[f32]) -> Result<Action> {
+        Ok(Action::Continuous(self.policy(obs)?))
+    }
+
+    fn observe(
+        &mut self,
+        obs: &[f32],
+        action: &Action,
+        reward: f32,
+        next_obs: &[f32],
+        done: bool,
+        rng: &mut Rng,
+    ) -> Result<Option<StepStats>> {
+        self.replay.push(
+            obs,
+            StoredAction::Continuous(action.continuous().to_vec()),
+            reward,
+            next_obs,
+            done,
+        );
+        if done {
+            self.ou_state.iter_mut().for_each(|x| *x = 0.0);
+        }
+        if self.replay.len() >= self.cfg.warmup
+            && self.env_steps % self.cfg.train_every as u64 == 0
+        {
+            return self.train_batch(rng).map(Some);
+        }
+        Ok(None)
+    }
+
+    fn train_steps(&self) -> u64 {
+        self.train_steps
+    }
+}

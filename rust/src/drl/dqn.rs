@@ -1,0 +1,202 @@
+//! DQN agent (paper Eq. 1): ε-greedy exploration, uniform replay,
+//! periodic target-network sync, train step via the `<combo>_<mode>_train`
+//! artifact.  Works for both MLP (CartPole) and conv (mini-Breakout)
+//! combos — the artifact signature is identical.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::envs::Action;
+use crate::quant::LossScaler;
+use crate::runtime::executor::{literal_f32, literal_i32, scalar_f32, scalar_of, to_vec_f32};
+use crate::runtime::{Executor, Runtime};
+use crate::util::Rng;
+
+use super::agent::{Agent, StepStats};
+use super::network::ParamSet;
+use super::replay::{ReplayBuffer, StoredAction};
+
+/// DQN hyper-parameters (coordinator-side; lr/γ are baked into the
+/// artifact).
+#[derive(Clone, Debug)]
+pub struct DqnConfig {
+    pub batch: usize,
+    pub obs_shape: Vec<usize>,
+    pub n_actions: usize,
+    pub replay_capacity: usize,
+    pub warmup: usize,
+    pub train_every: usize,
+    pub target_sync_every: u64,
+    pub eps_start: f64,
+    pub eps_end: f64,
+    pub eps_decay_steps: f64,
+}
+
+impl DqnConfig {
+    pub fn for_combo(batch: usize, obs_shape: Vec<usize>, n_actions: usize) -> Self {
+        DqnConfig {
+            batch,
+            obs_shape,
+            n_actions,
+            replay_capacity: 20_000,
+            warmup: 500,
+            train_every: 1,
+            target_sync_every: 200,
+            eps_start: 1.0,
+            eps_end: 0.05,
+            eps_decay_steps: 4_000.0,
+        }
+    }
+
+    fn obs_dim(&self) -> usize {
+        self.obs_shape.iter().product()
+    }
+}
+
+pub struct DqnAgent {
+    cfg: DqnConfig,
+    act_exe: Arc<Executor>,
+    train_exe: Arc<Executor>,
+    params: ParamSet,
+    target: Vec<xla::Literal>,
+    opt: Vec<xla::Literal>,
+    replay: ReplayBuffer,
+    scaler: LossScaler,
+    env_steps: u64,
+    train_steps: u64,
+}
+
+impl DqnAgent {
+    /// Build from artifacts `<combo>_<mode>_{act,train}`.
+    pub fn new(runtime: &mut Runtime, combo: &str, mode: &str, cfg: DqnConfig, seed: u64) -> Result<Self> {
+        let act_exe = runtime.load(&format!("{combo}_{mode}_act"))?;
+        let train_exe = runtime.load(&format!("{combo}_{mode}_train"))?;
+        let shapes = train_exe.spec().param_shapes();
+        if shapes.is_empty() {
+            return Err(anyhow!("artifact {combo}_{mode}_train has no param_shapes meta"));
+        }
+        let mut rng = Rng::new(seed ^ 0xD09);
+        let params = ParamSet::init(&shapes, &mut rng)?;
+        let target = params.clone_literals();
+        let opt = ParamSet::opt_state(&shapes)?;
+        let scaled = train_exe
+            .spec()
+            .meta
+            .get("scaled")
+            .and_then(|b| b.as_bool())
+            .unwrap_or(false);
+        let scaler = if scaled { LossScaler::default() } else { LossScaler::disabled() };
+        let replay = ReplayBuffer::new(cfg.replay_capacity, cfg.obs_dim());
+        Ok(DqnAgent {
+            cfg,
+            act_exe,
+            train_exe,
+            params,
+            target,
+            opt,
+            replay,
+            scaler,
+            env_steps: 0,
+            train_steps: 0,
+        })
+    }
+
+    fn epsilon(&self) -> f64 {
+        let frac = (self.env_steps as f64 / self.cfg.eps_decay_steps).min(1.0);
+        self.cfg.eps_start + (self.cfg.eps_end - self.cfg.eps_start) * frac
+    }
+
+    fn qvalues(&self, obs: &[f32]) -> Result<Vec<f32>> {
+        let mut shape = vec![1usize];
+        shape.extend(&self.cfg.obs_shape);
+        let obs_lit = literal_f32(obs, &shape)?;
+        let mut inputs: Vec<&xla::Literal> = self.params.tensors.iter().collect();
+        inputs.push(&obs_lit);
+        let outs = self.act_exe.run(&inputs)?;
+        to_vec_f32(&outs[0])
+    }
+
+    fn train_batch(&mut self, rng: &mut Rng) -> Result<StepStats> {
+        let bs = self.cfg.batch;
+        let batch = self.replay.sample(bs, rng);
+        let mut obs_shape = vec![bs];
+        obs_shape.extend(&self.cfg.obs_shape);
+        let scratch = [
+            literal_f32(&batch.obs, &obs_shape)?,
+            literal_i32(&batch.actions_i32, &[bs])?,
+            literal_f32(&batch.rewards, &[bs])?,
+            literal_f32(&batch.next_obs, &obs_shape)?,
+            literal_f32(&batch.dones, &[bs])?,
+            scalar_f32(self.scaler.scale())?,
+        ];
+        let mut inputs: Vec<&xla::Literal> = self.params.tensors.iter().collect();
+        inputs.extend(self.target.iter());
+        inputs.extend(self.opt.iter());
+        inputs.extend(scratch.iter());
+        let mut outs = self.train_exe.run(&inputs)?;
+        // outputs: params(k), opt(2k+1), loss, found_inf
+        let k = self.params.len();
+        let found_inf = scalar_of(&outs.pop().unwrap())? > 0.5;
+        let loss = scalar_of(&outs.pop().unwrap())?;
+        let opt = outs.split_off(k);
+        self.params.replace(outs);
+        self.opt = opt;
+        let applied = self.scaler.update(found_inf);
+        if applied {
+            self.train_steps += 1;
+            if self.train_steps % self.cfg.target_sync_every == 0 {
+                self.target = self.params.clone_literals();
+            }
+        }
+        Ok(StepStats { loss, found_inf, loss_scale: self.scaler.scale() })
+    }
+}
+
+impl Agent for DqnAgent {
+    fn act(&mut self, obs: &[f32], rng: &mut Rng) -> Result<Action> {
+        self.env_steps += 1;
+        if rng.uniform() < self.epsilon() {
+            return Ok(Action::Discrete(rng.below(self.cfg.n_actions)));
+        }
+        self.act_greedy(obs)
+    }
+
+    fn act_greedy(&mut self, obs: &[f32]) -> Result<Action> {
+        let q = self.qvalues(obs)?;
+        let best = q
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        Ok(Action::Discrete(best))
+    }
+
+    fn observe(
+        &mut self,
+        obs: &[f32],
+        action: &Action,
+        reward: f32,
+        next_obs: &[f32],
+        done: bool,
+        rng: &mut Rng,
+    ) -> Result<Option<StepStats>> {
+        self.replay.push(
+            obs,
+            StoredAction::Discrete(action.discrete() as i32),
+            reward,
+            next_obs,
+            done,
+        );
+        if self.replay.len() >= self.cfg.warmup && self.env_steps % self.cfg.train_every as u64 == 0
+        {
+            return self.train_batch(rng).map(Some);
+        }
+        Ok(None)
+    }
+
+    fn train_steps(&self) -> u64 {
+        self.train_steps
+    }
+}

@@ -1,0 +1,18 @@
+//! DRL agents (paper §II-A / Fig 1): the Inference → Environment Step →
+//! Train loop, with all network compute executed through the PJRT
+//! artifacts (L2/L1) and all coordination (exploration, replay, GAE,
+//! target-network schedule, loss-scaling FSM) here at L3.
+
+pub mod a2c;
+pub mod agent;
+pub mod ddpg;
+pub mod dqn;
+pub mod network;
+pub mod ppo;
+pub mod replay;
+pub mod rollout;
+
+pub use agent::{Agent, StepStats};
+pub use network::ParamSet;
+pub use replay::ReplayBuffer;
+pub use rollout::RolloutBuffer;

@@ -1,0 +1,128 @@
+//! Parameter/optimizer-state marshaling between L3 and the artifacts.
+//!
+//! The convention (python/compile/trainstep.py): parameters are flat
+//! positional lists of f32 tensors; optimizer state is
+//! `[m..., v..., t]`.  L3 owns initialization (He-uniform weights, zero
+//! biases — `nets.init_scale` documents the same rule on the python
+//! side) and keeps everything as `xla::Literal`s between steps so the
+//! hot path never round-trips through host Vec<f32>.
+
+use anyhow::Result;
+
+use crate::runtime::executor::{literal_f32, to_vec_f32};
+use crate::util::Rng;
+
+/// A flat, ordered set of parameter tensors resident as literals.
+pub struct ParamSet {
+    pub shapes: Vec<Vec<usize>>,
+    pub tensors: Vec<xla::Literal>,
+}
+
+impl ParamSet {
+    /// He-uniform init for ≥2-D tensors (fan-in = product of all dims but
+    /// the last), zeros for 1-D (biases, log_std).
+    pub fn init(shapes: &[Vec<usize>], rng: &mut Rng) -> Result<ParamSet> {
+        let mut tensors = Vec::with_capacity(shapes.len());
+        for sh in shapes {
+            let elems: usize = sh.iter().product();
+            let data = if sh.len() >= 2 {
+                let fan_in: usize = sh[..sh.len() - 1].iter().product();
+                rng.he_uniform(elems, fan_in)
+            } else {
+                vec![0.0f32; elems]
+            };
+            tensors.push(literal_f32(&data, sh)?);
+        }
+        Ok(ParamSet { shapes: shapes.to_vec(), tensors })
+    }
+
+    /// Zero tensors of the same shapes (Adam m/v init).
+    pub fn zeros_like(shapes: &[Vec<usize>]) -> Result<Vec<xla::Literal>> {
+        shapes
+            .iter()
+            .map(|sh| {
+                let elems: usize = sh.iter().product();
+                literal_f32(&vec![0.0; elems], sh)
+            })
+            .collect()
+    }
+
+    /// Fresh optimizer state `[m..., v..., t]` for these shapes.
+    pub fn opt_state(shapes: &[Vec<usize>]) -> Result<Vec<xla::Literal>> {
+        let mut st = Self::zeros_like(shapes)?;
+        st.extend(Self::zeros_like(shapes)?);
+        st.push(literal_f32(&[0.0], &[])?);
+        Ok(st)
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Deep copy (target-network snapshot).
+    pub fn clone_literals(&self) -> Vec<xla::Literal> {
+        self.tensors.to_vec()
+    }
+
+    /// Replace the resident tensors (after a train step returns the
+    /// updated params).
+    pub fn replace(&mut self, tensors: Vec<xla::Literal>) {
+        debug_assert_eq!(tensors.len(), self.tensors.len());
+        self.tensors = tensors;
+    }
+
+    /// Host readout (telemetry / checkpoints).
+    pub fn to_host(&self) -> Result<Vec<Vec<f32>>> {
+        self.tensors.iter().map(to_vec_f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_shapes_and_ranges() {
+        let shapes = vec![vec![4, 64], vec![64], vec![64, 2], vec![2]];
+        let mut rng = Rng::new(7);
+        let ps = ParamSet::init(&shapes, &mut rng).unwrap();
+        assert_eq!(ps.len(), 4);
+        let host = ps.to_host().unwrap();
+        let lim0 = (6.0f32 / 4.0).sqrt();
+        assert!(host[0].iter().all(|x| x.abs() <= lim0));
+        assert!(host[0].iter().any(|&x| x != 0.0));
+        assert!(host[1].iter().all(|&x| x == 0.0)); // bias zeros
+        assert_eq!(host[0].len(), 256);
+    }
+
+    #[test]
+    fn conv_fan_in() {
+        // HWIO kernel (4,4,4,8): fan_in = 64 like python init_scale
+        let shapes = vec![vec![4, 4, 4, 8]];
+        let mut rng = Rng::new(8);
+        let ps = ParamSet::init(&shapes, &mut rng).unwrap();
+        let host = ps.to_host().unwrap();
+        let lim = (6.0f32 / 64.0).sqrt();
+        assert!(host[0].iter().all(|x| x.abs() <= lim));
+    }
+
+    #[test]
+    fn opt_state_layout() {
+        let shapes = vec![vec![2, 2], vec![2]];
+        let st = ParamSet::opt_state(&shapes).unwrap();
+        assert_eq!(st.len(), 5); // m0 m1 v0 v1 t
+        assert_eq!(st[4].element_count(), 1);
+    }
+
+    #[test]
+    fn deterministic_init() {
+        let shapes = vec![vec![3, 3]];
+        let a = ParamSet::init(&shapes, &mut Rng::new(1)).unwrap().to_host().unwrap();
+        let b = ParamSet::init(&shapes, &mut Rng::new(1)).unwrap().to_host().unwrap();
+        assert_eq!(a, b);
+    }
+}

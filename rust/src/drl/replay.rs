@@ -1,0 +1,157 @@
+//! Uniform experience replay (paper Fig 1's Experience Buffer).
+//!
+//! Stores flattened transitions in contiguous ring storage and samples
+//! directly into the flat batch arrays the train artifacts take — no
+//! per-sample allocation on the hot path.
+
+use crate::util::Rng;
+
+/// Action payload stored per transition.
+#[derive(Clone, Debug)]
+pub enum StoredAction {
+    Discrete(i32),
+    Continuous(Vec<f32>),
+}
+
+/// Ring-buffer replay memory.
+pub struct ReplayBuffer {
+    capacity: usize,
+    obs_dim: usize,
+    obs: Vec<f32>,      // capacity × obs_dim
+    next_obs: Vec<f32>, // capacity × obs_dim
+    actions: Vec<StoredAction>,
+    rewards: Vec<f32>,
+    dones: Vec<f32>,
+    len: usize,
+    head: usize,
+}
+
+/// One sampled batch, flat, artifact-ready.
+pub struct Batch {
+    pub obs: Vec<f32>,
+    pub next_obs: Vec<f32>,
+    pub actions_i32: Vec<i32>,
+    pub actions_f32: Vec<f32>,
+    pub rewards: Vec<f32>,
+    pub dones: Vec<f32>,
+    pub size: usize,
+}
+
+impl ReplayBuffer {
+    pub fn new(capacity: usize, obs_dim: usize) -> Self {
+        assert!(capacity > 0);
+        ReplayBuffer {
+            capacity,
+            obs_dim,
+            obs: vec![0.0; capacity * obs_dim],
+            next_obs: vec![0.0; capacity * obs_dim],
+            actions: Vec::with_capacity(capacity),
+            rewards: vec![0.0; capacity],
+            dones: vec![0.0; capacity],
+            len: 0,
+            head: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn push(
+        &mut self,
+        obs: &[f32],
+        action: StoredAction,
+        reward: f32,
+        next_obs: &[f32],
+        done: bool,
+    ) {
+        assert_eq!(obs.len(), self.obs_dim);
+        assert_eq!(next_obs.len(), self.obs_dim);
+        let i = self.head;
+        self.obs[i * self.obs_dim..(i + 1) * self.obs_dim].copy_from_slice(obs);
+        self.next_obs[i * self.obs_dim..(i + 1) * self.obs_dim].copy_from_slice(next_obs);
+        if self.actions.len() <= i {
+            self.actions.push(action);
+        } else {
+            self.actions[i] = action;
+        }
+        self.rewards[i] = reward;
+        self.dones[i] = if done { 1.0 } else { 0.0 };
+        self.head = (self.head + 1) % self.capacity;
+        self.len = (self.len + 1).min(self.capacity);
+    }
+
+    /// Uniform sample of `bs` transitions (with replacement, as usual for
+    /// DQN-style replay).
+    pub fn sample(&self, bs: usize, rng: &mut Rng) -> Batch {
+        assert!(self.len > 0, "sampling from empty replay buffer");
+        let mut b = Batch {
+            obs: Vec::with_capacity(bs * self.obs_dim),
+            next_obs: Vec::with_capacity(bs * self.obs_dim),
+            actions_i32: Vec::with_capacity(bs),
+            actions_f32: Vec::new(),
+            rewards: Vec::with_capacity(bs),
+            dones: Vec::with_capacity(bs),
+            size: bs,
+        };
+        for _ in 0..bs {
+            let i = rng.below(self.len);
+            b.obs.extend_from_slice(&self.obs[i * self.obs_dim..(i + 1) * self.obs_dim]);
+            b.next_obs
+                .extend_from_slice(&self.next_obs[i * self.obs_dim..(i + 1) * self.obs_dim]);
+            match &self.actions[i] {
+                StoredAction::Discrete(a) => b.actions_i32.push(*a),
+                StoredAction::Continuous(a) => b.actions_f32.extend_from_slice(a),
+            }
+            b.rewards.push(self.rewards[i]);
+            b.dones.push(self.dones[i]);
+        }
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_wraps() {
+        let mut rb = ReplayBuffer::new(4, 2);
+        for k in 0..10 {
+            rb.push(
+                &[k as f32, 0.0],
+                StoredAction::Discrete(k),
+                k as f32,
+                &[k as f32 + 1.0, 0.0],
+                false,
+            );
+        }
+        assert_eq!(rb.len(), 4);
+        // the ring now holds transitions 6..=9
+        let mut rng = Rng::new(1);
+        let b = rb.sample(64, &mut rng);
+        assert!(b.rewards.iter().all(|&r| (6.0..=9.0).contains(&r)));
+    }
+
+    #[test]
+    fn batch_layout() {
+        let mut rb = ReplayBuffer::new(8, 3);
+        rb.push(&[1.0, 2.0, 3.0], StoredAction::Continuous(vec![0.5, -0.5]), 1.0, &[4.0, 5.0, 6.0], true);
+        let mut rng = Rng::new(2);
+        let b = rb.sample(2, &mut rng);
+        assert_eq!(b.obs.len(), 6);
+        assert_eq!(b.actions_f32.len(), 4);
+        assert_eq!(b.dones, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty replay")]
+    fn sample_empty_panics() {
+        let rb = ReplayBuffer::new(4, 1);
+        rb.sample(1, &mut Rng::new(0));
+    }
+}

@@ -1,0 +1,168 @@
+//! On-policy rollout buffer with GAE(λ) (A2C / PPO).
+//!
+//! Advantage estimation is coordinator work in AP-DRL's mapping (the
+//! paper cites HEPPO's hardware GAE as related work; here it is cheap
+//! L3 arithmetic between artifact invocations).
+
+/// One on-policy step record.
+#[derive(Clone, Debug)]
+pub struct RolloutStep {
+    pub obs: Vec<f32>,
+    /// Discrete index or continuous vector (one of the two used).
+    pub action_i: i32,
+    pub action_c: Vec<f32>,
+    pub logp: f32,
+    pub value: f32,
+    pub reward: f32,
+    pub done: bool,
+}
+
+/// Fixed-horizon rollout storage + GAE computation.
+pub struct RolloutBuffer {
+    pub steps: Vec<RolloutStep>,
+    horizon: usize,
+    gamma: f64,
+    lambda: f64,
+}
+
+/// Flat on-policy batch (artifact-ready).
+pub struct RolloutBatch {
+    pub obs: Vec<f32>,
+    pub actions_i32: Vec<i32>,
+    pub actions_f32: Vec<f32>,
+    pub logp_old: Vec<f32>,
+    pub returns: Vec<f32>,
+    pub advantages: Vec<f32>,
+    pub size: usize,
+}
+
+impl RolloutBuffer {
+    pub fn new(horizon: usize, gamma: f64, lambda: f64) -> Self {
+        RolloutBuffer { steps: Vec::with_capacity(horizon), horizon, gamma, lambda }
+    }
+
+    pub fn push(&mut self, step: RolloutStep) {
+        self.steps.push(step);
+    }
+
+    pub fn full(&self) -> bool {
+        self.steps.len() >= self.horizon
+    }
+
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    /// Compute GAE advantages + returns and drain the buffer.
+    /// `last_value` bootstraps the value of the state after the final
+    /// step (0 if that step terminated).
+    pub fn finish(&mut self, last_value: f32, normalize_adv: bool) -> RolloutBatch {
+        let n = self.steps.len();
+        let mut adv = vec![0.0f32; n];
+        let mut gae = 0.0f64;
+        let mut next_value = last_value as f64;
+        for t in (0..n).rev() {
+            let s = &self.steps[t];
+            let nonterminal = if s.done { 0.0 } else { 1.0 };
+            let delta = s.reward as f64 + self.gamma * next_value * nonterminal - s.value as f64;
+            gae = delta + self.gamma * self.lambda * nonterminal * gae;
+            adv[t] = gae as f32;
+            next_value = s.value as f64;
+        }
+        let returns: Vec<f32> =
+            adv.iter().zip(&self.steps).map(|(a, s)| a + s.value).collect();
+        let mut advantages = adv;
+        if normalize_adv && n > 1 {
+            let xs: Vec<f64> = advantages.iter().map(|&x| x as f64).collect();
+            let m = crate::util::stats::mean(&xs);
+            let s = crate::util::stats::std_dev(&xs).max(1e-8);
+            for a in advantages.iter_mut() {
+                *a = ((*a as f64 - m) / s) as f32;
+            }
+        }
+        let mut batch = RolloutBatch {
+            obs: Vec::with_capacity(n * self.steps[0].obs.len()),
+            actions_i32: Vec::with_capacity(n),
+            actions_f32: Vec::new(),
+            logp_old: Vec::with_capacity(n),
+            returns,
+            advantages,
+            size: n,
+        };
+        for s in &self.steps {
+            batch.obs.extend_from_slice(&s.obs);
+            batch.actions_i32.push(s.action_i);
+            batch.actions_f32.extend_from_slice(&s.action_c);
+            batch.logp_old.push(s.logp);
+        }
+        self.steps.clear();
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step(reward: f32, value: f32, done: bool) -> RolloutStep {
+        RolloutStep {
+            obs: vec![0.0],
+            action_i: 0,
+            action_c: vec![],
+            logp: 0.0,
+            value,
+            reward,
+            done,
+        }
+    }
+
+    #[test]
+    fn gae_matches_hand_computation() {
+        // γ=0.5, λ=0.5, two steps, bootstrap 1.0
+        let mut rb = RolloutBuffer::new(2, 0.5, 0.5);
+        rb.push(step(1.0, 0.5, false));
+        rb.push(step(2.0, 0.25, false));
+        let b = rb.finish(1.0, false);
+        // δ1 = 2 + 0.5·1 − 0.25 = 2.25 ; A1 = 2.25
+        // δ0 = 1 + 0.5·0.25 − 0.5 = 0.625 ; A0 = 0.625 + 0.25·2.25 = 1.1875
+        assert!((b.advantages[1] - 2.25).abs() < 1e-6);
+        assert!((b.advantages[0] - 1.1875).abs() < 1e-6);
+        assert!((b.returns[0] - (1.1875 + 0.5)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn terminal_cuts_bootstrap() {
+        let mut rb = RolloutBuffer::new(2, 0.99, 0.95);
+        rb.push(step(1.0, 0.7, true));
+        rb.push(step(1.0, 0.3, false));
+        let b = rb.finish(5.0, false);
+        // step0 terminal: A0 = r - v = 0.3, no leakage from step1/bootstrap
+        assert!((b.advantages[0] - 0.3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn normalization_zero_mean_unit_std() {
+        let mut rb = RolloutBuffer::new(8, 0.99, 0.95);
+        for k in 0..8 {
+            rb.push(step(k as f32, 0.0, false));
+        }
+        let b = rb.finish(0.0, true);
+        let xs: Vec<f64> = b.advantages.iter().map(|&x| x as f64).collect();
+        assert!(crate::util::stats::mean(&xs).abs() < 1e-5);
+        assert!((crate::util::stats::std_dev(&xs) - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn drains_after_finish() {
+        let mut rb = RolloutBuffer::new(2, 0.9, 0.9);
+        rb.push(step(0.0, 0.0, false));
+        rb.push(step(0.0, 0.0, false));
+        assert!(rb.full());
+        rb.finish(0.0, false);
+        assert!(rb.is_empty());
+    }
+}

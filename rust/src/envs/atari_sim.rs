@@ -1,0 +1,416 @@
+//! Synthetic pixel environments standing in for ALE Breakout / MsPacman
+//! (DESIGN.md §Substitutions).
+//!
+//! Both render a stacked 4-frame observation like the Nature-DQN
+//! preprocessing: `size`×`size`×4, values in [0,1].  `size = 12` is the
+//! convergence-run variant (matching the `*_mini` artifacts); `size = 84`
+//! reproduces the full Table III observation shape for timing figures.
+//!
+//! * **MiniBreakout** — paddle, ball with reflective physics, brick rows;
+//!   reward +1 per brick, episode ends on ball loss or board clear.
+//! * **MiniMsPacman** — pellet field + one chasing ghost on a torus grid;
+//!   reward +1 per pellet, -100 on capture, 9 actions (8 directions +
+//!   stay) like MsPacman's |A| = 9.
+
+use crate::util::Rng;
+
+use super::{Action, Env, Transition};
+
+const FRAMES: usize = 4;
+
+fn push_frame(stack: &mut Vec<Vec<f32>>, frame: Vec<f32>) {
+    stack.remove(0);
+    stack.push(frame);
+}
+
+fn stacked_obs(stack: &[Vec<f32>]) -> Vec<f32> {
+    // channel-last (H, W, C) to match the NHWC artifacts
+    let hw = stack[0].len();
+    let mut out = vec![0.0f32; hw * FRAMES];
+    for (c, frame) in stack.iter().enumerate() {
+        for (i, &v) in frame.iter().enumerate() {
+            out[i * FRAMES + c] = v;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Mini-Breakout
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct MiniBreakout {
+    size: usize,
+    paddle: i32,
+    ball: (f64, f64),
+    vel: (f64, f64),
+    bricks: Vec<bool>, // brick_rows × size
+    brick_rows: usize,
+    stack: Vec<Vec<f32>>,
+    steps: usize,
+}
+
+impl MiniBreakout {
+    pub fn new(size: usize) -> Self {
+        let brick_rows = (size / 4).max(1);
+        MiniBreakout {
+            size,
+            paddle: 0,
+            ball: (0.0, 0.0),
+            vel: (0.0, 0.0),
+            bricks: vec![true; brick_rows * size],
+            brick_rows,
+            stack: vec![vec![0.0; size * size]; FRAMES],
+            steps: 0,
+        }
+    }
+
+    pub fn mini() -> Self {
+        Self::new(12)
+    }
+
+    /// Full Table III observation shape (84×84×4) for timing figures.
+    pub fn full() -> Self {
+        Self::new(84)
+    }
+
+    fn render(&self) -> Vec<f32> {
+        let n = self.size;
+        let mut f = vec![0.0f32; n * n];
+        for r in 0..self.brick_rows {
+            for c in 0..n {
+                if self.bricks[r * n + c] {
+                    f[r * n + c] = 0.5;
+                }
+            }
+        }
+        let bx = (self.ball.0.round() as i32).clamp(0, n as i32 - 1) as usize;
+        let by = (self.ball.1.round() as i32).clamp(0, n as i32 - 1) as usize;
+        f[by * n + bx] = 1.0;
+        let py = n - 1;
+        for dx in -1..=1i32 {
+            let px = (self.paddle + dx).clamp(0, n as i32 - 1) as usize;
+            f[py * n + px] = 0.8;
+        }
+        f
+    }
+}
+
+impl Env for MiniBreakout {
+    fn obs_dim(&self) -> usize {
+        self.size * self.size * FRAMES
+    }
+
+    fn action_dim(&self) -> usize {
+        4 // noop, left, right, (fire≡noop) — Breakout's |A| = 4
+    }
+
+    fn is_discrete(&self) -> bool {
+        true
+    }
+
+    fn max_steps(&self) -> usize {
+        500
+    }
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        let n = self.size;
+        self.paddle = (n / 2) as i32;
+        self.ball = (rng.uniform_in(1.0, n as f64 - 2.0), (self.brick_rows + 1) as f64);
+        self.vel = (if rng.uniform() < 0.5 { 0.45 } else { -0.45 }, 0.45);
+        self.bricks = vec![true; self.brick_rows * n];
+        self.stack = vec![vec![0.0; n * n]; FRAMES];
+        self.steps = 0;
+        let frame = self.render();
+        for _ in 0..FRAMES {
+            push_frame(&mut self.stack, frame.clone());
+        }
+        stacked_obs(&self.stack)
+    }
+
+    fn step(&mut self, action: &Action, _rng: &mut Rng) -> Transition {
+        let n = self.size as f64;
+        match action.discrete() {
+            1 => self.paddle = (self.paddle - 1).max(1),
+            2 => self.paddle = (self.paddle + 1).min(self.size as i32 - 2),
+            _ => {}
+        }
+        let (mut x, mut y) = self.ball;
+        let (mut vx, mut vy) = self.vel;
+        x += vx;
+        y += vy;
+        // walls
+        if x <= 0.0 || x >= n - 1.0 {
+            vx = -vx;
+            x = x.clamp(0.0, n - 1.0);
+        }
+        if y <= 0.0 {
+            vy = -vy;
+            y = 0.0;
+        }
+        let mut reward = 0.0;
+        // bricks
+        let bx = x.round() as usize % self.size;
+        let by = y.round() as i32;
+        if by >= 0 && (by as usize) < self.brick_rows {
+            let idx = by as usize * self.size + bx;
+            if self.bricks[idx] {
+                self.bricks[idx] = false;
+                reward += 1.0;
+                vy = -vy;
+            }
+        }
+        // paddle
+        let mut lost = false;
+        if y >= n - 2.0 && vy > 0.0 {
+            if (x - self.paddle as f64).abs() <= 1.5 {
+                vy = -vy;
+                // english: hit offset steers the ball
+                vx += 0.15 * (x - self.paddle as f64);
+                vx = vx.clamp(-0.8, 0.8);
+                y = n - 2.0;
+            } else if y >= n - 1.0 {
+                lost = true;
+            }
+        }
+        self.ball = (x, y);
+        self.vel = (vx, vy);
+        self.steps += 1;
+        let cleared = self.bricks.iter().all(|&b| !b);
+        if cleared {
+            reward += 10.0;
+        }
+        let frame = self.render();
+        push_frame(&mut self.stack, frame);
+        let done = lost || cleared || self.steps >= self.max_steps();
+        Transition { obs: stacked_obs(&self.stack), reward, done }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mini-MsPacman
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct MiniMsPacman {
+    size: usize,
+    player: (i32, i32),
+    ghost: (i32, i32),
+    pellets: Vec<bool>,
+    stack: Vec<Vec<f32>>,
+    steps: usize,
+}
+
+/// 8 directions + stay = 9 actions (MsPacman's |A|).
+const DIRS: [(i32, i32); 9] =
+    [(0, 0), (0, -1), (0, 1), (-1, 0), (1, 0), (-1, -1), (1, -1), (-1, 1), (1, 1)];
+
+impl MiniMsPacman {
+    pub fn new(size: usize) -> Self {
+        MiniMsPacman {
+            size,
+            player: (0, 0),
+            ghost: (0, 0),
+            pellets: vec![true; size * size],
+            stack: vec![vec![0.0; size * size]; FRAMES],
+            steps: 0,
+        }
+    }
+
+    pub fn mini() -> Self {
+        Self::new(12)
+    }
+
+    pub fn full() -> Self {
+        Self::new(84)
+    }
+
+    fn render(&self) -> Vec<f32> {
+        let n = self.size;
+        let mut f = vec![0.0f32; n * n];
+        for (i, &p) in self.pellets.iter().enumerate() {
+            if p {
+                f[i] = 0.3;
+            }
+        }
+        f[self.ghost.1 as usize * n + self.ghost.0 as usize] = 0.7;
+        f[self.player.1 as usize * n + self.player.0 as usize] = 1.0;
+        f
+    }
+
+    fn wrap(&self, v: i32) -> i32 {
+        (v + self.size as i32) % self.size as i32
+    }
+}
+
+impl Env for MiniMsPacman {
+    fn obs_dim(&self) -> usize {
+        self.size * self.size * FRAMES
+    }
+
+    fn action_dim(&self) -> usize {
+        9
+    }
+
+    fn is_discrete(&self) -> bool {
+        true
+    }
+
+    fn max_steps(&self) -> usize {
+        400
+    }
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        let n = self.size as i32;
+        self.player = (rng.below(self.size) as i32, rng.below(self.size) as i32);
+        self.ghost = (self.wrap(self.player.0 + n / 2), self.wrap(self.player.1 + n / 2));
+        self.pellets = vec![true; self.size * self.size];
+        self.pellets[self.player.1 as usize * self.size + self.player.0 as usize] = false;
+        self.stack = vec![vec![0.0; self.size * self.size]; FRAMES];
+        self.steps = 0;
+        let frame = self.render();
+        for _ in 0..FRAMES {
+            push_frame(&mut self.stack, frame.clone());
+        }
+        stacked_obs(&self.stack)
+    }
+
+    fn step(&mut self, action: &Action, rng: &mut Rng) -> Transition {
+        let (dx, dy) = DIRS[action.discrete().min(8)];
+        self.player = (self.wrap(self.player.0 + dx), self.wrap(self.player.1 + dy));
+        let mut reward = 0.0;
+        let idx = self.player.1 as usize * self.size + self.player.0 as usize;
+        if self.pellets[idx] {
+            self.pellets[idx] = false;
+            reward += 1.0;
+        }
+        // Ghost: biased pursuit (75 % greedy step, 25 % random).
+        let (gx, gy) = self.ghost;
+        let step = if rng.uniform() < 0.75 {
+            let ddx = (self.player.0 - gx).signum();
+            let ddy = (self.player.1 - gy).signum();
+            (ddx, ddy)
+        } else {
+            DIRS[1 + rng.below(8)]
+        };
+        self.ghost = (self.wrap(gx + step.0), self.wrap(gy + step.1));
+        self.steps += 1;
+        let caught = self.ghost == self.player;
+        if caught {
+            reward -= 100.0;
+        }
+        let cleared = self.pellets.iter().all(|&p| !p);
+        if cleared {
+            reward += 50.0;
+        }
+        let frame = self.render();
+        push_frame(&mut self.stack, frame);
+        let done = caught || cleared || self.steps >= self.max_steps();
+        Transition { obs: stacked_obs(&self.stack), reward, done }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::contract_check;
+
+    #[test]
+    fn breakout_contract() {
+        contract_check(&mut MiniBreakout::mini(), 1);
+    }
+
+    #[test]
+    fn pacman_contract() {
+        contract_check(&mut MiniMsPacman::mini(), 2);
+    }
+
+    #[test]
+    fn obs_shapes_match_artifacts() {
+        let mut b = MiniBreakout::mini();
+        let mut rng = Rng::new(3);
+        assert_eq!(b.reset(&mut rng).len(), 12 * 12 * 4);
+        assert_eq!(b.action_dim(), 4);
+        let mut p = MiniMsPacman::mini();
+        assert_eq!(p.reset(&mut rng).len(), 12 * 12 * 4);
+        assert_eq!(p.action_dim(), 9);
+    }
+
+    #[test]
+    fn full_shape_matches_table3() {
+        let mut b = MiniBreakout::full();
+        let mut rng = Rng::new(4);
+        assert_eq!(b.reset(&mut rng).len(), 84 * 84 * 4);
+    }
+
+    #[test]
+    fn breakout_tracking_paddle_scores() {
+        // Follow the ball: should hit bricks and outscore doing nothing.
+        let mut env = MiniBreakout::mini();
+        let mut rng = Rng::new(5);
+        let mut track_total = 0.0;
+        for _ in 0..5 {
+            env.reset(&mut rng);
+            loop {
+                let a = if env.ball.0 < env.paddle as f64 - 0.2 {
+                    1
+                } else if env.ball.0 > env.paddle as f64 + 0.2 {
+                    2
+                } else {
+                    0
+                };
+                let t = env.step(&Action::Discrete(a), &mut rng);
+                track_total += t.reward;
+                if t.done {
+                    break;
+                }
+            }
+        }
+        let mut idle_total = 0.0;
+        for _ in 0..5 {
+            env.reset(&mut rng);
+            loop {
+                let t = env.step(&Action::Discrete(0), &mut rng);
+                idle_total += t.reward;
+                if t.done {
+                    break;
+                }
+            }
+        }
+        assert!(
+            track_total > idle_total,
+            "tracking {track_total} should beat idle {idle_total}"
+        );
+        assert!(track_total >= 5.0, "tracking should break bricks: {track_total}");
+    }
+
+    #[test]
+    fn pacman_pellets_monotone_and_ghost_catches_idler() {
+        let mut env = MiniMsPacman::mini();
+        let mut rng = Rng::new(6);
+        env.reset(&mut rng);
+        let before = env.pellets.iter().filter(|&&p| p).count();
+        let mut caught = false;
+        for _ in 0..400 {
+            let t = env.step(&Action::Discrete(0), &mut rng);
+            if t.done {
+                caught = t.reward < -50.0;
+                break;
+            }
+        }
+        let after = env.pellets.iter().filter(|&&p| p).count();
+        assert!(after <= before);
+        assert!(caught, "pursuing ghost should catch a stationary player");
+    }
+
+    #[test]
+    fn frame_stack_shifts() {
+        let mut env = MiniBreakout::mini();
+        let mut rng = Rng::new(7);
+        let o1 = env.reset(&mut rng);
+        let o2 = env.step(&Action::Discrete(2), &mut rng).obs;
+        assert_eq!(o1.len(), o2.len());
+        assert_ne!(o1, o2);
+    }
+}

@@ -1,0 +1,152 @@
+//! CartPole-v1 dynamics (Barto, Sutton & Anderson 1983; Gym constants).
+
+use crate::util::Rng;
+
+use super::{Action, Env, Transition};
+
+const GRAVITY: f64 = 9.8;
+const MASS_CART: f64 = 1.0;
+const MASS_POLE: f64 = 0.1;
+const TOTAL_MASS: f64 = MASS_CART + MASS_POLE;
+const LENGTH: f64 = 0.5; // half pole length
+const POLE_MASS_LENGTH: f64 = MASS_POLE * LENGTH;
+const FORCE_MAG: f64 = 10.0;
+const TAU: f64 = 0.02;
+const THETA_LIMIT: f64 = 12.0 * std::f64::consts::PI / 180.0;
+const X_LIMIT: f64 = 2.4;
+
+/// Classic cart-pole balancing task; discrete {left, right} actions,
+/// +1 reward per surviving step, 500-step cap (v1).
+#[derive(Clone, Debug, Default)]
+pub struct CartPole {
+    x: f64,
+    x_dot: f64,
+    theta: f64,
+    theta_dot: f64,
+    steps: usize,
+}
+
+impl CartPole {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn obs(&self) -> Vec<f32> {
+        vec![self.x as f32, self.x_dot as f32, self.theta as f32, self.theta_dot as f32]
+    }
+}
+
+impl Env for CartPole {
+    fn obs_dim(&self) -> usize {
+        4
+    }
+
+    fn action_dim(&self) -> usize {
+        2
+    }
+
+    fn is_discrete(&self) -> bool {
+        true
+    }
+
+    fn max_steps(&self) -> usize {
+        500
+    }
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        self.x = rng.uniform_in(-0.05, 0.05);
+        self.x_dot = rng.uniform_in(-0.05, 0.05);
+        self.theta = rng.uniform_in(-0.05, 0.05);
+        self.theta_dot = rng.uniform_in(-0.05, 0.05);
+        self.steps = 0;
+        self.obs()
+    }
+
+    fn step(&mut self, action: &Action, _rng: &mut Rng) -> Transition {
+        let force = if action.discrete() == 1 { FORCE_MAG } else { -FORCE_MAG };
+        let (sin_t, cos_t) = self.theta.sin_cos();
+        let temp =
+            (force + POLE_MASS_LENGTH * self.theta_dot * self.theta_dot * sin_t) / TOTAL_MASS;
+        let theta_acc = (GRAVITY * sin_t - cos_t * temp)
+            / (LENGTH * (4.0 / 3.0 - MASS_POLE * cos_t * cos_t / TOTAL_MASS));
+        let x_acc = temp - POLE_MASS_LENGTH * theta_acc * cos_t / TOTAL_MASS;
+        // Euler integration (Gym semantics).
+        self.x += TAU * self.x_dot;
+        self.x_dot += TAU * x_acc;
+        self.theta += TAU * self.theta_dot;
+        self.theta_dot += TAU * theta_acc;
+        self.steps += 1;
+        let failed = self.x.abs() > X_LIMIT || self.theta.abs() > THETA_LIMIT;
+        let truncated = self.steps >= self.max_steps();
+        Transition { obs: self.obs(), reward: 1.0, done: failed || truncated }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::contract_check;
+
+    #[test]
+    fn contract() {
+        contract_check(&mut CartPole::new(), 42);
+    }
+
+    #[test]
+    fn random_policy_fails_quickly() {
+        let mut env = CartPole::new();
+        let mut rng = Rng::new(7);
+        let mut lengths = Vec::new();
+        for _ in 0..20 {
+            env.reset(&mut rng);
+            let mut n = 0;
+            loop {
+                let t = env.step(&Action::Discrete(rng.below(2)), &mut rng);
+                n += 1;
+                if t.done {
+                    break;
+                }
+            }
+            lengths.push(n as f64);
+        }
+        let mean = crate::util::stats::mean(&lengths);
+        assert!((8.0..80.0).contains(&mean), "random policy mean length {mean}");
+    }
+
+    #[test]
+    fn balanced_policy_survives_longer() {
+        // Push in the direction the pole leans: a crude but better policy.
+        let mut env = CartPole::new();
+        let mut rng = Rng::new(8);
+        let mut total = 0usize;
+        for _ in 0..10 {
+            let mut obs = env.reset(&mut rng);
+            loop {
+                let a = if obs[2] > 0.0 { 1 } else { 0 };
+                let t = env.step(&Action::Discrete(a), &mut rng);
+                obs = t.obs;
+                total += 1;
+                if t.done {
+                    break;
+                }
+            }
+        }
+        assert!(total / 10 > 25, "lean-following policy too weak: {}", total / 10);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = |seed| {
+            let mut env = CartPole::new();
+            let mut rng = Rng::new(seed);
+            env.reset(&mut rng);
+            let mut v = Vec::new();
+            for i in 0..20 {
+                v.extend(env.step(&Action::Discrete(i % 2), &mut rng).obs);
+            }
+            v
+        };
+        assert_eq!(run(3), run(3));
+        assert_ne!(run(3), run(4));
+    }
+}

@@ -1,0 +1,213 @@
+//! LunarLanderContinuous: simplified 2-D rigid-body lander (DESIGN.md
+//! §Substitutions — Box2D replaced by explicit dynamics with the same
+//! state/action interface and reward shaping as the Gym task).
+//!
+//! State (8): x, y, ẋ, ẏ, θ, θ̇, left-leg contact, right-leg contact.
+//! Actions (2, continuous): main engine [-1,1] (fires above 0), lateral
+//! engine [-1,1] (|a|>0.5 fires left/right).
+
+use crate::util::Rng;
+
+use super::{Action, Env, Transition};
+
+const DT: f64 = 1.0 / 50.0;
+const GRAVITY: f64 = -1.625; // lunar g, scaled like the Gym env
+const MAIN_POWER: f64 = 6.0;
+const SIDE_POWER: f64 = 0.6;
+const ANGULAR_DAMP: f64 = 0.3;
+const LEG_HEIGHT: f64 = 0.1;
+
+#[derive(Clone, Debug, Default)]
+pub struct LunarLanderCont {
+    x: f64,
+    y: f64,
+    vx: f64,
+    vy: f64,
+    theta: f64,
+    omega: f64,
+    left_contact: bool,
+    right_contact: bool,
+    steps: usize,
+    prev_shaping: Option<f64>,
+}
+
+impl LunarLanderCont {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn obs(&self) -> Vec<f32> {
+        vec![
+            self.x as f32,
+            self.y as f32,
+            self.vx as f32,
+            self.vy as f32,
+            self.theta as f32,
+            self.omega as f32,
+            self.left_contact as u8 as f32,
+            self.right_contact as u8 as f32,
+        ]
+    }
+
+    /// Gym-style potential shaping: closer + slower + upright is better.
+    fn shaping(&self) -> f64 {
+        -100.0 * (self.x * self.x + self.y * self.y).sqrt()
+            - 100.0 * (self.vx * self.vx + self.vy * self.vy).sqrt()
+            - 100.0 * self.theta.abs()
+            + 10.0 * self.left_contact as u8 as f64
+            + 10.0 * self.right_contact as u8 as f64
+    }
+}
+
+impl Env for LunarLanderCont {
+    fn obs_dim(&self) -> usize {
+        8
+    }
+
+    fn action_dim(&self) -> usize {
+        2
+    }
+
+    fn is_discrete(&self) -> bool {
+        false
+    }
+
+    fn max_steps(&self) -> usize {
+        1000
+    }
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        *self = LunarLanderCont {
+            x: rng.uniform_in(-0.3, 0.3),
+            y: 1.4,
+            vx: rng.uniform_in(-0.2, 0.2),
+            vy: rng.uniform_in(-0.1, 0.0),
+            theta: rng.uniform_in(-0.1, 0.1),
+            omega: rng.uniform_in(-0.05, 0.05),
+            ..Default::default()
+        };
+        self.obs()
+    }
+
+    fn step(&mut self, action: &Action, _rng: &mut Rng) -> Transition {
+        let a = action.continuous();
+        let main = (a[0] as f64).clamp(-1.0, 1.0);
+        let side = (a[1] as f64).clamp(-1.0, 1.0);
+        // Main engine: fires when commanded > 0, thrust along body axis.
+        let main_thrust = if main > 0.0 { MAIN_POWER * (0.5 + 0.5 * main) } else { 0.0 };
+        // Side engines: fire when |side| > 0.5, torque + lateral force.
+        let side_thrust = if side.abs() > 0.5 { SIDE_POWER * side.signum() * (side.abs() * 2.0 - 1.0).min(1.0) } else { 0.0 };
+        let (sin_t, cos_t) = self.theta.sin_cos();
+        let ax = -main_thrust * sin_t + side_thrust * cos_t;
+        let ay = main_thrust * cos_t + side_thrust * sin_t + GRAVITY;
+        self.vx += ax * DT;
+        self.vy += ay * DT;
+        self.x += self.vx * DT;
+        self.y += self.vy * DT;
+        self.omega += (-side_thrust * 2.0 - ANGULAR_DAMP * self.omega) * DT;
+        self.theta += self.omega * DT;
+        self.steps += 1;
+
+        self.left_contact = self.y <= LEG_HEIGHT && self.theta < 0.2;
+        self.right_contact = self.y <= LEG_HEIGHT && self.theta > -0.2;
+
+        let mut reward = 0.0;
+        let shaping = self.shaping();
+        if let Some(prev) = self.prev_shaping {
+            reward += shaping - prev;
+        }
+        self.prev_shaping = Some(shaping);
+        // fuel costs (Gym constants)
+        reward -= 0.30 * (main_thrust / MAIN_POWER);
+        reward -= 0.03 * (side_thrust.abs() / SIDE_POWER);
+
+        let mut done = false;
+        // Touchdown / crash.
+        if self.y <= 0.0 {
+            done = true;
+            let soft = self.vy.abs() < 0.5 && self.theta.abs() < 0.3 && self.x.abs() < 0.5;
+            reward += if soft { 100.0 } else { -100.0 };
+        }
+        // Flying out of bounds is a crash.
+        if self.x.abs() > 1.5 || self.y > 2.0 {
+            done = true;
+            reward -= 100.0;
+        }
+        if self.steps >= self.max_steps() {
+            done = true;
+        }
+        Transition { obs: self.obs(), reward, done }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::contract_check;
+
+    #[test]
+    fn contract() {
+        contract_check(&mut LunarLanderCont::new(), 31);
+    }
+
+    #[test]
+    fn free_fall_crashes_with_penalty() {
+        let mut env = LunarLanderCont::new();
+        let mut rng = Rng::new(9);
+        env.reset(&mut rng);
+        let mut total = 0.0;
+        loop {
+            let t = env.step(&Action::Continuous(vec![-1.0, 0.0]), &mut rng);
+            total += t.reward;
+            if t.done {
+                break;
+            }
+        }
+        assert!(total < 0.0, "free fall should score badly, got {total}");
+    }
+
+    #[test]
+    fn hover_controller_lands_softly_sometimes() {
+        // Simple PD on vertical speed + attitude: should land (y<=0) with
+        // low speed reasonably often -> mean reward far above free fall.
+        let mut env = LunarLanderCont::new();
+        let mut rng = Rng::new(10);
+        let mut totals = Vec::new();
+        for _ in 0..10 {
+            let mut obs = env.reset(&mut rng);
+            let mut total = 0.0;
+            loop {
+                let target_vy = -0.25f32;
+                let main = ((target_vy - obs[3]) * 2.0 - 0.3 * obs[1].min(0.4)) as f64;
+                let side = (-obs[4] * 2.0 - obs[5]) as f64;
+                let t = env.step(
+                    &Action::Continuous(vec![main as f32, side as f32]),
+                    &mut rng,
+                );
+                obs = t.obs;
+                total += t.reward;
+                if t.done {
+                    break;
+                }
+            }
+            totals.push(total);
+        }
+        let mean = crate::util::stats::mean(&totals);
+        assert!(mean > -50.0, "PD hover too weak: mean {mean}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = |seed| {
+            let mut env = LunarLanderCont::new();
+            let mut rng = Rng::new(seed);
+            env.reset(&mut rng);
+            let mut v = Vec::new();
+            for _ in 0..50 {
+                v.extend(env.step(&Action::Continuous(vec![0.5, 0.1]), &mut rng).obs);
+            }
+            v
+        };
+        assert_eq!(run(1), run(1));
+    }
+}

@@ -1,0 +1,100 @@
+//! DRL environments (paper §V-A), reimplemented in rust from the Gym /
+//! control-theory dynamics so the whole request path is Python-free:
+//!
+//! * CartPole (discrete) — classic control;
+//! * InvertedPendulum (continuous) — the MuJoCo task's planar dynamics;
+//! * MountainCarContinuous — energy-accumulation task;
+//! * LunarLanderContinuous — simplified 2-D rigid-body lander;
+//! * mini-Breakout / mini-MsPacman — synthetic pixel environments
+//!   standing in for ALE (DESIGN.md §Substitutions), rendering
+//!   12×12×4 (convergence runs) or 84×84×4 (timing shapes) frames.
+
+pub mod atari_sim;
+pub mod cartpole;
+pub mod lunar_lander;
+pub mod mountain_car;
+pub mod pendulum;
+
+pub use atari_sim::{MiniBreakout, MiniMsPacman};
+pub use cartpole::CartPole;
+pub use lunar_lander::LunarLanderCont;
+pub use mountain_car::MountainCarCont;
+pub use pendulum::InvertedPendulum;
+
+use crate::util::Rng;
+
+/// Action passed to an environment step.
+#[derive(Clone, Debug)]
+pub enum Action {
+    Discrete(usize),
+    Continuous(Vec<f32>),
+}
+
+impl Action {
+    pub fn discrete(&self) -> usize {
+        match self {
+            Action::Discrete(a) => *a,
+            Action::Continuous(_) => panic!("expected discrete action"),
+        }
+    }
+
+    pub fn continuous(&self) -> &[f32] {
+        match self {
+            Action::Continuous(a) => a,
+            Action::Discrete(_) => panic!("expected continuous action"),
+        }
+    }
+}
+
+/// Step outcome.
+#[derive(Clone, Debug)]
+pub struct Transition {
+    pub obs: Vec<f32>,
+    pub reward: f64,
+    pub done: bool,
+}
+
+/// Common environment interface (PS-side in the paper's mapping: the
+/// Environment Step stage runs on the CPU, Fig 1).
+pub trait Env {
+    /// Observation dimension (flattened).
+    fn obs_dim(&self) -> usize;
+    /// Discrete action count, or continuous action dimension.
+    fn action_dim(&self) -> usize;
+    fn is_discrete(&self) -> bool;
+    /// Reset with fresh randomness; returns the initial observation.
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32>;
+    /// Advance one step.
+    fn step(&mut self, action: &Action, rng: &mut Rng) -> Transition;
+    /// Episode step limit (truncation).
+    fn max_steps(&self) -> usize;
+}
+
+/// Shared test helper: roll an env for a full episode with random actions
+/// and sanity-check the contract.
+#[cfg(test)]
+pub(crate) fn contract_check(env: &mut dyn Env, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let obs = env.reset(&mut rng);
+    assert_eq!(obs.len(), env.obs_dim());
+    assert!(obs.iter().all(|x| x.is_finite()));
+    let mut steps = 0;
+    loop {
+        let action = if env.is_discrete() {
+            Action::Discrete(rng.below(env.action_dim()))
+        } else {
+            Action::Continuous(
+                (0..env.action_dim()).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect(),
+            )
+        };
+        let t = env.step(&action, &mut rng);
+        assert_eq!(t.obs.len(), env.obs_dim());
+        assert!(t.obs.iter().all(|x| x.is_finite()), "non-finite obs at step {steps}");
+        assert!(t.reward.is_finite());
+        steps += 1;
+        if t.done || steps >= env.max_steps() + 10 {
+            break;
+        }
+    }
+    assert!(steps <= env.max_steps() + 1, "episode never terminated/truncated");
+}

@@ -1,0 +1,130 @@
+//! InvertedPendulum (MuJoCo task, planar dynamics): keep a pole upright
+//! on a cart with continuous force control.  State (x, ẋ, θ, θ̇); reward
+//! +1 per step alive; terminates when |θ| > 0.2 rad (MuJoCo's threshold).
+
+use crate::util::Rng;
+
+use super::{Action, Env, Transition};
+
+const DT: f64 = 0.02;
+const GRAVITY: f64 = 9.81;
+const MASS_CART: f64 = 1.0;
+const MASS_POLE: f64 = 0.3;
+const LENGTH: f64 = 0.6; // pole half-length
+const FORCE_SCALE: f64 = 15.0;
+const THETA_LIMIT: f64 = 0.2;
+const X_LIMIT: f64 = 1.0;
+
+#[derive(Clone, Debug, Default)]
+pub struct InvertedPendulum {
+    x: f64,
+    x_dot: f64,
+    theta: f64,
+    theta_dot: f64,
+    steps: usize,
+}
+
+impl InvertedPendulum {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn obs(&self) -> Vec<f32> {
+        vec![self.x as f32, self.x_dot as f32, self.theta as f32, self.theta_dot as f32]
+    }
+}
+
+impl Env for InvertedPendulum {
+    fn obs_dim(&self) -> usize {
+        4
+    }
+
+    fn action_dim(&self) -> usize {
+        1
+    }
+
+    fn is_discrete(&self) -> bool {
+        false
+    }
+
+    fn max_steps(&self) -> usize {
+        1000
+    }
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        self.x = rng.uniform_in(-0.01, 0.01);
+        self.x_dot = rng.uniform_in(-0.01, 0.01);
+        self.theta = rng.uniform_in(-0.01, 0.01);
+        self.theta_dot = rng.uniform_in(-0.01, 0.01);
+        self.steps = 0;
+        self.obs()
+    }
+
+    fn step(&mut self, action: &Action, _rng: &mut Rng) -> Transition {
+        let u = (action.continuous()[0] as f64).clamp(-1.0, 1.0) * FORCE_SCALE;
+        let total = MASS_CART + MASS_POLE;
+        let (sin_t, cos_t) = self.theta.sin_cos();
+        let temp = (u + MASS_POLE * LENGTH * self.theta_dot * self.theta_dot * sin_t) / total;
+        let theta_acc = (GRAVITY * sin_t - cos_t * temp)
+            / (LENGTH * (4.0 / 3.0 - MASS_POLE * cos_t * cos_t / total));
+        let x_acc = temp - MASS_POLE * LENGTH * theta_acc * cos_t / total;
+        // semi-implicit Euler keeps the pole dynamics stable
+        self.x_dot += DT * x_acc;
+        self.x += DT * self.x_dot;
+        self.theta_dot += DT * theta_acc;
+        self.theta += DT * self.theta_dot;
+        self.steps += 1;
+        let failed = self.theta.abs() > THETA_LIMIT || self.x.abs() > X_LIMIT;
+        let truncated = self.steps >= self.max_steps();
+        Transition { obs: self.obs(), reward: 1.0, done: failed || truncated }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::contract_check;
+
+    #[test]
+    fn contract() {
+        contract_check(&mut InvertedPendulum::new(), 11);
+    }
+
+    #[test]
+    fn zero_action_falls_eventually() {
+        let mut env = InvertedPendulum::new();
+        let mut rng = Rng::new(5);
+        env.reset(&mut rng);
+        let mut n = 0;
+        loop {
+            let t = env.step(&Action::Continuous(vec![0.0]), &mut rng);
+            n += 1;
+            if t.done {
+                break;
+            }
+        }
+        assert!(n < env.max_steps(), "uncontrolled pole should fall, lasted {n}");
+    }
+
+    #[test]
+    fn proportional_controller_balances() {
+        // u = -k θ - d θ̇ keeps the pole up far longer than zero control.
+        let mut env = InvertedPendulum::new();
+        let mut rng = Rng::new(6);
+        let mut obs = env.reset(&mut rng);
+        let mut n = 0;
+        loop {
+            // push the cart toward the lean (+θ ⇒ +u) to move under the pole
+            let u = (8.0 * obs[2] as f64 + 1.5 * obs[3] as f64 + 0.3 * obs[0] as f64
+                + 0.5 * obs[1] as f64)
+                .clamp(-1.0, 1.0);
+            let t = env.step(&Action::Continuous(vec![u as f32]), &mut rng);
+            obs = t.obs;
+            n += 1;
+            if t.done {
+                break;
+            }
+        }
+        assert!(n >= 500, "PD controller should balance long, lasted {n}");
+    }
+}

@@ -1,0 +1,432 @@
+//! Build the training-step CDFG for each algorithm (paper §IV-A: the
+//! CDFG the LLVM pass extracts, with layers as nodes).
+//!
+//! Node emission per algorithm follows the compute structure the paper
+//! describes in §IV-B: DQN needs two forward passes (online + target) and
+//! one backward pass (Eq. 1); DDPG runs four networks with two backward
+//! passes; A2C/PPO run actor-critic forwards plus one joint backward.
+
+use super::dag::Dag;
+use super::flops::conv_gemm_dims;
+use super::layer::{LayerKind, Node, Phase};
+
+/// Network architecture (Table III).
+#[derive(Clone, Debug)]
+pub enum NetSpec {
+    /// Dense sizes `[d0, d1, ..., dk]`.
+    Mlp { sizes: Vec<usize> },
+    /// Conv trunk + FC head: input `in_hw`×`in_hw`×`in_ch`,
+    /// conv layers `(cout, ksize, stride)`, then dense sizes.
+    Conv { in_hw: usize, in_ch: usize, conv: Vec<(usize, usize, usize)>, fc: Vec<usize> },
+}
+
+impl NetSpec {
+    pub fn mlp(sizes: &[usize]) -> Self {
+        NetSpec::Mlp { sizes: sizes.to_vec() }
+    }
+
+    /// Weight elements of the whole network (master-weight volume).
+    pub fn weight_elems(&self) -> usize {
+        match self {
+            NetSpec::Mlp { sizes } => sizes
+                .windows(2)
+                .map(|w| w[0] * w[1] + w[1])
+                .sum(),
+            NetSpec::Conv { in_hw, in_ch, conv, fc } => {
+                let mut total = 0;
+                let (mut h, mut c) = (*in_hw, *in_ch);
+                for &(cout, k, s) in conv {
+                    total += k * k * c * cout + cout;
+                    h = (h - k) / s + 1;
+                    c = cout;
+                }
+                let mut din = h * h * c;
+                for &dout in fc {
+                    total += din * dout + dout;
+                    din = dout;
+                }
+                total
+            }
+        }
+    }
+}
+
+/// DRL algorithm shape (which networks + passes the train step runs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    Dqn,
+    Ddpg,
+    A2c,
+    Ppo,
+}
+
+impl Algo {
+    pub fn name(self) -> &'static str {
+        match self {
+            Algo::Dqn => "DQN",
+            Algo::Ddpg => "DDPG",
+            Algo::A2c => "A2C",
+            Algo::Ppo => "PPO",
+        }
+    }
+}
+
+/// Everything needed to build one training-step graph.
+#[derive(Clone, Debug)]
+pub struct TrainSpec {
+    pub algo: Algo,
+    pub net: NetSpec,
+    pub batch: usize,
+    /// Observation/action dims (critic input sizing for DDPG).
+    pub obs_dim: usize,
+    pub act_dim: usize,
+}
+
+/// Per-layer GEMM dims of a network at batch `bs`:
+/// (name, m, k, n, out_elems, weight_elems).
+fn layer_dims(net: &NetSpec, bs: usize) -> Vec<(String, usize, usize, usize, usize, usize)> {
+    match net {
+        NetSpec::Mlp { sizes } => sizes
+            .windows(2)
+            .enumerate()
+            .map(|(i, w)| {
+                let (din, dout) = (w[0], w[1]);
+                (format!("fc{i}"), bs, din, dout, bs * dout, din * dout + dout)
+            })
+            .collect(),
+        NetSpec::Conv { in_hw, in_ch, conv, fc } => {
+            let mut out = Vec::new();
+            let (mut h, mut c) = (*in_hw, *in_ch);
+            for (i, &(cout, k, s)) in conv.iter().enumerate() {
+                let (m, kk, n, oh, _ow) = conv_gemm_dims(bs, h, h, c, cout, k, s);
+                out.push((
+                    format!("conv{i}"),
+                    m,
+                    kk,
+                    n,
+                    m * n,
+                    k * k * c * cout + cout,
+                ));
+                h = oh;
+                c = cout;
+            }
+            let mut din = h * h * c;
+            for (j, &dout) in fc.iter().enumerate() {
+                out.push((format!("fc{j}"), bs, din, dout, bs * dout, din * dout + dout));
+                din = dout;
+            }
+            out
+        }
+    }
+}
+
+struct Emitter<'a> {
+    dag: &'a mut Dag,
+}
+
+impl<'a> Emitter<'a> {
+    fn mm(&mut self, name: String, phase: Phase, m: usize, k: usize, n: usize, w: usize, deps: &[usize]) -> usize {
+        self.dag.add(
+            Node {
+                id: 0,
+                name,
+                phase,
+                kind: LayerKind::Mm { m, k, n },
+                weight_elems: w,
+                out_elems: m * n,
+            },
+            deps,
+        )
+    }
+
+    fn elem(&mut self, name: String, phase: Phase, elems: usize, deps: &[usize]) -> usize {
+        self.dag.add(
+            Node {
+                id: 0,
+                name,
+                phase,
+                kind: LayerKind::Elementwise { elems },
+                weight_elems: 0,
+                out_elems: elems,
+            },
+            deps,
+        )
+    }
+
+    /// Weight-update node: elementwise over `w` weight elements, and
+    /// carries that volume for master-weight sync accounting (Fig 10).
+    fn upd(&mut self, name: String, w: usize, deps: &[usize]) -> usize {
+        self.dag.add(
+            Node {
+                id: 0,
+                name,
+                phase: Phase::Update,
+                kind: LayerKind::Elementwise { elems: w },
+                weight_elems: w,
+                out_elems: w,
+            },
+            deps,
+        )
+    }
+
+    fn reduce(&mut self, name: String, elems: usize, deps: &[usize]) -> usize {
+        self.dag.add(
+            Node {
+                id: 0,
+                name,
+                phase: Phase::Loss,
+                kind: LayerKind::Reduce { elems },
+                weight_elems: 0,
+                out_elems: 1,
+            },
+            deps,
+        )
+    }
+
+    /// Forward pass: per layer an MM node + (except last) an activation
+    /// node.  Returns (last node id, MM node ids).
+    fn forward(
+        &mut self,
+        tag: &str,
+        dims: &[(String, usize, usize, usize, usize, usize)],
+        entry_dep: Option<usize>,
+    ) -> (usize, Vec<usize>) {
+        let mut mm_ids = Vec::new();
+        let mut prev: Option<usize> = entry_dep;
+        for (i, (lname, m, k, n, out, w)) in dims.iter().enumerate() {
+            let deps: Vec<usize> = prev.into_iter().collect();
+            let mm =
+                self.mm(format!("{tag}/{lname}/fwd"), Phase::Forward, *m, *k, *n, *w, &deps);
+            mm_ids.push(mm);
+            prev = Some(if i < dims.len() - 1 {
+                self.elem(format!("{tag}/{lname}/act"), Phase::Forward, *out, &[mm])
+            } else {
+                mm
+            });
+        }
+        (prev.unwrap(), mm_ids)
+    }
+
+    /// Backward pass over `dims` (reverse order): per layer one MM node
+    /// covering dx+dw (the two GEMMs stay on one component — same
+    /// argument as §IV-B: splitting a layer costs communication), plus
+    /// an update node.  `fwd_mms[i]` is the matching forward node (bwd
+    /// needs its saved activations) and `loss` the gradient source.
+    fn backward(
+        &mut self,
+        tag: &str,
+        dims: &[(String, usize, usize, usize, usize, usize)],
+        fwd_mms: &[usize],
+        loss: usize,
+    ) -> Vec<usize> {
+        let mut updates = Vec::new();
+        let mut grad_dep = loss;
+        for (i, (lname, m, k, n, _out, w)) in dims.iter().enumerate().rev() {
+            // dx (m×n)·(n×k) + dw (k×m)·(m×n): fold to one MM with 2× k
+            let bwd = self.mm(
+                format!("{tag}/{lname}/bwd"),
+                Phase::Backward,
+                *m,
+                2 * *k,
+                *n,
+                0,
+                &[grad_dep, fwd_mms[i]],
+            );
+            let upd = self.upd(format!("{tag}/{lname}/update"), *w, &[bwd]);
+            updates.push(upd);
+            grad_dep = bwd;
+        }
+        updates
+    }
+}
+
+/// Build the full training-step DAG for `spec` (paper §IV-C input).
+pub fn build_train_graph(spec: &TrainSpec) -> Dag {
+    let mut dag = Dag::new();
+    let mut e = Emitter { dag: &mut dag };
+    let bs = spec.batch;
+    match spec.algo {
+        Algo::Dqn => {
+            let dims = layer_dims(&spec.net, bs);
+            let (q_out, q_mms) = e.forward("online", &dims, None);
+            let (t_out, _) = e.forward("target", &dims, None);
+            let loss = e.reduce("td_loss".into(), bs * spec.act_dim, &[q_out, t_out]);
+            e.backward("online", &dims, &q_mms, loss);
+        }
+        Algo::Ddpg => {
+            // Critic target path: a' = t_actor(s'), q' = t_critic(s', a')
+            let actor_dims = layer_dims(&spec.net, bs);
+            let critic_net = critic_spec(&spec.net, spec.obs_dim, spec.act_dim);
+            let critic_dims = layer_dims(&critic_net, bs);
+            let (ta_out, _) = e.forward("t_actor", &actor_dims, None);
+            let (tc_out, _) = e.forward("t_critic", &critic_dims, Some(ta_out));
+            // Critic update: q = critic(s, a); loss; backward.
+            let (c_out, c_mms) = e.forward("critic", &critic_dims, None);
+            let closs = e.reduce("critic_loss".into(), bs, &[c_out, tc_out]);
+            e.backward("critic", &critic_dims, &c_mms, closs);
+            // Actor update: a = actor(s); q = critic(s, a); backward.
+            let (a_out, a_mms) = e.forward("actor", &actor_dims, None);
+            let (cq_out, _) = e.forward("critic_for_actor", &critic_dims, Some(a_out));
+            let aloss = e.reduce("actor_loss".into(), bs, &[cq_out]);
+            let a_updates = e.backward("actor", &actor_dims, &a_mms, aloss);
+            // Soft target updates depend on the new weights.
+            let w_a = spec.net.weight_elems();
+            let w_c = critic_net.weight_elems();
+            e.upd("t_actor/soft_update".into(), w_a, &a_updates.clone());
+            e.upd("t_critic/soft_update".into(), w_c, &[closs]);
+        }
+        Algo::A2c | Algo::Ppo => {
+            let pi_dims = layer_dims(&spec.net, bs);
+            let v_net = value_spec(&spec.net);
+            let v_dims = layer_dims(&v_net, bs);
+            let (pi_out, pi_mms) = e.forward("actor", &pi_dims, None);
+            let (v_out, v_mms) = e.forward("value", &v_dims, None);
+            let loss_elems = bs * (spec.act_dim + 1);
+            let name = if spec.algo == Algo::Ppo { "ppo_clip_loss" } else { "a2c_loss" };
+            let loss = e.reduce(name.into(), loss_elems, &[pi_out, v_out]);
+            e.backward("actor", &pi_dims, &pi_mms, loss);
+            e.backward("value", &v_dims, &v_mms, loss);
+        }
+    }
+    dag
+}
+
+/// DDPG critic: same hidden sizes, input obs+act, scalar output.
+fn critic_spec(net: &NetSpec, obs_dim: usize, act_dim: usize) -> NetSpec {
+    match net {
+        NetSpec::Mlp { sizes } => {
+            let mut s = sizes.clone();
+            s[0] = obs_dim + act_dim;
+            *s.last_mut().unwrap() = 1;
+            NetSpec::Mlp { sizes: s }
+        }
+        NetSpec::Conv { .. } => panic!("conv critic not used by Table III DDPG combos"),
+    }
+}
+
+/// A2C/PPO value net: same trunk, scalar head.
+fn value_spec(net: &NetSpec) -> NetSpec {
+    match net {
+        NetSpec::Mlp { sizes } => {
+            let mut s = sizes.clone();
+            *s.last_mut().unwrap() = 1;
+            NetSpec::Mlp { sizes: s }
+        }
+        NetSpec::Conv { in_hw, in_ch, conv, fc } => {
+            let mut f = fc.clone();
+            *f.last_mut().unwrap() = 1;
+            NetSpec::Conv { in_hw: *in_hw, in_ch: *in_ch, conv: conv.clone(), fc: f }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::layer::Phase;
+
+    fn cartpole_spec() -> TrainSpec {
+        TrainSpec {
+            algo: Algo::Dqn,
+            net: NetSpec::mlp(&[4, 64, 64, 2]),
+            batch: 64,
+            obs_dim: 4,
+            act_dim: 2,
+        }
+    }
+
+    #[test]
+    fn dqn_graph_structure() {
+        let g = build_train_graph(&cartpole_spec());
+        // 2 forwards × (3 MM + 2 act) + loss + 3 bwd + 3 update = 17
+        assert_eq!(g.len(), 17);
+        assert_eq!(g.mm_nodes().len(), 9); // 3+3 fwd MM + 3 bwd MM
+        assert!(!g.sinks().is_empty());
+        g.topo_order(); // must not panic
+    }
+
+    #[test]
+    fn dqn_breakout_has_15_mm_layers() {
+        // Paper Fig 8: DQN-Breakout training touches 15 distinct layers
+        // (5 per fwd pass × 2 passes + 5 bwd).
+        let spec = TrainSpec {
+            algo: Algo::Dqn,
+            net: NetSpec::Conv {
+                in_hw: 84,
+                in_ch: 4,
+                conv: vec![(32, 8, 4), (64, 4, 2), (64, 3, 1)],
+                fc: vec![512, 4],
+            },
+            batch: 32,
+            obs_dim: 84 * 84 * 4,
+            act_dim: 4,
+        };
+        let g = build_train_graph(&spec);
+        assert_eq!(g.mm_nodes().len(), 15);
+    }
+
+    #[test]
+    fn ddpg_graph_has_four_networks() {
+        let spec = TrainSpec {
+            algo: Algo::Ddpg,
+            net: NetSpec::mlp(&[8, 400, 300, 2]),
+            batch: 256,
+            obs_dim: 8,
+            act_dim: 2,
+        };
+        let g = build_train_graph(&spec);
+        // 6 forward passes (t_actor, t_critic, critic, actor, critic_for_actor ... )
+        let fwd_mm = g
+            .nodes
+            .iter()
+            .filter(|n| n.phase == Phase::Forward && n.kind.is_mm())
+            .count();
+        assert_eq!(fwd_mm, 5 * 3); // 5 forward passes × 3 layers
+        let bwd_mm = g
+            .nodes
+            .iter()
+            .filter(|n| n.phase == Phase::Backward)
+            .count();
+        assert_eq!(bwd_mm, 6); // critic + actor backward × 3 layers
+        g.topo_order();
+    }
+
+    #[test]
+    fn a2c_and_ppo_share_shape() {
+        for algo in [Algo::A2c, Algo::Ppo] {
+            let spec = TrainSpec {
+                algo,
+                net: NetSpec::mlp(&[4, 64, 64, 1]),
+                batch: 64,
+                obs_dim: 4,
+                act_dim: 1,
+            };
+            let g = build_train_graph(&spec);
+            assert_eq!(g.mm_nodes().len(), 12); // 2 fwd × 3 + 2 bwd × 3
+        }
+    }
+
+    #[test]
+    fn flops_scale_with_batch() {
+        let mut spec = cartpole_spec();
+        let f1 = build_train_graph(&spec).total_flops();
+        spec.batch = 128;
+        let f2 = build_train_graph(&spec).total_flops();
+        assert!(f2 > 1.9 * f1 && f2 < 2.1 * f1);
+    }
+
+    #[test]
+    fn weight_elems_accounting() {
+        let net = NetSpec::mlp(&[4, 64, 64, 2]);
+        assert_eq!(net.weight_elems(), 4 * 64 + 64 + 64 * 64 + 64 + 64 * 2 + 2);
+        let conv = NetSpec::Conv {
+            in_hw: 12,
+            in_ch: 4,
+            conv: vec![(8, 4, 2), (16, 3, 1)],
+            fc: vec![128, 4],
+        };
+        // conv1: 4*4*4*8+8, 12->5; conv2: 3*3*8*16+16, 5->3; flat=144
+        let expect = 4 * 4 * 4 * 8 + 8 + 3 * 3 * 8 * 16 + 16 + 144 * 128 + 128 + 128 * 4 + 4;
+        assert_eq!(conv.weight_elems(), expect);
+    }
+}

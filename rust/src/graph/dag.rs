@@ -1,0 +1,158 @@
+//! DAG container: nodes + dependency edges, topological order, critical
+//! path — the `G = (V, E)` of the paper's ILP formulation (§IV-C).
+
+use super::layer::Node;
+
+#[derive(Clone, Debug)]
+pub struct Dag {
+    pub nodes: Vec<Node>,
+    /// preds[i] = Γ⁻(i): nodes that must complete before i starts.
+    pub preds: Vec<Vec<usize>>,
+    /// succs[i] = Γ⁺(i).
+    pub succs: Vec<Vec<usize>>,
+}
+
+impl Dag {
+    pub fn new() -> Self {
+        Dag { nodes: Vec::new(), preds: Vec::new(), succs: Vec::new() }
+    }
+
+    /// Append a node depending on `deps`; returns its id.
+    pub fn add(&mut self, mut node: Node, deps: &[usize]) -> usize {
+        let id = self.nodes.len();
+        node.id = id;
+        for &d in deps {
+            assert!(d < id, "dependency {d} must precede node {id}");
+            self.succs[d].push(id);
+        }
+        self.nodes.push(node);
+        self.preds.push(deps.to_vec());
+        self.succs.push(Vec::new());
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Sink nodes ({i ∈ V | Γ⁺(i) = ∅} in Eq. 6).
+    pub fn sinks(&self) -> Vec<usize> {
+        (0..self.len()).filter(|&i| self.succs[i].is_empty()).collect()
+    }
+
+    /// Kahn topological order.  Construction guarantees acyclicity
+    /// (edges only point forward), so this cannot fail; kept as a checked
+    /// API for robustness against future builders.
+    pub fn topo_order(&self) -> Vec<usize> {
+        let mut indeg: Vec<usize> = self.preds.iter().map(|p| p.len()).collect();
+        let mut queue: Vec<usize> = (0..self.len()).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(self.len());
+        while let Some(i) = queue.pop() {
+            order.push(i);
+            for &s in &self.succs[i] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    queue.push(s);
+                }
+            }
+        }
+        assert_eq!(order.len(), self.len(), "cycle in CDFG");
+        order
+    }
+
+    /// Longest path through the DAG weighting node i by `cost(i)` —
+    /// the makespan lower bound no schedule can beat.
+    pub fn critical_path(&self, cost: impl Fn(usize) -> f64) -> f64 {
+        let order = self.topo_order();
+        let mut finish = vec![0.0f64; self.len()];
+        let mut best: f64 = 0.0;
+        for &i in &order {
+            let start = self.preds[i].iter().map(|&p| finish[p]).fold(0.0, f64::max);
+            finish[i] = start + cost(i);
+            best = best.max(finish[i]);
+        }
+        best
+    }
+
+    /// Total FLOPs across all nodes.
+    pub fn total_flops(&self) -> f64 {
+        self.nodes.iter().map(|n| n.flops()).sum()
+    }
+
+    /// Ids of MM nodes (the PL/AIE decision variables of the ILP).
+    pub fn mm_nodes(&self) -> Vec<usize> {
+        (0..self.len()).filter(|&i| self.nodes[i].kind.is_mm()).collect()
+    }
+}
+
+impl Default for Dag {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::layer::{LayerKind, Node, Phase};
+
+    fn node(name: &str) -> Node {
+        Node {
+            id: 0,
+            name: name.into(),
+            phase: Phase::Forward,
+            kind: LayerKind::Mm { m: 2, k: 2, n: 2 },
+            weight_elems: 0,
+            out_elems: 4,
+        }
+    }
+
+    fn diamond() -> Dag {
+        let mut g = Dag::new();
+        let a = g.add(node("a"), &[]);
+        let b = g.add(node("b"), &[a]);
+        let c = g.add(node("c"), &[a]);
+        let _d = g.add(node("d"), &[b, c]);
+        g
+    }
+
+    #[test]
+    fn topo_respects_edges() {
+        let g = diamond();
+        let order = g.topo_order();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; 4];
+            for (idx, &n) in order.iter().enumerate() {
+                p[n] = idx;
+            }
+            p
+        };
+        assert!(pos[0] < pos[1] && pos[0] < pos[2]);
+        assert!(pos[1] < pos[3] && pos[2] < pos[3]);
+    }
+
+    #[test]
+    fn sinks_found() {
+        let g = diamond();
+        assert_eq!(g.sinks(), vec![3]);
+    }
+
+    #[test]
+    fn critical_path_unit_costs() {
+        let g = diamond();
+        // longest chain a -> b/c -> d = 3 nodes
+        assert_eq!(g.critical_path(|_| 1.0), 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "dependency")]
+    fn forward_edges_only() {
+        let mut g = Dag::new();
+        let a = g.add(node("a"), &[]);
+        let _ = g.add(node("b"), &[a + 1]); // future dep: must panic
+    }
+}

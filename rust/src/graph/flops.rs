@@ -1,0 +1,75 @@
+//! FLOP/shape accounting for network layers (paper Fig 8 / Table III).
+//!
+//! Dense fwd:  2·bs·din·dout
+//! Dense bwd:  dx = 2·bs·dout·din, dw = 2·din·bs·dout  (two GEMMs)
+//! Conv fwd (im2col GEMM): m = bs·oh·ow, k = kh·kw·cin, n = cout
+//! Adam update: ~10 ops per weight element.
+
+/// im2col GEMM dims of a VALID conv: returns (m, k, n, oh, ow).
+pub fn conv_gemm_dims(
+    bs: usize,
+    in_h: usize,
+    in_w: usize,
+    cin: usize,
+    cout: usize,
+    ksize: usize,
+    stride: usize,
+) -> (usize, usize, usize, usize, usize) {
+    assert!(in_h >= ksize && in_w >= ksize, "conv kernel larger than input");
+    let oh = (in_h - ksize) / stride + 1;
+    let ow = (in_w - ksize) / stride + 1;
+    (bs * oh * ow, ksize * ksize * cin, cout, oh, ow)
+}
+
+/// Forward FLOPs of a dense layer.
+pub fn dense_fwd_flops(bs: usize, din: usize, dout: usize) -> f64 {
+    2.0 * bs as f64 * din as f64 * dout as f64
+}
+
+/// Table III "Train FLOPs (Per Batch Size)" = fwd + bwd per batch element
+/// over all passes of the algorithm; helper for one dense layer
+/// (fwd + dx + dw = 3 GEMMs ≈ 6·din·dout per row).
+pub fn dense_train_flops_per_row(din: usize, dout: usize) -> f64 {
+    6.0 * din as f64 * dout as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nature_dqn_conv_dims() {
+        // Table III Breakout: 84x84x4 -Conv(32,8,4)-> 20x20x32
+        let (m, k, n, oh, ow) = conv_gemm_dims(32, 84, 84, 4, 32, 8, 4);
+        assert_eq!((oh, ow), (20, 20));
+        assert_eq!(m, 32 * 400);
+        assert_eq!(k, 8 * 8 * 4);
+        assert_eq!(n, 32);
+        // -Conv(64,4,2)-> 9x9x64
+        let (_, _, _, oh, ow) = conv_gemm_dims(32, 20, 20, 32, 64, 4, 2);
+        assert_eq!((oh, ow), (9, 9));
+        // -Conv(64,3,1)-> 7x7x64 -> flatten 3136
+        let (_, _, _, oh, ow) = conv_gemm_dims(32, 9, 9, 64, 64, 3, 1);
+        assert_eq!((oh, ow), (7, 7));
+        assert_eq!(7 * 7 * 64, 3136);
+    }
+
+    #[test]
+    fn dense_flops() {
+        assert_eq!(dense_fwd_flops(64, 4, 64), 2.0 * 64.0 * 4.0 * 64.0);
+        assert_eq!(dense_train_flops_per_row(4, 64), 6.0 * 4.0 * 64.0);
+    }
+
+    /// Table III sanity: CartPole DQN "Train FLOPs per batch size" is
+    /// 28.04K.  DQN does 2 forwards (online + target) + 1 backward
+    /// (≈ 2 fwd-equivalents): ≈ 4 × fwd-flops-per-row.
+    /// fwd/row = 2·(4·64 + 64·64 + 64·2) = 9.2K → ≈ 4× ≈ 36.9K; the
+    /// paper's 28.04K ≈ 3× (counting bwd as ≈1 fwd into the target-less
+    /// path).  We assert the same order of magnitude, not the exact
+    /// accounting convention.
+    #[test]
+    fn cartpole_flops_order_of_magnitude() {
+        let fwd: f64 = 2.0 * (4.0 * 64.0 + 64.0 * 64.0 + 64.0 * 2.0);
+        assert!((2.0 * fwd..5.0 * fwd).contains(&28_040.0));
+    }
+}

@@ -1,0 +1,108 @@
+//! Node (layer) types of the training-step CDFG.
+
+/// Which training phase a node belongs to (paper Fig 5 breakdown).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    Forward,
+    Loss,
+    Backward,
+    Update,
+}
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Forward => "forward",
+            Phase::Loss => "loss",
+            Phase::Backward => "backward",
+            Phase::Update => "update",
+        }
+    }
+}
+
+/// Computational shape of a layer node.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LayerKind {
+    /// GEMM: (m × k) · (k × n).  Dense layers, and conv layers via their
+    /// im2col GEMM shape (a conv *is* an MM node in the paper's taxonomy).
+    Mm { m: usize, k: usize, n: usize },
+    /// Elementwise non-MM op (activation, weight update, scaling...).
+    Elementwise { elems: usize },
+    /// Reduction non-MM op (loss, max over actions...).
+    Reduce { elems: usize },
+}
+
+impl LayerKind {
+    /// MM nodes are PL/AIE candidates; non-MM nodes are pinned to PL
+    /// (paper §IV-A: "Non-MM layers, being unsuitable for AIE
+    /// acceleration…are typically allocated to the PL").
+    pub fn is_mm(&self) -> bool {
+        matches!(self, LayerKind::Mm { .. })
+    }
+
+    /// Total arithmetic operations for this node.
+    pub fn flops(&self) -> f64 {
+        match *self {
+            LayerKind::Mm { m, k, n } => 2.0 * m as f64 * k as f64 * n as f64,
+            LayerKind::Elementwise { elems } => elems as f64,
+            LayerKind::Reduce { elems } => 2.0 * elems as f64,
+        }
+    }
+
+    /// Bytes touched assuming 2-byte operands (format multipliers are
+    /// applied by the profiling models).
+    pub fn bytes(&self, elem_bytes: usize) -> f64 {
+        let e = elem_bytes as f64;
+        match *self {
+            LayerKind::Mm { m, k, n } => {
+                (m * k + k * n + m * n) as f64 * e
+            }
+            LayerKind::Elementwise { elems } => 2.0 * elems as f64 * e,
+            LayerKind::Reduce { elems } => elems as f64 * e,
+        }
+    }
+}
+
+/// One node of the training CDFG.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: usize,
+    pub name: String,
+    pub phase: Phase,
+    pub kind: LayerKind,
+    /// Number of weight elements updated in place here (update nodes);
+    /// drives master-weight sync volume for the quantization overhead.
+    pub weight_elems: usize,
+    /// Output activation elements (payload of outgoing edges).
+    pub out_elems: usize,
+}
+
+impl Node {
+    pub fn flops(&self) -> f64 {
+        self.kind.flops()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mm_classification() {
+        assert!(LayerKind::Mm { m: 4, k: 4, n: 4 }.is_mm());
+        assert!(!LayerKind::Elementwise { elems: 10 }.is_mm());
+        assert!(!LayerKind::Reduce { elems: 10 }.is_mm());
+    }
+
+    #[test]
+    fn gemm_flops() {
+        let k = LayerKind::Mm { m: 64, k: 4, n: 64 };
+        assert_eq!(k.flops(), 2.0 * 64.0 * 4.0 * 64.0);
+    }
+
+    #[test]
+    fn bytes_scale_with_format() {
+        let k = LayerKind::Mm { m: 8, k: 8, n: 8 };
+        assert_eq!(k.bytes(4), 2.0 * k.bytes(2));
+    }
+}

@@ -1,0 +1,18 @@
+//! Layer-level CDFG of a DRL training step (paper §IV-A/§IV-B).
+//!
+//! The paper converts the C/C++ training loop through Clang/LLVM into a
+//! control-data-flow graph whose nodes are *network layers*; we build the
+//! same graph directly from the network + algorithm specification (the
+//! information content is identical — layer kinds, shapes and
+//! dependencies — without the C-frontend detour, which is not the
+//! contribution).  Nodes are classified MM vs non-MM exactly as §IV-A:
+//! MM layers may go to PL or AIE, non-MM layers are pinned to PL.
+
+pub mod builder;
+pub mod dag;
+pub mod flops;
+pub mod layer;
+
+pub use builder::{build_train_graph, Algo, NetSpec, TrainSpec};
+pub use dag::Dag;
+pub use layer::{LayerKind, Node, Phase};

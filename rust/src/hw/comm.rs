@@ -1,0 +1,111 @@
+//! Inter-component communication model (paper Fig 2 / §II-B).
+//!
+//! PS↔PL: 128-bit AXI interfaces in several coherency configurations —
+//! TAPCA (paper [13]) picks among them; see `profile::tapca`.
+//! PL↔AIE: PLIO streams in the interface tiles (PL-clock wide side,
+//! 1 GHz AIE side).  PS↔AIE traffic is routed through the PL (no direct
+//! path on Versal AI Edge).
+
+use crate::Micros;
+
+use super::component::Component;
+
+/// A directed transfer channel between two components.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Link {
+    PsPl,
+    PlAie,
+    /// PS→AIE is PS→PL→AIE (and vice versa); modeled as both hops.
+    PsAie,
+}
+
+impl Link {
+    pub fn between(a: Component, b: Component) -> Option<Link> {
+        use Component::*;
+        match (a, b) {
+            (PS, PL) | (PL, PS) => Some(Link::PsPl),
+            (PL, AIE) | (AIE, PL) => Some(Link::PlAie),
+            (PS, AIE) | (AIE, PS) => Some(Link::PsAie),
+            _ => None,
+        }
+    }
+}
+
+/// Latency + bandwidth per link.  Values are the full-coherency AXI
+/// numbers from the TAPCA paper scaled to VEK280 clocks, and PLIO
+/// aggregate bandwidth for the interface-tile count CHARM allocates.
+#[derive(Clone, Debug)]
+pub struct CommModel {
+    /// AXI PS↔PL: per-transfer latency (µs) + bandwidth (GB/s).
+    pub ps_pl_lat_us: Micros,
+    pub ps_pl_gbps: f64,
+    /// PLIO PL↔AIE.
+    pub pl_aie_lat_us: Micros,
+    pub pl_aie_gbps: f64,
+}
+
+impl CommModel {
+    /// Time to move `bytes` across `link`.
+    pub fn transfer_time(&self, link: Link, bytes: f64) -> Micros {
+        match link {
+            Link::PsPl => self.ps_pl_lat_us + bytes / (self.ps_pl_gbps * 1e9) * 1e6,
+            Link::PlAie => self.pl_aie_lat_us + bytes / (self.pl_aie_gbps * 1e9) * 1e6,
+            Link::PsAie => {
+                self.transfer_time(Link::PsPl, bytes) + self.transfer_time(Link::PlAie, bytes)
+            }
+        }
+    }
+
+    /// Edge cost between two (possibly equal) components.  Same-component
+    /// edges are free: the data stays in local memory.
+    pub fn edge_cost(&self, from: Component, to: Component, bytes: f64) -> Micros {
+        match Link::between(from, to) {
+            None => 0.0,
+            Some(link) => self.transfer_time(link, bytes),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::platform::vek280;
+
+    #[test]
+    fn same_component_free() {
+        let p = vek280();
+        assert_eq!(p.comm.edge_cost(Component::PL, Component::PL, 1e6), 0.0);
+    }
+
+    #[test]
+    fn ps_aie_is_two_hops() {
+        let p = vek280();
+        let direct =
+            p.comm.transfer_time(Link::PsPl, 4096.0) + p.comm.transfer_time(Link::PlAie, 4096.0);
+        assert!((p.comm.transfer_time(Link::PsAie, 4096.0) - direct).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_dominates_small_transfers() {
+        let p = vek280();
+        let t1 = p.comm.transfer_time(Link::PlAie, 64.0);
+        let t2 = p.comm.transfer_time(Link::PlAie, 128.0);
+        // Doubling tiny payloads barely changes the time (latency floor).
+        assert!((t2 - t1) / t1 < 0.05);
+    }
+
+    #[test]
+    fn bandwidth_dominates_large_transfers() {
+        let p = vek280();
+        let t1 = p.comm.transfer_time(Link::PlAie, 1e8);
+        let t2 = p.comm.transfer_time(Link::PlAie, 2e8);
+        assert!(t2 / t1 > 1.9);
+    }
+
+    #[test]
+    fn link_between() {
+        assert_eq!(Link::between(Component::PS, Component::PS), None);
+        assert_eq!(Link::between(Component::AIE, Component::PL), Some(Link::PlAie));
+        assert_eq!(Link::between(Component::PS, Component::AIE), Some(Link::PsAie));
+    }
+}

@@ -1,0 +1,186 @@
+//! Per-component compute model: PS (Cortex-A72), PL (FPGA fabric + DSP)
+//! and AIE-ML (AI engine array).
+
+use crate::Micros;
+
+/// The three Versal ACAP processing domains (paper Fig 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Component {
+    /// Processing System: dual-core Cortex-A72, FP32 only.
+    PS,
+    /// Programmable Logic: fabric + DSP engines, native FP16/FP32.
+    PL,
+    /// AI Engine-ML array: native BF16 (FP32 emulated, slow).
+    AIE,
+}
+
+impl Component {
+    pub const ALL: [Component; 3] = [Component::PS, Component::PL, Component::AIE];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Component::PS => "PS",
+            Component::PL => "PL",
+            Component::AIE => "AIE",
+        }
+    }
+
+    /// Native compute format under AP-DRL's hardware-aware quantization
+    /// (paper Alg. 1): PS=FP32, PL=FP16, AIE=BF16.
+    pub fn native_format(self) -> Format {
+        match self {
+            Component::PS => Format::Fp32,
+            Component::PL => Format::Fp16,
+            Component::AIE => Format::Bf16,
+        }
+    }
+}
+
+/// Numeric formats coordinated by AP-DRL (paper Table II / Fig 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Format {
+    Fp32,
+    Fp16,
+    Bf16,
+    /// FIXAR's 16-bit fixed point (baseline, paper §V-C).
+    Fx16,
+}
+
+impl Format {
+    pub fn bytes(self) -> usize {
+        match self {
+            Format::Fp32 => 4,
+            Format::Fp16 | Format::Bf16 | Format::Fx16 => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Format::Fp32 => "FP32",
+            Format::Fp16 => "FP16",
+            Format::Bf16 => "BF16",
+            Format::Fx16 => "FX16",
+        }
+    }
+}
+
+/// Static description of one processing unit.
+#[derive(Clone, Debug)]
+pub struct ComponentSpec {
+    pub component: Component,
+    /// Clock frequency in MHz (paper: PS≈1350, PL=245, AIE=1000).
+    pub clock_mhz: f64,
+    /// Kernel launch / graph initialization overhead in µs.  The paper's
+    /// Fig 6 attributes AIE's low-FLOPs loss entirely to this term.
+    pub init_us: Micros,
+    /// Peak MAC lanes at the native format (DSP slices on PL, vector
+    /// lanes across allocated tiles on AIE, NEON lanes on PS).
+    pub max_mac_lanes: usize,
+    /// Sustained fraction of peak after pipeline stalls/control (DSE
+    /// configs move *within* this envelope).
+    pub efficiency: f64,
+    /// Local memory bandwidth in GB/s feeding the datapath (BRAM/URAM on
+    /// PL, tile memory via PLIO on AIE, L2 on PS).
+    pub mem_gbps: f64,
+    /// Throughput multiplier per format relative to the native format.
+    pub fmt_fp32: f64,
+    pub fmt_fp16: f64,
+    pub fmt_bf16: f64,
+}
+
+impl ComponentSpec {
+    pub fn format_mult(&self, fmt: Format) -> f64 {
+        match fmt {
+            Format::Fp32 => self.fmt_fp32,
+            Format::Fp16 => self.fmt_fp16,
+            Format::Bf16 => self.fmt_bf16,
+            // Fixed point maps onto the fp16 datapath width on PL/DSP.
+            Format::Fx16 => self.fmt_fp16,
+        }
+    }
+
+    /// Time for a GEMM-shaped op: `flops` total, `bytes` moved, using
+    /// `lanes` MAC lanes (≤ max), `overlap` = dataflow pragma (compute
+    /// and memory pipelined vs serialized).
+    ///
+    /// t_compute = flops / (2 · lanes · f_clk · eff · fmt_mult)
+    /// t_mem     = bytes / BW
+    /// t         = init + (overlap ? max : sum)
+    pub fn gemm_time(
+        &self,
+        flops: f64,
+        bytes: f64,
+        lanes: usize,
+        fmt: Format,
+        overlap: bool,
+    ) -> Micros {
+        let lanes = lanes.min(self.max_mac_lanes).max(1) as f64;
+        let rate = 2.0 * lanes * self.clock_mhz * 1e6 * self.efficiency * self.format_mult(fmt);
+        let t_compute = flops / rate * 1e6;
+        let t_mem = bytes / (self.mem_gbps * 1e9) * 1e6;
+        let body = if overlap { t_compute.max(t_mem) } else { t_compute + t_mem };
+        self.init_us + body
+    }
+
+    /// Time for an elementwise (non-MM) op of `elems` elements — bound by
+    /// memory bandwidth plus a per-element ALU floor.
+    pub fn elementwise_time(&self, elems: f64, fmt: Format) -> Micros {
+        let bytes = elems * fmt.bytes() as f64 * 2.0; // read + write
+        let t_mem = bytes / (self.mem_gbps * 1e9) * 1e6;
+        let t_alu =
+            elems / (self.max_mac_lanes as f64 * self.clock_mhz * 1e6 * self.efficiency) * 1e6;
+        self.init_us + t_mem.max(t_alu)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::platform::vek280;
+
+    #[test]
+    fn native_formats_match_alg1() {
+        assert_eq!(Component::PS.native_format(), Format::Fp32);
+        assert_eq!(Component::PL.native_format(), Format::Fp16);
+        assert_eq!(Component::AIE.native_format(), Format::Bf16);
+    }
+
+    #[test]
+    fn format_bytes() {
+        assert_eq!(Format::Fp32.bytes(), 4);
+        assert_eq!(Format::Fp16.bytes(), 2);
+        assert_eq!(Format::Bf16.bytes(), 2);
+    }
+
+    #[test]
+    fn gemm_time_monotone_in_flops() {
+        let pl = vek280().spec(Component::PL).clone();
+        let t1 = pl.gemm_time(1e6, 1e4, 512, Format::Fp16, true);
+        let t2 = pl.gemm_time(1e8, 1e5, 512, Format::Fp16, true);
+        assert!(t2 > t1);
+    }
+
+    #[test]
+    fn overlap_never_slower() {
+        let pl = vek280().spec(Component::PL).clone();
+        let on = pl.gemm_time(1e7, 1e6, 256, Format::Fp16, true);
+        let off = pl.gemm_time(1e7, 1e6, 256, Format::Fp16, false);
+        assert!(on <= off);
+    }
+
+    #[test]
+    fn lanes_clamped_to_max() {
+        let pl = vek280().spec(Component::PL).clone();
+        let a = pl.gemm_time(1e8, 0.0, usize::MAX, Format::Fp16, true);
+        let b = pl.gemm_time(1e8, 0.0, pl.max_mac_lanes, Format::Fp16, true);
+        assert!((a - b).abs() < 1e-9);
+    }
+
+    #[test]
+    fn aie_bf16_faster_than_aie_fp32() {
+        let aie = vek280().spec(Component::AIE).clone();
+        let bf = aie.gemm_time(1e9, 1e6, 1024, Format::Bf16, true);
+        let fp = aie.gemm_time(1e9, 1e6, 1024, Format::Fp32, true);
+        assert!(fp > 2.0 * bf, "AIE fp32 must be ≫ slower (emulated): {fp} vs {bf}");
+    }
+}

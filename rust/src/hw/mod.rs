@@ -1,0 +1,19 @@
+//! Analytic Versal ACAP performance model — the substituted testbed
+//! (DESIGN.md §Substitutions).
+//!
+//! The paper evaluates on VEK280 *hardware emulation*; every claim in its
+//! evaluation is relative (who wins at which FLOPs, crossovers, speedup
+//! factors).  This module reproduces the ratio structure those claims
+//! depend on: per-component clocks, kernel-launch/initialization
+//! overheads, parallel datapath widths, format multipliers and link
+//! bandwidths, all taken from the paper's own constants (PL@245 MHz,
+//! AIE@1 GHz, FIXAR@164 MHz, dual Cortex-A72 PS, 1312 DSPs, 304 AIE-ML
+//! tiles) and Figures 4/6.
+
+pub mod comm;
+pub mod component;
+pub mod platform;
+
+pub use comm::{CommModel, Link};
+pub use component::{Component, ComponentSpec, Format};
+pub use platform::{fixar_platform, vek280, Platform};

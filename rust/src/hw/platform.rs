@@ -1,0 +1,178 @@
+//! Platform catalogue: the VEK280 board the paper evaluates on, plus the
+//! FIXAR baseline platform (CPU–FPGA @ 164 MHz, fixed point).
+
+use super::comm::CommModel;
+use super::component::{Component, ComponentSpec, Format};
+
+/// A complete modeled board: three component specs + communication model
+/// + total resource pools for the ILP's capacity constraints (Eq. 7).
+#[derive(Clone, Debug)]
+pub struct Platform {
+    pub name: &'static str,
+    pub ps: ComponentSpec,
+    pub pl: ComponentSpec,
+    pub aie: ComponentSpec,
+    pub comm: CommModel,
+    /// PL resource pool (DSP slices) — paper: 1312 on VEK280.
+    pub pl_dsp: usize,
+    /// PL LUT pool (K LUTs) — paper: 520.7K.
+    pub pl_kluts: f64,
+    /// PL on-chip memory in Mb — paper: 113.4 Mb.
+    pub pl_mem_mb: f64,
+    /// AIE-ML tile count — paper: 304.
+    pub aie_tiles: usize,
+    /// MAC lanes contributed per allocated AIE-ML tile (native format).
+    pub aie_lanes_per_tile: usize,
+}
+
+impl Platform {
+    pub fn spec(&self, c: Component) -> &ComponentSpec {
+        match c {
+            Component::PS => &self.ps,
+            Component::PL => &self.pl,
+            Component::AIE => &self.aie,
+        }
+    }
+}
+
+/// The VEK280 evaluation platform (paper §V-A: dual-core Cortex-A72 APU,
+/// 304 AIE-ML tiles, 1312 DSPs, 520.7K LUTs, 113.4 Mb PL memory; PL@245
+/// MHz, AIE@1 GHz).
+///
+/// Calibration notes (DESIGN.md §Substitutions):
+/// * AIE vs PL large-GEMM advantage ≈ clock ratio (1000/245 ≈ 4.08) at
+///   matched spatial width — paper §III-A observes "similar ratio of
+///   execution time between computation and memory access… inferior
+///   performance due to its lower clock frequency".
+/// * AIE kernel-launch overhead ≫ PL's — Fig 6's low-FLOPs regime.
+/// * AIE FP32 is emulated (×0.25) while BF16 is native — Table IV's
+///   2.98× large-net quantization speedup.
+/// * PL FP16 is native; FP32 halves DSP throughput (×0.5).
+pub fn vek280() -> Platform {
+    Platform {
+        name: "VEK280 (modeled)",
+        ps: ComponentSpec {
+            component: Component::PS,
+            clock_mhz: 1350.0,
+            init_us: 0.0, // host code, no kernel launch
+            max_mac_lanes: 8, // 2 cores × 4-wide NEON FMA
+            efficiency: 0.55,
+            mem_gbps: 12.0,
+            fmt_fp32: 1.0,
+            fmt_fp16: 1.0,  // NEON fp16 ≈ fp32 FMA rate on A72
+            fmt_bf16: 0.4,  // software-emulated bf16 on the PS
+        },
+        pl: ComponentSpec {
+            component: Component::PL,
+            clock_mhz: 245.0,
+            init_us: 9.0, // XRT kernel start, short (paper Fig 6)
+            max_mac_lanes: 1312, // one fp16 MAC per DSP58 slice
+            efficiency: 0.60,
+            mem_gbps: 85.0, // aggregated BRAM/URAM banks after partitioning
+            fmt_fp32: 0.5,  // fp32 MAC costs two DSP slices
+            fmt_fp16: 1.0,
+            fmt_bf16: 0.9, // fabric bf16: fp16 datapath + exponent fixup LUTs
+        },
+        aie: ComponentSpec {
+            component: Component::AIE,
+            clock_mhz: 1000.0,
+            init_us: 45.0, // per-kernel launch + stream reconfig (graph load amortized; Fig 6: dominant at low FLOPs)
+            max_mac_lanes: 1312, // matched spatial width at CHARM's GEMM mapping
+            efficiency: 0.60,
+            mem_gbps: 340.0, // aggregate PLIO + tile-local memory streams
+            fmt_fp32: 0.25,  // fp32 emulated over bf16 MACs
+            fmt_fp16: 0.5,   // fp16 converted to bf16 path with fixups
+            fmt_bf16: 1.0,   // native AIE-ML bf16
+        },
+        comm: CommModel {
+            ps_pl_lat_us: 1.2,  // AXI + cache-coherency round trip
+            ps_pl_gbps: 3.8,    // 128-bit AXI @ 245 MHz ≈ 3.9 GB/s
+            pl_aie_lat_us: 0.5, // PLIO stream setup
+            pl_aie_gbps: 7.6,   // two 64-bit PLIOs @ PL clock per stream group
+        },
+        pl_dsp: 1312,
+        pl_kluts: 520.7,
+        pl_mem_mb: 113.4,
+        aie_tiles: 304,
+        aie_lanes_per_tile: 4, // lanes the CHARM mapping sustains per tile (≈ PL width at 304 tiles)
+    }
+}
+
+/// FIXAR (paper [27], §V-C baseline): CPU–FPGA platform at 164 MHz with
+/// 16-bit fixed-point quantization-aware training and adaptive
+/// parallelism.  Modeled as a PL-like fabric at the lower clock with the
+/// fx16 (→fp16-width) datapath, plus the host CPU.
+pub fn fixar_platform() -> Platform {
+    let mut p = vek280();
+    p.name = "FIXAR (modeled, CPU-FPGA @164 MHz)";
+    p.pl.clock_mhz = 164.0;
+    p.pl.init_us = 7.0;
+    // FIXAR's adaptive parallelism keeps the fabric well utilized.
+    p.pl.efficiency = 0.65;
+    // AIE does not exist on FIXAR's platform; keep the spec but the
+    // baseline scheduler never assigns nodes to it.
+    p.aie.max_mac_lanes = 0;
+    p
+}
+
+/// Format choice helpers shared by baselines.
+pub fn fixar_format() -> Format {
+    Format::Fx16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper §III-A: at high FLOPs the optimized PL and AIE differ mainly
+    /// by clock; at low FLOPs AIE loses on launch overhead (Fig 6).
+    #[test]
+    fn crossover_between_pl_and_aie() {
+        let p = vek280();
+        // Small GEMM (64³): PL must win.
+        let flops_small = 2.0 * 64f64.powi(3);
+        let bytes_small = 3.0 * 64.0 * 64.0 * 2.0;
+        let t_pl =
+            p.pl.gemm_time(flops_small, bytes_small, 1312, Format::Fp16, true);
+        let t_aie =
+            p.aie.gemm_time(flops_small, bytes_small, 1312, Format::Bf16, true);
+        assert!(t_pl < t_aie, "low FLOPs: PL {t_pl} should beat AIE {t_aie}");
+
+        // Large GEMM (2048³): AIE must win by roughly the clock ratio.
+        let flops_big = 2.0 * 2048f64.powi(3);
+        let bytes_big = 3.0 * 2048.0 * 2048.0 * 2.0;
+        let t_pl = p.pl.gemm_time(flops_big, bytes_big, 1312, Format::Fp16, true);
+        let t_aie = p.aie.gemm_time(flops_big, bytes_big, 1312, Format::Bf16, true);
+        let ratio = t_pl / t_aie;
+        assert!(
+            (2.5..6.0).contains(&ratio),
+            "high FLOPs: AIE advantage should be ≈ clock ratio, got {ratio}"
+        );
+    }
+
+    #[test]
+    fn ps_slower_than_pl_for_gemm() {
+        let p = vek280();
+        let flops = 2.0 * 256f64.powi(3);
+        let bytes = 3.0 * 256.0 * 256.0 * 4.0;
+        let t_ps = p.ps.gemm_time(flops, bytes, usize::MAX, Format::Fp32, false);
+        let t_pl = p.pl.gemm_time(flops, bytes, 1312, Format::Fp32, true);
+        assert!(t_ps > t_pl);
+    }
+
+    #[test]
+    fn fixar_slower_clock() {
+        let f = fixar_platform();
+        assert!((f.pl.clock_mhz - 164.0).abs() < 1e-9);
+        assert_eq!(f.aie.max_mac_lanes, 0);
+    }
+
+    #[test]
+    fn resource_pools_match_table() {
+        let p = vek280();
+        assert_eq!(p.pl_dsp, 1312);
+        assert_eq!(p.aie_tiles, 304);
+        assert!((p.pl_kluts - 520.7).abs() < 1e-9);
+        assert!((p.pl_mem_mb - 113.4).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,36 @@
+//! # AP-DRL — automatic task partitioning + hardware-aware quantization
+//! for DRL training on a modeled AMD Versal ACAP.
+//!
+//! Reproduction of *"AP-DRL: A Synergistic Algorithm-Hardware Framework for
+//! Automatic Task Partitioning of Deep Reinforcement Learning on Versal
+//! ACAP"* as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: Versal ACAP performance model
+//!   ([`hw`]), layer-level CDFG of the DRL training step ([`graph`]),
+//!   DSE-based profiling ([`profile`]), ILP partitioning ([`partition`]),
+//!   the hardware-aware quantization state machine ([`quant`]), the DRL
+//!   runtime (environments [`envs`], agents [`drl`]) and the experiment
+//!   coordinator ([`coordinator`]).
+//! * **L2/L1 (python/, build time only)** — JAX train/act steps calling
+//!   Pallas mixed-precision GEMM kernels, AOT-lowered to
+//!   `artifacts/*.hlo.txt` and executed from rust via PJRT ([`runtime`]).
+//!
+//! The real VEK280 testbed is substituted by an analytic performance model
+//! calibrated to the paper's reported constants (see DESIGN.md
+//! §Substitutions); numerics (quantization, convergence) are real and run
+//! through the PJRT artifacts.
+
+pub mod coordinator;
+pub mod drl;
+pub mod envs;
+pub mod graph;
+pub mod hw;
+pub mod partition;
+pub mod profile;
+pub mod quant;
+pub mod runtime;
+pub mod util;
+
+/// Microseconds — every latency in the analytic hardware model uses this
+/// unit (the paper's Figs 4/6 span ns..ms; µs keeps f64 comfortable).
+pub type Micros = f64;

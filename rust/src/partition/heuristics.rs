@@ -1,0 +1,186 @@
+//! Heuristic partitioners: the greedy baseline and HEFT list scheduling.
+//! Used (a) to seed the B&B incumbent, (b) as ablation baselines for the
+//! partition-quality bench (DESIGN.md §3).
+
+use crate::hw::Component;
+use crate::Micros;
+
+use super::model::{Assignment, Placement, Problem, Solution};
+use super::schedule::evaluate;
+
+/// Greedy: every node takes its standalone-fastest feasible placement
+/// (ignores parallelism and communication entirely).
+pub fn greedy(problem: &Problem) -> Solution {
+    let n = problem.dag.len();
+    let mut assignment: Assignment = Vec::with_capacity(n);
+    for i in 0..n {
+        // Shared-accelerator semantics: every candidate fits the pools
+        // by construction, so greedy is the pure standalone argmin.
+        let best = problem
+            .options(i)
+            .into_iter()
+            .min_by(|a, b| {
+                problem.latency(i, *a).partial_cmp(&problem.latency(i, *b)).unwrap()
+            })
+            .expect("every node has a PL candidate");
+        assignment.push(best);
+    }
+    let sched = evaluate(problem, &assignment);
+    Solution { assignment, makespan_us: sched.makespan_us, explored: n }
+}
+
+/// HEFT: nodes in descending upward rank; each placed on the component
+/// minimizing its earliest finish time under the incremental schedule.
+pub fn heft(problem: &Problem) -> Solution {
+    let dag = problem.dag;
+    let n = dag.len();
+
+    // Best-case latency per node for ranking (classic HEFT uses the mean
+    // across processors, but our candidate sets include deliberately
+    // tiny configs whose latencies would swamp the mean).
+    let mean_lat: Vec<Micros> = (0..n).map(|i| problem.min_latency(i)).collect();
+
+    // Upward rank: rank(i) = mean_lat(i) + max_{s ∈ succ} rank(s).
+    let order = dag.topo_order();
+    let mut rank = vec![0.0f64; n];
+    for &i in order.iter().rev() {
+        let succ_max =
+            dag.succs[i].iter().map(|&s| rank[s]).fold(0.0, f64::max);
+        rank[i] = mean_lat[i] + succ_max;
+    }
+    let mut by_rank: Vec<usize> = (0..n).collect();
+    by_rank.sort_by(|&a, &b| rank[b].partial_cmp(&rank[a]).unwrap());
+
+    // Incremental placement honoring precedence (process by rank, which
+    // is a valid topological order for HEFT since rank(parent) >
+    // rank(child) when latencies are positive).
+    let mut finish = vec![0.0f64; n];
+    let mut free: [Micros; 3] = [0.0; 3];
+    let comp_idx = |c: Component| match c {
+        Component::PS => 0,
+        Component::PL => 1,
+        Component::AIE => 2,
+    };
+    let mut assignment: Assignment =
+        vec![Placement { component: Component::PL, candidate: 0 }; n];
+    for &i in &by_rank {
+        let mut best: Option<(Micros, Placement, Micros)> = None; // (eft, placement, start)
+        for p in problem.options(i) {
+            let mut ready = 0.0f64;
+            for &pr in &dag.preds[i] {
+                let bytes = dag.nodes[pr].out_elems as f64 * 2.0;
+                let comm = problem.platform.comm.edge_cost(
+                    assignment[pr].component,
+                    p.component,
+                    bytes,
+                );
+                ready = ready.max(finish[pr] + comm);
+            }
+            let start = ready.max(free[comp_idx(p.component)]);
+            let eft = start + problem.latency(i, p);
+            if best.as_ref().map_or(true, |(b, _, _)| eft < *b) {
+                best = Some((eft, p, start));
+            }
+        }
+        let (eft, p, _start) = best.expect("every node has at least one candidate");
+        assignment[i] = p;
+        finish[i] = eft;
+        free[comp_idx(p.component)] = eft;
+    }
+    let sched = evaluate(problem, &assignment);
+    Solution { assignment, makespan_us: sched.makespan_us, explored: n }
+}
+
+/// Hill-climbing refinement: repeatedly try every alternative placement
+/// for every node (others fixed), keep any feasible improvement, until a
+/// full sweep yields none.  Polishes HEFT seeds and capped-B&B incumbents
+/// — a cheap stand-in for the ILP solver's final gap-closing on graphs
+/// too large for exact search.
+pub fn local_search(problem: &Problem, start: Solution) -> Solution {
+    let n = problem.dag.len();
+    let mut best = start;
+    let mut improved = true;
+    let mut explored = best.explored;
+    while improved {
+        improved = false;
+        for i in 0..n {
+            let current = best.assignment[i];
+            for p in problem.options(i) {
+                if p == current {
+                    continue;
+                }
+                let mut trial = best.assignment.clone();
+                trial[i] = p;
+                if !problem.feasible(&trial) {
+                    continue;
+                }
+                explored += 1;
+                let m = evaluate(problem, &trial).makespan_us;
+                if m + 1e-9 < best.makespan_us {
+                    best = Solution { assignment: trial, makespan_us: m, explored };
+                    improved = true;
+                }
+            }
+        }
+    }
+    best.explored = explored;
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{build_train_graph, Algo, NetSpec, TrainSpec};
+    use crate::hw::vek280;
+    use crate::profile::profile_dag;
+
+    fn make(
+        sizes: &[usize],
+        batch: usize,
+    ) -> (crate::graph::Dag, Vec<crate::profile::NodeProfile>, crate::hw::Platform) {
+        let spec = TrainSpec {
+            algo: Algo::Ddpg,
+            net: NetSpec::mlp(sizes),
+            batch,
+            obs_dim: sizes[0],
+            act_dim: *sizes.last().unwrap(),
+        };
+        let dag = build_train_graph(&spec);
+        let platform = vek280();
+        let profs = profile_dag(&dag, &platform, true);
+        (dag, profs, platform)
+    }
+
+    #[test]
+    fn both_heuristics_feasible() {
+        let (dag, profs, platform) = make(&[8, 400, 300, 2], 256);
+        let problem = Problem::new(&dag, &profs, &platform, true);
+        for sol in [greedy(&problem), heft(&problem)] {
+            assert!(problem.feasible(&sol.assignment));
+            assert!(sol.makespan_us.is_finite() && sol.makespan_us > 0.0);
+        }
+    }
+
+    #[test]
+    fn heft_no_worse_than_greedy_on_ddpg() {
+        // Not a theorem, but holds on the paper's workloads (HEFT models
+        // parallelism + comm; greedy does not).
+        let (dag, profs, platform) = make(&[8, 400, 300, 2], 1024);
+        let problem = Problem::new(&dag, &profs, &platform, true);
+        let g = greedy(&problem);
+        let h = heft(&problem);
+        assert!(h.makespan_us <= g.makespan_us * 1.5, "HEFT {} vs greedy {}", h.makespan_us, g.makespan_us);
+    }
+
+    #[test]
+    fn rank_order_respects_dependencies() {
+        // Implicit check: heft() panics/asserts nothing and the schedule
+        // evaluator validates via its own dependency test elsewhere; here
+        // assert determinism.
+        let (dag, profs, platform) = make(&[4, 64, 64, 1], 64);
+        let problem = Problem::new(&dag, &profs, &platform, true);
+        let a = heft(&problem);
+        let b = heft(&problem);
+        assert_eq!(a.assignment, b.assignment);
+    }
+}

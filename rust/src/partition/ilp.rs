@@ -1,0 +1,277 @@
+//! Exact branch-and-bound solver for the partitioning ILP (Eq. 2–7).
+//!
+//! Variables: for every node, one placement among its DSE candidates
+//! (x_ijc with Σ = 1, Eq. 4); non-MM nodes only have PL candidates
+//! (§IV-A pinning).  Objective: the schedule evaluator's makespan
+//! (Eq. 3/5/6 with explicit communication); constraint: Eq. 7 resource
+//! capacities.
+//!
+//! Bounding: a node-order by descending FLOPs; at each partial
+//! assignment, prune when
+//!   LB = critical-path(assigned latencies ∪ min latencies) ≥ best,
+//! or when the remaining minimum resource demand cannot fit.  For
+//! paper-scale DAGs (≤ ~40 nodes, ≤ 6 options each) this closes in
+//! milliseconds; `max_explored` caps pathological cases and falls back
+//! to HEFT (never triggered by the Table III workloads — asserted in
+//! benches).
+
+use crate::Micros;
+
+use super::heuristics::heft;
+use super::model::{Assignment, Placement, Problem, Solution};
+use super::schedule::evaluate;
+
+/// Exploration cap before falling back to HEFT.
+const DEFAULT_MAX_EXPLORED: usize = 300_000;
+
+pub fn solve_ilp(problem: &Problem) -> Solution {
+    solve_ilp_capped(problem, DEFAULT_MAX_EXPLORED)
+}
+
+pub fn solve_ilp_capped(problem: &Problem, max_explored: usize) -> Solution {
+    let n = problem.dag.len();
+    // Branch order: MM nodes by descending FLOPs first (they decide the
+    // makespan), then non-MM nodes (PL-pinned, only config choice).
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        let (ma, mb) = (problem.dag.nodes[a].kind.is_mm(), problem.dag.nodes[b].kind.is_mm());
+        mb.cmp(&ma).then(
+            problem.dag.nodes[b]
+                .flops()
+                .partial_cmp(&problem.dag.nodes[a].flops())
+                .unwrap(),
+        )
+    });
+
+    // Seed incumbent with HEFT — gives the B&B a strong initial bound.
+    let seed = heft(problem);
+    let best_assignment = seed.assignment.clone();
+    let best_makespan = seed.makespan_us;
+
+    // Precompute per-node options and min latencies.  Under the
+    // shared-accelerator semantics every candidate fits the resource
+    // pools by construction (profiler filters), so capacity never prunes
+    // and the search is the paper's pure binary x_ij.
+    let options: Vec<Vec<Placement>> = (0..n).map(|i| problem.options(i)).collect();
+    let min_lat: Vec<Micros> = (0..n).map(|i| problem.min_latency(i)).collect();
+
+    struct Ctx<'p, 'a> {
+        problem: &'p Problem<'a>,
+        order: Vec<usize>,
+        options: Vec<Vec<Placement>>,
+        min_lat: Vec<Micros>,
+        explored: usize,
+        max_explored: usize,
+        best_makespan: Micros,
+        best_assignment: Assignment,
+        aborted: bool,
+    }
+
+    impl<'p, 'a> Ctx<'p, 'a> {
+        /// Critical-path lower bound with assigned latencies where fixed.
+        fn lower_bound(&self, assignment: &[Option<Placement>]) -> Micros {
+            self.problem.dag.critical_path(|i| match assignment[i] {
+                Some(p) => self.problem.latency(i, p),
+                None => self.min_lat[i],
+            })
+        }
+
+        fn dfs(&mut self, depth: usize, assignment: &mut Vec<Option<Placement>>) {
+            if self.aborted {
+                return;
+            }
+            self.explored += 1;
+            if self.explored > self.max_explored {
+                self.aborted = true;
+                return;
+            }
+            if depth == self.order.len() {
+                let full: Assignment = assignment.iter().map(|p| p.unwrap()).collect();
+                let sched = evaluate(self.problem, &full);
+                if sched.makespan_us < self.best_makespan {
+                    self.best_makespan = sched.makespan_us;
+                    self.best_assignment = full;
+                }
+                return;
+            }
+            if self.lower_bound(assignment) >= self.best_makespan {
+                return;
+            }
+            let node = self.order[depth];
+            // Sort options by latency so good solutions are found early.
+            let mut opts = self.options[node].clone();
+            opts.sort_by(|a, b| {
+                self.problem
+                    .latency(node, *a)
+                    .partial_cmp(&self.problem.latency(node, *b))
+                    .unwrap()
+            });
+            for p in opts {
+                assignment[node] = Some(p);
+                self.dfs(depth + 1, assignment);
+                assignment[node] = None;
+            }
+        }
+    }
+
+    let mut ctx = Ctx {
+        problem,
+        order,
+        options,
+        min_lat,
+        explored: 0,
+        max_explored,
+        best_makespan,
+        best_assignment,
+        aborted: false,
+    };
+    let mut assignment: Vec<Option<Placement>> = vec![None; n];
+    ctx.dfs(0, &mut assignment);
+
+    let incumbent = Solution {
+        assignment: ctx.best_assignment,
+        makespan_us: ctx.best_makespan,
+        explored: ctx.explored,
+    };
+    if ctx.aborted {
+        // Search was capped: polish the incumbent with local search so
+        // large graphs still end near-optimal (B&B alone may be stuck at
+        // the HEFT seed).
+        super::heuristics::local_search(problem, incumbent)
+    } else {
+        incumbent
+    }
+}
+
+/// Exhaustive enumeration (tests only — cross-checks B&B optimality).
+pub fn solve_exhaustive(problem: &Problem) -> Solution {
+    let n = problem.dag.len();
+    let options: Vec<Vec<Placement>> = (0..n).map(|i| problem.options(i)).collect();
+    let mut best: Option<(Micros, Assignment)> = None;
+    let mut counter = vec![0usize; n];
+    let mut explored = 0usize;
+    loop {
+        let assignment: Assignment =
+            (0..n).map(|i| options[i][counter[i]]).collect();
+        if problem.feasible(&assignment) {
+            explored += 1;
+            let m = evaluate(problem, &assignment).makespan_us;
+            if best.as_ref().map_or(true, |(bm, _)| m < *bm) {
+                best = Some((m, assignment));
+            }
+        }
+        // increment mixed-radix counter
+        let mut i = 0;
+        loop {
+            if i == n {
+                let (m, a) = best.expect("no feasible assignment");
+                return Solution { assignment: a, makespan_us: m, explored };
+            }
+            counter[i] += 1;
+            if counter[i] < options[i].len() {
+                break;
+            }
+            counter[i] = 0;
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{build_train_graph, Algo, NetSpec, TrainSpec};
+    use crate::hw::vek280;
+    use crate::profile::profile_dag;
+
+    fn problem_for(
+        sizes: &[usize],
+        batch: usize,
+    ) -> (crate::graph::Dag, Vec<crate::profile::NodeProfile>, crate::hw::Platform) {
+        let spec = TrainSpec {
+            algo: Algo::Dqn,
+            net: NetSpec::mlp(sizes),
+            batch,
+            obs_dim: sizes[0],
+            act_dim: *sizes.last().unwrap(),
+        };
+        let dag = build_train_graph(&spec);
+        let platform = vek280();
+        let profs = profile_dag(&dag, &platform, true);
+        (dag, profs, platform)
+    }
+
+    #[test]
+    fn bnb_matches_exhaustive_small() {
+        // 2-layer MLP → small DAG, exhaustive is feasible.
+        let (dag, profs, platform) = problem_for(&[4, 8, 2], 16);
+        let problem = Problem::new(&dag, &profs, &platform, true);
+        let bnb = solve_ilp(&problem);
+        let exact = solve_exhaustive(&problem);
+        assert!(
+            (bnb.makespan_us - exact.makespan_us).abs() < 1e-6,
+            "B&B {} vs exhaustive {}",
+            bnb.makespan_us,
+            exact.makespan_us
+        );
+    }
+
+    #[test]
+    fn bnb_never_worse_than_heft() {
+        for &(h, bs) in &[(64usize, 64usize), (400, 256), (400, 1024)] {
+            let (dag, profs, platform) = problem_for(&[8, h, h, 2], bs);
+            let problem = Problem::new(&dag, &profs, &platform, true);
+            let bnb = solve_ilp(&problem);
+            let h_sol = super::super::heuristics::heft(&problem);
+            assert!(
+                bnb.makespan_us <= h_sol.makespan_us + 1e-6,
+                "B&B {} worse than HEFT {}",
+                bnb.makespan_us,
+                h_sol.makespan_us
+            );
+        }
+    }
+
+    #[test]
+    fn solution_is_feasible() {
+        let (dag, profs, platform) = problem_for(&[8, 400, 300, 2], 512);
+        let problem = Problem::new(&dag, &profs, &platform, true);
+        let sol = solve_ilp(&problem);
+        assert!(problem.feasible(&sol.assignment));
+        assert_eq!(sol.assignment.len(), dag.len());
+    }
+
+    #[test]
+    fn small_net_prefers_pl_large_prefers_aie() {
+        // Fig 15 / §V-C: low-FLOPs nets stay on the PL; high-FLOPs MM
+        // nodes migrate to the AIE.
+        let (dag_s, profs_s, platform) = problem_for(&[4, 64, 64, 2], 64);
+        let p_s = Problem::new(&dag_s, &profs_s, &platform, true);
+        let sol_s = solve_ilp(&p_s);
+        assert_eq!(sol_s.aie_nodes(&dag_s), 0, "tiny net should be all-PL");
+
+        let (dag_l, profs_l, platform2) = problem_for(&[8, 4096, 3072, 2], 1024);
+        let p_l = Problem::new(&dag_l, &profs_l, &platform2, true);
+        let sol_l = solve_ilp(&p_l);
+        assert!(
+            sol_l.aie_nodes(&dag_l) >= 4,
+            "big net should use the AIE, got {}",
+            sol_l.aie_nodes(&dag_l)
+        );
+    }
+
+    #[test]
+    fn batch_size_monotonicity() {
+        // Fig 15: more AIE nodes as batch size grows.
+        let mut prev = 0usize;
+        for &bs in &[64usize, 256, 1024] {
+            let (dag, profs, platform) = problem_for(&[8, 400, 300, 2], bs);
+            let problem = Problem::new(&dag, &profs, &platform, true);
+            let sol = solve_ilp(&problem);
+            let aie = sol.aie_nodes(&dag);
+            assert!(aie >= prev, "AIE nodes decreased: {prev} -> {aie} at bs={bs}");
+            prev = aie;
+        }
+        assert!(prev > 0, "largest batch should use the AIE");
+    }
+}

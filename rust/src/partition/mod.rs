@@ -1,0 +1,21 @@
+//! ILP-based automatic task partitioning (paper §IV-C, Eq. 2–7).
+//!
+//! Decision: for every MM layer node, PL or AIE (non-MM nodes are pinned
+//! to PL, §IV-A) *and* which DSE candidate config to use, minimizing the
+//! training-step makespan under dependency (Eq. 5), completion (Eq. 3/6)
+//! and resource-capacity (Eq. 7) constraints, with inter-component
+//! communication charged on cut edges and master-weight sync charged by
+//! the quantization policy.
+//!
+//! Solvers: exact branch-and-bound ([`ilp`]) with optimality
+//! cross-checked against exhaustive enumeration in tests, plus greedy and
+//! HEFT baselines ([`heuristics`]) used for the ablation benches.
+
+pub mod heuristics;
+pub mod ilp;
+pub mod model;
+pub mod schedule;
+
+pub use ilp::solve_ilp;
+pub use model::{Assignment, Placement, Problem, Solution};
+pub use schedule::{evaluate, ScheduleEntry};

@@ -1,0 +1,134 @@
+//! Problem/solution types for the partitioning ILP.
+
+use crate::graph::Dag;
+use crate::hw::{Component, Platform};
+use crate::profile::NodeProfile;
+use crate::Micros;
+
+/// Where one node runs: component + index into that component's DSE
+/// candidate list.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Placement {
+    pub component: Component,
+    pub candidate: usize,
+}
+
+/// Full assignment: one placement per DAG node.
+pub type Assignment = Vec<Placement>;
+
+/// A partitioning problem instance.
+pub struct Problem<'a> {
+    pub dag: &'a Dag,
+    pub profiles: &'a [NodeProfile],
+    pub platform: &'a Platform,
+    /// AP-DRL quantized mode: PL nodes pay master-weight sync (Table IV).
+    pub quantized: bool,
+}
+
+impl<'a> Problem<'a> {
+    pub fn new(
+        dag: &'a Dag,
+        profiles: &'a [NodeProfile],
+        platform: &'a Platform,
+        quantized: bool,
+    ) -> Self {
+        assert_eq!(dag.len(), profiles.len());
+        Problem { dag, profiles, platform, quantized }
+    }
+
+    /// Latency of `node` under `placement`.
+    pub fn latency(&self, node: usize, p: Placement) -> Micros {
+        let prof = &self.profiles[node];
+        match p.component {
+            Component::PL => prof.pl[p.candidate].latency_us,
+            Component::AIE => prof.aie[p.candidate].latency_us,
+            Component::PS => prof.ps_latency_us,
+        }
+    }
+
+    /// Resource draw of `node` under `placement` (DSPs or tiles).
+    pub fn resource(&self, node: usize, p: Placement) -> usize {
+        let prof = &self.profiles[node];
+        match p.component {
+            Component::PL => prof.pl[p.candidate].resource,
+            Component::AIE => prof.aie[p.candidate].resource,
+            Component::PS => 0,
+        }
+    }
+
+    /// kLUT draw of `node` under `placement` (AIE kernels still consume
+    /// PL-side data-mover LUTs — CHARM).
+    pub fn kluts(&self, node: usize, p: Placement) -> f64 {
+        let prof = &self.profiles[node];
+        match p.component {
+            Component::PL => prof.pl[p.candidate].kluts,
+            Component::AIE => prof.aie[p.candidate].kluts,
+            Component::PS => 0.0,
+        }
+    }
+
+    /// All placements available for `node` (PL candidates, then AIE).
+    pub fn options(&self, node: usize) -> Vec<Placement> {
+        let prof = &self.profiles[node];
+        let mut out: Vec<Placement> = (0..prof.pl.len())
+            .map(|c| Placement { component: Component::PL, candidate: c })
+            .collect();
+        out.extend(
+            (0..prof.aie.len()).map(|c| Placement { component: Component::AIE, candidate: c }),
+        );
+        out
+    }
+
+    /// Minimum possible latency of `node` over all placements.
+    pub fn min_latency(&self, node: usize) -> Micros {
+        self.options(node)
+            .into_iter()
+            .map(|p| self.latency(node, p))
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Check Eq. 7 capacity feasibility of a full assignment under the
+    /// shared-accelerator semantics: the PL engine must be as wide as the
+    /// widest PL node config, the AIE allocation as large as the largest
+    /// tile request (see `profile::profile_dag`).
+    pub fn feasible(&self, assignment: &Assignment) -> bool {
+        let (mut dsp, mut tiles) = (0usize, 0usize);
+        let mut kluts = 0.0f64;
+        for (i, p) in assignment.iter().enumerate() {
+            let prof = &self.profiles[i];
+            match p.component {
+                Component::PL => {
+                    dsp = dsp.max(prof.pl[p.candidate].resource);
+                    kluts = kluts.max(prof.pl[p.candidate].kluts);
+                }
+                Component::AIE => {
+                    tiles = tiles.max(prof.aie[p.candidate].resource);
+                }
+                Component::PS => {}
+            }
+        }
+        dsp <= self.platform.pl_dsp
+            && tiles <= self.platform.aie_tiles
+            && kluts <= self.platform.pl_kluts
+    }
+}
+
+/// Solver output.
+#[derive(Clone, Debug)]
+pub struct Solution {
+    pub assignment: Assignment,
+    pub makespan_us: Micros,
+    /// Nodes the solver explored (B&B statistics for the ablation bench).
+    pub explored: usize,
+}
+
+impl Solution {
+    /// Count of MM nodes assigned to AIE (Fig 15's reported quantity).
+    pub fn aie_nodes(&self, dag: &Dag) -> usize {
+        self.assignment
+            .iter()
+            .enumerate()
+            .filter(|(i, p)| dag.nodes[*i].kind.is_mm() && p.component == Component::AIE)
+            .count()
+    }
+}

@@ -1,0 +1,129 @@
+//! CHARM-substitute: analytic model for MM nodes on the AIE-ML array.
+//!
+//! CHARM's design space is the tile allocation + the PL-side data movers;
+//! the model exposes tile count as the knob and charges the (large)
+//! kernel-launch/graph-initialization overhead the paper's Fig 6
+//! identifies as the low-FLOPs bottleneck.  BF16 support added per paper
+//! §IV-B ("We add the BF16 support in CHARM").
+
+use crate::graph::layer::LayerKind;
+use crate::hw::{ComponentSpec, Format};
+use crate::Micros;
+
+/// One AIE mapping: how many AIE-ML tiles the node occupies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct AieConfig {
+    pub tiles: usize,
+    /// MAC lanes each tile sustains for this mapping.
+    pub lanes_per_tile: usize,
+}
+
+impl AieConfig {
+    pub fn lanes(&self) -> usize {
+        (self.tiles * self.lanes_per_tile).max(1)
+    }
+
+    /// Latency of an MM or weight-update (elementwise) node on the
+    /// allocated tiles.  Activation non-MM nodes are not AIE candidates
+    /// (paper §IV-A pins them to the PL), but AIE-resident layers update
+    /// their weights *on the AIE in BF16* (paper Alg. 1), so elementwise
+    /// shapes are supported via the vector datapath.
+    pub fn latency(&self, spec: &ComponentSpec, kind: &LayerKind, fmt: Format) -> Micros {
+        if let LayerKind::Elementwise { elems } | LayerKind::Reduce { elems } = *kind {
+            let usable = (self.lanes() as f64).min(elems as f64);
+            let rate = usable * spec.clock_mhz * 1e6 * spec.efficiency * spec.format_mult(fmt);
+            let t_compute = elems as f64 / rate * 1e6;
+            let bytes = kind.bytes(fmt.bytes());
+            let frac = (self.tiles as f64 / 304.0).min(1.0);
+            let bw = spec.mem_gbps * (0.25 + 0.75 * frac);
+            let t_mem = bytes / (bw * 1e9) * 1e6;
+            return spec.init_us + t_compute.max(t_mem);
+        }
+        let LayerKind::Mm { m, k, n } = *kind else { unreachable!() };
+        let macs = m as f64 * k as f64 * n as f64;
+        // Output-stationary spatial mapping: usable lanes bounded by the
+        // output tile parallelism, like the PL model.
+        let usable = (self.lanes() as f64).min((m * n) as f64);
+        let rate = usable * spec.clock_mhz * 1e6 * spec.efficiency * spec.format_mult(fmt);
+        let t_compute = macs / rate * 1e6;
+        // PLIO bandwidth grows with interface share until the array-wide
+        // aggregate saturates.
+        let frac = (self.tiles as f64 / 304.0).min(1.0);
+        let bw = spec.mem_gbps * (0.25 + 0.75 * frac);
+        let bytes = kind.bytes(fmt.bytes());
+        let t_mem = bytes / (bw * 1e9) * 1e6;
+        // AIE graphs always stream (double-buffered tile memory):
+        // compute/memory overlap, plus the big launch overhead.
+        spec.init_us + t_compute.max(t_mem)
+    }
+}
+
+/// Tile-allocation candidates CHARM would sweep for one node.
+pub fn tile_candidates(max_tiles: usize) -> Vec<usize> {
+    let mut v = Vec::new();
+    let mut t = 4;
+    while t <= max_tiles {
+        v.push(t);
+        t *= 2;
+    }
+    if v.last() != Some(&max_tiles) && max_tiles >= 4 {
+        v.push(max_tiles);
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::{vek280, Component};
+
+    fn spec() -> ComponentSpec {
+        vek280().spec(Component::AIE).clone()
+    }
+
+    #[test]
+    fn more_tiles_faster_on_big_gemm() {
+        let kind = LayerKind::Mm { m: 1024, k: 1024, n: 1024 };
+        let small = AieConfig { tiles: 8, lanes_per_tile: 8 };
+        let big = AieConfig { tiles: 128, lanes_per_tile: 8 };
+        assert!(big.latency(&spec(), &kind, Format::Bf16) < small.latency(&spec(), &kind, Format::Bf16));
+    }
+
+    #[test]
+    fn init_dominates_small_gemm() {
+        let kind = LayerKind::Mm { m: 16, k: 16, n: 16 };
+        let cfg = AieConfig { tiles: 32, lanes_per_tile: 8 };
+        let t = cfg.latency(&spec(), &kind, Format::Bf16);
+        let s = spec();
+        assert!(t < s.init_us * 1.1, "init should dominate: {t} vs {}", s.init_us);
+        assert!(t >= s.init_us);
+    }
+
+    #[test]
+    fn bf16_beats_fp32_on_aie() {
+        let kind = LayerKind::Mm { m: 2048, k: 2048, n: 2048 };
+        let cfg = AieConfig { tiles: 164, lanes_per_tile: 8 };
+        let bf = cfg.latency(&spec(), &kind, Format::Bf16);
+        let fp = cfg.latency(&spec(), &kind, Format::Fp32);
+        // Table IV: 2175.12/729.91 ≈ 2.98× for the (4096,3072) net.
+        let ratio = fp / bf;
+        assert!((2.0..4.5).contains(&ratio), "fp32/bf16 ratio {ratio}");
+    }
+
+    #[test]
+    fn elementwise_supported_for_updates() {
+        // AIE-resident layers update weights on the AIE (paper Alg. 1).
+        let cfg = AieConfig { tiles: 8, lanes_per_tile: 8 };
+        let t = cfg.latency(&spec(), &LayerKind::Elementwise { elems: 100_000 }, Format::Bf16);
+        assert!(t > spec().init_us);
+    }
+
+    #[test]
+    fn tile_candidates_cover_range() {
+        let c = tile_candidates(304);
+        assert_eq!(c.first(), Some(&4));
+        assert_eq!(c.last(), Some(&304));
+        assert!(c.windows(2).all(|w| w[0] < w[1]));
+        assert!(tile_candidates(3).is_empty());
+    }
+}

@@ -1,0 +1,224 @@
+//! Design-space exploration over the Table I pragma space (PL) and the
+//! tile allocations (AIE), returning latency/resource Pareto frontiers.
+
+use crate::graph::layer::LayerKind;
+use crate::hw::{ComponentSpec, Format};
+use crate::Micros;
+
+use super::aie_model::{tile_candidates, AieConfig};
+use super::pl_model::PlConfig;
+
+/// One explored point: latency + scalar resource cost (DSPs on PL, tiles
+/// on AIE) + the config that produced it.
+#[derive(Clone, Debug)]
+pub struct DesignPoint<C> {
+    pub latency_us: Micros,
+    pub resource: usize,
+    pub kluts: f64,
+    pub config: C,
+}
+
+/// Pareto frontier: minimal latency for each resource level (and vice
+/// versa), sorted by ascending resource.
+pub fn pareto<C: Clone>(mut points: Vec<DesignPoint<C>>) -> Vec<DesignPoint<C>> {
+    points.sort_by(|a, b| {
+        a.resource
+            .cmp(&b.resource)
+            .then(a.latency_us.partial_cmp(&b.latency_us).unwrap())
+    });
+    let mut out: Vec<DesignPoint<C>> = Vec::new();
+    let mut best = f64::INFINITY;
+    for p in points {
+        if p.latency_us < best {
+            best = p.latency_us;
+            out.push(p);
+        }
+    }
+    out
+}
+
+/// Table I: the loop-unroll factors sampled in exponential progression up
+/// to the loop bound LB (⌈log₂ LB⌉ points).
+pub fn unroll_factors(loop_bound: usize) -> Vec<usize> {
+    let mut v = vec![1usize];
+    let mut u = 2;
+    while u <= loop_bound {
+        v.push(u);
+        u *= 2;
+    }
+    v
+}
+
+/// Table I: array-partition factors bounded by the interface bitwidth,
+/// ⌊B_M / B_D⌋ + 1 points (B_M = 128-bit AXI, B_D = format width).
+pub fn partition_factors(fmt: Format) -> Vec<usize> {
+    let bm = 128usize;
+    let bd = fmt.bytes() * 8;
+    // factors 2^i up to bm/bd, plus 1 — |points| = bm/bd + 1 in the
+    // paper's notation (they count the identity partition too).
+    let maxf = bm / bd;
+    let mut v = vec![1usize];
+    let mut f = 2;
+    while f <= maxf {
+        v.push(f);
+        f *= 2;
+    }
+    v
+}
+
+/// Full Table-I sweep for one node on the PL.  Returns the Pareto
+/// frontier over (latency, DSP usage).
+pub fn explore_pl(
+    spec: &ComponentSpec,
+    kind: &LayerKind,
+    fmt: Format,
+    max_dsp: usize,
+) -> Vec<DesignPoint<PlConfig>> {
+    let loop_bound = match *kind {
+        LayerKind::Mm { k, n, .. } => (k * n).min(4096),
+        LayerKind::Elementwise { elems } | LayerKind::Reduce { elems } => elems.min(4096),
+    };
+    // Scale partition factors with lanes: banks = partition factor ×
+    // base interface factor (wider unrolls need multi-bank arrays).
+    let mut points = Vec::new();
+    for &df in &[false, true] {
+        for &fp in &[false, true] {
+            for &lp in &[false, true] {
+                for &lu in &unroll_factors(loop_bound) {
+                    for &ap_base in &partition_factors(fmt) {
+                        // Banks needed to feed `lu` lanes come in units
+                        // of the interface factor.
+                        let ap = ap_base * ((lu / 2).max(1)).min(656);
+                        let cfg = PlConfig {
+                            dataflow: df,
+                            func_pipeline: fp,
+                            loop_pipeline: lp,
+                            unroll: lu.min(spec.max_mac_lanes),
+                            array_partition: ap,
+                        };
+                        let res = cfg.resources(fmt);
+                        if res.dsp > max_dsp {
+                            continue;
+                        }
+                        points.push(DesignPoint {
+                            latency_us: cfg.latency(spec, kind, fmt),
+                            resource: res.dsp,
+                            kluts: res.kluts,
+                            config: cfg,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    pareto(points)
+}
+
+/// CHARM-substitute sweep for one MM node on the AIE.
+pub fn explore_aie(
+    spec: &ComponentSpec,
+    kind: &LayerKind,
+    fmt: Format,
+    max_tiles: usize,
+    lanes_per_tile: usize,
+) -> Vec<DesignPoint<AieConfig>> {
+    let mut points = Vec::new();
+    for tiles in tile_candidates(max_tiles) {
+        let cfg = AieConfig { tiles, lanes_per_tile };
+        points.push(DesignPoint {
+            latency_us: cfg.latency(spec, kind, fmt),
+            resource: tiles,
+            kluts: 3.0, // PL-side data movers per AIE kernel (CHARM)
+            config: cfg,
+        });
+    }
+    pareto(points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::{vek280, Component};
+    use crate::util::proplite::forall;
+
+    #[test]
+    fn unroll_factors_log2() {
+        assert_eq!(unroll_factors(8), vec![1, 2, 4, 8]);
+        assert_eq!(unroll_factors(1), vec![1]);
+        assert_eq!(unroll_factors(9).len(), 4); // 1,2,4,8
+    }
+
+    #[test]
+    fn partition_factors_bounded_by_interface() {
+        // fp16: 128/16 = 8 → 1,2,4,8
+        assert_eq!(partition_factors(Format::Fp16), vec![1, 2, 4, 8]);
+        // fp32: 128/32 = 4 → 1,2,4
+        assert_eq!(partition_factors(Format::Fp32), vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn pareto_is_strictly_improving() {
+        let p = vek280();
+        let kind = LayerKind::Mm { m: 256, k: 128, n: 128 };
+        let front = explore_pl(p.spec(Component::PL), &kind, Format::Fp16, p.pl_dsp);
+        assert!(!front.is_empty());
+        for w in front.windows(2) {
+            assert!(w[1].resource > w[0].resource);
+            assert!(w[1].latency_us < w[0].latency_us);
+        }
+    }
+
+    #[test]
+    fn aie_frontier_nonempty_and_sorted() {
+        let p = vek280();
+        let kind = LayerKind::Mm { m: 512, k: 512, n: 512 };
+        let front = explore_aie(
+            p.spec(Component::AIE),
+            &kind,
+            Format::Bf16,
+            p.aie_tiles,
+            p.aie_lanes_per_tile,
+        );
+        assert!(!front.is_empty());
+        for w in front.windows(2) {
+            assert!(w[1].latency_us < w[0].latency_us);
+        }
+    }
+
+    #[test]
+    fn pareto_property_no_dominated_points() {
+        forall(50, 0xDEE5E, |rng| {
+            let pts: Vec<DesignPoint<()>> = (0..20)
+                .map(|_| DesignPoint {
+                    latency_us: rng.uniform_in(1.0, 100.0),
+                    resource: rng.below(64),
+                    kluts: 0.0,
+                    config: (),
+                })
+                .collect();
+            let front = pareto(pts.clone());
+            // every original point is dominated-or-equal by some frontier point
+            for p in &pts {
+                assert!(
+                    front
+                        .iter()
+                        .any(|f| f.resource <= p.resource && f.latency_us <= p.latency_us),
+                    "point ({}, {}) not covered",
+                    p.resource,
+                    p.latency_us
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn bigger_dsp_budget_never_hurts() {
+        let p = vek280();
+        let kind = LayerKind::Mm { m: 512, k: 256, n: 256 };
+        let small = explore_pl(p.spec(Component::PL), &kind, Format::Fp16, 64);
+        let big = explore_pl(p.spec(Component::PL), &kind, Format::Fp16, p.pl_dsp);
+        let best_small = small.iter().map(|d| d.latency_us).fold(f64::INFINITY, f64::min);
+        let best_big = big.iter().map(|d| d.latency_us).fold(f64::INFINITY, f64::min);
+        assert!(best_big <= best_small);
+    }
+}

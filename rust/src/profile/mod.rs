@@ -1,0 +1,17 @@
+//! DSE-based performance profiling (paper §IV-B).
+//!
+//! The paper drives two external DSE frameworks — COMBA for the PL,
+//! CHARM for the AIE — plus TAPCA for PS–PL shared-memory selection.
+//! These are substituted by analytic models exposing the same design
+//! spaces (Table I pragmas for the PL; tile allocation for the AIE;
+//! interface selection for TAPCA) over the `hw` component models.
+
+pub mod aie_model;
+pub mod dse;
+pub mod pl_model;
+pub mod ps_model;
+pub mod profiler;
+pub mod tapca;
+
+pub use dse::{pareto, DesignPoint};
+pub use profiler::{profile_dag, Candidate, NodeProfile};

@@ -1,0 +1,156 @@
+//! COMBA-substitute: analytic HLS latency/resource model for MM and
+//! elementwise nodes on the PL, configured by the Table I pragmas.
+
+use crate::graph::layer::LayerKind;
+use crate::hw::{ComponentSpec, Format};
+use crate::Micros;
+
+/// One HLS pragma configuration (paper Table I).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlConfig {
+    /// Dataflow: overlap memory streaming with compute.
+    pub dataflow: bool,
+    /// Function pipeline: overlaps successive kernel invocations,
+    /// amortizing part of the launch overhead.
+    pub func_pipeline: bool,
+    /// Loop pipeline: II=1 inner loop vs full body latency per iteration.
+    pub loop_pipeline: bool,
+    /// Loop unroll factor (MAC lanes requested).
+    pub unroll: usize,
+    /// Array partition factor (memory banks feeding the lanes).
+    pub array_partition: usize,
+}
+
+/// Memory ports per partitioned bank (dual-port BRAM).
+const PORTS_PER_BANK: usize = 2;
+/// Loop body latency when not pipelined (add+mul+load/store chain).
+const BODY_LATENCY: f64 = 6.0;
+/// Pipeline fill depth (cycles) for a pipelined MM kernel.
+const PIPE_DEPTH: f64 = 24.0;
+
+/// Resource usage of a config for a given format.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlResources {
+    pub dsp: usize,
+    pub kluts: f64,
+    pub bram_mb: f64,
+}
+
+impl PlConfig {
+    /// Effective MAC lanes: unroll bounded by what the partitioned
+    /// memory can feed (COMBA's port-constraint analysis).
+    pub fn effective_lanes(&self) -> usize {
+        self.unroll.min(self.array_partition * PORTS_PER_BANK).max(1)
+    }
+
+    /// Estimated latency for `kind` on the PL in `fmt`.
+    pub fn latency(&self, spec: &ComponentSpec, kind: &LayerKind, fmt: Format) -> Micros {
+        let lanes = self.effective_lanes();
+        let init = spec.init_us * if self.func_pipeline { 0.4 } else { 1.0 };
+        match *kind {
+            LayerKind::Mm { m, k, n } => {
+                let macs = m as f64 * k as f64 * n as f64;
+                let ii = if self.loop_pipeline { 1.0 } else { BODY_LATENCY };
+                // Output-stationary parallelism: can't use more lanes
+                // than output elements being produced concurrently.
+                let usable = (lanes as f64).min((m * n) as f64);
+                let cycles = macs * ii / (usable * spec.format_mult(fmt))
+                    / spec.efficiency
+                    + PIPE_DEPTH
+                    + k as f64;
+                let t_compute = cycles / (spec.clock_mhz * 1e6) * 1e6;
+                let bytes = kind.bytes(fmt.bytes());
+                let t_mem = bytes / (spec.mem_gbps * 1e9) * 1e6;
+                init + if self.dataflow { t_compute.max(t_mem) } else { t_compute + t_mem }
+            }
+            LayerKind::Elementwise { elems } | LayerKind::Reduce { elems } => {
+                let ii = if self.loop_pipeline { 1.0 } else { BODY_LATENCY };
+                let usable = (lanes as f64).min(elems as f64);
+                let cycles = elems as f64 * ii / usable / spec.efficiency + PIPE_DEPTH;
+                let t_compute = cycles / (spec.clock_mhz * 1e6) * 1e6;
+                let bytes = kind.bytes(fmt.bytes());
+                let t_mem = bytes / (spec.mem_gbps * 1e9) * 1e6;
+                init + if self.dataflow { t_compute.max(t_mem) } else { t_compute + t_mem }
+            }
+        }
+    }
+
+    /// Resource estimate (COMBA's resource model, simplified): DSPs scale
+    /// with lanes (×2 for fp32 MACs), LUT with lanes + control, BRAM with
+    /// partition banks.
+    pub fn resources(&self, fmt: Format) -> PlResources {
+        let lanes = self.effective_lanes();
+        let dsp_per_lane = if fmt == Format::Fp32 { 2 } else { 1 };
+        PlResources {
+            dsp: lanes * dsp_per_lane,
+            // ~120 LUTs of control/steering per MAC lane (the DSP slice
+            // does the arithmetic) + kernel scaffolding.
+            kluts: 1.5 + 0.12 * lanes as f64 + if self.dataflow { 2.0 } else { 0.0 },
+            bram_mb: 0.05 + 0.03 * self.array_partition as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::{vek280, Component};
+
+    fn mm() -> LayerKind {
+        LayerKind::Mm { m: 256, k: 256, n: 256 }
+    }
+
+    fn base() -> PlConfig {
+        PlConfig {
+            dataflow: false,
+            func_pipeline: false,
+            loop_pipeline: true,
+            unroll: 64,
+            array_partition: 32,
+        }
+    }
+
+    #[test]
+    fn loop_pipeline_helps() {
+        let spec = vek280().spec(Component::PL).clone();
+        let lp = base();
+        let nolp = PlConfig { loop_pipeline: false, ..base() };
+        assert!(lp.latency(&spec, &mm(), Format::Fp16) < nolp.latency(&spec, &mm(), Format::Fp16));
+    }
+
+    #[test]
+    fn unroll_bounded_by_partition_ports() {
+        let c = PlConfig { unroll: 512, array_partition: 4, ..base() };
+        assert_eq!(c.effective_lanes(), 8);
+    }
+
+    #[test]
+    fn more_unroll_faster_but_costlier() {
+        let spec = vek280().spec(Component::PL).clone();
+        let small = PlConfig { unroll: 8, array_partition: 8, ..base() };
+        let big = PlConfig { unroll: 256, array_partition: 128, ..base() };
+        assert!(big.latency(&spec, &mm(), Format::Fp16) < small.latency(&spec, &mm(), Format::Fp16));
+        assert!(big.resources(Format::Fp16).dsp > small.resources(Format::Fp16).dsp);
+    }
+
+    #[test]
+    fn fp32_doubles_dsp() {
+        let c = base();
+        assert_eq!(c.resources(Format::Fp32).dsp, 2 * c.resources(Format::Fp16).dsp);
+    }
+
+    #[test]
+    fn dataflow_overlap_never_slower() {
+        let spec = vek280().spec(Component::PL).clone();
+        let df = PlConfig { dataflow: true, ..base() };
+        assert!(df.latency(&spec, &mm(), Format::Fp16) <= base().latency(&spec, &mm(), Format::Fp16));
+    }
+
+    #[test]
+    fn func_pipeline_cuts_init() {
+        let spec = vek280().spec(Component::PL).clone();
+        let tiny = LayerKind::Mm { m: 4, k: 4, n: 4 };
+        let fp = PlConfig { func_pipeline: true, ..base() };
+        assert!(fp.latency(&spec, &tiny, Format::Fp16) < base().latency(&spec, &tiny, Format::Fp16));
+    }
+}

@@ -1,0 +1,210 @@
+//! Per-node profiling (paper §IV-B): run the PL/AIE DSE for every layer
+//! node of a training DAG and keep a small Pareto candidate set per
+//! component — the `t_ij` / `a_ij` inputs of the ILP (§IV-C).
+
+use crate::graph::Dag;
+use crate::hw::{Component, Format, Platform};
+use crate::Micros;
+
+use super::dse::{explore_aie, explore_pl};
+use super::ps_model::ps_latency;
+
+/// One (component, config) execution option for a node.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub component: Component,
+    pub fmt: Format,
+    pub latency_us: Micros,
+    /// Resource draw: DSP slices (PL) or tiles (AIE); 0 on PS.
+    pub resource: usize,
+    pub kluts: f64,
+}
+
+/// Profiling result for one node.
+#[derive(Clone, Debug)]
+pub struct NodeProfile {
+    pub node: usize,
+    /// PL candidates (every node has at least one — non-MM are pinned
+    /// here).
+    pub pl: Vec<Candidate>,
+    /// AIE candidates (empty for non-MM nodes, per §IV-A).
+    pub aie: Vec<Candidate>,
+    /// Reference latency on the PS (Fig 4's software row).
+    pub ps_latency_us: Micros,
+    /// Outgoing-edge payload in elements (activation tensor).
+    pub out_elems: usize,
+    /// Master-weight volume updated at this node (elements).
+    pub weight_elems: usize,
+}
+
+/// Formats used per component: AP-DRL quantized mode follows Alg. 1
+/// (PL=FP16, AIE=BF16); fp32 mode profiles everything in FP32.
+pub fn component_format(c: Component, quantized: bool) -> Format {
+    if quantized {
+        c.native_format()
+    } else {
+        Format::Fp32
+    }
+}
+
+/// Best frontier point within a resource budget (frontier is sorted by
+/// ascending resource / descending latency).
+fn best_within<C: Clone>(
+    front: &[super::dse::DesignPoint<C>],
+    budget: usize,
+) -> Option<super::dse::DesignPoint<C>> {
+    front.iter().rev().find(|d| d.resource <= budget).cloned()
+}
+
+/// Profile every node of `dag` on `platform`.
+///
+/// **Shared-accelerator semantics** (DESIGN.md §Substitutions): COMBA
+/// builds one optimized kernel per op class and CHARM *composes* a small
+/// number of shared GEMM accelerators that all AIE-assigned layers reuse
+/// in sequence — per-layer kernels do not spatially coexist one-per-node.
+/// Each node therefore gets its *best* config on each component (the DSE
+/// winner under the full resource pool), and Eq. 7's capacity constraint
+/// binds the shared engines (max over assigned nodes), not their sum.
+/// The partitioning decision is then the paper's pure binary x_ij over
+/// {PL, AIE} (Eq. 4).
+pub fn profile_dag(dag: &Dag, platform: &Platform, quantized: bool) -> Vec<NodeProfile> {
+    let pl_fmt = component_format(Component::PL, quantized);
+    let aie_fmt = component_format(Component::AIE, quantized);
+    let ps_fmt = Format::Fp32; // the PS always runs fp32 (paper Alg. 1)
+    dag.nodes
+        .iter()
+        .map(|node| {
+            let pl_front =
+                explore_pl(platform.spec(Component::PL), &node.kind, pl_fmt, platform.pl_dsp);
+            // DSE winner = fastest point of the Pareto frontier.
+            let pl = best_within(&pl_front, platform.pl_dsp)
+                .into_iter()
+                .map(|d| Candidate {
+                    component: Component::PL,
+                    fmt: pl_fmt,
+                    latency_us: d.latency_us,
+                    resource: d.resource,
+                    kluts: d.kluts,
+                })
+                .collect();
+            // MM nodes are PL/AIE-decidable (Eq. 4); update nodes may
+            // also live on the AIE (Alg. 1: AIE layers update weights in
+            // BF16 on-array, no master sync).  Activation non-MM nodes
+            // stay PL-pinned (§IV-A).
+            let aie_eligible =
+                node.kind.is_mm() || node.phase == crate::graph::Phase::Update;
+            let aie = if aie_eligible {
+                let front = explore_aie(
+                    platform.spec(Component::AIE),
+                    &node.kind,
+                    aie_fmt,
+                    platform.aie_tiles,
+                    platform.aie_lanes_per_tile,
+                );
+                best_within(&front, platform.aie_tiles)
+                    .into_iter()
+                    .map(|d| Candidate {
+                        component: Component::AIE,
+                        fmt: aie_fmt,
+                        latency_us: d.latency_us,
+                        resource: d.resource,
+                        kluts: d.kluts,
+                    })
+                    .collect()
+            } else {
+                Vec::new()
+            };
+            NodeProfile {
+                node: node.id,
+                pl,
+                aie,
+                ps_latency_us: ps_latency(platform.spec(Component::PS), &node.kind, ps_fmt),
+                out_elems: node.out_elems,
+                weight_elems: node.weight_elems,
+            }
+        })
+        .collect()
+}
+
+impl NodeProfile {
+    /// Fastest candidate on a component (None if not a candidate there).
+    pub fn best_on(&self, c: Component) -> Option<&Candidate> {
+        let list = match c {
+            Component::PL => &self.pl,
+            Component::AIE => &self.aie,
+            Component::PS => return None,
+        };
+        list.iter().min_by(|a, b| a.latency_us.partial_cmp(&b.latency_us).unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{build_train_graph, Algo, NetSpec, TrainSpec};
+    use crate::hw::vek280;
+
+    fn profiles(batch: usize) -> (Dag, Vec<NodeProfile>) {
+        let spec = TrainSpec {
+            algo: Algo::Dqn,
+            net: NetSpec::mlp(&[4, 64, 64, 2]),
+            batch,
+            obs_dim: 4,
+            act_dim: 2,
+        };
+        let dag = build_train_graph(&spec);
+        let platform = vek280();
+        let profs = profile_dag(&dag, &platform, true);
+        (dag, profs)
+    }
+
+    #[test]
+    fn every_node_has_pl_candidate() {
+        let (dag, profs) = profiles(64);
+        assert_eq!(profs.len(), dag.len());
+        for p in &profs {
+            assert!(!p.pl.is_empty(), "node {} has no PL candidate", p.node);
+        }
+    }
+
+    #[test]
+    fn aie_candidates_for_mm_and_update_nodes_only() {
+        // MM nodes (Eq. 4) and weight updates (Alg. 1: AIE layers update
+        // in BF16 on-array) are AIE-eligible; activations/losses are
+        // PL-pinned (§IV-A).
+        let (dag, profs) = profiles(64);
+        for p in &profs {
+            let n = &dag.nodes[p.node];
+            let expected = n.kind.is_mm() || n.phase == crate::graph::Phase::Update;
+            assert_eq!(!p.aie.is_empty(), expected, "node {} ({})", p.node, n.name);
+        }
+    }
+
+    #[test]
+    fn small_layers_prefer_pl() {
+        // CartPole's tiny layers: best PL < best AIE (launch overhead).
+        let (dag, profs) = profiles(64);
+        for p in &profs {
+            if dag.nodes[p.node].kind.is_mm() {
+                let pl = p.best_on(Component::PL).unwrap().latency_us;
+                let aie = p.best_on(Component::AIE).unwrap().latency_us;
+                assert!(pl < aie, "node {}: PL {pl} vs AIE {aie}", dag.nodes[p.node].name);
+            }
+        }
+    }
+
+    #[test]
+    fn candidate_count_bounded() {
+        let (_, profs) = profiles(256);
+        for p in &profs {
+            assert!(p.pl.len() <= 4 && p.aie.len() <= 10);
+        }
+    }
+
+    #[test]
+    fn quantized_formats_follow_alg1() {
+        assert_eq!(component_format(Component::PL, true), Format::Fp16);
+        assert_eq!(component_format(Component::AIE, true), Format::Bf16);
+        assert_eq!(component_format(Component::PL, false), Format::Fp32);
+    }
+}

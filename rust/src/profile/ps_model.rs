@@ -1,0 +1,44 @@
+//! PS (Cortex-A72) execution model: the software baseline of Fig 4/5 and
+//! the component running env step / buffer / coordination in AP-DRL.
+
+use crate::graph::layer::LayerKind;
+use crate::hw::{ComponentSpec, Format};
+use crate::Micros;
+
+/// Per-node framework overhead on the PS (loop dispatch, cache warmup).
+const PS_NODE_OVERHEAD_US: Micros = 0.8;
+
+/// Latency of any node on the PS.
+pub fn ps_latency(spec: &ComponentSpec, kind: &LayerKind, fmt: Format) -> Micros {
+    match *kind {
+        LayerKind::Mm { .. } => {
+            let bytes = kind.bytes(fmt.bytes());
+            PS_NODE_OVERHEAD_US
+                + spec.gemm_time(kind.flops(), bytes, spec.max_mac_lanes, fmt, false)
+        }
+        LayerKind::Elementwise { elems } | LayerKind::Reduce { elems } => {
+            PS_NODE_OVERHEAD_US + spec.elementwise_time(elems as f64, fmt)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::{vek280, Component};
+
+    #[test]
+    fn gemm_scales_with_flops() {
+        let spec = vek280().spec(Component::PS).clone();
+        let t1 = ps_latency(&spec, &LayerKind::Mm { m: 64, k: 64, n: 64 }, Format::Fp32);
+        let t2 = ps_latency(&spec, &LayerKind::Mm { m: 256, k: 256, n: 256 }, Format::Fp32);
+        assert!(t2 > 10.0 * t1);
+    }
+
+    #[test]
+    fn overhead_floor() {
+        let spec = vek280().spec(Component::PS).clone();
+        let t = ps_latency(&spec, &LayerKind::Elementwise { elems: 1 }, Format::Fp32);
+        assert!(t >= PS_NODE_OVERHEAD_US);
+    }
+}

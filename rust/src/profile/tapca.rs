@@ -1,0 +1,132 @@
+//! TAPCA-substitute (paper [13]): select the PS–PL shared-memory
+//! interface for the Inference → Experience Buffer → Sampled Training
+//! Data → Updated Model pipeline (paper Fig 7/10).
+//!
+//! The real TAPCA explores cache-coherency configurations on the
+//! CPU–FPGA SoC; the table below models the four architectures its paper
+//! compares, with the qualitative ordering: coherent paths cut latency
+//! for small, frequent transfers; the non-coherent OCM path has the
+//! highest streaming bandwidth for bulk transfers.
+
+use crate::Micros;
+
+/// PS–PL shared-memory architectures TAPCA selects among.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PsPlInterface {
+    /// Non-coherent OCM + DMA bursts.
+    OcmDma,
+    /// IO-coherent via the last-level cache.
+    LlcCoherent,
+    /// IO-coherent snooping into PS L1.
+    L1Coherent,
+    /// Full coherency with a PL-side cache.
+    PlCacheFull,
+}
+
+impl PsPlInterface {
+    pub const ALL: [PsPlInterface; 4] = [
+        PsPlInterface::OcmDma,
+        PsPlInterface::LlcCoherent,
+        PsPlInterface::L1Coherent,
+        PsPlInterface::PlCacheFull,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PsPlInterface::OcmDma => "OCM+DMA",
+            PsPlInterface::LlcCoherent => "LLC-coherent",
+            PsPlInterface::L1Coherent => "L1-coherent",
+            PsPlInterface::PlCacheFull => "PL-cache full coherency",
+        }
+    }
+
+    /// (per-transfer latency µs, bandwidth GB/s).
+    pub fn profile(self) -> (Micros, f64) {
+        match self {
+            PsPlInterface::OcmDma => (3.0, 3.8),      // DMA setup heavy, best BW
+            PsPlInterface::LlcCoherent => (1.2, 3.2), // coherent, some snoop cost
+            PsPlInterface::L1Coherent => (0.6, 1.8),  // lowest latency, narrow
+            PsPlInterface::PlCacheFull => (0.9, 2.8), // PL cache hit path
+        }
+    }
+
+    /// Time to move `transfers` messages of `bytes` each.
+    pub fn time(self, bytes: f64, transfers: f64) -> Micros {
+        let (lat, gbps) = self.profile();
+        transfers * (lat + bytes / (gbps * 1e9) * 1e6)
+    }
+}
+
+/// The DRL PS–PL traffic pattern TAPCA optimizes (paper Fig 10): per
+/// timestep, inference I/O (small, frequent) + sampled batch (bulk) +
+/// updated model writeback (bulk).
+#[derive(Clone, Copy, Debug)]
+pub struct DrlTraffic {
+    /// Bytes per inference exchange (state down + action up).
+    pub infer_bytes: f64,
+    /// Inference exchanges per training step.
+    pub infer_transfers: f64,
+    /// Bytes of one sampled training batch.
+    pub batch_bytes: f64,
+    /// Bytes of the updated-model sync back to the PS master copy.
+    pub model_bytes: f64,
+}
+
+/// Pick the interface minimizing total per-step PS–PL time.
+pub fn select_interface(t: &DrlTraffic) -> (PsPlInterface, Micros) {
+    PsPlInterface::ALL
+        .iter()
+        .map(|&i| {
+            let cost = i.time(t.infer_bytes, t.infer_transfers)
+                + i.time(t.batch_bytes, 1.0)
+                + i.time(t.model_bytes, 1.0);
+            (i, cost)
+        })
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_frequent_prefers_low_latency() {
+        let t = DrlTraffic {
+            infer_bytes: 64.0,
+            infer_transfers: 64.0,
+            batch_bytes: 1024.0,
+            model_bytes: 1024.0,
+        };
+        let (iface, _) = select_interface(&t);
+        assert_eq!(iface, PsPlInterface::L1Coherent);
+    }
+
+    #[test]
+    fn bulk_prefers_bandwidth() {
+        let t = DrlTraffic {
+            infer_bytes: 64.0,
+            infer_transfers: 1.0,
+            batch_bytes: 64e6,
+            model_bytes: 16e6,
+        };
+        let (iface, _) = select_interface(&t);
+        assert_eq!(iface, PsPlInterface::OcmDma);
+    }
+
+    #[test]
+    fn time_additive_in_transfers() {
+        let i = PsPlInterface::LlcCoherent;
+        assert!((i.time(100.0, 4.0) - 4.0 * i.time(100.0, 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn all_interfaces_distinct_profiles() {
+        let profs: Vec<_> = PsPlInterface::ALL.iter().map(|i| i.profile()).collect();
+        for a in 0..profs.len() {
+            for b in a + 1..profs.len() {
+                assert_ne!(profs[a], profs[b]);
+            }
+        }
+    }
+}

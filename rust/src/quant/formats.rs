@@ -1,0 +1,263 @@
+//! Bit-exact software emulation of the coordinated formats (paper Fig 3 /
+//! Table II), mirroring `python/compile/kernels/quantize.py` so the
+//! coordinator can reason about on-the-wire values without PJRT.
+
+use crate::hw::Format;
+
+/// Round-to-nearest-even f32 -> bf16 -> f32 (AIE-ML storage format).
+pub fn bf16_round(x: f32) -> f32 {
+    if x.is_nan() {
+        return x;
+    }
+    let bits = x.to_bits();
+    let rounding_bias = ((bits >> 16) & 1).wrapping_add(0x7FFF);
+    f32::from_bits(bits.wrapping_add(rounding_bias) & 0xFFFF_0000)
+}
+
+/// f32 -> IEEE binary16 -> f32 (PL/DSP compute format), RNE with
+/// overflow→±inf and subnormal flushing handled by the conversion.
+pub fn fp16_round(x: f32) -> f32 {
+    f16_to_f32(f32_to_f16(x))
+}
+
+/// IEEE 754 binary16 encode (RNE).
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let frac = bits & 0x7F_FFFF;
+    if exp == 0xFF {
+        // inf / nan
+        return sign | 0x7C00 | if frac != 0 { 0x200 } else { 0 };
+    }
+    // unbiased exponent
+    let e = exp - 127;
+    if e > 15 {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if e >= -14 {
+        // normal: 10-bit mantissa, RNE on the dropped 13 bits
+        let mant = frac >> 13;
+        let rest = frac & 0x1FFF;
+        let half = 0x1000;
+        let mut m = ((e + 15) as u32) << 10 | mant;
+        if rest > half || (rest == half && (mant & 1) == 1) {
+            m += 1; // may carry into exponent — that's correct rounding
+        }
+        return sign | m as u16;
+    }
+    if e >= -24 {
+        // subnormal
+        let shift = (-14 - e) as u32; // 1..=10 additional shift
+        let full = frac | 0x80_0000; // implicit leading 1
+        let mant = full >> (13 + shift);
+        let rest = full & ((1 << (13 + shift)) - 1);
+        let half = 1u32 << (12 + shift);
+        let mut m = mant;
+        if rest > half || (rest == half && (mant & 1) == 1) {
+            m += 1;
+        }
+        return sign | m as u16;
+    }
+    sign // underflow -> ±0
+}
+
+/// IEEE 754 binary16 decode.
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let frac = (h & 0x3FF) as u32;
+    let bits = match (exp, frac) {
+        (0, 0) => sign,
+        (0, f) => {
+            // subnormal: value = f · 2⁻²⁴; normalize into f32.
+            let p = 31 - f.leading_zeros(); // MSB position of f
+            let e = p + 103; // (p - 24) + 127
+            let frac32 = ((f ^ (1 << p)) << (23 - p)) & 0x7F_FFFF;
+            sign | (e << 23) | frac32
+        }
+        (0x1F, 0) => sign | 0x7F80_0000,
+        (0x1F, f) => sign | 0x7F80_0000 | (f << 13) | 0x40_0000,
+        (e, f) => sign | ((e + 127 - 15) << 23) | (f << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// Round a value into a coordinated format (identity for FP32/FX16 —
+/// FIXAR's fixed-point rounding lives in the baseline model).
+pub fn round_to(x: f32, fmt: Format) -> f32 {
+    match fmt {
+        Format::Fp32 | Format::Fx16 => x,
+        Format::Bf16 => bf16_round(x),
+        Format::Fp16 => fp16_round(x),
+    }
+}
+
+/// Table II rows, used by the `figures table2` emitter and asserted in
+/// tests.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FormatInfo {
+    pub name: &'static str,
+    pub sign_bits: u32,
+    pub exp_bits: u32,
+    pub frac_bits: u32,
+    pub exp_min: i32,
+    pub exp_max: i32,
+    pub bytes: usize,
+    pub needs_master_weight: bool,
+    pub needs_loss_scaling: bool,
+}
+
+pub fn format_info(fmt: Format) -> FormatInfo {
+    match fmt {
+        Format::Fp16 => FormatInfo {
+            name: "FP16",
+            sign_bits: 1,
+            exp_bits: 5,
+            frac_bits: 10,
+            exp_min: -14,
+            exp_max: 15,
+            bytes: 2,
+            needs_master_weight: true,
+            needs_loss_scaling: true,
+        },
+        Format::Fp32 => FormatInfo {
+            name: "FP32",
+            sign_bits: 1,
+            exp_bits: 8,
+            frac_bits: 23,
+            exp_min: -126,
+            exp_max: 127,
+            bytes: 4,
+            needs_master_weight: false,
+            needs_loss_scaling: false,
+        },
+        Format::Bf16 => FormatInfo {
+            name: "BF16",
+            sign_bits: 1,
+            exp_bits: 8,
+            frac_bits: 7,
+            exp_min: -126,
+            exp_max: 127,
+            bytes: 2,
+            needs_master_weight: false,
+            needs_loss_scaling: false,
+        },
+        Format::Fx16 => FormatInfo {
+            name: "FX16",
+            sign_bits: 1,
+            exp_bits: 0,
+            frac_bits: 15,
+            exp_min: 0,
+            exp_max: 0,
+            bytes: 2,
+            needs_master_weight: true,
+            needs_loss_scaling: false,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proplite::forall;
+
+    #[test]
+    fn bf16_known_values() {
+        assert_eq!(bf16_round(1.0), 1.0);
+        assert_eq!(bf16_round(-2.5), -2.5);
+        // 1.00390625 = 1 + 2^-8 rounds to 1.0 (ties-to-even on bit 16)
+        assert_eq!(bf16_round(1.003_906_25), 1.0);
+        // 1.01171875 = 1 + 3·2^-8 rounds up to 1 + 2^-7 + 2^-8? → nearest bf16
+        let r = bf16_round(1.011_718_75);
+        assert!((r == 1.007_812_5) || (r == 1.015_625));
+    }
+
+    #[test]
+    fn bf16_preserves_exponent_range() {
+        for &x in &[1e38f32, -1e38, 1e-38, -1e-38] {
+            let r = bf16_round(x);
+            assert!(r.is_finite() && r != 0.0, "{x} -> {r}");
+        }
+        assert!(bf16_round(f32::NAN).is_nan());
+        assert_eq!(bf16_round(f32::INFINITY), f32::INFINITY);
+    }
+
+    #[test]
+    fn fp16_narrow_range() {
+        assert_eq!(fp16_round(1e6), f32::INFINITY);
+        assert_eq!(fp16_round(-1e6), f32::NEG_INFINITY);
+        assert_eq!(fp16_round(1e-9), 0.0);
+        assert_eq!(fp16_round(65504.0), 65504.0); // max finite f16
+        assert_eq!(fp16_round(65520.0), f32::INFINITY); // rounds up past max
+    }
+
+    #[test]
+    fn fp16_exact_values() {
+        for &x in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 1.5, 0.099975586] {
+            assert_eq!(fp16_round(x), x, "{x} should be f16-representable");
+        }
+    }
+
+    #[test]
+    fn fp16_subnormals() {
+        let min_sub = 5.960_464_5e-8; // 2^-24
+        assert!((fp16_round(min_sub) - min_sub).abs() / min_sub < 1e-3);
+        assert_eq!(fp16_round(min_sub / 3.0), 0.0);
+    }
+
+    #[test]
+    fn fp16_roundtrip_idempotent_property() {
+        forall(300, 0xF16, |rng| {
+            let x = (rng.normal() * rng.uniform_in(1e-4, 1e4)) as f32;
+            let once = fp16_round(x);
+            let twice = fp16_round(once);
+            assert!(
+                once == twice || (once.is_nan() && twice.is_nan()),
+                "not idempotent: {x} -> {once} -> {twice}"
+            );
+        });
+    }
+
+    #[test]
+    fn bf16_idempotent_property() {
+        forall(300, 0xBF16, |rng| {
+            let x = (rng.normal() * rng.uniform_in(1e-30, 1e30)) as f32;
+            let once = bf16_round(x);
+            assert_eq!(bf16_round(once).to_bits(), once.to_bits());
+        });
+    }
+
+    #[test]
+    fn rounding_error_bounded_property() {
+        forall(300, 0xE44, |rng| {
+            let x = (rng.normal() * 100.0) as f32;
+            if x == 0.0 {
+                return;
+            }
+            // bf16: 8 fraction bits incl. implicit → rel err ≤ 2^-8
+            assert!((bf16_round(x) - x).abs() / x.abs() <= 1.0 / 256.0 + 1e-7);
+            // fp16 in normal range: rel err ≤ 2^-11
+            if x.abs() > 1e-4 && x.abs() < 6e4 {
+                assert!((fp16_round(x) - x).abs() / x.abs() <= 1.0 / 2048.0 + 1e-7);
+            }
+        });
+    }
+
+    #[test]
+    fn table2_rows() {
+        let bf = format_info(Format::Bf16);
+        let fp16 = format_info(Format::Fp16);
+        let fp32 = format_info(Format::Fp32);
+        // Paper Table II: exponent ranges
+        assert_eq!((bf.exp_min, bf.exp_max), (fp32.exp_min, fp32.exp_max));
+        assert_eq!((fp16.exp_min, fp16.exp_max), (-14, 15));
+        // bit layouts (Fig 3)
+        assert_eq!((fp16.sign_bits, fp16.exp_bits, fp16.frac_bits), (1, 5, 10));
+        assert_eq!((fp32.sign_bits, fp32.exp_bits, fp32.frac_bits), (1, 8, 23));
+        assert_eq!((bf.sign_bits, bf.exp_bits, bf.frac_bits), (1, 8, 7));
+        // master weight / loss scaling rows
+        assert!(fp16.needs_master_weight && fp16.needs_loss_scaling);
+        assert!(!bf.needs_master_weight && !bf.needs_loss_scaling);
+    }
+}

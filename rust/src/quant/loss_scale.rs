@@ -1,0 +1,163 @@
+//! Dynamic loss scaling FSM (paper Fig 9): grows the scale after a run of
+//! clean steps, halves it and skips the update on overflow.  The policy
+//! lives here at L3; the per-step mechanics (scaled backprop, grad check,
+//! conditional skip) are inside the lowered artifacts, which take the
+//! scale as input and report `found_inf`.
+
+/// Dynamic loss scaler with the standard grow/backoff policy.
+#[derive(Clone, Debug)]
+pub struct LossScaler {
+    scale: f32,
+    growth_factor: f32,
+    backoff_factor: f32,
+    growth_interval: u32,
+    clean_steps: u32,
+    min_scale: f32,
+    max_scale: f32,
+    /// Statistics for reports.
+    pub overflows: u64,
+    pub updates_skipped: u64,
+    pub steps: u64,
+}
+
+impl Default for LossScaler {
+    fn default() -> Self {
+        Self::new(65536.0, 2.0, 0.5, 200)
+    }
+}
+
+impl LossScaler {
+    pub fn new(init: f32, growth: f32, backoff: f32, interval: u32) -> Self {
+        assert!(init > 0.0 && growth > 1.0 && backoff < 1.0 && backoff > 0.0);
+        LossScaler {
+            scale: init,
+            growth_factor: growth,
+            backoff_factor: backoff,
+            growth_interval: interval,
+            clean_steps: 0,
+            min_scale: 1.0,
+            max_scale: 2.0f32.powi(24),
+            overflows: 0,
+            updates_skipped: 0,
+            steps: 0,
+        }
+    }
+
+    /// A scaler pinned to 1.0 — used for pure-BF16/FP32 pipelines where
+    /// no PL/FP16 node participates (paper Table II: BF16 needs no
+    /// scaling).
+    pub fn disabled() -> Self {
+        let mut s = Self::new(1.0, 2.0, 0.5, u32::MAX);
+        s.max_scale = 1.0;
+        s
+    }
+
+    /// Scale to feed the next train-step artifact invocation.
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+
+    /// Record a step outcome (the artifact's `found_inf` output);
+    /// returns true if the optimizer update was applied.
+    pub fn update(&mut self, found_inf: bool) -> bool {
+        self.steps += 1;
+        if found_inf {
+            self.overflows += 1;
+            self.updates_skipped += 1;
+            self.scale = (self.scale * self.backoff_factor).max(self.min_scale);
+            self.clean_steps = 0;
+            false
+        } else {
+            self.clean_steps += 1;
+            if self.clean_steps >= self.growth_interval {
+                self.scale = (self.scale * self.growth_factor).min(self.max_scale);
+                self.clean_steps = 0;
+            }
+            true
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proplite::forall;
+
+    #[test]
+    fn grows_after_interval() {
+        let mut s = LossScaler::new(1024.0, 2.0, 0.5, 3);
+        assert!(s.update(false));
+        assert!(s.update(false));
+        assert_eq!(s.scale(), 1024.0);
+        s.update(false);
+        assert_eq!(s.scale(), 2048.0);
+    }
+
+    #[test]
+    fn backoff_on_overflow_and_skip() {
+        let mut s = LossScaler::new(1024.0, 2.0, 0.5, 3);
+        assert!(!s.update(true));
+        assert_eq!(s.scale(), 512.0);
+        assert_eq!(s.updates_skipped, 1);
+    }
+
+    #[test]
+    fn overflow_resets_clean_streak() {
+        let mut s = LossScaler::new(1024.0, 2.0, 0.5, 2);
+        s.update(false);
+        s.update(true); // streak resets, scale 512
+        s.update(false);
+        assert_eq!(s.scale(), 512.0); // only 1 clean step since overflow
+        s.update(false);
+        assert_eq!(s.scale(), 1024.0);
+    }
+
+    #[test]
+    fn scale_bounded() {
+        let mut s = LossScaler::new(2.0, 2.0, 0.5, 1);
+        for _ in 0..100 {
+            s.update(true);
+        }
+        assert!(s.scale() >= 1.0);
+        for _ in 0..100 {
+            s.update(false);
+        }
+        assert!(s.scale() <= 2.0f32.powi(24));
+    }
+
+    #[test]
+    fn disabled_stays_at_one() {
+        let mut s = LossScaler::disabled();
+        for i in 0..1000 {
+            s.update(i % 7 == 0);
+        }
+        assert_eq!(s.scale(), 1.0);
+    }
+
+    #[test]
+    fn reference_trace_property() {
+        // FSM == straightforward reference simulation for random traces.
+        forall(100, 0x5CA1E, |rng| {
+            let interval = 1 + rng.below(5) as u32;
+            let mut fsm = LossScaler::new(256.0, 2.0, 0.5, interval);
+            let mut scale = 256.0f32;
+            let mut clean = 0u32;
+            for _ in 0..200 {
+                let inf = rng.uniform() < 0.15;
+                let applied = fsm.update(inf);
+                assert_eq!(applied, !inf);
+                if inf {
+                    scale = (scale * 0.5).max(1.0);
+                    clean = 0;
+                } else {
+                    clean += 1;
+                    if clean >= interval {
+                        scale = (scale * 2.0).min(2.0f32.powi(24));
+                        clean = 0;
+                    }
+                }
+                assert_eq!(fsm.scale(), scale);
+            }
+        });
+    }
+}

@@ -1,0 +1,22 @@
+//! Hardware-aware quantization (paper §IV-D / Algorithm 1 / Figs 9–10).
+//!
+//! The per-step mixed-precision *dataflow* (scaled loss, grad check,
+//! conditional skip) is compiled into the L2 artifacts; this module owns
+//! the cross-step *coordination*:
+//!
+//! * [`formats`] — bit-exact f32↔bf16/f16 casts (mirrors the L1 kernels)
+//!   and the Table II format metadata;
+//! * [`loss_scale`] — the dynamic loss-scaling state machine driving the
+//!   artifacts' `loss_scale` input from their `found_inf` output;
+//! * [`master`] — master-weight backup bookkeeping + the sync-overhead
+//!   model charged to PL nodes in the schedule (Table IV's ≥22 %);
+//! * [`policy`] — partition result → per-layer precision assignment.
+
+pub mod formats;
+pub mod loss_scale;
+pub mod master;
+pub mod policy;
+
+pub use formats::{bf16_round, fp16_round, FormatInfo};
+pub use loss_scale::LossScaler;
+pub use policy::PrecisionPolicy;

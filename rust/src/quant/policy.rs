@@ -1,0 +1,116 @@
+//! Partition result → per-layer precision assignment (paper Alg. 1).
+//!
+//! AIE nodes run BF16 end-to-end; PL nodes run FP16 with a
+//! higher-precision master; PS nodes run FP32.  The policy also decides
+//! whether the pipeline needs dynamic loss scaling at all (only if some
+//! node runs FP16 — Table II).
+
+use crate::graph::Dag;
+use crate::hw::{Component, Format};
+use crate::partition::model::Assignment;
+
+/// Precision plan derived from a partitioning solution.
+#[derive(Clone, Debug)]
+pub struct PrecisionPolicy {
+    /// Per-node compute format.
+    pub node_format: Vec<Format>,
+    /// Any FP16 node present → the LossScaler FSM must be armed.
+    pub needs_loss_scaling: bool,
+    /// Node ids that keep a master-weight backup (PL update nodes).
+    pub master_backed_nodes: Vec<usize>,
+}
+
+impl PrecisionPolicy {
+    /// Apply Alg. 1's format rule to a partition assignment.
+    pub fn from_assignment(dag: &Dag, assignment: &Assignment, quantized: bool) -> Self {
+        let node_format: Vec<Format> = assignment
+            .iter()
+            .map(|p| {
+                if quantized {
+                    p.component.native_format()
+                } else {
+                    Format::Fp32
+                }
+            })
+            .collect();
+        let needs_loss_scaling = node_format.iter().any(|&f| f == Format::Fp16);
+        let master_backed_nodes = assignment
+            .iter()
+            .enumerate()
+            .filter(|(i, p)| {
+                quantized
+                    && p.component == Component::PL
+                    && dag.nodes[*i].weight_elems > 0
+            })
+            .map(|(i, _)| i)
+            .collect();
+        PrecisionPolicy { node_format, needs_loss_scaling, master_backed_nodes }
+    }
+
+    /// Which artifact precision mode this policy corresponds to: all-PS →
+    /// "fp32"; mixes → "mixed"; all-AIE MM nodes → "bf16".
+    pub fn artifact_mode(&self) -> &'static str {
+        let any_fp16 = self.node_format.iter().any(|&f| f == Format::Fp16);
+        let any_bf16 = self.node_format.iter().any(|&f| f == Format::Bf16);
+        match (any_fp16, any_bf16) {
+            (false, false) => "fp32",
+            (false, true) => "bf16",
+            _ => "mixed",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{build_train_graph, Algo, NetSpec, TrainSpec};
+    use crate::partition::model::Placement;
+
+    fn dag() -> Dag {
+        build_train_graph(&TrainSpec {
+            algo: Algo::Dqn,
+            net: NetSpec::mlp(&[4, 8, 2]),
+            batch: 8,
+            obs_dim: 4,
+            act_dim: 2,
+        })
+    }
+
+    fn uniform(dag: &Dag, c: Component) -> Assignment {
+        (0..dag.len()).map(|_| Placement { component: c, candidate: 0 }).collect()
+    }
+
+    #[test]
+    fn quantized_pl_needs_scaling_and_masters() {
+        let d = dag();
+        let a = uniform(&d, Component::PL);
+        let p = PrecisionPolicy::from_assignment(&d, &a, true);
+        assert!(p.needs_loss_scaling);
+        assert!(!p.master_backed_nodes.is_empty());
+        assert_eq!(p.artifact_mode(), "mixed");
+        // master-backed nodes are exactly the weight-carrying ones
+        for &i in &p.master_backed_nodes {
+            assert!(d.nodes[i].weight_elems > 0);
+        }
+    }
+
+    #[test]
+    fn all_aie_needs_no_scaling() {
+        let d = dag();
+        let a = uniform(&d, Component::AIE);
+        let p = PrecisionPolicy::from_assignment(&d, &a, true);
+        assert!(!p.needs_loss_scaling);
+        assert!(p.master_backed_nodes.is_empty());
+        assert_eq!(p.artifact_mode(), "bf16");
+    }
+
+    #[test]
+    fn non_quantized_is_fp32_everywhere() {
+        let d = dag();
+        let a = uniform(&d, Component::PL);
+        let p = PrecisionPolicy::from_assignment(&d, &a, false);
+        assert!(p.node_format.iter().all(|&f| f == Format::Fp32));
+        assert!(!p.needs_loss_scaling);
+        assert_eq!(p.artifact_mode(), "fp32");
+    }
+}

@@ -1,0 +1,189 @@
+//! Artifact manifest: the I/O contract emitted by `python/compile/aot.py`
+//! (positional tensor specs per artifact), parsed with the in-repo JSON
+//! parser.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Tensor dtype in an artifact signature.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "float32" => Ok(Dtype::F32),
+            "int32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+}
+
+/// Shape + dtype of one positional input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Raw meta object (kind, algo, mode, batch, param_shapes, ...).
+    pub meta: Json,
+}
+
+impl ArtifactSpec {
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(|v| v.as_str())
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|v| v.as_usize())
+    }
+
+    /// Number of leading inputs that are parameters/opt-state (everything
+    /// before the batch arrays), derived from param_shapes when present.
+    pub fn param_shapes(&self) -> Vec<Vec<usize>> {
+        let mut out = Vec::new();
+        if let Some(arr) = self.meta.get("param_shapes").and_then(|v| v.as_arr()) {
+            for sh in arr {
+                if let Some(dims) = sh.as_arr() {
+                    out.push(dims.iter().filter_map(|d| d.as_usize()).collect());
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Parsed manifest.json.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn parse_specs(v: &Json) -> Result<Vec<TensorSpec>> {
+    let arr = v.as_arr().ok_or_else(|| anyhow!("specs not an array"))?;
+    arr.iter()
+        .map(|e| {
+            let shape = e
+                .get("shape")
+                .and_then(|s| s.as_arr())
+                .ok_or_else(|| anyhow!("missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            let dtype = Dtype::parse(
+                e.get("dtype").and_then(|d| d.as_str()).ok_or_else(|| anyhow!("missing dtype"))?,
+            )?;
+            Ok(TensorSpec { shape, dtype })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = Json::parse(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let arts = root
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing artifacts object"))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in arts {
+            let file = dir.join(
+                entry
+                    .get("file")
+                    .and_then(|f| f.as_str())
+                    .ok_or_else(|| anyhow!("artifact {name}: missing file"))?,
+            );
+            let spec = ArtifactSpec {
+                name: name.clone(),
+                file,
+                inputs: parse_specs(entry.get("inputs").ok_or_else(|| anyhow!("no inputs"))?)?,
+                outputs: parse_specs(entry.get("outputs").ok_or_else(|| anyhow!("no outputs"))?)?,
+                meta: entry.get("meta").cloned().unwrap_or(Json::Null),
+            };
+            artifacts.insert(name.clone(), spec);
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest ({} known)", self.artifacts.len()))
+    }
+
+    /// Artifact name for a (combo, mode, kind) triple, e.g.
+    /// ("dqn_cartpole", "mixed", "train").
+    pub fn artifact_name(combo: &str, mode: &str, kind: &str) -> String {
+        format!("{combo}_{mode}_{kind}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> Option<Manifest> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        Manifest::load(dir).ok()
+    }
+
+    #[test]
+    fn loads_manifest_when_built() {
+        let Some(m) = repo_artifacts() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        assert!(m.artifacts.len() >= 40, "expected 42 artifacts, got {}", m.artifacts.len());
+        let a = m.get("dqn_cartpole_mixed_train").unwrap();
+        assert_eq!(a.meta_str("kind"), Some("train"));
+        assert_eq!(a.meta_usize("batch"), Some(64));
+        // last input is the loss_scale scalar; last output found_inf
+        assert_eq!(a.inputs.last().unwrap().shape, Vec::<usize>::new());
+        assert_eq!(a.outputs.last().unwrap().shape, Vec::<usize>::new());
+        assert!(a.file.exists());
+        // param shapes mirror the python-side convention
+        let ps = a.param_shapes();
+        assert_eq!(ps[0], vec![4, 64]);
+        assert_eq!(ps[1], vec![64]);
+    }
+
+    #[test]
+    fn artifact_name_format() {
+        assert_eq!(
+            Manifest::artifact_name("ddpg_lunar", "fp32", "act"),
+            "ddpg_lunar_fp32_act"
+        );
+    }
+
+    #[test]
+    fn rejects_missing_dir() {
+        assert!(Manifest::load("/nonexistent/dir").is_err());
+    }
+}

@@ -1,0 +1,58 @@
+//! PJRT client wrapper: one CPU client per process, compiled-executable
+//! cache keyed by artifact name.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::artifact::Manifest;
+use super::executor::Executor;
+
+/// The L3-side runtime: owns the PJRT client and the executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, Arc<Executor>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the artifact manifest from
+    /// `dir` (usually `artifacts/`).
+    pub fn new(dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        format!("{} ({} devices)", self.client.platform_name(), self.client.device_count())
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&mut self, name: &str) -> Result<Arc<Executor>> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.get(name)?.clone();
+        let proto = xla::HloModuleProto::from_text_file(&spec.file)
+            .with_context(|| format!("parsing HLO text {:?}", spec.file))?;
+        let computation = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&computation)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        let executor = Arc::new(Executor::new(spec, exe));
+        self.cache.insert(name.to_string(), executor.clone());
+        Ok(executor)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+}

@@ -1,0 +1,107 @@
+//! Typed artifact invocation: positional `xla::Literal` in/out with
+//! shape validation against the manifest.
+//!
+//! Hot-path design: parameters and optimizer state stay as `Literal`s
+//! between steps (the train artifacts return them and the next call
+//! feeds them straight back) — host `Vec<f32>` conversion only happens
+//! for scalars (loss, found_inf) and at init/readout.
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::{ArtifactSpec, Dtype, TensorSpec};
+
+/// A compiled artifact ready to run.
+pub struct Executor {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executor {
+    pub fn new(spec: ArtifactSpec, exe: xla::PjRtLoadedExecutable) -> Self {
+        Executor { spec, exe }
+    }
+
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    /// Execute with positional literals; returns the flattened output
+    /// tuple (aot.py lowers with return_tuple=True).
+    ///
+    /// Takes *borrowed* literals: `xla::PjRtLoadedExecutable::execute`
+    /// accepts any `Borrow<Literal>`, so the hot path never deep-copies
+    /// parameter tensors (§Perf L3: removed one full param-set memcpy
+    /// per act/train invocation).
+    pub fn run(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "artifact {}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.spec.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching outputs of {}", self.spec.name))?;
+        let outs = tuple.to_tuple().context("destructuring output tuple")?;
+        if outs.len() != self.spec.outputs.len() {
+            bail!(
+                "artifact {}: expected {} outputs, got {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                outs.len()
+            );
+        }
+        Ok(outs)
+    }
+}
+
+/// Build an f32 literal of `shape` from host data.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let elems: usize = shape.iter().product();
+    if data.len() != elems {
+        bail!("literal_f32: {} values for shape {:?}", data.len(), shape);
+    }
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, bytes)?)
+}
+
+/// Build an i32 literal of `shape` from host data.
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let elems: usize = shape.iter().product();
+    if data.len() != elems {
+        bail!("literal_i32: {} values for shape {:?}", data.len(), shape);
+    }
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, bytes)?)
+}
+
+/// Scalar f32 literal.
+pub fn scalar_f32(x: f32) -> Result<xla::Literal> {
+    literal_f32(&[x], &[])
+}
+
+/// Read an f32 literal back to host.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Read a scalar f32 output.
+pub fn scalar_of(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+/// Zero-filled literal for a tensor spec (optimizer-state init).
+pub fn zeros(spec: &TensorSpec) -> Result<xla::Literal> {
+    match spec.dtype {
+        Dtype::F32 => literal_f32(&vec![0.0; spec.elems()], &spec.shape),
+        Dtype::I32 => literal_i32(&vec![0; spec.elems()], &spec.shape),
+    }
+}

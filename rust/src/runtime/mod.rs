@@ -1,0 +1,18 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`) and
+//! execute them from the coordinator's hot path.
+//!
+//! Flow (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  HLO *text* is the interchange format —
+//! jax ≥ 0.5 emits 64-bit-id protos that xla_extension 0.5.1 rejects.
+//!
+//! Python never runs here: the artifacts directory is the complete
+//! contract between the build-time compile path and this runtime.
+
+pub mod artifact;
+pub mod client;
+pub mod executor;
+
+pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
+pub use client::Runtime;
+pub use executor::Executor;

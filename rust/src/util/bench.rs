@@ -1,0 +1,113 @@
+//! Micro-benchmark harness (criterion is not in the vendored crate set).
+//!
+//! Used by the `cargo bench` targets (`harness = false`): warms up, runs
+//! timed iterations until a wall budget or iteration cap, and prints
+//! median / mean / p95 per benchmark plus optional throughput.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>10} iters   median {:>12}   mean {:>12}   p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p95_ns)
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark `f`, returning timing stats.  `budget` bounds total wall time.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // Warm-up: a few calls, also measures rough per-iter cost.
+    let warm_start = Instant::now();
+    let mut warm_iters = 0usize;
+    while warm_iters < 3 || (warm_start.elapsed() < budget / 10 && warm_iters < 1000) {
+        f();
+        warm_iters += 1;
+    }
+    let per_iter = warm_start.elapsed().as_nanos() as f64 / warm_iters as f64;
+    // Aim for enough samples within the budget.
+    let target_iters = ((budget.as_nanos() as f64 / per_iter.max(1.0)) as usize).clamp(5, 10_000);
+    let mut samples = Vec::with_capacity(target_iters);
+    let run_start = Instant::now();
+    for _ in 0..target_iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+        if run_start.elapsed() > budget {
+            break;
+        }
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        median_ns: stats::median(&samples),
+        mean_ns: stats::mean(&samples),
+        p95_ns: stats::percentile(&samples, 95.0),
+    }
+}
+
+/// Convenience: bench and print with the default 2 s budget.
+pub fn run<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    let r = bench(name, Duration::from_secs(2), f);
+    r.print();
+    r
+}
+
+/// `black_box` stand-in: prevent the optimizer from deleting a value.
+#[inline]
+pub fn observe<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", Duration::from_millis(50), || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(observe(i));
+            }
+            observe(s);
+        });
+        assert!(r.iters >= 5);
+        assert!(r.median_ns > 0.0);
+        assert!(r.p95_ns >= r.median_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5e4).ends_with("µs"));
+        assert!(fmt_ns(5e7).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with("s"));
+    }
+}

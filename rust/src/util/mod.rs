@@ -1,0 +1,11 @@
+//! Self-built substrates that would normally come from crates.io (this
+//! build is fully offline/vendored): RNG, JSON, statistics, a lightweight
+//! property-testing harness and a micro-benchmark runner.
+
+pub mod bench;
+pub mod json;
+pub mod proplite;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;

@@ -1,0 +1,62 @@
+//! Lightweight property-testing harness (proptest is not in the vendored
+//! crate set).  Runs `N` deterministic random cases from a seed; on
+//! failure reports the case index + seed so the exact case replays.
+//!
+//! ```no_run
+//! # // no_run: doctest binaries lack the -Wl,-rpath for libxla's libstdc++
+//! use apdrl::util::proplite::forall;
+//! forall(100, 0xC0FFEE, |rng| {
+//!     let x = rng.uniform_in(-1e3, 1e3);
+//!     let y = x * 2.0;
+//!     assert!((y / 2.0 - x).abs() < 1e-9);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Run `cases` random property checks.  Panics (re-raising the inner
+/// assertion) with the failing case index and derived seed.
+pub fn forall<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(cases: usize, seed: u64, prop: F) {
+    for i in 0..cases {
+        let case_seed = seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(case_seed);
+            prop(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at case {i}/{cases} (seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Random subset sizes, vector helpers for property generators.
+pub fn vec_f32(rng: &mut Rng, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+    (0..len).map(|_| rng.uniform_in(lo as f64, hi as f64) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall(50, 1, |rng| {
+            let v = vec_f32(rng, 8, -1.0, 1.0);
+            assert_eq!(v.len(), 8);
+            assert!(v.iter().all(|x| x.abs() <= 1.0));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn failing_property_reports_case() {
+        forall(100, 2, |rng| {
+            assert!(rng.uniform() < 0.9, "triggered");
+        });
+    }
+}

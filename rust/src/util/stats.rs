@@ -1,0 +1,103 @@
+//! Small statistics helpers shared by metrics, reports and the bench
+//! harness.
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Linear-interpolated percentile, q in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = (q / 100.0) * (v.len() - 1) as f64;
+    let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Moving average with window `w` (paper Fig 11 uses a 100-episode
+/// sliding window over episodic rewards).
+pub fn moving_average(xs: &[f64], w: usize) -> Vec<f64> {
+    if w == 0 || xs.is_empty() {
+        return Vec::new();
+    }
+    let mut out = Vec::with_capacity(xs.len());
+    let mut sum = 0.0;
+    for (i, &x) in xs.iter().enumerate() {
+        sum += x;
+        if i >= w {
+            sum -= xs[i - w];
+        }
+        out.push(sum / (i.min(w - 1) + 1) as f64);
+    }
+    out
+}
+
+/// Relative error |a - b| / max(|b|, eps) — the paper's "reward error %"
+/// between quantized and fp32 converged rewards (Table III).
+pub fn relative_error(a: f64, b: f64) -> f64 {
+    (a - b).abs() / b.abs().max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((std_dev(&xs) - 1.118034).abs() < 1e-6);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(median(&xs), 2.5);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn moving_average_window() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let ma = moving_average(&xs, 2);
+        assert_eq!(ma, vec![1.0, 1.5, 2.5, 3.5, 4.5]);
+        let ma1 = moving_average(&xs, 100);
+        assert!((ma1[4] - 3.0).abs() < 1e-12); // mean of all five
+        assert!(moving_average(&[], 3).is_empty());
+        assert!(moving_average(&xs, 0).is_empty());
+    }
+
+    #[test]
+    fn rel_err() {
+        assert!((relative_error(101.0, 100.0) - 0.01).abs() < 1e-12);
+        assert!(relative_error(1.0, 0.0) > 1e9);
+    }
+}

@@ -1,0 +1,239 @@
+//! Integration tests across the three layers: PJRT runtime ↔ AOT
+//! artifacts ↔ coordinator.  These need `make artifacts` to have run
+//! (they are skipped gracefully otherwise, but `make test` builds first).
+
+use apdrl::coordinator::{combo, static_phase, train_combo, TrainLimits};
+use apdrl::runtime::executor::{literal_f32, scalar_of, to_vec_f32};
+use apdrl::runtime::Runtime;
+use apdrl::util::Rng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    match Runtime::new(dir) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("skipping integration test (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+/// The gemm artifacts compute what they claim: cross-check the Pallas
+/// kernel's HLO against a host matmul.
+#[test]
+fn gemm_artifact_matches_host_matmul() {
+    let Some(mut rt) = runtime() else { return };
+    let exe = rt.load("gemm_64_fp32").unwrap();
+    let n = 64usize;
+    let mut rng = Rng::new(42);
+    let a: Vec<f32> = (0..n * n).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect();
+    let b: Vec<f32> = (0..n * n).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect();
+    let (la, lb) = (literal_f32(&a, &[n, n]).unwrap(), literal_f32(&b, &[n, n]).unwrap());
+    let outs = exe.run(&[&la, &lb]).unwrap();
+    let got = to_vec_f32(&outs[0]).unwrap();
+    // host reference
+    let mut expect = vec![0.0f32; n * n];
+    for i in 0..n {
+        for k in 0..n {
+            let aik = a[i * n + k];
+            for j in 0..n {
+                expect[i * n + j] += aik * b[k * n + j];
+            }
+        }
+    }
+    for (g, e) in got.iter().zip(&expect) {
+        assert!((g - e).abs() < 1e-3, "{g} vs {e}");
+    }
+}
+
+/// bf16 gemm artifact differs from fp32 by a bf16-sized relative error —
+/// the precision emulation survives the AOT → PJRT round trip.
+#[test]
+fn gemm_bf16_artifact_rounds() {
+    let Some(mut rt) = runtime() else { return };
+    let f32_exe = rt.load("gemm_64_fp32").unwrap();
+    let bf16_exe = rt.load("gemm_64_bf16").unwrap();
+    let n = 64usize;
+    let mut rng = Rng::new(7);
+    let a: Vec<f32> = (0..n * n).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = (0..n * n).map(|_| rng.normal() as f32).collect();
+    let (la, lb) = (literal_f32(&a, &[n, n]).unwrap(), literal_f32(&b, &[n, n]).unwrap());
+    let args = [&la, &lb];
+    let full = to_vec_f32(&f32_exe.run(&args).unwrap()[0]).unwrap();
+    let quant = to_vec_f32(&bf16_exe.run(&args).unwrap()[0]).unwrap();
+    assert_ne!(full, quant, "bf16 artifact must actually round");
+    // bf16 rel. error 2⁻⁸ per product accumulates over K=64 f32 adds:
+    // tolerance ≈ √K · 2⁻⁸ · |a||b| on N(0,1) operands.
+    for (f, q) in full.iter().zip(&quant) {
+        assert!((f - q).abs() <= 0.05 * f.abs().max(2.0), "{f} vs {q}");
+    }
+}
+
+/// One DQN train-step artifact invocation: loss finite, found_inf clear,
+/// params actually updated, and the step is deterministic.
+#[test]
+fn dqn_train_step_executes_and_updates() {
+    let Some(mut rt) = runtime() else { return };
+    let exe = rt.load("dqn_cartpole_mixed_train").unwrap();
+    let shapes = exe.spec().param_shapes();
+    let mut rng = Rng::new(3);
+    let params = apdrl::drl::ParamSet::init(&shapes, &mut rng).unwrap();
+    let target = params.clone_literals();
+    let opt = apdrl::drl::ParamSet::opt_state(&shapes).unwrap();
+    let bs = 64usize;
+    let s: Vec<f32> = (0..bs * 4).map(|_| rng.uniform_in(-0.1, 0.1) as f32).collect();
+    let a: Vec<i32> = (0..bs).map(|_| rng.below(2) as i32).collect();
+    let r: Vec<f32> = (0..bs).map(|_| 1.0).collect();
+    let done = vec![0.0f32; bs];
+    let run_once = || {
+        let scratch = [
+            literal_f32(&s, &[bs, 4]).unwrap(),
+            apdrl::runtime::executor::literal_i32(&a, &[bs]).unwrap(),
+            literal_f32(&r, &[bs]).unwrap(),
+            literal_f32(&s, &[bs, 4]).unwrap(),
+            literal_f32(&done, &[bs]).unwrap(),
+            literal_f32(&[1024.0], &[]).unwrap(),
+        ];
+        let mut inputs: Vec<&xla::Literal> = params.tensors.iter().collect();
+        inputs.extend(target.iter());
+        inputs.extend(opt.iter());
+        inputs.extend(scratch.iter());
+        exe.run(&inputs).unwrap()
+    };
+    let outs1 = run_once();
+    let outs2 = run_once();
+    let loss = scalar_of(&outs1[outs1.len() - 2]).unwrap();
+    let found_inf = scalar_of(&outs1[outs1.len() - 1]).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert_eq!(found_inf, 0.0);
+    // params changed
+    let w0_new = to_vec_f32(&outs1[0]).unwrap();
+    let w0_old = to_vec_f32(&params.tensors[0]).unwrap();
+    assert_ne!(w0_new, w0_old);
+    // deterministic
+    assert_eq!(w0_new, to_vec_f32(&outs2[0]).unwrap());
+}
+
+/// Ridiculous loss scale → found_inf set and update skipped (the Fig 9
+/// contract between the artifact and the L3 LossScaler).
+#[test]
+fn dqn_train_step_overflow_skips_update() {
+    let Some(mut rt) = runtime() else { return };
+    let exe = rt.load("dqn_cartpole_mixed_train").unwrap();
+    let shapes = exe.spec().param_shapes();
+    let mut rng = Rng::new(5);
+    let params = apdrl::drl::ParamSet::init(&shapes, &mut rng).unwrap();
+    let opt = apdrl::drl::ParamSet::opt_state(&shapes).unwrap();
+    let bs = 64usize;
+    let s: Vec<f32> = (0..bs * 4).map(|_| rng.normal() as f32).collect();
+    let a = vec![0i32; bs];
+    let r = vec![1e30f32; bs]; // absurd rewards → overflowing grads
+    let done = vec![0.0f32; bs];
+    let scratch = [
+        literal_f32(&s, &[bs, 4]).unwrap(),
+        apdrl::runtime::executor::literal_i32(&a, &[bs]).unwrap(),
+        literal_f32(&r, &[bs]).unwrap(),
+        literal_f32(&s, &[bs, 4]).unwrap(),
+        literal_f32(&done, &[bs]).unwrap(),
+        literal_f32(&[65536.0], &[]).unwrap(),
+    ];
+    let mut inputs: Vec<&xla::Literal> = params.tensors.iter().collect();
+    inputs.extend(params.tensors.iter());
+    inputs.extend(opt.iter());
+    inputs.extend(scratch.iter());
+    let outs = exe.run(&inputs).unwrap();
+    let found_inf = scalar_of(&outs[outs.len() - 1]).unwrap();
+    assert_eq!(found_inf, 1.0);
+    let w0_new = to_vec_f32(&outs[0]).unwrap();
+    let w0_old = to_vec_f32(&params.tensors[0]).unwrap();
+    assert_eq!(w0_new, w0_old, "update must be skipped on overflow");
+}
+
+/// Short end-to-end training run: the agent must clearly beat the random
+/// policy on CartPole within a few thousand PJRT-executed steps.
+#[test]
+fn cartpole_training_improves_over_random() {
+    let Some(mut rt) = runtime() else { return };
+    let c = combo("dqn_cartpole");
+    let limits = TrainLimits { max_env_steps: 6_000, max_episodes: 400 };
+    let result = train_combo(&mut rt, &c, "mixed", 11, limits, false).unwrap();
+    let random_baseline = 25.0; // random CartPole episodes last ~20-25 steps
+    let late = result.metrics.converged_reward(30);
+    assert!(
+        late > random_baseline * 1.8,
+        "training did not improve: converged {late} vs random {random_baseline}"
+    );
+    assert!(result.metrics.train_steps > 1_000);
+}
+
+/// Every convergence combo has loadable artifacts for all three modes,
+/// and the rust-side combo registry matches the python-side shapes.
+#[test]
+fn all_artifacts_load_and_shapes_match() {
+    let Some(mut rt) = runtime() else { return };
+    for name in apdrl::coordinator::COMBO_NAMES {
+        for mode in ["fp32", "mixed", "bf16"] {
+            for kind in ["train", "act"] {
+                let art = format!("{name}_{mode}_{kind}");
+                let exe = rt.load(&art).unwrap_or_else(|e| panic!("loading {art}: {e:#}"));
+                assert!(!exe.spec().inputs.is_empty());
+            }
+        }
+        // shape agreement: python param_shapes vs rust NetSpec
+        let c = combo(name);
+        let train = rt.load(&format!("{name}_mixed_train")).unwrap();
+        let total_py: usize = if c.algo == apdrl::graph::Algo::Ddpg {
+            // actor_shapes + critic_shapes
+            let s = train.spec();
+            let count = |key: &str| {
+                s.meta
+                    .get(key)
+                    .and_then(|v| v.as_arr())
+                    .map(|a| {
+                        a.iter()
+                            .map(|sh| {
+                                sh.as_arr()
+                                    .unwrap()
+                                    .iter()
+                                    .map(|d| d.as_usize().unwrap())
+                                    .product::<usize>()
+                            })
+                            .sum::<usize>()
+                    })
+                    .unwrap_or(0)
+            };
+            count("actor_shapes") + count("critic_shapes")
+        } else {
+            train
+                .spec()
+                .param_shapes()
+                .iter()
+                .map(|sh| sh.iter().product::<usize>())
+                .sum()
+        };
+        let rust_weights = c.net.weight_elems();
+        // A2C/PPO add value nets / heads / log_std on top of the actor
+        // net; DQN matches exactly.
+        assert!(
+            total_py >= rust_weights,
+            "{name}: python params {total_py} < rust net weights {rust_weights}"
+        );
+    }
+}
+
+/// The static phase and the artifact precision modes agree: the ILP's
+/// policy for each convergence combo maps onto an artifact that exists.
+#[test]
+fn static_plan_mode_has_matching_artifact() {
+    let Some(rt) = runtime() else { return };
+    for name in apdrl::coordinator::COMBO_NAMES {
+        let c = combo(name);
+        let plan = static_phase(&c, c.batch, true);
+        let mode = plan.policy.artifact_mode();
+        let art = format!("{name}_{mode}_train");
+        assert!(
+            rt.manifest().get(&art).is_ok(),
+            "{name}: plan wants mode {mode} but artifact {art} missing"
+        );
+    }
+}
