@@ -58,4 +58,45 @@ fn main() {
         if pl_best.latency_us < aie_best.latency_us { "PL" } else { "AIE" }
     );
     println!("(crossover behaviour is the paper's Fig 6; sweep n to see it move)");
+
+    // The same DSE, driven end-to-end through the planning service: every
+    // Table III convergence combo profiled + partitioned in one batched,
+    // cache-aware sweep (the per-node frontiers above are what the ILP
+    // consumes as its t_ij candidates).
+    use apdrl::coordinator::{plan_sweep, try_combo, PlanRequest, COMBO_NAMES};
+    let requests: Vec<PlanRequest> = COMBO_NAMES
+        .iter()
+        .filter_map(|name| try_combo(name).ok())
+        .map(|c| {
+            let bs = c.batch;
+            PlanRequest::new(c, bs, true)
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let plans = plan_sweep(&requests);
+    println!(
+        "\nplanning service over {} combos ({:.0} ms cold):",
+        plans.len(),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    for (req, plan) in requests.iter().zip(&plans) {
+        println!(
+            "  {:20} bs={:<5} {:>10.1} µs/step   AIE {}/{} MM   explored {}{}",
+            req.combo.name,
+            req.batch,
+            plan.schedule.makespan_us,
+            plan.solution.aie_nodes(&plan.dag),
+            plan.dag.mm_nodes().len(),
+            plan.solution.explored,
+            if plan.cache_hit { " (cache hit)" } else { "" }
+        );
+    }
+    let t1 = std::time::Instant::now();
+    let warm = plan_sweep(&requests);
+    println!(
+        "re-plan: {:.2} ms, {}/{} cache hits (set APDRL_PLAN_CACHE=<file> to persist across runs)",
+        t1.elapsed().as_secs_f64() * 1e3,
+        warm.iter().filter(|p| p.cache_hit).count(),
+        warm.len()
+    );
 }

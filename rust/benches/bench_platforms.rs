@@ -1,16 +1,18 @@
 //! Bench: Fig 4 regeneration cost + per-component profile evaluation.
 //! (`cargo bench` target; custom harness — criterion is not vendored.)
 
-use apdrl::coordinator::combo;
+use apdrl::coordinator::{combo, plan_sweep, PlanRequest};
 use apdrl::graph::build_train_graph;
 use apdrl::hw::vek280;
+use apdrl::partition::cache;
 use apdrl::profile::profile_dag;
 use apdrl::util::bench::{observe, run};
 
 fn main() {
     println!("== bench_platforms: profiling/DSE costs (Fig 4 machinery) ==");
     let platform = vek280();
-    for name in ["dqn_cartpole", "ddpg_lunar", "dqn_breakout"] {
+    let names = ["dqn_cartpole", "ddpg_lunar", "dqn_breakout"];
+    for name in names {
         let c = combo(name);
         let dag = build_train_graph(&c.train_spec(c.batch));
         run(&format!("build_train_graph/{name}"), || {
@@ -20,4 +22,25 @@ fn main() {
             observe(profile_dag(&dag, &platform, true));
         });
     }
+
+    // The planning service over the same combos: cold (parallel solves)
+    // vs warm (every point a plan-cache hit).
+    let requests: Vec<PlanRequest> = names
+        .iter()
+        .map(|name| {
+            let c = combo(name);
+            let bs = c.batch;
+            PlanRequest::new(c, bs, true)
+        })
+        .collect();
+    run("plan_sweep_cold/3combos", || {
+        cache::global().lock().unwrap().clear();
+        observe(plan_sweep(&requests));
+    });
+    plan_sweep(&requests);
+    run("plan_sweep_warm/3combos", || {
+        let plans = plan_sweep(&requests);
+        assert!(plans.iter().all(|p| p.cache_hit));
+        observe(plans);
+    });
 }

@@ -1,24 +1,57 @@
 //! Bench: Table IV regeneration — the full static phase (profile + ILP +
-//! schedule) per network size, FP32 vs quantized.
+//! schedule) per network size, FP32 vs quantized, plus the planning
+//! service around it: cold solves (cache cleared every iteration), cached
+//! re-plans (the O(1) hit path) and the batched `plan_sweep` that plans
+//! the whole Table IV grid concurrently.
 
-use apdrl::coordinator::{combo, static_phase};
+use apdrl::coordinator::{combo, plan_sweep, static_phase, ComboConfig, PlanRequest};
 use apdrl::graph::NetSpec;
+use apdrl::partition::cache;
 use apdrl::util::bench::{observe, run};
+
+fn table4_combo(sizes: &[usize]) -> ComboConfig {
+    let mut c = combo("dqn_cartpole");
+    c.net = NetSpec::mlp(sizes);
+    c
+}
 
 fn main() {
     println!("== bench_table4: static phase per Table-IV network ==");
-    for (label, sizes) in [
+    let sizes: [(&str, Vec<usize>); 3] = [
         ("64x64", vec![4usize, 64, 64, 2]),
         ("400x300", vec![4, 400, 300, 2]),
         ("4096x3072", vec![4, 4096, 3072, 2]),
-    ] {
-        let mut c = combo("dqn_cartpole");
-        c.net = NetSpec::Mlp { sizes };
-        run(&format!("static_phase_quant/{label}"), || {
+    ];
+    for (label, sizes_v) in &sizes {
+        let c = table4_combo(sizes_v);
+        run(&format!("static_phase_quant_cold/{label}"), || {
+            cache::global().lock().unwrap().clear();
             observe(static_phase(&c, 64, true));
         });
-        run(&format!("static_phase_fp32/{label}"), || {
+        run(&format!("static_phase_fp32_cold/{label}"), || {
+            cache::global().lock().unwrap().clear();
             observe(static_phase(&c, 64, false));
         });
+        // The memoized path: everything after the first solve is a
+        // cache hit — this is the steady-state cost of a re-plan.
+        static_phase(&c, 64, true);
+        run(&format!("static_phase_quant_cached/{label}"), || {
+            let plan = static_phase(&c, 64, true);
+            assert!(plan.cache_hit, "steady-state re-plan must hit the cache");
+            observe(plan);
+        });
     }
+
+    // Whole-grid batched planning (cold): 3 networks × 2 precisions.
+    let requests: Vec<PlanRequest> = sizes
+        .iter()
+        .flat_map(|(_, sizes_v)| {
+            let c = table4_combo(sizes_v);
+            [PlanRequest::new(c.clone(), 64, false), PlanRequest::new(c, 64, true)]
+        })
+        .collect();
+    run("plan_sweep_table4_grid_cold/6pts", || {
+        cache::global().lock().unwrap().clear();
+        observe(plan_sweep(&requests));
+    });
 }

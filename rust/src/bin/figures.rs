@@ -22,20 +22,25 @@
 use anyhow::{bail, Result};
 
 use apdrl::coordinator::baselines::{aie_only_step_time, fixar_step_time};
+#[cfg(feature = "pjrt")]
 use apdrl::coordinator::metrics::reward_error_pct;
 use apdrl::coordinator::report::{ascii_bars, ascii_table, write_tsv};
-use apdrl::coordinator::{combo, static_phase, train_combo, TrainLimits};
+use apdrl::coordinator::{combo, plan_sweep, static_phase, PlanRequest};
+#[cfg(feature = "pjrt")]
+use apdrl::coordinator::{train_combo, TrainLimits};
 use apdrl::graph::{build_train_graph, Phase};
 use apdrl::hw::{vek280, Component, Format};
 use apdrl::profile::dse::{explore_aie, explore_pl, partition_factors, unroll_factors};
 use apdrl::profile::ps_model::ps_latency;
 use apdrl::quant::formats::format_info;
+#[cfg(feature = "pjrt")]
 use apdrl::runtime::Runtime;
 
 fn reports_dir() -> std::path::PathBuf {
     std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/reports"))
 }
 
+#[cfg(feature = "pjrt")]
 fn artifacts_dir() -> String {
     std::env::var("APDRL_ARTIFACTS")
         .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")))
@@ -271,7 +276,13 @@ fn table2() -> Result<()> {
 }
 
 /// Fig 11 + Table III reward-error column: real training, quantized vs
-/// fp32, across seeds.
+/// fp32, across seeds.  Needs the PJRT runtime (`pjrt` feature).
+#[cfg(not(feature = "pjrt"))]
+fn fig11(_args: &Args) -> Result<()> {
+    bail!("fig11 trains through PJRT artifacts; rebuild with `--features pjrt` (needs the xla bindings + `make artifacts`)")
+}
+
+#[cfg(feature = "pjrt")]
 fn fig11(args: &Args) -> Result<()> {
     let seeds = args.usize_flag("seeds", 3);
     let only: Option<&str> = args.flag("combo");
@@ -284,7 +295,8 @@ fn fig11(args: &Args) -> Result<()> {
     println!("== Fig 11 / Table III: convergence of quantized vs FP32 ({seeds} seeds) ==");
     let mut rows = Vec::new();
     for name in combos {
-        let c = combo(name);
+        // `--combo` is user input: report unknown names, don't abort.
+        let c = apdrl::coordinator::try_combo(name)?;
         let default_steps: usize = if full { 120_000 } else { 15_000 };
         let limits = TrainLimits {
             max_env_steps: args.usize_flag("steps", default_steps) as u64,
@@ -352,12 +364,20 @@ fn table4() -> Result<()> {
         ("(400, 300)", vec![4, 400, 300, 2]),
         ("(4096, 3072)", vec![4, 4096, 3072, 2]),
     ];
+    // One batched sweep plans all six (net, precision) points
+    // concurrently through the planning service.
+    let requests: Vec<PlanRequest> = sizes
+        .iter()
+        .flat_map(|(_, sizes_v)| {
+            let mut c = combo("dqn_cartpole");
+            c.net = apdrl::graph::NetSpec::mlp(sizes_v);
+            [PlanRequest::new(c.clone(), 64, false), PlanRequest::new(c, 64, true)]
+        })
+        .collect();
+    let plans = plan_sweep(&requests);
     let mut rows = Vec::new();
-    for (label, sizes_v) in &sizes {
-        let mut c = combo("dqn_cartpole");
-        c.net = apdrl::graph::NetSpec::mlp(sizes_v);
-        let fp32 = static_phase(&c, 64, false);
-        let quant = static_phase(&c, 64, true);
+    for (i, (label, _)) in sizes.iter().enumerate() {
+        let (fp32, quant) = (&plans[2 * i], &plans[2 * i + 1]);
         let speedup = fp32.step_time_us() / quant.step_time_us();
         println!(
             "{label:14} FP32 {:>12.1} µs   quantized {:>12.1} µs   speedup {speedup:.2}x   (sync exposed {:.1} µs)",
@@ -383,8 +403,9 @@ fn table4() -> Result<()> {
 }
 
 /// Fig 12/13 shared sweep: (combo, batch) × {AIE-only, FIXAR, AP-DRL}.
+/// The AP-DRL column runs through the batched planning service (one
+/// concurrent, cache-aware `plan_sweep` over the whole grid).
 fn speedup_matrix() -> Vec<(String, usize, f64, f64, f64)> {
-    let mut out = Vec::new();
     let grid: [(&str, [usize; 3]); 6] = [
         ("dqn_cartpole", [64, 128, 256]),
         ("a2c_invpend", [64, 128, 256]),
@@ -393,16 +414,29 @@ fn speedup_matrix() -> Vec<(String, usize, f64, f64, f64)> {
         ("dqn_breakout", [16, 32, 64]),
         ("ppo_mspacman", [16, 32, 64]),
     ];
-    for (name, batches) in grid {
-        let c = combo(name);
-        for bs in batches {
-            let aie = aie_only_step_time(&c, bs);
-            let fixar = fixar_step_time(&c, bs);
-            let apdrl = static_phase(&c, bs, true).schedule.makespan_us;
-            out.push((name.to_string(), bs, aie, fixar, apdrl));
-        }
-    }
-    out
+    let requests: Vec<PlanRequest> = grid
+        .iter()
+        .flat_map(|(name, batches)| {
+            let c = combo(name);
+            batches.iter().map(move |&bs| PlanRequest::new(c.clone(), bs, true))
+        })
+        .collect();
+    let plans = plan_sweep(&requests);
+    requests
+        .iter()
+        .zip(&plans)
+        .map(|(req, plan)| {
+            let aie = aie_only_step_time(&req.combo, req.batch);
+            let fixar = fixar_step_time(&req.combo, req.batch);
+            (
+                req.combo.name.to_string(),
+                req.batch,
+                aie,
+                fixar,
+                plan.schedule.makespan_us,
+            )
+        })
+        .collect()
 }
 
 fn fig12_13() -> Result<()> {
@@ -491,9 +525,11 @@ fn fig14() -> Result<()> {
 fn fig15() -> Result<()> {
     println!("== Fig 15: DDPG-LunarCont partition vs batch size ==");
     let c = combo("ddpg_lunar");
+    let batches = [64usize, 128, 256, 512, 1024];
+    let requests: Vec<PlanRequest> =
+        batches.iter().map(|&bs| PlanRequest::new(c.clone(), bs, true)).collect();
     let mut rows = Vec::new();
-    for bs in [64usize, 128, 256, 512, 1024] {
-        let plan = static_phase(&c, bs, true);
+    for (&bs, plan) in batches.iter().zip(plan_sweep(&requests)) {
         let total_mm = plan.dag.mm_nodes().len();
         let aie = plan.solution.aie_nodes(&plan.dag);
         let names: Vec<String> = plan

@@ -2,6 +2,8 @@
 //! `python/compile/combos.py` — the artifact names are derived from
 //! these, so the two must stay in sync (checked by an integration test).
 
+use anyhow::{anyhow, Result};
+
 use crate::envs::{self, Env};
 use crate::graph::{Algo, NetSpec, TrainSpec};
 
@@ -42,8 +44,11 @@ pub const TIMING_COMBO_NAMES: [&str; 6] = [
     "ppo_mspacman",
 ];
 
-pub fn combo(name: &str) -> ComboConfig {
-    match name {
+/// Parse a combo name into its configuration.  Unknown names are a
+/// reported error, not an abort — CLI front-ends (`apdrl`, `figures`)
+/// route user input through this.
+pub fn try_combo(name: &str) -> Result<ComboConfig> {
+    let cfg = match name {
         "dqn_cartpole" => ComboConfig {
             name: "dqn_cartpole",
             algo: Algo::Dqn,
@@ -154,8 +159,21 @@ pub fn combo(name: &str) -> ComboConfig {
             paper_flops_per_row: 106.23e6,
             paper_reward_error_pct: 1.13,
         },
-        other => panic!("unknown combo {other}"),
-    }
+        other => {
+            return Err(anyhow!(
+                "unknown combo {other} (known: {})",
+                COMBO_NAMES.join(", ")
+            ))
+        }
+    };
+    Ok(cfg)
+}
+
+/// Infallible lookup for the statically known Table III names — tests,
+/// benches and figure code use this; invalid names are a programmer
+/// error here, so it panics with the parser's message.
+pub fn combo(name: &str) -> ComboConfig {
+    try_combo(name).unwrap_or_else(|e| panic!("{e}"))
 }
 
 impl ComboConfig {
@@ -170,10 +188,10 @@ impl ComboConfig {
         }
     }
 
-    /// Instantiate the environment.
-    pub fn make_env(&self) -> Box<dyn Env> {
-        match self.env {
-            "cartpole" => Box::new(envs::CartPole::new()),
+    /// Instantiate the environment, reporting unknown names as an error.
+    pub fn try_make_env(&self) -> Result<Box<dyn Env>> {
+        Ok(match self.env {
+            "cartpole" => Box::new(envs::CartPole::new()) as Box<dyn Env>,
             "invpendulum" => Box::new(envs::InvertedPendulum::new()),
             "lunarcont" => Box::new(envs::LunarLanderCont::new()),
             "mntncarcont" => Box::new(envs::MountainCarCont::new()),
@@ -181,14 +199,35 @@ impl ComboConfig {
             "mspacman_mini" => Box::new(envs::MiniMsPacman::mini()),
             "breakout_full" => Box::new(envs::MiniBreakout::full()),
             "mspacman_full" => Box::new(envs::MiniMsPacman::full()),
-            other => panic!("unknown env {other}"),
-        }
+            other => return Err(anyhow!("combo {}: unknown env {other}", self.name)),
+        })
+    }
+
+    /// Instantiate the environment (infallible for the Table III combos,
+    /// whose env names are statically valid).
+    pub fn make_env(&self) -> Box<dyn Env> {
+        self.try_make_env().unwrap_or_else(|e| panic!("{e}"))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn unknown_names_error_instead_of_aborting() {
+        let e = try_combo("dqn_tetris").unwrap_err();
+        assert!(format!("{e}").contains("unknown combo dqn_tetris"), "{e}");
+        assert!(format!("{e}").contains("dqn_cartpole"), "should list known combos: {e}");
+        let mut c = combo("dqn_cartpole");
+        c.env = "no_such_env";
+        // match, not unwrap_err: Box<dyn Env> has no Debug impl
+        let e = match c.try_make_env() {
+            Err(e) => e,
+            Ok(_) => panic!("bad env name must not construct"),
+        };
+        assert!(format!("{e}").contains("unknown env no_such_env"), "{e}");
+    }
 
     #[test]
     fn all_combos_construct() {

@@ -1,16 +1,19 @@
 //! The AP-DRL coordinator (L3 proper): experiment configs (Table III),
-//! the static phase (build → profile → partition, paper Fig 7 left), the
-//! dynamic phase (env/train loop over PJRT artifacts with the
-//! quantization FSM, Fig 7 right), baseline timing models (AIE-only,
-//! FIXAR) and report emission.
+//! the static phase (build → profile → partition, paper Fig 7 left) — now
+//! a cached, batched planning service (`static_phase` / `plan_sweep`) —
+//! the dynamic phase (env/train loop over PJRT artifacts with the
+//! quantization FSM, Fig 7 right; `pjrt` feature), baseline timing models
+//! (AIE-only, FIXAR) and report emission.
 
 pub mod baselines;
 pub mod config;
 pub mod metrics;
 pub mod pipeline;
 pub mod report;
+#[cfg(feature = "pjrt")]
 pub mod trainer;
 
-pub use config::{combo, ComboConfig, COMBO_NAMES};
-pub use pipeline::{static_phase, StaticPlan};
+pub use config::{combo, try_combo, ComboConfig, COMBO_NAMES};
+pub use pipeline::{plan_sweep, plan_sweep_grid, static_phase, PlanRequest, StaticPlan};
+#[cfg(feature = "pjrt")]
 pub use trainer::{train_combo, TrainLimits, TrainResult};

@@ -1,11 +1,34 @@
-//! Static phase (paper Fig 7, left column): build the layer CDFG,
-//! profile it per component (DSE), select the PS–PL interface (TAPCA),
-//! solve the partitioning ILP and derive the precision policy.
+//! Static phase (paper Fig 7, left column), served as a **planning
+//! service**: build the layer CDFG, profile it per component (DSE),
+//! select the PS–PL interface (TAPCA), solve the partitioning ILP and
+//! derive the precision policy.
+//!
+//! Two service properties on top of the paper's flow:
+//!
+//! * **Memoization** — solved plans are cached in
+//!   [`crate::partition::cache`] keyed on (algo, net shape, batch,
+//!   precision, platform fingerprint).  A repeated [`static_phase`] call
+//!   for the same key skips the ILP entirely: it returns the identical
+//!   schedule with `solution.explored == 0` and `cache_hit == true`.
+//!   Set `APDRL_PLAN_CACHE=<path>` to persist plans as JSON across runs.
+//! * **Batched sweeps** — [`plan_sweep`] / [`plan_sweep_grid`] drive many
+//!   (combo, batch) points concurrently over scoped threads, deduping
+//!   repeated points against the cache.  A lone `static_phase` call
+//!   parallelizes its branch-and-bound internally; inside a sweep the
+//!   solves run sequentially so the two parallelism levels don't
+//!   multiply.  This is how the figure harness, the benches and the
+//!   examples regenerate Table III/IV-scale grids.
+
+use std::cell::Cell;
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use crate::graph::{build_train_graph, Dag};
 use crate::hw::{vek280, Platform};
-use crate::partition::{evaluate, solve_ilp, Solution};
+use crate::partition::cache::{self, PlanKey};
 use crate::partition::schedule::Schedule;
+use crate::partition::{evaluate, solve_ilp, Solution};
 use crate::profile::tapca::{select_interface, DrlTraffic, PsPlInterface};
 use crate::profile::{profile_dag, NodeProfile};
 use crate::quant::PrecisionPolicy;
@@ -25,17 +48,40 @@ pub struct StaticPlan {
     /// Per-step PS–PL pipeline time (inference I/O + batch + model sync)
     /// over the selected interface.
     pub ps_pl_us: Micros,
+    /// True when the partitioning came from the plan cache instead of a
+    /// fresh ILP solve (in which case `solution.explored == 0`).
+    pub cache_hit: bool,
 }
 
-/// Run the static phase for `combo` at batch size `bs`.
+/// Run the static phase for `combo` at batch size `bs`, consulting the
+/// process-wide plan cache.
 /// `quantized` selects AP-DRL's mixed-precision mode vs the FP32 control.
 pub fn static_phase(combo: &ComboConfig, bs: usize, quantized: bool) -> StaticPlan {
     let platform = vek280();
-    let dag = build_train_graph(&combo.train_spec(bs));
+    let spec = combo.train_spec(bs);
+    let dag = build_train_graph(&spec);
     let profiles = profile_dag(&dag, &platform, quantized);
     let problem = crate::partition::Problem::new(&dag, &profiles, &platform, quantized);
-    let solution = solve_ilp(&problem);
-    let schedule = evaluate(&problem, &solution.assignment);
+
+    let key = PlanKey::new(&spec, quantized, &platform);
+    let cached = cache::global().lock().unwrap().lookup(&key, &profiles);
+    let (solution, schedule, cache_hit) = match cached {
+        Some(solution) => {
+            let schedule = evaluate(&problem, &solution.assignment);
+            // Defense in depth: if the schedule evaluator disagrees with
+            // the memoized makespan (a model constant changed without
+            // moving the platform fingerprint), fall back to a fresh
+            // solve instead of serving a stale plan.
+            let tol = 1e-6 * schedule.makespan_us.abs().max(1.0);
+            if (schedule.makespan_us - solution.makespan_us).abs() <= tol {
+                (solution, schedule, true)
+            } else {
+                solve_and_memoize(&problem, &key)
+            }
+        }
+        None => solve_and_memoize(&problem, &key),
+    };
+
     let policy = PrecisionPolicy::from_assignment(&dag, &solution.assignment, quantized);
 
     // TAPCA: PS–PL traffic of the Inference → Buffer → Batch → Model
@@ -53,7 +99,128 @@ pub fn static_phase(combo: &ComboConfig, bs: usize, quantized: bool) -> StaticPl
     };
     let (interface, ps_pl_us) = select_interface(&traffic);
 
-    StaticPlan { dag, profiles, platform, solution, schedule, policy, interface, ps_pl_us }
+    StaticPlan {
+        dag,
+        profiles,
+        platform,
+        solution,
+        schedule,
+        policy,
+        interface,
+        ps_pl_us,
+        cache_hit,
+    }
+}
+
+thread_local! {
+    /// Set for the lifetime of a `plan_sweep` worker thread: the sweep
+    /// already saturates the cores with one solve per worker, so nested
+    /// solves run single-threaded instead of spawning their own pools.
+    static IN_SWEEP: Cell<bool> = Cell::new(false);
+}
+
+fn solve_and_memoize(
+    problem: &crate::partition::Problem,
+    key: &PlanKey,
+) -> (Solution, Schedule, bool) {
+    let solution = if IN_SWEEP.with(Cell::get) {
+        crate::partition::ilp::solve_ilp_with_workers(problem, 1)
+    } else {
+        solve_ilp(problem)
+    };
+    // insert + persist with the disk I/O outside the cache lock.
+    cache::global_insert(key, &solution);
+    let schedule = evaluate(problem, &solution.assignment);
+    (solution, schedule, false)
+}
+
+/// One point of a batched planning sweep.
+#[derive(Clone, Debug)]
+pub struct PlanRequest {
+    pub combo: ComboConfig,
+    pub batch: usize,
+    pub quantized: bool,
+}
+
+impl PlanRequest {
+    pub fn new(combo: ComboConfig, batch: usize, quantized: bool) -> PlanRequest {
+        PlanRequest { combo, batch, quantized }
+    }
+}
+
+/// Plan every request concurrently; results come back in request order.
+/// Duplicate points within one sweep are planned once (the copies are
+/// filled from the cache), and each worker solves sequentially — the
+/// sweep itself is the parallelism, so the per-solve B&B pool is not
+/// nested inside it.  Separate overlapping sweeps are not strictly
+/// deduplicated, but share the global plan cache.
+pub fn plan_sweep(requests: &[PlanRequest]) -> Vec<StaticPlan> {
+    let n = requests.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    // First occurrence of each distinct plan key does the solving.
+    let platform = vek280();
+    let mut seen = HashSet::new();
+    let unique: Vec<usize> = requests
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| {
+            seen.insert(PlanKey::new(&r.combo.train_spec(r.batch), r.quantized, &platform))
+        })
+        .map(|(i, _)| i)
+        .collect();
+    let workers = std::thread::available_parallelism()
+        .map(|c| c.get())
+        .unwrap_or(1)
+        .min(unique.len())
+        .max(1);
+    if workers == 1 {
+        // Serial fallback: the cache already dedupes repeated points.
+        return requests
+            .iter()
+            .map(|r| static_phase(&r.combo, r.batch, r.quantized))
+            .collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<StaticPlan>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| {
+                IN_SWEEP.with(|flag| flag.set(true));
+                loop {
+                    let j = next.fetch_add(1, Ordering::Relaxed);
+                    let Some(&i) = unique.get(j) else { break };
+                    let req = &requests[i];
+                    let plan = static_phase(&req.combo, req.batch, req.quantized);
+                    *slots[i].lock().unwrap() = Some(plan);
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .zip(requests)
+        .map(|(slot, req)| match slot.into_inner().unwrap() {
+            Some(plan) => plan,
+            // A duplicate of an already-planned point: cache hit.
+            None => static_phase(&req.combo, req.batch, req.quantized),
+        })
+        .collect()
+}
+
+/// Convenience cross-product sweep: every combo at every batch size, in
+/// row-major (combo-outer) order.
+pub fn plan_sweep_grid(
+    combos: &[ComboConfig],
+    batches: &[usize],
+    quantized: bool,
+) -> Vec<StaticPlan> {
+    let requests: Vec<PlanRequest> = combos
+        .iter()
+        .flat_map(|c| batches.iter().map(move |&bs| PlanRequest::new(c.clone(), bs, quantized)))
+        .collect();
+    plan_sweep(&requests)
 }
 
 impl StaticPlan {
@@ -122,5 +289,56 @@ mod tests {
                 Component::PS => assert_eq!(fmt, crate::hw::Format::Fp32),
             }
         }
+    }
+
+    #[test]
+    fn repeated_static_phase_hits_the_plan_cache() {
+        // The acceptance contract of the planning service: the second
+        // solve for the same (combo, batch, quantized) key reports zero
+        // explored nodes + the cache-hit flag, with an identical plan.
+        let c = combo("ddpg_mntncar");
+        let first = static_phase(&c, 96, true);
+        let second = static_phase(&c, 96, true);
+        assert!(second.cache_hit, "second solve must come from the cache");
+        assert_eq!(second.solution.explored, 0, "cache hits skip the ILP search");
+        assert_eq!(second.solution.assignment, first.solution.assignment);
+        assert_eq!(
+            second.solution.makespan_us.to_bits(),
+            first.solution.makespan_us.to_bits(),
+            "cached plan must be bit-identical to the fresh solve"
+        );
+        assert_eq!(second.schedule.entries.len(), first.schedule.entries.len());
+        for (a, b) in second.schedule.entries.iter().zip(&first.schedule.entries) {
+            assert_eq!(a.node, b.node);
+            assert_eq!(a.component, b.component);
+            assert_eq!(a.start_us.to_bits(), b.start_us.to_bits());
+            assert_eq!(a.finish_us.to_bits(), b.finish_us.to_bits());
+        }
+        assert_eq!(second.step_time_us().to_bits(), first.step_time_us().to_bits());
+    }
+
+    #[test]
+    fn plan_sweep_matches_individual_solves_in_order() {
+        let combos = [combo("dqn_cartpole"), combo("a2c_invpend")];
+        let batches = [48usize, 80];
+        let swept = plan_sweep_grid(&combos, &batches, true);
+        assert_eq!(swept.len(), combos.len() * batches.len());
+        for (i, plan) in swept.iter().enumerate() {
+            let c = &combos[i / batches.len()];
+            let bs = batches[i % batches.len()];
+            let solo = static_phase(c, bs, true);
+            assert_eq!(
+                plan.solution.makespan_us.to_bits(),
+                solo.solution.makespan_us.to_bits(),
+                "{} bs={bs}: sweep and solo plans disagree",
+                c.name
+            );
+            assert_eq!(plan.solution.assignment, solo.solution.assignment);
+        }
+    }
+
+    #[test]
+    fn empty_sweep_is_empty() {
+        assert!(plan_sweep(&[]).is_empty());
     }
 }

@@ -2,17 +2,28 @@
 //! Train loop, with all network compute executed through the PJRT
 //! artifacts (L2/L1) and all coordination (exploration, replay, GAE,
 //! target-network schedule, loss-scaling FSM) here at L3.
+//!
+//! The agent implementations and parameter marshaling execute PJRT
+//! artifacts, so they are gated behind the **`pjrt`** feature; the pure
+//! coordination substrates ([`agent`] trait, [`replay`], [`rollout`])
+//! are always available.
 
+#[cfg(feature = "pjrt")]
 pub mod a2c;
 pub mod agent;
+#[cfg(feature = "pjrt")]
 pub mod ddpg;
+#[cfg(feature = "pjrt")]
 pub mod dqn;
+#[cfg(feature = "pjrt")]
 pub mod network;
+#[cfg(feature = "pjrt")]
 pub mod ppo;
 pub mod replay;
 pub mod rollout;
 
 pub use agent::{Agent, StepStats};
+#[cfg(feature = "pjrt")]
 pub use network::ParamSet;
 pub use replay::ReplayBuffer;
 pub use rollout::RolloutBuffer;

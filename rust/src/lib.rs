@@ -19,6 +19,38 @@
 //! calibrated to the paper's reported constants (see DESIGN.md
 //! §Substitutions); numerics (quantization, convergence) are real and run
 //! through the PJRT artifacts.
+//!
+//! ## Feature flags
+//!
+//! * **`pjrt`** (default **off**) — compiles the PJRT execution layer:
+//!   `runtime::{client, executor}`, the DRL agents
+//!   (`drl::{dqn, ddpg, a2c, ppo, network}`) and `coordinator::trainer`.
+//!   It needs the external `xla` bindings (not on crates.io; supply via a
+//!   `[patch]`/path dependency) plus `make artifacts`.  Everything else —
+//!   the performance model, profiling, the partitioning planner, the
+//!   environments and the figure/bench machinery that does not train —
+//!   builds and tests offline with `cargo build && cargo test`.
+//!
+//! ## The static-phase planning service
+//!
+//! The paper's static phase (DSE profiling → TAPCA → ILP) is served by
+//! [`coordinator::static_phase`] as a memoized, batched planner:
+//!
+//! * **Parallel exact solver** — `partition::ilp` fans the top of the
+//!   branch-and-bound tree out over scoped threads sharing an atomic
+//!   incumbent; `solve_ilp_sequential` is the single-threaded reference
+//!   and both always return the same optimal makespan.
+//! * **Plan cache** — `partition::cache` memoizes solved plans keyed on
+//!   `(algo, net shape, batch, obs/act dims, precision, platform
+//!   fingerprint)`.  Repeated `static_phase` calls are O(1): they return
+//!   the identical schedule with `solution.explored == 0` and
+//!   `cache_hit == true`.  Set `APDRL_PLAN_CACHE=<path>` to persist the
+//!   cache as JSON (via `util::json`) across processes; entries are
+//!   re-validated against current profile shapes on every lookup.
+//! * **Batched sweeps** — [`coordinator::plan_sweep`] /
+//!   [`coordinator::plan_sweep_grid`] plan many (combo, batch, precision)
+//!   points concurrently in request order; the `figures` binary, the
+//!   benches and the examples drive their Table III/IV grids through it.
 
 pub mod coordinator;
 pub mod drl;

@@ -1,0 +1,476 @@
+//! Memoized plan store for the static phase (the "planning service"
+//! backing `coordinator::pipeline`).
+//!
+//! The static phase (DSE profiling → TAPCA → ILP partitioning) is pure:
+//! the same (algorithm, network shape, batch, precision mode, platform)
+//! always produces the same optimal assignment.  Re-solving it for every
+//! figure, bench and sweep point is the dominant offline cost, so solved
+//! plans are cached under a [`PlanKey`] covering exactly the solver
+//! inputs:
+//!
+//! `algo | net fingerprint | batch | obs/act dims | quantized | platform
+//! fingerprint`
+//!
+//! A process-wide cache ([`global`]) makes repeated
+//! `coordinator::static_phase` calls O(1) after the first solve.  Set the
+//! `APDRL_PLAN_CACHE` environment variable to a file path to persist the
+//! cache as JSON (via `util::json`) across runs; without it the global
+//! cache is memory-only.  Cached entries are validated against the
+//! current profile shapes on lookup, so a stale file from an older model
+//! degrades to a miss, never a wrong plan.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, OnceLock};
+
+use crate::graph::{NetSpec, TrainSpec};
+use crate::hw::{Component, ComponentSpec, Platform};
+use crate::profile::NodeProfile;
+use crate::util::json::Json;
+
+use super::model::{Assignment, Placement, Solution};
+
+/// Bump whenever an analytic-model constant *outside* [`Platform`]
+/// changes (pl_model/aie_model/ps_model pragma constants, master-sync
+/// overheads, schedule semantics...).  Persisted plans from an older
+/// model version then key apart instead of being served stale.
+const MODEL_VERSION: u32 = 1;
+
+/// Canonical cache key for one static-phase problem instance.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey(String);
+
+impl PlanKey {
+    /// Key for a training-step spec on a platform.  Everything the ILP's
+    /// inputs depend on is folded in; nothing else is.
+    pub fn new(spec: &TrainSpec, quantized: bool, platform: &Platform) -> PlanKey {
+        PlanKey(format!(
+            "{}|{}|bs{}|obs{}|act{}|{}|{}",
+            spec.algo.name(),
+            net_fingerprint(&spec.net),
+            spec.batch,
+            spec.obs_dim,
+            spec.act_dim,
+            if quantized { "quant" } else { "fp32" },
+            platform_fingerprint(platform),
+        ))
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+}
+
+/// Network-shape fingerprint (layer dims only — weights don't exist yet
+/// at planning time).
+fn net_fingerprint(net: &NetSpec) -> String {
+    match net {
+        NetSpec::Mlp { sizes } => {
+            let dims: Vec<String> = sizes.iter().map(|d| d.to_string()).collect();
+            format!("mlp:{}", dims.join("-"))
+        }
+        NetSpec::Conv { in_hw, in_ch, conv, fc } => {
+            let convs: Vec<String> =
+                conv.iter().map(|(c, k, s)| format!("{c}.{k}.{s}")).collect();
+            let fcs: Vec<String> = fc.iter().map(|d| d.to_string()).collect();
+            format!("conv:{in_hw}x{in_hw}x{in_ch};{};fc{}", convs.join(";"), fcs.join("-"))
+        }
+    }
+}
+
+/// Platform fingerprint: *every* constant the profiling and schedule
+/// models read (component specs, link model, resource pools), prefixed
+/// with [`MODEL_VERSION`].  Two platforms with equal fingerprints
+/// produce identical profiles, so a changed model constant can never
+/// serve a stale persisted plan.
+fn platform_fingerprint(p: &Platform) -> String {
+    format!(
+        "v{MODEL_VERSION}|{}|ps[{}]pl[{}]aie[{}]|comm[{};{};{};{}]|pools[{};{};{};{};{}]",
+        p.name,
+        spec_fingerprint(&p.ps),
+        spec_fingerprint(&p.pl),
+        spec_fingerprint(&p.aie),
+        p.comm.ps_pl_lat_us,
+        p.comm.ps_pl_gbps,
+        p.comm.pl_aie_lat_us,
+        p.comm.pl_aie_gbps,
+        p.pl_dsp,
+        p.pl_kluts,
+        p.pl_mem_mb,
+        p.aie_tiles,
+        p.aie_lanes_per_tile,
+    )
+}
+
+fn spec_fingerprint(s: &ComponentSpec) -> String {
+    format!(
+        "c{};i{};l{};e{};m{};f{}/{}/{}",
+        s.clock_mhz,
+        s.init_us,
+        s.max_mac_lanes,
+        s.efficiency,
+        s.mem_gbps,
+        s.fmt_fp32,
+        s.fmt_fp16,
+        s.fmt_bf16
+    )
+}
+
+/// One memoized solve result.  `explored` is deliberately not stored: a
+/// cache hit reports `explored == 0`, which is also how callers can tell
+/// a hit from a fresh solve.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CachedPlan {
+    pub assignment: Assignment,
+    pub makespan_us: f64,
+}
+
+impl CachedPlan {
+    fn to_solution(&self) -> Solution {
+        Solution {
+            assignment: self.assignment.clone(),
+            makespan_us: self.makespan_us,
+            explored: 0,
+        }
+    }
+}
+
+/// In-memory plan cache with optional JSON persistence.
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    entries: HashMap<String, CachedPlan>,
+    path: Option<PathBuf>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl PlanCache {
+    /// Memory-only cache.
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// Cache backed by a JSON file: loads any valid existing content.
+    /// Writes happen on [`save`](PlanCache::save) (merging with what is
+    /// on disk — see there).  A missing or corrupt file is an empty
+    /// cache, never an error.
+    pub fn with_persistence(path: impl AsRef<Path>) -> PlanCache {
+        let path = path.as_ref().to_path_buf();
+        let mut cache = PlanCache { path: Some(path.clone()), ..PlanCache::default() };
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            if let Ok(root) = Json::parse(&text) {
+                cache.absorb(&root);
+            }
+        }
+        cache
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Drop every in-memory entry (hit/miss counters keep running).
+    /// The backing file, if any, is untouched: persistence merges on
+    /// save, so clearing memory (e.g. the benches forcing cold solves)
+    /// can never destroy previously persisted plans.
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    /// Look up a plan and validate it against the profiles the caller is
+    /// about to schedule with.  Any shape mismatch (stale file, changed
+    /// model) is a miss.
+    pub fn lookup(&mut self, key: &PlanKey, profiles: &[NodeProfile]) -> Option<Solution> {
+        let valid = self
+            .entries
+            .get(key.as_str())
+            .filter(|plan| plan_is_valid(plan, profiles))
+            .map(CachedPlan::to_solution);
+        if valid.is_some() {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+        }
+        valid
+    }
+
+    /// Memoize a fresh solve in memory.  Persistence is a separate,
+    /// explicit step ([`save`](PlanCache::save), or [`global_insert`]
+    /// for the process-wide cache) so callers can keep disk I/O outside
+    /// their locks.
+    pub fn insert(&mut self, key: &PlanKey, solution: &Solution) {
+        self.entries.insert(
+            key.as_str().to_string(),
+            CachedPlan {
+                assignment: solution.assignment.clone(),
+                makespan_us: solution.makespan_us,
+            },
+        );
+    }
+
+    /// Write the cache file (no-op for memory-only caches), merging the
+    /// in-memory entries into whatever is currently on disk.
+    pub fn save(&self) {
+        if let Some(path) = &self.path {
+            write_merged(path, self.entries.clone());
+        }
+    }
+
+    /// Merge entries parsed from a cache file; malformed entries are
+    /// skipped silently (forward/backward compatibility).
+    fn absorb(&mut self, root: &Json) {
+        if root.get("version").and_then(Json::as_f64) != Some(1.0) {
+            return;
+        }
+        let Some(plans) = root.get("plans").and_then(Json::as_obj) else { return };
+        for (key, entry) in plans {
+            let Some(makespan_us) = entry.get("makespan_us").and_then(Json::as_f64) else {
+                continue;
+            };
+            let Some(raw) = entry.get("assignment").and_then(Json::as_arr) else { continue };
+            let mut assignment: Assignment = Vec::with_capacity(raw.len());
+            let mut ok = true;
+            for item in raw {
+                let pair = item.as_arr().unwrap_or(&[]);
+                let comp = pair
+                    .first()
+                    .and_then(Json::as_str)
+                    .and_then(component_from_name);
+                let cand = pair.get(1).and_then(Json::as_usize);
+                match (comp, cand) {
+                    (Some(component), Some(candidate)) => {
+                        assignment.push(Placement { component, candidate });
+                    }
+                    _ => {
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if ok && makespan_us.is_finite() {
+                self.entries.insert(key.clone(), CachedPlan { assignment, makespan_us });
+            }
+        }
+    }
+}
+
+fn entries_to_json(entries: &HashMap<String, CachedPlan>) -> Json {
+    let mut plans = std::collections::BTreeMap::new();
+    for (key, plan) in entries {
+        let assignment: Vec<Json> = plan
+            .assignment
+            .iter()
+            .map(|p| {
+                Json::Arr(vec![
+                    Json::Str(p.component.name().to_string()),
+                    Json::Num(p.candidate as f64),
+                ])
+            })
+            .collect();
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("makespan_us".to_string(), Json::Num(plan.makespan_us));
+        obj.insert("assignment".to_string(), Json::Arr(assignment));
+        plans.insert(key.clone(), Json::Obj(obj));
+    }
+    let mut root = std::collections::BTreeMap::new();
+    root.insert("version".to_string(), Json::Num(1.0));
+    root.insert("plans".to_string(), Json::Obj(plans));
+    Json::Obj(root)
+}
+
+/// Merge `entries` into whatever is on disk at `path` (memory wins on
+/// key conflicts) and write the union back.  Because saves merge, a
+/// memory-side [`PlanCache::clear`] or a concurrent process can never
+/// truncate previously persisted plans — a racing writer loses at most
+/// its own last write.  Best-effort: an unwritable path must not take
+/// down the planning service, the cache just stays memory-only.
+fn write_merged(path: &Path, entries: HashMap<String, CachedPlan>) {
+    let mut disk = PlanCache::default();
+    if let Ok(text) = std::fs::read_to_string(path) {
+        if let Ok(root) = Json::parse(&text) {
+            disk.absorb(&root);
+        }
+    }
+    disk.entries.extend(entries);
+    if let Some(dir) = path.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    let _ = std::fs::write(path, entries_to_json(&disk.entries).to_string());
+}
+
+/// Insert into the process-wide cache and persist it (when
+/// `APDRL_PLAN_CACHE` is set), with the disk I/O performed *outside*
+/// the cache lock so concurrent sweep workers doing lookups never block
+/// behind the filesystem.
+pub fn global_insert(key: &PlanKey, solution: &Solution) {
+    let snapshot = {
+        let mut guard = global().lock().unwrap();
+        guard.insert(key, solution);
+        guard.path.clone().map(|path| (path, guard.entries.clone()))
+    };
+    if let Some((path, entries)) = snapshot {
+        write_merged(&path, entries);
+    }
+}
+
+/// A cached assignment is only usable if every placement indexes a
+/// candidate that exists in the profiles being scheduled.
+fn plan_is_valid(plan: &CachedPlan, profiles: &[NodeProfile]) -> bool {
+    plan.assignment.len() == profiles.len()
+        && plan.assignment.iter().zip(profiles).all(|(p, prof)| match p.component {
+            Component::PL => p.candidate < prof.pl.len(),
+            Component::AIE => p.candidate < prof.aie.len(),
+            Component::PS => p.candidate == 0,
+        })
+}
+
+fn component_from_name(name: &str) -> Option<Component> {
+    match name {
+        "PS" => Some(Component::PS),
+        "PL" => Some(Component::PL),
+        "AIE" => Some(Component::AIE),
+        _ => None,
+    }
+}
+
+/// The process-wide plan cache used by `coordinator::static_phase`.
+/// File-backed iff `APDRL_PLAN_CACHE` names a path at first use.
+pub fn global() -> &'static Mutex<PlanCache> {
+    static GLOBAL: OnceLock<Mutex<PlanCache>> = OnceLock::new();
+    GLOBAL.get_or_init(|| {
+        let cache = match std::env::var("APDRL_PLAN_CACHE") {
+            Ok(path) if !path.is_empty() => PlanCache::with_persistence(path),
+            _ => PlanCache::new(),
+        };
+        Mutex::new(cache)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{build_train_graph, Algo, TrainSpec};
+    use crate::hw::vek280;
+    use crate::partition::{solve_ilp, Problem};
+    use crate::profile::profile_dag;
+
+    fn spec(batch: usize) -> TrainSpec {
+        TrainSpec {
+            algo: Algo::Dqn,
+            net: NetSpec::mlp(&[4, 16, 2]),
+            batch,
+            obs_dim: 4,
+            act_dim: 2,
+        }
+    }
+
+    fn solved(batch: usize) -> (PlanKey, Solution, Vec<NodeProfile>) {
+        let platform = vek280();
+        let s = spec(batch);
+        let dag = build_train_graph(&s);
+        let profiles = profile_dag(&dag, &platform, true);
+        let problem = Problem::new(&dag, &profiles, &platform, true);
+        let solution = solve_ilp(&problem);
+        (PlanKey::new(&s, true, &platform), solution, profiles)
+    }
+
+    #[test]
+    fn key_separates_problem_dimensions() {
+        let p = vek280();
+        let base = PlanKey::new(&spec(64), true, &p);
+        assert_eq!(base, PlanKey::new(&spec(64), true, &p));
+        assert_ne!(base, PlanKey::new(&spec(128), true, &p), "batch must key");
+        assert_ne!(base, PlanKey::new(&spec(64), false, &p), "precision must key");
+        let mut other = spec(64);
+        other.net = NetSpec::mlp(&[4, 32, 2]);
+        assert_ne!(base, PlanKey::new(&other, true, &p), "net shape must key");
+        let mut fx = crate::hw::fixar_platform();
+        fx.pl_dsp = p.pl_dsp; // same pools, different clocks
+        assert_ne!(base, PlanKey::new(&spec(64), true, &fx), "platform must key");
+    }
+
+    #[test]
+    fn hit_returns_identical_plan_with_zero_explored() {
+        let (key, solution, profiles) = solved(32);
+        let mut cache = PlanCache::new();
+        assert!(cache.lookup(&key, &profiles).is_none());
+        cache.insert(&key, &solution);
+        let hit = cache.lookup(&key, &profiles).expect("must hit after insert");
+        assert_eq!(hit.assignment, solution.assignment);
+        assert_eq!(hit.makespan_us.to_bits(), solution.makespan_us.to_bits());
+        assert_eq!(hit.explored, 0);
+        assert_eq!((cache.hits, cache.misses), (1, 1));
+    }
+
+    #[test]
+    fn stale_shapes_degrade_to_miss() {
+        let (key, solution, mut profiles) = solved(32);
+        let mut cache = PlanCache::new();
+        cache.insert(&key, &solution);
+        // candidate list shrank (model changed) → candidate index invalid
+        for prof in profiles.iter_mut() {
+            prof.pl.clear();
+            prof.aie.clear();
+        }
+        assert!(cache.lookup(&key, &profiles).is_none());
+        // wrong node count → invalid
+        let (_, _, longer) = solved(64);
+        let truncated = &longer[..longer.len() - 1];
+        assert!(cache.lookup(&key, truncated).is_none());
+    }
+
+    #[test]
+    fn persistence_round_trips_bit_identically() {
+        let (key, solution, profiles) = solved(32);
+        let dir = std::env::temp_dir().join("apdrl_plan_cache_test");
+        let path = dir.join("plans.json");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut cache = PlanCache::with_persistence(&path);
+            cache.insert(&key, &solution);
+            cache.save();
+        }
+        let mut reloaded = PlanCache::with_persistence(&path);
+        assert_eq!(reloaded.len(), 1);
+        let hit = reloaded.lookup(&key, &profiles).expect("persisted plan must hit");
+        assert_eq!(hit.assignment, solution.assignment);
+        assert_eq!(hit.makespan_us.to_bits(), solution.makespan_us.to_bits());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn saves_merge_with_disk_so_clear_loses_nothing() {
+        let (key_a, sol_a, profiles) = solved(32);
+        let (key_b, sol_b, _) = solved(64);
+        let dir = std::env::temp_dir().join("apdrl_plan_cache_test");
+        let path = dir.join("merge.json");
+        let _ = std::fs::remove_file(&path);
+        let mut cache = PlanCache::with_persistence(&path);
+        cache.insert(&key_a, &sol_a);
+        cache.save();
+        // Memory cleared (as the cold-solve benches do), then a new plan
+        // saved: the file must end up with the union, not just B.
+        cache.clear();
+        cache.insert(&key_b, &sol_b);
+        cache.save();
+        let mut reloaded = PlanCache::with_persistence(&path);
+        assert_eq!(reloaded.len(), 2, "merge-on-save must keep A and add B");
+        assert!(reloaded.lookup(&key_a, &profiles).is_some());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_file_is_an_empty_cache() {
+        let dir = std::env::temp_dir().join("apdrl_plan_cache_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("corrupt.json");
+        std::fs::write(&path, "{not json").unwrap();
+        let cache = PlanCache::with_persistence(&path);
+        assert!(cache.is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -20,7 +20,8 @@ pub fn greedy(problem: &Problem) -> Solution {
             .options(i)
             .into_iter()
             .min_by(|a, b| {
-                problem.latency(i, *a).partial_cmp(&problem.latency(i, *b)).unwrap()
+                // total_cmp: a NaN latency sorts last instead of panicking.
+                problem.latency(i, *a).total_cmp(&problem.latency(i, *b))
             })
             .expect("every node has a PL candidate");
         assignment.push(best);
@@ -49,7 +50,7 @@ pub fn heft(problem: &Problem) -> Solution {
         rank[i] = mean_lat[i] + succ_max;
     }
     let mut by_rank: Vec<usize> = (0..n).collect();
-    by_rank.sort_by(|&a, &b| rank[b].partial_cmp(&rank[a]).unwrap());
+    by_rank.sort_by(|&a, &b| rank[b].total_cmp(&rank[a]));
 
     // Incremental placement honoring precedence (process by rank, which
     // is a valid topological order for HEFT since rank(parent) >
@@ -78,7 +79,8 @@ pub fn heft(problem: &Problem) -> Solution {
             }
             let start = ready.max(free[comp_idx(p.component)]);
             let eft = start + problem.latency(i, p);
-            if best.as_ref().map_or(true, |(b, _, _)| eft < *b) {
+            // total_cmp keeps a NaN EFT from sticking as the running best.
+            if best.as_ref().map_or(true, |(b, _, _)| eft.total_cmp(b).is_lt()) {
                 best = Some((eft, p, start));
             }
         }

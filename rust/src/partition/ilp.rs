@@ -12,8 +12,21 @@
 //! or when the remaining minimum resource demand cannot fit.  For
 //! paper-scale DAGs (≤ ~40 nodes, ≤ 6 options each) this closes in
 //! milliseconds; `max_explored` caps pathological cases and falls back
-//! to HEFT (never triggered by the Table III workloads — asserted in
-//! benches).
+//! to a `local_search`-polished incumbent (never triggered by the
+//! Table III workloads — asserted in benches).
+//!
+//! **Parallel search** ([`solve_ilp`]): the top of the search tree is
+//! expanded breadth-first into fixed placement *prefixes* (the root
+//! node's options, then the next node's, … until there are a few tasks
+//! per worker).  A scoped-thread worker pool drains the prefix queue,
+//! each worker running the same sequential DFS below its fixed prefix.
+//! Workers share one incumbent makespan encoded as an `AtomicU64`
+//! (f64 bits), so a bound improvement found by any worker immediately
+//! tightens everyone's pruning.  Both modes search exactly, so
+//! [`solve_ilp`] and [`solve_ilp_sequential`] always agree on the
+//! optimal makespan (asserted in tests over the Table III combos).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 
 use crate::Micros;
 
@@ -21,119 +34,255 @@ use super::heuristics::heft;
 use super::model::{Assignment, Placement, Problem, Solution};
 use super::schedule::evaluate;
 
-/// Exploration cap before falling back to HEFT.
+/// Exploration cap before falling back to the polished incumbent.
 const DEFAULT_MAX_EXPLORED: usize = 300_000;
+
+/// Upper bound on worker threads (the DAGs are small; past this the
+/// queue-drain overhead outweighs the extra cores).
+const MAX_WORKERS: usize = 16;
+
+/// Prefix tasks generated per worker: enough that an unlucky worker
+/// stuck with a dense subtree does not serialize the whole solve.
+const TASKS_PER_WORKER: usize = 4;
+
+/// Shared incumbent makespan: f64 bits in an `AtomicU64`.  Workers only
+/// ever store makespans of *evaluated complete assignments*, so the
+/// bound stays exact; `try_improve` is a CAS loop keeping the minimum.
+struct SharedBound {
+    bits: AtomicU64,
+}
+
+impl SharedBound {
+    fn new(initial: Micros) -> Self {
+        SharedBound { bits: AtomicU64::new(initial.to_bits()) }
+    }
+
+    fn get(&self) -> Micros {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+
+    /// Lower the bound to `m` if it improves it; true when `m` won.
+    fn try_improve(&self, m: Micros) -> bool {
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            if m >= f64::from_bits(cur) {
+                return false;
+            }
+            match self.bits.compare_exchange_weak(
+                cur,
+                m.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+}
+
+/// Immutable search context shared by all workers of one solve.
+struct SearchCtx<'p, 'a> {
+    problem: &'p Problem<'a>,
+    /// Branch order (MM nodes by descending FLOPs first).
+    order: Vec<usize>,
+    /// Per-node placement options, pre-sorted by ascending latency so
+    /// good solutions are found early.
+    options: Vec<Vec<Placement>>,
+    min_lat: Vec<Micros>,
+    bound: SharedBound,
+    explored: AtomicUsize,
+    max_explored: usize,
+    aborted: AtomicBool,
+}
+
+impl<'p, 'a> SearchCtx<'p, 'a> {
+    /// Critical-path lower bound with assigned latencies where fixed.
+    fn lower_bound(&self, assignment: &[Option<Placement>]) -> Micros {
+        self.problem.dag.critical_path(|i| match assignment[i] {
+            Some(p) => self.problem.latency(i, p),
+            None => self.min_lat[i],
+        })
+    }
+
+    /// Sequential DFS below a fixed prefix.  `best` is the calling
+    /// worker's local optimum (assignments are only kept locally; the
+    /// shared state carries just the scalar bound).
+    fn dfs(
+        &self,
+        depth: usize,
+        assignment: &mut Vec<Option<Placement>>,
+        best: &mut Option<(Micros, Assignment)>,
+    ) {
+        if self.aborted.load(Ordering::Relaxed) {
+            return;
+        }
+        let seen = self.explored.fetch_add(1, Ordering::Relaxed) + 1;
+        if seen > self.max_explored {
+            self.aborted.store(true, Ordering::Relaxed);
+            return;
+        }
+        if depth == self.order.len() {
+            let full: Assignment = assignment.iter().map(|p| p.unwrap()).collect();
+            let m = evaluate(self.problem, &full).makespan_us;
+            // A NaN makespan (degenerate profile) must never become the
+            // incumbent: it would disable all pruning and win every
+            // comparison by vacuous falsehood.
+            if m.is_finite() {
+                self.bound.try_improve(m);
+                if best.as_ref().map_or(true, |(b, _)| m < *b) {
+                    *best = Some((m, full));
+                }
+            }
+            return;
+        }
+        if self.lower_bound(assignment) >= self.bound.get() {
+            return;
+        }
+        let node = self.order[depth];
+        for &p in &self.options[node] {
+            assignment[node] = Some(p);
+            self.dfs(depth + 1, assignment, best);
+            assignment[node] = None;
+        }
+    }
+
+    /// Run the DFS under one prefix of placements for `order[0..k]`.
+    fn run_prefix(&self, prefix: &[Placement], best: &mut Option<(Micros, Assignment)>) {
+        let mut assignment: Vec<Option<Placement>> = vec![None; self.problem.dag.len()];
+        for (d, &p) in prefix.iter().enumerate() {
+            assignment[self.order[d]] = Some(p);
+        }
+        self.dfs(prefix.len(), &mut assignment, best);
+    }
+}
 
 pub fn solve_ilp(problem: &Problem) -> Solution {
     solve_ilp_capped(problem, DEFAULT_MAX_EXPLORED)
 }
 
+/// Parallel solve with an explicit exploration cap.
 pub fn solve_ilp_capped(problem: &Problem, max_explored: usize) -> Solution {
+    solve(problem, max_explored, worker_count())
+}
+
+/// Single-threaded solve — the reference the parallel path is tested
+/// against (identical makespans) and a determinism escape hatch.
+pub fn solve_ilp_sequential(problem: &Problem, max_explored: usize) -> Solution {
+    solve(problem, max_explored, 1)
+}
+
+/// Default-cap solve with an explicit worker count.  The planning
+/// service passes 1 from inside its own `plan_sweep` fan-out so the two
+/// parallelism levels don't multiply into cores × B&B-workers threads.
+pub fn solve_ilp_with_workers(problem: &Problem, workers: usize) -> Solution {
+    solve(problem, DEFAULT_MAX_EXPLORED, workers.max(1))
+}
+
+fn worker_count() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(MAX_WORKERS)
+}
+
+fn solve(problem: &Problem, max_explored: usize, workers: usize) -> Solution {
     let n = problem.dag.len();
     // Branch order: MM nodes by descending FLOPs first (they decide the
     // makespan), then non-MM nodes (PL-pinned, only config choice).
+    // NaN-safe: total_cmp, not partial_cmp().unwrap() — a degenerate
+    // profile latency must not panic the solver.
     let mut order: Vec<usize> = (0..n).collect();
     order.sort_by(|&a, &b| {
         let (ma, mb) = (problem.dag.nodes[a].kind.is_mm(), problem.dag.nodes[b].kind.is_mm());
-        mb.cmp(&ma).then(
-            problem.dag.nodes[b]
-                .flops()
-                .partial_cmp(&problem.dag.nodes[a].flops())
-                .unwrap(),
-        )
+        mb.cmp(&ma)
+            .then(problem.dag.nodes[b].flops().total_cmp(&problem.dag.nodes[a].flops()))
     });
 
-    // Seed incumbent with HEFT — gives the B&B a strong initial bound.
+    // Seed incumbent with HEFT — gives the B&B a strong initial bound
+    // and guarantees the result is never worse than the heuristic.
     let seed = heft(problem);
-    let best_assignment = seed.assignment.clone();
-    let best_makespan = seed.makespan_us;
 
-    // Precompute per-node options and min latencies.  Under the
-    // shared-accelerator semantics every candidate fits the resource
-    // pools by construction (profiler filters), so capacity never prunes
-    // and the search is the paper's pure binary x_ij.
-    let options: Vec<Vec<Placement>> = (0..n).map(|i| problem.options(i)).collect();
+    // Per-node options sorted by latency (shared-accelerator semantics:
+    // every candidate fits the pools by construction, so capacity never
+    // prunes and the search is the paper's pure binary x_ij).
+    let options: Vec<Vec<Placement>> = (0..n)
+        .map(|i| {
+            let mut opts = problem.options(i);
+            opts.sort_by(|a, b| {
+                problem.latency(i, *a).total_cmp(&problem.latency(i, *b))
+            });
+            opts
+        })
+        .collect();
     let min_lat: Vec<Micros> = (0..n).map(|i| problem.min_latency(i)).collect();
 
-    struct Ctx<'p, 'a> {
-        problem: &'p Problem<'a>,
-        order: Vec<usize>,
-        options: Vec<Vec<Placement>>,
-        min_lat: Vec<Micros>,
-        explored: usize,
-        max_explored: usize,
-        best_makespan: Micros,
-        best_assignment: Assignment,
-        aborted: bool,
-    }
-
-    impl<'p, 'a> Ctx<'p, 'a> {
-        /// Critical-path lower bound with assigned latencies where fixed.
-        fn lower_bound(&self, assignment: &[Option<Placement>]) -> Micros {
-            self.problem.dag.critical_path(|i| match assignment[i] {
-                Some(p) => self.problem.latency(i, p),
-                None => self.min_lat[i],
-            })
-        }
-
-        fn dfs(&mut self, depth: usize, assignment: &mut Vec<Option<Placement>>) {
-            if self.aborted {
-                return;
-            }
-            self.explored += 1;
-            if self.explored > self.max_explored {
-                self.aborted = true;
-                return;
-            }
-            if depth == self.order.len() {
-                let full: Assignment = assignment.iter().map(|p| p.unwrap()).collect();
-                let sched = evaluate(self.problem, &full);
-                if sched.makespan_us < self.best_makespan {
-                    self.best_makespan = sched.makespan_us;
-                    self.best_assignment = full;
-                }
-                return;
-            }
-            if self.lower_bound(assignment) >= self.best_makespan {
-                return;
-            }
-            let node = self.order[depth];
-            // Sort options by latency so good solutions are found early.
-            let mut opts = self.options[node].clone();
-            opts.sort_by(|a, b| {
-                self.problem
-                    .latency(node, *a)
-                    .partial_cmp(&self.problem.latency(node, *b))
-                    .unwrap()
-            });
-            for p in opts {
-                assignment[node] = Some(p);
-                self.dfs(depth + 1, assignment);
-                assignment[node] = None;
-            }
-        }
-    }
-
-    let mut ctx = Ctx {
+    // The cap bounds wall time; parallel workers drain nodes
+    // concurrently (and redundantly explore a little until the shared
+    // bound tightens), so the node budget scales with the worker count
+    // to keep its wall-time meaning stable across both modes.
+    let workers = workers.max(1);
+    let ctx = SearchCtx {
         problem,
         order,
         options,
         min_lat,
-        explored: 0,
-        max_explored,
-        best_makespan,
-        best_assignment,
-        aborted: false,
+        bound: SharedBound::new(seed.makespan_us),
+        explored: AtomicUsize::new(0),
+        max_explored: max_explored.saturating_mul(workers),
+        aborted: AtomicBool::new(false),
     };
-    let mut assignment: Vec<Option<Placement>> = vec![None; n];
-    ctx.dfs(0, &mut assignment);
+
+    // Expand the top of the tree into prefix tasks (in option-sorted
+    // order, so sequential mode explores exactly like a plain DFS).
+    let prefixes = expand_prefixes(&ctx, workers * TASKS_PER_WORKER);
+
+    let mut local_bests: Vec<Option<(Micros, Assignment)>> = Vec::new();
+    if workers <= 1 || prefixes.len() <= 1 {
+        let mut best = None;
+        for prefix in &prefixes {
+            ctx.run_prefix(prefix, &mut best);
+        }
+        local_bests.push(best);
+    } else {
+        let next = AtomicUsize::new(0);
+        let threads = workers.min(prefixes.len());
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..threads)
+                .map(|_| {
+                    s.spawn(|| {
+                        let mut best = None;
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            match prefixes.get(i) {
+                                Some(prefix) => ctx.run_prefix(prefix, &mut best),
+                                None => break,
+                            }
+                        }
+                        best
+                    })
+                })
+                .collect();
+            for h in handles {
+                local_bests.push(h.join().expect("B&B worker panicked"));
+            }
+        });
+    }
+
+    // Global winner: best across workers, never worse than the seed.
+    let mut best_makespan = seed.makespan_us;
+    let mut best_assignment = seed.assignment;
+    for found in local_bests.into_iter().flatten() {
+        // `|| is_nan()` displaces a NaN HEFT seed with any finite result.
+        if found.0 < best_makespan || best_makespan.is_nan() {
+            best_makespan = found.0;
+            best_assignment = found.1;
+        }
+    }
 
     let incumbent = Solution {
-        assignment: ctx.best_assignment,
-        makespan_us: ctx.best_makespan,
-        explored: ctx.explored,
+        assignment: best_assignment,
+        makespan_us: best_makespan,
+        explored: ctx.explored.load(Ordering::Relaxed),
     };
-    if ctx.aborted {
+    if ctx.aborted.load(Ordering::Relaxed) {
         // Search was capped: polish the incumbent with local search so
         // large graphs still end near-optimal (B&B alone may be stuck at
         // the HEFT seed).
@@ -141,6 +290,33 @@ pub fn solve_ilp_capped(problem: &Problem, max_explored: usize) -> Solution {
     } else {
         incumbent
     }
+}
+
+/// Breadth-first expansion of the first few branch levels into fixed
+/// placement prefixes (at least `target` of them, options permitting).
+/// Each prefix becomes one worker task.
+fn expand_prefixes(ctx: &SearchCtx, target: usize) -> Vec<Vec<Placement>> {
+    let mut prefixes: Vec<Vec<Placement>> = vec![Vec::new()];
+    let mut depth = 0;
+    while prefixes.len() < target && depth < ctx.order.len() {
+        let node = ctx.order[depth];
+        if ctx.options[node].is_empty() {
+            // No feasible placement: nothing below this level can be
+            // completed; keep the (doomed) prefixes for the DFS to report.
+            break;
+        }
+        let mut next = Vec::with_capacity(prefixes.len() * ctx.options[node].len());
+        for prefix in &prefixes {
+            for &p in &ctx.options[node] {
+                let mut np = prefix.clone();
+                np.push(p);
+                next.push(np);
+            }
+        }
+        prefixes = next;
+        depth += 1;
+    }
+    prefixes
 }
 
 /// Exhaustive enumeration (tests only — cross-checks B&B optimality).
@@ -230,6 +406,70 @@ mod tests {
                 h_sol.makespan_us
             );
         }
+    }
+
+    #[test]
+    fn parallel_matches_sequential_on_table3_combos() {
+        // The parallel prefix fan-out and the plain DFS are both exact
+        // searches: equal optimal makespans, always.
+        use crate::coordinator::config::combo;
+        use crate::partition::Problem;
+        for name in ["dqn_cartpole", "a2c_invpend", "ddpg_lunar", "ddpg_mntncar"] {
+            let c = combo(name);
+            let dag = build_train_graph(&c.train_spec(c.batch));
+            let platform = vek280();
+            let profs = profile_dag(&dag, &platform, true);
+            let problem = Problem::new(&dag, &profs, &platform, true);
+            // Generous cap: equality is only guaranteed when neither
+            // search aborts (parallel workers can explore a few times
+            // more nodes than the DFS before the shared bound tightens).
+            let par = solve_ilp_capped(&problem, 2_000_000);
+            let seq = solve_ilp_sequential(&problem, 2_000_000);
+            assert!(
+                (par.makespan_us - seq.makespan_us).abs() < 1e-9,
+                "{name}: parallel {} vs sequential {}",
+                par.makespan_us,
+                seq.makespan_us
+            );
+        }
+    }
+
+    #[test]
+    fn capped_search_falls_back_but_never_below_heft() {
+        // Regression: with the exploration cap slammed shut the solver
+        // must return the (local_search-polished) HEFT incumbent, never
+        // anything worse.
+        let (dag, profs, platform) = problem_for(&[8, 400, 300, 2], 512);
+        let problem = Problem::new(&dag, &profs, &platform, true);
+        let heft_sol = super::super::heuristics::heft(&problem);
+        for cap in [1usize, 5, 50, 500] {
+            for sol in [
+                solve_ilp_capped(&problem, cap),
+                solve_ilp_sequential(&problem, cap),
+            ] {
+                assert!(
+                    sol.makespan_us <= heft_sol.makespan_us + 1e-6,
+                    "cap {cap}: {} worse than HEFT {}",
+                    sol.makespan_us,
+                    heft_sol.makespan_us
+                );
+                assert!(problem.feasible(&sol.assignment));
+            }
+        }
+    }
+
+    #[test]
+    fn nan_latency_does_not_panic_the_solver() {
+        // A degenerate profile (NaN latency on one candidate) used to
+        // panic in the partial_cmp().unwrap() sorts; total_cmp orders it
+        // deterministically instead.
+        let (dag, mut profs, platform) = problem_for(&[4, 8, 2], 16);
+        if let Some(c) = profs[0].pl.first_mut() {
+            c.latency_us = f64::NAN;
+        }
+        let problem = Problem::new(&dag, &profs, &platform, true);
+        let sol = solve_ilp(&problem);
+        assert_eq!(sol.assignment.len(), dag.len());
     }
 
     #[test]

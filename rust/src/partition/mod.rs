@@ -7,15 +7,22 @@
 //! communication charged on cut edges and master-weight sync charged by
 //! the quantization policy.
 //!
-//! Solvers: exact branch-and-bound ([`ilp`]) with optimality
-//! cross-checked against exhaustive enumeration in tests, plus greedy and
-//! HEFT baselines ([`heuristics`]) used for the ablation benches.
+//! Solvers: exact branch-and-bound ([`ilp`]) — parallel prefix fan-out
+//! over scoped threads with an atomically shared incumbent, optimality
+//! cross-checked against exhaustive enumeration and the sequential
+//! reference in tests — plus greedy and HEFT baselines ([`heuristics`])
+//! used for the ablation benches.  Solved plans are memoized by
+//! [`cache`] (keyed on algo/net/batch/precision/platform, optional JSON
+//! persistence), which is what makes the static phase a cheap, reusable
+//! planning service.
 
+pub mod cache;
 pub mod heuristics;
 pub mod ilp;
 pub mod model;
 pub mod schedule;
 
-pub use ilp::solve_ilp;
+pub use cache::{PlanCache, PlanKey};
+pub use ilp::{solve_ilp, solve_ilp_capped, solve_ilp_sequential};
 pub use model::{Assignment, Placement, Problem, Solution};
 pub use schedule::{evaluate, ScheduleEntry};

@@ -8,11 +8,21 @@
 //!
 //! Python never runs here: the artifacts directory is the complete
 //! contract between the build-time compile path and this runtime.
+//!
+//! The executable path ([`client`], [`executor`]) depends on the external
+//! `xla` bindings and is gated behind the **`pjrt`** feature (off by
+//! default — the offline build has neither the bindings nor compiled
+//! artifacts).  The artifact manifest parser ([`artifact`]) is pure rust
+//! and always available.
 
 pub mod artifact;
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(feature = "pjrt")]
 pub mod executor;
 
 pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
+#[cfg(feature = "pjrt")]
 pub use client::Runtime;
+#[cfg(feature = "pjrt")]
 pub use executor::Executor;

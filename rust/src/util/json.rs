@@ -1,6 +1,9 @@
-//! Minimal JSON parser — just enough to read `artifacts/manifest.json`
-//! (and write simple reports).  serde is not in the vendored crate set, so
-//! this is one of the substrates we build ourselves.
+//! Minimal JSON parser *and writer* — enough to read
+//! `artifacts/manifest.json`, persist the partition plan cache
+//! (`partition::cache`) and write simple reports.  serde is not in the
+//! vendored crate set, so this is one of the substrates we build
+//! ourselves.  Serialization is the `Display` impl; `Json::parse(
+//! &v.to_string())` round-trips every finite value.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -70,6 +73,42 @@ impl Json {
         match self {
             Json::Bool(b) => Some(*b),
             _ => None,
+        }
+    }
+}
+
+/// Compact serializer (no insignificant whitespace).  Non-finite numbers
+/// have no JSON representation and degrade to `null`; rust's default
+/// `f64` formatting is shortest-round-trip, so parse ∘ to_string is the
+/// identity on finite values.
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => write!(f, "{b}"),
+            Json::Num(n) if n.is_finite() => write!(f, "{n}"),
+            Json::Num(_) => f.write_str("null"),
+            Json::Str(s) => write!(f, "\"{}\"", escape(s)),
+            Json::Arr(items) => {
+                f.write_str("[")?;
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(map) => {
+                f.write_str("{")?;
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "\"{}\":{v}", escape(k))?;
+                }
+                f.write_str("}")
+            }
         }
     }
 }
@@ -328,5 +367,25 @@ mod tests {
         let s = "a\"b\\c\nd";
         let json = format!("\"{}\"", escape(s));
         assert_eq!(Json::parse(&json).unwrap(), Json::Str(s.into()));
+    }
+
+    #[test]
+    fn serializer_round_trips() {
+        let text = r#"{"a": [1, 2.5, {"b": "c\nd"}], "e": {}, "f": true, "g": null}"#;
+        let v = Json::parse(text).unwrap();
+        assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+        // integral floats print without a trailing .0 and still parse
+        assert_eq!(Json::Num(42.0).to_string(), "42");
+        // non-finite degrades to null instead of emitting invalid JSON
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+    }
+
+    #[test]
+    fn serializer_precision_preserves_f64() {
+        let x = 123.456789012345678_f64;
+        let v = Json::Arr(vec![Json::Num(x)]);
+        let back = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(back.as_arr().unwrap()[0].as_f64(), Some(x));
     }
 }

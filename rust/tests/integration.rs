@@ -1,6 +1,9 @@
 //! Integration tests across the three layers: PJRT runtime ↔ AOT
-//! artifacts ↔ coordinator.  These need `make artifacts` to have run
-//! (they are skipped gracefully otherwise, but `make test` builds first).
+//! artifacts ↔ coordinator.  These need the `pjrt` feature (xla
+//! bindings) and `make artifacts` to have run (they are skipped
+//! gracefully without artifacts, but `make test` builds first).
+
+#![cfg(feature = "pjrt")]
 
 use apdrl::coordinator::{combo, static_phase, train_combo, TrainLimits};
 use apdrl::runtime::executor::{literal_f32, scalar_of, to_vec_f32};

@@ -1,0 +1,138 @@
+//! Integration tests for the static-phase planning service: memoized
+//! `static_phase`, the batched `plan_sweep` API, JSON persistence of the
+//! plan cache, and parallel/sequential solver agreement.  These run on
+//! the default (non-`pjrt`) feature set — no artifacts needed.
+
+use apdrl::coordinator::{combo, plan_sweep, plan_sweep_grid, static_phase, PlanRequest};
+use apdrl::graph::build_train_graph;
+use apdrl::hw::vek280;
+use apdrl::partition::cache::{PlanCache, PlanKey};
+use apdrl::partition::{solve_ilp_capped, solve_ilp_sequential, Problem};
+use apdrl::profile::profile_dag;
+
+/// The acceptance-criteria scenario: a repeated static_phase call for the
+/// same (combo, batch, quantized) key must hit the plan cache — zero
+/// explored nodes, cache-hit flag set, identical schedule.
+#[test]
+fn second_solve_is_a_cache_hit_with_identical_schedule() {
+    let c = combo("a2c_invpend");
+    let fresh = static_phase(&c, 112, true);
+    assert!(fresh.solution.explored > 0, "first solve must actually search");
+    let cached = static_phase(&c, 112, true);
+    assert!(cached.cache_hit);
+    assert_eq!(cached.solution.explored, 0);
+    assert_eq!(cached.solution.assignment, fresh.solution.assignment);
+    assert_eq!(
+        cached.solution.makespan_us.to_bits(),
+        fresh.solution.makespan_us.to_bits()
+    );
+    for (a, b) in cached.schedule.entries.iter().zip(&fresh.schedule.entries) {
+        assert_eq!((a.node, a.component), (b.node, b.component));
+        assert_eq!(a.start_us.to_bits(), b.start_us.to_bits());
+        assert_eq!(a.finish_us.to_bits(), b.finish_us.to_bits());
+    }
+}
+
+/// Different keys must not alias: fp32 vs quantized and different batch
+/// sizes get their own plans.
+#[test]
+fn cache_never_aliases_across_keys() {
+    let c = combo("dqn_cartpole");
+    let quant = static_phase(&c, 72, true);
+    let fp32 = static_phase(&c, 72, false);
+    assert!(!fp32.cache_hit, "fp32 must not reuse the quantized plan");
+    // Quantized and fp32 pipelines profile different formats; at minimum
+    // the precision policies must differ.
+    assert_ne!(
+        quant.policy.node_format, fp32.policy.node_format,
+        "precision policies must reflect the mode"
+    );
+    let other_bs = static_phase(&c, 73, true);
+    assert!(!other_bs.cache_hit, "a new batch size is a new plan");
+}
+
+/// plan_sweep over a mixed grid returns plans in request order and
+/// agrees with individual solves.
+#[test]
+fn sweep_results_are_order_stable_and_correct() {
+    let reqs = vec![
+        PlanRequest::new(combo("dqn_cartpole"), 40, true),
+        PlanRequest::new(combo("a2c_invpend"), 40, false),
+        PlanRequest::new(combo("ddpg_mntncar"), 40, true),
+    ];
+    let plans = plan_sweep(&reqs);
+    assert_eq!(plans.len(), reqs.len());
+    for (req, plan) in reqs.iter().zip(&plans) {
+        assert_eq!(plan.dag.len(), build_train_graph(&req.combo.train_spec(req.batch)).len());
+        let solo = static_phase(&req.combo, req.batch, req.quantized);
+        assert_eq!(plan.solution.assignment, solo.solution.assignment);
+        assert_eq!(
+            plan.solution.makespan_us.to_bits(),
+            solo.solution.makespan_us.to_bits()
+        );
+    }
+}
+
+/// The grid helper covers the full cross product in combo-major order.
+#[test]
+fn grid_sweep_covers_cross_product() {
+    let combos = [combo("dqn_cartpole"), combo("a2c_invpend")];
+    let batches = [24usize, 56];
+    let plans = plan_sweep_grid(&combos, &batches, true);
+    assert_eq!(plans.len(), 4);
+    for (i, plan) in plans.iter().enumerate() {
+        let expect = build_train_graph(
+            &combos[i / batches.len()].train_spec(batches[i % batches.len()]),
+        );
+        assert_eq!(plan.dag.len(), expect.len());
+    }
+}
+
+/// An explicitly file-backed cache round-trips plans across instances
+/// (what `APDRL_PLAN_CACHE` gives the global cache).
+#[test]
+fn file_backed_cache_survives_reload() {
+    let c = combo("ddpg_mntncar");
+    let platform = vek280();
+    let spec = c.train_spec(44);
+    let dag = build_train_graph(&spec);
+    let profiles = profile_dag(&dag, &platform, true);
+    let problem = Problem::new(&dag, &profiles, &platform, true);
+    let solution = solve_ilp_capped(&problem, 300_000);
+    let key = PlanKey::new(&spec, true, &platform);
+
+    let path = std::env::temp_dir().join("apdrl_planner_it").join("cache.json");
+    let _ = std::fs::remove_file(&path);
+    {
+        let mut cache = PlanCache::with_persistence(&path);
+        cache.insert(&key, &solution);
+        cache.save();
+    }
+    let mut reloaded = PlanCache::with_persistence(&path);
+    let hit = reloaded.lookup(&key, &profiles).expect("plan must survive reload");
+    assert_eq!(hit.assignment, solution.assignment);
+    assert_eq!(hit.makespan_us.to_bits(), solution.makespan_us.to_bits());
+    assert_eq!(hit.explored, 0);
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Parallel prefix fan-out and the sequential DFS are both exact: same
+/// optimal makespan on a real workload.
+#[test]
+fn parallel_and_sequential_solvers_agree_end_to_end() {
+    let c = combo("ddpg_lunar");
+    let platform = vek280();
+    let dag = build_train_graph(&c.train_spec(256));
+    let profiles = profile_dag(&dag, &platform, true);
+    let problem = Problem::new(&dag, &profiles, &platform, true);
+    // Headroom so neither search hits the cap (abort would void the
+    // exactness argument the equality rests on).
+    let par = solve_ilp_capped(&problem, 2_000_000);
+    let seq = solve_ilp_sequential(&problem, 2_000_000);
+    assert!(
+        (par.makespan_us - seq.makespan_us).abs() < 1e-9,
+        "parallel {} vs sequential {}",
+        par.makespan_us,
+        seq.makespan_us
+    );
+}
