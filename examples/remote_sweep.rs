@@ -1,0 +1,97 @@
+//! Remote planning sweep: drive a Table III batch-ladder grid through a
+//! long-lived `apdrl serve` daemon instead of the in-process planner,
+//! then read the daemon's telemetry (`stats` verb).
+//!
+//! Point it at a running server:
+//!
+//! ```bash
+//! cargo run --release -- serve --addr 127.0.0.1:7040 &
+//! APDRL_SERVER=127.0.0.1:7040 cargo run --release --example remote_sweep
+//! ```
+//!
+//! Without `APDRL_SERVER` the example is self-contained: it boots a
+//! daemon on an ephemeral loopback port in a background thread, sweeps
+//! against it, and shuts it down — the full client/server round trip in
+//! one process.
+
+use anyhow::Result;
+
+use apdrl::server::{RemotePlanner, Server, ENV_ADDR};
+use apdrl::util::json::Json;
+
+fn main() -> Result<()> {
+    // A server from the environment, or a self-booted ephemeral one.
+    let (addr, local_daemon) = match std::env::var(ENV_ADDR) {
+        Ok(addr) if !addr.is_empty() => (addr, None),
+        _ => {
+            let server = Server::bind("127.0.0.1:0", 2)?;
+            let addr = server.local_addr()?.to_string();
+            println!("(no {ENV_ADDR} set — booted an ephemeral daemon on {addr})\n");
+            (addr, Some(std::thread::spawn(move || server.run())))
+        }
+    };
+
+    let combos: Vec<String> =
+        ["dqn_cartpole", "a2c_invpend", "ddpg_lunar", "ddpg_mntncar"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+    let batches = [64usize, 256, 1024];
+
+    let mut client = RemotePlanner::connect(&addr)?;
+    let t0 = std::time::Instant::now();
+    let plans = client.sweep(&combos, &batches, true)?;
+    let cold_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    println!("remote sweep of {} points via {addr} ({cold_ms:.0} ms):\n", plans.len());
+    println!(
+        "{:>14} | {:>5} | {:>12} | {:>7} | {:>8} | origin",
+        "combo", "batch", "makespan µs", "AIE MM", "steps/s"
+    );
+    for p in &plans {
+        println!(
+            "{:>14} | {:>5} | {:>12.1} | {:>3} of {:>2} | {:>8.0} | {}",
+            p.combo,
+            p.batch,
+            p.makespan_us,
+            p.aie_mm_nodes,
+            p.mm_nodes,
+            p.throughput(),
+            if p.cache_hit { "cache".to_string() } else { format!("{} explored", p.explored) },
+        );
+    }
+
+    // The same grid again: every point is now a shared-cache hit.
+    let t1 = std::time::Instant::now();
+    let replans = client.sweep(&combos, &batches, true)?;
+    let warm_ms = t1.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "\nre-sweep: {:.1} ms ({}/{} cache hits — every client shares the daemon's cache)",
+        warm_ms,
+        replans.iter().filter(|p| p.cache_hit).count(),
+        replans.len()
+    );
+
+    let stats = client.stats()?;
+    let pick = |path: &[&str]| -> f64 {
+        let mut v = Some(&stats);
+        for k in path {
+            v = v.and_then(|j| j.get(k));
+        }
+        v.and_then(Json::as_f64).unwrap_or(0.0)
+    };
+    println!(
+        "daemon stats: {} requests, {} plans served ({} from cache), cache hit rate {:.0}%",
+        pick(&["requests"]),
+        pick(&["plans_served"]),
+        pick(&["plans_from_cache"]),
+        pick(&["cache", "hit_rate"]) * 100.0
+    );
+
+    if let Some(handle) = local_daemon {
+        client.shutdown()?;
+        handle.join().expect("daemon thread")?;
+        println!("ephemeral daemon stopped.");
+    }
+    Ok(())
+}

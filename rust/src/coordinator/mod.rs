@@ -14,6 +14,8 @@ pub mod report;
 pub mod trainer;
 
 pub use config::{combo, try_combo, ComboConfig, COMBO_NAMES};
-pub use pipeline::{plan_sweep, plan_sweep_grid, static_phase, PlanRequest, StaticPlan};
+pub use pipeline::{
+    plan_named_grid, plan_sweep, plan_sweep_grid, static_phase, PlanRequest, StaticPlan,
+};
 #[cfg(feature = "pjrt")]
 pub use trainer::{train_combo, TrainLimits, TrainResult};

@@ -223,6 +223,28 @@ pub fn plan_sweep_grid(
     plan_sweep(&requests)
 }
 
+/// Named-grid sweep: resolve combo *names*, plan the cross product, and
+/// tag each plan with its (combo, batch) point.  This is the shared
+/// entry of the `apdrl sweep` CLI and the planning server's `sweep`
+/// verb — both take names off a command line or the wire, so name
+/// resolution errors surface here as a `Result` instead of a panic.
+pub fn plan_named_grid(
+    names: &[String],
+    batches: &[usize],
+    quantized: bool,
+) -> anyhow::Result<Vec<(ComboConfig, usize, StaticPlan)>> {
+    let combos: Vec<ComboConfig> =
+        names.iter().map(|n| super::config::try_combo(n)).collect::<anyhow::Result<_>>()?;
+    let plans = plan_sweep_grid(&combos, batches, quantized);
+    Ok(plans
+        .into_iter()
+        .enumerate()
+        .map(|(i, plan)| {
+            (combos[i / batches.len()].clone(), batches[i % batches.len()], plan)
+        })
+        .collect())
+}
+
 impl StaticPlan {
     /// Full per-training-step time on the modeled platform: the
     /// partitioned train-stage makespan + the PS–PL pipeline (Fig 12's
@@ -340,5 +362,21 @@ mod tests {
     #[test]
     fn empty_sweep_is_empty() {
         assert!(plan_sweep(&[]).is_empty());
+    }
+
+    #[test]
+    fn named_grid_resolves_names_and_rejects_unknowns() {
+        let names = vec!["dqn_cartpole".to_string(), "a2c_invpend".to_string()];
+        let batches = [32usize, 48];
+        let grid = plan_named_grid(&names, &batches, true).expect("known names must plan");
+        assert_eq!(grid.len(), 4);
+        for (i, (c, bs, plan)) in grid.iter().enumerate() {
+            assert_eq!(c.name, names[i / batches.len()]);
+            assert_eq!(*bs, batches[i % batches.len()]);
+            let solo = static_phase(c, *bs, true);
+            assert_eq!(plan.solution.assignment, solo.solution.assignment);
+        }
+        let e = plan_named_grid(&["dqn_tetris".to_string()], &batches, true).unwrap_err();
+        assert!(format!("{e}").contains("unknown combo"), "{e}");
     }
 }

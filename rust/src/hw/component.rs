@@ -25,6 +25,13 @@ impl Component {
         }
     }
 
+    /// Inverse of [`name`](Component::name): `None` for unknown names.
+    /// Used by the plan-cache loader and the wire protocol, so the
+    /// mapping lives here next to its forward direction.
+    pub fn from_name(name: &str) -> Option<Component> {
+        Component::ALL.into_iter().find(|c| c.name() == name)
+    }
+
     /// Native compute format under AP-DRL's hardware-aware quantization
     /// (paper Alg. 1): PS=FP32, PL=FP16, AIE=BF16.
     pub fn native_format(self) -> Format {

@@ -51,6 +51,52 @@
 //!   [`coordinator::plan_sweep_grid`] plan many (combo, batch, precision)
 //!   points concurrently in request order; the `figures` binary, the
 //!   benches and the examples drive their Table III/IV grids through it.
+//! * **Cache bounds** — the persisted cache file is schema-versioned
+//!   (old-format files drop to a cold start) and LRU-capped at
+//!   `APDRL_PLAN_CACHE_MAX` entries (default 4096), so it no longer
+//!   grows monotonically.
+//! * **Adaptive solver fan-out** — the parallel B&B's prefix fan-out is
+//!   tuned from per-solve telemetry ([`server::stats`]): small search
+//!   trees get a shallow task split, big trees a deep one, with the
+//!   fixed constant as the cold-start fallback.  Fan-out never changes
+//!   the returned optimum.
+//!
+//! ## The planning server (`apdrl serve`)
+//!
+//! The [`server`] module runs that planning service as a long-lived
+//! daemon so many processes/hosts share one planner and one plan cache.
+//! `apdrl serve` listens on TCP (default `127.0.0.1:7040`) and speaks a
+//! versioned JSON-lines protocol; `apdrl sweep --remote <addr>` (or the
+//! `APDRL_SERVER` env var) offloads sweep grids to it.  One line per
+//! request, one per response:
+//!
+//! ```text
+//! → {"v":1,"verb":"plan","combo":"ddpg_lunar","batch":256,"quantized":true}
+//! ← {"v":1,"ok":true,"plan":{"makespan_us":…,"schedule":[…],"cache_hit":false,…}}
+//! → {"v":1,"verb":"sweep","combos":["dqn_cartpole","ddpg_lunar"],"batches":[64,256],"quantized":true}
+//! ← {"v":1,"ok":true,"plans":[…]}
+//! → {"v":1,"verb":"stats"}
+//! ← {"v":1,"ok":true,"stats":{"requests":…,"cache":{"hits":…,"hit_rate":…},…}}
+//! → {"v":1,"verb":"cache_flush"}
+//! ← {"v":1,"ok":true,"flushed":12}
+//! → {"v":1,"verb":"shutdown"}
+//! ← {"v":1,"ok":true,"stopping":true}
+//! ```
+//!
+//! Schedule times survive the wire bit-for-bit (the JSON number writer
+//! is shortest-round-trip), so any plan served from the shared cache is
+//! *bit-identical* between remote and local callers — asserted in
+//! `tests/server.rs`.  The optimal makespan is always identical; only a
+//! *fresh* solo solve may pick a different co-optimal assignment than
+//! an independent local solve when symmetric placements tie.
+//!
+//! ### Environment variables
+//!
+//! | variable              | consumer          | meaning                              |
+//! |-----------------------|-------------------|--------------------------------------|
+//! | `APDRL_SERVER`        | clients           | default `host:port` of the daemon    |
+//! | `APDRL_PLAN_CACHE`    | planner (both)    | JSON persistence path of the cache   |
+//! | `APDRL_PLAN_CACHE_MAX`| planner (both)    | LRU entry cap of the cache (def 4096)|
 
 pub mod coordinator;
 pub mod drl;
@@ -61,6 +107,7 @@ pub mod partition;
 pub mod profile;
 pub mod quant;
 pub mod runtime;
+pub mod server;
 pub mod util;
 
 /// Microseconds — every latency in the analytic hardware model uses this

@@ -18,6 +18,15 @@
 //! cache is memory-only.  Cached entries are validated against the
 //! current profile shapes on lookup, so a stale file from an older model
 //! degrades to a miss, never a wrong plan.
+//!
+//! Two policies bound the cache (and with it the persisted file, which
+//! previously grew monotonically):
+//!
+//! * **Schema versioning** — the file carries a `schema` field; a file
+//!   written by a different schema version is dropped wholesale on load.
+//! * **LRU cap** — at most `APDRL_PLAN_CACHE_MAX` entries (default
+//!   4096) are retained; inserts and saves evict the least-recently-used
+//!   plans first (recency stamps persist across reloads).
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -35,6 +44,30 @@ use super::model::{Assignment, Placement, Solution};
 /// overheads, schedule semantics...).  Persisted plans from an older
 /// model version then key apart instead of being served stale.
 const MODEL_VERSION: u32 = 1;
+
+/// Version of the *persisted file format* (independent of
+/// [`MODEL_VERSION`], which versions the analytic model inside the
+/// keys).  Loading a file with a different schema drops every entry —
+/// old-format caches degrade to a cold start, never a misparse.
+/// v2 added per-entry recency stamps for the LRU cap.
+const SCHEMA_VERSION: f64 = 2.0;
+
+/// Default entry cap when `APDRL_PLAN_CACHE_MAX` is unset: generous
+/// enough for every figure/bench grid in the repo, small enough that
+/// the persisted JSON file stops growing monotonically.
+const DEFAULT_MAX_ENTRIES: usize = 4096;
+
+/// Entry cap from the environment (`APDRL_PLAN_CACHE_MAX`), falling
+/// back to [`DEFAULT_MAX_ENTRIES`] when unset or unparsable.
+fn env_limit() -> usize {
+    limit_from(std::env::var("APDRL_PLAN_CACHE_MAX").ok().as_deref())
+}
+
+fn limit_from(raw: Option<&str>) -> usize {
+    raw.and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(DEFAULT_MAX_ENTRIES)
+}
 
 /// Canonical cache key for one static-phase problem instance.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
@@ -135,25 +168,60 @@ impl CachedPlan {
     }
 }
 
-/// In-memory plan cache with optional JSON persistence.
-#[derive(Debug, Default)]
+/// One stored plan plus its recency stamp (logical clock ticks on
+/// insert and on every hit; lowest stamp = least recently used).
+#[derive(Clone, Debug)]
+struct Entry {
+    plan: CachedPlan,
+    stamp: u64,
+}
+
+/// In-memory plan cache with optional JSON persistence and an LRU-ish
+/// entry cap (`APDRL_PLAN_CACHE_MAX`, default 4096): when an insert
+/// pushes the cache over its limit, the least-recently-used entries are
+/// evicted, and saves cap the merged file the same way — the persisted
+/// JSON no longer grows monotonically.
+#[derive(Debug)]
 pub struct PlanCache {
-    entries: HashMap<String, CachedPlan>,
+    entries: HashMap<String, Entry>,
     path: Option<PathBuf>,
+    /// Logical recency clock; monotonically increasing per operation.
+    clock: u64,
+    /// Maximum retained entries (≥ 1).
+    limit: usize,
     pub hits: u64,
     pub misses: u64,
 }
 
+impl Default for PlanCache {
+    fn default() -> PlanCache {
+        PlanCache {
+            entries: HashMap::new(),
+            path: None,
+            clock: 0,
+            limit: env_limit(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+}
+
 impl PlanCache {
-    /// Memory-only cache.
+    /// Memory-only cache (entry cap from `APDRL_PLAN_CACHE_MAX`).
     pub fn new() -> PlanCache {
         PlanCache::default()
+    }
+
+    /// Memory-only cache with an explicit entry cap (tests, embedders).
+    pub fn with_limit(limit: usize) -> PlanCache {
+        PlanCache { limit: limit.max(1), ..PlanCache::default() }
     }
 
     /// Cache backed by a JSON file: loads any valid existing content.
     /// Writes happen on [`save`](PlanCache::save) (merging with what is
     /// on disk — see there).  A missing or corrupt file is an empty
-    /// cache, never an error.
+    /// cache, never an error, and a file written by an older schema
+    /// version is dropped wholesale (cold start, never a misparse).
     pub fn with_persistence(path: impl AsRef<Path>) -> PlanCache {
         let path = path.as_ref().to_path_buf();
         let mut cache = PlanCache { path: Some(path.clone()), ..PlanCache::default() };
@@ -183,13 +251,18 @@ impl PlanCache {
 
     /// Look up a plan and validate it against the profiles the caller is
     /// about to schedule with.  Any shape mismatch (stale file, changed
-    /// model) is a miss.
+    /// model) is a miss.  A hit refreshes the entry's recency stamp.
     pub fn lookup(&mut self, key: &PlanKey, profiles: &[NodeProfile]) -> Option<Solution> {
+        self.clock += 1;
+        let clock = self.clock;
         let valid = self
             .entries
-            .get(key.as_str())
-            .filter(|plan| plan_is_valid(plan, profiles))
-            .map(CachedPlan::to_solution);
+            .get_mut(key.as_str())
+            .filter(|entry| plan_is_valid(&entry.plan, profiles))
+            .map(|entry| {
+                entry.stamp = clock;
+                entry.plan.to_solution()
+            });
         if valid.is_some() {
             self.hits += 1;
         } else {
@@ -198,18 +271,24 @@ impl PlanCache {
         valid
     }
 
-    /// Memoize a fresh solve in memory.  Persistence is a separate,
-    /// explicit step ([`save`](PlanCache::save), or [`global_insert`]
-    /// for the process-wide cache) so callers can keep disk I/O outside
-    /// their locks.
+    /// Memoize a fresh solve in memory, evicting the least-recently-used
+    /// entries if this pushes the cache over its cap.  Persistence is a
+    /// separate, explicit step ([`save`](PlanCache::save), or
+    /// [`global_insert`] for the process-wide cache) so callers can keep
+    /// disk I/O outside their locks.
     pub fn insert(&mut self, key: &PlanKey, solution: &Solution) {
+        self.clock += 1;
         self.entries.insert(
             key.as_str().to_string(),
-            CachedPlan {
-                assignment: solution.assignment.clone(),
-                makespan_us: solution.makespan_us,
+            Entry {
+                plan: CachedPlan {
+                    assignment: solution.assignment.clone(),
+                    makespan_us: solution.makespan_us,
+                },
+                stamp: self.clock,
             },
         );
+        evict_over_limit(&mut self.entries, self.limit);
     }
 
     /// Write the cache file (no-op for memory-only caches), merging the
@@ -221,9 +300,11 @@ impl PlanCache {
     }
 
     /// Merge entries parsed from a cache file; malformed entries are
-    /// skipped silently (forward/backward compatibility).
+    /// skipped silently (forward/backward compatibility), and a file
+    /// from a different [`SCHEMA_VERSION`] is dropped wholesale.  The
+    /// load respects the entry cap (newest stamps win).
     fn absorb(&mut self, root: &Json) {
-        if root.get("version").and_then(Json::as_f64) != Some(1.0) {
+        if root.get("schema").and_then(Json::as_f64) != Some(SCHEMA_VERSION) {
             return;
         }
         let Some(plans) = root.get("plans").and_then(Json::as_obj) else { return };
@@ -232,6 +313,15 @@ impl PlanCache {
                 continue;
             };
             let Some(raw) = entry.get("assignment").and_then(Json::as_arr) else { continue };
+            // Clamp hostile/corrupt stamps: `as u64` saturates 1e300 to
+            // u64::MAX, which would overflow the clock on the next tick
+            // and (wrapping to 0 in release) make junk entries immortal
+            // under LRU.  u32::MAX keeps ~2^64 ticks of headroom.
+            let stamp = entry
+                .get("stamp")
+                .and_then(Json::as_f64)
+                .filter(|s| s.is_finite() && *s >= 0.0)
+                .map_or(0, |s| s.min(u32::MAX as f64) as u64);
             let mut assignment: Assignment = Vec::with_capacity(raw.len());
             let mut ok = true;
             for item in raw {
@@ -239,7 +329,7 @@ impl PlanCache {
                 let comp = pair
                     .first()
                     .and_then(Json::as_str)
-                    .and_then(component_from_name);
+                    .and_then(Component::from_name);
                 let cand = pair.get(1).and_then(Json::as_usize);
                 match (comp, cand) {
                     (Some(component), Some(candidate)) => {
@@ -252,16 +342,49 @@ impl PlanCache {
                 }
             }
             if ok && makespan_us.is_finite() {
-                self.entries.insert(key.clone(), CachedPlan { assignment, makespan_us });
+                self.clock = self.clock.max(stamp);
+                self.entries.insert(
+                    key.clone(),
+                    Entry { plan: CachedPlan { assignment, makespan_us }, stamp },
+                );
             }
         }
+        evict_over_limit(&mut self.entries, self.limit);
     }
 }
 
-fn entries_to_json(entries: &HashMap<String, CachedPlan>) -> Json {
+/// Drop least-recently-used entries until `entries` fits `limit`.
+/// One sort + one retain — a per-eviction min-scan would go quadratic
+/// when loading a file written under a much larger cap.
+fn evict_over_limit(entries: &mut HashMap<String, Entry>, limit: usize) {
+    let limit = limit.max(1);
+    if entries.len() <= limit {
+        return;
+    }
+    let mut stamps: Vec<u64> = entries.values().map(|e| e.stamp).collect();
+    stamps.sort_unstable_by(|a, b| b.cmp(a));
+    let cutoff = stamps[limit - 1];
+    // Stamps can tie (absorbed legacy entries default to 0): keep
+    // everything strictly newer than the cutoff, then top up with
+    // cutoff-stamped entries until the cap is exactly met.
+    let mut slack = limit - stamps.iter().take_while(|&&s| s > cutoff).count();
+    entries.retain(|_, e| {
+        if e.stamp > cutoff {
+            true
+        } else if e.stamp == cutoff && slack > 0 {
+            slack -= 1;
+            true
+        } else {
+            false
+        }
+    });
+}
+
+fn entries_to_json(entries: &HashMap<String, Entry>) -> Json {
     let mut plans = std::collections::BTreeMap::new();
-    for (key, plan) in entries {
-        let assignment: Vec<Json> = plan
+    for (key, entry) in entries {
+        let assignment: Vec<Json> = entry
+            .plan
             .assignment
             .iter()
             .map(|p| {
@@ -272,30 +395,44 @@ fn entries_to_json(entries: &HashMap<String, CachedPlan>) -> Json {
             })
             .collect();
         let mut obj = std::collections::BTreeMap::new();
-        obj.insert("makespan_us".to_string(), Json::Num(plan.makespan_us));
+        obj.insert("makespan_us".to_string(), Json::Num(entry.plan.makespan_us));
         obj.insert("assignment".to_string(), Json::Arr(assignment));
+        obj.insert("stamp".to_string(), Json::Num(entry.stamp as f64));
         plans.insert(key.clone(), Json::Obj(obj));
     }
     let mut root = std::collections::BTreeMap::new();
-    root.insert("version".to_string(), Json::Num(1.0));
+    root.insert("schema".to_string(), Json::Num(SCHEMA_VERSION));
     root.insert("plans".to_string(), Json::Obj(plans));
     Json::Obj(root)
 }
 
 /// Merge `entries` into whatever is on disk at `path` (memory wins on
-/// key conflicts) and write the union back.  Because saves merge, a
-/// memory-side [`PlanCache::clear`] or a concurrent process can never
-/// truncate previously persisted plans — a racing writer loses at most
-/// its own last write.  Best-effort: an unwritable path must not take
-/// down the planning service, the cache just stays memory-only.
-fn write_merged(path: &Path, entries: HashMap<String, CachedPlan>) {
+/// key conflicts) and write the union back, capped at the entry limit
+/// (LRU evicted first).  Because saves merge, a memory-side
+/// [`PlanCache::clear`] or a concurrent process can never truncate
+/// previously persisted plans — a racing writer loses at most its own
+/// last write.  Best-effort: an unwritable path must not take down the
+/// planning service, the cache just stays memory-only.
+fn write_merged(path: &Path, entries: HashMap<String, Entry>) {
     let mut disk = PlanCache::default();
     if let Ok(text) = std::fs::read_to_string(path) {
         if let Ok(root) = Json::parse(&text) {
             disk.absorb(&root);
         }
     }
-    disk.entries.extend(entries);
+    // Stamps are per-process logical clocks, so comparing this writer's
+    // stamps against a foreign file's directly could evict the plans we
+    // just computed in favor of another process's higher clock.
+    // Re-stamp our entries above everything on disk (preserving their
+    // relative recency) before applying the cap.
+    let base = disk.entries.values().map(|e| e.stamp).max().unwrap_or(0);
+    let mut fresh: Vec<(String, Entry)> = entries.into_iter().collect();
+    fresh.sort_by_key(|(_, e)| e.stamp);
+    for (i, (key, mut entry)) in fresh.into_iter().enumerate() {
+        entry.stamp = base + 1 + i as u64;
+        disk.entries.insert(key, entry);
+    }
+    evict_over_limit(&mut disk.entries, disk.limit);
     if let Some(dir) = path.parent() {
         let _ = std::fs::create_dir_all(dir);
     }
@@ -326,15 +463,6 @@ fn plan_is_valid(plan: &CachedPlan, profiles: &[NodeProfile]) -> bool {
             Component::AIE => p.candidate < prof.aie.len(),
             Component::PS => p.candidate == 0,
         })
-}
-
-fn component_from_name(name: &str) -> Option<Component> {
-    match name {
-        "PS" => Some(Component::PS),
-        "PL" => Some(Component::PL),
-        "AIE" => Some(Component::AIE),
-        _ => None,
-    }
 }
 
 /// The process-wide plan cache used by `coordinator::static_phase`.
@@ -460,6 +588,66 @@ mod tests {
         let mut reloaded = PlanCache::with_persistence(&path);
         assert_eq!(reloaded.len(), 2, "merge-on-save must keep A and add B");
         assert!(reloaded.lookup(&key_a, &profiles).is_some());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn lru_cap_evicts_the_least_recently_used_plan() {
+        let (key_a, sol_a, profiles_a) = solved(32);
+        let (key_b, sol_b, _) = solved(48);
+        let (key_c, sol_c, profiles_c) = solved(64);
+        let mut cache = PlanCache::with_limit(2);
+        cache.insert(&key_a, &sol_a);
+        cache.insert(&key_b, &sol_b);
+        // Touch A so B becomes the LRU entry, then overflow with C.
+        assert!(cache.lookup(&key_a, &profiles_a).is_some());
+        cache.insert(&key_c, &sol_c);
+        assert_eq!(cache.len(), 2, "cap must hold");
+        assert!(cache.lookup(&key_a, &profiles_a).is_some(), "recently used survives");
+        assert!(cache.lookup(&key_c, &profiles_c).is_some(), "new entry survives");
+        let (_, _, profiles_b) = solved(48);
+        assert!(cache.lookup(&key_b, &profiles_b).is_none(), "LRU entry evicted");
+    }
+
+    #[test]
+    fn limit_parses_from_env_shape_with_fallback() {
+        assert_eq!(limit_from(Some("2")), 2);
+        assert_eq!(limit_from(Some(" 17 ")), 17);
+        assert_eq!(limit_from(Some("0")), DEFAULT_MAX_ENTRIES, "0 is not a usable cap");
+        assert_eq!(limit_from(Some("nope")), DEFAULT_MAX_ENTRIES);
+        assert_eq!(limit_from(None), DEFAULT_MAX_ENTRIES);
+    }
+
+    #[test]
+    fn old_schema_files_are_dropped_on_load() {
+        // A v1-era file (pre-schema field, pre-stamps): entries must be
+        // discarded wholesale, leaving a cold cache, not a misparse.
+        let dir = std::env::temp_dir().join("apdrl_plan_cache_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("old_schema.json");
+        std::fs::write(
+            &path,
+            r#"{"version":1,"plans":{"k":{"makespan_us":1.5,"assignment":[["PL",0]]}}}"#,
+        )
+        .unwrap();
+        let cache = PlanCache::with_persistence(&path);
+        assert!(cache.is_empty(), "old-schema entries must be dropped on load");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn persisted_file_carries_schema_and_stamps() {
+        let (key, solution, _) = solved(32);
+        let dir = std::env::temp_dir().join("apdrl_plan_cache_test");
+        let path = dir.join("schema.json");
+        let _ = std::fs::remove_file(&path);
+        let mut cache = PlanCache::with_persistence(&path);
+        cache.insert(&key, &solution);
+        cache.save();
+        let root = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(root.get("schema").and_then(Json::as_f64), Some(SCHEMA_VERSION));
+        let plans = root.get("plans").and_then(Json::as_obj).unwrap();
+        assert!(plans.values().all(|e| e.get("stamp").is_some()), "stamps must persist");
         let _ = std::fs::remove_file(&path);
     }
 

@@ -41,9 +41,22 @@ const DEFAULT_MAX_EXPLORED: usize = 300_000;
 /// queue-drain overhead outweighs the extra cores).
 const MAX_WORKERS: usize = 16;
 
-/// Prefix tasks generated per worker: enough that an unlucky worker
-/// stuck with a dense subtree does not serialize the whole solve.
+/// Fixed fallback for prefix tasks generated per worker: enough that an
+/// unlucky worker stuck with a dense subtree does not serialize the
+/// whole solve.  Once the process has solve-time telemetry
+/// (`server::stats`), [`tasks_per_worker`] adapts the fan-out to the
+/// observed tree sizes instead; this constant remains the cold-start
+/// value.
 const TASKS_PER_WORKER: usize = 4;
+
+/// Prefix fan-out per worker: the telemetry-tuned hint when enough
+/// solves have been observed, the fixed constant otherwise.  Fan-out
+/// only shapes work division between workers — every fan-out is an
+/// exact search, so the returned makespan is identical either way
+/// (asserted in `fanout_choice_never_changes_the_optimum`).
+fn tasks_per_worker() -> usize {
+    crate::server::stats::tasks_per_worker_hint().unwrap_or(TASKS_PER_WORKER)
+}
 
 /// Shared incumbent makespan: f64 bits in an `AtomicU64`.  Workers only
 /// ever store makespans of *evaluated complete assignments*, so the
@@ -184,6 +197,7 @@ fn worker_count() -> usize {
 }
 
 fn solve(problem: &Problem, max_explored: usize, workers: usize) -> Solution {
+    let t0 = std::time::Instant::now();
     let n = problem.dag.len();
     // Branch order: MM nodes by descending FLOPs first (they decide the
     // makespan), then non-MM nodes (PL-pinned, only config choice).
@@ -232,7 +246,8 @@ fn solve(problem: &Problem, max_explored: usize, workers: usize) -> Solution {
 
     // Expand the top of the tree into prefix tasks (in option-sorted
     // order, so sequential mode explores exactly like a plain DFS).
-    let prefixes = expand_prefixes(&ctx, workers * TASKS_PER_WORKER);
+    // The per-worker task count is tuned from solve telemetry.
+    let prefixes = expand_prefixes(&ctx, workers * tasks_per_worker());
 
     let mut local_bests: Vec<Option<(Micros, Assignment)>> = Vec::new();
     if workers <= 1 || prefixes.len() <= 1 {
@@ -282,6 +297,9 @@ fn solve(problem: &Problem, max_explored: usize, workers: usize) -> Solution {
         makespan_us: best_makespan,
         explored: ctx.explored.load(Ordering::Relaxed),
     };
+    // Feed the telemetry that tunes future fan-outs (and that the
+    // planning server's `stats` verb reports).
+    crate::server::stats::record_solve(incumbent.explored, t0.elapsed());
     if ctx.aborted.load(Ordering::Relaxed) {
         // Search was capped: polish the incumbent with local search so
         // large graphs still end near-optimal (B&B alone may be stuck at
@@ -456,6 +474,34 @@ mod tests {
                 assert!(problem.feasible(&sol.assignment));
             }
         }
+    }
+
+    #[test]
+    fn fanout_choice_never_changes_the_optimum() {
+        // The telemetry-tuned fan-out only re-divides the exact search;
+        // every band the tuner can pick must return the same optimum as
+        // the sequential reference.
+        let (dag, profs, platform) = problem_for(&[8, 400, 300, 2], 256);
+        let problem = Problem::new(&dag, &profs, &platform, true);
+        let reference = solve_ilp_sequential(&problem, 2_000_000);
+        crate::server::stats::reset_telemetry_for_tests();
+        for explored_band in [1_000usize, 20_000, 500_000] {
+            crate::server::stats::reset_telemetry_for_tests();
+            for _ in 0..8 {
+                crate::server::stats::record_solve(
+                    explored_band,
+                    std::time::Duration::from_micros(100),
+                );
+            }
+            let tuned = solve_ilp_capped(&problem, 2_000_000);
+            assert!(
+                (tuned.makespan_us - reference.makespan_us).abs() < 1e-9,
+                "fan-out band {explored_band}: {} vs {}",
+                tuned.makespan_us,
+                reference.makespan_us
+            );
+        }
+        crate::server::stats::reset_telemetry_for_tests();
     }
 
     #[test]

@@ -1,0 +1,186 @@
+//! Blocking client for the planning daemon: [`RemotePlanner`] mirrors
+//! the local planning entry points (`static_phase` → [`plan`],
+//! `plan_sweep_grid` → [`sweep`]) over one persistent connection, so
+//! benches, examples and the `apdrl sweep --remote` path can offload
+//! whole grids to a shared daemon and ride its process-wide plan cache.
+//!
+//! Addressing: pass an explicit `host:port`, or set the `APDRL_SERVER`
+//! environment variable and use [`RemotePlanner::from_env`] /
+//! [`server_addr`].
+//!
+//! [`plan`]: RemotePlanner::plan
+//! [`sweep`]: RemotePlanner::sweep
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+use super::protocol::{parse_response, RemotePlan, Request};
+
+/// Environment variable naming the planning server (`host:port`).
+pub const ENV_ADDR: &str = "APDRL_SERVER";
+
+/// Resolve the server address: an explicit value wins (a bare `--remote`
+/// flag arrives as the literal `"true"` and falls through), then
+/// `APDRL_SERVER`, then a guiding error.
+pub fn server_addr(explicit: Option<&str>) -> Result<String> {
+    match explicit {
+        Some(v) if !v.is_empty() && v != "true" => Ok(v.to_string()),
+        _ => std::env::var(ENV_ADDR)
+            .ok()
+            .filter(|v| !v.is_empty())
+            .ok_or_else(|| {
+                anyhow!("no planning server address: pass --remote <host:port> or set {ENV_ADDR}")
+            }),
+    }
+}
+
+/// A blocking connection to one planning daemon.
+pub struct RemotePlanner {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    addr: String,
+}
+
+impl RemotePlanner {
+    /// Connect to `addr` (`host:port`).
+    pub fn connect(addr: &str) -> Result<RemotePlanner> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to planning server at {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(RemotePlanner { reader, writer: stream, addr: addr.to_string() })
+    }
+
+    /// Connect to the server named by `APDRL_SERVER`.
+    pub fn from_env() -> Result<RemotePlanner> {
+        RemotePlanner::connect(&server_addr(None)?)
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// One request/response round trip.  Transport failures (the daemon
+    /// drops connections idle past its timeout) get one transparent
+    /// reconnect-and-retry — every verb is idempotent — while protocol
+    /// errors (`ok:false`) surface immediately without a retry.
+    fn call(&mut self, req: &Request) -> Result<Json> {
+        let line = req.to_line()?;
+        let buf = match self.transport(&line) {
+            Ok(buf) => buf,
+            Err(_) => {
+                let addr = self.addr.clone();
+                *self = RemotePlanner::connect(&addr)?;
+                self.transport(&line).with_context(|| {
+                    format!("planning server at {addr} dropped the connection twice")
+                })?
+            }
+        };
+        parse_response(&buf)
+    }
+
+    /// Write one line, read one line.  `io::Result` so [`call`] can tell
+    /// a dead socket from a server-side error response.
+    ///
+    /// [`call`]: RemotePlanner::call
+    fn transport(&mut self, line: &str) -> std::io::Result<String> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut buf = String::new();
+        let n = self.reader.read_line(&mut buf)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed by server",
+            ));
+        }
+        Ok(buf)
+    }
+
+    /// Remote `static_phase`: plan one (combo, batch, precision) point.
+    pub fn plan(&mut self, combo: &str, batch: usize, quantized: bool) -> Result<RemotePlan> {
+        let resp = self.call(&Request::Plan {
+            combo: combo.to_string(),
+            batch,
+            quantized,
+        })?;
+        RemotePlan::from_json(
+            resp.get("plan").ok_or_else(|| anyhow!("plan response missing `plan`"))?,
+        )
+    }
+
+    /// Remote `plan_sweep_grid`: plan `combos × batches`, returned in
+    /// combo-major request order like the local grid sweep.
+    pub fn sweep(
+        &mut self,
+        combos: &[String],
+        batches: &[usize],
+        quantized: bool,
+    ) -> Result<Vec<RemotePlan>> {
+        let resp = self.call(&Request::Sweep {
+            combos: combos.to_vec(),
+            batches: batches.to_vec(),
+            quantized,
+        })?;
+        resp.get("plans")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("sweep response missing `plans`"))?
+            .iter()
+            .map(RemotePlan::from_json)
+            .collect()
+    }
+
+    /// Fetch the daemon's telemetry object (the `stats` verb).
+    pub fn stats(&mut self) -> Result<Json> {
+        let resp = self.call(&Request::Stats)?;
+        resp.get("stats").cloned().ok_or_else(|| anyhow!("stats response missing `stats`"))
+    }
+
+    /// Drop every entry of the server's in-memory plan cache; returns
+    /// how many were flushed.
+    pub fn cache_flush(&mut self) -> Result<usize> {
+        let resp = self.call(&Request::CacheFlush)?;
+        resp.get("flushed")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("cache_flush response missing `flushed`"))
+    }
+
+    /// Ask the daemon to stop (acknowledged before it exits).  Consumes
+    /// the client: the connection is closed server-side afterwards.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.call(&Request::Shutdown).map(|_| ())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn address_resolution_prefers_explicit_then_env() {
+        assert_eq!(server_addr(Some("10.0.0.1:7040")).unwrap(), "10.0.0.1:7040");
+        // A bare `--remote` flag (value "true") must NOT be treated as a
+        // hostname; without the env var set it is a guiding error.
+        if std::env::var(ENV_ADDR).is_err() {
+            let e = server_addr(Some("true")).unwrap_err();
+            assert!(format!("{e}").contains(ENV_ADDR), "{e}");
+            let e = server_addr(None).unwrap_err();
+            assert!(format!("{e}").contains("--remote"), "{e}");
+        }
+    }
+
+    #[test]
+    fn connect_to_nowhere_reports_the_address() {
+        // Port 1 on loopback is essentially never listening.
+        let e = match RemotePlanner::connect("127.0.0.1:1") {
+            Err(e) => e,
+            Ok(_) => return, // something *is* listening; nothing to assert
+        };
+        assert!(format!("{e:#}").contains("127.0.0.1:1"), "{e:#}");
+    }
+}

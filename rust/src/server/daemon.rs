@@ -1,0 +1,339 @@
+//! The long-lived planning daemon behind `apdrl serve`.
+//!
+//! A [`Server`] binds a TCP listener (`std::net` only — no async
+//! runtime, no external deps) and services JSON-lines requests
+//! ([`super::protocol`]) with a fixed pool of worker threads.
+//! Scheduling is **per request, not per connection**: the accept loop
+//! enqueues each connection on an `mpsc` channel, a worker dequeues it,
+//! serves at most one request (polling reads with a short timeout so a
+//! quiet connection never pins the worker), and re-enqueues it.  Open
+//! connections round-robin through the pool, so a handful of persistent
+//! sweep clients can never starve the control verbs (`stats`,
+//! `shutdown`) out of the pool.  All planning goes through
+//! `coordinator::static_phase` / `plan_named_grid`, so every connection
+//! shares the one process-wide [`crate::partition::cache`] — a plan
+//! solved for any client is a cache hit for every later client, which
+//! is the point of running the planner as a daemon instead of a
+//! library.
+//!
+//! Shutdown is cooperative: the `shutdown` verb is acknowledged on its
+//! own connection, then a flag flips; the accept loop (a nonblocking
+//! poll) and the workers observe it within one poll quantum and exit
+//! (queued connections are closed).
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{plan_named_grid, static_phase, try_combo};
+use crate::util::json::Json;
+
+use super::protocol::{error_response, ok_response, plan_to_json, Request};
+use super::stats::ServerStats;
+
+/// Default listen address of `apdrl serve` (loopback: the daemon trusts
+/// its peers — exposing it wider is a deployment decision, not ours).
+pub const DEFAULT_ADDR: &str = "127.0.0.1:7040";
+
+/// Idle-connection cutoff: a connection with no complete request for
+/// this long is dropped (well-behaved clients reconnect transparently —
+/// `RemotePlanner` retries once on a dead socket).
+const IDLE_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Read-poll quantum: how long a worker waits on one connection for a
+/// request (and on the queue for a connection) before moving on.  Short
+/// enough that a quiet connection cannot monopolize a worker; data
+/// arriving mid-poll is served immediately, so request latency is not
+/// quantized by this.
+const READ_POLL: Duration = Duration::from_millis(100);
+
+/// A bound-but-not-yet-running planning server.
+pub struct Server {
+    listener: TcpListener,
+    workers: usize,
+    stats: Arc<ServerStats>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind `addr` (use port 0 for an ephemeral port — tests do) with a
+    /// pool of `workers` connection handlers.
+    pub fn bind(addr: &str, workers: usize) -> Result<Server> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding planning server on {addr}"))?;
+        Ok(Server {
+            listener,
+            workers: workers.max(1),
+            stats: Arc::new(ServerStats::new()),
+            shutdown: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// The actual bound address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Shared handle to this daemon's counters (tests, embedders).
+    pub fn stats(&self) -> Arc<ServerStats> {
+        Arc::clone(&self.stats)
+    }
+
+    /// Run until a `shutdown` request arrives.  Blocks the calling
+    /// thread; spawn it if you need to keep going (tests, the
+    /// `remote_sweep` example).
+    pub fn run(self) -> Result<()> {
+        let Server { listener, workers, stats, shutdown } = self;
+        // Nonblocking accept, polled against the shutdown flag: no
+        // blocked `accept()` to wake, so shutdown needs no self-connect
+        // trick and cannot be lost to a failed wake-up.
+        listener.set_nonblocking(true)?;
+        let (tx, rx) = mpsc::channel::<Conn>();
+        let rx = Mutex::new(rx);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                let tx = tx.clone();
+                let (rx, stats, shutdown) = (&rx, &stats, &shutdown);
+                s.spawn(move || loop {
+                    if shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    // Hold the lock only for the dequeue; the timeout
+                    // bounds it so the flag is re-checked regularly.
+                    let next = rx.lock().unwrap().recv_timeout(READ_POLL);
+                    let mut conn = match next {
+                        Ok(conn) => conn,
+                        Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    };
+                    stats.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                    match service_one(&mut conn, stats) {
+                        Disposition::Requeue => {
+                            stats.queue_depth.fetch_add(1, Ordering::Relaxed);
+                            // A send error means the server is tearing
+                            // down; the connection just closes.
+                            let _ = tx.send(conn);
+                        }
+                        Disposition::Close => {}
+                        Disposition::Shutdown => {
+                            shutdown.store(true, Ordering::SeqCst);
+                        }
+                    }
+                });
+            }
+            while !shutdown.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        let Some(conn) = Conn::accept(stream) else { continue };
+                        stats.connections.fetch_add(1, Ordering::Relaxed);
+                        stats.queue_depth.fetch_add(1, Ordering::Relaxed);
+                        if tx.send(conn).is_err() {
+                            break;
+                        }
+                    }
+                    // No pending connection (or a transient error):
+                    // sleep one quantum and re-check the flag.
+                    Err(_) => std::thread::sleep(READ_POLL),
+                }
+            }
+            drop(tx); // workers also exit via the shutdown flag
+        });
+        Ok(())
+    }
+}
+
+/// Convenience: bind + run in one call (what `apdrl serve` does).
+pub fn serve(addr: &str, workers: usize) -> Result<()> {
+    Server::bind(addr, workers)?.run()
+}
+
+/// One live client connection as it circulates through the worker pool.
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    /// Partial request line carried across read polls (a slow writer's
+    /// bytes arrive over several quanta; nothing is lost between them).
+    pending: String,
+    /// Last complete request, for the idle cutoff.
+    last_activity: Instant,
+}
+
+impl Conn {
+    fn accept(stream: TcpStream) -> Option<Conn> {
+        // Some platforms let accepted sockets inherit the listener's
+        // nonblocking mode; reads here must block (bounded by the
+        // timeout below), so force it off.
+        let _ = stream.set_nonblocking(false);
+        let _ = stream.set_nodelay(true);
+        // Polling reads: see [`READ_POLL`].
+        let _ = stream.set_read_timeout(Some(READ_POLL));
+        let reader = BufReader::new(stream.try_clone().ok()?);
+        Some(Conn {
+            reader,
+            writer: stream,
+            pending: String::new(),
+            last_activity: Instant::now(),
+        })
+    }
+}
+
+/// What to do with a connection after one service cycle.
+enum Disposition {
+    /// Still healthy: back into the queue for its next request.
+    Requeue,
+    /// EOF, I/O error, or idle past the cutoff: drop it.
+    Close,
+    /// It asked the daemon to stop (already acknowledged).
+    Shutdown,
+}
+
+/// Serve at most one request from `conn`.  Errors are per-request: a
+/// malformed line gets an error response and the connection lives on.
+fn service_one(conn: &mut Conn, stats: &ServerStats) -> Disposition {
+    match conn.reader.read_line(&mut conn.pending) {
+        Ok(0) => Disposition::Close,
+        Ok(_) => {
+            // `read_line` returns only on '\n' or EOF, so this is a
+            // complete request line.
+            let line = std::mem::take(&mut conn.pending);
+            conn.last_activity = Instant::now();
+            if line.trim().is_empty() {
+                return Disposition::Requeue;
+            }
+            stats.requests.fetch_add(1, Ordering::Relaxed);
+            stats.in_flight.fetch_add(1, Ordering::Relaxed);
+            let (response, stop) = respond(&line, stats);
+            stats.in_flight.fetch_sub(1, Ordering::Relaxed);
+            let wire = response.to_line().unwrap_or_else(|e| {
+                // Unreachable for well-formed plans (latencies are
+                // finite by construction), but the daemon must never
+                // crash or emit garbage framing over a degenerate value.
+                stats.errors.fetch_add(1, Ordering::Relaxed);
+                error_response(&format!("internal serialization error: {e}")).to_string()
+            });
+            let sent = conn
+                .writer
+                .write_all(wire.as_bytes())
+                .and_then(|_| conn.writer.write_all(b"\n"))
+                .and_then(|_| conn.writer.flush());
+            match (sent, stop) {
+                (Err(_), _) => Disposition::Close,
+                (Ok(()), true) => Disposition::Shutdown,
+                (Ok(()), false) => Disposition::Requeue,
+            }
+        }
+        // Poll expired with no (complete) line: any bytes consumed so
+        // far stay in `pending`; requeue unless the peer has been
+        // silent past the idle cutoff.
+        Err(e)
+            if matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock
+                    | std::io::ErrorKind::TimedOut
+                    | std::io::ErrorKind::Interrupted
+            ) =>
+        {
+            if conn.last_activity.elapsed() > IDLE_TIMEOUT {
+                Disposition::Close
+            } else {
+                Disposition::Requeue
+            }
+        }
+        Err(_) => Disposition::Close,
+    }
+}
+
+/// Dispatch one request line → (response, shutdown?).
+fn respond(line: &str, stats: &ServerStats) -> (Json, bool) {
+    let req = match Request::parse_line(line) {
+        Ok(req) => req,
+        Err(e) => {
+            stats.errors.fetch_add(1, Ordering::Relaxed);
+            return (error_response(&format!("{e:#}")), false);
+        }
+    };
+    let result = match req {
+        Request::Plan { combo, batch, quantized } => {
+            stats.plan_requests.fetch_add(1, Ordering::Relaxed);
+            handle_plan(&combo, batch, quantized, stats)
+        }
+        Request::Sweep { combos, batches, quantized } => {
+            stats.sweep_requests.fetch_add(1, Ordering::Relaxed);
+            handle_sweep(&combos, &batches, quantized, stats)
+        }
+        Request::Stats => {
+            stats.stats_requests.fetch_add(1, Ordering::Relaxed);
+            let mut body = BTreeMap::new();
+            body.insert("stats".to_string(), stats.to_json());
+            Ok(ok_response(body))
+        }
+        Request::CacheFlush => {
+            stats.flush_requests.fetch_add(1, Ordering::Relaxed);
+            let flushed = {
+                let mut guard = crate::partition::cache::global().lock().unwrap();
+                let n = guard.len();
+                guard.clear();
+                n
+            };
+            let mut body = BTreeMap::new();
+            body.insert("flushed".to_string(), Json::Num(flushed as f64));
+            Ok(ok_response(body))
+        }
+        Request::Shutdown => {
+            let mut body = BTreeMap::new();
+            body.insert("stopping".to_string(), Json::Bool(true));
+            return (ok_response(body), true);
+        }
+    };
+    match result {
+        Ok(response) => (response, false),
+        Err(e) => {
+            stats.errors.fetch_add(1, Ordering::Relaxed);
+            (error_response(&format!("{e:#}")), false)
+        }
+    }
+}
+
+fn handle_plan(combo: &str, batch: usize, quantized: bool, stats: &ServerStats) -> Result<Json> {
+    let c = try_combo(combo)?;
+    if batch == 0 {
+        bail!("plan: batch must be ≥ 1");
+    }
+    let t0 = Instant::now();
+    let plan = static_phase(&c, batch, quantized);
+    stats.record_request(
+        1,
+        plan.cache_hit as u64,
+        plan.solution.explored as u64,
+        t0.elapsed().as_micros() as u64,
+    );
+    let mut body = BTreeMap::new();
+    body.insert("plan".to_string(), plan_to_json(&plan, c.name, batch, quantized));
+    Ok(ok_response(body))
+}
+
+fn handle_sweep(
+    combos: &[String],
+    batches: &[usize],
+    quantized: bool,
+    stats: &ServerStats,
+) -> Result<Json> {
+    let t0 = Instant::now();
+    let grid = plan_named_grid(combos, batches, quantized)?;
+    let wall = t0.elapsed().as_micros() as u64;
+    let hits = grid.iter().filter(|(_, _, p)| p.cache_hit).count() as u64;
+    let explored: u64 = grid.iter().map(|(_, _, p)| p.solution.explored as u64).sum();
+    stats.record_request(grid.len() as u64, hits, explored, wall);
+    let plans: Vec<Json> = grid
+        .iter()
+        .map(|(c, bs, plan)| plan_to_json(plan, c.name, *bs, quantized))
+        .collect();
+    let mut body = BTreeMap::new();
+    body.insert("plans".to_string(), Json::Arr(plans));
+    Ok(ok_response(body))
+}

@@ -1,0 +1,34 @@
+//! The planning server: AP-DRL's static phase as a long-lived network
+//! service (`apdrl serve`).
+//!
+//! The static phase (DSE profiling → TAPCA → ILP partitioning) is the
+//! expensive, cacheable half of the framework; PR 1 made it a memoized
+//! in-process library, and this subsystem puts that library behind a
+//! socket so *many processes and hosts* share one planner and one plan
+//! cache:
+//!
+//! * [`daemon`] — the TCP daemon: accept loop + worker-thread pool, all
+//!   connections sharing the process-wide `partition::cache`.
+//! * [`protocol`] — the versioned JSON-lines request/response protocol
+//!   (`plan`, `sweep`, `stats`, `cache_flush`, `shutdown`) and the
+//!   [`RemotePlan`] payload type.
+//! * [`client`] — the blocking [`RemotePlanner`], mirroring the local
+//!   planning entry points over the wire; `apdrl sweep --remote <addr>`
+//!   and the `remote_sweep` example drive grids through it.
+//! * [`stats`] — daemon telemetry (request counters, solve wall time,
+//!   queue depth) surfaced by the `stats` verb, plus the process-global
+//!   solve telemetry that auto-tunes the parallel B&B fan-out in
+//!   `partition::ilp`.
+//!
+//! Everything is `std::net` + `std::thread`: no async runtime, no
+//! external dependencies, per the offline build contract.
+
+pub mod client;
+pub mod daemon;
+pub mod protocol;
+pub mod stats;
+
+pub use client::{server_addr, RemotePlanner, ENV_ADDR};
+pub use daemon::{serve, Server, DEFAULT_ADDR};
+pub use protocol::{RemotePlan, RemoteScheduleEntry, PROTOCOL_VERSION};
+pub use stats::ServerStats;

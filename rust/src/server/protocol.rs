@@ -1,0 +1,483 @@
+//! Versioned JSON-lines wire protocol of the planning server.
+//!
+//! Every request and every response is exactly one JSON object on one
+//! line (`\n`-terminated), serialized with the strict
+//! [`Json::to_line`] writer (non-finite numbers are a hard error, never
+//! a silent `null`).  Requests carry the protocol version in `v`; a
+//! mismatch is rejected before the verb is looked at, so old clients get
+//! a diagnostic instead of a misparse.
+//!
+//! Verbs (see `lib.rs` for a worked example of each line):
+//!
+//! | verb          | request fields                         | response payload |
+//! |---------------|----------------------------------------|------------------|
+//! | `plan`        | `combo`, `batch`, `quantized`          | `plan`           |
+//! | `sweep`       | `combos[]`, `batches[]`, `quantized`   | `plans[]`        |
+//! | `stats`       | —                                      | `stats`          |
+//! | `cache_flush` | —                                      | `flushed`        |
+//! | `shutdown`    | —                                      | `stopping`       |
+//!
+//! Responses are `{"v":1,"ok":true,...payload}` or
+//! `{"v":1,"ok":false,"error":"..."}`.  The plan payload carries the
+//! full schedule with raw `f64` start/finish times; the serializer's
+//! shortest-round-trip formatting makes the remote schedule
+//! *bit-identical* to the in-process one (asserted in
+//! `tests/server.rs`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::StaticPlan;
+use crate::hw::Component;
+use crate::util::json::Json;
+
+/// Bump on any incompatible change to the request or response shapes.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// One parsed client request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Plan { combo: String, batch: usize, quantized: bool },
+    Sweep { combos: Vec<String>, batches: Vec<usize>, quantized: bool },
+    Stats,
+    CacheFlush,
+    Shutdown,
+}
+
+/// Strict integer read: `Json::as_usize` truncates fractions and
+/// saturates negatives, which would let a buggy peer's `"batch":63.7`
+/// silently plan batch 63.  The wire accepts exact non-negative
+/// integers only.
+fn exact_usize(v: &Json) -> Option<usize> {
+    let n = v.as_f64()?;
+    (n >= 0.0 && n.fract() == 0.0 && n <= u32::MAX as f64).then_some(n as usize)
+}
+
+impl Request {
+    /// Parse one wire line.  Version is checked before the verb so a
+    /// future client talking to an old server fails loudly.
+    pub fn parse_line(line: &str) -> Result<Request> {
+        let root = Json::parse(line.trim())
+            .map_err(|e| anyhow!("bad request: {e}"))?;
+        let v = root
+            .get("v")
+            .and_then(exact_usize)
+            .ok_or_else(|| anyhow!("bad request: missing protocol version field `v`"))?;
+        if v as u64 != PROTOCOL_VERSION {
+            bail!(
+                "protocol version mismatch: peer speaks v{v}, server speaks v{PROTOCOL_VERSION}"
+            );
+        }
+        let verb = root
+            .get("verb")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("bad request: missing `verb`"))?;
+        match verb {
+            "plan" => {
+                let combo = root
+                    .get("combo")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("plan: missing `combo`"))?
+                    .to_string();
+                let batch = root
+                    .get("batch")
+                    .and_then(exact_usize)
+                    .ok_or_else(|| anyhow!("plan: missing or non-integer `batch`"))?;
+                let quantized =
+                    root.get("quantized").and_then(Json::as_bool).unwrap_or(true);
+                Ok(Request::Plan { combo, batch, quantized })
+            }
+            "sweep" => {
+                let combos = root
+                    .get("combos")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("sweep: missing `combos`"))?
+                    .iter()
+                    .map(|c| {
+                        c.as_str()
+                            .map(str::to_string)
+                            .ok_or_else(|| anyhow!("sweep: `combos` must be strings"))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let batches = root
+                    .get("batches")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("sweep: missing `batches`"))?
+                    .iter()
+                    .map(|b| {
+                        exact_usize(b)
+                            .filter(|&n| n > 0)
+                            .ok_or_else(|| anyhow!("sweep: `batches` must be positive integers"))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                if combos.is_empty() || batches.is_empty() {
+                    bail!("sweep: empty grid");
+                }
+                let quantized =
+                    root.get("quantized").and_then(Json::as_bool).unwrap_or(true);
+                Ok(Request::Sweep { combos, batches, quantized })
+            }
+            "stats" => Ok(Request::Stats),
+            "cache_flush" => Ok(Request::CacheFlush),
+            "shutdown" => Ok(Request::Shutdown),
+            other => bail!("unknown verb {other:?}"),
+        }
+    }
+
+    /// Serialize to one wire line (no trailing newline).
+    pub fn to_line(&self) -> Result<String> {
+        let mut obj = BTreeMap::new();
+        obj.insert("v".to_string(), Json::Num(PROTOCOL_VERSION as f64));
+        match self {
+            Request::Plan { combo, batch, quantized } => {
+                obj.insert("verb".into(), Json::Str("plan".into()));
+                obj.insert("combo".into(), Json::Str(combo.clone()));
+                obj.insert("batch".into(), Json::Num(*batch as f64));
+                obj.insert("quantized".into(), Json::Bool(*quantized));
+            }
+            Request::Sweep { combos, batches, quantized } => {
+                obj.insert("verb".into(), Json::Str("sweep".into()));
+                obj.insert(
+                    "combos".into(),
+                    Json::Arr(combos.iter().map(|c| Json::Str(c.clone())).collect()),
+                );
+                obj.insert(
+                    "batches".into(),
+                    Json::Arr(batches.iter().map(|&b| Json::Num(b as f64)).collect()),
+                );
+                obj.insert("quantized".into(), Json::Bool(*quantized));
+            }
+            Request::Stats => {
+                obj.insert("verb".into(), Json::Str("stats".into()));
+            }
+            Request::CacheFlush => {
+                obj.insert("verb".into(), Json::Str("cache_flush".into()));
+            }
+            Request::Shutdown => {
+                obj.insert("verb".into(), Json::Str("shutdown".into()));
+            }
+        }
+        Ok(Json::Obj(obj).to_line()?)
+    }
+}
+
+/// `{"v":1,"ok":true}` extended with the payload fields of `body`.
+pub fn ok_response(body: BTreeMap<String, Json>) -> Json {
+    let mut obj = body;
+    obj.insert("v".to_string(), Json::Num(PROTOCOL_VERSION as f64));
+    obj.insert("ok".to_string(), Json::Bool(true));
+    Json::Obj(obj)
+}
+
+/// `{"v":1,"ok":false,"error":"..."}`.
+pub fn error_response(msg: &str) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("v".to_string(), Json::Num(PROTOCOL_VERSION as f64));
+    obj.insert("ok".to_string(), Json::Bool(false));
+    obj.insert("error".to_string(), Json::Str(msg.to_string()));
+    Json::Obj(obj)
+}
+
+/// Client side: parse a response line, turning `ok:false` into an error
+/// carrying the server's message.
+pub fn parse_response(line: &str) -> Result<Json> {
+    let root =
+        Json::parse(line.trim()).map_err(|e| anyhow!("bad response from server: {e}"))?;
+    match root.get("ok").and_then(Json::as_bool) {
+        Some(true) => Ok(root),
+        Some(false) => {
+            let msg = root
+                .get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("unspecified server error");
+            bail!("server error: {msg}")
+        }
+        None => bail!("bad response from server: missing `ok` field"),
+    }
+}
+
+/// One scheduled node as shipped over the wire (mirrors
+/// `partition::schedule::ScheduleEntry` plus display metadata).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RemoteScheduleEntry {
+    pub node: usize,
+    pub name: String,
+    pub component: String,
+    pub format: String,
+    pub start_us: f64,
+    pub finish_us: f64,
+}
+
+/// The planning result a remote client receives: everything the CLI,
+/// the benches and the figure harness read off a local
+/// [`StaticPlan`], minus the problem internals (dag/profiles stay
+/// server-side).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RemotePlan {
+    pub combo: String,
+    pub batch: usize,
+    pub quantized: bool,
+    pub makespan_us: f64,
+    pub comm_us: f64,
+    pub sync_us: f64,
+    pub ps_pl_us: f64,
+    pub interface: String,
+    pub aie_mm_nodes: usize,
+    pub mm_nodes: usize,
+    pub explored: usize,
+    pub cache_hit: bool,
+    /// `(component name, candidate)` per DAG node.
+    pub assignment: Vec<(String, usize)>,
+    pub schedule: Vec<RemoteScheduleEntry>,
+}
+
+impl RemotePlan {
+    /// Per-training-step time: mirrors `StaticPlan::step_time_us`.
+    pub fn step_time_us(&self) -> f64 {
+        self.makespan_us + self.ps_pl_us
+    }
+
+    /// Training throughput (batches/second): mirrors
+    /// `StaticPlan::throughput`.
+    pub fn throughput(&self) -> f64 {
+        1e6 / self.step_time_us()
+    }
+
+    /// Parse the `plan` payload object.
+    pub fn from_json(plan: &Json) -> Result<RemotePlan> {
+        let field = |k: &str| plan.get(k).ok_or_else(|| anyhow!("plan payload missing `{k}`"));
+        let str_field = |k: &str| -> Result<String> {
+            Ok(field(k)?
+                .as_str()
+                .ok_or_else(|| anyhow!("plan payload `{k}` must be a string"))?
+                .to_string())
+        };
+        let num_field = |k: &str| -> Result<f64> {
+            field(k)?.as_f64().ok_or_else(|| anyhow!("plan payload `{k}` must be a number"))
+        };
+        // Counts ride the same strict-integer rule as request fields: a
+        // truncated `batch: 63.7` from a skewed peer must be an error,
+        // not a silently different plan.
+        let usize_field = |k: &str| -> Result<usize> {
+            field(k).and_then(|v| {
+                exact_usize(v)
+                    .ok_or_else(|| anyhow!("plan payload `{k}` must be a non-negative integer"))
+            })
+        };
+        let assignment = field("assignment")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("plan payload `assignment` must be an array"))?
+            .iter()
+            .map(|pair| {
+                let p = pair.as_arr().unwrap_or(&[]);
+                match (p.first().and_then(Json::as_str), p.get(1).and_then(exact_usize)) {
+                    // The name must be a real component, not just a string.
+                    (Some(comp), Some(cand)) if Component::from_name(comp).is_some() => {
+                        Ok((comp.to_string(), cand))
+                    }
+                    _ => Err(anyhow!("plan payload: malformed assignment pair")),
+                }
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let schedule = field("schedule")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("plan payload `schedule` must be an array"))?
+            .iter()
+            .map(|e| {
+                let get_num = |k: &str| -> Result<f64> {
+                    e.get(k)
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| anyhow!("schedule entry missing `{k}`"))
+                };
+                let get_str = |k: &str| -> Result<String> {
+                    Ok(e.get(k)
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("schedule entry missing `{k}`"))?
+                        .to_string())
+                };
+                Ok(RemoteScheduleEntry {
+                    node: e
+                        .get("node")
+                        .and_then(exact_usize)
+                        .ok_or_else(|| anyhow!("schedule entry missing `node`"))?,
+                    name: get_str("name")?,
+                    component: get_str("unit")?,
+                    format: get_str("fmt")?,
+                    start_us: get_num("start_us")?,
+                    finish_us: get_num("finish_us")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(RemotePlan {
+            combo: str_field("combo")?,
+            batch: usize_field("batch")?,
+            quantized: field("quantized")?
+                .as_bool()
+                .ok_or_else(|| anyhow!("plan payload `quantized` must be a bool"))?,
+            makespan_us: num_field("makespan_us")?,
+            comm_us: num_field("comm_us")?,
+            sync_us: num_field("sync_us")?,
+            ps_pl_us: num_field("ps_pl_us")?,
+            interface: str_field("interface")?,
+            aie_mm_nodes: usize_field("aie_mm_nodes")?,
+            mm_nodes: usize_field("mm_nodes")?,
+            explored: usize_field("explored")?,
+            cache_hit: field("cache_hit")?
+                .as_bool()
+                .ok_or_else(|| anyhow!("plan payload `cache_hit` must be a bool"))?,
+            assignment,
+            schedule,
+        })
+    }
+}
+
+/// Serialize a solved [`StaticPlan`] into the wire `plan` payload.
+pub fn plan_to_json(plan: &StaticPlan, combo: &str, batch: usize, quantized: bool) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("combo".to_string(), Json::Str(combo.to_string()));
+    obj.insert("batch".to_string(), Json::Num(batch as f64));
+    obj.insert("quantized".to_string(), Json::Bool(quantized));
+    obj.insert("makespan_us".to_string(), Json::Num(plan.schedule.makespan_us));
+    obj.insert("comm_us".to_string(), Json::Num(plan.schedule.comm_us));
+    obj.insert("sync_us".to_string(), Json::Num(plan.schedule.sync_us));
+    obj.insert("ps_pl_us".to_string(), Json::Num(plan.ps_pl_us));
+    obj.insert("interface".to_string(), Json::Str(plan.interface.name().to_string()));
+    obj.insert(
+        "aie_mm_nodes".to_string(),
+        Json::Num(plan.solution.aie_nodes(&plan.dag) as f64),
+    );
+    obj.insert("mm_nodes".to_string(), Json::Num(plan.dag.mm_nodes().len() as f64));
+    obj.insert("explored".to_string(), Json::Num(plan.solution.explored as f64));
+    obj.insert("cache_hit".to_string(), Json::Bool(plan.cache_hit));
+    obj.insert(
+        "assignment".to_string(),
+        Json::Arr(
+            plan.solution
+                .assignment
+                .iter()
+                .map(|p| {
+                    Json::Arr(vec![
+                        Json::Str(p.component.name().to_string()),
+                        Json::Num(p.candidate as f64),
+                    ])
+                })
+                .collect(),
+        ),
+    );
+    obj.insert(
+        "schedule".to_string(),
+        Json::Arr(
+            plan.schedule
+                .entries
+                .iter()
+                .map(|e| {
+                    let mut entry = BTreeMap::new();
+                    entry.insert("node".to_string(), Json::Num(e.node as f64));
+                    entry.insert(
+                        "name".to_string(),
+                        Json::Str(plan.dag.nodes[e.node].name.clone()),
+                    );
+                    entry.insert("unit".to_string(), Json::Str(e.component.name().to_string()));
+                    entry.insert(
+                        "fmt".to_string(),
+                        Json::Str(plan.policy.node_format[e.node].name().to_string()),
+                    );
+                    entry.insert("start_us".to_string(), Json::Num(e.start_us));
+                    entry.insert("finish_us".to_string(), Json::Num(e.finish_us));
+                    Json::Obj(entry)
+                })
+                .collect(),
+        ),
+    );
+    Json::Obj(obj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requests_round_trip_the_wire() {
+        let reqs = [
+            Request::Plan { combo: "dqn_cartpole".into(), batch: 64, quantized: true },
+            Request::Sweep {
+                combos: vec!["a2c_invpend".into(), "ddpg_lunar".into()],
+                batches: vec![64, 256],
+                quantized: false,
+            },
+            Request::Stats,
+            Request::CacheFlush,
+            Request::Shutdown,
+        ];
+        for req in reqs {
+            let line = req.to_line().unwrap();
+            assert!(!line.contains('\n'), "wire lines must be one line");
+            assert_eq!(Request::parse_line(&line).unwrap(), req);
+        }
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected_before_the_verb() {
+        let e = Request::parse_line(r#"{"v":99,"verb":"stats"}"#).unwrap_err();
+        assert!(format!("{e}").contains("protocol version mismatch"), "{e}");
+        let e = Request::parse_line(r#"{"verb":"stats"}"#).unwrap_err();
+        assert!(format!("{e}").contains("missing protocol version"), "{e}");
+    }
+
+    #[test]
+    fn wire_integers_must_be_exact() {
+        // A fractional version or batch must be rejected, not truncated
+        // into a request the peer never made.
+        for bad in [
+            r#"{"v":1.9,"verb":"stats"}"#,
+            r#"{"v":-1,"verb":"stats"}"#,
+            r#"{"v":1,"verb":"plan","combo":"dqn_cartpole","batch":63.7}"#,
+            r#"{"v":1,"verb":"plan","combo":"dqn_cartpole","batch":-8}"#,
+            r#"{"v":1,"verb":"sweep","combos":["dqn_cartpole"],"batches":[64.5]}"#,
+        ] {
+            assert!(Request::parse_line(bad).is_err(), "{bad} must not parse");
+        }
+        // Integral floats (JSON has no int type) are of course fine.
+        assert!(Request::parse_line(r#"{"v":1.0,"verb":"stats"}"#).is_ok());
+    }
+
+    #[test]
+    fn malformed_requests_error_cleanly() {
+        assert!(Request::parse_line("not json").is_err());
+        let e = Request::parse_line(r#"{"v":1,"verb":"fly"}"#).unwrap_err();
+        assert!(format!("{e}").contains("unknown verb"), "{e}");
+        let e = Request::parse_line(r#"{"v":1,"verb":"plan","batch":64}"#).unwrap_err();
+        assert!(format!("{e}").contains("missing `combo`"), "{e}");
+        let e = Request::parse_line(r#"{"v":1,"verb":"sweep","combos":[],"batches":[]}"#)
+            .unwrap_err();
+        assert!(format!("{e}").contains("missing") || format!("{e}").contains("empty"), "{e}");
+    }
+
+    #[test]
+    fn responses_carry_ok_and_errors() {
+        let ok = ok_response(BTreeMap::new()).to_line().unwrap();
+        assert!(parse_response(&ok).is_ok());
+        let err = error_response("boom").to_line().unwrap();
+        let e = parse_response(&err).unwrap_err();
+        assert!(format!("{e}").contains("boom"), "{e}");
+    }
+
+    #[test]
+    fn plan_payload_round_trips_bit_identically() {
+        let c = crate::coordinator::combo("dqn_cartpole");
+        let plan = crate::coordinator::static_phase(&c, 24, true);
+        let wire = plan_to_json(&plan, c.name, 24, true).to_line().unwrap();
+        let remote = RemotePlan::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(remote.makespan_us.to_bits(), plan.schedule.makespan_us.to_bits());
+        assert_eq!(remote.schedule.len(), plan.schedule.entries.len());
+        for (r, l) in remote.schedule.iter().zip(&plan.schedule.entries) {
+            assert_eq!(r.node, l.node);
+            assert_eq!(r.component, l.component.name());
+            assert_eq!(r.start_us.to_bits(), l.start_us.to_bits());
+            assert_eq!(r.finish_us.to_bits(), l.finish_us.to_bits());
+        }
+        assert_eq!(remote.assignment.len(), plan.solution.assignment.len());
+        assert_eq!(remote.step_time_us().to_bits(), plan.step_time_us().to_bits());
+    }
+}

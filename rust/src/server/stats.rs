@@ -1,0 +1,226 @@
+//! Telemetry for the planning server *and* the solver it fronts.
+//!
+//! Two layers:
+//!
+//! * [`ServerStats`] — per-daemon counters (requests by verb, errors,
+//!   plans served, solve wall time, queue depth, live connections),
+//!   surfaced over the wire by the `stats` protocol verb together with
+//!   the process-wide plan-cache counters.
+//! * [`SolveTelemetry`] — a process-global record of every fresh ILP
+//!   solve (count, explored nodes, wall time), fed by
+//!   `partition::ilp::solve` itself.  Its running mean of explored
+//!   nodes drives [`tasks_per_worker_hint`], the adaptive fan-out the
+//!   parallel branch-and-bound uses instead of the fixed
+//!   `TASKS_PER_WORKER` constant once enough solves have been observed.
+//!
+//! Everything is lock-free atomics: the counters sit on the solver hot
+//! path and must never serialize concurrent workers.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use crate::partition::cache;
+use crate::util::json::Json;
+
+/// Minimum observed solves before the adaptive fan-out hint activates;
+/// below this the solver keeps its fixed fallback constant.
+const HINT_MIN_SOLVES: u64 = 4;
+
+/// Per-daemon request counters.  All monotonic except `queue_depth`
+/// (connections accepted but not yet picked up by a worker) and
+/// `in_flight` (requests currently being serviced).
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    pub requests: AtomicU64,
+    pub errors: AtomicU64,
+    pub plan_requests: AtomicU64,
+    pub sweep_requests: AtomicU64,
+    pub stats_requests: AtomicU64,
+    pub flush_requests: AtomicU64,
+    /// Individual plans returned (a sweep of N points counts N).
+    pub plans_served: AtomicU64,
+    /// Of those, how many came out of the plan cache.
+    pub plans_from_cache: AtomicU64,
+    /// Wall time spent inside planning calls, µs (cache hits included —
+    /// they are part of request latency).
+    pub solve_us_total: AtomicU64,
+    /// Slowest single planning request, µs.
+    pub solve_us_max: AtomicU64,
+    /// B&B nodes explored on behalf of remote requests.
+    pub explored_total: AtomicU64,
+    pub connections: AtomicU64,
+    pub queue_depth: AtomicUsize,
+    pub in_flight: AtomicUsize,
+}
+
+impl ServerStats {
+    pub fn new() -> ServerStats {
+        ServerStats::default()
+    }
+
+    /// Record one serviced planning request covering `plans` plans, of
+    /// which `cache_hits` were cache hits, exploring `explored` nodes in
+    /// `wall_us` µs of wall time.
+    pub fn record_request(&self, plans: u64, cache_hits: u64, explored: u64, wall_us: u64) {
+        self.plans_served.fetch_add(plans, Ordering::Relaxed);
+        self.plans_from_cache.fetch_add(cache_hits, Ordering::Relaxed);
+        self.explored_total.fetch_add(explored, Ordering::Relaxed);
+        self.solve_us_total.fetch_add(wall_us, Ordering::Relaxed);
+        self.solve_us_max.fetch_max(wall_us, Ordering::Relaxed);
+    }
+
+    /// Snapshot every counter — plus the process-wide plan-cache state
+    /// and solver telemetry — as the JSON object the `stats` verb ships.
+    pub fn to_json(&self) -> Json {
+        let mut obj = std::collections::BTreeMap::new();
+        let num = |v: u64| Json::Num(v as f64);
+        obj.insert("requests".into(), num(self.requests.load(Ordering::Relaxed)));
+        obj.insert("errors".into(), num(self.errors.load(Ordering::Relaxed)));
+        obj.insert("plan_requests".into(), num(self.plan_requests.load(Ordering::Relaxed)));
+        obj.insert("sweep_requests".into(), num(self.sweep_requests.load(Ordering::Relaxed)));
+        obj.insert("stats_requests".into(), num(self.stats_requests.load(Ordering::Relaxed)));
+        obj.insert("flush_requests".into(), num(self.flush_requests.load(Ordering::Relaxed)));
+        obj.insert("plans_served".into(), num(self.plans_served.load(Ordering::Relaxed)));
+        obj.insert(
+            "plans_from_cache".into(),
+            num(self.plans_from_cache.load(Ordering::Relaxed)),
+        );
+        obj.insert("solve_us_total".into(), num(self.solve_us_total.load(Ordering::Relaxed)));
+        obj.insert("solve_us_max".into(), num(self.solve_us_max.load(Ordering::Relaxed)));
+        obj.insert("explored_total".into(), num(self.explored_total.load(Ordering::Relaxed)));
+        obj.insert("connections".into(), num(self.connections.load(Ordering::Relaxed)));
+        obj.insert(
+            "queue_depth".into(),
+            num(self.queue_depth.load(Ordering::Relaxed) as u64),
+        );
+        obj.insert("in_flight".into(), num(self.in_flight.load(Ordering::Relaxed) as u64));
+
+        // Process-wide plan cache: every client shares it, so hit/miss
+        // rates here are the fleet-level figure, not per-connection.
+        let (len, hits, misses) = {
+            let guard = cache::global().lock().unwrap();
+            (guard.len() as u64, guard.hits, guard.misses)
+        };
+        let mut c = std::collections::BTreeMap::new();
+        c.insert("entries".into(), num(len));
+        c.insert("hits".into(), num(hits));
+        c.insert("misses".into(), num(misses));
+        let rate = if hits + misses > 0 { hits as f64 / (hits + misses) as f64 } else { 0.0 };
+        c.insert("hit_rate".into(), Json::Num(rate));
+        obj.insert("cache".into(), Json::Obj(c));
+
+        // Solver telemetry (all solves in this process, remote or not).
+        let t = telemetry();
+        let mut s = std::collections::BTreeMap::new();
+        s.insert("solves".into(), num(t.solves.load(Ordering::Relaxed)));
+        s.insert("explored_total".into(), num(t.explored_total.load(Ordering::Relaxed)));
+        s.insert("wall_us_total".into(), num(t.wall_us_total.load(Ordering::Relaxed)));
+        s.insert(
+            "tasks_per_worker_hint".into(),
+            match tasks_per_worker_hint() {
+                Some(n) => num(n as u64),
+                None => Json::Null,
+            },
+        );
+        obj.insert("solver".into(), Json::Obj(s));
+
+        Json::Obj(obj)
+    }
+}
+
+/// Process-global solve telemetry, recorded by `partition::ilp::solve`
+/// for every fresh (non-cached) branch-and-bound run.
+#[derive(Debug, Default)]
+pub struct SolveTelemetry {
+    pub solves: AtomicU64,
+    pub explored_total: AtomicU64,
+    pub wall_us_total: AtomicU64,
+}
+
+pub fn telemetry() -> &'static SolveTelemetry {
+    static GLOBAL: SolveTelemetry = SolveTelemetry {
+        solves: AtomicU64::new(0),
+        explored_total: AtomicU64::new(0),
+        wall_us_total: AtomicU64::new(0),
+    };
+    &GLOBAL
+}
+
+/// Record one completed solve.
+pub fn record_solve(explored: usize, wall: std::time::Duration) {
+    let t = telemetry();
+    t.solves.fetch_add(1, Ordering::Relaxed);
+    t.explored_total.fetch_add(explored as u64, Ordering::Relaxed);
+    t.wall_us_total.fetch_add(wall.as_micros() as u64, Ordering::Relaxed);
+}
+
+/// Adaptive prefix fan-out for the parallel B&B: how many prefix tasks
+/// to cut per worker, judged from the mean explored-node count of the
+/// solves seen so far in this process.
+///
+/// Small trees (the cartpole-class combos) finish in microseconds — the
+/// queue-drain overhead of a deep fan-out outweighs any balancing, so
+/// the hint shrinks.  Large trees (conv nets, big batches) leave
+/// stragglers under a shallow fan-out, so the hint grows.  `None` until
+/// [`HINT_MIN_SOLVES`] solves have been observed; the caller then falls
+/// back to its fixed constant.  The hint only shapes work division —
+/// both fan-outs are exact searches, so the returned plan is identical
+/// either way (asserted in `partition::ilp` tests).
+pub fn tasks_per_worker_hint() -> Option<usize> {
+    let t = telemetry();
+    hint_for(
+        t.solves.load(Ordering::Relaxed),
+        t.explored_total.load(Ordering::Relaxed),
+    )
+}
+
+/// The pure band mapping behind [`tasks_per_worker_hint`].
+fn hint_for(solves: u64, explored_total: u64) -> Option<usize> {
+    if solves < HINT_MIN_SOLVES {
+        return None;
+    }
+    Some(match explored_total / solves {
+        0..=7_999 => 2,
+        8_000..=79_999 => 4,
+        _ => 8,
+    })
+}
+
+/// Test-only: reset the process-global telemetry (tests share one
+/// process; stale counts would couple them).
+pub fn reset_telemetry_for_tests() {
+    let t = telemetry();
+    t.solves.store(0, Ordering::Relaxed);
+    t.explored_total.store(0, Ordering::Relaxed);
+    t.wall_us_total.store(0, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hint_needs_minimum_history_then_scales_with_tree_size() {
+        // The pure mapping is tested directly: the process-global
+        // counters race with every other test that solves an ILP.
+        assert_eq!(hint_for(0, 0), None, "no history → fixed fallback");
+        assert_eq!(hint_for(HINT_MIN_SOLVES - 1, 1 << 40), None, "below minimum history");
+        let n = HINT_MIN_SOLVES;
+        assert_eq!(hint_for(n, n * 1_000), Some(2), "tiny trees → shallow fan-out");
+        assert_eq!(hint_for(n, n * 20_000), Some(4), "mid trees → the fixed default");
+        assert_eq!(hint_for(n, n * 500_000), Some(8), "huge trees → deep fan-out");
+    }
+
+    #[test]
+    fn server_stats_json_has_the_contract_fields() {
+        let stats = ServerStats::new();
+        stats.requests.fetch_add(3, Ordering::Relaxed);
+        stats.record_request(2, 1, 4_000, 1_500);
+        let j = stats.to_json();
+        assert_eq!(j.get("requests").and_then(Json::as_usize), Some(3));
+        assert_eq!(j.get("plans_served").and_then(Json::as_usize), Some(2));
+        assert_eq!(j.get("plans_from_cache").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.get("solve_us_max").and_then(Json::as_usize), Some(1_500));
+        assert!(j.get("cache").and_then(|c| c.get("hit_rate")).is_some());
+        assert!(j.get("solver").and_then(|s| s.get("solves")).is_some());
+    }
+}

@@ -75,6 +75,31 @@ impl Json {
             _ => None,
         }
     }
+
+    /// Strict one-line serializer for wire protocols (the planning
+    /// server's JSON-lines framing).  Unlike `Display` — which degrades
+    /// non-finite numbers to `null` for best-effort report files — a
+    /// NaN/Inf anywhere in the tree is a hard error here: a planner
+    /// response silently swapping a latency for `null` would corrupt the
+    /// remote side's schedule instead of failing the request.  The
+    /// output never contains a raw newline (control characters are
+    /// `\u`-escaped), so it frames safely as one line.
+    pub fn to_line(&self) -> Result<String, JsonError> {
+        self.reject_non_finite()?;
+        Ok(self.to_string())
+    }
+
+    fn reject_non_finite(&self) -> Result<(), JsonError> {
+        match self {
+            Json::Num(n) if !n.is_finite() => Err(JsonError {
+                msg: format!("non-finite number {n} has no JSON representation"),
+                pos: 0,
+            }),
+            Json::Arr(items) => items.iter().try_for_each(Json::reject_non_finite),
+            Json::Obj(map) => map.values().try_for_each(Json::reject_non_finite),
+            _ => Ok(()),
+        }
+    }
 }
 
 /// Compact serializer (no insignificant whitespace).  Non-finite numbers
@@ -379,6 +404,62 @@ mod tests {
         // non-finite degrades to null instead of emitting invalid JSON
         assert_eq!(Json::Num(f64::NAN).to_string(), "null");
         assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+    }
+
+    #[test]
+    fn escaped_strings_round_trip_the_wire() {
+        // Every escape class the protocol can carry: quotes, backslashes,
+        // path separators, control characters, tabs/newlines/CRs, unicode
+        // (both raw UTF-8 and \u escapes) and the \u0000..\u001f band.
+        let cases = [
+            "plain",
+            "quote\"inside",
+            "back\\slash",
+            "C:\\path\\to\\file",
+            "line\nbreak\r\n",
+            "tab\tand\u{8}backspace\u{c}formfeed",
+            "unicode é ü 漢字 🦀",
+            "\u{1}\u{2}\u{1f}",
+            "",
+        ];
+        for s in cases {
+            let v = Json::Str(s.to_string());
+            let line = v.to_line().unwrap();
+            assert!(!line.contains('\n'), "wire form must stay one line: {line:?}");
+            assert_eq!(Json::parse(&line).unwrap(), v, "round trip failed for {s:?}");
+        }
+        // And nested inside object keys, where escaping also applies.
+        let mut m = BTreeMap::new();
+        m.insert("key\nwith\tescapes\"".to_string(), Json::Str("v\\".into()));
+        let v = Json::Obj(m);
+        assert_eq!(Json::parse(&v.to_line().unwrap()).unwrap(), v);
+    }
+
+    #[test]
+    fn wire_serializer_rejects_non_finite_with_a_clear_error() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let e = Json::Num(bad).to_line().unwrap_err();
+            assert!(
+                format!("{e}").contains("non-finite"),
+                "error must name the cause: {e}"
+            );
+        }
+        // Deeply nested non-finite values are found too.
+        let mut m = BTreeMap::new();
+        m.insert("a".to_string(), Json::Arr(vec![Json::Num(1.0), Json::Num(f64::NAN)]));
+        assert!(Json::Obj(m).to_line().is_err());
+        // Finite trees pass through identical to Display.
+        let v = Json::parse(r#"{"x":[1,2.5,"s"],"y":null}"#).unwrap();
+        assert_eq!(v.to_line().unwrap(), v.to_string());
+    }
+
+    #[test]
+    fn parser_rejects_nan_and_infinity_tokens() {
+        // JSON has no NaN/Infinity literals; they must not sneak in as
+        // numbers from a buggy peer.
+        for bad in ["NaN", "Infinity", "-Infinity", "[1,NaN]", "{\"x\":Infinity}"] {
+            assert!(Json::parse(bad).is_err(), "{bad} must not parse");
+        }
     }
 
     #[test]

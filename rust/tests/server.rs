@@ -1,0 +1,212 @@
+//! Integration tests for the planning server: boot a daemon on an
+//! ephemeral port, drive it with concurrent `plan`/`sweep` clients,
+//! assert remote schedules are *byte-identical* to the in-process
+//! planner's, and exercise the malformed-request and protocol-version
+//! error paths.  Everything runs on the default (non-`pjrt`) feature
+//! set over loopback TCP.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use apdrl::coordinator::{combo, static_phase};
+use apdrl::server::{RemotePlanner, Server, PROTOCOL_VERSION};
+use apdrl::util::json::Json;
+
+/// Boot a server on an ephemeral loopback port; returns its address and
+/// the thread that runs it (joined after `shutdown`).
+fn boot(workers: usize) -> (String, std::thread::JoinHandle<()>) {
+    let server = Server::bind("127.0.0.1:0", workers).expect("ephemeral bind must work");
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.run().expect("server run must not error"));
+    (addr, handle)
+}
+
+/// The acceptance scenario: remote plans/sweeps equal the in-process
+/// planner bit for bit, concurrent clients are serviced, the second
+/// identical sweep is served from the shared cache (stats verb shows
+/// hits), and shutdown stops the daemon cleanly.
+#[test]
+fn remote_plans_are_byte_identical_and_cache_is_shared() {
+    let (addr, handle) = boot(3);
+
+    // Concurrent clients: two sweeps over the same small grid plus a
+    // single-point plan, all in flight together.
+    let combos = vec!["dqn_cartpole".to_string(), "a2c_invpend".to_string()];
+    let batches = [36usize, 52];
+    let sweep_a = {
+        let (addr, combos) = (addr.clone(), combos.clone());
+        std::thread::spawn(move || {
+            RemotePlanner::connect(&addr).unwrap().sweep(&combos, &batches, true).unwrap()
+        })
+    };
+    let sweep_b = {
+        let (addr, combos) = (addr.clone(), combos.clone());
+        std::thread::spawn(move || {
+            RemotePlanner::connect(&addr).unwrap().sweep(&combos, &batches, true).unwrap()
+        })
+    };
+    let solo = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            RemotePlanner::connect(&addr).unwrap().plan("ddpg_mntncar", 44, true).unwrap()
+        })
+    };
+    let plans_a = sweep_a.join().unwrap();
+    let plans_b = sweep_b.join().unwrap();
+    let remote_solo = solo.join().unwrap();
+
+    // Remote vs in-process: identical grids, identical optima.  (The
+    // *value* of the optimum is unique, so makespan bits always agree;
+    // full schedule byte-identity is asserted below on the
+    // cache-mediated repeat sweep, where it is deterministic even if
+    // the two concurrent first solves raced on a symmetric tie.)
+    assert_eq!(plans_a.len(), combos.len() * batches.len());
+    for (i, remote) in plans_a.iter().enumerate() {
+        let c = combo(&combos[i / batches.len()]);
+        let bs = batches[i % batches.len()];
+        let local = static_phase(&c, bs, true);
+        assert_eq!(remote.combo, c.name);
+        assert_eq!(remote.batch, bs);
+        assert_eq!(
+            remote.makespan_us.to_bits(),
+            local.schedule.makespan_us.to_bits(),
+            "{} bs={bs}: remote and local makespans must be bit-identical",
+            c.name
+        );
+        assert_eq!(remote.schedule.len(), local.schedule.entries.len());
+        assert_eq!(remote.assignment.len(), local.solution.assignment.len());
+    }
+    // The two concurrent sweeps must agree on every optimum.
+    for (a, b) in plans_a.iter().zip(&plans_b) {
+        assert_eq!(a.makespan_us.to_bits(), b.makespan_us.to_bits());
+    }
+    let local_solo = static_phase(&combo("ddpg_mntncar"), 44, true);
+    assert_eq!(
+        remote_solo.makespan_us.to_bits(),
+        local_solo.schedule.makespan_us.to_bits()
+    );
+
+    // Second identical sweep on a fresh connection: every point now
+    // comes out of the shared cache, and the stats verb must say so.
+    // These plans are byte-identical to the in-process planner's — same
+    // cache entry, same deterministic schedule evaluation, schedule
+    // times surviving the wire bit-for-bit.
+    let mut client = RemotePlanner::connect(&addr).unwrap();
+    let replans = client.sweep(&combos, &batches, true).unwrap();
+    assert!(
+        replans.iter().all(|p| p.cache_hit && p.explored == 0),
+        "second identical sweep must be all cache hits"
+    );
+    for (i, remote) in replans.iter().enumerate() {
+        let c = combo(&combos[i / batches.len()]);
+        let bs = batches[i % batches.len()];
+        let local = static_phase(&c, bs, true);
+        assert!(local.cache_hit, "local control must read the same shared cache");
+        for (r, l) in remote.schedule.iter().zip(&local.schedule.entries) {
+            assert_eq!(r.node, l.node);
+            assert_eq!(r.component, l.component.name());
+            assert_eq!(r.start_us.to_bits(), l.start_us.to_bits());
+            assert_eq!(r.finish_us.to_bits(), l.finish_us.to_bits());
+        }
+        for (r, l) in remote.assignment.iter().zip(&local.solution.assignment) {
+            assert_eq!(r.0, l.component.name());
+            assert_eq!(r.1, l.candidate);
+        }
+        assert_eq!(remote.step_time_us().to_bits(), local.step_time_us().to_bits());
+    }
+    let stats = client.stats().unwrap();
+    let hits = stats
+        .get("cache")
+        .and_then(|c| c.get("hits"))
+        .and_then(Json::as_usize)
+        .expect("stats must carry cache.hits");
+    assert!(hits > 0, "stats must report cache hits after the repeat sweep");
+    let served = stats.get("plans_served").and_then(Json::as_usize).unwrap();
+    assert!(served >= 3 * combos.len() * batches.len(), "all sweep points counted");
+
+    // cache_flush empties the shared cache; the next sweep re-solves.
+    let flushed = client.cache_flush().unwrap();
+    assert!(flushed > 0, "flush must report evicted entries");
+
+    client.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+/// Malformed requests and version mismatches get error responses on a
+/// connection that stays usable; the protocol never kills the daemon.
+#[test]
+fn malformed_and_mismatched_requests_error_without_killing_the_connection() {
+    let (addr, handle) = boot(2);
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut ask = |line: &str| -> Json {
+        stream.write_all(line.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        stream.flush().unwrap();
+        let mut buf = String::new();
+        reader.read_line(&mut buf).unwrap();
+        Json::parse(buf.trim()).expect("server must always answer valid JSON")
+    };
+    let err_of = |resp: &Json| -> String {
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+        resp.get("error").and_then(Json::as_str).unwrap_or_default().to_string()
+    };
+
+    // Not JSON at all.
+    let resp = ask("this is not json");
+    assert!(err_of(&resp).contains("bad request"), "{resp}");
+    // Valid JSON, wrong protocol version — rejected before the verb.
+    let resp = ask(&format!(r#"{{"v":{},"verb":"stats"}}"#, PROTOCOL_VERSION + 40));
+    assert!(err_of(&resp).contains("protocol version mismatch"), "{resp}");
+    // Missing version field.
+    let resp = ask(r#"{"verb":"stats"}"#);
+    assert!(err_of(&resp).contains("missing protocol version"), "{resp}");
+    // Unknown verb.
+    let resp = ask(r#"{"v":1,"verb":"transmogrify"}"#);
+    assert!(err_of(&resp).contains("unknown verb"), "{resp}");
+    // Unknown combo: a *planning* error, still a clean protocol answer.
+    let resp = ask(r#"{"v":1,"verb":"plan","combo":"dqn_tetris","batch":8}"#);
+    assert!(err_of(&resp).contains("unknown combo"), "{resp}");
+    // Zero batch.
+    let resp = ask(r#"{"v":1,"verb":"plan","combo":"dqn_cartpole","batch":0}"#);
+    assert!(err_of(&resp).contains("batch"), "{resp}");
+
+    // After all those errors the same connection still serves requests.
+    let resp = ask(r#"{"v":1,"verb":"stats"}"#);
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp}");
+    let errors = resp
+        .get("stats")
+        .and_then(|s| s.get("errors"))
+        .and_then(Json::as_usize)
+        .unwrap();
+    assert!(errors >= 6, "every bad request must be counted, got {errors}");
+
+    // Tidy up the raw connection (both fd clones) before stopping the
+    // daemon; per-request scheduling means it could not block shutdown,
+    // but an explicit close keeps the teardown deterministic.
+    drop(reader);
+    drop(stream);
+    RemotePlanner::connect(&addr).unwrap().shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+/// FP32 vs quantized travel the wire as distinct plans, and the remote
+/// side sees the same precision-dependent formats the local one does.
+#[test]
+fn remote_respects_precision_mode() {
+    let (addr, handle) = boot(2);
+    let mut client = RemotePlanner::connect(&addr).unwrap();
+    let quant = client.plan("ddpg_lunar", 96, true).unwrap();
+    let fp32 = client.plan("ddpg_lunar", 96, false).unwrap();
+    assert!(quant.quantized && !fp32.quantized);
+    assert!(
+        fp32.schedule.iter().all(|e| e.format == "FP32"),
+        "FP32 control must not carry reduced-precision formats"
+    );
+    let local_q = static_phase(&combo("ddpg_lunar"), 96, true);
+    assert_eq!(quant.makespan_us.to_bits(), local_q.schedule.makespan_us.to_bits());
+    let local_f = static_phase(&combo("ddpg_lunar"), 96, false);
+    assert_eq!(fp32.makespan_us.to_bits(), local_f.schedule.makespan_us.to_bits());
+    client.shutdown().unwrap();
+    handle.join().unwrap();
+}
