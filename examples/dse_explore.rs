@@ -59,40 +59,53 @@ fn main() {
     );
     println!("(crossover behaviour is the paper's Fig 6; sweep n to see it move)");
 
-    // The same DSE, driven end-to-end through the planning service: every
-    // Table III convergence combo profiled + partitioned in one batched,
-    // cache-aware sweep (the per-node frontiers above are what the ILP
-    // consumes as its t_ij candidates).
-    use apdrl::coordinator::{plan_sweep, try_combo, PlanRequest, COMBO_NAMES};
+    // The same DSE, driven end-to-end through the one `Planner` API:
+    // every Table III convergence combo profiled + partitioned in one
+    // batched, cache-aware `plan_many` (the per-node frontiers above are
+    // what the ILP consumes as its t_ij candidates).  The backend is
+    // whatever `APDRL_SERVER` selects — local, one daemon, or a
+    // federation — and the numbers are identical whichever it is.
+    use apdrl::coordinator::{PlanRequest, Planner, COMBO_NAMES};
+    use apdrl::server::select_planner;
     let requests: Vec<PlanRequest> = COMBO_NAMES
         .iter()
-        .filter_map(|name| try_combo(name).ok())
-        .map(|c| {
-            let bs = c.batch;
-            PlanRequest::new(c, bs, true)
-        })
+        .filter_map(|name| PlanRequest::named(name).ok())
         .collect();
+    let planner = match select_planner(None) {
+        Ok(planner) => planner,
+        Err(e) => {
+            eprintln!("cannot select a planning backend: {e:#}");
+            std::process::exit(1);
+        }
+    };
     let t0 = std::time::Instant::now();
-    let plans = plan_sweep(&requests);
+    let plans = match planner.plan_many(&requests) {
+        Ok(plans) => plans,
+        Err(e) => {
+            eprintln!("planning sweep failed: {e:#}");
+            std::process::exit(1);
+        }
+    };
     println!(
-        "\nplanning service over {} combos ({:.0} ms cold):",
+        "\nplanning service [{}] over {} combos ({:.0} ms cold):",
+        planner.describe(),
         plans.len(),
         t0.elapsed().as_secs_f64() * 1e3
     );
-    for (req, plan) in requests.iter().zip(&plans) {
+    for plan in &plans {
         println!(
             "  {:20} bs={:<5} {:>10.1} µs/step   AIE {}/{} MM   explored {}{}",
-            req.combo.name,
-            req.batch,
-            plan.schedule.makespan_us,
-            plan.solution.aie_nodes(&plan.dag),
-            plan.dag.mm_nodes().len(),
-            plan.solution.explored,
+            plan.combo,
+            plan.batch,
+            plan.makespan_us,
+            plan.aie_mm_nodes,
+            plan.mm_nodes,
+            plan.explored,
             if plan.cache_hit { " (cache hit)" } else { "" }
         );
     }
     let t1 = std::time::Instant::now();
-    let warm = plan_sweep(&requests);
+    let warm = planner.plan_many(&requests).expect("warm re-plan");
     println!(
         "re-plan: {:.2} ms, {}/{} cache hits (set APDRL_PLAN_CACHE=<file> to persist across runs)",
         t1.elapsed().as_secs_f64() * 1e3,

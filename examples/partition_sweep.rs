@@ -3,70 +3,82 @@
 //! the ILP compares against the greedy and HEFT baselines (the ablation
 //! DESIGN.md calls out).
 //!
-//! The whole batch ladder is planned in one call through the
-//! coordinator's batched planning service (`plan_sweep`): the points are
-//! solved concurrently, each solve parallelizes its own branch-and-bound,
-//! and repeated runs in the same process (or with `APDRL_PLAN_CACHE`
-//! set) hit the plan cache instead of re-solving.
+//! The whole batch ladder is planned in one `Planner::plan_many` call —
+//! in-process by default, or through whatever backend `APDRL_SERVER`
+//! names (a daemon, or a comma-separated federation).  The points are
+//! solved concurrently and repeated runs in the same process (or with
+//! `APDRL_PLAN_CACHE` set) hit the plan cache instead of re-solving.
+//! The heuristic baselines are local-only analyses, so the problem
+//! instance is rebuilt in-process (deterministically) for them.
 //!
 //! ```bash
 //! cargo run --release --example partition_sweep
 //! ```
 
-use apdrl::coordinator::{combo, plan_sweep, PlanRequest};
+use anyhow::Result;
+
+use apdrl::coordinator::{combo, PlanRequest, Planner};
+use apdrl::graph::build_train_graph;
+use apdrl::hw::vek280;
 use apdrl::partition::heuristics::{greedy, heft};
 use apdrl::partition::Problem;
+use apdrl::profile::profile_dag;
+use apdrl::server::select_planner;
 
-fn main() {
+fn main() -> Result<()> {
     let c = combo("ddpg_lunar");
     let batches = [64usize, 128, 256, 512, 1024, 2048];
     let requests: Vec<PlanRequest> =
         batches.iter().map(|&bs| PlanRequest::new(c.clone(), bs, true)).collect();
 
+    let planner = select_planner(None)?;
     let t0 = std::time::Instant::now();
-    let plans = plan_sweep(&requests);
+    let plans = planner.plan_many(&requests)?;
     println!(
-        "DDPG-LunarCont partitioning vs batch size (paper Fig 15) — {} plans in {:.0} ms\n",
+        "DDPG-LunarCont partitioning vs batch size (paper Fig 15) — {} plans in {:.0} ms [{}]\n",
         plans.len(),
-        t0.elapsed().as_secs_f64() * 1e3
+        t0.elapsed().as_secs_f64() * 1e3,
+        planner.describe()
     );
     println!(
         "{:>6} | {:>10} | {:>12} | {:>12} | {:>12} | ILP gain",
         "batch", "AIE nodes", "ILP µs", "HEFT µs", "greedy µs"
     );
+    let platform = vek280();
     for (&bs, plan) in batches.iter().zip(&plans) {
-        // Ablation baselines evaluated on the exact same problem instance
-        // the service solved (dag/profiles/platform travel with the plan).
-        let problem = Problem::new(&plan.dag, &plan.profiles, &plan.platform, true);
+        // Ablation baselines evaluated on the same (deterministically
+        // rebuilt) problem instance the backend solved.
+        let dag = build_train_graph(&c.train_spec(bs));
+        let profiles = profile_dag(&dag, &platform, true);
+        let problem = Problem::new(&dag, &profiles, &platform, true);
         let h = heft(&problem);
         let g = greedy(&problem);
         println!(
             "{bs:>6} | {:>4} of {:>2}  | {:>12.1} | {:>12.1} | {:>12.1} | {:.2}x vs greedy",
-            plan.solution.aie_nodes(&plan.dag),
-            plan.dag.mm_nodes().len(),
-            plan.solution.makespan_us,
+            plan.aie_mm_nodes,
+            plan.mm_nodes,
+            plan.makespan_us,
             h.makespan_us,
             g.makespan_us,
-            g.makespan_us / plan.solution.makespan_us
+            g.makespan_us / plan.makespan_us
         );
     }
 
     println!("\nAIE-resident layers at bs=1024:");
     let idx = batches.iter().position(|&b| b == 1024).unwrap();
-    let plan_1024 = &plans[idx];
-    for (i, p) in plan_1024.solution.assignment.iter().enumerate() {
-        if p.component == apdrl::hw::Component::AIE {
-            println!("  {}", plan_1024.dag.nodes[i].name);
-        }
+    for step in plans[idx].schedule.iter().filter(|s| s.component == "AIE") {
+        println!("  {}", step.name);
     }
 
-    // Re-planning the same ladder is O(1) per point: all cache hits.
+    // Re-planning the same ladder is O(1) per point: all cache hits
+    // (whichever backend's cache — the outcome says).
     let t1 = std::time::Instant::now();
-    let replans = plan_sweep(&requests);
+    let replans = planner.plan_many(&requests)?;
     println!(
         "\nre-plan of the same ladder: {:.2} ms, {}/{} plan-cache hits",
         t1.elapsed().as_secs_f64() * 1e3,
         replans.iter().filter(|p| p.cache_hit).count(),
         replans.len()
     );
+    Ok(())
 }

@@ -1,67 +1,66 @@
-//! Quickstart: the whole AP-DRL static phase on one combo in ~20 lines.
+//! Quickstart: the whole AP-DRL static phase on one combo in ~20 lines,
+//! through the one [`Planner`] API every backend implements.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
+//!
+//! Swap `LocalPlanner` for `RemotePlanner::connect("host:port")?` or
+//! `FederatedPlanner::connect(&hosts)?` and nothing else changes — the
+//! `PlanOutcome` (and the printed numbers) is bit-identical.
 
-use apdrl::coordinator::{combo, static_phase};
-use apdrl::hw::Component;
+use anyhow::Result;
 
-fn main() {
-    // 1. Pick a Table III workload: DDPG on LunarLanderContinuous.
-    let c = combo("ddpg_lunar");
+use apdrl::coordinator::{LocalPlanner, PlanRequest, Planner};
+
+fn main() -> Result<()> {
+    // 1. Pick a Table III workload: DDPG on LunarLanderContinuous, batch
+    //    512, AP-DRL mixed precision (the default).
+    let req = PlanRequest::named("ddpg_lunar")?.with_batch(512);
 
     // 2. Run the static phase: build the layer CDFG, DSE-profile every
     //    node on PL and AIE, solve the partitioning ILP, derive the
     //    precision policy (Alg. 1) and pick the PS-PL interface (TAPCA).
-    let plan = static_phase(&c, 512, /* quantized = */ true);
+    let plan = LocalPlanner.plan(&req)?;
 
-    println!("workload: {} (batch 512)", c.name);
-    println!("layer nodes: {} ({} MM)", plan.dag.len(), plan.dag.mm_nodes().len());
-    println!(
-        "partition: {} MM nodes on AIE, rest on PL",
-        plan.solution.aie_nodes(&plan.dag)
-    );
-    for e in &plan.schedule.entries {
-        let n = &plan.dag.nodes[e.node];
-        if n.kind.is_mm() {
-            println!(
-                "  {:24} -> {:3} [{}] {:8.1} µs",
-                n.name,
-                e.component.name(),
-                plan.policy.node_format[e.node].name(),
-                e.finish_us - e.start_us
-            );
-        }
+    println!("workload: {} (batch {})", plan.combo, plan.batch);
+    println!("layer nodes: {} ({} MM)", plan.schedule.len(), plan.mm_nodes);
+    println!("partition: {} MM nodes on AIE, rest on PL", plan.aie_mm_nodes);
+    for step in plan.schedule.iter().filter(|s| s.mm) {
+        println!(
+            "  {:24} -> {:3} [{}] {:8.1} µs",
+            step.name,
+            step.component,
+            step.format,
+            step.finish_us - step.start_us
+        );
     }
     println!(
         "train-step makespan: {:.1} µs ({:.0} steps/s) | comm {:.1} µs | exposed master-weight sync {:.1} µs",
-        plan.schedule.makespan_us,
+        plan.makespan_us,
         plan.throughput(),
-        plan.schedule.comm_us,
-        plan.schedule.sync_us,
+        plan.comm_us,
+        plan.sync_us,
     );
     println!(
-        "loss scaling armed: {} | PS-PL interface: {:?}",
-        plan.policy.needs_loss_scaling, plan.interface
+        "PS-PL interface: {} ({:.1} µs/step) | planned via {}",
+        plan.interface, plan.ps_pl_us, plan.provenance
     );
 
     // 3. Compare with the FP32 control — the quantization benefit.
-    let fp32 = static_phase(&c, 512, false);
+    let fp32 = LocalPlanner.plan(&req.clone().fp32())?;
     println!(
         "FP32 control: {:.1} µs/step -> quantization speedup {:.2}x",
-        fp32.schedule.makespan_us,
-        fp32.schedule.makespan_us / plan.schedule.makespan_us
+        fp32.makespan_us,
+        fp32.makespan_us / plan.makespan_us
     );
 
     // 4. Where did the AIE win? (the paper's Fig 6 intuition)
-    let any_aie = plan
-        .schedule
-        .entries
-        .iter()
-        .find(|e| e.component == Component::AIE)
-        .map(|e| plan.dag.nodes[e.node].name.clone());
-    if let Some(node) = any_aie {
-        println!("example AIE-resident layer: {node} (high-FLOPs GEMM, BF16 native)");
+    if let Some(step) = plan.schedule.iter().find(|s| s.component == "AIE") {
+        println!(
+            "example AIE-resident layer: {} (high-FLOPs GEMM, BF16 native)",
+            step.name
+        );
     }
+    Ok(())
 }

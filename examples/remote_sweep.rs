@@ -1,97 +1,158 @@
-//! Remote planning sweep: drive a Table III batch-ladder grid through a
-//! long-lived `apdrl serve` daemon instead of the in-process planner,
-//! then read the daemon's telemetry (`stats` verb).
+//! Remote + federated planning sweep: drive a Table III batch-ladder
+//! grid through long-lived `apdrl serve` daemons via the one `Planner`
+//! API, watch the plan-key sharding spread the grid across hosts, then
+//! kill a daemon and watch fail-over finish the sweep on the survivor.
 //!
-//! Point it at a running server:
+//! Point it at running servers (one, or a comma-separated federation):
 //!
 //! ```bash
 //! cargo run --release -- serve --addr 127.0.0.1:7040 &
-//! APDRL_SERVER=127.0.0.1:7040 cargo run --release --example remote_sweep
+//! cargo run --release -- serve --addr 127.0.0.1:7041 &
+//! APDRL_SERVER=127.0.0.1:7040,127.0.0.1:7041 cargo run --release --example remote_sweep
 //! ```
 //!
-//! Without `APDRL_SERVER` the example is self-contained: it boots a
-//! daemon on an ephemeral loopback port in a background thread, sweeps
-//! against it, and shuts it down — the full client/server round trip in
+//! Without `APDRL_SERVER` the example is self-contained: it boots two
+//! daemons on ephemeral loopback ports in background threads, sweeps a
+//! federation of both, shuts one down mid-demo to exercise the fail-over
+//! path, and stops the survivor — the full multi-daemon round trip in
 //! one process.
 
 use anyhow::Result;
 
-use apdrl::server::{RemotePlanner, Server, ENV_ADDR};
+use apdrl::coordinator::{PlanOutcome, PlanRequest, Planner, Provenance};
+use apdrl::server::{
+    parse_host_list, FederatedPlanner, RemotePlanner, Server, ENV_ADDR,
+};
 use apdrl::util::json::Json;
 
-fn main() -> Result<()> {
-    // A server from the environment, or a self-booted ephemeral one.
-    let (addr, local_daemon) = match std::env::var(ENV_ADDR) {
-        Ok(addr) if !addr.is_empty() => (addr, None),
-        _ => {
-            let server = Server::bind("127.0.0.1:0", 2)?;
-            let addr = server.local_addr()?.to_string();
-            println!("(no {ENV_ADDR} set — booted an ephemeral daemon on {addr})\n");
-            (addr, Some(std::thread::spawn(move || server.run())))
-        }
-    };
-
-    let combos: Vec<String> =
-        ["dqn_cartpole", "a2c_invpend", "ddpg_lunar", "ddpg_mntncar"]
-            .iter()
-            .map(|s| s.to_string())
-            .collect();
-    let batches = [64usize, 256, 1024];
-
-    let mut client = RemotePlanner::connect(&addr)?;
-    let t0 = std::time::Instant::now();
-    let plans = client.sweep(&combos, &batches, true)?;
-    let cold_ms = t0.elapsed().as_secs_f64() * 1e3;
-
-    println!("remote sweep of {} points via {addr} ({cold_ms:.0} ms):\n", plans.len());
+fn print_plans(plans: &[PlanOutcome]) {
     println!(
         "{:>14} | {:>5} | {:>12} | {:>7} | {:>8} | origin",
         "combo", "batch", "makespan µs", "AIE MM", "steps/s"
     );
-    for p in &plans {
+    for p in plans {
         println!(
-            "{:>14} | {:>5} | {:>12.1} | {:>3} of {:>2} | {:>8.0} | {}",
+            "{:>14} | {:>5} | {:>12.1} | {:>3} of {:>2} | {:>8.0} | {}{}",
             p.combo,
             p.batch,
             p.makespan_us,
             p.aie_mm_nodes,
             p.mm_nodes,
             p.throughput(),
-            if p.cache_hit { "cache".to_string() } else { format!("{} explored", p.explored) },
+            p.provenance,
+            if p.cache_hit { " (cache)" } else { "" },
         );
     }
+}
 
-    // The same grid again: every point is now a shared-cache hit.
-    let t1 = std::time::Instant::now();
-    let replans = client.sweep(&combos, &batches, true)?;
-    let warm_ms = t1.elapsed().as_secs_f64() * 1e3;
+fn shard_histogram(plans: &[PlanOutcome], hosts: usize) -> Vec<usize> {
+    let mut counts = vec![0usize; hosts];
+    for p in plans {
+        if let Provenance::Federated { shard } = p.provenance {
+            counts[shard] += 1;
+        }
+    }
+    counts
+}
+
+fn main() -> Result<()> {
+    // Servers from the environment, or two self-booted ephemeral ones.
+    let mut daemons = Vec::new();
+    let hosts: Vec<String> = match std::env::var(ENV_ADDR) {
+        Ok(spec) if !spec.is_empty() => parse_host_list(&spec),
+        _ => {
+            let mut hosts = Vec::new();
+            for _ in 0..2 {
+                let server = Server::bind("127.0.0.1:0", 2)?;
+                hosts.push(server.local_addr()?.to_string());
+                daemons.push(std::thread::spawn(move || server.run()));
+            }
+            println!(
+                "(no {ENV_ADDR} set — booted ephemeral daemons on {})\n",
+                hosts.join(" and ")
+            );
+            hosts
+        }
+    };
+
+    let planner = FederatedPlanner::connect(&hosts)?;
+    let combos = ["dqn_cartpole", "a2c_invpend", "ddpg_lunar", "ddpg_mntncar"];
+    let batches = [64usize, 256, 1024];
+    let requests: Vec<PlanRequest> = combos
+        .iter()
+        .flat_map(|name| {
+            batches
+                .iter()
+                .map(move |&bs| PlanRequest::named(name).expect("registry combo").with_batch(bs))
+        })
+        .collect();
+
+    let t0 = std::time::Instant::now();
+    let plans = planner.plan_many(&requests)?;
+    let cold_ms = t0.elapsed().as_secs_f64() * 1e3;
     println!(
-        "\nre-sweep: {:.1} ms ({}/{} cache hits — every client shares the daemon's cache)",
-        warm_ms,
+        "federated sweep of {} points [{}] in {cold_ms:.0} ms:\n",
+        plans.len(),
+        planner.describe()
+    );
+    print_plans(&plans);
+    let counts = shard_histogram(&plans, planner.hosts().len());
+    println!(
+        "\nplan-key sharding: {}",
+        counts
+            .iter()
+            .enumerate()
+            .map(|(i, n)| format!("host {i} served {n}"))
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+
+    // The same grid again: every point is a shared-cache hit on its
+    // shard's daemon (same key → same shard → warm cache).
+    let t1 = std::time::Instant::now();
+    let replans = planner.plan_many(&requests)?;
+    println!(
+        "re-sweep: {:.1} ms ({}/{} daemon-cache hits — sharding is cache-affine)",
+        t1.elapsed().as_secs_f64() * 1e3,
         replans.iter().filter(|p| p.cache_hit).count(),
         replans.len()
     );
 
-    let stats = client.stats()?;
-    let pick = |path: &[&str]| -> f64 {
-        let mut v = Some(&stats);
-        for k in path {
-            v = v.and_then(|j| j.get(k));
+    // Per-daemon telemetry via the stats verb.
+    for (i, host) in planner.hosts().iter().enumerate() {
+        if let Ok(stats) = RemotePlanner::connect(host).and_then(|c| c.stats()) {
+            let served = stats.get("plans_served").and_then(Json::as_f64).unwrap_or(0.0);
+            let hits = stats.get("plans_from_cache").and_then(Json::as_f64).unwrap_or(0.0);
+            println!("host {i} ({host}): {served} plans served, {hits} from cache");
         }
-        v.and_then(Json::as_f64).unwrap_or(0.0)
-    };
-    println!(
-        "daemon stats: {} requests, {} plans served ({} from cache), cache hit rate {:.0}%",
-        pick(&["requests"]),
-        pick(&["plans_served"]),
-        pick(&["plans_from_cache"]),
-        pick(&["cache", "hit_rate"]) * 100.0
-    );
+    }
 
-    if let Some(handle) = local_daemon {
-        client.shutdown()?;
-        handle.join().expect("daemon thread")?;
-        println!("ephemeral daemon stopped.");
+    if daemons.len() == 2 {
+        // Fail-over demo: stop host 0, then sweep again — the shards that
+        // lived there retry on host 1 and the sweep still completes.
+        println!("\nstopping host 0 to exercise fail-over...");
+        RemotePlanner::connect(&planner.hosts()[0])?.shutdown()?;
+        daemons.remove(0).join().expect("daemon thread")?;
+        let t2 = std::time::Instant::now();
+        let failover = planner.plan_many(&requests)?;
+        let survivors = shard_histogram(&failover, planner.hosts().len());
+        println!(
+            "fail-over sweep: {} points in {:.1} ms, all served by host 1 \
+             (shard counts: {survivors:?})",
+            failover.len(),
+            t2.elapsed().as_secs_f64() * 1e3
+        );
+        assert!(
+            failover
+                .iter()
+                .zip(&plans)
+                .all(|(a, b)| a.makespan_us.to_bits() == b.makespan_us.to_bits()),
+            "fail-over plans must be bit-identical to the federated ones"
+        );
+
+        RemotePlanner::connect(&planner.hosts()[1])?.shutdown()?;
+        daemons.remove(0).join().expect("daemon thread")?;
+        println!("ephemeral daemons stopped.");
     }
     Ok(())
 }

@@ -25,9 +25,10 @@ use apdrl::coordinator::baselines::{aie_only_step_time, fixar_step_time};
 #[cfg(feature = "pjrt")]
 use apdrl::coordinator::metrics::reward_error_pct;
 use apdrl::coordinator::report::{ascii_bars, ascii_table, write_tsv};
-use apdrl::coordinator::{combo, plan_sweep, static_phase, PlanRequest};
+use apdrl::coordinator::{combo, LocalPlanner, PlanRequest, Planner};
 #[cfg(feature = "pjrt")]
 use apdrl::coordinator::{train_combo, TrainLimits};
+use apdrl::server::select_planner;
 use apdrl::graph::{build_train_graph, Phase};
 use apdrl::hw::{vek280, Component, Format};
 use apdrl::profile::dse::{explore_aie, explore_pl, partition_factors, unroll_factors};
@@ -38,6 +39,16 @@ use apdrl::runtime::Runtime;
 
 fn reports_dir() -> std::path::PathBuf {
     std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/reports"))
+}
+
+/// The planning backend for every Table III (registry-named) grid in
+/// this binary: in-process by default, or whatever `APDRL_SERVER` names
+/// (one daemon, or a comma-separated federation) — the figures are
+/// identical either way, because remote plans are bit-identical to
+/// local ones.  Table IV's resized nets are not registry combos and
+/// always plan through [`LocalPlanner`].
+fn planner() -> Result<Box<dyn Planner>> {
+    select_planner(None)
 }
 
 #[cfg(feature = "pjrt")]
@@ -365,7 +376,8 @@ fn table4() -> Result<()> {
         ("(4096, 3072)", vec![4, 4096, 3072, 2]),
     ];
     // One batched sweep plans all six (net, precision) points
-    // concurrently through the planning service.
+    // concurrently.  These are *customized* combos (resized nets), not
+    // registry names, so they always go through the in-process backend.
     let requests: Vec<PlanRequest> = sizes
         .iter()
         .flat_map(|(_, sizes_v)| {
@@ -374,7 +386,7 @@ fn table4() -> Result<()> {
             [PlanRequest::new(c.clone(), 64, false), PlanRequest::new(c, 64, true)]
         })
         .collect();
-    let plans = plan_sweep(&requests);
+    let plans = LocalPlanner.plan_many(&requests)?;
     let mut rows = Vec::new();
     for (i, (label, _)) in sizes.iter().enumerate() {
         let (fp32, quant) = (&plans[2 * i], &plans[2 * i + 1]);
@@ -383,14 +395,14 @@ fn table4() -> Result<()> {
             "{label:14} FP32 {:>12.1} µs   quantized {:>12.1} µs   speedup {speedup:.2}x   (sync exposed {:.1} µs)",
             fp32.step_time_us(),
             quant.step_time_us(),
-            quant.schedule.sync_us
+            quant.sync_us
         );
         rows.push(vec![
             label.to_string(),
             format!("{:.2}", fp32.step_time_us()),
             format!("{:.2}", quant.step_time_us()),
             format!("{speedup:.3}"),
-            format!("{:.2}", quant.schedule.sync_us),
+            format!("{:.2}", quant.sync_us),
         ]);
     }
     write_tsv(
@@ -403,9 +415,9 @@ fn table4() -> Result<()> {
 }
 
 /// Fig 12/13 shared sweep: (combo, batch) × {AIE-only, FIXAR, AP-DRL}.
-/// The AP-DRL column runs through the batched planning service (one
-/// concurrent, cache-aware `plan_sweep` over the whole grid).
-fn speedup_matrix() -> Vec<(String, usize, f64, f64, f64)> {
+/// The AP-DRL column runs through the selected planning backend (one
+/// batched, cache-aware `plan_many` over the whole grid).
+fn speedup_matrix() -> Result<Vec<(String, usize, f64, f64, f64)>> {
     let grid: [(&str, [usize; 3]); 6] = [
         ("dqn_cartpole", [64, 128, 256]),
         ("a2c_invpend", [64, 128, 256]),
@@ -421,8 +433,8 @@ fn speedup_matrix() -> Vec<(String, usize, f64, f64, f64)> {
             batches.iter().map(move |&bs| PlanRequest::new(c.clone(), bs, true))
         })
         .collect();
-    let plans = plan_sweep(&requests);
-    requests
+    let plans = planner()?.plan_many(&requests)?;
+    Ok(requests
         .iter()
         .zip(&plans)
         .map(|(req, plan)| {
@@ -433,15 +445,15 @@ fn speedup_matrix() -> Vec<(String, usize, f64, f64, f64)> {
                 req.batch,
                 aie,
                 fixar,
-                plan.schedule.makespan_us,
+                plan.makespan_us,
             )
         })
-        .collect()
+        .collect())
 }
 
 fn fig12_13() -> Result<()> {
     println!("== Fig 12/13: AIE-only vs FIXAR vs AP-DRL (per-step time, normalized) ==");
-    let matrix = speedup_matrix();
+    let matrix = speedup_matrix()?;
     let mut rows12 = Vec::new();
     let mut rows13 = Vec::new();
     for (name, bs, aie, fixar, apdrl) in &matrix {
@@ -485,35 +497,34 @@ fn fig12_13() -> Result<()> {
 /// Fig 14: operation sequence (Gantt) of DDPG-LunarCont @ bs 256.
 fn fig14() -> Result<()> {
     println!("== Fig 14: DDPG-LunarCont operation sequence (batch 256) ==");
-    let c = combo("ddpg_lunar");
-    let plan = static_phase(&c, 256, true);
-    let span = plan.schedule.makespan_us;
+    let req = PlanRequest::named("ddpg_lunar")?.with_batch(256);
+    let plan = planner()?.plan(&req)?;
+    let span = plan.makespan_us;
     let width = 60.0;
     let mut rows = Vec::new();
-    for e in &plan.schedule.entries {
-        let node = &plan.dag.nodes[e.node];
-        let pre = (((e.start_us / span) * width) as usize).min(60);
-        let len = ((((e.finish_us - e.start_us) / span) * width).ceil() as usize)
+    for step in &plan.schedule {
+        let pre = (((step.start_us / span) * width) as usize).min(60);
+        let len = ((((step.finish_us - step.start_us) / span) * width).ceil() as usize)
             .max(1)
             .min(61 - pre);
-        let ch = match e.component {
-            Component::PL => '#',
-            Component::AIE => '%',
-            Component::PS => '.',
+        let ch = match step.component.as_str() {
+            "PL" => '#',
+            "AIE" => '%',
+            _ => '.',
         };
         println!(
             "{:4} {:26} {:3} |{}{}|",
-            e.node,
-            node.name,
-            e.component.name(),
+            step.node,
+            step.name,
+            step.component,
             " ".repeat(pre),
             ch.to_string().repeat(len)
         );
         rows.push(vec![
-            node.name.clone(),
-            e.component.name().to_string(),
-            format!("{:.2}", e.start_us),
-            format!("{:.2}", e.finish_us),
+            step.name.clone(),
+            step.component.clone(),
+            format!("{:.2}", step.start_us),
+            format!("{:.2}", step.finish_us),
         ]);
     }
     println!("makespan {:.1} µs (# PL  % AIE  . PS)", span);
@@ -528,20 +539,27 @@ fn fig15() -> Result<()> {
     let batches = [64usize, 128, 256, 512, 1024];
     let requests: Vec<PlanRequest> =
         batches.iter().map(|&bs| PlanRequest::new(c.clone(), bs, true)).collect();
+    let plans = planner()?.plan_many(&requests)?;
     let mut rows = Vec::new();
-    for (&bs, plan) in batches.iter().zip(plan_sweep(&requests)) {
-        let total_mm = plan.dag.mm_nodes().len();
-        let aie = plan.solution.aie_nodes(&plan.dag);
+    for (&bs, plan) in batches.iter().zip(&plans) {
         let names: Vec<String> = plan
-            .solution
-            .assignment
+            .schedule
             .iter()
-            .enumerate()
-            .filter(|(i, p)| plan.dag.nodes[*i].kind.is_mm() && p.component == Component::AIE)
-            .map(|(i, _)| plan.dag.nodes[i].name.clone())
+            .filter(|step| step.mm && step.component == "AIE")
+            .map(|step| step.name.clone())
             .collect();
-        println!("bs={bs:<6} AIE {aie}/{total_mm} MM nodes: {}", names.join(", "));
-        rows.push(vec![bs.to_string(), aie.to_string(), total_mm.to_string(), names.join(",")]);
+        println!(
+            "bs={bs:<6} AIE {}/{} MM nodes: {}",
+            plan.aie_mm_nodes,
+            plan.mm_nodes,
+            names.join(", ")
+        );
+        rows.push(vec![
+            bs.to_string(),
+            plan.aie_mm_nodes.to_string(),
+            plan.mm_nodes.to_string(),
+            names.join(","),
+        ]);
     }
     write_tsv(
         reports_dir().join("fig15.tsv"),
@@ -555,7 +573,7 @@ fn fig15() -> Result<()> {
 /// Headline speedups (§V-C / abstract): extremes over the Fig 12 matrix.
 fn headline() -> Result<()> {
     println!("== headline speedups ==");
-    let matrix = speedup_matrix();
+    let matrix = speedup_matrix()?;
     let best_vs_fixar = matrix.iter().map(|(_, _, _, f, a)| f / a).fold(0.0f64, f64::max);
     let worst_vs_fixar =
         matrix.iter().map(|(_, _, _, f, a)| f / a).fold(f64::INFINITY, f64::min);

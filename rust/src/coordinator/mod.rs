@@ -1,6 +1,7 @@
 //! The AP-DRL coordinator (L3 proper): experiment configs (Table III),
 //! the static phase (build → profile → partition, paper Fig 7 left) — now
-//! a cached, batched planning service (`static_phase` / `plan_sweep`) —
+//! a cached, batched planning service (`static_phase` / `plan_sweep`)
+//! behind the backend-agnostic [`planner::Planner`] trait —
 //! the dynamic phase (env/train loop over PJRT artifacts with the
 //! quantization FSM, Fig 7 right; `pjrt` feature), baseline timing models
 //! (AIE-only, FIXAR) and report emission.
@@ -9,13 +10,13 @@ pub mod baselines;
 pub mod config;
 pub mod metrics;
 pub mod pipeline;
+pub mod planner;
 pub mod report;
 #[cfg(feature = "pjrt")]
 pub mod trainer;
 
 pub use config::{combo, try_combo, ComboConfig, COMBO_NAMES};
-pub use pipeline::{
-    plan_named_grid, plan_sweep, plan_sweep_grid, static_phase, PlanRequest, StaticPlan,
-};
+pub use pipeline::{plan_sweep, plan_sweep_grid, static_phase, StaticPlan};
+pub use planner::{LocalPlanner, PlanOutcome, PlanRequest, PlanStep, Planner, Provenance};
 #[cfg(feature = "pjrt")]
 pub use trainer::{train_combo, TrainLimits, TrainResult};

@@ -1,0 +1,410 @@
+//! **The one planning API.**  Every way of running the paper's static
+//! phase — in-process, against one `apdrl serve` daemon, or sharded
+//! across a federation of daemons — implements the [`Planner`] trait and
+//! returns the same backend-agnostic [`PlanOutcome`], so consumers (the
+//! CLI, the figure harness, the examples, library users) pick a backend
+//! in exactly one place and never match on backend-specific result
+//! types.
+//!
+//! * [`PlanRequest`] — the builder-style description of one planning
+//!   point (a Table III combo by name or a custom [`ComboConfig`], a
+//!   batch size, a precision mode).  It is shared verbatim by the
+//!   in-process sweep engine (`pipeline::plan_sweep`), the wire protocol
+//!   (`server::protocol`), and the federation layer.
+//! * [`PlanOutcome`] — schedule times, assignment, precision policy per
+//!   node and derived throughput, tagged with [`Provenance`] saying
+//!   which backend produced it (and whether it was a cache hit / which
+//!   federation shard served it).
+//! * [`LocalPlanner`] — the in-process backend: wraps
+//!   [`static_phase`]/[`plan_sweep`], preserving their two-level
+//!   parallelism (concurrent sweep workers, parallel B&B inside a lone
+//!   solve) and plan-cache memoization.
+//!
+//! The remote backends live next to their transport:
+//! `server::client::RemotePlanner` (one daemon) and
+//! `server::federation::FederatedPlanner` (N daemons, sharded by plan
+//! key with fail-over).  `server::federation::select_planner` is the
+//! single backend-choice point used by every CLI entry.
+
+use anyhow::{bail, Result};
+
+use crate::hw::vek280;
+use crate::partition::cache::PlanKey;
+
+use super::config::{try_combo, ComboConfig};
+use super::pipeline::{plan_sweep, static_phase, StaticPlan};
+
+/// Which backend produced a [`PlanOutcome`], and what it knows about how.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Provenance {
+    /// Planned in-process; `cache_hit` mirrors the plan-cache outcome.
+    Local { cache_hit: bool },
+    /// Planned by the daemon at `addr` (whose *own* cache state is in
+    /// [`PlanOutcome::cache_hit`]).
+    Remote { addr: String },
+    /// Planned by federation shard `shard` (index into the host list the
+    /// `FederatedPlanner` was built with, possibly after fail-over).
+    Federated { shard: usize },
+}
+
+impl std::fmt::Display for Provenance {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Provenance::Local { cache_hit: true } => write!(f, "local (plan cache hit)"),
+            Provenance::Local { cache_hit: false } => write!(f, "local"),
+            Provenance::Remote { addr } => write!(f, "remote {addr}"),
+            Provenance::Federated { shard } => write!(f, "federated shard {shard}"),
+        }
+    }
+}
+
+/// One scheduled node of a solved plan: everything the Gantt/figure/CLI
+/// renderers read, with component and precision format by *name* so the
+/// value survives the wire unchanged.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanStep {
+    pub node: usize,
+    pub name: String,
+    /// Component name (`"PS"` / `"PL"` / `"AIE"`).
+    pub component: String,
+    /// Precision format name (`"FP32"` / `"FP16"` / `"BF16"`).
+    pub format: String,
+    /// True for matrix-multiply nodes — the partitionable kind whose
+    /// PL/AIE placement the paper's figures report.
+    pub mm: bool,
+    pub start_us: f64,
+    pub finish_us: f64,
+}
+
+/// The backend-agnostic result of planning one (combo, batch, precision)
+/// point: the summary every consumer reads off a solved static phase,
+/// without the solver internals (DAG, profiles) that stay backend-side.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanOutcome {
+    pub combo: String,
+    pub batch: usize,
+    pub quantized: bool,
+    pub makespan_us: f64,
+    pub comm_us: f64,
+    pub sync_us: f64,
+    /// Per-step PS–PL pipeline time over the TAPCA-selected interface.
+    pub ps_pl_us: f64,
+    /// Name of the selected PS–PL interface.
+    pub interface: String,
+    /// MM nodes placed on the AIE (of `mm_nodes` total).
+    pub aie_mm_nodes: usize,
+    pub mm_nodes: usize,
+    /// B&B nodes explored by the solve (0 for a memoized plan).
+    pub explored: usize,
+    /// True when the serving backend's plan cache supplied the plan.
+    pub cache_hit: bool,
+    /// `(component name, DSE candidate index)` per DAG node.
+    pub assignment: Vec<(String, usize)>,
+    pub schedule: Vec<PlanStep>,
+    pub provenance: Provenance,
+}
+
+impl PlanOutcome {
+    /// Full per-training-step time: partitioned train-stage makespan +
+    /// the PS–PL pipeline (mirrors `StaticPlan::step_time_us`).
+    pub fn step_time_us(&self) -> f64 {
+        self.makespan_us + self.ps_pl_us
+    }
+
+    /// Training throughput (batches/second).
+    pub fn throughput(&self) -> f64 {
+        1e6 / self.step_time_us()
+    }
+
+    /// Fold a locally solved [`StaticPlan`] into the backend-agnostic
+    /// summary, with `Local` provenance.  This is the *only* place a
+    /// `StaticPlan` is read field-by-field outside the coordinator, so
+    /// local and remote consumers cannot drift apart.
+    pub fn from_static(plan: &StaticPlan, req: &PlanRequest) -> PlanOutcome {
+        let schedule = plan
+            .schedule
+            .entries
+            .iter()
+            .map(|e| {
+                let node = &plan.dag.nodes[e.node];
+                PlanStep {
+                    node: e.node,
+                    name: node.name.clone(),
+                    component: e.component.name().to_string(),
+                    format: plan.policy.node_format[e.node].name().to_string(),
+                    mm: node.kind.is_mm(),
+                    start_us: e.start_us,
+                    finish_us: e.finish_us,
+                }
+            })
+            .collect();
+        let assignment = plan
+            .solution
+            .assignment
+            .iter()
+            .map(|p| (p.component.name().to_string(), p.candidate))
+            .collect();
+        PlanOutcome {
+            combo: req.combo.name.to_string(),
+            batch: req.batch,
+            quantized: req.quantized,
+            makespan_us: plan.schedule.makespan_us,
+            comm_us: plan.schedule.comm_us,
+            sync_us: plan.schedule.sync_us,
+            ps_pl_us: plan.ps_pl_us,
+            interface: plan.interface.name().to_string(),
+            aie_mm_nodes: plan.solution.aie_nodes(&plan.dag),
+            mm_nodes: plan.dag.mm_nodes().len(),
+            explored: plan.solution.explored,
+            cache_hit: plan.cache_hit,
+            assignment,
+            schedule,
+            provenance: Provenance::Local { cache_hit: plan.cache_hit },
+        }
+    }
+}
+
+/// One point of a planning sweep — the single request type shared by the
+/// in-process engine, the CLI, the wire protocol and the federation
+/// layer.  Build it from a registry name ([`PlanRequest::named`]) or a
+/// (possibly customized) [`ComboConfig`] ([`PlanRequest::new`]), then
+/// refine with the `with_*` builders.
+#[derive(Clone, Debug)]
+pub struct PlanRequest {
+    pub combo: ComboConfig,
+    pub batch: usize,
+    pub quantized: bool,
+}
+
+impl PlanRequest {
+    /// Request for an explicit combo configuration (which may be a
+    /// customized variant of a registry combo, e.g. Table IV's resized
+    /// nets — those plan locally only; see [`is_registry_exact`]).
+    ///
+    /// [`is_registry_exact`]: PlanRequest::is_registry_exact
+    pub fn new(combo: ComboConfig, batch: usize, quantized: bool) -> PlanRequest {
+        PlanRequest { combo, batch, quantized }
+    }
+
+    /// Request for a Table III combo by registry name, at its default
+    /// batch size, in AP-DRL mixed precision.  Unknown names are a
+    /// reported error (CLI and wire input route through this).
+    pub fn named(name: &str) -> Result<PlanRequest> {
+        let combo = try_combo(name)?;
+        let batch = combo.batch;
+        Ok(PlanRequest { combo, batch, quantized: true })
+    }
+
+    /// Override the batch size.
+    pub fn with_batch(mut self, batch: usize) -> PlanRequest {
+        self.batch = batch;
+        self
+    }
+
+    /// Select AP-DRL mixed precision (`true`) or the FP32 control.
+    pub fn with_quantized(mut self, quantized: bool) -> PlanRequest {
+        self.quantized = quantized;
+        self
+    }
+
+    /// The FP32 control mode (`with_quantized(false)` spelled for CLIs).
+    pub fn fp32(self) -> PlanRequest {
+        self.with_quantized(false)
+    }
+
+    /// The combo's registry name.
+    pub fn name(&self) -> &str {
+        self.combo.name
+    }
+
+    /// The plan-cache key of this request on the modeled platform — also
+    /// the federation shard key, so one point always lands on the same
+    /// daemon (and its warm cache) within a host list.
+    pub fn plan_key(&self) -> PlanKey {
+        PlanKey::new(&self.combo.train_spec(self.batch), self.quantized, &vek280())
+    }
+
+    /// True when this request is exactly the registry combo of its name —
+    /// i.e. expressible over the wire by name alone.  A customized
+    /// `ComboConfig` (changed net shape, dims, algo) keys differently
+    /// and must be planned locally; remote backends reject it instead of
+    /// silently planning the registry variant.
+    pub fn is_registry_exact(&self) -> bool {
+        try_combo(self.combo.name).map_or(false, |registry| {
+            let platform = vek280();
+            PlanKey::new(&registry.train_spec(self.batch), self.quantized, &platform)
+                == PlanKey::new(&self.combo.train_spec(self.batch), self.quantized, &platform)
+        })
+    }
+
+    /// Cross-product grid of named combos at every batch size, combo-major
+    /// (the `apdrl sweep` / daemon `sweep` grid shape).
+    pub fn named_grid(
+        names: &[String],
+        batches: &[usize],
+        quantized: bool,
+    ) -> Result<Vec<PlanRequest>> {
+        let combos: Vec<ComboConfig> =
+            names.iter().map(|n| try_combo(n)).collect::<Result<_>>()?;
+        Ok(combos
+            .iter()
+            .flat_map(|c| {
+                batches
+                    .iter()
+                    .map(move |&bs| PlanRequest::new(c.clone(), bs, quantized))
+            })
+            .collect())
+    }
+}
+
+/// A planning backend.  All three implementations return identical
+/// optimal makespans and assignments for the same request grid (the
+/// plans ride one shared deterministic solver and cache); they differ
+/// only in *where* the solving happens and what [`Provenance`] tags the
+/// results.
+pub trait Planner {
+    /// Human-readable backend tag for tables and logs (`"local"`,
+    /// `"remote 10.0.0.1:7040"`, `"federated over 3 hosts"`).
+    fn describe(&self) -> String;
+
+    /// Plan one point.
+    fn plan(&self, req: &PlanRequest) -> Result<PlanOutcome>;
+
+    /// Plan every request, results in request order.  Backends override
+    /// this to batch (one wire round trip, a concurrent sweep, a sharded
+    /// fan-out); the default just loops.
+    fn plan_many(&self, reqs: &[PlanRequest]) -> Result<Vec<PlanOutcome>> {
+        reqs.iter().map(|r| self.plan(r)).collect()
+    }
+}
+
+/// The in-process backend: `static_phase` for one point, the concurrent
+/// cache-aware `plan_sweep` for many.  A lone solve parallelizes its
+/// branch-and-bound internally; inside a sweep the per-solve pool is not
+/// nested (the sweep workers are the parallelism) — exactly the
+/// semantics library callers had before the trait existed.
+pub struct LocalPlanner;
+
+impl Planner for LocalPlanner {
+    fn describe(&self) -> String {
+        "local".to_string()
+    }
+
+    fn plan(&self, req: &PlanRequest) -> Result<PlanOutcome> {
+        if req.batch == 0 {
+            bail!("plan: batch must be ≥ 1");
+        }
+        let plan = static_phase(&req.combo, req.batch, req.quantized);
+        Ok(PlanOutcome::from_static(&plan, req))
+    }
+
+    fn plan_many(&self, reqs: &[PlanRequest]) -> Result<Vec<PlanOutcome>> {
+        if let Some(bad) = reqs.iter().find(|r| r.batch == 0) {
+            bail!("plan: batch must be ≥ 1 (combo {})", bad.name());
+        }
+        let plans = plan_sweep(reqs);
+        Ok(plans
+            .iter()
+            .zip(reqs)
+            .map(|(plan, req)| PlanOutcome::from_static(plan, req))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::combo;
+
+    #[test]
+    fn request_builder_defaults_and_overrides() {
+        let req = PlanRequest::named("ddpg_lunar").unwrap();
+        assert_eq!(req.name(), "ddpg_lunar");
+        assert_eq!(req.batch, combo("ddpg_lunar").batch);
+        assert!(req.quantized);
+        let req = req.with_batch(512).fp32();
+        assert_eq!(req.batch, 512);
+        assert!(!req.quantized);
+        assert!(PlanRequest::named("dqn_tetris").is_err());
+    }
+
+    #[test]
+    fn registry_exactness_detects_customized_combos() {
+        let named = PlanRequest::named("dqn_cartpole").unwrap();
+        assert!(named.is_registry_exact());
+        assert!(named.clone().with_batch(96).is_registry_exact());
+        let mut custom = combo("dqn_cartpole");
+        custom.net = crate::graph::NetSpec::mlp(&[4, 4096, 3072, 2]);
+        let custom = PlanRequest::new(custom, 64, true);
+        assert!(!custom.is_registry_exact(), "a resized net is not the registry combo");
+    }
+
+    #[test]
+    fn named_grid_is_combo_major_and_rejects_unknowns() {
+        let names = vec!["dqn_cartpole".to_string(), "a2c_invpend".to_string()];
+        let grid = PlanRequest::named_grid(&names, &[32, 64], false).unwrap();
+        assert_eq!(grid.len(), 4);
+        assert_eq!(grid[0].name(), "dqn_cartpole");
+        assert_eq!(grid[1].name(), "dqn_cartpole");
+        assert_eq!((grid[0].batch, grid[1].batch), (32, 64));
+        assert_eq!(grid[3].name(), "a2c_invpend");
+        assert!(grid.iter().all(|r| !r.quantized));
+        assert!(PlanRequest::named_grid(&["nope".to_string()], &[32], true).is_err());
+    }
+
+    #[test]
+    fn local_planner_outcome_mirrors_static_phase() {
+        let req = PlanRequest::named("dqn_cartpole").unwrap().with_batch(56);
+        let outcome = LocalPlanner.plan(&req).unwrap();
+        let plan = static_phase(&req.combo, req.batch, req.quantized);
+        assert_eq!(outcome.combo, "dqn_cartpole");
+        assert_eq!(outcome.batch, 56);
+        assert_eq!(outcome.makespan_us.to_bits(), plan.schedule.makespan_us.to_bits());
+        assert_eq!(outcome.schedule.len(), plan.schedule.entries.len());
+        assert_eq!(outcome.assignment.len(), plan.solution.assignment.len());
+        assert_eq!(outcome.aie_mm_nodes, plan.solution.aie_nodes(&plan.dag));
+        assert_eq!(outcome.mm_nodes, plan.dag.mm_nodes().len());
+        assert_eq!(outcome.step_time_us().to_bits(), plan.step_time_us().to_bits());
+        assert!(matches!(outcome.provenance, Provenance::Local { .. }));
+        // The mm flag marks exactly the dag's MM nodes.
+        let mm_steps = outcome.schedule.iter().filter(|s| s.mm).count();
+        assert_eq!(mm_steps, outcome.mm_nodes);
+    }
+
+    #[test]
+    fn local_plan_many_matches_solo_plans_in_order() {
+        let reqs = vec![
+            PlanRequest::named("dqn_cartpole").unwrap().with_batch(44),
+            PlanRequest::named("a2c_invpend").unwrap().with_batch(44),
+        ];
+        let many = LocalPlanner.plan_many(&reqs).unwrap();
+        assert_eq!(many.len(), 2);
+        for (req, outcome) in reqs.iter().zip(&many) {
+            let solo = LocalPlanner.plan(req).unwrap();
+            assert_eq!(outcome.combo, solo.combo);
+            assert_eq!(outcome.makespan_us.to_bits(), solo.makespan_us.to_bits());
+            assert_eq!(outcome.assignment, solo.assignment);
+        }
+    }
+
+    #[test]
+    fn zero_batch_is_rejected_not_planned() {
+        let req = PlanRequest::named("dqn_cartpole").unwrap().with_batch(0);
+        assert!(LocalPlanner.plan(&req).is_err());
+        assert!(LocalPlanner.plan_many(std::slice::from_ref(&req)).is_err());
+    }
+
+    #[test]
+    fn provenance_labels_read_well() {
+        assert_eq!(Provenance::Local { cache_hit: false }.to_string(), "local");
+        assert_eq!(
+            Provenance::Local { cache_hit: true }.to_string(),
+            "local (plan cache hit)"
+        );
+        assert_eq!(
+            Provenance::Remote { addr: "h:1".into() }.to_string(),
+            "remote h:1"
+        );
+        assert_eq!(Provenance::Federated { shard: 2 }.to_string(), "federated shard 2");
+    }
+}

@@ -31,58 +31,68 @@
 //!   environments and the figure/bench machinery that does not train —
 //!   builds and tests offline with `cargo build && cargo test`.
 //!
-//! ## The static-phase planning service
+//! ## The planning service: one `Planner` API, three backends
 //!
-//! The paper's static phase (DSE profiling → TAPCA → ILP) is served by
-//! [`coordinator::static_phase`] as a memoized, batched planner:
+//! The paper's static phase (DSE profiling → TAPCA → ILP) is served
+//! behind one trait — [`coordinator::planner::Planner`], with
+//! `plan(&PlanRequest)` and `plan_many(&[PlanRequest])` — and one
+//! backend-agnostic result, [`coordinator::planner::PlanOutcome`]
+//! (schedule times, assignment, per-node precision, throughput), tagged
+//! with `Provenance::{Local, Remote, Federated}`.  Consumers pick a
+//! backend in exactly one place (`server::select_planner`, driven by
+//! `--remote` / `APDRL_SERVER`) and never match on backend-specific
+//! types.  All backends return bit-identical plans for the same grid
+//! (asserted in `tests/federation.rs`):
+//!
+//! | backend            | semantics                                                              | env vars |
+//! |--------------------|------------------------------------------------------------------------|----------|
+//! | `LocalPlanner`     | in-process `static_phase`/`plan_sweep`: concurrent cache-aware sweeps, parallel B&B inside a lone solve (never nested), duplicate points deduped by plan key | `APDRL_PLAN_CACHE`, `APDRL_PLAN_CACHE_MAX` |
+//! | `RemotePlanner`    | one `apdrl serve` daemon over JSON-lines TCP; transparent reconnect-and-retry per idempotent call; rides the daemon's process-wide cache | `APDRL_SERVER=host:port` |
+//! | `FederatedPlanner` | N daemons; `plan_many` sharded **by plan key** (cache-affine) on worker threads; failed shards retried on surviving hosts; results merged in request order | `APDRL_SERVER=h1:p,h2:p,…` |
+//!
+//! Underneath, the service keeps its earlier guarantees:
 //!
 //! * **Parallel exact solver** — `partition::ilp` fans the top of the
 //!   branch-and-bound tree out over scoped threads sharing an atomic
 //!   incumbent; `solve_ilp_sequential` is the single-threaded reference
-//!   and both always return the same optimal makespan.
+//!   and both always return the same optimal makespan.  The fan-out is
+//!   auto-tuned from per-solve telemetry ([`server::stats`]) and never
+//!   changes the returned optimum.
 //! * **Plan cache** — `partition::cache` memoizes solved plans keyed on
 //!   `(algo, net shape, batch, obs/act dims, precision, platform
-//!   fingerprint)`.  Repeated `static_phase` calls are O(1): they return
-//!   the identical schedule with `solution.explored == 0` and
-//!   `cache_hit == true`.  Set `APDRL_PLAN_CACHE=<path>` to persist the
-//!   cache as JSON (via `util::json`) across processes; entries are
-//!   re-validated against current profile shapes on every lookup.
-//! * **Batched sweeps** — [`coordinator::plan_sweep`] /
-//!   [`coordinator::plan_sweep_grid`] plan many (combo, batch, precision)
-//!   points concurrently in request order; the `figures` binary, the
-//!   benches and the examples drive their Table III/IV grids through it.
-//! * **Cache bounds** — the persisted cache file is schema-versioned
-//!   (old-format files drop to a cold start) and LRU-capped at
-//!   `APDRL_PLAN_CACHE_MAX` entries (default 4096), so it no longer
-//!   grows monotonically.
-//! * **Adaptive solver fan-out** — the parallel B&B's prefix fan-out is
-//!   tuned from per-solve telemetry ([`server::stats`]): small search
-//!   trees get a shallow task split, big trees a deep one, with the
-//!   fixed constant as the cold-start fallback.  Fan-out never changes
-//!   the returned optimum.
+//!   fingerprint)`; repeated plans are O(1) with `explored == 0` and
+//!   `cache_hit == true`.  The persisted file (`APDRL_PLAN_CACHE`) is
+//!   schema-versioned and LRU-capped at `APDRL_PLAN_CACHE_MAX` entries
+//!   (default 4096), with recency stamps surviving reloads.
 //!
 //! ## The planning server (`apdrl serve`)
 //!
-//! The [`server`] module runs that planning service as a long-lived
-//! daemon so many processes/hosts share one planner and one plan cache.
+//! The [`server`] module runs the local backend as a long-lived daemon
+//! so many processes/hosts share one planner and one plan cache.
 //! `apdrl serve` listens on TCP (default `127.0.0.1:7040`) and speaks a
-//! versioned JSON-lines protocol; `apdrl sweep --remote <addr>` (or the
-//! `APDRL_SERVER` env var) offloads sweep grids to it.  One line per
-//! request, one per response:
+//! versioned JSON-lines protocol; `apdrl plan|sweep --remote <hosts>`
+//! (or `APDRL_SERVER`) offloads planning to it — `<hosts>` is one
+//! `host:port` or a comma-separated list, which federates.  One line
+//! per request, one per response:
 //!
 //! ```text
-//! → {"v":1,"verb":"plan","combo":"ddpg_lunar","batch":256,"quantized":true}
-//! ← {"v":1,"ok":true,"plan":{"makespan_us":…,"schedule":[…],"cache_hit":false,…}}
-//! → {"v":1,"verb":"sweep","combos":["dqn_cartpole","ddpg_lunar"],"batches":[64,256],"quantized":true}
-//! ← {"v":1,"ok":true,"plans":[…]}
-//! → {"v":1,"verb":"stats"}
-//! ← {"v":1,"ok":true,"stats":{"requests":…,"cache":{"hits":…,"hit_rate":…},…}}
-//! → {"v":1,"verb":"cache_flush"}
-//! ← {"v":1,"ok":true,"flushed":12}
-//! → {"v":1,"verb":"shutdown"}
-//! ← {"v":1,"ok":true,"stopping":true}
+//! → {"v":2,"verb":"plan","combo":"ddpg_lunar","batch":256,"quantized":true}
+//! ← {"v":2,"ok":true,"plan":{"makespan_us":…,"schedule":[…],"cache_hit":false,…}}
+//! → {"v":2,"verb":"sweep","combos":["dqn_cartpole","ddpg_lunar"],"batches":[64,256],"quantized":true}
+//! ← {"v":2,"ok":true,"plans":[…]}
+//! → {"v":2,"verb":"plan_many","points":[{"combo":"dqn_cartpole","batch":48,"quantized":true},…]}
+//! ← {"v":2,"ok":true,"plans":[…]}
+//! → {"v":2,"verb":"stats"}
+//! ← {"v":2,"ok":true,"stats":{"requests":…,"cache":{"hits":…,"hit_rate":…},…}}
+//! → {"v":2,"verb":"cache_flush"}
+//! ← {"v":2,"ok":true,"flushed":12}
+//! → {"v":2,"verb":"shutdown"}
+//! ← {"v":2,"ok":true,"stopping":true}
 //! ```
 //!
+//! Duplicate (combo, batch) pairs within one `sweep`/`plan_many`
+//! request are deduped against the plan key server-side: repeats come
+//! back as memoized copies (`explored == 0`) without re-profiling.
 //! Schedule times survive the wire bit-for-bit (the JSON number writer
 //! is shortest-round-trip), so any plan served from the shared cache is
 //! *bit-identical* between remote and local callers — asserted in
@@ -94,7 +104,7 @@
 //!
 //! | variable              | consumer          | meaning                              |
 //! |-----------------------|-------------------|--------------------------------------|
-//! | `APDRL_SERVER`        | clients           | default `host:port` of the daemon    |
+//! | `APDRL_SERVER`        | clients           | daemon `host:port`, or a comma list (federation) |
 //! | `APDRL_PLAN_CACHE`    | planner (both)    | JSON persistence path of the cache   |
 //! | `APDRL_PLAN_CACHE_MAX`| planner (both)    | LRU entry cap of the cache (def 4096)|
 

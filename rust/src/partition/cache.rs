@@ -223,8 +223,19 @@ impl PlanCache {
     /// cache, never an error, and a file written by an older schema
     /// version is dropped wholesale (cold start, never a misparse).
     pub fn with_persistence(path: impl AsRef<Path>) -> PlanCache {
+        PlanCache::with_persistence_limited(path, env_limit())
+    }
+
+    /// [`with_persistence`](PlanCache::with_persistence) with an explicit
+    /// entry cap instead of `APDRL_PLAN_CACHE_MAX` (tests, embedders —
+    /// env vars are process-global and test runs are concurrent).
+    pub fn with_persistence_limited(path: impl AsRef<Path>, limit: usize) -> PlanCache {
         let path = path.as_ref().to_path_buf();
-        let mut cache = PlanCache { path: Some(path.clone()), ..PlanCache::default() };
+        let mut cache = PlanCache {
+            path: Some(path.clone()),
+            limit: limit.max(1),
+            ..PlanCache::default()
+        };
         if let Ok(text) = std::fs::read_to_string(&path) {
             if let Ok(root) = Json::parse(&text) {
                 cache.absorb(&root);
@@ -607,6 +618,50 @@ mod tests {
         assert!(cache.lookup(&key_c, &profiles_c).is_some(), "new entry survives");
         let (_, _, profiles_b) = solved(48);
         assert!(cache.lookup(&key_b, &profiles_b).is_none(), "LRU entry evicted");
+    }
+
+    #[test]
+    fn lru_eviction_survives_persist_and_reload() {
+        // Fill past the cap with a recency pattern, persist, reload: the
+        // entries missing from the reloaded cache must be exactly the
+        // least-recently-used ones, and the persisted recency stamps
+        // must keep ordering future evictions after the reload.
+        let (key_a, sol_a, prof_a) = solved(8);
+        let (key_b, sol_b, prof_b) = solved(16);
+        let (key_c, sol_c, prof_c) = solved(24);
+        let (key_d, sol_d, prof_d) = solved(32);
+        let (key_e, sol_e, prof_e) = solved(40);
+        let dir = std::env::temp_dir().join("apdrl_plan_cache_test");
+        let path = dir.join("lru_reload.json");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut cache = PlanCache::with_persistence_limited(&path, 3);
+            cache.insert(&key_a, &sol_a);
+            cache.insert(&key_b, &sol_b);
+            cache.insert(&key_c, &sol_c);
+            // Touch A: recency is now B < C < A.
+            assert!(cache.lookup(&key_a, &prof_a).is_some());
+            // Overflow twice: B then C are the LRU victims.
+            cache.insert(&key_d, &sol_d);
+            cache.insert(&key_e, &sol_e);
+            assert_eq!(cache.len(), 3);
+            cache.save();
+        }
+        let mut reloaded = PlanCache::with_persistence_limited(&path, 3);
+        assert_eq!(reloaded.len(), 3, "reload must carry exactly the capped set");
+        assert!(reloaded.lookup(&key_a, &prof_a).is_some(), "touched entry survives");
+        assert!(reloaded.lookup(&key_d, &prof_d).is_some());
+        assert!(reloaded.lookup(&key_e, &prof_e).is_some());
+        assert!(reloaded.lookup(&key_b, &prof_b).is_none(), "LRU entry B evicted");
+        assert!(reloaded.lookup(&key_c, &prof_c).is_none(), "LRU entry C evicted");
+        // Recency stamps persisted with the file: a *tighter* reload cap
+        // evicts the on-disk LRU (A, untouched since before D and E).
+        let mut tighter = PlanCache::with_persistence_limited(&path, 2);
+        assert_eq!(tighter.len(), 2);
+        assert!(tighter.lookup(&key_a, &prof_a).is_none(), "on-disk LRU evicted on load");
+        assert!(tighter.lookup(&key_d, &prof_d).is_some());
+        assert!(tighter.lookup(&key_e, &prof_e).is_some());
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -1,31 +1,38 @@
-//! Blocking client for the planning daemon: [`RemotePlanner`] mirrors
-//! the local planning entry points (`static_phase` → [`plan`],
-//! `plan_sweep_grid` → [`sweep`]) over one persistent connection, so
-//! benches, examples and the `apdrl sweep --remote` path can offload
-//! whole grids to a shared daemon and ride its process-wide plan cache.
+//! Blocking client for the planning daemon: [`RemotePlanner`] is the
+//! remote backend of the [`Planner`] trait — one persistent connection
+//! to one `apdrl serve` daemon, riding its process-wide plan cache.
+//! Benches, examples and `apdrl plan|sweep --remote <addr>` drive whole
+//! grids through it; `FederatedPlanner` composes several of these.
 //!
 //! Addressing: pass an explicit `host:port`, or set the `APDRL_SERVER`
 //! environment variable and use [`RemotePlanner::from_env`] /
 //! [`server_addr`].
 //!
-//! [`plan`]: RemotePlanner::plan
-//! [`sweep`]: RemotePlanner::sweep
+//! The connection lives behind a `Mutex<Option<_>>`: verbs take `&self`
+//! (the trait's contract), a dead socket is reconnected and retried once
+//! per call (every verb is idempotent), and a planner whose last call
+//! failed re-establishes the connection lazily on the next call instead
+//! of staying dead — the client-side half of fail-over.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::sync::Mutex;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
+use crate::coordinator::planner::{PlanOutcome, PlanRequest, Planner, Provenance};
 use crate::util::json::Json;
 
-use super::protocol::{parse_response, RemotePlan, Request};
+use super::protocol::{parse_response, plan_from_json, Request, WirePoint};
 
-/// Environment variable naming the planning server (`host:port`).
+/// Environment variable naming the planning server — one `host:port`, or
+/// a comma-separated list of them for a federated sweep.
 pub const ENV_ADDR: &str = "APDRL_SERVER";
 
-/// Resolve the server address: an explicit value wins (a bare `--remote`
-/// flag arrives as the literal `"true"` and falls through), then
-/// `APDRL_SERVER`, then a guiding error.
+/// Resolve the server address spec: an explicit value wins (a bare
+/// `--remote` flag arrives as the literal `"true"` and falls through),
+/// then `APDRL_SERVER`, then a guiding error.  The result may be a
+/// comma-separated host list; see `federation::parse_host_list`.
 pub fn server_addr(explicit: Option<&str>) -> Result<String> {
     match explicit {
         Some(v) if !v.is_empty() && v != "true" => Ok(v.to_string()),
@@ -38,55 +45,23 @@ pub fn server_addr(explicit: Option<&str>) -> Result<String> {
     }
 }
 
-/// A blocking connection to one planning daemon.
-pub struct RemotePlanner {
+/// One live socket to the daemon (reader and writer halves).
+struct Conn {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
-    addr: String,
 }
 
-impl RemotePlanner {
-    /// Connect to `addr` (`host:port`).
-    pub fn connect(addr: &str) -> Result<RemotePlanner> {
+impl Conn {
+    fn open(addr: &str) -> Result<Conn> {
         let stream = TcpStream::connect(addr)
             .with_context(|| format!("connecting to planning server at {addr}"))?;
         let _ = stream.set_nodelay(true);
         let reader = BufReader::new(stream.try_clone()?);
-        Ok(RemotePlanner { reader, writer: stream, addr: addr.to_string() })
+        Ok(Conn { reader, writer: stream })
     }
 
-    /// Connect to the server named by `APDRL_SERVER`.
-    pub fn from_env() -> Result<RemotePlanner> {
-        RemotePlanner::connect(&server_addr(None)?)
-    }
-
-    pub fn addr(&self) -> &str {
-        &self.addr
-    }
-
-    /// One request/response round trip.  Transport failures (the daemon
-    /// drops connections idle past its timeout) get one transparent
-    /// reconnect-and-retry — every verb is idempotent — while protocol
-    /// errors (`ok:false`) surface immediately without a retry.
-    fn call(&mut self, req: &Request) -> Result<Json> {
-        let line = req.to_line()?;
-        let buf = match self.transport(&line) {
-            Ok(buf) => buf,
-            Err(_) => {
-                let addr = self.addr.clone();
-                *self = RemotePlanner::connect(&addr)?;
-                self.transport(&line).with_context(|| {
-                    format!("planning server at {addr} dropped the connection twice")
-                })?
-            }
-        };
-        parse_response(&buf)
-    }
-
-    /// Write one line, read one line.  `io::Result` so [`call`] can tell
-    /// a dead socket from a server-side error response.
-    ///
-    /// [`call`]: RemotePlanner::call
+    /// Write one line, read one line.  `io::Result` so the caller can
+    /// tell a dead socket from a server-side error response.
     fn transport(&mut self, line: &str) -> std::io::Result<String> {
         self.writer.write_all(line.as_bytes())?;
         self.writer.write_all(b"\n")?;
@@ -101,49 +76,130 @@ impl RemotePlanner {
         }
         Ok(buf)
     }
+}
 
-    /// Remote `static_phase`: plan one (combo, batch, precision) point.
-    pub fn plan(&mut self, combo: &str, batch: usize, quantized: bool) -> Result<RemotePlan> {
+/// A blocking connection to one planning daemon.
+pub struct RemotePlanner {
+    addr: String,
+    conn: Mutex<Option<Conn>>,
+}
+
+impl RemotePlanner {
+    /// Connect to `addr` (`host:port`).  The connection is established
+    /// eagerly so an unreachable daemon is reported here, not on the
+    /// first plan.
+    pub fn connect(addr: &str) -> Result<RemotePlanner> {
+        let conn = Conn::open(addr)?;
+        Ok(RemotePlanner { addr: addr.to_string(), conn: Mutex::new(Some(conn)) })
+    }
+
+    /// Connect to the server named by `APDRL_SERVER`.
+    pub fn from_env() -> Result<RemotePlanner> {
+        RemotePlanner::connect(&server_addr(None)?)
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// One request/response round trip.  Transport failures (the daemon
+    /// drops connections idle past its timeout, or died and came back)
+    /// get one transparent reconnect-and-retry — every verb is
+    /// idempotent — while protocol errors (`ok:false`) surface
+    /// immediately without a retry.
+    fn call(&self, req: &Request) -> Result<Json> {
+        let line = req.to_line()?;
+        let mut guard = self.conn.lock().unwrap();
+        if guard.is_none() {
+            // A previous call failed and dropped the connection; this
+            // call starts by re-establishing it.
+            *guard = Some(Conn::open(&self.addr)?);
+        }
+        let first = guard.as_mut().expect("connection just ensured").transport(&line);
+        let buf = match first {
+            Ok(buf) => buf,
+            Err(_) => {
+                // Dead socket: drop it, reconnect once, retry the line.
+                *guard = None;
+                let mut conn = Conn::open(&self.addr).with_context(|| {
+                    format!("reconnecting to planning server at {}", self.addr)
+                })?;
+                match conn.transport(&line) {
+                    Ok(buf) => {
+                        *guard = Some(conn);
+                        buf
+                    }
+                    Err(e) => {
+                        return Err(anyhow::Error::from(e).context(format!(
+                            "planning server at {} dropped the connection twice",
+                            self.addr
+                        )));
+                    }
+                }
+            }
+        };
+        parse_response(&buf)
+    }
+
+    /// Parse a `plans` array payload into outcomes tagged `Remote`.
+    fn parse_plans(&self, resp: &Json, expect: usize) -> Result<Vec<PlanOutcome>> {
+        let plans = resp
+            .get("plans")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("sweep response missing `plans`"))?
+            .iter()
+            .map(|p| plan_from_json(p, Provenance::Remote { addr: self.addr.clone() }))
+            .collect::<Result<Vec<_>>>()?;
+        if plans.len() != expect {
+            bail!(
+                "planning server at {} returned {} plans for {} requests",
+                self.addr,
+                plans.len(),
+                expect
+            );
+        }
+        Ok(plans)
+    }
+
+    /// Remote single-point plan by registry name (the wire `plan` verb).
+    pub fn plan_named(&self, combo: &str, batch: usize, quantized: bool) -> Result<PlanOutcome> {
         let resp = self.call(&Request::Plan {
             combo: combo.to_string(),
             batch,
             quantized,
         })?;
-        RemotePlan::from_json(
+        plan_from_json(
             resp.get("plan").ok_or_else(|| anyhow!("plan response missing `plan`"))?,
+            Provenance::Remote { addr: self.addr.clone() },
         )
     }
 
-    /// Remote `plan_sweep_grid`: plan `combos × batches`, returned in
-    /// combo-major request order like the local grid sweep.
+    /// Remote grid sweep (the wire `sweep` verb): plan `combos ×
+    /// batches`, returned in combo-major request order like the local
+    /// grid sweep.
     pub fn sweep(
-        &mut self,
+        &self,
         combos: &[String],
         batches: &[usize],
         quantized: bool,
-    ) -> Result<Vec<RemotePlan>> {
+    ) -> Result<Vec<PlanOutcome>> {
         let resp = self.call(&Request::Sweep {
             combos: combos.to_vec(),
             batches: batches.to_vec(),
             quantized,
         })?;
-        resp.get("plans")
-            .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("sweep response missing `plans`"))?
-            .iter()
-            .map(RemotePlan::from_json)
-            .collect()
+        self.parse_plans(&resp, combos.len() * batches.len())
     }
 
     /// Fetch the daemon's telemetry object (the `stats` verb).
-    pub fn stats(&mut self) -> Result<Json> {
+    pub fn stats(&self) -> Result<Json> {
         let resp = self.call(&Request::Stats)?;
         resp.get("stats").cloned().ok_or_else(|| anyhow!("stats response missing `stats`"))
     }
 
     /// Drop every entry of the server's in-memory plan cache; returns
     /// how many were flushed.
-    pub fn cache_flush(&mut self) -> Result<usize> {
+    pub fn cache_flush(&self) -> Result<usize> {
         let resp = self.call(&Request::CacheFlush)?;
         resp.get("flushed")
             .and_then(Json::as_usize)
@@ -152,8 +208,46 @@ impl RemotePlanner {
 
     /// Ask the daemon to stop (acknowledged before it exits).  Consumes
     /// the client: the connection is closed server-side afterwards.
-    pub fn shutdown(mut self) -> Result<()> {
+    pub fn shutdown(self) -> Result<()> {
         self.call(&Request::Shutdown).map(|_| ())
+    }
+}
+
+/// Lower a [`PlanRequest`] onto the wire.  Combos travel by registry
+/// name, so a customized `ComboConfig` is rejected here instead of
+/// silently planning the registry variant daemon-side.
+pub(super) fn wire_point(req: &PlanRequest) -> Result<WirePoint> {
+    if !req.is_registry_exact() {
+        bail!(
+            "remote planning sends combos by name, and this request customizes \
+             the {:?} config (changed net/dims); plan it with LocalPlanner",
+            req.name()
+        );
+    }
+    Ok(WirePoint {
+        combo: req.name().to_string(),
+        batch: req.batch,
+        quantized: req.quantized,
+    })
+}
+
+impl Planner for RemotePlanner {
+    fn describe(&self) -> String {
+        format!("remote {}", self.addr)
+    }
+
+    fn plan(&self, req: &PlanRequest) -> Result<PlanOutcome> {
+        let point = wire_point(req)?;
+        self.plan_named(&point.combo, point.batch, point.quantized)
+    }
+
+    fn plan_many(&self, reqs: &[PlanRequest]) -> Result<Vec<PlanOutcome>> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let points = reqs.iter().map(wire_point).collect::<Result<Vec<_>>>()?;
+        let resp = self.call(&Request::PlanMany { points })?;
+        self.parse_plans(&resp, reqs.len())
     }
 }
 
@@ -182,5 +276,15 @@ mod tests {
             Ok(_) => return, // something *is* listening; nothing to assert
         };
         assert!(format!("{e:#}").contains("127.0.0.1:1"), "{e:#}");
+    }
+
+    #[test]
+    fn customized_combos_cannot_be_lowered_onto_the_wire() {
+        let named = PlanRequest::named("dqn_cartpole").unwrap();
+        assert!(wire_point(&named).is_ok());
+        let mut custom = crate::coordinator::combo("dqn_cartpole");
+        custom.net = crate::graph::NetSpec::mlp(&[4, 512, 512, 2]);
+        let e = wire_point(&PlanRequest::new(custom, 64, true)).unwrap_err();
+        assert!(format!("{e}").contains("LocalPlanner"), "{e}");
     }
 }

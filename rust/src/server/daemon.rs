@@ -9,11 +9,12 @@
 //! quiet connection never pins the worker), and re-enqueues it.  Open
 //! connections round-robin through the pool, so a handful of persistent
 //! sweep clients can never starve the control verbs (`stats`,
-//! `shutdown`) out of the pool.  All planning goes through
-//! `coordinator::static_phase` / `plan_named_grid`, so every connection
-//! shares the one process-wide [`crate::partition::cache`] — a plan
-//! solved for any client is a cache hit for every later client, which
-//! is the point of running the planner as a daemon instead of a
+//! `shutdown`) out of the pool.  All planning goes through the
+//! in-process [`Planner`] backend (`coordinator::planner::LocalPlanner`)
+//! — the daemon *is* the local backend behind a socket — so every
+//! connection shares the one process-wide [`crate::partition::cache`]:
+//! a plan solved for any client is a cache hit for every later client,
+//! which is the point of running the planner as a daemon instead of a
 //! library.
 //!
 //! Shutdown is cooperative: the `shutdown` verb is acknowledged on its
@@ -30,10 +31,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::{plan_named_grid, static_phase, try_combo};
+use crate::coordinator::planner::{LocalPlanner, PlanRequest, Planner};
 use crate::util::json::Json;
 
-use super::protocol::{error_response, ok_response, plan_to_json, Request};
+use super::protocol::{error_response, ok_response, plan_to_json, Request, WirePoint};
 use super::stats::ServerStats;
 
 /// Default listen address of `apdrl serve` (loopback: the daemon trusts
@@ -266,6 +267,11 @@ fn respond(line: &str, stats: &ServerStats) -> (Json, bool) {
             stats.sweep_requests.fetch_add(1, Ordering::Relaxed);
             handle_sweep(&combos, &batches, quantized, stats)
         }
+        Request::PlanMany { points } => {
+            // Batched like a sweep for the telemetry (it is one).
+            stats.sweep_requests.fetch_add(1, Ordering::Relaxed);
+            handle_plan_many(&points, stats)
+        }
         Request::Stats => {
             stats.stats_requests.fetch_add(1, Ordering::Relaxed);
             let mut body = BTreeMap::new();
@@ -300,20 +306,39 @@ fn respond(line: &str, stats: &ServerStats) -> (Json, bool) {
 }
 
 fn handle_plan(combo: &str, batch: usize, quantized: bool, stats: &ServerStats) -> Result<Json> {
-    let c = try_combo(combo)?;
     if batch == 0 {
         bail!("plan: batch must be ≥ 1");
     }
+    let req = PlanRequest::named(combo)?.with_batch(batch).with_quantized(quantized);
     let t0 = Instant::now();
-    let plan = static_phase(&c, batch, quantized);
+    let outcome = LocalPlanner.plan(&req)?;
     stats.record_request(
         1,
-        plan.cache_hit as u64,
-        plan.solution.explored as u64,
+        outcome.cache_hit as u64,
+        outcome.explored as u64,
         t0.elapsed().as_micros() as u64,
     );
     let mut body = BTreeMap::new();
-    body.insert("plan".to_string(), plan_to_json(&plan, c.name, batch, quantized));
+    body.insert("plan".to_string(), plan_to_json(&outcome));
+    Ok(ok_response(body))
+}
+
+/// Serve a batch of requests through the in-process backend and wrap the
+/// outcomes as a `plans[]` response.  Shared by the `sweep` (grid) and
+/// `plan_many` (point-list) verbs; `plan_sweep` underneath dedupes
+/// repeated plan keys within the batch, so duplicate (combo, batch)
+/// pairs in one request cost one profile+solve and come back as
+/// memoized copies (`explored == 0`).
+fn serve_batch(reqs: &[PlanRequest], stats: &ServerStats) -> Result<Json> {
+    let t0 = Instant::now();
+    let outcomes = LocalPlanner.plan_many(reqs)?;
+    let wall = t0.elapsed().as_micros() as u64;
+    let hits = outcomes.iter().filter(|o| o.cache_hit).count() as u64;
+    let explored: u64 = outcomes.iter().map(|o| o.explored as u64).sum();
+    stats.record_request(outcomes.len() as u64, hits, explored, wall);
+    let plans: Vec<Json> = outcomes.iter().map(plan_to_json).collect();
+    let mut body = BTreeMap::new();
+    body.insert("plans".to_string(), Json::Arr(plans));
     Ok(ok_response(body))
 }
 
@@ -323,17 +348,18 @@ fn handle_sweep(
     quantized: bool,
     stats: &ServerStats,
 ) -> Result<Json> {
-    let t0 = Instant::now();
-    let grid = plan_named_grid(combos, batches, quantized)?;
-    let wall = t0.elapsed().as_micros() as u64;
-    let hits = grid.iter().filter(|(_, _, p)| p.cache_hit).count() as u64;
-    let explored: u64 = grid.iter().map(|(_, _, p)| p.solution.explored as u64).sum();
-    stats.record_request(grid.len() as u64, hits, explored, wall);
-    let plans: Vec<Json> = grid
+    let reqs = PlanRequest::named_grid(combos, batches, quantized)?;
+    serve_batch(&reqs, stats)
+}
+
+fn handle_plan_many(points: &[WirePoint], stats: &ServerStats) -> Result<Json> {
+    let reqs: Vec<PlanRequest> = points
         .iter()
-        .map(|(c, bs, plan)| plan_to_json(plan, c.name, *bs, quantized))
-        .collect();
-    let mut body = BTreeMap::new();
-    body.insert("plans".to_string(), Json::Arr(plans));
-    Ok(ok_response(body))
+        .map(|p| {
+            Ok(PlanRequest::named(&p.combo)?
+                .with_batch(p.batch)
+                .with_quantized(p.quantized))
+        })
+        .collect::<Result<_>>()?;
+    serve_batch(&reqs, stats)
 }

@@ -1,0 +1,324 @@
+//! Federated planning: one [`Planner`] over *several* `apdrl serve`
+//! daemons (the ROADMAP's multi-daemon federation item).
+//!
+//! [`FederatedPlanner`] takes N daemon addresses.  `plan_many` shards
+//! the request list **by plan key** across the hosts — the same point
+//! always lands on the same daemon within a host list, so every shard
+//! rides its daemon's warm plan cache — and runs one worker thread per
+//! shard.  A shard whose daemon fails (connection refused, died
+//! mid-sweep, protocol error) marks its host dead and hands its
+//! unfinished requests to the surviving hosts; only when *every* host
+//! has failed does the sweep error.  Results merge back into request
+//! order, tagged `Provenance::Federated { shard }` with the host index
+//! that actually served them.
+//!
+//! Because all daemons run the same deterministic solver (and the plans
+//! of one grid point never depend on another's), a federated sweep is
+//! bit-identical to a local or single-remote one — asserted in
+//! `tests/federation.rs`, including with one host down.
+//!
+//! [`select_planner`] is the one place the whole CLI picks a backend:
+//! local by default, [`RemotePlanner`] for a single `--remote` host,
+//! [`FederatedPlanner`] for a comma-separated host list.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::planner::{
+    LocalPlanner, PlanOutcome, PlanRequest, Planner, Provenance,
+};
+use crate::partition::cache::PlanKey;
+
+use super::client::{server_addr, wire_point, RemotePlanner, ENV_ADDR};
+
+/// Split a `--remote` / `APDRL_SERVER` spec into its host list
+/// (comma-separated, blanks ignored, order-preserving dedupe — the same
+/// daemon listed twice must not be sharded twice).
+pub fn parse_host_list(spec: &str) -> Vec<String> {
+    let mut hosts: Vec<String> = Vec::new();
+    for host in spec.split(',').map(str::trim).filter(|h| !h.is_empty()) {
+        if !hosts.iter().any(|h| h == host) {
+            hosts.push(host.to_string());
+        }
+    }
+    hosts
+}
+
+/// The one backend-choice point: resolve the `--remote` flag (explicit
+/// value, bare flag, or absent) against `APDRL_SERVER` and hand back the
+/// matching [`Planner`].
+///
+/// * no flag, no env → [`LocalPlanner`];
+/// * one `host:port` → [`RemotePlanner`] (connected eagerly);
+/// * `host1:p,host2:p,...` → [`FederatedPlanner`] over the list.
+pub fn select_planner(remote_flag: Option<&str>) -> Result<Box<dyn Planner>> {
+    let spec = match remote_flag {
+        // An explicit --remote value (a bare flag arrives as "true" and
+        // defers to the environment, erroring helpfully if unset).
+        Some(_) => Some(server_addr(remote_flag)?),
+        // No flag: the env var alone also opts into remote planning —
+        // the documented one-env-var workflow.
+        None => std::env::var(ENV_ADDR).ok().filter(|v| !v.is_empty()),
+    };
+    match spec {
+        None => Ok(Box::new(LocalPlanner)),
+        Some(spec) => {
+            let hosts = parse_host_list(&spec);
+            match hosts.len() {
+                0 => bail!("no usable host in planning server spec {spec:?}"),
+                1 => Ok(Box::new(RemotePlanner::connect(&hosts[0])?)),
+                _ => Ok(Box::new(FederatedPlanner::connect(&hosts)?)),
+            }
+        }
+    }
+}
+
+/// FNV-1a over the plan-key string: a stable, dependency-free shard
+/// hash (std's `DefaultHasher` would work today but documents no
+/// stability guarantee).
+fn shard_of(key: &PlanKey, hosts: usize) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in key.as_str().bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h % hosts as u64) as usize
+}
+
+/// A sharded, fail-over planning backend over N daemon addresses.
+pub struct FederatedPlanner {
+    hosts: Vec<String>,
+}
+
+impl FederatedPlanner {
+    /// Build over `hosts` (deduped, order preserved).  Hosts are probed
+    /// eagerly: a fully unreachable federation is reported here, while a
+    /// *partially* reachable one is fine — fail-over covers the rest.
+    pub fn connect(hosts: &[String]) -> Result<FederatedPlanner> {
+        let mut deduped: Vec<String> = Vec::new();
+        for host in hosts.iter().flat_map(|spec| parse_host_list(spec)) {
+            if !deduped.iter().any(|h| *h == host) {
+                deduped.push(host);
+            }
+        }
+        if deduped.is_empty() {
+            bail!("federated planner needs at least one daemon address");
+        }
+        if !deduped.iter().any(|h| RemotePlanner::connect(h).is_ok()) {
+            bail!(
+                "none of the {} federated planning hosts are reachable ({})",
+                deduped.len(),
+                deduped.join(", ")
+            );
+        }
+        Ok(FederatedPlanner { hosts: deduped })
+    }
+
+    /// The (deduped) host list, in shard-index order.
+    pub fn hosts(&self) -> &[String] {
+        &self.hosts
+    }
+
+    /// Which shard (host index) `req` homes on — observability for
+    /// operators and tests (fail-over may serve it elsewhere).
+    pub fn shard_for(&self, req: &PlanRequest) -> usize {
+        shard_of(&req.plan_key(), self.hosts.len())
+    }
+}
+
+/// Reject requests no host could ever serve (zero batch, customized
+/// non-registry combos) *before* dispatch, so a client-side validation
+/// error surfaces directly instead of marking healthy daemons dead and
+/// replaying a doomed batch against every host.
+fn validate_for_wire(reqs: &[PlanRequest]) -> Result<()> {
+    for req in reqs {
+        if req.batch == 0 {
+            bail!("plan: batch must be ≥ 1 (combo {})", req.name());
+        }
+        wire_point(req)?;
+    }
+    Ok(())
+}
+
+/// Plan `idxs` (indices into `reqs`) on `host`, writing outcomes tagged
+/// with `shard` into `slots`.  All-or-nothing per call: on error the
+/// caller re-dispatches whatever is still unfilled.
+fn serve_shard(
+    host: &str,
+    shard: usize,
+    idxs: &[usize],
+    reqs: &[PlanRequest],
+    slots: &[Mutex<Option<PlanOutcome>>],
+) -> Result<()> {
+    let client = RemotePlanner::connect(host)?;
+    let subset: Vec<PlanRequest> = idxs.iter().map(|&i| reqs[i].clone()).collect();
+    let outcomes = client.plan_many(&subset)?;
+    for (&i, mut outcome) in idxs.iter().zip(outcomes) {
+        outcome.provenance = Provenance::Federated { shard };
+        *slots[i].lock().unwrap() = Some(outcome);
+    }
+    Ok(())
+}
+
+impl Planner for FederatedPlanner {
+    fn describe(&self) -> String {
+        format!(
+            "federated over {} hosts ({})",
+            self.hosts.len(),
+            self.hosts.join(", ")
+        )
+    }
+
+    /// One point: its shard host first, then the others in order — the
+    /// single-plan shape of the same fail-over the sweep path has.
+    fn plan(&self, req: &PlanRequest) -> Result<PlanOutcome> {
+        validate_for_wire(std::slice::from_ref(req))?;
+        let n = self.hosts.len();
+        let home = shard_of(&req.plan_key(), n);
+        let mut last_err = None;
+        for k in 0..n {
+            let shard = (home + k) % n;
+            match RemotePlanner::connect(&self.hosts[shard])
+                .and_then(|client| client.plan(req))
+            {
+                Ok(mut outcome) => {
+                    outcome.provenance = Provenance::Federated { shard };
+                    return Ok(outcome);
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err
+            .unwrap_or_else(|| anyhow!("federated planner has no hosts"))
+            .context(format!("all {n} federated planning hosts failed")))
+    }
+
+    /// Shard by plan key, one worker thread per shard, merge in request
+    /// order; failed shards retry on the surviving hosts.
+    fn plan_many(&self, reqs: &[PlanRequest]) -> Result<Vec<PlanOutcome>> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        validate_for_wire(reqs)?;
+        let n = self.hosts.len();
+        let mut shards: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, req) in reqs.iter().enumerate() {
+            shards[shard_of(&req.plan_key(), n)].push(i);
+        }
+        let slots: Vec<Mutex<Option<PlanOutcome>>> =
+            (0..reqs.len()).map(|_| Mutex::new(None)).collect();
+        let alive: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(true)).collect();
+        let first_error: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        std::thread::scope(|s| {
+            for (shard, idxs) in shards.iter().enumerate() {
+                if idxs.is_empty() {
+                    continue;
+                }
+                let (slots, alive, first_error) = (&slots, &alive, &first_error);
+                let host = &self.hosts[shard];
+                s.spawn(move || {
+                    if let Err(e) = serve_shard(host, shard, idxs, reqs, slots) {
+                        alive[shard].store(false, Ordering::SeqCst);
+                        first_error.lock().unwrap().get_or_insert(e);
+                    }
+                });
+            }
+        });
+        // Fail-over pass: everything the dead shards left unfilled goes
+        // to the surviving hosts, tried in order until one serves the
+        // whole remainder (each attempt is all-or-nothing).
+        let pending: Vec<usize> =
+            (0..reqs.len()).filter(|&i| slots[i].lock().unwrap().is_none()).collect();
+        if !pending.is_empty() {
+            let survivors: Vec<usize> =
+                (0..n).filter(|&i| alive[i].load(Ordering::SeqCst)).collect();
+            let mut served = false;
+            for &shard in &survivors {
+                match serve_shard(&self.hosts[shard], shard, &pending, reqs, &slots) {
+                    Ok(()) => {
+                        served = true;
+                        break;
+                    }
+                    Err(e) => {
+                        first_error.lock().unwrap().get_or_insert(e);
+                    }
+                }
+            }
+            if !served {
+                let err = first_error
+                    .into_inner()
+                    .unwrap()
+                    .unwrap_or_else(|| anyhow!("federated sweep failed"));
+                return Err(err.context(format!(
+                    "federated sweep: {} of {} points unserved after trying all {} hosts",
+                    pending.len(),
+                    reqs.len(),
+                    n
+                )));
+            }
+        }
+        let outcomes: Vec<PlanOutcome> = slots
+            .into_iter()
+            .map(|slot| slot.into_inner().unwrap().expect("every slot filled or errored"))
+            .collect();
+        Ok(outcomes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_lists_parse_trim_and_dedupe() {
+        assert_eq!(
+            parse_host_list("a:1, b:2 ,a:1,,c:3"),
+            vec!["a:1".to_string(), "b:2".to_string(), "c:3".to_string()]
+        );
+        assert!(parse_host_list(" , ").is_empty());
+    }
+
+    #[test]
+    fn sharding_is_deterministic_and_in_range() {
+        let reqs = [
+            PlanRequest::named("dqn_cartpole").unwrap(),
+            PlanRequest::named("ddpg_lunar").unwrap().with_batch(256),
+            PlanRequest::named("a2c_invpend").unwrap().fp32(),
+        ];
+        for hosts in 1..=4usize {
+            for req in &reqs {
+                let s = shard_of(&req.plan_key(), hosts);
+                assert!(s < hosts);
+                assert_eq!(s, shard_of(&req.plan_key(), hosts), "must be stable");
+            }
+        }
+        // One host ⇒ everything shards to it.
+        assert!(reqs.iter().all(|r| shard_of(&r.plan_key(), 1) == 0));
+    }
+
+    #[test]
+    fn unreachable_federation_is_reported_at_connect() {
+        // Loopback port 1 is essentially never listening.
+        let hosts = vec!["127.0.0.1:1".to_string()];
+        let e = match FederatedPlanner::connect(&hosts) {
+            Err(e) => e,
+            Ok(_) => return, // something *is* listening; nothing to assert
+        };
+        assert!(format!("{e}").contains("reachable"), "{e}");
+        assert!(FederatedPlanner::connect(&[]).is_err());
+    }
+
+    #[test]
+    fn select_planner_defaults_local_without_flag_or_env() {
+        if std::env::var(ENV_ADDR).is_ok() {
+            return; // environment opts into remote; nothing to assert here
+        }
+        let planner = select_planner(None).expect("local backend needs no server");
+        assert_eq!(planner.describe(), "local");
+        // A bare --remote with no env var is a guiding error.
+        let e = select_planner(Some("true")).unwrap_err();
+        assert!(format!("{e}").contains(ENV_ADDR), "{e}");
+    }
+}

@@ -8,13 +8,17 @@
 //! cache:
 //!
 //! * [`daemon`] — the TCP daemon: accept loop + worker-thread pool, all
-//!   connections sharing the process-wide `partition::cache`.
+//!   connections sharing the process-wide `partition::cache`; every verb
+//!   is served through the in-process `Planner` backend.
 //! * [`protocol`] — the versioned JSON-lines request/response protocol
-//!   (`plan`, `sweep`, `stats`, `cache_flush`, `shutdown`) and the
-//!   [`RemotePlan`] payload type.
-//! * [`client`] — the blocking [`RemotePlanner`], mirroring the local
-//!   planning entry points over the wire; `apdrl sweep --remote <addr>`
-//!   and the `remote_sweep` example drive grids through it.
+//!   (`plan`, `sweep`, `plan_many`, `stats`, `cache_flush`, `shutdown`);
+//!   plan payloads are serialized `coordinator::planner::PlanOutcome`s.
+//! * [`client`] — the blocking [`RemotePlanner`]: the single-daemon
+//!   remote implementation of the `Planner` trait, with transparent
+//!   reconnect-and-retry.
+//! * [`federation`] — [`FederatedPlanner`]: N daemons, `plan_many`
+//!   sharded by plan key with fail-over onto surviving hosts; plus
+//!   [`select_planner`], the CLI's one backend-choice point.
 //! * [`stats`] — daemon telemetry (request counters, solve wall time,
 //!   queue depth) surfaced by the `stats` verb, plus the process-global
 //!   solve telemetry that auto-tunes the parallel B&B fan-out in
@@ -25,10 +29,12 @@
 
 pub mod client;
 pub mod daemon;
+pub mod federation;
 pub mod protocol;
 pub mod stats;
 
 pub use client::{server_addr, RemotePlanner, ENV_ADDR};
 pub use daemon::{serve, Server, DEFAULT_ADDR};
-pub use protocol::{RemotePlan, RemoteScheduleEntry, PROTOCOL_VERSION};
+pub use federation::{parse_host_list, select_planner, FederatedPlanner};
+pub use protocol::PROTOCOL_VERSION;
 pub use stats::ServerStats;

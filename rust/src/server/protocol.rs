@@ -13,33 +13,58 @@
 //! |---------------|----------------------------------------|------------------|
 //! | `plan`        | `combo`, `batch`, `quantized`          | `plan`           |
 //! | `sweep`       | `combos[]`, `batches[]`, `quantized`   | `plans[]`        |
+//! | `plan_many`   | `points[]` of `{combo,batch,quantized}`| `plans[]`        |
 //! | `stats`       | —                                      | `stats`          |
 //! | `cache_flush` | —                                      | `flushed`        |
 //! | `shutdown`    | —                                      | `stopping`       |
 //!
-//! Responses are `{"v":1,"ok":true,...payload}` or
-//! `{"v":1,"ok":false,"error":"..."}`.  The plan payload carries the
-//! full schedule with raw `f64` start/finish times; the serializer's
+//! `sweep` is the cross-product grid form; `plan_many` carries an
+//! arbitrary point list — it is how `Planner::plan_many` travels the
+//! wire.  v2 added `plan_many` and the required `mm` flag on schedule
+//! entries; the flag changed the *response* shape, so the version was
+//! bumped and a new client talking to a v1 daemon gets a clean
+//! version-mismatch error instead of a missing-field parse failure.
+//!
+//! Responses are `{"v":2,"ok":true,...payload}` or
+//! `{"v":2,"ok":false,"error":"..."}`.  The plan payload is the
+//! serialized form of [`PlanOutcome`] minus provenance (the *receiving*
+//! side knows which backend it asked) and carries the full schedule with
+//! raw `f64` start/finish times; the serializer's
 //! shortest-round-trip formatting makes the remote schedule
 //! *bit-identical* to the in-process one (asserted in
 //! `tests/server.rs`).
+//!
+//! [`PlanOutcome`]: crate::coordinator::planner::PlanOutcome
 
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::coordinator::StaticPlan;
+use crate::coordinator::planner::{PlanOutcome, PlanStep, Provenance};
 use crate::hw::Component;
 use crate::util::json::Json;
 
 /// Bump on any incompatible change to the request or response shapes.
-pub const PROTOCOL_VERSION: u64 = 1;
+/// v2: `plan_many` verb; schedule entries carry a required `mm` flag.
+pub const PROTOCOL_VERSION: u64 = 2;
+
+/// One point of a `plan_many` request as it travels the wire: combos go
+/// by registry name (a customized `ComboConfig` cannot be expressed —
+/// clients reject those before sending; see
+/// `PlanRequest::is_registry_exact`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WirePoint {
+    pub combo: String,
+    pub batch: usize,
+    pub quantized: bool,
+}
 
 /// One parsed client request.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
     Plan { combo: String, batch: usize, quantized: bool },
     Sweep { combos: Vec<String>, batches: Vec<usize>, quantized: bool },
+    PlanMany { points: Vec<WirePoint> },
     Stats,
     CacheFlush,
     Shutdown,
@@ -118,6 +143,35 @@ impl Request {
                     root.get("quantized").and_then(Json::as_bool).unwrap_or(true);
                 Ok(Request::Sweep { combos, batches, quantized })
             }
+            "plan_many" => {
+                let points = root
+                    .get("points")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("plan_many: missing `points`"))?
+                    .iter()
+                    .map(|p| {
+                        let combo = p
+                            .get("combo")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("plan_many: point missing `combo`"))?
+                            .to_string();
+                        let batch = p
+                            .get("batch")
+                            .and_then(exact_usize)
+                            .filter(|&n| n > 0)
+                            .ok_or_else(|| {
+                                anyhow!("plan_many: point `batch` must be a positive integer")
+                            })?;
+                        let quantized =
+                            p.get("quantized").and_then(Json::as_bool).unwrap_or(true);
+                        Ok(WirePoint { combo, batch, quantized })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                if points.is_empty() {
+                    bail!("plan_many: empty points");
+                }
+                Ok(Request::PlanMany { points })
+            }
             "stats" => Ok(Request::Stats),
             "cache_flush" => Ok(Request::CacheFlush),
             "shutdown" => Ok(Request::Shutdown),
@@ -148,6 +202,27 @@ impl Request {
                 );
                 obj.insert("quantized".into(), Json::Bool(*quantized));
             }
+            Request::PlanMany { points } => {
+                obj.insert("verb".into(), Json::Str("plan_many".into()));
+                obj.insert(
+                    "points".into(),
+                    Json::Arr(
+                        points
+                            .iter()
+                            .map(|p| {
+                                let mut point = BTreeMap::new();
+                                point.insert("combo".to_string(), Json::Str(p.combo.clone()));
+                                point.insert("batch".to_string(), Json::Num(p.batch as f64));
+                                point.insert(
+                                    "quantized".to_string(),
+                                    Json::Bool(p.quantized),
+                                );
+                                Json::Obj(point)
+                            })
+                            .collect(),
+                    ),
+                );
+            }
             Request::Stats => {
                 obj.insert("verb".into(), Json::Str("stats".into()));
             }
@@ -162,7 +237,7 @@ impl Request {
     }
 }
 
-/// `{"v":1,"ok":true}` extended with the payload fields of `body`.
+/// `{"v":2,"ok":true}` extended with the payload fields of `body`.
 pub fn ok_response(body: BTreeMap<String, Json>) -> Json {
     let mut obj = body;
     obj.insert("v".to_string(), Json::Num(PROTOCOL_VERSION as f64));
@@ -170,7 +245,7 @@ pub fn ok_response(body: BTreeMap<String, Json>) -> Json {
     Json::Obj(obj)
 }
 
-/// `{"v":1,"ok":false,"error":"..."}`.
+/// `{"v":2,"ok":false,"error":"..."}`.
 pub fn error_response(msg: &str) -> Json {
     let mut obj = BTreeMap::new();
     obj.insert("v".to_string(), Json::Num(PROTOCOL_VERSION as f64));
@@ -197,170 +272,31 @@ pub fn parse_response(line: &str) -> Result<Json> {
     }
 }
 
-/// One scheduled node as shipped over the wire (mirrors
-/// `partition::schedule::ScheduleEntry` plus display metadata).
-#[derive(Clone, Debug, PartialEq)]
-pub struct RemoteScheduleEntry {
-    pub node: usize,
-    pub name: String,
-    pub component: String,
-    pub format: String,
-    pub start_us: f64,
-    pub finish_us: f64,
-}
-
-/// The planning result a remote client receives: everything the CLI,
-/// the benches and the figure harness read off a local
-/// [`StaticPlan`], minus the problem internals (dag/profiles stay
-/// server-side).
-#[derive(Clone, Debug, PartialEq)]
-pub struct RemotePlan {
-    pub combo: String,
-    pub batch: usize,
-    pub quantized: bool,
-    pub makespan_us: f64,
-    pub comm_us: f64,
-    pub sync_us: f64,
-    pub ps_pl_us: f64,
-    pub interface: String,
-    pub aie_mm_nodes: usize,
-    pub mm_nodes: usize,
-    pub explored: usize,
-    pub cache_hit: bool,
-    /// `(component name, candidate)` per DAG node.
-    pub assignment: Vec<(String, usize)>,
-    pub schedule: Vec<RemoteScheduleEntry>,
-}
-
-impl RemotePlan {
-    /// Per-training-step time: mirrors `StaticPlan::step_time_us`.
-    pub fn step_time_us(&self) -> f64 {
-        self.makespan_us + self.ps_pl_us
-    }
-
-    /// Training throughput (batches/second): mirrors
-    /// `StaticPlan::throughput`.
-    pub fn throughput(&self) -> f64 {
-        1e6 / self.step_time_us()
-    }
-
-    /// Parse the `plan` payload object.
-    pub fn from_json(plan: &Json) -> Result<RemotePlan> {
-        let field = |k: &str| plan.get(k).ok_or_else(|| anyhow!("plan payload missing `{k}`"));
-        let str_field = |k: &str| -> Result<String> {
-            Ok(field(k)?
-                .as_str()
-                .ok_or_else(|| anyhow!("plan payload `{k}` must be a string"))?
-                .to_string())
-        };
-        let num_field = |k: &str| -> Result<f64> {
-            field(k)?.as_f64().ok_or_else(|| anyhow!("plan payload `{k}` must be a number"))
-        };
-        // Counts ride the same strict-integer rule as request fields: a
-        // truncated `batch: 63.7` from a skewed peer must be an error,
-        // not a silently different plan.
-        let usize_field = |k: &str| -> Result<usize> {
-            field(k).and_then(|v| {
-                exact_usize(v)
-                    .ok_or_else(|| anyhow!("plan payload `{k}` must be a non-negative integer"))
-            })
-        };
-        let assignment = field("assignment")?
-            .as_arr()
-            .ok_or_else(|| anyhow!("plan payload `assignment` must be an array"))?
-            .iter()
-            .map(|pair| {
-                let p = pair.as_arr().unwrap_or(&[]);
-                match (p.first().and_then(Json::as_str), p.get(1).and_then(exact_usize)) {
-                    // The name must be a real component, not just a string.
-                    (Some(comp), Some(cand)) if Component::from_name(comp).is_some() => {
-                        Ok((comp.to_string(), cand))
-                    }
-                    _ => Err(anyhow!("plan payload: malformed assignment pair")),
-                }
-            })
-            .collect::<Result<Vec<_>>>()?;
-        let schedule = field("schedule")?
-            .as_arr()
-            .ok_or_else(|| anyhow!("plan payload `schedule` must be an array"))?
-            .iter()
-            .map(|e| {
-                let get_num = |k: &str| -> Result<f64> {
-                    e.get(k)
-                        .and_then(Json::as_f64)
-                        .ok_or_else(|| anyhow!("schedule entry missing `{k}`"))
-                };
-                let get_str = |k: &str| -> Result<String> {
-                    Ok(e.get(k)
-                        .and_then(Json::as_str)
-                        .ok_or_else(|| anyhow!("schedule entry missing `{k}`"))?
-                        .to_string())
-                };
-                Ok(RemoteScheduleEntry {
-                    node: e
-                        .get("node")
-                        .and_then(exact_usize)
-                        .ok_or_else(|| anyhow!("schedule entry missing `node`"))?,
-                    name: get_str("name")?,
-                    component: get_str("unit")?,
-                    format: get_str("fmt")?,
-                    start_us: get_num("start_us")?,
-                    finish_us: get_num("finish_us")?,
-                })
-            })
-            .collect::<Result<Vec<_>>>()?;
-        Ok(RemotePlan {
-            combo: str_field("combo")?,
-            batch: usize_field("batch")?,
-            quantized: field("quantized")?
-                .as_bool()
-                .ok_or_else(|| anyhow!("plan payload `quantized` must be a bool"))?,
-            makespan_us: num_field("makespan_us")?,
-            comm_us: num_field("comm_us")?,
-            sync_us: num_field("sync_us")?,
-            ps_pl_us: num_field("ps_pl_us")?,
-            interface: str_field("interface")?,
-            aie_mm_nodes: usize_field("aie_mm_nodes")?,
-            mm_nodes: usize_field("mm_nodes")?,
-            explored: usize_field("explored")?,
-            cache_hit: field("cache_hit")?
-                .as_bool()
-                .ok_or_else(|| anyhow!("plan payload `cache_hit` must be a bool"))?,
-            assignment,
-            schedule,
-        })
-    }
-}
-
-/// Serialize a solved [`StaticPlan`] into the wire `plan` payload.
-pub fn plan_to_json(plan: &StaticPlan, combo: &str, batch: usize, quantized: bool) -> Json {
+/// Serialize a [`PlanOutcome`] into the wire `plan` payload (the daemon
+/// side; provenance is not shipped — the receiver tags results with its
+/// own backend knowledge).
+pub fn plan_to_json(outcome: &PlanOutcome) -> Json {
     let mut obj = BTreeMap::new();
-    obj.insert("combo".to_string(), Json::Str(combo.to_string()));
-    obj.insert("batch".to_string(), Json::Num(batch as f64));
-    obj.insert("quantized".to_string(), Json::Bool(quantized));
-    obj.insert("makespan_us".to_string(), Json::Num(plan.schedule.makespan_us));
-    obj.insert("comm_us".to_string(), Json::Num(plan.schedule.comm_us));
-    obj.insert("sync_us".to_string(), Json::Num(plan.schedule.sync_us));
-    obj.insert("ps_pl_us".to_string(), Json::Num(plan.ps_pl_us));
-    obj.insert("interface".to_string(), Json::Str(plan.interface.name().to_string()));
-    obj.insert(
-        "aie_mm_nodes".to_string(),
-        Json::Num(plan.solution.aie_nodes(&plan.dag) as f64),
-    );
-    obj.insert("mm_nodes".to_string(), Json::Num(plan.dag.mm_nodes().len() as f64));
-    obj.insert("explored".to_string(), Json::Num(plan.solution.explored as f64));
-    obj.insert("cache_hit".to_string(), Json::Bool(plan.cache_hit));
+    obj.insert("combo".to_string(), Json::Str(outcome.combo.clone()));
+    obj.insert("batch".to_string(), Json::Num(outcome.batch as f64));
+    obj.insert("quantized".to_string(), Json::Bool(outcome.quantized));
+    obj.insert("makespan_us".to_string(), Json::Num(outcome.makespan_us));
+    obj.insert("comm_us".to_string(), Json::Num(outcome.comm_us));
+    obj.insert("sync_us".to_string(), Json::Num(outcome.sync_us));
+    obj.insert("ps_pl_us".to_string(), Json::Num(outcome.ps_pl_us));
+    obj.insert("interface".to_string(), Json::Str(outcome.interface.clone()));
+    obj.insert("aie_mm_nodes".to_string(), Json::Num(outcome.aie_mm_nodes as f64));
+    obj.insert("mm_nodes".to_string(), Json::Num(outcome.mm_nodes as f64));
+    obj.insert("explored".to_string(), Json::Num(outcome.explored as f64));
+    obj.insert("cache_hit".to_string(), Json::Bool(outcome.cache_hit));
     obj.insert(
         "assignment".to_string(),
         Json::Arr(
-            plan.solution
+            outcome
                 .assignment
                 .iter()
-                .map(|p| {
-                    Json::Arr(vec![
-                        Json::Str(p.component.name().to_string()),
-                        Json::Num(p.candidate as f64),
-                    ])
+                .map(|(comp, cand)| {
+                    Json::Arr(vec![Json::Str(comp.clone()), Json::Num(*cand as f64)])
                 })
                 .collect(),
         ),
@@ -368,23 +304,18 @@ pub fn plan_to_json(plan: &StaticPlan, combo: &str, batch: usize, quantized: boo
     obj.insert(
         "schedule".to_string(),
         Json::Arr(
-            plan.schedule
-                .entries
+            outcome
+                .schedule
                 .iter()
-                .map(|e| {
+                .map(|step| {
                     let mut entry = BTreeMap::new();
-                    entry.insert("node".to_string(), Json::Num(e.node as f64));
-                    entry.insert(
-                        "name".to_string(),
-                        Json::Str(plan.dag.nodes[e.node].name.clone()),
-                    );
-                    entry.insert("unit".to_string(), Json::Str(e.component.name().to_string()));
-                    entry.insert(
-                        "fmt".to_string(),
-                        Json::Str(plan.policy.node_format[e.node].name().to_string()),
-                    );
-                    entry.insert("start_us".to_string(), Json::Num(e.start_us));
-                    entry.insert("finish_us".to_string(), Json::Num(e.finish_us));
+                    entry.insert("node".to_string(), Json::Num(step.node as f64));
+                    entry.insert("name".to_string(), Json::Str(step.name.clone()));
+                    entry.insert("unit".to_string(), Json::Str(step.component.clone()));
+                    entry.insert("fmt".to_string(), Json::Str(step.format.clone()));
+                    entry.insert("mm".to_string(), Json::Bool(step.mm));
+                    entry.insert("start_us".to_string(), Json::Num(step.start_us));
+                    entry.insert("finish_us".to_string(), Json::Num(step.finish_us));
                     Json::Obj(entry)
                 })
                 .collect(),
@@ -393,9 +324,103 @@ pub fn plan_to_json(plan: &StaticPlan, combo: &str, batch: usize, quantized: boo
     Json::Obj(obj)
 }
 
+/// Parse the wire `plan` payload back into a [`PlanOutcome`], tagging it
+/// with the caller-supplied provenance (the client knows which backend
+/// it asked; the payload deliberately does not say).
+pub fn plan_from_json(plan: &Json, provenance: Provenance) -> Result<PlanOutcome> {
+    let field = |k: &str| plan.get(k).ok_or_else(|| anyhow!("plan payload missing `{k}`"));
+    let str_field = |k: &str| -> Result<String> {
+        Ok(field(k)?
+            .as_str()
+            .ok_or_else(|| anyhow!("plan payload `{k}` must be a string"))?
+            .to_string())
+    };
+    let num_field = |k: &str| -> Result<f64> {
+        field(k)?.as_f64().ok_or_else(|| anyhow!("plan payload `{k}` must be a number"))
+    };
+    let bool_field = |k: &str| -> Result<bool> {
+        field(k)?.as_bool().ok_or_else(|| anyhow!("plan payload `{k}` must be a bool"))
+    };
+    // Counts ride the same strict-integer rule as request fields: a
+    // truncated `batch: 63.7` from a skewed peer must be an error,
+    // not a silently different plan.
+    let usize_field = |k: &str| -> Result<usize> {
+        field(k).and_then(|v| {
+            exact_usize(v)
+                .ok_or_else(|| anyhow!("plan payload `{k}` must be a non-negative integer"))
+        })
+    };
+    let assignment = field("assignment")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("plan payload `assignment` must be an array"))?
+        .iter()
+        .map(|pair| {
+            let p = pair.as_arr().unwrap_or(&[]);
+            match (p.first().and_then(Json::as_str), p.get(1).and_then(exact_usize)) {
+                // The name must be a real component, not just a string.
+                (Some(comp), Some(cand)) if Component::from_name(comp).is_some() => {
+                    Ok((comp.to_string(), cand))
+                }
+                _ => Err(anyhow!("plan payload: malformed assignment pair")),
+            }
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let schedule = field("schedule")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("plan payload `schedule` must be an array"))?
+        .iter()
+        .map(|e| {
+            let get_num = |k: &str| -> Result<f64> {
+                e.get(k)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("schedule entry missing `{k}`"))
+            };
+            let get_str = |k: &str| -> Result<String> {
+                Ok(e.get(k)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("schedule entry missing `{k}`"))?
+                    .to_string())
+            };
+            Ok(PlanStep {
+                node: e
+                    .get("node")
+                    .and_then(exact_usize)
+                    .ok_or_else(|| anyhow!("schedule entry missing `node`"))?,
+                name: get_str("name")?,
+                component: get_str("unit")?,
+                format: get_str("fmt")?,
+                mm: e
+                    .get("mm")
+                    .and_then(Json::as_bool)
+                    .ok_or_else(|| anyhow!("schedule entry missing `mm`"))?,
+                start_us: get_num("start_us")?,
+                finish_us: get_num("finish_us")?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(PlanOutcome {
+        combo: str_field("combo")?,
+        batch: usize_field("batch")?,
+        quantized: bool_field("quantized")?,
+        makespan_us: num_field("makespan_us")?,
+        comm_us: num_field("comm_us")?,
+        sync_us: num_field("sync_us")?,
+        ps_pl_us: num_field("ps_pl_us")?,
+        interface: str_field("interface")?,
+        aie_mm_nodes: usize_field("aie_mm_nodes")?,
+        mm_nodes: usize_field("mm_nodes")?,
+        explored: usize_field("explored")?,
+        cache_hit: bool_field("cache_hit")?,
+        assignment,
+        schedule,
+        provenance,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::planner::{LocalPlanner, PlanRequest, Planner};
 
     #[test]
     fn requests_round_trip_the_wire() {
@@ -405,6 +430,12 @@ mod tests {
                 combos: vec!["a2c_invpend".into(), "ddpg_lunar".into()],
                 batches: vec![64, 256],
                 quantized: false,
+            },
+            Request::PlanMany {
+                points: vec![
+                    WirePoint { combo: "dqn_cartpole".into(), batch: 48, quantized: true },
+                    WirePoint { combo: "ddpg_lunar".into(), batch: 256, quantized: false },
+                ],
             },
             Request::Stats,
             Request::CacheFlush,
@@ -432,26 +463,30 @@ mod tests {
         for bad in [
             r#"{"v":1.9,"verb":"stats"}"#,
             r#"{"v":-1,"verb":"stats"}"#,
-            r#"{"v":1,"verb":"plan","combo":"dqn_cartpole","batch":63.7}"#,
-            r#"{"v":1,"verb":"plan","combo":"dqn_cartpole","batch":-8}"#,
-            r#"{"v":1,"verb":"sweep","combos":["dqn_cartpole"],"batches":[64.5]}"#,
+            r#"{"v":2,"verb":"plan","combo":"dqn_cartpole","batch":63.7}"#,
+            r#"{"v":2,"verb":"plan","combo":"dqn_cartpole","batch":-8}"#,
+            r#"{"v":2,"verb":"sweep","combos":["dqn_cartpole"],"batches":[64.5]}"#,
+            r#"{"v":2,"verb":"plan_many","points":[{"combo":"dqn_cartpole","batch":0}]}"#,
+            r#"{"v":2,"verb":"plan_many","points":[{"combo":"dqn_cartpole","batch":8.5}]}"#,
         ] {
             assert!(Request::parse_line(bad).is_err(), "{bad} must not parse");
         }
         // Integral floats (JSON has no int type) are of course fine.
-        assert!(Request::parse_line(r#"{"v":1.0,"verb":"stats"}"#).is_ok());
+        assert!(Request::parse_line(r#"{"v":2.0,"verb":"stats"}"#).is_ok());
     }
 
     #[test]
     fn malformed_requests_error_cleanly() {
         assert!(Request::parse_line("not json").is_err());
-        let e = Request::parse_line(r#"{"v":1,"verb":"fly"}"#).unwrap_err();
+        let e = Request::parse_line(r#"{"v":2,"verb":"fly"}"#).unwrap_err();
         assert!(format!("{e}").contains("unknown verb"), "{e}");
-        let e = Request::parse_line(r#"{"v":1,"verb":"plan","batch":64}"#).unwrap_err();
+        let e = Request::parse_line(r#"{"v":2,"verb":"plan","batch":64}"#).unwrap_err();
         assert!(format!("{e}").contains("missing `combo`"), "{e}");
-        let e = Request::parse_line(r#"{"v":1,"verb":"sweep","combos":[],"batches":[]}"#)
+        let e = Request::parse_line(r#"{"v":2,"verb":"sweep","combos":[],"batches":[]}"#)
             .unwrap_err();
         assert!(format!("{e}").contains("missing") || format!("{e}").contains("empty"), "{e}");
+        let e = Request::parse_line(r#"{"v":2,"verb":"plan_many","points":[]}"#).unwrap_err();
+        assert!(format!("{e}").contains("empty points"), "{e}");
     }
 
     #[test]
@@ -465,19 +500,29 @@ mod tests {
 
     #[test]
     fn plan_payload_round_trips_bit_identically() {
-        let c = crate::coordinator::combo("dqn_cartpole");
-        let plan = crate::coordinator::static_phase(&c, 24, true);
-        let wire = plan_to_json(&plan, c.name, 24, true).to_line().unwrap();
-        let remote = RemotePlan::from_json(&Json::parse(&wire).unwrap()).unwrap();
-        assert_eq!(remote.makespan_us.to_bits(), plan.schedule.makespan_us.to_bits());
-        assert_eq!(remote.schedule.len(), plan.schedule.entries.len());
-        for (r, l) in remote.schedule.iter().zip(&plan.schedule.entries) {
+        let req = PlanRequest::named("dqn_cartpole").unwrap().with_batch(24);
+        let outcome = LocalPlanner.plan(&req).unwrap();
+        let wire = plan_to_json(&outcome).to_line().unwrap();
+        let remote = plan_from_json(
+            &Json::parse(&wire).unwrap(),
+            Provenance::Remote { addr: "test".into() },
+        )
+        .unwrap();
+        assert_eq!(remote.makespan_us.to_bits(), outcome.makespan_us.to_bits());
+        assert_eq!(remote.schedule.len(), outcome.schedule.len());
+        for (r, l) in remote.schedule.iter().zip(&outcome.schedule) {
             assert_eq!(r.node, l.node);
-            assert_eq!(r.component, l.component.name());
+            assert_eq!(r.component, l.component);
+            assert_eq!(r.mm, l.mm);
             assert_eq!(r.start_us.to_bits(), l.start_us.to_bits());
             assert_eq!(r.finish_us.to_bits(), l.finish_us.to_bits());
         }
-        assert_eq!(remote.assignment.len(), plan.solution.assignment.len());
-        assert_eq!(remote.step_time_us().to_bits(), plan.step_time_us().to_bits());
+        assert_eq!(remote.assignment, outcome.assignment);
+        assert_eq!(remote.step_time_us().to_bits(), outcome.step_time_us().to_bits());
+        // Everything but provenance survives the wire unchanged.
+        assert_eq!(remote.provenance, Provenance::Remote { addr: "test".into() });
+        let mut relabeled = remote.clone();
+        relabeled.provenance = outcome.provenance.clone();
+        assert_eq!(relabeled, outcome);
     }
 }

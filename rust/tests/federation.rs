@@ -1,0 +1,211 @@
+//! Integration tests for the unified `Planner` API and the federated
+//! backend: the same grid planned through `LocalPlanner`, a single
+//! `RemotePlanner` and a two-daemon `FederatedPlanner` must be
+//! *bit-identical* — including when one federated host is down and the
+//! fail-over path serves its shards.  Everything runs on the default
+//! (non-`pjrt`) feature set over loopback TCP.
+
+use apdrl::coordinator::{LocalPlanner, PlanOutcome, PlanRequest, Planner, Provenance};
+use apdrl::server::{FederatedPlanner, RemotePlanner, Server};
+
+/// Boot a daemon on an ephemeral loopback port; returns its address and
+/// the thread running it (joined after `shutdown`).
+fn boot(workers: usize) -> (String, std::thread::JoinHandle<()>) {
+    let server = Server::bind("127.0.0.1:0", workers).expect("ephemeral bind must work");
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.run().expect("server run must not error"));
+    (addr, handle)
+}
+
+/// The acceptance grid: two combos × two batches plus one fp32 point —
+/// enough to land on both shards of a two-host federation in practice
+/// while staying fast.
+fn grid() -> Vec<PlanRequest> {
+    let mut reqs =
+        PlanRequest::named_grid(&["dqn_cartpole".into(), "a2c_invpend".into()], &[28, 60], true)
+            .unwrap();
+    reqs.push(PlanRequest::named("ddpg_mntncar").unwrap().with_batch(28).fp32());
+    reqs
+}
+
+/// Everything except provenance must agree bit-for-bit across backends.
+fn assert_identical(tag: &str, a: &[PlanOutcome], b: &[PlanOutcome]) {
+    assert_eq!(a.len(), b.len(), "{tag}: plan counts differ");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.combo, y.combo, "{tag}");
+        assert_eq!(x.batch, y.batch, "{tag}");
+        assert_eq!(x.quantized, y.quantized, "{tag}");
+        assert_eq!(
+            x.makespan_us.to_bits(),
+            y.makespan_us.to_bits(),
+            "{tag}: {} bs={} makespans differ",
+            x.combo,
+            x.batch
+        );
+        assert_eq!(x.assignment, y.assignment, "{tag}: {} bs={}", x.combo, x.batch);
+        assert_eq!(x.schedule.len(), y.schedule.len(), "{tag}");
+        for (s, t) in x.schedule.iter().zip(&y.schedule) {
+            assert_eq!(
+                (s.node, &s.component, &s.format, s.mm),
+                (t.node, &t.component, &t.format, t.mm),
+                "{tag}"
+            );
+            assert_eq!(s.start_us.to_bits(), t.start_us.to_bits(), "{tag}");
+            assert_eq!(s.finish_us.to_bits(), t.finish_us.to_bits(), "{tag}");
+        }
+        assert_eq!(x.step_time_us().to_bits(), y.step_time_us().to_bits(), "{tag}");
+    }
+}
+
+/// The tentpole acceptance scenario: local, remote and federated
+/// backends plan the same grid identically; killing one federated host
+/// exercises the retry path and the results are *still* identical.
+#[test]
+fn all_three_backends_plan_identically_even_with_a_host_down() {
+    let (addr_a, handle_a) = boot(2);
+    let (addr_b, handle_b) = boot(2);
+    let reqs = grid();
+
+    let local = LocalPlanner.plan_many(&reqs).unwrap();
+    assert!(local
+        .iter()
+        .all(|p| matches!(p.provenance, Provenance::Local { .. })));
+
+    let remote_backend = RemotePlanner::connect(&addr_a).unwrap();
+    let remote = remote_backend.plan_many(&reqs).unwrap();
+    assert!(remote
+        .iter()
+        .all(|p| p.provenance == Provenance::Remote { addr: addr_a.clone() }));
+    assert_identical("remote vs local", &remote, &local);
+
+    let hosts = vec![addr_a.clone(), addr_b.clone()];
+    let federated_backend = FederatedPlanner::connect(&hosts).unwrap();
+    let federated = federated_backend.plan_many(&reqs).unwrap();
+    assert!(federated
+        .iter()
+        .all(|p| matches!(p.provenance, Provenance::Federated { shard } if shard < 2)));
+    assert_identical("federated vs local", &federated, &local);
+
+    // Single-point plan through every backend, same story.
+    let one = &reqs[0];
+    let solo_local = LocalPlanner.plan(one).unwrap();
+    let solo_remote = remote_backend.plan(one).unwrap();
+    let solo_fed = federated_backend.plan(one).unwrap();
+    assert_identical(
+        "solo remote vs local",
+        std::slice::from_ref(&solo_remote),
+        std::slice::from_ref(&solo_local),
+    );
+    assert_identical(
+        "solo federated vs local",
+        std::slice::from_ref(&solo_fed),
+        std::slice::from_ref(&solo_local),
+    );
+
+    // Kill host A: shards that lived there must fail over to host B and
+    // the sweep must still be bit-identical to the local control.
+    RemotePlanner::connect(&addr_a).unwrap().shutdown().unwrap();
+    handle_a.join().unwrap();
+    // Pin down a request that *homes* on the dead shard, so the retry
+    // path is provably exercised rather than hash-luck avoided.
+    let homed_on_dead = (1..200usize)
+        .map(|bs| PlanRequest::named("dqn_cartpole").unwrap().with_batch(bs))
+        .find(|r| federated_backend.shard_for(r) == 0)
+        .expect("some batch must hash to shard 0");
+    let served = federated_backend.plan(&homed_on_dead).unwrap();
+    assert_eq!(
+        served.provenance,
+        Provenance::Federated { shard: 1 },
+        "a request homed on the dead host must be served by the survivor"
+    );
+    let mut reqs_down = reqs.clone();
+    reqs_down.push(homed_on_dead.clone());
+    let after_failover = federated_backend.plan_many(&reqs_down).unwrap();
+    assert_identical(
+        "federated (one host down) vs local",
+        &after_failover[..reqs.len()],
+        &local,
+    );
+    assert_identical(
+        "failed-over point vs local",
+        &after_failover[reqs.len()..],
+        std::slice::from_ref(&LocalPlanner.plan(&homed_on_dead).unwrap()),
+    );
+    // Everything was served by the surviving shard (index 1).
+    assert!(after_failover
+        .iter()
+        .all(|p| p.provenance == Provenance::Federated { shard: 1 }));
+    // Single plans fail over too.
+    let solo_after = federated_backend.plan(one).unwrap();
+    assert_eq!(solo_after.provenance, Provenance::Federated { shard: 1 });
+    assert_identical(
+        "solo federated (one host down) vs local",
+        std::slice::from_ref(&solo_after),
+        std::slice::from_ref(&solo_local),
+    );
+
+    RemotePlanner::connect(&addr_b).unwrap().shutdown().unwrap();
+    handle_b.join().unwrap();
+
+    // With every host gone the federation reports failure, not a hang.
+    assert!(federated_backend.plan_many(&reqs).is_err());
+    assert!(federated_backend.plan(one).is_err());
+}
+
+/// Errors (unknown combos, inexpressible customized combos) surface
+/// through every backend as reported errors, not panics or misplans.
+#[test]
+fn bad_requests_error_uniformly_across_backends() {
+    let (addr, handle) = boot(2);
+
+    // Unknown combo: rejected at request construction.
+    assert!(PlanRequest::named("dqn_tetris").is_err());
+
+    // Customized (non-registry) combo: local plans it, remote/federated
+    // refuse to lower it onto the wire instead of planning the wrong net.
+    let mut custom = apdrl::coordinator::combo("dqn_cartpole");
+    custom.net = apdrl::graph::NetSpec::mlp(&[4, 160, 160, 2]);
+    let req = PlanRequest::new(custom, 32, true);
+    assert!(LocalPlanner.plan(&req).is_ok());
+    let remote = RemotePlanner::connect(&addr).unwrap();
+    let e = remote.plan(&req).unwrap_err();
+    assert!(format!("{e}").contains("LocalPlanner"), "{e}");
+    let fed = FederatedPlanner::connect(&[addr.clone()]).unwrap();
+    assert!(fed.plan_many(std::slice::from_ref(&req)).is_err());
+
+    // Zero batch is rejected by every backend.
+    let zero = PlanRequest::named("dqn_cartpole").unwrap().with_batch(0);
+    assert!(LocalPlanner.plan(&zero).is_err());
+    assert!(remote.plan(&zero).is_err());
+
+    remote.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+/// The federated sweep shards deterministically by plan key: the same
+/// grid twice gives the same shard assignment, and the second pass rides
+/// each daemon's warm cache.
+#[test]
+fn federated_sharding_is_stable_and_cache_affine() {
+    let (addr_a, handle_a) = boot(2);
+    let (addr_b, handle_b) = boot(2);
+    let fed = FederatedPlanner::connect(&[addr_a.clone(), addr_b.clone()]).unwrap();
+    let reqs: Vec<PlanRequest> = [34usize, 50, 66, 82]
+        .iter()
+        .map(|&bs| PlanRequest::named("dqn_cartpole").unwrap().with_batch(bs))
+        .collect();
+    let first = fed.plan_many(&reqs).unwrap();
+    let second = fed.plan_many(&reqs).unwrap();
+    for (a, b) in first.iter().zip(&second) {
+        assert_eq!(a.provenance, b.provenance, "shard assignment must be stable");
+        assert_eq!(a.makespan_us.to_bits(), b.makespan_us.to_bits());
+    }
+    assert!(
+        second.iter().all(|p| p.cache_hit),
+        "stable sharding must make the second pass all daemon-cache hits"
+    );
+    RemotePlanner::connect(&addr_a).unwrap().shutdown().unwrap();
+    RemotePlanner::connect(&addr_b).unwrap().shutdown().unwrap();
+    handle_a.join().unwrap();
+    handle_b.join().unwrap();
+}

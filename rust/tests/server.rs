@@ -48,7 +48,7 @@ fn remote_plans_are_byte_identical_and_cache_is_shared() {
     let solo = {
         let addr = addr.clone();
         std::thread::spawn(move || {
-            RemotePlanner::connect(&addr).unwrap().plan("ddpg_mntncar", 44, true).unwrap()
+            RemotePlanner::connect(&addr).unwrap().plan_named("ddpg_mntncar", 44, true).unwrap()
         })
     };
     let plans_a = sweep_a.join().unwrap();
@@ -91,7 +91,7 @@ fn remote_plans_are_byte_identical_and_cache_is_shared() {
     // These plans are byte-identical to the in-process planner's — same
     // cache entry, same deterministic schedule evaluation, schedule
     // times surviving the wire bit-for-bit.
-    let mut client = RemotePlanner::connect(&addr).unwrap();
+    let client = RemotePlanner::connect(&addr).unwrap();
     let replans = client.sweep(&combos, &batches, true).unwrap();
     assert!(
         replans.iter().all(|p| p.cache_hit && p.explored == 0),
@@ -162,17 +162,17 @@ fn malformed_and_mismatched_requests_error_without_killing_the_connection() {
     let resp = ask(r#"{"verb":"stats"}"#);
     assert!(err_of(&resp).contains("missing protocol version"), "{resp}");
     // Unknown verb.
-    let resp = ask(r#"{"v":1,"verb":"transmogrify"}"#);
+    let resp = ask(r#"{"v":2,"verb":"transmogrify"}"#);
     assert!(err_of(&resp).contains("unknown verb"), "{resp}");
     // Unknown combo: a *planning* error, still a clean protocol answer.
-    let resp = ask(r#"{"v":1,"verb":"plan","combo":"dqn_tetris","batch":8}"#);
+    let resp = ask(r#"{"v":2,"verb":"plan","combo":"dqn_tetris","batch":8}"#);
     assert!(err_of(&resp).contains("unknown combo"), "{resp}");
     // Zero batch.
-    let resp = ask(r#"{"v":1,"verb":"plan","combo":"dqn_cartpole","batch":0}"#);
+    let resp = ask(r#"{"v":2,"verb":"plan","combo":"dqn_cartpole","batch":0}"#);
     assert!(err_of(&resp).contains("batch"), "{resp}");
 
     // After all those errors the same connection still serves requests.
-    let resp = ask(r#"{"v":1,"verb":"stats"}"#);
+    let resp = ask(r#"{"v":2,"verb":"stats"}"#);
     assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp}");
     let errors = resp
         .get("stats")
@@ -190,14 +190,50 @@ fn malformed_and_mismatched_requests_error_without_killing_the_connection() {
     handle.join().unwrap();
 }
 
+/// Regression for the sweep-duplication satellite: a `sweep` request
+/// naming the same combo twice must NOT replan the repeated (combo,
+/// batch) pairs — the handler dedupes by plan key, so every duplicate
+/// point reports `explored == 0` (a memoized copy of the first), with a
+/// bit-identical schedule.
+#[test]
+fn duplicate_combos_in_one_sweep_request_are_not_replanned() {
+    let (addr, handle) = boot(2);
+    let client = RemotePlanner::connect(&addr).unwrap();
+    let combos = vec![
+        "ddpg_mntncar".to_string(),
+        "ddpg_mntncar".to_string(),
+        "dqn_cartpole".to_string(),
+        "ddpg_mntncar".to_string(),
+    ];
+    let batches = [57usize];
+    let plans = client.sweep(&combos, &batches, true).unwrap();
+    assert_eq!(plans.len(), combos.len());
+    for dup in [&plans[1], &plans[3]] {
+        assert_eq!(dup.combo, "ddpg_mntncar");
+        assert_eq!(
+            dup.explored, 0,
+            "repeated (combo, batch) point in one request must not re-search"
+        );
+        assert!(dup.cache_hit, "repeated point must be a memoized copy");
+        assert_eq!(dup.makespan_us.to_bits(), plans[0].makespan_us.to_bits());
+        for (a, b) in dup.schedule.iter().zip(&plans[0].schedule) {
+            assert_eq!(a.start_us.to_bits(), b.start_us.to_bits());
+            assert_eq!(a.finish_us.to_bits(), b.finish_us.to_bits());
+        }
+        assert_eq!(dup.assignment, plans[0].assignment);
+    }
+    client.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
 /// FP32 vs quantized travel the wire as distinct plans, and the remote
 /// side sees the same precision-dependent formats the local one does.
 #[test]
 fn remote_respects_precision_mode() {
     let (addr, handle) = boot(2);
-    let mut client = RemotePlanner::connect(&addr).unwrap();
-    let quant = client.plan("ddpg_lunar", 96, true).unwrap();
-    let fp32 = client.plan("ddpg_lunar", 96, false).unwrap();
+    let client = RemotePlanner::connect(&addr).unwrap();
+    let quant = client.plan_named("ddpg_lunar", 96, true).unwrap();
+    let fp32 = client.plan_named("ddpg_lunar", 96, false).unwrap();
     assert!(quant.quantized && !fp32.quantized);
     assert!(
         fp32.schedule.iter().all(|e| e.format == "FP32"),
