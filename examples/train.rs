@@ -1,0 +1,67 @@
+//! Quickstart for the dynamic phase: plan → precision policy → train,
+//! entirely on the pure-Rust CPU executor (no PJRT, no artifacts).
+//!
+//! ```bash
+//! cargo run --release --example train -- [--steps 4000] [--seed 1]
+//! ```
+//!
+//! Plans DQN-CartPole through the one `Planner` API, folds the solved
+//! schedule into an `ExecPolicy` (the quantized CartPole plan is all-PL,
+//! so every layer runs FP16 with FP32 masters and the loss-scaling FSM
+//! armed), then trains both quantized and FP32 on the same seed and
+//! reports the reward error.
+
+use anyhow::Result;
+
+use apdrl::coordinator::metrics::reward_error_pct;
+use apdrl::coordinator::{combo, train_combo, LocalPlanner, PlanRequest, Planner, TrainLimits};
+use apdrl::exec::CpuBackend;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let get = |name: &str, default: usize| {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    };
+    let steps = get("--steps", 4_000) as u64;
+    let seed = get("--seed", 1) as u64;
+    let c = combo("dqn_cartpole");
+    let limits = TrainLimits { max_env_steps: steps, max_episodes: 200 };
+
+    let mut converged = Vec::new();
+    for quantized in [true, false] {
+        // 1. Static phase: the partition plan decides the layer formats.
+        let plan = LocalPlanner.plan(&PlanRequest::new(c.clone(), c.batch, quantized))?;
+        // 2. Dynamic phase: the CPU executor runs the plan's routing.
+        let mut backend = CpuBackend::from_outcome(&plan)?.with_train_every(2);
+        println!(
+            "[{}] {} MM nodes on AIE of {}, loss scaling {}",
+            backend.describe(),
+            plan.aie_mm_nodes,
+            plan.mm_nodes,
+            if backend.policy().needs_loss_scaling { "armed" } else { "off" }
+        );
+        let r = train_combo(&mut backend, &c, seed, limits, false)?;
+        let conv = r.metrics.converged_reward(25);
+        println!(
+            "[{}] {} episodes, {} train steps, {} overflows, {} scale transitions, converged reward {conv:.1}",
+            backend.describe(),
+            r.metrics.episode_rewards.len(),
+            r.metrics.train_steps,
+            r.metrics.overflows,
+            r.metrics.scale_transitions.len(),
+        );
+        converged.push(conv);
+    }
+    println!(
+        "quantized {:.1} vs fp32 {:.1} -> reward error {:.2}% (paper Table III: {:.2}%)",
+        converged[0],
+        converged[1],
+        reward_error_pct(&[converged[1]], &[converged[0]]),
+        c.paper_reward_error_pct
+    );
+    Ok(())
+}

@@ -39,7 +39,8 @@ fn main() -> Result<()> {
     for seed in 1..=seeds {
         for mode in ["fp32", "mixed"] {
             let t0 = std::time::Instant::now();
-            let r = train_combo(&mut runtime, &c, mode, seed, limits, true)?;
+            let mut backend = apdrl::exec::PjrtBackend::new(&mut runtime, mode);
+            let r = train_combo(&mut backend, &c, seed, limits, true)?;
             let conv = r.metrics.converged_reward(50);
             println!(
                 "[{mode} seed {seed}] {} episodes | converged reward {conv:.1} | {} train steps | {} overflows | {:.1}s ({:.0} env steps/s)",

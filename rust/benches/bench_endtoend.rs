@@ -5,7 +5,7 @@
 use std::time::Duration;
 
 use apdrl::coordinator::combo;
-use apdrl::drl::dqn::{DqnAgent, DqnConfig};
+use apdrl::drl::dqn::DqnConfig;
 use apdrl::drl::Agent;
 use apdrl::envs::Env;
 use apdrl::runtime::Runtime;
@@ -31,7 +31,7 @@ fn main() {
             warmup: 64,
             ..DqnConfig::for_combo(c.batch, obs_shape, c.act_dim)
         };
-        let mut agent = DqnAgent::new(&mut rt, name, mode, cfg, 1).unwrap();
+        let mut agent = apdrl::drl::pjrt::dqn_agent(&mut rt, name, mode, cfg, 1).unwrap();
         let mut env = c.make_env();
         let mut rng = Rng::new(1);
         let mut obs = env.reset(&mut rng);

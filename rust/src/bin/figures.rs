@@ -317,7 +317,8 @@ fn fig11(args: &Args) -> Result<()> {
         let mut mixed_rewards = Vec::new();
         for seed in 1..=seeds as u64 {
             for mode in ["fp32", "mixed"] {
-                let r = train_combo(&mut runtime, &c, mode, seed, limits, true)?;
+                let mut backend = apdrl::exec::PjrtBackend::new(&mut runtime, mode);
+                let r = train_combo(&mut backend, &c, seed, limits, true)?;
                 let conv = r.metrics.converged_reward(50);
                 println!(
                     "  {name} [{mode}] seed {seed}: converged {conv:.2} ({} eps, {} train steps, {} overflows)",

@@ -46,9 +46,11 @@ pub const TIMING_COMBO_NAMES: [&str; 6] = [
 
 /// Parse a combo name into its configuration.  Unknown names are a
 /// reported error, not an abort — CLI front-ends (`apdrl`, `figures`)
-/// route user input through this.
+/// route user input through this.  Dashes normalize to the registry's
+/// underscores, so `dqn-cartpole` and `dqn_cartpole` are the same combo.
 pub fn try_combo(name: &str) -> Result<ComboConfig> {
-    let cfg = match name {
+    let canon = name.replace('-', "_");
+    let cfg = match canon.as_str() {
         "dqn_cartpole" => ComboConfig {
             name: "dqn_cartpole",
             algo: Algo::Dqn,
@@ -213,6 +215,14 @@ impl ComboConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn dashed_names_normalize_to_registry_combos() {
+        let c = try_combo("dqn-cartpole").unwrap();
+        assert_eq!(c.name, "dqn_cartpole");
+        let c = try_combo("ppo-mspacman-mini").unwrap();
+        assert_eq!(c.name, "ppo_mspacman_mini");
+    }
 
     #[test]
     fn unknown_names_error_instead_of_aborting() {

@@ -13,6 +13,13 @@ pub struct RunMetrics {
     pub train_steps: u64,
     pub overflows: u64,
     pub wallclock_s: f64,
+    /// Loss-scale FSM transitions: `(env step, from, to)` — grows after
+    /// clean-step streaks, halvings on overflow (paper Fig 9).  Scales
+    /// are the values *fed to* consecutive train steps, so the very
+    /// first backoff is included.
+    pub scale_transitions: Vec<(u64, f32, f32)>,
+    /// Scale fed to the most recent train step (0 before any).
+    pub final_loss_scale: f32,
 }
 
 impl RunMetrics {

@@ -1,10 +1,10 @@
 //! The AP-DRL coordinator (L3 proper): experiment configs (Table III),
-//! the static phase (build → profile → partition, paper Fig 7 left) — now
-//! a cached, batched planning service (`static_phase` / `plan_sweep`)
-//! behind the backend-agnostic [`planner::Planner`] trait —
-//! the dynamic phase (env/train loop over PJRT artifacts with the
-//! quantization FSM, Fig 7 right; `pjrt` feature), baseline timing models
-//! (AIE-only, FIXAR) and report emission.
+//! the static phase (build → profile → partition, paper Fig 7 left) — a
+//! cached, batched planning service (`static_phase` / `plan_sweep`)
+//! behind the backend-agnostic [`planner::Planner`] trait — and the
+//! dynamic phase (env/train loop with the quantization FSM, Fig 7
+//! right) behind the execution [`crate::exec::Backend`] trait, plus
+//! baseline timing models (AIE-only, FIXAR) and report emission.
 
 pub mod baselines;
 pub mod config;
@@ -12,11 +12,9 @@ pub mod metrics;
 pub mod pipeline;
 pub mod planner;
 pub mod report;
-#[cfg(feature = "pjrt")]
 pub mod trainer;
 
 pub use config::{combo, try_combo, ComboConfig, COMBO_NAMES};
 pub use pipeline::{plan_sweep, plan_sweep_grid, static_phase, StaticPlan};
 pub use planner::{LocalPlanner, PlanOutcome, PlanRequest, PlanStep, Planner, Provenance};
-#[cfg(feature = "pjrt")]
 pub use trainer::{train_combo, TrainLimits, TrainResult};

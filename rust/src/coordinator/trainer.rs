@@ -1,24 +1,20 @@
 //! Dynamic phase (paper Fig 7, right column): the Inference →
 //! Environment Step → Train loop, fully in rust, with network compute on
-//! PJRT artifacts and the hardware-aware quantization FSM live.
+//! an execution [`Backend`] — the pure-Rust CPU executor by default, the
+//! PJRT artifacts under the `pjrt` feature — and the hardware-aware
+//! quantization FSM live.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::drl::a2c::{A2cAgent, A2cConfig};
-use crate::drl::ddpg::{DdpgAgent, DdpgConfig};
-use crate::drl::dqn::{DqnAgent, DqnConfig};
-use crate::drl::ppo::{PpoAgent, PpoConfig};
-use crate::drl::Agent;
-use crate::graph::Algo;
-use crate::runtime::Runtime;
+use crate::exec::Backend;
 use crate::util::Rng;
 
 use super::config::ComboConfig;
 use super::metrics::RunMetrics;
 
-/// Run-length limits (scaled for this 1-core testbed; `--full` in the
+/// Run-length limits (scaled for this small testbed; `--full` in the
 /// figures harness restores larger budgets).
 #[derive(Clone, Copy, Debug)]
 pub struct TrainLimits {
@@ -36,75 +32,26 @@ impl Default for TrainLimits {
 pub struct TrainResult {
     pub metrics: RunMetrics,
     pub combo: String,
-    pub mode: String,
+    /// Which execution backend (and precision) produced the run.
+    pub backend: String,
     pub seed: u64,
 }
 
-fn make_agent(
-    runtime: &mut Runtime,
-    combo: &ComboConfig,
-    mode: &str,
-    seed: u64,
-) -> Result<Box<dyn Agent>> {
-    Ok(match combo.algo {
-        Algo::Dqn => {
-            let obs_shape = match &combo.net {
-                crate::graph::NetSpec::Mlp { .. } => vec![combo.obs_dim],
-                crate::graph::NetSpec::Conv { in_hw, in_ch, .. } => vec![*in_hw, *in_hw, *in_ch],
-            };
-            Box::new(DqnAgent::new(
-                runtime,
-                combo.name,
-                mode,
-                DqnConfig::for_combo(combo.batch, obs_shape, combo.act_dim),
-                seed,
-            )?)
-        }
-        Algo::Ddpg => Box::new(DdpgAgent::new(
-            runtime,
-            combo.name,
-            mode,
-            DdpgConfig::for_combo(combo.batch, combo.obs_dim, combo.act_dim),
-            seed,
-        )?),
-        Algo::A2c => Box::new(A2cAgent::new(
-            runtime,
-            combo.name,
-            mode,
-            A2cConfig::for_combo(combo.batch, combo.obs_dim, combo.act_dim),
-            seed,
-        )?),
-        Algo::Ppo => {
-            let obs_shape = match &combo.net {
-                crate::graph::NetSpec::Mlp { .. } => vec![combo.obs_dim],
-                crate::graph::NetSpec::Conv { in_hw, in_ch, .. } => vec![*in_hw, *in_hw, *in_ch],
-            };
-            Box::new(PpoAgent::new(
-                runtime,
-                combo.name,
-                mode,
-                PpoConfig::for_combo(combo.batch, obs_shape, combo.act_dim),
-                seed,
-            )?)
-        }
-    })
-}
-
-/// Train `combo` in `mode` ("fp32" | "mixed" | "bf16") for one seed.
+/// Train `combo` on `backend` for one seed.
 pub fn train_combo(
-    runtime: &mut Runtime,
+    backend: &mut dyn Backend,
     combo: &ComboConfig,
-    mode: &str,
     seed: u64,
     limits: TrainLimits,
     verbose: bool,
 ) -> Result<TrainResult> {
     let t0 = Instant::now();
-    let mut agent = make_agent(runtime, combo, mode, seed)?;
-    let mut env = combo.make_env();
+    let mut agent = backend.make_agent(combo, seed)?;
+    let mut env = combo.try_make_env()?;
     let mut rng = Rng::new(seed);
     let mut env_rng = rng.fork(0xE74);
     let mut metrics = RunMetrics::default();
+    let mut last_scale: Option<f32> = None;
 
     let mut obs = env.reset(&mut env_rng);
     let mut ep_reward = 0.0f64;
@@ -120,6 +67,14 @@ pub fn train_combo(
             if stats.found_inf {
                 metrics.overflows += 1;
             }
+            // Record every loss-scale FSM transition (grow or backoff).
+            if let Some(prev) = last_scale {
+                if prev != stats.loss_scale {
+                    metrics.scale_transitions.push((metrics.env_steps, prev, stats.loss_scale));
+                }
+            }
+            last_scale = Some(stats.loss_scale);
+            metrics.final_loss_scale = stats.loss_scale;
         }
         ep_reward += tr.reward;
         metrics.env_steps += 1;
@@ -130,7 +85,9 @@ pub fn train_combo(
                 let recent = metrics.converged_reward(25);
                 eprintln!(
                     "  [{}/{} seed {seed}] ep {n}: avg25 {recent:.1} (steps {})",
-                    combo.name, mode, metrics.env_steps
+                    combo.name,
+                    backend.describe(),
+                    metrics.env_steps
                 );
             }
             ep_reward = 0.0;
@@ -141,5 +98,5 @@ pub fn train_combo(
     }
     metrics.train_steps = agent.train_steps();
     metrics.wallclock_s = t0.elapsed().as_secs_f64();
-    Ok(TrainResult { metrics, combo: combo.name.into(), mode: mode.into(), seed })
+    Ok(TrainResult { metrics, combo: combo.name.into(), backend: backend.describe(), seed })
 }

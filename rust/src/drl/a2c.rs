@@ -1,18 +1,16 @@
 //! A2C agent (continuous control): Gaussian policy + value net trained
-//! jointly from fixed-horizon GAE rollouts.
-
-use std::sync::Arc;
+//! jointly from fixed-horizon GAE rollouts.  Network math is delegated
+//! to an [`A2cCompute`] backend (CPU executor or PJRT artifacts).
 
 use anyhow::Result;
 
 use crate::envs::Action;
+use crate::exec::ExecPolicy;
 use crate::quant::LossScaler;
-use crate::runtime::executor::{literal_f32, scalar_f32, scalar_of, to_vec_f32};
-use crate::runtime::{Executor, Runtime};
 use crate::util::Rng;
 
 use super::agent::{Agent, StepStats};
-use super::network::ParamSet;
+use super::compute::A2cCompute;
 use super::rollout::{RolloutBuffer, RolloutStep};
 
 #[derive(Clone, Debug)]
@@ -30,12 +28,10 @@ impl A2cConfig {
     }
 }
 
-pub struct A2cAgent {
+/// Coordination shell around an [`A2cCompute`] backend.
+pub struct A2cAgent<C: A2cCompute> {
     cfg: A2cConfig,
-    act_exe: Arc<Executor>,
-    train_exe: Arc<Executor>,
-    params: ParamSet,
-    opt: Vec<xla::Literal>,
+    compute: C,
     rollout: RolloutBuffer,
     scaler: LossScaler,
     /// Cached policy outputs from the last `act` (reused in `observe`).
@@ -43,36 +39,10 @@ pub struct A2cAgent {
     train_steps: u64,
 }
 
-impl A2cAgent {
-    pub fn new(
-        runtime: &mut Runtime,
-        combo: &str,
-        mode: &str,
-        cfg: A2cConfig,
-        seed: u64,
-    ) -> Result<Self> {
-        let act_exe = runtime.load(&format!("{combo}_{mode}_act"))?;
-        let train_exe = runtime.load(&format!("{combo}_{mode}_train"))?;
-        let shapes = train_exe.spec().param_shapes();
-        let mut rng = Rng::new(seed ^ 0xA2C);
-        let params = ParamSet::init(&shapes, &mut rng)?;
-        let opt = ParamSet::opt_state(&shapes)?;
-        let scaled =
-            train_exe.spec().meta.get("scaled").and_then(|b| b.as_bool()).unwrap_or(false);
-        let scaler = if scaled { LossScaler::default() } else { LossScaler::disabled() };
+impl<C: A2cCompute> A2cAgent<C> {
+    pub fn from_parts(cfg: A2cConfig, compute: C, scaler: LossScaler) -> Self {
         let rollout = RolloutBuffer::new(cfg.horizon, cfg.gamma, cfg.gae_lambda);
-        Ok(A2cAgent { cfg, act_exe, train_exe, params, opt, rollout, scaler, last: None, train_steps: 0 })
-    }
-
-    fn policy(&self, obs: &[f32]) -> Result<(Vec<f32>, Vec<f32>, f32)> {
-        let obs_lit = literal_f32(obs, &[1, self.cfg.obs_dim])?;
-        let mut inputs: Vec<&xla::Literal> = self.params.tensors.iter().collect();
-        inputs.push(&obs_lit);
-        let outs = self.act_exe.run(&inputs)?;
-        let mean = to_vec_f32(&outs[0])?;
-        let log_std = to_vec_f32(&outs[1])?;
-        let value = scalar_of(&outs[2])?;
-        Ok((mean, log_std, value))
+        A2cAgent { cfg, compute, rollout, scaler, last: None, train_steps: 0 }
     }
 
     fn gaussian_logp(a: &[f32], mean: &[f32], log_std: &[f32]) -> f32 {
@@ -90,34 +60,18 @@ impl A2cAgent {
 
     fn train_rollout(&mut self, last_value: f32) -> Result<StepStats> {
         let batch = self.rollout.finish(last_value, true);
-        let bs = batch.size;
-        let scratch = [
-            literal_f32(&batch.obs, &[bs, self.cfg.obs_dim])?,
-            literal_f32(&batch.actions_f32, &[bs, self.cfg.act_dim])?,
-            literal_f32(&batch.returns, &[bs])?,
-            literal_f32(&batch.advantages, &[bs])?,
-            scalar_f32(self.scaler.scale())?,
-        ];
-        let mut inputs: Vec<&xla::Literal> = self.params.tensors.iter().collect();
-        inputs.extend(self.opt.iter());
-        inputs.extend(scratch.iter());
-        let mut outs = self.train_exe.run(&inputs)?;
-        let k = self.params.len();
-        let found_inf = scalar_of(&outs.pop().unwrap())? > 0.5;
-        let loss = scalar_of(&outs.pop().unwrap())?;
-        let opt = outs.split_off(k);
-        self.params.replace(outs);
-        self.opt = opt;
-        if self.scaler.update(found_inf) {
+        let scale_used = self.scaler.scale();
+        let out = self.compute.train(&batch, scale_used)?;
+        if self.scaler.update(out.found_inf) {
             self.train_steps += 1;
         }
-        Ok(StepStats { loss, found_inf, loss_scale: self.scaler.scale() })
+        Ok(StepStats { loss: out.loss, found_inf: out.found_inf, loss_scale: scale_used })
     }
 }
 
-impl Agent for A2cAgent {
+impl<C: A2cCompute> Agent for A2cAgent<C> {
     fn act(&mut self, obs: &[f32], rng: &mut Rng) -> Result<Action> {
-        let (mean, log_std, value) = self.policy(obs)?;
+        let (mean, log_std, value) = self.compute.policy(obs)?;
         let action: Vec<f32> = mean
             .iter()
             .zip(&log_std)
@@ -128,7 +82,7 @@ impl Agent for A2cAgent {
     }
 
     fn act_greedy(&mut self, obs: &[f32]) -> Result<Action> {
-        let (mean, _, _) = self.policy(obs)?;
+        let (mean, _, _) = self.compute.policy(obs)?;
         Ok(Action::Continuous(mean.iter().map(|m| m.clamp(-1.0, 1.0)).collect()))
     }
 
@@ -141,8 +95,10 @@ impl Agent for A2cAgent {
         done: bool,
         _rng: &mut Rng,
     ) -> Result<Option<StepStats>> {
-        let (mean, log_std, value) =
-            self.last.take().unwrap_or((vec![0.0; self.cfg.act_dim], vec![0.0; self.cfg.act_dim], 0.0));
+        let (mean, log_std, value) = self
+            .last
+            .take()
+            .unwrap_or((vec![0.0; self.cfg.act_dim], vec![0.0; self.cfg.act_dim], 0.0));
         let a = action.continuous();
         let logp = Self::gaussian_logp(a, &mean, &log_std);
         self.rollout.push(RolloutStep {
@@ -155,7 +111,7 @@ impl Agent for A2cAgent {
             done,
         });
         if self.rollout.full() {
-            let last_value = if done { 0.0 } else { self.policy(next_obs)?.2 };
+            let last_value = if done { 0.0 } else { self.compute.policy(next_obs)?.2 };
             return self.train_rollout(last_value).map(Some);
         }
         Ok(None)
@@ -163,5 +119,9 @@ impl Agent for A2cAgent {
 
     fn train_steps(&self) -> u64 {
         self.train_steps
+    }
+
+    fn exec_policy(&self) -> Option<&ExecPolicy> {
+        self.compute.exec_policy()
     }
 }

@@ -3,6 +3,7 @@
 use anyhow::Result;
 
 use crate::envs::Action;
+use crate::exec::ExecPolicy;
 use crate::util::Rng;
 
 /// Telemetry from one executed train step.
@@ -10,11 +11,14 @@ use crate::util::Rng;
 pub struct StepStats {
     pub loss: f32,
     pub found_inf: bool,
+    /// Loss scale *fed to* this step (pre-FSM-update), so consecutive
+    /// stats expose every FSM transition including the first backoff.
     pub loss_scale: f32,
 }
 
 /// A DRL agent: picks actions and learns from transitions.  All network
-/// math goes through PJRT artifacts; the implementations only coordinate.
+/// math goes through a compute backend ([`super::compute`]) — the CPU
+/// executor or the PJRT artifacts; the implementations only coordinate.
 pub trait Agent {
     /// Select an action for `obs` (exploration noise included).
     fn act(&mut self, obs: &[f32], rng: &mut Rng) -> Result<Action>;
@@ -36,4 +40,11 @@ pub trait Agent {
 
     /// Number of optimizer steps taken so far.
     fn train_steps(&self) -> u64;
+
+    /// The explicit precision routing of the backing compute, when it
+    /// has one (the CPU exec backend).  `None` for backends whose
+    /// formats are baked into lowered artifacts (PJRT).
+    fn exec_policy(&self) -> Option<&ExecPolicy> {
+        None
+    }
 }

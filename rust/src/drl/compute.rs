@@ -1,0 +1,71 @@
+//! Backend-agnostic per-algorithm compute interfaces.
+//!
+//! The agents in this module's siblings own all *coordination* —
+//! exploration schedules, replay/rollout buffers, target-sync cadence,
+//! the loss-scaling FSM — and delegate all *network math* to one of
+//! these traits.  Two families implement them:
+//!
+//! * the pure-Rust CPU executor ([`crate::exec::models`]), always
+//!   compiled, with the quantization policy live per layer;
+//! * the PJRT artifact executors ([`super::pjrt`], `pjrt` feature),
+//!   where the same math is a lowered XLA computation.
+//!
+//! A compute impl owns its parameters and optimizer state; `train`
+//! receives the batch plus the FSM's current loss scale and reports the
+//! (unscaled) loss and the overflow flag the FSM consumes.
+
+use anyhow::Result;
+
+use crate::exec::ExecPolicy;
+
+use super::replay::Batch;
+use super::rollout::RolloutBatch;
+
+/// One train step's compute-level outcome.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainOut {
+    /// Unscaled loss value (the primary loss for multi-loss algorithms).
+    pub loss: f32,
+    /// Scaled-gradient overflow was detected and the update skipped.
+    pub found_inf: bool,
+}
+
+/// Introspection shared by every compute backend.
+pub trait ComputeBackend {
+    /// The precision routing this backend executes under, when it is
+    /// explicit (the CPU executor).  PJRT artifacts keep their formats
+    /// baked into the lowered computation and return `None`.
+    fn exec_policy(&self) -> Option<&ExecPolicy> {
+        None
+    }
+}
+
+/// DQN: online/target Q-networks, one train step per sampled batch.
+pub trait DqnCompute: ComputeBackend {
+    /// Q-values for a single observation.
+    fn qvalues(&mut self, obs: &[f32]) -> Result<Vec<f32>>;
+    fn train(&mut self, batch: &Batch, loss_scale: f32) -> Result<TrainOut>;
+    /// Hard-sync the target network from the online one (agent-scheduled).
+    fn sync_target(&mut self) -> Result<()>;
+}
+
+/// A2C: Gaussian policy + value net over GAE rollouts.
+pub trait A2cCompute: ComputeBackend {
+    /// `(mean, log_std, value)` for a single observation.
+    fn policy(&mut self, obs: &[f32]) -> Result<(Vec<f32>, Vec<f32>, f32)>;
+    fn train(&mut self, batch: &RolloutBatch, loss_scale: f32) -> Result<TrainOut>;
+}
+
+/// DDPG: deterministic actor + Q critic with soft-updated targets.
+pub trait DdpgCompute: ComputeBackend {
+    /// Deterministic action for a single observation.
+    fn action(&mut self, obs: &[f32]) -> Result<Vec<f32>>;
+    fn train(&mut self, batch: &Batch, loss_scale: f32) -> Result<TrainOut>;
+}
+
+/// PPO: discrete actor-critic, clipped-surrogate epochs over one rollout.
+pub trait PpoCompute: ComputeBackend {
+    /// `(logits, value)` for a single observation.
+    fn policy(&mut self, obs: &[f32]) -> Result<(Vec<f32>, f32)>;
+    fn train(&mut self, batch: &RolloutBatch, loss_scale: f32) -> Result<TrainOut>;
+}

@@ -1,18 +1,16 @@
 //! DDPG agent: deterministic actor + Q critic with target networks and
-//! soft updates (inside the artifact), OU exploration noise at L3.
+//! soft updates (inside the compute backend), OU exploration noise here
+//! at the coordination layer.
 
-use std::sync::Arc;
-
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use crate::envs::Action;
+use crate::exec::ExecPolicy;
 use crate::quant::LossScaler;
-use crate::runtime::executor::{literal_f32, scalar_f32, scalar_of, to_vec_f32};
-use crate::runtime::{Executor, Runtime};
 use crate::util::Rng;
 
 use super::agent::{Agent, StepStats};
-use super::network::ParamSet;
+use super::compute::DdpgCompute;
 use super::replay::{ReplayBuffer, StoredAction};
 
 #[derive(Clone, Debug)]
@@ -43,16 +41,10 @@ impl DdpgConfig {
     }
 }
 
-pub struct DdpgAgent {
+/// Coordination shell around a [`DdpgCompute`] backend.
+pub struct DdpgAgent<C: DdpgCompute> {
     cfg: DdpgConfig,
-    act_exe: Arc<Executor>,
-    train_exe: Arc<Executor>,
-    actor: ParamSet,
-    critic: ParamSet,
-    t_actor: Vec<xla::Literal>,
-    t_critic: Vec<xla::Literal>,
-    opt_a: Vec<xla::Literal>,
-    opt_c: Vec<xla::Literal>,
+    compute: C,
     replay: ReplayBuffer,
     scaler: LossScaler,
     ou_state: Vec<f64>,
@@ -60,55 +52,11 @@ pub struct DdpgAgent {
     train_steps: u64,
 }
 
-impl DdpgAgent {
-    pub fn new(
-        runtime: &mut Runtime,
-        combo: &str,
-        mode: &str,
-        cfg: DdpgConfig,
-        seed: u64,
-    ) -> Result<Self> {
-        let act_exe = runtime.load(&format!("{combo}_{mode}_act"))?;
-        let train_exe = runtime.load(&format!("{combo}_{mode}_train"))?;
-        let spec = train_exe.spec();
-        let actor_shapes = meta_shapes(spec, "actor_shapes")?;
-        let critic_shapes = meta_shapes(spec, "critic_shapes")?;
-        let mut rng = Rng::new(seed ^ 0xDD96);
-        let actor = ParamSet::init(&actor_shapes, &mut rng)?;
-        let critic = ParamSet::init(&critic_shapes, &mut rng)?;
-        let t_actor = actor.clone_literals();
-        let t_critic = critic.clone_literals();
-        let opt_a = ParamSet::opt_state(&actor_shapes)?;
-        let opt_c = ParamSet::opt_state(&critic_shapes)?;
-        let scaled =
-            spec.meta.get("scaled").and_then(|b| b.as_bool()).unwrap_or(false);
-        let scaler = if scaled { LossScaler::default() } else { LossScaler::disabled() };
+impl<C: DdpgCompute> DdpgAgent<C> {
+    pub fn from_parts(cfg: DdpgConfig, compute: C, scaler: LossScaler) -> Self {
         let replay = ReplayBuffer::new(cfg.replay_capacity, cfg.obs_dim);
         let ou_state = vec![0.0; cfg.act_dim];
-        Ok(DdpgAgent {
-            cfg,
-            act_exe,
-            train_exe,
-            actor,
-            critic,
-            t_actor,
-            t_critic,
-            opt_a,
-            opt_c,
-            replay,
-            scaler,
-            ou_state,
-            env_steps: 0,
-            train_steps: 0,
-        })
-    }
-
-    fn policy(&self, obs: &[f32]) -> Result<Vec<f32>> {
-        let obs_lit = literal_f32(obs, &[1, self.cfg.obs_dim])?;
-        let mut inputs: Vec<&xla::Literal> = self.actor.tensors.iter().collect();
-        inputs.push(&obs_lit);
-        let outs = self.act_exe.run(&inputs)?;
-        to_vec_f32(&outs[0])
+        DdpgAgent { cfg, compute, replay, scaler, ou_state, env_steps: 0, train_steps: 0 }
     }
 
     fn ou_noise(&mut self, rng: &mut Rng) -> Vec<f64> {
@@ -119,72 +67,20 @@ impl DdpgAgent {
     }
 
     fn train_batch(&mut self, rng: &mut Rng) -> Result<StepStats> {
-        let bs = self.cfg.batch;
-        let batch = self.replay.sample(bs, rng);
-        let scratch = [
-            literal_f32(&batch.obs, &[bs, self.cfg.obs_dim])?,
-            literal_f32(&batch.actions_f32, &[bs, self.cfg.act_dim])?,
-            literal_f32(&batch.rewards, &[bs])?,
-            literal_f32(&batch.next_obs, &[bs, self.cfg.obs_dim])?,
-            literal_f32(&batch.dones, &[bs])?,
-            scalar_f32(self.scaler.scale())?,
-        ];
-        let mut inputs: Vec<&xla::Literal> = self.actor.tensors.iter().collect();
-        inputs.extend(self.critic.tensors.iter());
-        inputs.extend(self.t_actor.iter());
-        inputs.extend(self.t_critic.iter());
-        inputs.extend(self.opt_a.iter());
-        inputs.extend(self.opt_c.iter());
-        inputs.extend(scratch.iter());
-        let mut outs = self.train_exe.run(&inputs)?;
-        // outputs: actor, critic, t_actor, t_critic, opt_a, opt_c,
-        //          closs, aloss, found_inf
-        let ka = self.actor.len();
-        let kc = self.critic.len();
-        let found_inf = scalar_of(&outs.pop().unwrap())? > 0.5;
-        let _aloss = scalar_of(&outs.pop().unwrap())?;
-        let closs = scalar_of(&outs.pop().unwrap())?;
-        let opt_c = outs.split_off(outs.len() - (2 * kc + 1));
-        let opt_a = outs.split_off(outs.len() - (2 * ka + 1));
-        let t_critic = outs.split_off(outs.len() - kc);
-        let t_actor = outs.split_off(outs.len() - ka);
-        let critic = outs.split_off(ka);
-        self.actor.replace(outs);
-        self.critic.replace(critic);
-        self.t_actor = t_actor;
-        self.t_critic = t_critic;
-        self.opt_a = opt_a;
-        self.opt_c = opt_c;
-        if self.scaler.update(found_inf) {
+        let batch = self.replay.sample(self.cfg.batch, rng);
+        let scale_used = self.scaler.scale();
+        let out = self.compute.train(&batch, scale_used)?;
+        if self.scaler.update(out.found_inf) {
             self.train_steps += 1;
         }
-        Ok(StepStats { loss: closs, found_inf, loss_scale: self.scaler.scale() })
+        Ok(StepStats { loss: out.loss, found_inf: out.found_inf, loss_scale: scale_used })
     }
 }
 
-fn meta_shapes(
-    spec: &crate::runtime::ArtifactSpec,
-    key: &str,
-) -> Result<Vec<Vec<usize>>> {
-    let arr = spec
-        .meta
-        .get(key)
-        .and_then(|v| v.as_arr())
-        .ok_or_else(|| anyhow!("artifact {}: missing {key}", spec.name))?;
-    Ok(arr
-        .iter()
-        .map(|sh| {
-            sh.as_arr()
-                .map(|d| d.iter().filter_map(|x| x.as_usize()).collect())
-                .unwrap_or_default()
-        })
-        .collect())
-}
-
-impl Agent for DdpgAgent {
+impl<C: DdpgCompute> Agent for DdpgAgent<C> {
     fn act(&mut self, obs: &[f32], rng: &mut Rng) -> Result<Action> {
         self.env_steps += 1;
-        let mut a = self.policy(obs)?;
+        let mut a = self.compute.action(obs)?;
         let noise = self.ou_noise(rng);
         for (ai, ni) in a.iter_mut().zip(noise) {
             *ai = (*ai + ni as f32).clamp(-1.0, 1.0);
@@ -193,7 +89,7 @@ impl Agent for DdpgAgent {
     }
 
     fn act_greedy(&mut self, obs: &[f32]) -> Result<Action> {
-        Ok(Action::Continuous(self.policy(obs)?))
+        Ok(Action::Continuous(self.compute.action(obs)?))
     }
 
     fn observe(
@@ -225,5 +121,9 @@ impl Agent for DdpgAgent {
 
     fn train_steps(&self) -> u64 {
         self.train_steps
+    }
+
+    fn exec_policy(&self) -> Option<&ExecPolicy> {
+        self.compute.exec_policy()
     }
 }

@@ -1,24 +1,23 @@
 //! DQN agent (paper Eq. 1): ε-greedy exploration, uniform replay,
-//! periodic target-network sync, train step via the `<combo>_<mode>_train`
-//! artifact.  Works for both MLP (CartPole) and conv (mini-Breakout)
-//! combos — the artifact signature is identical.
+//! periodic target-network sync, loss-scaling FSM.  All network math is
+//! delegated to a [`DqnCompute`] backend — the CPU executor
+//! ([`crate::exec::models::CpuDqn`], always available) or the PJRT
+//! artifacts ([`super::pjrt`], `pjrt` feature).  Works for both MLP
+//! (CartPole) and conv (mini-Breakout) combos.
 
-use std::sync::Arc;
-
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use crate::envs::Action;
+use crate::exec::ExecPolicy;
 use crate::quant::LossScaler;
-use crate::runtime::executor::{literal_f32, literal_i32, scalar_f32, scalar_of, to_vec_f32};
-use crate::runtime::{Executor, Runtime};
 use crate::util::Rng;
 
 use super::agent::{Agent, StepStats};
-use super::network::ParamSet;
+use super::compute::DqnCompute;
 use super::replay::{ReplayBuffer, StoredAction};
 
-/// DQN hyper-parameters (coordinator-side; lr/γ are baked into the
-/// artifact).
+/// DQN hyper-parameters (coordinator-side; the compute backend owns
+/// lr/γ).
 #[derive(Clone, Debug)]
 pub struct DqnConfig {
     pub batch: usize,
@@ -49,57 +48,27 @@ impl DqnConfig {
         }
     }
 
-    fn obs_dim(&self) -> usize {
+    pub(crate) fn obs_dim(&self) -> usize {
         self.obs_shape.iter().product()
     }
 }
 
-pub struct DqnAgent {
+/// Coordination shell around a [`DqnCompute`] backend.
+pub struct DqnAgent<C: DqnCompute> {
     cfg: DqnConfig,
-    act_exe: Arc<Executor>,
-    train_exe: Arc<Executor>,
-    params: ParamSet,
-    target: Vec<xla::Literal>,
-    opt: Vec<xla::Literal>,
+    compute: C,
     replay: ReplayBuffer,
     scaler: LossScaler,
     env_steps: u64,
     train_steps: u64,
 }
 
-impl DqnAgent {
-    /// Build from artifacts `<combo>_<mode>_{act,train}`.
-    pub fn new(runtime: &mut Runtime, combo: &str, mode: &str, cfg: DqnConfig, seed: u64) -> Result<Self> {
-        let act_exe = runtime.load(&format!("{combo}_{mode}_act"))?;
-        let train_exe = runtime.load(&format!("{combo}_{mode}_train"))?;
-        let shapes = train_exe.spec().param_shapes();
-        if shapes.is_empty() {
-            return Err(anyhow!("artifact {combo}_{mode}_train has no param_shapes meta"));
-        }
-        let mut rng = Rng::new(seed ^ 0xD09);
-        let params = ParamSet::init(&shapes, &mut rng)?;
-        let target = params.clone_literals();
-        let opt = ParamSet::opt_state(&shapes)?;
-        let scaled = train_exe
-            .spec()
-            .meta
-            .get("scaled")
-            .and_then(|b| b.as_bool())
-            .unwrap_or(false);
-        let scaler = if scaled { LossScaler::default() } else { LossScaler::disabled() };
+impl<C: DqnCompute> DqnAgent<C> {
+    /// Assemble from a ready compute backend and an armed (or disabled)
+    /// loss scaler.
+    pub fn from_parts(cfg: DqnConfig, compute: C, scaler: LossScaler) -> Self {
         let replay = ReplayBuffer::new(cfg.replay_capacity, cfg.obs_dim());
-        Ok(DqnAgent {
-            cfg,
-            act_exe,
-            train_exe,
-            params,
-            target,
-            opt,
-            replay,
-            scaler,
-            env_steps: 0,
-            train_steps: 0,
-        })
+        DqnAgent { cfg, compute, replay, scaler, env_steps: 0, train_steps: 0 }
     }
 
     fn epsilon(&self) -> f64 {
@@ -107,53 +76,22 @@ impl DqnAgent {
         self.cfg.eps_start + (self.cfg.eps_end - self.cfg.eps_start) * frac
     }
 
-    fn qvalues(&self, obs: &[f32]) -> Result<Vec<f32>> {
-        let mut shape = vec![1usize];
-        shape.extend(&self.cfg.obs_shape);
-        let obs_lit = literal_f32(obs, &shape)?;
-        let mut inputs: Vec<&xla::Literal> = self.params.tensors.iter().collect();
-        inputs.push(&obs_lit);
-        let outs = self.act_exe.run(&inputs)?;
-        to_vec_f32(&outs[0])
-    }
-
     fn train_batch(&mut self, rng: &mut Rng) -> Result<StepStats> {
-        let bs = self.cfg.batch;
-        let batch = self.replay.sample(bs, rng);
-        let mut obs_shape = vec![bs];
-        obs_shape.extend(&self.cfg.obs_shape);
-        let scratch = [
-            literal_f32(&batch.obs, &obs_shape)?,
-            literal_i32(&batch.actions_i32, &[bs])?,
-            literal_f32(&batch.rewards, &[bs])?,
-            literal_f32(&batch.next_obs, &obs_shape)?,
-            literal_f32(&batch.dones, &[bs])?,
-            scalar_f32(self.scaler.scale())?,
-        ];
-        let mut inputs: Vec<&xla::Literal> = self.params.tensors.iter().collect();
-        inputs.extend(self.target.iter());
-        inputs.extend(self.opt.iter());
-        inputs.extend(scratch.iter());
-        let mut outs = self.train_exe.run(&inputs)?;
-        // outputs: params(k), opt(2k+1), loss, found_inf
-        let k = self.params.len();
-        let found_inf = scalar_of(&outs.pop().unwrap())? > 0.5;
-        let loss = scalar_of(&outs.pop().unwrap())?;
-        let opt = outs.split_off(k);
-        self.params.replace(outs);
-        self.opt = opt;
-        let applied = self.scaler.update(found_inf);
+        let batch = self.replay.sample(self.cfg.batch, rng);
+        let scale_used = self.scaler.scale();
+        let out = self.compute.train(&batch, scale_used)?;
+        let applied = self.scaler.update(out.found_inf);
         if applied {
             self.train_steps += 1;
             if self.train_steps % self.cfg.target_sync_every == 0 {
-                self.target = self.params.clone_literals();
+                self.compute.sync_target()?;
             }
         }
-        Ok(StepStats { loss, found_inf, loss_scale: self.scaler.scale() })
+        Ok(StepStats { loss: out.loss, found_inf: out.found_inf, loss_scale: scale_used })
     }
 }
 
-impl Agent for DqnAgent {
+impl<C: DqnCompute> Agent for DqnAgent<C> {
     fn act(&mut self, obs: &[f32], rng: &mut Rng) -> Result<Action> {
         self.env_steps += 1;
         if rng.uniform() < self.epsilon() {
@@ -163,11 +101,11 @@ impl Agent for DqnAgent {
     }
 
     fn act_greedy(&mut self, obs: &[f32]) -> Result<Action> {
-        let q = self.qvalues(obs)?;
+        let q = self.compute.qvalues(obs)?;
         let best = q
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i)
             .unwrap_or(0);
         Ok(Action::Discrete(best))
@@ -198,5 +136,9 @@ impl Agent for DqnAgent {
 
     fn train_steps(&self) -> u64 {
         self.train_steps
+    }
+
+    fn exec_policy(&self) -> Option<&ExecPolicy> {
+        self.compute.exec_policy()
     }
 }

@@ -1,28 +1,28 @@
 //! DRL agents (paper §II-A / Fig 1): the Inference → Environment Step →
-//! Train loop, with all network compute executed through the PJRT
-//! artifacts (L2/L1) and all coordination (exploration, replay, GAE,
-//! target-network schedule, loss-scaling FSM) here at L3.
+//! Train loop, with all coordination (exploration, replay, GAE,
+//! target-network schedule, loss-scaling FSM) here and all network
+//! compute behind the per-algorithm [`compute`] traits.
 //!
-//! The agent implementations and parameter marshaling execute PJRT
-//! artifacts, so they are gated behind the **`pjrt`** feature; the pure
-//! coordination substrates ([`agent`] trait, [`replay`], [`rollout`])
-//! are always available.
+//! Two compute families implement those traits: the always-available
+//! pure-Rust CPU executor ([`crate::exec::models`]) and the PJRT
+//! artifact executors ([`pjrt`], gated behind the **`pjrt`** feature
+//! together with the parameter marshaling in [`network`]).
 
-#[cfg(feature = "pjrt")]
 pub mod a2c;
 pub mod agent;
-#[cfg(feature = "pjrt")]
+pub mod compute;
 pub mod ddpg;
-#[cfg(feature = "pjrt")]
 pub mod dqn;
 #[cfg(feature = "pjrt")]
 pub mod network;
 #[cfg(feature = "pjrt")]
+pub mod pjrt;
 pub mod ppo;
 pub mod replay;
 pub mod rollout;
 
 pub use agent::{Agent, StepStats};
+pub use compute::{A2cCompute, ComputeBackend, DdpgCompute, DqnCompute, PpoCompute, TrainOut};
 #[cfg(feature = "pjrt")]
 pub use network::ParamSet;
 pub use replay::ReplayBuffer;

@@ -1,0 +1,426 @@
+//! PJRT implementations of the per-algorithm compute traits: parameter
+//! marshaling ([`super::network::ParamSet`]) + artifact invocation, with
+//! the exact input/output conventions of `python/compile/trainstep.py`.
+//!
+//! Only compiled with the **`pjrt`** feature (needs the external `xla`
+//! bindings and `make artifacts`).  The factory functions at the bottom
+//! assemble full agents: they read the artifact's `scaled` metadata to
+//! arm or disable the loss-scaling FSM, then wrap the compute in the
+//! always-compiled coordination shells (`DqnAgent`, …).
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::quant::LossScaler;
+use crate::runtime::executor::{literal_f32, literal_i32, scalar_f32, scalar_of, to_vec_f32};
+use crate::runtime::{Executor, Runtime};
+use crate::util::Rng;
+
+use super::a2c::{A2cAgent, A2cConfig};
+use super::compute::{A2cCompute, ComputeBackend, DdpgCompute, DqnCompute, PpoCompute, TrainOut};
+use super::ddpg::{DdpgAgent, DdpgConfig};
+use super::dqn::{DqnAgent, DqnConfig};
+use super::network::ParamSet;
+use super::ppo::{PpoAgent, PpoConfig};
+use super::replay::Batch;
+use super::rollout::RolloutBatch;
+
+fn scaler_from_meta(exe: &Executor) -> LossScaler {
+    let scaled = exe.spec().meta.get("scaled").and_then(|b| b.as_bool()).unwrap_or(false);
+    if scaled {
+        LossScaler::default()
+    } else {
+        LossScaler::disabled()
+    }
+}
+
+fn meta_shapes(spec: &crate::runtime::ArtifactSpec, key: &str) -> Result<Vec<Vec<usize>>> {
+    let arr = spec
+        .meta
+        .get(key)
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("artifact {}: missing {key}", spec.name))?;
+    Ok(arr
+        .iter()
+        .map(|sh| {
+            sh.as_arr()
+                .map(|d| d.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default()
+        })
+        .collect())
+}
+
+// ---------------------------------------------------------------- DQN --
+
+/// DQN compute over `<combo>_<mode>_{act,train}` artifacts.
+pub struct PjrtDqn {
+    act_exe: Arc<Executor>,
+    train_exe: Arc<Executor>,
+    params: ParamSet,
+    target: Vec<xla::Literal>,
+    opt: Vec<xla::Literal>,
+    obs_shape: Vec<usize>,
+}
+
+impl PjrtDqn {
+    pub fn new(
+        runtime: &mut Runtime,
+        combo: &str,
+        mode: &str,
+        obs_shape: Vec<usize>,
+        seed: u64,
+    ) -> Result<Self> {
+        let act_exe = runtime.load(&format!("{combo}_{mode}_act"))?;
+        let train_exe = runtime.load(&format!("{combo}_{mode}_train"))?;
+        let shapes = train_exe.spec().param_shapes();
+        if shapes.is_empty() {
+            return Err(anyhow!("artifact {combo}_{mode}_train has no param_shapes meta"));
+        }
+        let mut rng = Rng::new(seed ^ 0xD09);
+        let params = ParamSet::init(&shapes, &mut rng)?;
+        let target = params.clone_literals();
+        let opt = ParamSet::opt_state(&shapes)?;
+        Ok(PjrtDqn { act_exe, train_exe, params, target, opt, obs_shape })
+    }
+}
+
+impl ComputeBackend for PjrtDqn {}
+
+impl DqnCompute for PjrtDqn {
+    fn qvalues(&mut self, obs: &[f32]) -> Result<Vec<f32>> {
+        let mut shape = vec![1usize];
+        shape.extend(&self.obs_shape);
+        let obs_lit = literal_f32(obs, &shape)?;
+        let mut inputs: Vec<&xla::Literal> = self.params.tensors.iter().collect();
+        inputs.push(&obs_lit);
+        let outs = self.act_exe.run(&inputs)?;
+        to_vec_f32(&outs[0])
+    }
+
+    fn train(&mut self, batch: &Batch, loss_scale: f32) -> Result<TrainOut> {
+        let bs = batch.size;
+        let mut obs_shape = vec![bs];
+        obs_shape.extend(&self.obs_shape);
+        let scratch = [
+            literal_f32(&batch.obs, &obs_shape)?,
+            literal_i32(&batch.actions_i32, &[bs])?,
+            literal_f32(&batch.rewards, &[bs])?,
+            literal_f32(&batch.next_obs, &obs_shape)?,
+            literal_f32(&batch.dones, &[bs])?,
+            scalar_f32(loss_scale)?,
+        ];
+        let mut inputs: Vec<&xla::Literal> = self.params.tensors.iter().collect();
+        inputs.extend(self.target.iter());
+        inputs.extend(self.opt.iter());
+        inputs.extend(scratch.iter());
+        let mut outs = self.train_exe.run(&inputs)?;
+        // outputs: params(k), opt(2k+1), loss, found_inf
+        let k = self.params.len();
+        let found_inf = scalar_of(&outs.pop().unwrap())? > 0.5;
+        let loss = scalar_of(&outs.pop().unwrap())?;
+        let opt = outs.split_off(k);
+        self.params.replace(outs);
+        self.opt = opt;
+        Ok(TrainOut { loss, found_inf })
+    }
+
+    fn sync_target(&mut self) -> Result<()> {
+        self.target = self.params.clone_literals();
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------- A2C --
+
+/// A2C compute over `<combo>_<mode>_{act,train}` artifacts.
+pub struct PjrtA2c {
+    act_exe: Arc<Executor>,
+    train_exe: Arc<Executor>,
+    params: ParamSet,
+    opt: Vec<xla::Literal>,
+    obs_dim: usize,
+    act_dim: usize,
+}
+
+impl PjrtA2c {
+    pub fn new(
+        runtime: &mut Runtime,
+        combo: &str,
+        mode: &str,
+        obs_dim: usize,
+        act_dim: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        let act_exe = runtime.load(&format!("{combo}_{mode}_act"))?;
+        let train_exe = runtime.load(&format!("{combo}_{mode}_train"))?;
+        let shapes = train_exe.spec().param_shapes();
+        let mut rng = Rng::new(seed ^ 0xA2C);
+        let params = ParamSet::init(&shapes, &mut rng)?;
+        let opt = ParamSet::opt_state(&shapes)?;
+        Ok(PjrtA2c { act_exe, train_exe, params, opt, obs_dim, act_dim })
+    }
+}
+
+impl ComputeBackend for PjrtA2c {}
+
+impl A2cCompute for PjrtA2c {
+    fn policy(&mut self, obs: &[f32]) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        let obs_lit = literal_f32(obs, &[1, self.obs_dim])?;
+        let mut inputs: Vec<&xla::Literal> = self.params.tensors.iter().collect();
+        inputs.push(&obs_lit);
+        let outs = self.act_exe.run(&inputs)?;
+        let mean = to_vec_f32(&outs[0])?;
+        let log_std = to_vec_f32(&outs[1])?;
+        let value = scalar_of(&outs[2])?;
+        Ok((mean, log_std, value))
+    }
+
+    fn train(&mut self, batch: &RolloutBatch, loss_scale: f32) -> Result<TrainOut> {
+        let bs = batch.size;
+        let scratch = [
+            literal_f32(&batch.obs, &[bs, self.obs_dim])?,
+            literal_f32(&batch.actions_f32, &[bs, self.act_dim])?,
+            literal_f32(&batch.returns, &[bs])?,
+            literal_f32(&batch.advantages, &[bs])?,
+            scalar_f32(loss_scale)?,
+        ];
+        let mut inputs: Vec<&xla::Literal> = self.params.tensors.iter().collect();
+        inputs.extend(self.opt.iter());
+        inputs.extend(scratch.iter());
+        let mut outs = self.train_exe.run(&inputs)?;
+        let k = self.params.len();
+        let found_inf = scalar_of(&outs.pop().unwrap())? > 0.5;
+        let loss = scalar_of(&outs.pop().unwrap())?;
+        let opt = outs.split_off(k);
+        self.params.replace(outs);
+        self.opt = opt;
+        Ok(TrainOut { loss, found_inf })
+    }
+}
+
+// --------------------------------------------------------------- DDPG --
+
+/// DDPG compute over `<combo>_<mode>_{act,train}` artifacts; the
+/// artifact owns the target networks' soft updates.
+pub struct PjrtDdpg {
+    act_exe: Arc<Executor>,
+    train_exe: Arc<Executor>,
+    actor: ParamSet,
+    critic: ParamSet,
+    t_actor: Vec<xla::Literal>,
+    t_critic: Vec<xla::Literal>,
+    opt_a: Vec<xla::Literal>,
+    opt_c: Vec<xla::Literal>,
+    obs_dim: usize,
+    act_dim: usize,
+}
+
+impl PjrtDdpg {
+    pub fn new(
+        runtime: &mut Runtime,
+        combo: &str,
+        mode: &str,
+        obs_dim: usize,
+        act_dim: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        let act_exe = runtime.load(&format!("{combo}_{mode}_act"))?;
+        let train_exe = runtime.load(&format!("{combo}_{mode}_train"))?;
+        let spec = train_exe.spec();
+        let actor_shapes = meta_shapes(spec, "actor_shapes")?;
+        let critic_shapes = meta_shapes(spec, "critic_shapes")?;
+        let mut rng = Rng::new(seed ^ 0xDD96);
+        let actor = ParamSet::init(&actor_shapes, &mut rng)?;
+        let critic = ParamSet::init(&critic_shapes, &mut rng)?;
+        let t_actor = actor.clone_literals();
+        let t_critic = critic.clone_literals();
+        let opt_a = ParamSet::opt_state(&actor_shapes)?;
+        let opt_c = ParamSet::opt_state(&critic_shapes)?;
+        Ok(PjrtDdpg {
+            act_exe,
+            train_exe,
+            actor,
+            critic,
+            t_actor,
+            t_critic,
+            opt_a,
+            opt_c,
+            obs_dim,
+            act_dim,
+        })
+    }
+}
+
+impl ComputeBackend for PjrtDdpg {}
+
+impl DdpgCompute for PjrtDdpg {
+    fn action(&mut self, obs: &[f32]) -> Result<Vec<f32>> {
+        let obs_lit = literal_f32(obs, &[1, self.obs_dim])?;
+        let mut inputs: Vec<&xla::Literal> = self.actor.tensors.iter().collect();
+        inputs.push(&obs_lit);
+        let outs = self.act_exe.run(&inputs)?;
+        to_vec_f32(&outs[0])
+    }
+
+    fn train(&mut self, batch: &Batch, loss_scale: f32) -> Result<TrainOut> {
+        let bs = batch.size;
+        let scratch = [
+            literal_f32(&batch.obs, &[bs, self.obs_dim])?,
+            literal_f32(&batch.actions_f32, &[bs, self.act_dim])?,
+            literal_f32(&batch.rewards, &[bs])?,
+            literal_f32(&batch.next_obs, &[bs, self.obs_dim])?,
+            literal_f32(&batch.dones, &[bs])?,
+            scalar_f32(loss_scale)?,
+        ];
+        let mut inputs: Vec<&xla::Literal> = self.actor.tensors.iter().collect();
+        inputs.extend(self.critic.tensors.iter());
+        inputs.extend(self.t_actor.iter());
+        inputs.extend(self.t_critic.iter());
+        inputs.extend(self.opt_a.iter());
+        inputs.extend(self.opt_c.iter());
+        inputs.extend(scratch.iter());
+        let mut outs = self.train_exe.run(&inputs)?;
+        // outputs: actor, critic, t_actor, t_critic, opt_a, opt_c,
+        //          closs, aloss, found_inf
+        let ka = self.actor.len();
+        let kc = self.critic.len();
+        let found_inf = scalar_of(&outs.pop().unwrap())? > 0.5;
+        let _aloss = scalar_of(&outs.pop().unwrap())?;
+        let closs = scalar_of(&outs.pop().unwrap())?;
+        let opt_c = outs.split_off(outs.len() - (2 * kc + 1));
+        let opt_a = outs.split_off(outs.len() - (2 * ka + 1));
+        let t_critic = outs.split_off(outs.len() - kc);
+        let t_actor = outs.split_off(outs.len() - ka);
+        let critic = outs.split_off(ka);
+        self.actor.replace(outs);
+        self.critic.replace(critic);
+        self.t_actor = t_actor;
+        self.t_critic = t_critic;
+        self.opt_a = opt_a;
+        self.opt_c = opt_c;
+        Ok(TrainOut { loss: closs, found_inf })
+    }
+}
+
+// ---------------------------------------------------------------- PPO --
+
+/// PPO compute over `<combo>_<mode>_{act,train}` artifacts.
+pub struct PjrtPpo {
+    act_exe: Arc<Executor>,
+    train_exe: Arc<Executor>,
+    params: ParamSet,
+    opt: Vec<xla::Literal>,
+    obs_shape: Vec<usize>,
+}
+
+impl PjrtPpo {
+    pub fn new(
+        runtime: &mut Runtime,
+        combo: &str,
+        mode: &str,
+        obs_shape: Vec<usize>,
+        seed: u64,
+    ) -> Result<Self> {
+        let act_exe = runtime.load(&format!("{combo}_{mode}_act"))?;
+        let train_exe = runtime.load(&format!("{combo}_{mode}_train"))?;
+        let shapes = train_exe.spec().param_shapes();
+        let mut rng = Rng::new(seed ^ 0x990);
+        let params = ParamSet::init(&shapes, &mut rng)?;
+        let opt = ParamSet::opt_state(&shapes)?;
+        Ok(PjrtPpo { act_exe, train_exe, params, opt, obs_shape })
+    }
+}
+
+impl ComputeBackend for PjrtPpo {}
+
+impl PpoCompute for PjrtPpo {
+    fn policy(&mut self, obs: &[f32]) -> Result<(Vec<f32>, f32)> {
+        let mut shape = vec![1usize];
+        shape.extend(&self.obs_shape);
+        let obs_lit = literal_f32(obs, &shape)?;
+        let mut inputs: Vec<&xla::Literal> = self.params.tensors.iter().collect();
+        inputs.push(&obs_lit);
+        let outs = self.act_exe.run(&inputs)?;
+        Ok((to_vec_f32(&outs[0])?, scalar_of(&outs[1])?))
+    }
+
+    fn train(&mut self, batch: &RolloutBatch, loss_scale: f32) -> Result<TrainOut> {
+        let bs = batch.size;
+        let mut obs_shape = vec![bs];
+        obs_shape.extend(&self.obs_shape);
+        let scratch = [
+            literal_f32(&batch.obs, &obs_shape)?,
+            literal_i32(&batch.actions_i32, &[bs])?,
+            literal_f32(&batch.logp_old, &[bs])?,
+            literal_f32(&batch.returns, &[bs])?,
+            literal_f32(&batch.advantages, &[bs])?,
+            scalar_f32(loss_scale)?,
+        ];
+        let mut inputs: Vec<&xla::Literal> = self.params.tensors.iter().collect();
+        inputs.extend(self.opt.iter());
+        inputs.extend(scratch.iter());
+        let mut outs = self.train_exe.run(&inputs)?;
+        let k = self.params.len();
+        let found_inf = scalar_of(&outs.pop().unwrap())? > 0.5;
+        let loss = scalar_of(&outs.pop().unwrap())?;
+        let opt = outs.split_off(k);
+        self.params.replace(outs);
+        self.opt = opt;
+        Ok(TrainOut { loss, found_inf })
+    }
+}
+
+// ----------------------------------------------------------- factories --
+
+/// Full DQN agent on the PJRT backend (`scaled` meta arms the FSM).
+pub fn dqn_agent(
+    runtime: &mut Runtime,
+    combo: &str,
+    mode: &str,
+    cfg: DqnConfig,
+    seed: u64,
+) -> Result<DqnAgent<PjrtDqn>> {
+    let compute = PjrtDqn::new(runtime, combo, mode, cfg.obs_shape.clone(), seed)?;
+    let scaler = scaler_from_meta(&compute.train_exe);
+    Ok(DqnAgent::from_parts(cfg, compute, scaler))
+}
+
+/// Full A2C agent on the PJRT backend.
+pub fn a2c_agent(
+    runtime: &mut Runtime,
+    combo: &str,
+    mode: &str,
+    cfg: A2cConfig,
+    seed: u64,
+) -> Result<A2cAgent<PjrtA2c>> {
+    let compute = PjrtA2c::new(runtime, combo, mode, cfg.obs_dim, cfg.act_dim, seed)?;
+    let scaler = scaler_from_meta(&compute.train_exe);
+    Ok(A2cAgent::from_parts(cfg, compute, scaler))
+}
+
+/// Full DDPG agent on the PJRT backend.
+pub fn ddpg_agent(
+    runtime: &mut Runtime,
+    combo: &str,
+    mode: &str,
+    cfg: DdpgConfig,
+    seed: u64,
+) -> Result<DdpgAgent<PjrtDdpg>> {
+    let compute = PjrtDdpg::new(runtime, combo, mode, cfg.obs_dim, cfg.act_dim, seed)?;
+    let scaler = scaler_from_meta(&compute.train_exe);
+    Ok(DdpgAgent::from_parts(cfg, compute, scaler))
+}
+
+/// Full PPO agent on the PJRT backend.
+pub fn ppo_agent(
+    runtime: &mut Runtime,
+    combo: &str,
+    mode: &str,
+    cfg: PpoConfig,
+    seed: u64,
+) -> Result<PpoAgent<PjrtPpo>> {
+    let compute = PjrtPpo::new(runtime, combo, mode, cfg.obs_shape.clone(), seed)?;
+    let scaler = scaler_from_meta(&compute.train_exe);
+    Ok(PpoAgent::from_parts(cfg, compute, scaler))
+}

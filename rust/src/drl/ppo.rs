@@ -1,19 +1,16 @@
-//! PPO agent (discrete, conv actor-critic with shared trunk):
-//! clipped-surrogate updates from GAE rollouts; categorical sampling and
-//! log-probabilities at L3.
-
-use std::sync::Arc;
+//! PPO agent (discrete actor-critic): clipped-surrogate updates from GAE
+//! rollouts; categorical sampling and log-probabilities here, network
+//! math in a [`PpoCompute`] backend.
 
 use anyhow::Result;
 
 use crate::envs::Action;
+use crate::exec::ExecPolicy;
 use crate::quant::LossScaler;
-use crate::runtime::executor::{literal_f32, literal_i32, scalar_f32, scalar_of, to_vec_f32};
-use crate::runtime::{Executor, Runtime};
 use crate::util::Rng;
 
 use super::agent::{Agent, StepStats};
-use super::network::ParamSet;
+use super::compute::PpoCompute;
 use super::rollout::{RolloutBuffer, RolloutStep};
 
 #[derive(Clone, Debug)]
@@ -34,47 +31,20 @@ impl PpoConfig {
     }
 }
 
-pub struct PpoAgent {
+/// Coordination shell around a [`PpoCompute`] backend.
+pub struct PpoAgent<C: PpoCompute> {
     cfg: PpoConfig,
-    act_exe: Arc<Executor>,
-    train_exe: Arc<Executor>,
-    params: ParamSet,
-    opt: Vec<xla::Literal>,
+    compute: C,
     rollout: RolloutBuffer,
     scaler: LossScaler,
-    last: Option<(Vec<f32>, f32)>, // (logits, value) from act()
+    last: Option<(Vec<f32>, f32)>, // (log-probs, value) from act()
     train_steps: u64,
 }
 
-impl PpoAgent {
-    pub fn new(
-        runtime: &mut Runtime,
-        combo: &str,
-        mode: &str,
-        cfg: PpoConfig,
-        seed: u64,
-    ) -> Result<Self> {
-        let act_exe = runtime.load(&format!("{combo}_{mode}_act"))?;
-        let train_exe = runtime.load(&format!("{combo}_{mode}_train"))?;
-        let shapes = train_exe.spec().param_shapes();
-        let mut rng = Rng::new(seed ^ 0x990);
-        let params = ParamSet::init(&shapes, &mut rng)?;
-        let opt = ParamSet::opt_state(&shapes)?;
-        let scaled =
-            train_exe.spec().meta.get("scaled").and_then(|b| b.as_bool()).unwrap_or(false);
-        let scaler = if scaled { LossScaler::default() } else { LossScaler::disabled() };
+impl<C: PpoCompute> PpoAgent<C> {
+    pub fn from_parts(cfg: PpoConfig, compute: C, scaler: LossScaler) -> Self {
         let rollout = RolloutBuffer::new(cfg.horizon, cfg.gamma, cfg.gae_lambda);
-        Ok(PpoAgent { cfg, act_exe, train_exe, params, opt, rollout, scaler, last: None, train_steps: 0 })
-    }
-
-    fn policy(&self, obs: &[f32]) -> Result<(Vec<f32>, f32)> {
-        let mut shape = vec![1usize];
-        shape.extend(&self.cfg.obs_shape);
-        let obs_lit = literal_f32(obs, &shape)?;
-        let mut inputs: Vec<&xla::Literal> = self.params.tensors.iter().collect();
-        inputs.push(&obs_lit);
-        let outs = self.act_exe.run(&inputs)?;
-        Ok((to_vec_f32(&outs[0])?, scalar_of(&outs[1])?))
+        PpoAgent { cfg, compute, rollout, scaler, last: None, train_steps: 0 }
     }
 
     fn log_softmax(logits: &[f32]) -> Vec<f32> {
@@ -83,43 +53,33 @@ impl PpoAgent {
         logits.iter().map(|l| l - logz).collect()
     }
 
+    /// Run `epochs` optimizer steps over one finished rollout.  The
+    /// returned stats aggregate the epochs: `found_inf` is true when
+    /// *any* epoch overflowed (so `RunMetrics::overflows` counts
+    /// rollouts with at least one overflow), `loss_scale` is the scale
+    /// fed to the first epoch (consecutive rollouts therefore expose
+    /// every inter-rollout FSM transition, including the first
+    /// backoff), and `loss` is the final epoch's.
     fn train_rollout(&mut self, last_value: f32) -> Result<StepStats> {
         let batch = self.rollout.finish(last_value, true);
-        let bs = batch.size;
-        let mut obs_shape = vec![bs];
-        obs_shape.extend(&self.cfg.obs_shape);
-        let mut stats = StepStats { loss: 0.0, found_inf: false, loss_scale: self.scaler.scale() };
+        let first_scale = self.scaler.scale();
+        let mut any_inf = false;
+        let mut loss = 0.0;
         for _ in 0..self.cfg.epochs {
-            let scratch = [
-                literal_f32(&batch.obs, &obs_shape)?,
-                literal_i32(&batch.actions_i32, &[bs])?,
-                literal_f32(&batch.logp_old, &[bs])?,
-                literal_f32(&batch.returns, &[bs])?,
-                literal_f32(&batch.advantages, &[bs])?,
-                scalar_f32(self.scaler.scale())?,
-            ];
-            let mut inputs: Vec<&xla::Literal> = self.params.tensors.iter().collect();
-            inputs.extend(self.opt.iter());
-            inputs.extend(scratch.iter());
-            let mut outs = self.train_exe.run(&inputs)?;
-            let k = self.params.len();
-            let found_inf = scalar_of(&outs.pop().unwrap())? > 0.5;
-            let loss = scalar_of(&outs.pop().unwrap())?;
-            let opt = outs.split_off(k);
-            self.params.replace(outs);
-            self.opt = opt;
-            if self.scaler.update(found_inf) {
+            let out = self.compute.train(&batch, self.scaler.scale())?;
+            any_inf |= out.found_inf;
+            if self.scaler.update(out.found_inf) {
                 self.train_steps += 1;
             }
-            stats = StepStats { loss, found_inf, loss_scale: self.scaler.scale() };
+            loss = out.loss;
         }
-        Ok(stats)
+        Ok(StepStats { loss, found_inf: any_inf, loss_scale: first_scale })
     }
 }
 
-impl Agent for PpoAgent {
+impl<C: PpoCompute> Agent for PpoAgent<C> {
     fn act(&mut self, obs: &[f32], rng: &mut Rng) -> Result<Action> {
-        let (logits, value) = self.policy(obs)?;
+        let (logits, value) = self.compute.policy(obs)?;
         let logp = Self::log_softmax(&logits);
         let probs: Vec<f64> = logp.iter().map(|l| l.exp() as f64).collect();
         let a = rng.categorical(&probs);
@@ -128,11 +88,11 @@ impl Agent for PpoAgent {
     }
 
     fn act_greedy(&mut self, obs: &[f32]) -> Result<Action> {
-        let (logits, _) = self.policy(obs)?;
+        let (logits, _) = self.compute.policy(obs)?;
         let best = logits
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i)
             .unwrap_or(0);
         Ok(Action::Discrete(best))
@@ -148,10 +108,8 @@ impl Agent for PpoAgent {
         _rng: &mut Rng,
     ) -> Result<Option<StepStats>> {
         let a = action.discrete();
-        let (logp_all, value) = self
-            .last
-            .take()
-            .unwrap_or((vec![0.0; self.cfg.n_actions], 0.0));
+        let (logp_all, value) =
+            self.last.take().unwrap_or((vec![0.0; self.cfg.n_actions], 0.0));
         self.rollout.push(RolloutStep {
             obs: obs.to_vec(),
             action_i: a as i32,
@@ -162,7 +120,7 @@ impl Agent for PpoAgent {
             done,
         });
         if self.rollout.full() {
-            let last_value = if done { 0.0 } else { self.policy(next_obs)?.1 };
+            let last_value = if done { 0.0 } else { self.compute.policy(next_obs)?.1 };
             return self.train_rollout(last_value).map(Some);
         }
         Ok(None)
@@ -170,5 +128,9 @@ impl Agent for PpoAgent {
 
     fn train_steps(&self) -> u64 {
         self.train_steps
+    }
+
+    fn exec_policy(&self) -> Option<&ExecPolicy> {
+        self.compute.exec_policy()
     }
 }

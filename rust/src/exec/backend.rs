@@ -1,0 +1,272 @@
+//! Execution backends for the dynamic phase: one trait, two families.
+//!
+//! A [`Backend`] turns a Table III combo into a trainable
+//! [`Agent`]; the coordinator's training loop
+//! ([`crate::coordinator::trainer`]) is generic over it:
+//!
+//! * [`CpuBackend`] — the pure-Rust executor in this module's siblings,
+//!   precision-routed by an [`ExecPolicy`] (from a planner outcome or
+//!   the FP32 control).  Always compiled; this is what `apdrl train`
+//!   and tier-1 CI run.
+//! * [`PjrtBackend`] — the lowered-artifact executors (`pjrt` feature),
+//!   where formats live inside the compiled computation.
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::coordinator::config::ComboConfig;
+use crate::coordinator::planner::PlanOutcome;
+use crate::drl::a2c::{A2cAgent, A2cConfig};
+use crate::drl::ddpg::{DdpgAgent, DdpgConfig};
+use crate::drl::dqn::{DqnAgent, DqnConfig};
+use crate::drl::ppo::{PpoAgent, PpoConfig};
+use crate::drl::Agent;
+use crate::graph::{Algo, NetSpec};
+use crate::quant::LossScaler;
+
+use super::models::{CpuA2c, CpuDdpg, CpuDqn, CpuPpo};
+use super::policy::ExecPolicy;
+
+/// An execution backend: builds agents whose network math it executes.
+pub trait Backend {
+    /// Human-readable tag for reports (`"cpu exec (mixed precision)"`,
+    /// `"pjrt (fp32)"`).
+    fn describe(&self) -> String;
+
+    /// Build a fresh agent for `combo`, seeded deterministically.
+    fn make_agent(&mut self, combo: &ComboConfig, seed: u64) -> Result<Box<dyn Agent>>;
+}
+
+fn obs_shape_of(combo: &ComboConfig) -> Vec<usize> {
+    match &combo.net {
+        NetSpec::Mlp { .. } => vec![combo.obs_dim],
+        NetSpec::Conv { in_hw, in_ch, .. } => vec![*in_hw, *in_hw, *in_ch],
+    }
+}
+
+/// Cross-check a plan against the executor it would configure: build the
+/// combo's networks under the plan's policy and assert every
+/// `tag/layer/kind` routing entry the *plan* names resolves to an
+/// executor layer carrying exactly those formats.  Unlike comparing two
+/// policies derived from the same plan, this fails when the executor's
+/// network tags or layer names drift from the CDFG's (a new algorithm,
+/// a renamed builder tag) or a constructor stops honoring the policy.
+///
+/// The CDFG's `critic_for_actor` pass is the documented exception: it
+/// shares the critic's weights and the executor runs it through the
+/// `critic` network (see [`super::models`]), so its entries are skipped.
+pub fn verify_routing(combo: &ComboConfig, plan: &PlanOutcome) -> Result<()> {
+    let policy = ExecPolicy::from_outcome(plan)?;
+    let formats_of = |nets: Vec<(&'static str, &super::layers::Network)>| {
+        nets.into_iter().map(|(t, n)| (t, n.layer_formats())).collect::<Vec<_>>()
+    };
+    let nets = match combo.algo {
+        Algo::Dqn => {
+            let m = CpuDqn::new(combo, &policy, 0);
+            formats_of(m.nets())
+        }
+        Algo::Ddpg => {
+            let m = CpuDdpg::new(combo, &policy, 0);
+            formats_of(m.nets())
+        }
+        Algo::A2c => {
+            let m = CpuA2c::new(combo, &policy, 0);
+            formats_of(m.nets())
+        }
+        Algo::Ppo => {
+            let m = CpuPpo::new(combo, &policy, 0);
+            formats_of(m.nets())
+        }
+    };
+    for ((tag, lname), want) in policy.entries() {
+        if tag.as_str() == "critic_for_actor" {
+            continue;
+        }
+        let (_, layers) = nets
+            .iter()
+            .find(|(t, _)| *t == tag.as_str())
+            .ok_or_else(|| {
+                anyhow!("plan routes network {tag:?} but the {} executor builds no such net", combo.name)
+            })?;
+        let got = layers
+            .iter()
+            .find(|(n, _)| n.as_str() == lname.as_str())
+            .map(|(_, f)| *f)
+            .ok_or_else(|| anyhow!("plan routes {tag}/{lname} but the executor net has no such layer"))?;
+        ensure!(
+            got == *want,
+            "{tag}/{lname}: executor routed {got:?}, plan says {want:?}"
+        );
+    }
+    Ok(())
+}
+
+/// Coordination-schedule overrides (smoke tests and CI shrink the
+/// budgets without touching the algorithms).
+#[derive(Clone, Copy, Debug, Default)]
+struct Tuning {
+    train_every: Option<usize>,
+    warmup: Option<usize>,
+    batch: Option<usize>,
+}
+
+/// The pure-Rust CPU backend, precision-routed by an [`ExecPolicy`].
+pub struct CpuBackend {
+    policy: ExecPolicy,
+    tuning: Tuning,
+}
+
+impl CpuBackend {
+    /// The FP32 control backend (no plan needed).
+    pub fn fp32() -> CpuBackend {
+        CpuBackend::from_policy(ExecPolicy::fp32())
+    }
+
+    pub fn from_policy(policy: ExecPolicy) -> CpuBackend {
+        CpuBackend { policy, tuning: Tuning::default() }
+    }
+
+    /// Backend executing the precision routing of a solved plan — this
+    /// is the planner → executor hand-off of `apdrl train`.
+    pub fn from_outcome(plan: &PlanOutcome) -> Result<CpuBackend> {
+        Ok(CpuBackend::from_policy(ExecPolicy::from_outcome(plan)?))
+    }
+
+    pub fn policy(&self) -> &ExecPolicy {
+        &self.policy
+    }
+
+    /// Train every `n` env steps instead of the per-combo default.
+    /// Off-policy agents (DQN/DDPG) only — on-policy agents train once
+    /// per full rollout and ignore this.
+    pub fn with_train_every(mut self, n: usize) -> CpuBackend {
+        self.tuning.train_every = Some(n);
+        self
+    }
+
+    /// Replay warmup override.  Off-policy agents (DQN/DDPG) only.
+    pub fn with_warmup(mut self, n: usize) -> CpuBackend {
+        self.tuning.warmup = Some(n);
+        self
+    }
+
+    /// Batch (off-policy) / rollout-horizon (on-policy) override.
+    pub fn with_batch(mut self, n: usize) -> CpuBackend {
+        self.tuning.batch = Some(n);
+        self
+    }
+
+    fn scaler(&self) -> LossScaler {
+        if self.policy.needs_loss_scaling {
+            LossScaler::default()
+        } else {
+            LossScaler::disabled()
+        }
+    }
+}
+
+impl Backend for CpuBackend {
+    fn describe(&self) -> String {
+        if self.policy.quantized {
+            "cpu exec (mixed precision)".to_string()
+        } else {
+            "cpu exec (fp32)".to_string()
+        }
+    }
+
+    fn make_agent(&mut self, combo: &ComboConfig, seed: u64) -> Result<Box<dyn Agent>> {
+        let batch = self.tuning.batch.unwrap_or(combo.batch);
+        Ok(match combo.algo {
+            Algo::Dqn => {
+                let mut cfg = DqnConfig::for_combo(batch, obs_shape_of(combo), combo.act_dim);
+                if let Some(n) = self.tuning.train_every {
+                    cfg.train_every = n;
+                }
+                if let Some(n) = self.tuning.warmup {
+                    cfg.warmup = n;
+                }
+                Box::new(DqnAgent::from_parts(
+                    cfg,
+                    CpuDqn::new(combo, &self.policy, seed),
+                    self.scaler(),
+                ))
+            }
+            Algo::Ddpg => {
+                let mut cfg = DdpgConfig::for_combo(batch, combo.obs_dim, combo.act_dim);
+                if let Some(n) = self.tuning.train_every {
+                    cfg.train_every = n;
+                }
+                if let Some(n) = self.tuning.warmup {
+                    cfg.warmup = n;
+                }
+                Box::new(DdpgAgent::from_parts(
+                    cfg,
+                    CpuDdpg::new(combo, &self.policy, seed),
+                    self.scaler(),
+                ))
+            }
+            Algo::A2c => {
+                let cfg = A2cConfig::for_combo(batch, combo.obs_dim, combo.act_dim);
+                Box::new(A2cAgent::from_parts(
+                    cfg,
+                    CpuA2c::new(combo, &self.policy, seed),
+                    self.scaler(),
+                ))
+            }
+            Algo::Ppo => {
+                let cfg = PpoConfig::for_combo(batch, obs_shape_of(combo), combo.act_dim);
+                Box::new(PpoAgent::from_parts(
+                    cfg,
+                    CpuPpo::new(combo, &self.policy, seed),
+                    self.scaler(),
+                ))
+            }
+        })
+    }
+}
+
+/// The PJRT backend: agents over lowered artifacts in one precision
+/// `mode` ("fp32" | "mixed" | "bf16").  Borrows the runtime so several
+/// backends (one per mode) can share the loaded artifact cache.
+#[cfg(feature = "pjrt")]
+pub struct PjrtBackend<'r> {
+    runtime: &'r mut crate::runtime::Runtime,
+    mode: String,
+}
+
+#[cfg(feature = "pjrt")]
+impl<'r> PjrtBackend<'r> {
+    pub fn new(runtime: &'r mut crate::runtime::Runtime, mode: &str) -> PjrtBackend<'r> {
+        PjrtBackend { runtime, mode: mode.to_string() }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl Backend for PjrtBackend<'_> {
+    fn describe(&self) -> String {
+        format!("pjrt ({})", self.mode)
+    }
+
+    fn make_agent(&mut self, combo: &ComboConfig, seed: u64) -> Result<Box<dyn Agent>> {
+        use crate::drl::pjrt;
+        Ok(match combo.algo {
+            Algo::Dqn => {
+                let cfg =
+                    DqnConfig::for_combo(combo.batch, obs_shape_of(combo), combo.act_dim);
+                Box::new(pjrt::dqn_agent(self.runtime, combo.name, &self.mode, cfg, seed)?)
+            }
+            Algo::Ddpg => {
+                let cfg = DdpgConfig::for_combo(combo.batch, combo.obs_dim, combo.act_dim);
+                Box::new(pjrt::ddpg_agent(self.runtime, combo.name, &self.mode, cfg, seed)?)
+            }
+            Algo::A2c => {
+                let cfg = A2cConfig::for_combo(combo.batch, combo.obs_dim, combo.act_dim);
+                Box::new(pjrt::a2c_agent(self.runtime, combo.name, &self.mode, cfg, seed)?)
+            }
+            Algo::Ppo => {
+                let cfg =
+                    PpoConfig::for_combo(combo.batch, obs_shape_of(combo), combo.act_dim);
+                Box::new(pjrt::ppo_agent(self.runtime, combo.name, &self.mode, cfg, seed)?)
+            }
+        })
+    }
+}

@@ -1,0 +1,682 @@
+//! Network layers of the CPU executor: dense + conv (im2col GEMM) with
+//! cached forward state, hand-written reverse-mode backward, and the
+//! per-layer precision hooks that make a partition plan's formats real.
+//!
+//! Every layer carries the [`LayerFormats`] the [`ExecPolicy`] routed to
+//! it: forward outputs round to the `fwd`/`act` node formats, gradients
+//! to the `bwd` format, weights are *stored* in the forward compute
+//! format, and FP16-update layers keep an FP32 master copy that the
+//! optimizer accumulates into ([`super::adam`]).  FP16 overflow shows up
+//! as ±inf in the rounded gradients, which is exactly the `found_inf`
+//! signal the loss-scaling FSM consumes.
+
+use crate::graph::NetSpec;
+use crate::hw::Format;
+use crate::quant::formats::round_to;
+use crate::util::Rng;
+
+use super::policy::{ExecPolicy, LayerFormats};
+use super::tensor::Tensor;
+
+/// Activation applied after a layer's GEMM.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Act {
+    None,
+    Relu,
+    Tanh,
+}
+
+/// One trainable tensor: the working copy (stored in the layer's compute
+/// format), an optional FP32 master, and its gradient buffer.
+#[derive(Clone, Debug)]
+pub struct Param {
+    pub value: Tensor,
+    pub master: Option<Vec<f32>>,
+    pub grad: Vec<f32>,
+    pub store: Format,
+}
+
+impl Param {
+    pub fn new(data: Vec<f32>, shape: &[usize], store: Format, master: bool) -> Param {
+        let master = master.then(|| data.clone());
+        let mut value = Tensor::from_vec(data, shape);
+        value.round_to(store);
+        let grad = vec![0.0; value.elems()];
+        Param { value, master, grad, store }
+    }
+
+    /// Full-precision accumulator element (master if armed, else working).
+    pub fn accum_at(&self, j: usize) -> f32 {
+        match &self.master {
+            Some(m) => m[j],
+            None => self.value.data[j],
+        }
+    }
+
+    /// Write an updated full-precision element: the master (if armed)
+    /// keeps it exact, the working copy re-rounds to the storage format.
+    pub fn set(&mut self, j: usize, x: f32) {
+        if let Some(m) = &mut self.master {
+            m[j] = x;
+        }
+        self.value.data[j] = round_to(x, self.store);
+    }
+
+    pub fn elems(&self) -> usize {
+        self.value.elems()
+    }
+}
+
+/// Layer connectivity (the conv case runs through its im2col GEMM).
+#[derive(Clone, Debug)]
+pub enum Wiring {
+    Dense { din: usize, dout: usize },
+    Conv2d { in_hw: usize, in_ch: usize, out_ch: usize, k: usize, stride: usize, out_hw: usize },
+}
+
+/// One layer: weights `(din, dout)` for dense, `(k·k·cin, cout)` (HWIO
+/// flattened) for conv; activations flow as `(batch, features)` rows.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    /// CDFG layer name (`fc0`, `conv1`, …) — the key precision routing
+    /// uses, so it must match `graph::builder::layer_dims` naming.
+    pub name: String,
+    pub wiring: Wiring,
+    pub w: Param,
+    pub b: Param,
+    pub act: Act,
+    pub fmt: LayerFormats,
+    cache_x: Option<Tensor>,
+    cache_a: Option<Tensor>,
+}
+
+fn im2col(
+    x: &Tensor,
+    in_hw: usize,
+    in_ch: usize,
+    k: usize,
+    stride: usize,
+    out_hw: usize,
+) -> Tensor {
+    let bs = x.rows();
+    let img_elems = in_hw * in_hw * in_ch;
+    let pcols = k * k * in_ch;
+    let mut data = vec![0.0f32; bs * out_hw * out_hw * pcols];
+    for b in 0..bs {
+        let img = &x.data[b * img_elems..(b + 1) * img_elems];
+        for oy in 0..out_hw {
+            for ox in 0..out_hw {
+                let r = ((b * out_hw + oy) * out_hw + ox) * pcols;
+                for ky in 0..k {
+                    let iy = oy * stride + ky;
+                    for kx in 0..k {
+                        let ix = ox * stride + kx;
+                        let src = (iy * in_hw + ix) * in_ch;
+                        let dst = r + (ky * k + kx) * in_ch;
+                        data[dst..dst + in_ch].copy_from_slice(&img[src..src + in_ch]);
+                    }
+                }
+            }
+        }
+    }
+    Tensor::from_vec(data, &[bs * out_hw * out_hw, pcols])
+}
+
+fn col2im(
+    dpatches: &Tensor,
+    bs: usize,
+    in_hw: usize,
+    in_ch: usize,
+    k: usize,
+    stride: usize,
+    out_hw: usize,
+) -> Tensor {
+    let img_elems = in_hw * in_hw * in_ch;
+    let pcols = k * k * in_ch;
+    let mut out = Tensor::zeros(&[bs, img_elems]);
+    for b in 0..bs {
+        let img = &mut out.data[b * img_elems..(b + 1) * img_elems];
+        for oy in 0..out_hw {
+            for ox in 0..out_hw {
+                let r = ((b * out_hw + oy) * out_hw + ox) * pcols;
+                let row = &dpatches.data[r..r + pcols];
+                for ky in 0..k {
+                    let iy = oy * stride + ky;
+                    for kx in 0..k {
+                        let ix = ox * stride + kx;
+                        let src = (iy * in_hw + ix) * in_ch;
+                        let dst = (ky * k + kx) * in_ch;
+                        for c in 0..in_ch {
+                            img[src + c] += row[dst + c];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+impl Layer {
+    pub fn dense(
+        name: String,
+        din: usize,
+        dout: usize,
+        act: Act,
+        fmt: LayerFormats,
+        rng: &mut Rng,
+    ) -> Layer {
+        let w = Param::new(rng.he_uniform(din * dout, din), &[din, dout], fmt.fwd, fmt.master);
+        let b = Param::new(vec![0.0; dout], &[dout], fmt.fwd, fmt.master);
+        Layer {
+            name,
+            wiring: Wiring::Dense { din, dout },
+            w,
+            b,
+            act,
+            fmt,
+            cache_x: None,
+            cache_a: None,
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv(
+        name: String,
+        in_hw: usize,
+        in_ch: usize,
+        out_ch: usize,
+        k: usize,
+        stride: usize,
+        act: Act,
+        fmt: LayerFormats,
+        rng: &mut Rng,
+    ) -> Layer {
+        let out_hw = (in_hw - k) / stride + 1;
+        let fan_in = k * k * in_ch;
+        let w = Param::new(
+            rng.he_uniform(fan_in * out_ch, fan_in),
+            &[fan_in, out_ch],
+            fmt.fwd,
+            fmt.master,
+        );
+        let b = Param::new(vec![0.0; out_ch], &[out_ch], fmt.fwd, fmt.master);
+        Layer {
+            name,
+            wiring: Wiring::Conv2d { in_hw, in_ch, out_ch, k, stride, out_hw },
+            w,
+            b,
+            act,
+            fmt,
+            cache_x: None,
+            cache_a: None,
+        }
+    }
+
+    pub fn out_dim(&self) -> usize {
+        match self.wiring {
+            Wiring::Dense { dout, .. } => dout,
+            Wiring::Conv2d { out_ch, out_hw, .. } => out_hw * out_hw * out_ch,
+        }
+    }
+
+    /// Forward compute; returns `(cached input, output)` where the cached
+    /// input is the dense input itself or the conv im2col patch matrix.
+    fn compute(&self, x: &Tensor) -> (Tensor, Tensor) {
+        let (gemm_in, mut z) = match &self.wiring {
+            Wiring::Dense { din, .. } => {
+                assert_eq!(x.cols(), *din, "layer {}: input dim", self.name);
+                let mut z = x.matmul(&self.w.value);
+                z.add_bias(&self.b.value.data);
+                (x.clone(), z)
+            }
+            Wiring::Conv2d { in_hw, in_ch, out_ch, k, stride, out_hw } => {
+                assert_eq!(x.cols(), in_hw * in_hw * in_ch, "layer {}: input dim", self.name);
+                let patches = im2col(x, *in_hw, *in_ch, *k, *stride, *out_hw);
+                let mut z = patches.matmul(&self.w.value);
+                // Per-channel bias while still in (rows, out_ch) GEMM
+                // shape, then fold back to (batch, oh·ow·oc) rows.
+                z.add_bias(&self.b.value.data);
+                z.shape = vec![x.rows(), out_hw * out_hw * out_ch];
+                (patches, z)
+            }
+        };
+        z.round_to(self.fmt.fwd);
+        match self.act {
+            Act::None => {}
+            Act::Relu => {
+                for v in z.data.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+                z.round_to(self.fmt.act);
+            }
+            Act::Tanh => {
+                for v in z.data.iter_mut() {
+                    *v = v.tanh();
+                }
+                z.round_to(self.fmt.act);
+            }
+        }
+        (gemm_in, z)
+    }
+
+    /// Forward for training: caches the state backward needs.
+    pub fn forward(&mut self, x: &Tensor) -> Tensor {
+        let (cx, a) = self.compute(x);
+        self.cache_x = Some(cx);
+        self.cache_a = Some(a.clone());
+        a
+    }
+
+    /// Forward for inference: no cache writes.
+    pub fn eval(&self, x: &Tensor) -> Tensor {
+        self.compute(x).1
+    }
+
+    /// Backward from the output gradient `g`; fills `w.grad`/`b.grad`
+    /// when `accum` (a pass that only needs input gradients — DDPG's
+    /// critic-through-actor — passes false) and returns the input
+    /// gradient.
+    pub fn backward(&mut self, g: &Tensor, accum: bool) -> Tensor {
+        let a = self.cache_a.as_ref().expect("layer backward without forward");
+        let mut dz = g.clone();
+        match self.act {
+            Act::None => {}
+            Act::Relu => {
+                for (d, &av) in dz.data.iter_mut().zip(a.data.iter()) {
+                    if av <= 0.0 {
+                        *d = 0.0;
+                    }
+                }
+            }
+            Act::Tanh => {
+                for (d, &av) in dz.data.iter_mut().zip(a.data.iter()) {
+                    *d *= 1.0 - av * av;
+                }
+            }
+        }
+        dz.round_to(self.fmt.bwd);
+        let x = self.cache_x.as_ref().expect("layer backward without forward");
+        match &self.wiring {
+            Wiring::Dense { .. } => {
+                if accum {
+                    let mut dw = x.matmul_tn(&dz);
+                    dw.round_to(self.fmt.bwd);
+                    self.w.grad.copy_from_slice(&dw.data);
+                    let mut db = dz.col_sums();
+                    for v in db.iter_mut() {
+                        *v = round_to(*v, self.fmt.bwd);
+                    }
+                    self.b.grad.copy_from_slice(&db);
+                }
+                let mut dx = dz.matmul_nt(&self.w.value);
+                dx.round_to(self.fmt.bwd);
+                dx
+            }
+            Wiring::Conv2d { in_hw, in_ch, out_ch, k, stride, out_hw } => {
+                let bs = dz.shape[0];
+                dz.shape = vec![bs * out_hw * out_hw, *out_ch];
+                if accum {
+                    let mut dw = x.matmul_tn(&dz);
+                    dw.round_to(self.fmt.bwd);
+                    self.w.grad.copy_from_slice(&dw.data);
+                    let mut db = dz.col_sums();
+                    for v in db.iter_mut() {
+                        *v = round_to(*v, self.fmt.bwd);
+                    }
+                    self.b.grad.copy_from_slice(&db);
+                }
+                let dpatches = dz.matmul_nt(&self.w.value);
+                let mut dx = col2im(&dpatches, bs, *in_hw, *in_ch, *k, *stride, *out_hw);
+                dx.round_to(self.fmt.bwd);
+                dx
+            }
+        }
+    }
+}
+
+/// A stack of layers built from a [`NetSpec`], with precision routed per
+/// layer from an [`ExecPolicy`] network tag.
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub layers: Vec<Layer>,
+    pub in_dim: usize,
+}
+
+impl Network {
+    /// Build from `spec` with ReLU between layers and `final_act` on the
+    /// head, routing each layer's formats via `policy.layer(tag, name)`.
+    pub fn from_spec(
+        spec: &NetSpec,
+        final_act: Act,
+        policy: &ExecPolicy,
+        tag: &str,
+        rng: &mut Rng,
+    ) -> Network {
+        Self::build(spec, final_act, |name| policy.layer(tag, name), rng)
+    }
+
+    /// Build with one uniform format on every layer (tests, controls).
+    pub fn from_spec_uniform(
+        spec: &NetSpec,
+        final_act: Act,
+        fmt: LayerFormats,
+        rng: &mut Rng,
+    ) -> Network {
+        Self::build(spec, final_act, |_| fmt, rng)
+    }
+
+    fn build(
+        spec: &NetSpec,
+        final_act: Act,
+        fmt_of: impl Fn(&str) -> LayerFormats,
+        rng: &mut Rng,
+    ) -> Network {
+        let mut layers = Vec::new();
+        match spec {
+            NetSpec::Mlp { sizes } => {
+                let n = sizes.len() - 1;
+                for i in 0..n {
+                    let name = format!("fc{i}");
+                    let act = if i + 1 < n { Act::Relu } else { final_act };
+                    let fmt = fmt_of(&name);
+                    layers.push(Layer::dense(name, sizes[i], sizes[i + 1], act, fmt, rng));
+                }
+                Network { layers, in_dim: sizes[0] }
+            }
+            NetSpec::Conv { in_hw, in_ch, conv, fc } => {
+                let total = conv.len() + fc.len();
+                let (mut h, mut c) = (*in_hw, *in_ch);
+                let mut idx = 0;
+                for (i, &(cout, k, s)) in conv.iter().enumerate() {
+                    let name = format!("conv{i}");
+                    let act = if idx + 1 < total { Act::Relu } else { final_act };
+                    let fmt = fmt_of(&name);
+                    layers.push(Layer::conv(name, h, c, cout, k, s, act, fmt, rng));
+                    h = (h - k) / s + 1;
+                    c = cout;
+                    idx += 1;
+                }
+                let mut din = h * h * c;
+                for (j, &dout) in fc.iter().enumerate() {
+                    let name = format!("fc{j}");
+                    let act = if idx + 1 < total { Act::Relu } else { final_act };
+                    let fmt = fmt_of(&name);
+                    layers.push(Layer::dense(name, din, dout, act, fmt, rng));
+                    din = dout;
+                    idx += 1;
+                }
+                Network { layers, in_dim: in_hw * in_hw * in_ch }
+            }
+        }
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.layers.last().expect("empty network").out_dim()
+    }
+
+    /// Training forward (caches per-layer state).
+    pub fn forward(&mut self, x: &Tensor) -> Tensor {
+        let mut cur = x.clone();
+        for layer in self.layers.iter_mut() {
+            cur = layer.forward(&cur);
+        }
+        cur
+    }
+
+    /// Inference forward (no caches touched; usable on `&self`).
+    pub fn infer(&self, x: &Tensor) -> Tensor {
+        let mut cur = x.clone();
+        for layer in &self.layers {
+            cur = layer.eval(&cur);
+        }
+        cur
+    }
+
+    /// Backward from the output gradient; returns the input gradient.
+    pub fn backward(&mut self, g: &Tensor, accum: bool) -> Tensor {
+        let mut grad = g.clone();
+        for layer in self.layers.iter_mut().rev() {
+            grad = layer.backward(&grad, accum);
+        }
+        grad
+    }
+
+    pub fn zero_grads(&mut self) {
+        for layer in self.layers.iter_mut() {
+            layer.w.grad.fill(0.0);
+            layer.b.grad.fill(0.0);
+        }
+    }
+
+    /// Scaled-gradient overflow probe — used to gate *joint* multi-network
+    /// updates so a skipped step skips every network (Fig 9's conditional
+    /// skip is all-or-nothing).
+    pub fn has_non_finite_grads(&self) -> bool {
+        self.layers.iter().any(|l| {
+            l.w.grad.iter().chain(l.b.grad.iter()).any(|g| !g.is_finite())
+        })
+    }
+
+    /// All trainable params in stable `[w0, b0, w1, b1, …]` order (the
+    /// optimizer keys its state by position).
+    pub fn params_mut(&mut self) -> Vec<&mut Param> {
+        let mut out = Vec::new();
+        for layer in self.layers.iter_mut() {
+            out.push(&mut layer.w);
+            out.push(&mut layer.b);
+        }
+        out
+    }
+
+    /// Target-network hard sync: copy `src`'s full-precision weights and
+    /// re-round into this network's own storage formats.
+    pub fn copy_weights_from(&mut self, src: &Network) {
+        for (dst, s) in self.layers.iter_mut().zip(&src.layers) {
+            copy_param(&mut dst.w, &s.w);
+            copy_param(&mut dst.b, &s.b);
+        }
+    }
+
+    /// Polyak soft update `θ' ← τθ + (1−τ)θ'` (DDPG targets).
+    pub fn soft_update_from(&mut self, src: &Network, tau: f32) {
+        for (dst, s) in self.layers.iter_mut().zip(&src.layers) {
+            soft_param(&mut dst.w, &s.w, tau);
+            soft_param(&mut dst.b, &s.b, tau);
+        }
+    }
+
+    /// Per-layer `(name, formats)` — what the routing assertions inspect.
+    pub fn layer_formats(&self) -> Vec<(String, LayerFormats)> {
+        self.layers.iter().map(|l| (l.name.clone(), l.fmt)).collect()
+    }
+}
+
+fn copy_param(dst: &mut Param, src: &Param) {
+    assert_eq!(dst.elems(), src.elems());
+    for j in 0..dst.elems() {
+        let x = src.accum_at(j);
+        dst.set(j, x);
+    }
+}
+
+fn soft_param(dst: &mut Param, src: &Param, tau: f32) {
+    assert_eq!(dst.elems(), src.elems());
+    for j in 0..dst.elems() {
+        let x = tau * src.accum_at(j) + (1.0 - tau) * dst.accum_at(j);
+        dst.set(j, x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fp32_net(spec: &NetSpec, final_act: Act, seed: u64) -> Network {
+        let mut rng = Rng::new(seed);
+        Network::from_spec_uniform(spec, final_act, LayerFormats::fp32(), &mut rng)
+    }
+
+    /// Scalar probe loss L = Σ out ⊙ probe, so dL/dout = probe.
+    fn probe_loss(out: &Tensor, probe: &Tensor) -> f64 {
+        out.data.iter().zip(&probe.data).map(|(&o, &p)| o as f64 * p as f64).sum()
+    }
+
+    /// Finite-difference check of dL/dθ for every param of `net`.
+    fn gradcheck(net: &mut Network, x: &Tensor, tol: f64) {
+        let mut rng = Rng::new(0xC0FFEE);
+        let out = net.forward(x);
+        let probe = Tensor::from_vec(
+            (0..out.elems()).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect(),
+            &out.shape,
+        );
+        net.zero_grads();
+        net.backward(&probe, true);
+        // Collect analytic grads, then perturb each param elementwise.
+        let analytic: Vec<Vec<f32>> =
+            net.params_mut().iter().map(|p| p.grad.clone()).collect();
+        let eps = 1e-3f32;
+        for pi in 0..analytic.len() {
+            for j in 0..analytic[pi].len() {
+                let orig = {
+                    let mut params = net.params_mut();
+                    let v = params[pi].value.data[j];
+                    params[pi].value.data[j] = v + eps;
+                    v
+                };
+                let lp = probe_loss(&net.infer(x), &probe);
+                {
+                    let mut params = net.params_mut();
+                    params[pi].value.data[j] = orig - eps;
+                }
+                let lm = probe_loss(&net.infer(x), &probe);
+                {
+                    let mut params = net.params_mut();
+                    params[pi].value.data[j] = orig;
+                }
+                let numeric = (lp - lm) / (2.0 * eps as f64);
+                let got = analytic[pi][j] as f64;
+                let scale = numeric.abs().max(got.abs()).max(1.0);
+                assert!(
+                    (numeric - got).abs() / scale < tol,
+                    "param {pi}[{j}]: numeric {numeric} vs analytic {got}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dense_mlp_gradcheck() {
+        let spec = NetSpec::mlp(&[3, 8, 2]);
+        let mut net = fp32_net(&spec, Act::None, 11);
+        let mut rng = Rng::new(5);
+        let x = Tensor::from_vec(
+            (0..2 * 3).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect(),
+            &[2, 3],
+        );
+        gradcheck(&mut net, &x, 2e-2);
+    }
+
+    #[test]
+    fn tanh_head_gradcheck() {
+        let spec = NetSpec::mlp(&[4, 6, 2]);
+        let mut net = fp32_net(&spec, Act::Tanh, 13);
+        let mut rng = Rng::new(7);
+        let x = Tensor::from_vec(
+            (0..2 * 4).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect(),
+            &[2, 4],
+        );
+        gradcheck(&mut net, &x, 2e-2);
+    }
+
+    #[test]
+    fn conv_net_gradcheck() {
+        let spec = NetSpec::Conv { in_hw: 6, in_ch: 2, conv: vec![(3, 3, 1)], fc: vec![4] };
+        let mut net = fp32_net(&spec, Act::None, 17);
+        let mut rng = Rng::new(9);
+        let x = Tensor::from_vec(
+            (0..2 * 6 * 6 * 2).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect(),
+            &[2, 6 * 6 * 2],
+        );
+        gradcheck(&mut net, &x, 3e-2);
+    }
+
+    #[test]
+    fn conv_shapes_match_cdfg_dims() {
+        // The Table III mini pixel net: 12×12×4 → conv(8,4,2) → 5×5×8 →
+        // conv(16,3,1) → 3×3×16 → fc 128 → fc 4.
+        let spec = NetSpec::Conv {
+            in_hw: 12,
+            in_ch: 4,
+            conv: vec![(8, 4, 2), (16, 3, 1)],
+            fc: vec![128, 4],
+        };
+        let net = fp32_net(&spec, Act::None, 3);
+        assert_eq!(net.in_dim, 12 * 12 * 4);
+        assert_eq!(net.out_dim(), 4);
+        assert_eq!(
+            net.layers.iter().map(|l| l.name.as_str()).collect::<Vec<_>>(),
+            vec!["conv0", "conv1", "fc0", "fc1"]
+        );
+        let x = Tensor::zeros(&[3, 12 * 12 * 4]);
+        let y = net.infer(&x);
+        assert_eq!(y.shape, vec![3, 4]);
+    }
+
+    #[test]
+    fn quantized_storage_rounds_weights_and_outputs() {
+        use crate::quant::formats::bf16_round;
+        let fmt = LayerFormats {
+            fwd: Format::Bf16,
+            act: Format::Bf16,
+            bwd: Format::Bf16,
+            update: Format::Bf16,
+            master: false,
+        };
+        let spec = NetSpec::mlp(&[4, 8, 2]);
+        let mut rng = Rng::new(21);
+        let net = Network::from_spec_uniform(&spec, Act::None, fmt, &mut rng);
+        for layer in &net.layers {
+            for &w in &layer.w.value.data {
+                assert_eq!(w.to_bits(), bf16_round(w).to_bits(), "weight not BF16-resident");
+            }
+            assert!(layer.w.master.is_none(), "BF16 layers keep no master (Table II)");
+        }
+        let x = Tensor::from_vec(vec![0.3, -0.7, 1.1, 0.05], &[1, 4]);
+        let y = net.infer(&x);
+        for &v in &y.data {
+            assert_eq!(v.to_bits(), bf16_round(v).to_bits(), "output not BF16");
+        }
+    }
+
+    #[test]
+    fn master_backed_param_survives_tiny_updates() {
+        // FP16 working copy + FP32 master: a sub-ULP update accumulates
+        // in the master even when the working copy cannot represent it.
+        let mut p = Param::new(vec![1.0], &[1], Format::Fp16, true);
+        for _ in 0..10 {
+            let x = p.accum_at(0) + 1e-5;
+            p.set(0, x);
+        }
+        let m = p.master.as_ref().unwrap()[0];
+        assert!((m - 1.0001).abs() < 1e-6, "master drifted: {m}");
+        // Working copy is the fp16 rounding of the master.
+        assert_eq!(p.value.data[0], crate::quant::formats::fp16_round(m));
+    }
+
+    #[test]
+    fn target_sync_and_soft_update() {
+        let spec = NetSpec::mlp(&[2, 4, 1]);
+        let a = fp32_net(&spec, Act::None, 1);
+        let mut b = fp32_net(&spec, Act::None, 2);
+        b.copy_weights_from(&a);
+        let x = Tensor::from_vec(vec![0.5, -0.5], &[1, 2]);
+        assert_eq!(a.infer(&x).data, b.infer(&x).data);
+        // Soft update with τ=1 is a hard copy.
+        let mut c = fp32_net(&spec, Act::None, 3);
+        c.soft_update_from(&a, 1.0);
+        assert_eq!(a.infer(&x).data, c.infer(&x).data);
+    }
+}

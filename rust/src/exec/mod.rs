@@ -1,0 +1,40 @@
+//! Pure-Rust CPU execution backend — the dynamic phase with no PJRT.
+//!
+//! The paper's headline is not the partitioner alone but that the
+//! FP32/FP16/BF16-*coordinated* training loop converges (Fig 7 right,
+//! Alg. 1, Table II).  This subsystem executes that loop on the host
+//! CPU, bit-faithfully emulating the coordinated formats through
+//! [`crate::quant::formats`]:
+//!
+//! * [`tensor`] — dense f32 tensors + the three GEMM variants the layer
+//!   math needs, with in-place format rounding;
+//! * [`layers`] — dense/conv layers (im2col) with cached forward,
+//!   hand-written reverse-mode backward, per-layer [`LayerFormats`]
+//!   hooks and FP32 master copies where the policy arms them;
+//! * [`adam`] — Adam with loss-scale unscaling, `found_inf` overflow
+//!   detection (skip-on-overflow) and master-weight accumulation;
+//! * [`policy`] — [`ExecPolicy`]: a solved [`PlanOutcome`]'s per-node
+//!   formats folded into per-(network, layer) routing, so the partition
+//!   plan literally decides which layers train in BF16/FP16/FP32;
+//! * [`models`] — CPU implementations of the four per-algorithm compute
+//!   traits ([`crate::drl::compute`]);
+//! * [`backend`] — the [`Backend`] trait gluing it to the trainer, with
+//!   [`CpuBackend`] (always) and `PjrtBackend` (`pjrt` feature).
+//!
+//! [`PlanOutcome`]: crate::coordinator::planner::PlanOutcome
+
+pub mod adam;
+pub mod backend;
+pub mod layers;
+pub mod models;
+pub mod policy;
+pub mod tensor;
+
+pub use adam::Adam;
+pub use backend::{verify_routing, Backend, CpuBackend};
+#[cfg(feature = "pjrt")]
+pub use backend::PjrtBackend;
+pub use layers::{Act, Network, Param};
+pub use models::{CpuA2c, CpuDdpg, CpuDqn, CpuPpo};
+pub use policy::{ExecPolicy, LayerFormats};
+pub use tensor::Tensor;

@@ -1,0 +1,546 @@
+//! CPU implementations of the per-algorithm compute traits
+//! ([`crate::drl::compute`]): the paper's dynamic phase with no PJRT.
+//!
+//! Each model owns the same networks the CDFG describes for its
+//! algorithm (`graph::builder`): DQN's online/target pair, DDPG's four
+//! networks, A2C/PPO's actor + value nets.  Layers are precision-routed
+//! by the [`ExecPolicy`] tags matching the CDFG node names — `online`,
+//! `target`, `actor`, `critic`, `t_actor`, `t_critic`, `value` — so the
+//! partition plan decides each network's formats.  (The CDFG's separate
+//! `critic_for_actor` pass shares the critic's weights; the executor
+//! runs it through the `critic` network and therefore the `critic`
+//! routing.)
+//!
+//! Losses are scaled by the FSM's current scale before backprop; the
+//! [`Adam`] optimizers detect scaled-gradient overflow (`found_inf`) and
+//! skip the update, completing the Fig 9 loop.
+
+use anyhow::Result;
+
+use crate::coordinator::config::ComboConfig;
+use crate::drl::compute::{A2cCompute, ComputeBackend, DdpgCompute, DqnCompute, PpoCompute, TrainOut};
+use crate::drl::replay::Batch;
+use crate::drl::rollout::RolloutBatch;
+use crate::graph::{critic_spec, value_spec};
+use crate::hw::Format;
+use crate::util::Rng;
+
+use super::adam::Adam;
+use super::layers::{Act, Network, Param};
+use super::policy::ExecPolicy;
+use super::tensor::Tensor;
+
+fn obs_tensor(obs: &[f32]) -> Tensor {
+    Tensor::from_vec(obs.to_vec(), &[1, obs.len()])
+}
+
+fn batch_tensor(data: &[f32], bs: usize) -> Tensor {
+    Tensor::from_vec(data.to_vec(), &[bs, data.len() / bs])
+}
+
+fn concat_cols(a: &Tensor, b: &Tensor) -> Tensor {
+    let bs = a.rows();
+    assert_eq!(bs, b.rows());
+    let (ca, cb) = (a.cols(), b.cols());
+    let mut data = Vec::with_capacity(bs * (ca + cb));
+    for i in 0..bs {
+        data.extend_from_slice(&a.data[i * ca..(i + 1) * ca]);
+        data.extend_from_slice(&b.data[i * cb..(i + 1) * cb]);
+    }
+    Tensor::from_vec(data, &[bs, ca + cb])
+}
+
+// ---------------------------------------------------------------- DQN --
+
+/// DQN on the CPU executor: online + target Q-nets, MSE TD loss (Eq. 1).
+pub struct CpuDqn {
+    online: Network,
+    target: Network,
+    opt: Adam,
+    gamma: f32,
+    policy: ExecPolicy,
+}
+
+impl CpuDqn {
+    pub fn new(combo: &ComboConfig, policy: &ExecPolicy, seed: u64) -> CpuDqn {
+        let mut rng = Rng::new(seed ^ 0xD09);
+        let online = Network::from_spec(&combo.net, Act::None, policy, "online", &mut rng);
+        let mut target = Network::from_spec(&combo.net, Act::None, policy, "target", &mut rng);
+        target.copy_weights_from(&online);
+        CpuDqn { online, target, opt: Adam::new(1e-3), gamma: 0.99, policy: policy.clone() }
+    }
+
+    /// `(CDFG tag, network)` pairs — routing assertions inspect these.
+    pub fn nets(&self) -> Vec<(&'static str, &Network)> {
+        vec![("online", &self.online), ("target", &self.target)]
+    }
+}
+
+impl ComputeBackend for CpuDqn {
+    fn exec_policy(&self) -> Option<&ExecPolicy> {
+        Some(&self.policy)
+    }
+}
+
+impl DqnCompute for CpuDqn {
+    fn qvalues(&mut self, obs: &[f32]) -> Result<Vec<f32>> {
+        Ok(self.online.infer(&obs_tensor(obs)).data)
+    }
+
+    fn train(&mut self, batch: &Batch, loss_scale: f32) -> Result<TrainOut> {
+        let bs = batch.size;
+        let obs = batch_tensor(&batch.obs, bs);
+        let next = batch_tensor(&batch.next_obs, bs);
+        let q = self.online.forward(&obs);
+        let qn = self.target.infer(&next);
+        let na = q.cols();
+        let mut g = Tensor::zeros(&[bs, na]);
+        let mut loss = 0.0f32;
+        for i in 0..bs {
+            let best =
+                qn.data[i * na..(i + 1) * na].iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+            let y = batch.rewards[i] + self.gamma * (1.0 - batch.dones[i]) * best;
+            let a = batch.actions_i32[i] as usize;
+            let diff = q.data[i * na + a] - y;
+            loss += diff * diff;
+            g.data[i * na + a] = 2.0 * diff / bs as f32 * loss_scale;
+        }
+        loss /= bs as f32;
+        self.online.zero_grads();
+        self.online.backward(&g, true);
+        let found_inf = self.opt.step(self.online.params_mut(), loss_scale);
+        Ok(TrainOut { loss, found_inf })
+    }
+
+    fn sync_target(&mut self) -> Result<()> {
+        self.target.copy_weights_from(&self.online);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------- A2C --
+
+/// A2C on the CPU executor: Gaussian policy (state-independent log-std)
+/// + value net, entropy-regularized.
+pub struct CpuA2c {
+    pi: Network,
+    vf: Network,
+    log_std: Param,
+    opt: Adam,
+    ent_coef: f32,
+    vf_coef: f32,
+    policy: ExecPolicy,
+}
+
+impl CpuA2c {
+    pub fn new(combo: &ComboConfig, policy: &ExecPolicy, seed: u64) -> CpuA2c {
+        let mut rng = Rng::new(seed ^ 0xA2C);
+        let pi = Network::from_spec(&combo.net, Act::None, policy, "actor", &mut rng);
+        let vf = Network::from_spec(&value_spec(&combo.net), Act::None, policy, "value", &mut rng);
+        // log_std is a coordinator-resident FP32 parameter (no CDFG node).
+        let log_std = Param::new(vec![0.0; combo.act_dim], &[combo.act_dim], Format::Fp32, false);
+        CpuA2c {
+            pi,
+            vf,
+            log_std,
+            opt: Adam::new(7e-4),
+            ent_coef: 0.01,
+            vf_coef: 0.5,
+            policy: policy.clone(),
+        }
+    }
+
+    pub fn nets(&self) -> Vec<(&'static str, &Network)> {
+        vec![("actor", &self.pi), ("value", &self.vf)]
+    }
+}
+
+impl ComputeBackend for CpuA2c {
+    fn exec_policy(&self) -> Option<&ExecPolicy> {
+        Some(&self.policy)
+    }
+}
+
+impl A2cCompute for CpuA2c {
+    fn policy(&mut self, obs: &[f32]) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        let x = obs_tensor(obs);
+        let mean = self.pi.infer(&x).data;
+        let value = self.vf.infer(&x).data[0];
+        Ok((mean, self.log_std.value.data.clone(), value))
+    }
+
+    fn train(&mut self, batch: &RolloutBatch, loss_scale: f32) -> Result<TrainOut> {
+        let bs = batch.size;
+        let bsf = bs as f32;
+        let obs = batch_tensor(&batch.obs, bs);
+        let mean = self.pi.forward(&obs);
+        let v = self.vf.forward(&obs);
+        let ad = mean.cols();
+        let std: Vec<f32> = self.log_std.value.data.iter().map(|l| l.exp()).collect();
+        let mut dmean = Tensor::zeros(&[bs, ad]);
+        let mut dlog_std = vec![0.0f32; ad];
+        let mut dv = Tensor::zeros(&[bs, 1]);
+        let (mut ploss, mut vloss) = (0.0f32, 0.0f32);
+        const LOG_2PI: f32 = 1.837_877_1;
+        for i in 0..bs {
+            let adv = batch.advantages[i];
+            for j in 0..ad {
+                let a = batch.actions_f32[i * ad + j];
+                let z = (a - mean.data[i * ad + j]) / std[j];
+                ploss += adv * (0.5 * z * z + self.log_std.value.data[j] + 0.5 * LOG_2PI) / bsf;
+                dmean.data[i * ad + j] = -adv * z / std[j] / bsf * loss_scale;
+                dlog_std[j] += -adv * (z * z - 1.0) / bsf * loss_scale;
+            }
+            let diff = v.data[i] - batch.returns[i];
+            vloss += diff * diff / bsf;
+            dv.data[i] = self.vf_coef * 2.0 * diff / bsf * loss_scale;
+        }
+        // Gaussian entropy: Σ_j log_std_j + const; maximized via -coef·H.
+        let entropy: f32 =
+            self.log_std.value.data.iter().sum::<f32>() + 0.5 * ad as f32 * (LOG_2PI + 1.0);
+        for d in dlog_std.iter_mut() {
+            *d -= self.ent_coef * loss_scale;
+        }
+        let loss = ploss + self.vf_coef * vloss - self.ent_coef * entropy;
+        self.pi.zero_grads();
+        self.pi.backward(&dmean, true);
+        self.vf.zero_grads();
+        self.vf.backward(&dv, true);
+        self.log_std.grad.copy_from_slice(&dlog_std);
+        let mut params = self.pi.params_mut();
+        params.push(&mut self.log_std);
+        params.extend(self.vf.params_mut());
+        let found_inf = self.opt.step(params, loss_scale);
+        Ok(TrainOut { loss, found_inf })
+    }
+}
+
+// --------------------------------------------------------------- DDPG --
+
+/// DDPG on the CPU executor: tanh actor + Q critic, soft targets.
+pub struct CpuDdpg {
+    actor: Network,
+    critic: Network,
+    t_actor: Network,
+    t_critic: Network,
+    opt_a: Adam,
+    opt_c: Adam,
+    gamma: f32,
+    tau: f32,
+    policy: ExecPolicy,
+}
+
+impl CpuDdpg {
+    pub fn new(combo: &ComboConfig, policy: &ExecPolicy, seed: u64) -> CpuDdpg {
+        let mut rng = Rng::new(seed ^ 0xDD96);
+        let cnet = critic_spec(&combo.net, combo.obs_dim, combo.act_dim);
+        let actor = Network::from_spec(&combo.net, Act::Tanh, policy, "actor", &mut rng);
+        let critic = Network::from_spec(&cnet, Act::None, policy, "critic", &mut rng);
+        let mut t_actor = Network::from_spec(&combo.net, Act::Tanh, policy, "t_actor", &mut rng);
+        let mut t_critic = Network::from_spec(&cnet, Act::None, policy, "t_critic", &mut rng);
+        t_actor.copy_weights_from(&actor);
+        t_critic.copy_weights_from(&critic);
+        CpuDdpg {
+            actor,
+            critic,
+            t_actor,
+            t_critic,
+            opt_a: Adam::new(1e-4),
+            opt_c: Adam::new(1e-3),
+            gamma: 0.99,
+            tau: 0.005,
+            policy: policy.clone(),
+        }
+    }
+
+    pub fn nets(&self) -> Vec<(&'static str, &Network)> {
+        vec![
+            ("actor", &self.actor),
+            ("critic", &self.critic),
+            ("t_actor", &self.t_actor),
+            ("t_critic", &self.t_critic),
+        ]
+    }
+}
+
+impl ComputeBackend for CpuDdpg {
+    fn exec_policy(&self) -> Option<&ExecPolicy> {
+        Some(&self.policy)
+    }
+}
+
+impl DdpgCompute for CpuDdpg {
+    fn action(&mut self, obs: &[f32]) -> Result<Vec<f32>> {
+        Ok(self.actor.infer(&obs_tensor(obs)).data)
+    }
+
+    fn train(&mut self, batch: &Batch, loss_scale: f32) -> Result<TrainOut> {
+        let bs = batch.size;
+        let bsf = bs as f32;
+        let obs = batch_tensor(&batch.obs, bs);
+        let next = batch_tensor(&batch.next_obs, bs);
+        let act = batch_tensor(&batch.actions_f32, bs);
+        // Critic update: y = r + γ(1−d)·Q'(s', µ'(s')).
+        let a2 = self.t_actor.infer(&next);
+        let q2 = self.t_critic.infer(&concat_cols(&next, &a2));
+        let q = self.critic.forward(&concat_cols(&obs, &act));
+        let mut dq = Tensor::zeros(&[bs, 1]);
+        let mut closs = 0.0f32;
+        for i in 0..bs {
+            let y = batch.rewards[i] + self.gamma * (1.0 - batch.dones[i]) * q2.data[i];
+            let diff = q.data[i] - y;
+            closs += diff * diff / bsf;
+            dq.data[i] = 2.0 * diff / bsf * loss_scale;
+        }
+        self.critic.zero_grads();
+        self.critic.backward(&dq, true);
+        // Actor gradients: maximize Q(s, µ(s)) — backprop through the
+        // critic (pre-update weights, fused-step semantics) to the
+        // action input, then through the actor.  The critic's own grads
+        // are not accumulated by this second pass.
+        let a = self.actor.forward(&obs);
+        let _qa = self.critic.forward(&concat_cols(&obs, &a));
+        let seed = Tensor::from_vec(vec![-loss_scale / bsf; bs], &[bs, 1]);
+        let dinput = self.critic.backward(&seed, false);
+        let od = obs.cols();
+        let ad = a.cols();
+        let mut da = Tensor::zeros(&[bs, ad]);
+        for i in 0..bs {
+            da.data[i * ad..(i + 1) * ad]
+                .copy_from_slice(&dinput.data[i * (od + ad) + od..(i + 1) * (od + ad)]);
+        }
+        self.actor.zero_grads();
+        self.actor.backward(&da, true);
+        // All-or-nothing conditional skip: overflow in *either* network's
+        // scaled gradients skips the whole fused step (no partial actor
+        // update while the critic is skipped, and vice versa).
+        let found_inf =
+            self.critic.has_non_finite_grads() || self.actor.has_non_finite_grads();
+        if !found_inf {
+            self.opt_c.step(self.critic.params_mut(), loss_scale);
+            self.opt_a.step(self.actor.params_mut(), loss_scale);
+            self.t_actor.soft_update_from(&self.actor, self.tau);
+            self.t_critic.soft_update_from(&self.critic, self.tau);
+        }
+        Ok(TrainOut { loss: closs, found_inf })
+    }
+}
+
+// ---------------------------------------------------------------- PPO --
+
+/// PPO on the CPU executor: discrete actor + value net, clipped
+/// surrogate with entropy bonus; the agent drives the epoch loop.
+pub struct CpuPpo {
+    pi: Network,
+    vf: Network,
+    opt: Adam,
+    clip: f32,
+    ent_coef: f32,
+    vf_coef: f32,
+    policy: ExecPolicy,
+}
+
+impl CpuPpo {
+    pub fn new(combo: &ComboConfig, policy: &ExecPolicy, seed: u64) -> CpuPpo {
+        let mut rng = Rng::new(seed ^ 0x990);
+        let pi = Network::from_spec(&combo.net, Act::None, policy, "actor", &mut rng);
+        let vf = Network::from_spec(&value_spec(&combo.net), Act::None, policy, "value", &mut rng);
+        CpuPpo {
+            pi,
+            vf,
+            opt: Adam::new(3e-4),
+            clip: 0.2,
+            ent_coef: 0.01,
+            vf_coef: 0.5,
+            policy: policy.clone(),
+        }
+    }
+
+    pub fn nets(&self) -> Vec<(&'static str, &Network)> {
+        vec![("actor", &self.pi), ("value", &self.vf)]
+    }
+}
+
+impl ComputeBackend for CpuPpo {
+    fn exec_policy(&self) -> Option<&ExecPolicy> {
+        Some(&self.policy)
+    }
+}
+
+impl PpoCompute for CpuPpo {
+    fn policy(&mut self, obs: &[f32]) -> Result<(Vec<f32>, f32)> {
+        let x = obs_tensor(obs);
+        let logits = self.pi.infer(&x).data;
+        let value = self.vf.infer(&x).data[0];
+        Ok((logits, value))
+    }
+
+    fn train(&mut self, batch: &RolloutBatch, loss_scale: f32) -> Result<TrainOut> {
+        let bs = batch.size;
+        let bsf = bs as f32;
+        let obs = batch_tensor(&batch.obs, bs);
+        let logits = self.pi.forward(&obs);
+        let v = self.vf.forward(&obs);
+        let na = logits.cols();
+        let mut dlogits = Tensor::zeros(&[bs, na]);
+        let mut dv = Tensor::zeros(&[bs, 1]);
+        let (mut ploss, mut vloss, mut ent) = (0.0f32, 0.0f32, 0.0f32);
+        for i in 0..bs {
+            let row = &logits.data[i * na..(i + 1) * na];
+            let max = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+            let logz = row.iter().map(|l| (l - max).exp()).sum::<f32>().ln() + max;
+            let logp: Vec<f32> = row.iter().map(|l| l - logz).collect();
+            let p: Vec<f32> = logp.iter().map(|l| l.exp()).collect();
+            let h: f32 = logp.iter().zip(&p).map(|(&lp, &pp)| -pp * lp).sum();
+            ent += h / bsf;
+            let a = batch.actions_i32[i] as usize;
+            let adv = batch.advantages[i];
+            let ratio = (logp[a] - batch.logp_old[i]).exp();
+            let s1 = ratio * adv;
+            let s2 = ratio.clamp(1.0 - self.clip, 1.0 + self.clip) * adv;
+            ploss += -s1.min(s2) / bsf;
+            let active = s1 <= s2;
+            for k in 0..na {
+                let onehot = if k == a { 1.0 } else { 0.0 };
+                let mut d = self.ent_coef * p[k] * (logp[k] + h);
+                if active {
+                    d += -adv * ratio * (onehot - p[k]);
+                }
+                dlogits.data[i * na + k] = d / bsf * loss_scale;
+            }
+            let diff = v.data[i] - batch.returns[i];
+            vloss += diff * diff / bsf;
+            dv.data[i] = self.vf_coef * 2.0 * diff / bsf * loss_scale;
+        }
+        let loss = ploss + self.vf_coef * vloss - self.ent_coef * ent;
+        self.pi.zero_grads();
+        self.pi.backward(&dlogits, true);
+        self.vf.zero_grads();
+        self.vf.backward(&dv, true);
+        let mut params = self.pi.params_mut();
+        params.extend(self.vf.params_mut());
+        let found_inf = self.opt.step(params, loss_scale);
+        Ok(TrainOut { loss, found_inf })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::combo;
+    use crate::drl::replay::{ReplayBuffer, StoredAction};
+
+    fn fp32_policy() -> ExecPolicy {
+        ExecPolicy::fp32()
+    }
+
+    #[test]
+    fn dqn_train_reduces_td_loss_on_fixed_batch() {
+        let c = combo("dqn_cartpole");
+        let policy = fp32_policy();
+        let mut model = CpuDqn::new(&c, &policy, 7);
+        let mut rb = ReplayBuffer::new(64, c.obs_dim);
+        let mut rng = Rng::new(3);
+        for _ in 0..32 {
+            let o: Vec<f32> = (0..c.obs_dim).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect();
+            let o2: Vec<f32> = (0..c.obs_dim).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect();
+            rb.push(&o, StoredAction::Discrete(rng.below(2) as i32), 1.0, &o2, false);
+        }
+        let batch = rb.sample(32, &mut rng);
+        let first = model.train(&batch, 1.0).unwrap();
+        assert!(!first.found_inf);
+        let mut last = first.loss;
+        for _ in 0..30 {
+            last = model.train(&batch, 1.0).unwrap().loss;
+        }
+        assert!(
+            last < first.loss,
+            "TD loss must fall on a fixed batch: {} -> {last}",
+            first.loss
+        );
+    }
+
+    #[test]
+    fn dqn_target_sync_makes_nets_agree() {
+        let c = combo("dqn_cartpole");
+        let mut model = CpuDqn::new(&c, &fp32_policy(), 9);
+        let mut rng = Rng::new(4);
+        let mut rb = ReplayBuffer::new(32, c.obs_dim);
+        for _ in 0..16 {
+            let o: Vec<f32> = (0..c.obs_dim).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect();
+            rb.push(&o, StoredAction::Discrete(0), 0.5, &o, false);
+        }
+        let batch = rb.sample(16, &mut rng);
+        for _ in 0..3 {
+            model.train(&batch, 1.0).unwrap();
+        }
+        let obs = vec![0.1, -0.2, 0.3, 0.0];
+        let q_online = model.qvalues(&obs).unwrap();
+        let q_target = model.target.infer(&obs_tensor(&obs)).data;
+        assert_ne!(q_online, q_target, "training must move online away from target");
+        model.sync_target().unwrap();
+        let q_target = model.target.infer(&obs_tensor(&obs)).data;
+        assert_eq!(q_online, q_target, "sync must align target with online");
+    }
+
+    #[test]
+    fn ddpg_actions_bounded_and_critic_loss_falls() {
+        let c = combo("ddpg_mntncar");
+        let mut model = CpuDdpg::new(&c, &fp32_policy(), 11);
+        let mut rng = Rng::new(5);
+        let a = model.action(&[0.3, -0.1]).unwrap();
+        assert_eq!(a.len(), c.act_dim);
+        assert!(a.iter().all(|x| x.abs() <= 1.0), "tanh head must bound actions");
+        let mut rb = ReplayBuffer::new(64, c.obs_dim);
+        for _ in 0..32 {
+            let o: Vec<f32> = (0..c.obs_dim).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect();
+            let act: Vec<f32> =
+                (0..c.act_dim).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect();
+            rb.push(&o, StoredAction::Continuous(act), 0.1, &o, false);
+        }
+        let batch = rb.sample(32, &mut rng);
+        let first = model.train(&batch, 1.0).unwrap();
+        let mut last = first.loss;
+        for _ in 0..20 {
+            last = model.train(&batch, 1.0).unwrap().loss;
+        }
+        assert!(last < first.loss, "critic loss must fall: {} -> {last}", first.loss);
+    }
+
+    #[test]
+    fn fp16_policy_arms_masters_and_scaled_training_survives() {
+        // All-FP16 routing (what a quantized all-PL cartpole plan gives):
+        // masters armed, huge loss scale overflows fp16 grads -> found_inf.
+        use super::super::policy::LayerFormats;
+        use crate::graph::NetSpec;
+        let fmt = LayerFormats {
+            fwd: Format::Fp16,
+            act: Format::Fp16,
+            bwd: Format::Fp16,
+            update: Format::Fp16,
+            master: true,
+        };
+        let mut rng = Rng::new(2);
+        let mut net =
+            Network::from_spec_uniform(&NetSpec::mlp(&[4, 8, 2]), Act::None, fmt, &mut rng);
+        for layer in &net.layers {
+            assert!(layer.w.master.is_some(), "FP16 layers must carry FP32 masters");
+        }
+        let x = Tensor::from_vec(vec![0.5, -0.5, 0.25, 0.0], &[2, 4]);
+        net.forward(&x);
+        let g = Tensor::from_vec(vec![1.0, -1.0, 0.5, 0.25], &[2, 2]);
+        net.zero_grads();
+        net.backward(&g, true);
+        let mut opt = Adam::new(1e-3);
+        assert!(!opt.step(net.params_mut(), 1.0));
+        // An absurd scaled loss overflows the rounded fp16 gradients
+        // (fp16 max finite is 65504, so 1e6 rounds straight to inf).
+        net.forward(&x);
+        let big = Tensor::from_vec(vec![1e6, -1e6, 5e5, 2.5e5], &[2, 2]);
+        net.zero_grads();
+        net.backward(&big, true);
+        let any_inf = net.params_mut().iter().any(|p| p.grad.iter().any(|v| !v.is_finite()));
+        assert!(any_inf, "fp16 rounding must overflow to inf at huge scale");
+        assert!(opt.step(net.params_mut(), 65536.0), "overflow must report found_inf");
+    }
+}

@@ -1,0 +1,211 @@
+//! Plan → executor precision routing.
+//!
+//! The planner's [`PlanOutcome`] carries the solved schedule with one
+//! format-by-name per CDFG node (`online/fc0/fwd`, `actor/conv1/bwd`,
+//! `critic/fc2/update`, …).  [`ExecPolicy`] folds that back into the
+//! per-(network, layer) table the CPU executor consumes, so a partition
+//! plan — local, remote or federated, it's the same wire shape —
+//! *literally* decides which layers train in BF16/FP16/FP32:
+//!
+//! * `fwd`/`act` formats round the layer's pre-activation / activation
+//!   outputs (and its resident weights: the store format is the forward
+//!   compute format — AIE keeps BF16 weights, PL FP16, PS FP32);
+//! * `bwd` rounds the dx/dw/db gradients;
+//! * an FP16 `update` node (a PL placement under Alg. 1) arms an FP32
+//!   master-weight copy, exactly as [`crate::quant::policy`] dictates;
+//! * any FP16 node anywhere arms the [`crate::quant::LossScaler`] FSM
+//!   (Table II: FP16 needs loss scaling, BF16/FP32 do not).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::planner::PlanOutcome;
+use crate::hw::Format;
+
+/// Formats one executor layer runs in, plus its master-weight arming.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LayerFormats {
+    /// Forward GEMM output format (also the weight storage format).
+    pub fwd: Format,
+    /// Activation output format (the CDFG's separate `act` node; equals
+    /// `fwd` for layers without one, i.e. network heads).
+    pub act: Format,
+    /// Backward dx/dw/db format.
+    pub bwd: Format,
+    /// Update-node format; FP16 here means "PL update" and arms a master.
+    pub update: Format,
+    /// Keep an FP32 master copy and apply optimizer math to it.
+    pub master: bool,
+}
+
+impl LayerFormats {
+    pub fn fp32() -> LayerFormats {
+        LayerFormats {
+            fwd: Format::Fp32,
+            act: Format::Fp32,
+            bwd: Format::Fp32,
+            update: Format::Fp32,
+            master: false,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct PartialFormats {
+    fwd: Option<Format>,
+    act: Option<Format>,
+    bwd: Option<Format>,
+    update: Option<Format>,
+}
+
+/// Per-(network tag, layer name) precision routing for one training run,
+/// derived from a planner schedule (or the all-FP32 control).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExecPolicy {
+    /// AP-DRL mixed precision (true) vs the FP32 control run.
+    pub quantized: bool,
+    /// Any FP16 node in the plan → the LossScaler FSM must be armed.
+    pub needs_loss_scaling: bool,
+    nodes: BTreeMap<(String, String), LayerFormats>,
+}
+
+impl ExecPolicy {
+    /// The FP32 control: every layer FP32, no scaling, no masters.
+    pub fn fp32() -> ExecPolicy {
+        ExecPolicy { quantized: false, needs_loss_scaling: false, nodes: BTreeMap::new() }
+    }
+
+    /// Fold a solved plan's schedule into executor routing.  Node names
+    /// that are not `tag/layer/kind` shaped (losses, soft updates) only
+    /// contribute to the loss-scaling decision, mirroring
+    /// `PrecisionPolicy::needs_loss_scaling` over *all* nodes.
+    pub fn from_outcome(plan: &PlanOutcome) -> Result<ExecPolicy> {
+        let mut partial: BTreeMap<(String, String), PartialFormats> = BTreeMap::new();
+        let mut needs_loss_scaling = false;
+        for step in &plan.schedule {
+            let fmt = Format::from_name(&step.format).ok_or_else(|| {
+                anyhow!("plan step {}: unknown format {:?}", step.name, step.format)
+            })?;
+            if fmt == Format::Fp16 {
+                needs_loss_scaling = true;
+            }
+            let mut parts = step.name.split('/');
+            let (Some(tag), Some(lname), Some(kind), None) =
+                (parts.next(), parts.next(), parts.next(), parts.next())
+            else {
+                continue;
+            };
+            let entry = partial.entry((tag.to_string(), lname.to_string())).or_default();
+            match kind {
+                "fwd" => entry.fwd = Some(fmt),
+                "act" => entry.act = Some(fmt),
+                "bwd" => entry.bwd = Some(fmt),
+                "update" => entry.update = Some(fmt),
+                _ => {}
+            }
+        }
+        let nodes = partial
+            .into_iter()
+            .map(|(key, p)| {
+                let fwd = p.fwd.unwrap_or(Format::Fp32);
+                let update = p.update.unwrap_or(fwd);
+                let lf = LayerFormats {
+                    fwd,
+                    act: p.act.unwrap_or(fwd),
+                    bwd: p.bwd.unwrap_or(fwd),
+                    update,
+                    master: plan.quantized && update == Format::Fp16,
+                };
+                (key, lf)
+            })
+            .collect();
+        Ok(ExecPolicy { quantized: plan.quantized, needs_loss_scaling, nodes })
+    }
+
+    /// Routing for one layer of one network; unknown (tag, layer) pairs —
+    /// every pair, for the FP32 control — default to FP32.
+    pub fn layer(&self, tag: &str, lname: &str) -> LayerFormats {
+        self.nodes
+            .get(&(tag.to_string(), lname.to_string()))
+            .copied()
+            .unwrap_or_else(LayerFormats::fp32)
+    }
+
+    /// Number of (network, layer) entries parsed from the plan.
+    pub fn layer_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Iterate the routing table (tests assert against the source plan).
+    pub fn entries(&self) -> impl Iterator<Item = (&(String, String), &LayerFormats)> {
+        self.nodes.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::planner::{LocalPlanner, PlanRequest, Planner};
+    use crate::coordinator::static_phase;
+
+    #[test]
+    fn fp32_policy_defaults_everything() {
+        let p = ExecPolicy::fp32();
+        assert!(!p.quantized && !p.needs_loss_scaling);
+        let lf = p.layer("online", "fc0");
+        assert_eq!(lf, LayerFormats::fp32());
+        assert_eq!(p.layer_count(), 0);
+    }
+
+    /// The executor's routing must agree node-for-node with the
+    /// coordinator-side `PrecisionPolicy` the plan was derived from —
+    /// this is the "plans literally decide layer formats" contract.
+    #[test]
+    fn from_outcome_matches_precision_policy_node_for_node() {
+        // Batch 64 is the Fig 15 all-PL CartPole plan asserted elsewhere
+        // (pipeline tests), so the format expectations below are stable.
+        let req = PlanRequest::named("dqn_cartpole").unwrap().with_batch(64);
+        let outcome = LocalPlanner.plan(&req).unwrap();
+        let policy = ExecPolicy::from_outcome(&outcome).unwrap();
+        let plan = static_phase(&req.combo, req.batch, req.quantized);
+        assert_eq!(policy.needs_loss_scaling, plan.policy.needs_loss_scaling);
+        assert!(policy.quantized);
+        for node in &plan.dag.nodes {
+            let mut parts = node.name.split('/');
+            let (Some(tag), Some(lname), Some(kind)) =
+                (parts.next(), parts.next(), parts.next())
+            else {
+                continue;
+            };
+            let lf = policy.layer(tag, lname);
+            let expect = plan.policy.node_format[node.id];
+            let got = match kind {
+                "fwd" => lf.fwd,
+                "act" => lf.act,
+                "bwd" => lf.bwd,
+                "update" => lf.update,
+                _ => continue,
+            };
+            assert_eq!(got, expect, "node {} routed {:?}, plan says {:?}", node.name, got, expect);
+        }
+        // cartpole quantized is all-PL: FP16 everywhere, masters armed.
+        let lf = policy.layer("online", "fc0");
+        assert_eq!(lf.fwd, Format::Fp16);
+        assert!(lf.master, "PL update nodes must arm an FP32 master");
+        assert!(policy.needs_loss_scaling);
+    }
+
+    #[test]
+    fn fp32_control_plan_routes_fp32_without_masters() {
+        let req = PlanRequest::named("dqn_cartpole").unwrap().with_batch(64).fp32();
+        let outcome = LocalPlanner.plan(&req).unwrap();
+        let policy = ExecPolicy::from_outcome(&outcome).unwrap();
+        assert!(!policy.quantized);
+        assert!(!policy.needs_loss_scaling);
+        for (_, lf) in policy.entries() {
+            assert_eq!(lf.fwd, Format::Fp32);
+            assert!(!lf.master);
+        }
+    }
+}

@@ -1,0 +1,199 @@
+//! Dense CPU tensors for the pure-Rust execution backend.
+//!
+//! A [`Tensor`] is a row-major `Vec<f32>` plus a shape.  The backend only
+//! needs rank-1/2 algebra (batched activations are `(batch, features)`
+//! matrices; conv layers run through their im2col GEMM shape, exactly the
+//! taxonomy the partitioner's CDFG uses), so the op set is deliberately
+//! small: three GEMM variants, bias/row reductions and in-place format
+//! rounding via [`crate::quant::formats`].
+//!
+//! All accumulation is f32; the coordinated formats (BF16/FP16) are
+//! applied *between* ops by [`Tensor::round_to`], mirroring how the AIE /
+//! PL datapaths store operands in the narrow format but accumulate wide.
+
+use crate::hw::Format;
+use crate::quant::formats::round_to;
+
+/// Row-major dense tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let elems: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; elems] }
+    }
+
+    pub fn from_vec(data: Vec<f32>, shape: &[usize]) -> Tensor {
+        let elems: usize = shape.iter().product();
+        assert_eq!(data.len(), elems, "data/shape mismatch: {} vs {:?}", data.len(), shape);
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.data.len()
+    }
+
+    /// First dimension (batch size for activation matrices).
+    pub fn rows(&self) -> usize {
+        self.shape[0]
+    }
+
+    /// Trailing element count per row (features).
+    pub fn cols(&self) -> usize {
+        self.data.len() / self.shape[0].max(1)
+    }
+
+    /// In-place round of every element into `fmt` (identity for FP32).
+    pub fn round_to(&mut self, fmt: Format) {
+        if fmt == Format::Fp32 {
+            return;
+        }
+        for x in self.data.iter_mut() {
+            *x = round_to(*x, fmt);
+        }
+    }
+
+    /// True when any element is NaN/±inf — the `found_inf` probe the
+    /// loss-scaling FSM consumes (FP16 rounding overflows to ±inf).
+    pub fn has_non_finite(&self) -> bool {
+        self.data.iter().any(|x| !x.is_finite())
+    }
+
+    /// `(m,k) · (k,n)` GEMM, f32 accumulation, ikj loop order.
+    pub fn matmul(&self, b: &Tensor) -> Tensor {
+        let (m, k) = (self.shape[0], self.cols());
+        assert_eq!(k, b.shape[0], "matmul inner dims: {k} vs {}", b.shape[0]);
+        let n = b.cols();
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (p, &a) in arow.iter().enumerate() {
+                let brow = &b.data[p * n..(p + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                    *o += a * bv;
+                }
+            }
+        }
+        Tensor { shape: vec![m, n], data: out }
+    }
+
+    /// `selfᵀ · b`: self is `(m,k)`, b is `(m,n)`, result `(k,n)` —
+    /// the dw GEMM (`xᵀ · dz`) of a dense layer's backward pass.
+    pub fn matmul_tn(&self, b: &Tensor) -> Tensor {
+        let (m, k) = (self.shape[0], self.cols());
+        assert_eq!(m, b.shape[0], "matmul_tn outer dims: {m} vs {}", b.shape[0]);
+        let n = b.cols();
+        let mut out = vec![0.0f32; k * n];
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let brow = &b.data[i * n..(i + 1) * n];
+            for (p, &a) in arow.iter().enumerate() {
+                let orow = &mut out[p * n..(p + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                    *o += a * bv;
+                }
+            }
+        }
+        Tensor { shape: vec![k, n], data: out }
+    }
+
+    /// `self · bᵀ`: self is `(m,k)`, b is `(n,k)`, result `(m,n)` —
+    /// the dx GEMM (`dz · wᵀ`) of a dense layer's backward pass.
+    pub fn matmul_nt(&self, b: &Tensor) -> Tensor {
+        let (m, k) = (self.shape[0], self.cols());
+        let n = b.shape[0];
+        assert_eq!(k, b.cols(), "matmul_nt inner dims: {k} vs {}", b.cols());
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &b.data[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (&a, &bv) in arow.iter().zip(brow.iter()) {
+                    acc += a * bv;
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        Tensor { shape: vec![m, n], data: out }
+    }
+
+    /// Add `bias` (len = cols) to every row.
+    pub fn add_bias(&mut self, bias: &[f32]) {
+        let n = self.cols();
+        assert_eq!(bias.len(), n, "bias length {} vs cols {n}", bias.len());
+        for row in self.data.chunks_mut(n) {
+            for (x, &b) in row.iter_mut().zip(bias.iter()) {
+                *x += b;
+            }
+        }
+    }
+
+    /// Column sums (the db reduction of a dense layer's backward pass).
+    pub fn col_sums(&self) -> Vec<f32> {
+        let n = self.cols();
+        let mut out = vec![0.0f32; n];
+        for row in self.data.chunks(n) {
+            for (o, &x) in out.iter_mut().zip(row.iter()) {
+                *o += x;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(data: &[f32], shape: &[usize]) -> Tensor {
+        Tensor::from_vec(data.to_vec(), shape)
+    }
+
+    #[test]
+    fn matmul_small() {
+        // (2,3)·(3,2)
+        let a = t(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        let b = t(&[7.0, 8.0, 9.0, 10.0, 11.0, 12.0], &[3, 2]);
+        let c = a.matmul(&b);
+        assert_eq!(c.shape, vec![2, 2]);
+        assert_eq!(c.data, vec![58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn matmul_variants_agree_with_explicit_transpose() {
+        let a = t(&[1.0, -2.0, 0.5, 3.0, 4.0, -1.0], &[2, 3]);
+        let b = t(&[2.0, 1.0, 0.0, -1.0, 1.5, 2.5], &[2, 3]);
+        // aᵀ·b via matmul_tn == transpose(a)·b
+        let at = t(&[1.0, 3.0, -2.0, 4.0, 0.5, -1.0], &[3, 2]);
+        assert_eq!(a.matmul_tn(&b).data, at.matmul(&b).data);
+        // a·bᵀ via matmul_nt == a·transpose(b)
+        let bt = t(&[2.0, -1.0, 1.0, 1.5, 0.0, 2.5], &[3, 2]);
+        assert_eq!(a.matmul_nt(&b).data, a.matmul(&bt).data);
+    }
+
+    #[test]
+    fn bias_and_col_sums() {
+        let mut x = t(&[1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        x.add_bias(&[10.0, 20.0]);
+        assert_eq!(x.data, vec![11.0, 22.0, 13.0, 24.0]);
+        assert_eq!(x.col_sums(), vec![24.0, 46.0]);
+    }
+
+    #[test]
+    fn rounding_and_overflow_probe() {
+        let mut x = t(&[1.0, 1e6, -3.0e-8], &[3]);
+        assert!(!x.has_non_finite());
+        x.round_to(Format::Fp16);
+        assert!(x.data[1].is_infinite(), "fp16 overflow must surface as inf");
+        assert!(x.has_non_finite());
+        let mut y = t(&[1.0, 2.0], &[2]);
+        y.round_to(Format::Fp32);
+        assert_eq!(y.data, vec![1.0, 2.0]);
+    }
+}

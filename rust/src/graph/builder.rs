@@ -291,8 +291,10 @@ pub fn build_train_graph(spec: &TrainSpec) -> Dag {
     dag
 }
 
-/// DDPG critic: same hidden sizes, input obs+act, scalar output.
-fn critic_spec(net: &NetSpec, obs_dim: usize, act_dim: usize) -> NetSpec {
+/// DDPG critic: same hidden sizes, input obs+act, scalar output.  Public
+/// because the CPU execution backend instantiates the same network
+/// shapes the CDFG describes.
+pub fn critic_spec(net: &NetSpec, obs_dim: usize, act_dim: usize) -> NetSpec {
     match net {
         NetSpec::Mlp { sizes } => {
             let mut s = sizes.clone();
@@ -304,8 +306,9 @@ fn critic_spec(net: &NetSpec, obs_dim: usize, act_dim: usize) -> NetSpec {
     }
 }
 
-/// A2C/PPO value net: same trunk, scalar head.
-fn value_spec(net: &NetSpec) -> NetSpec {
+/// A2C/PPO value net: same trunk, scalar head.  Public for the same
+/// reason as [`critic_spec`].
+pub fn value_spec(net: &NetSpec) -> NetSpec {
     match net {
         NetSpec::Mlp { sizes } => {
             let mut s = sizes.clone();

@@ -13,6 +13,6 @@ pub mod dag;
 pub mod flops;
 pub mod layer;
 
-pub use builder::{build_train_graph, Algo, NetSpec, TrainSpec};
+pub use builder::{build_train_graph, critic_spec, value_spec, Algo, NetSpec, TrainSpec};
 pub use dag::Dag;
 pub use layer::{LayerKind, Node, Phase};

@@ -69,6 +69,15 @@ impl Format {
             Format::Fx16 => "FX16",
         }
     }
+
+    pub const ALL: [Format; 4] = [Format::Fp32, Format::Fp16, Format::Bf16, Format::Fx16];
+
+    /// Inverse of [`name`](Format::name): `None` for unknown names.  The
+    /// CPU execution backend parses wire-schedule formats through this,
+    /// so the mapping lives next to its forward direction.
+    pub fn from_name(name: &str) -> Option<Format> {
+        Format::ALL.into_iter().find(|f| f.name() == name)
+    }
 }
 
 /// Static description of one processing unit.

@@ -9,7 +9,8 @@
 //!   ([`hw`]), layer-level CDFG of the DRL training step ([`graph`]),
 //!   DSE-based profiling ([`profile`]), ILP partitioning ([`partition`]),
 //!   the hardware-aware quantization state machine ([`quant`]), the DRL
-//!   runtime (environments [`envs`], agents [`drl`]) and the experiment
+//!   runtime (environments [`envs`], agent coordination [`drl`]), the
+//!   pure-Rust CPU execution backend ([`exec`]) and the experiment
 //!   coordinator ([`coordinator`]).
 //! * **L2/L1 (python/, build time only)** — JAX train/act steps calling
 //!   Pallas mixed-precision GEMM kernels, AOT-lowered to
@@ -18,18 +19,53 @@
 //! The real VEK280 testbed is substituted by an analytic performance model
 //! calibrated to the paper's reported constants (see DESIGN.md
 //! §Substitutions); numerics (quantization, convergence) are real and run
-//! through the PJRT artifacts.
+//! through the CPU executor by default, or the PJRT artifacts.
+//!
+//! ## The dynamic phase: one `Backend` API, two executors
+//!
+//! Training (the paper's dynamic phase, Fig 7 right) is served behind
+//! [`exec::Backend`]: the agents in [`drl`] own all coordination
+//! (exploration, replay/GAE, target schedules, the loss-scaling FSM)
+//! and delegate network math to per-algorithm compute traits
+//! ([`drl::compute`]), implemented twice:
+//!
+//! | backend | what executes | formats | availability |
+//! |---------|---------------|---------|--------------|
+//! | [`exec::CpuBackend`] | pure-Rust tensors ([`exec::tensor`]), hand-written backprop, Adam with masters | routed per layer from the partition plan via [`exec::ExecPolicy`], bit-exact BF16/FP16 emulation ([`quant::formats`]) | always (tier-1 CI trains through it) |
+//! | `exec::PjrtBackend` | AOT-lowered XLA artifacts over PJRT | baked into the lowered computation (`fp32`/`mixed`/`bf16` modes) | `pjrt` feature |
+//!
+//! The CPU path makes the plan → training hand-off literal: an FP16
+//! (PL) update node arms an FP32 master copy and the [`quant::LossScaler`]
+//! FSM; a BF16 (AIE) node stores weights in BF16 with no master; PS
+//! nodes stay FP32 — exactly Alg. 1 / Table II.
+//!
+//! ### `apdrl train` quickstart
+//!
+//! ```bash
+//! # plan the static phase, fold the schedule into a precision policy,
+//! # train on the CPU executor, and compare quantized vs FP32:
+//! apdrl train --combo dqn-cartpole --steps 5000 --train-every 2 --quantized
+//! # FP32 control only:
+//! apdrl train --combo dqn-cartpole --steps 5000
+//! # plan remotely (daemon or federation), train locally:
+//! apdrl train --combo ddpg-lunar --remote host1:7040,host2:7040 --quantized
+//! ```
+//!
+//! Reported per run: per-episode rewards, loss-scale FSM transitions
+//! (grows and overflow backoffs), converged reward, and — with
+//! `--quantized` — the reward-error summary against the FP32 control
+//! (paper Table III).
 //!
 //! ## Feature flags
 //!
 //! * **`pjrt`** (default **off**) — compiles the PJRT execution layer:
-//!   `runtime::{client, executor}`, the DRL agents
-//!   (`drl::{dqn, ddpg, a2c, ppo, network}`) and `coordinator::trainer`.
-//!   It needs the external `xla` bindings (not on crates.io; supply via a
+//!   `runtime::{client, executor}`, the artifact compute impls
+//!   (`drl::pjrt`, `drl::network`) and `exec::PjrtBackend`.  It needs
+//!   the external `xla` bindings (not on crates.io; supply via a
 //!   `[patch]`/path dependency) plus `make artifacts`.  Everything else —
 //!   the performance model, profiling, the partitioning planner, the
-//!   environments and the figure/bench machinery that does not train —
-//!   builds and tests offline with `cargo build && cargo test`.
+//!   environments and the whole CPU training path — builds, tests and
+//!   *trains* offline with `cargo build && cargo test`.
 //!
 //! ## The planning service: one `Planner` API, three backends
 //!
@@ -111,6 +147,7 @@
 pub mod coordinator;
 pub mod drl;
 pub mod envs;
+pub mod exec;
 pub mod graph;
 pub mod hw;
 pub mod partition;

@@ -244,6 +244,116 @@ mod tests {
         });
     }
 
+    /// Exhaustive codec check: every one of the 65,536 binary16 bit
+    /// patterns must survive decode → encode bit-exactly — except NaNs,
+    /// whose *class* is preserved (still NaN, same sign) while the
+    /// payload canonicalizes to the quiet pattern.
+    #[test]
+    fn f16_all_65536_bit_patterns_roundtrip() {
+        for b in 0..=u16::MAX {
+            let f = f16_to_f32(b);
+            let b2 = f32_to_f16(f);
+            let exp = (b >> 10) & 0x1F;
+            let frac = b & 0x3FF;
+            if exp == 0x1F && frac != 0 {
+                // NaN: class + sign preserved, payload canonicalized.
+                assert!(f.is_nan(), "{b:#06x} must decode to NaN");
+                assert_eq!(b2 & 0x8000, b & 0x8000, "{b:#06x}: NaN sign lost");
+                assert_eq!((b2 >> 10) & 0x1F, 0x1F, "{b:#06x}: NaN exponent lost");
+                assert_ne!(b2 & 0x3FF, 0, "{b:#06x}: NaN collapsed to infinity");
+            } else {
+                assert_eq!(b2, b, "{b:#06x} -> {f} -> {b2:#06x}");
+            }
+        }
+    }
+
+    /// Decoded binary16 values are exact in f32: re-rounding is identity
+    /// and the decode agrees with the value formula 2^(e-15)·(1+m/1024).
+    #[test]
+    fn f16_decode_matches_value_formula() {
+        for b in 0..=u16::MAX {
+            let f = f16_to_f32(b);
+            if f.is_nan() {
+                continue;
+            }
+            let sign = if b & 0x8000 != 0 { -1.0f64 } else { 1.0 };
+            let exp = ((b >> 10) & 0x1F) as i32;
+            let frac = (b & 0x3FF) as f64;
+            let expect = match exp {
+                0 => sign * frac * 2.0f64.powi(-24),
+                0x1F => sign * f64::INFINITY,
+                e => sign * 2.0f64.powi(e - 15) * (1.0 + frac / 1024.0),
+            };
+            assert_eq!(f as f64, expect, "{b:#06x}");
+        }
+    }
+
+    /// bf16 rounding is round-to-nearest-even: against a value-space
+    /// reference (nearest of the two bracketing bf16 values, ties to the
+    /// even mantissa), exhaustively over every exponent with the
+    /// interesting low-bit patterns, plus random property coverage.
+    #[test]
+    fn bf16_rne_matches_nearest_even_reference() {
+        fn check(x: f32) {
+            if x.is_nan() {
+                assert!(bf16_round(x).is_nan());
+                return;
+            }
+            let r = bf16_round(x);
+            if x.is_infinite() {
+                assert_eq!(r, x);
+                return;
+            }
+            assert_eq!(r.to_bits() & 0xFFFF, 0, "{x}: result not bf16-representable");
+            // Bracketing bf16 neighbours: truncated magnitude and one
+            // step outward (same sign); distances compared exactly in
+            // f64 (both operands have ≤24-bit mantissas within one bf16
+            // ULP of x, so the subtractions are exact).
+            let t = x.to_bits() & 0xFFFF_0000;
+            let c0 = f32::from_bits(t);
+            let c1 = f32::from_bits(t.wrapping_add(0x1_0000));
+            let xd = x as f64;
+            if !c1.is_finite() {
+                // Overflow boundary: the next step past the largest
+                // finite bf16 is ±inf, whose zero mantissa is the even
+                // side — so the exact midpoint and beyond round to inf,
+                // anything below stays at the largest finite value.
+                let max_bf16 = f32::from_bits(0x7F7F_0000) as f64;
+                let half_ulp = 2.0f64.powi(119); // ulp at exponent 127 is 2^120
+                if xd.abs() >= max_bf16 + half_ulp {
+                    assert!(
+                        r.is_infinite() && (r > 0.0) == (x > 0.0),
+                        "{x}: must overflow to signed inf, got {r}"
+                    );
+                } else {
+                    assert_eq!(r, c0, "{x}: premature overflow (got {r})");
+                }
+                return;
+            }
+            let rd = r as f64;
+            let d = (rd - xd).abs();
+            let d0 = (c0 as f64 - xd).abs();
+            let d1 = (c1 as f64 - xd).abs();
+            assert!(d <= d0 && d <= d1, "{x}: rounded {r} is not the nearest bf16");
+            if d0 == d1 {
+                // Exact tie: the kept mantissa LSB must be even.
+                assert_eq!(r.to_bits() >> 16 & 1, 0, "{x}: tie must round to even mantissa");
+            }
+        }
+        // Exhaustive over the upper half-word with structured low bits:
+        // every sign/exponent/mantissa-high pattern × the rounding edges.
+        for hi in 0..=u16::MAX {
+            let base = (hi as u32) << 16;
+            for lo in [0u32, 1, 0x7FFF, 0x8000, 0x8001, 0xFFFF] {
+                check(f32::from_bits(base | lo));
+            }
+        }
+        // And random full-width patterns.
+        forall(2000, 0xB16E, |rng| {
+            check(f32::from_bits(rng.next_u64() as u32));
+        });
+    }
+
     #[test]
     fn table2_rows() {
         let bf = format_info(Format::Bf16);

@@ -6,11 +6,13 @@
 //! always lands on the same daemon within a host list, so every shard
 //! rides its daemon's warm plan cache — and runs one worker thread per
 //! shard.  A shard whose daemon fails (connection refused, died
-//! mid-sweep, protocol error) marks its host dead and hands its
-//! unfinished requests to the surviving hosts; only when *every* host
-//! has failed does the sweep error.  Results merge back into request
-//! order, tagged `Provenance::Federated { shard }` with the host index
-//! that actually served them.
+//! mid-sweep, protocol error) marks its host dead; its unfinished
+//! requests are re-sharded **round-robin across every surviving host**
+//! (concurrent retry chunks, balanced to within one request), cascading
+//! if a survivor dies mid-retry.  Only when *every* host has failed does
+//! the sweep error.  Results merge back into request order, tagged
+//! `Provenance::Federated { shard }` with the host index that actually
+//! served them.
 //!
 //! Because all daemons run the same deterministic solver (and the plans
 //! of one grid point never depend on another's), a federated sweep is
@@ -226,30 +228,22 @@ impl Planner for FederatedPlanner {
                 });
             }
         });
-        // Fail-over pass: everything the dead shards left unfilled goes
-        // to the surviving hosts, tried in order until one serves the
-        // whole remainder (each attempt is all-or-nothing).
-        let pending: Vec<usize> =
+        // Fail-over passes: everything the dead shards left unfilled is
+        // re-sharded round-robin across *all* surviving hosts — a dead
+        // daemon's load spreads evenly instead of one survivor absorbing
+        // the whole remainder — and the retry chunks run concurrently.
+        // A survivor that dies during a retry round is dropped and the
+        // still-unserved remainder re-shards over whoever is left.
+        let mut pending: Vec<usize> =
             (0..reqs.len()).filter(|&i| slots[i].lock().unwrap().is_none()).collect();
-        if !pending.is_empty() {
-            let survivors: Vec<usize> =
-                (0..n).filter(|&i| alive[i].load(Ordering::SeqCst)).collect();
-            let mut served = false;
-            for &shard in &survivors {
-                match serve_shard(&self.hosts[shard], shard, &pending, reqs, &slots) {
-                    Ok(()) => {
-                        served = true;
-                        break;
-                    }
-                    Err(e) => {
-                        first_error.lock().unwrap().get_or_insert(e);
-                    }
-                }
-            }
-            if !served {
+        let mut survivors: Vec<usize> =
+            (0..n).filter(|&i| alive[i].load(Ordering::SeqCst)).collect();
+        while !pending.is_empty() {
+            if survivors.is_empty() {
                 let err = first_error
-                    .into_inner()
+                    .lock()
                     .unwrap()
+                    .take()
                     .unwrap_or_else(|| anyhow!("federated sweep failed"));
                 return Err(err.context(format!(
                     "federated sweep: {} of {} points unserved after trying all {} hosts",
@@ -258,6 +252,28 @@ impl Planner for FederatedPlanner {
                     n
                 )));
             }
+            let mut chunks: Vec<Vec<usize>> = vec![Vec::new(); survivors.len()];
+            for (pos, &req_idx) in pending.iter().enumerate() {
+                chunks[pos % survivors.len()].push(req_idx);
+            }
+            std::thread::scope(|s| {
+                for (ci, chunk) in chunks.iter().enumerate() {
+                    if chunk.is_empty() {
+                        continue;
+                    }
+                    let shard = survivors[ci];
+                    let (slots, alive, first_error) = (&slots, &alive, &first_error);
+                    let host = &self.hosts[shard];
+                    s.spawn(move || {
+                        if let Err(e) = serve_shard(host, shard, chunk, reqs, slots) {
+                            alive[shard].store(false, Ordering::SeqCst);
+                            first_error.lock().unwrap().get_or_insert(e);
+                        }
+                    });
+                }
+            });
+            pending.retain(|&i| slots[i].lock().unwrap().is_none());
+            survivors.retain(|&i| alive[i].load(Ordering::SeqCst));
         }
         let outcomes: Vec<PlanOutcome> = slots
             .into_iter()

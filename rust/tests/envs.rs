@@ -1,0 +1,97 @@
+//! Seeded determinism of every environment: `apdrl train` reproducibility
+//! rests on the env stream being a pure function of the seed, so for
+//! each env the same seed must give a *bit-identical* 200-step
+//! transition stream (observations, rewards, done flags), and a
+//! different seed must diverge.
+
+use apdrl::envs::{
+    Action, CartPole, Env, InvertedPendulum, LunarLanderCont, MiniBreakout, MiniMsPacman,
+    MountainCarCont,
+};
+use apdrl::util::Rng;
+
+/// Drive `env` for 200 steps (resetting on done) with seed-derived
+/// randomness; returns the full bit-level transition stream.
+fn stream(env: &mut dyn Env, seed: u64) -> Vec<(Vec<u32>, u64, bool)> {
+    let mut rng = Rng::new(seed);
+    let mut act_rng = rng.fork(0xAC7);
+    let mut out = Vec::with_capacity(200);
+    let mut _obs = env.reset(&mut rng);
+    for _ in 0..200 {
+        let action = if env.is_discrete() {
+            Action::Discrete(act_rng.below(env.action_dim()))
+        } else {
+            Action::Continuous(
+                (0..env.action_dim())
+                    .map(|_| act_rng.uniform_in(-1.0, 1.0) as f32)
+                    .collect(),
+            )
+        };
+        let tr = env.step(&action, &mut rng);
+        out.push((
+            tr.obs.iter().map(|x| x.to_bits()).collect(),
+            tr.reward.to_bits(),
+            tr.done,
+        ));
+        if tr.done {
+            _obs = env.reset(&mut rng);
+        } else {
+            _obs = tr.obs;
+        }
+    }
+    out
+}
+
+fn fresh_envs() -> Vec<(&'static str, Box<dyn Env>)> {
+    vec![
+        ("cartpole", Box::new(CartPole::new()) as Box<dyn Env>),
+        ("invpendulum", Box::new(InvertedPendulum::new())),
+        ("lunarcont", Box::new(LunarLanderCont::new())),
+        ("mntncarcont", Box::new(MountainCarCont::new())),
+        ("breakout_mini", Box::new(MiniBreakout::mini())),
+        ("mspacman_mini", Box::new(MiniMsPacman::mini())),
+        ("breakout_full", Box::new(MiniBreakout::full())),
+        ("mspacman_full", Box::new(MiniMsPacman::full())),
+    ]
+}
+
+#[test]
+fn same_seed_gives_bit_identical_200_step_streams() {
+    for seed in [1u64, 77] {
+        let mut first = fresh_envs();
+        let mut second = fresh_envs();
+        for ((name, a), (_, b)) in first.iter_mut().zip(second.iter_mut()) {
+            let sa = stream(a.as_mut(), seed);
+            let sb = stream(b.as_mut(), seed);
+            assert_eq!(sa.len(), 200, "{name}");
+            assert_eq!(sa, sb, "{name}: seed {seed} stream not bit-identical");
+        }
+    }
+}
+
+#[test]
+fn different_seeds_diverge() {
+    let mut first = fresh_envs();
+    let mut second = fresh_envs();
+    for ((name, a), (_, b)) in first.iter_mut().zip(second.iter_mut()) {
+        let sa = stream(a.as_mut(), 1);
+        let sb = stream(b.as_mut(), 2);
+        // Observations must differ somewhere in 200 steps (rewards may
+        // coincide — CartPole pays +1 per step).
+        let obs_a: Vec<&Vec<u32>> = sa.iter().map(|(o, _, _)| o).collect();
+        let obs_b: Vec<&Vec<u32>> = sb.iter().map(|(o, _, _)| o).collect();
+        assert_ne!(obs_a, obs_b, "{name}: different seeds gave one stream");
+    }
+}
+
+#[test]
+fn fresh_instance_equals_reused_instance_after_reset() {
+    // Determinism must not depend on construction-time state: a reused
+    // env re-seeded from scratch replays the same stream.
+    let mut reused = fresh_envs();
+    for (name, env) in reused.iter_mut() {
+        let a = stream(env.as_mut(), 9);
+        let b = stream(env.as_mut(), 9);
+        assert_eq!(a, b, "{name}: reused instance diverged from its own seed-9 stream");
+    }
+}

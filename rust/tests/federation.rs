@@ -152,6 +152,56 @@ fn all_three_backends_plan_identically_even_with_a_host_down() {
     assert!(federated_backend.plan(one).is_err());
 }
 
+/// Federation v2: a dead host's remaining batch re-shards **across all
+/// survivors** (balanced round-robin retry chunks), not onto a single
+/// adoptive host — and the merged results stay in request order,
+/// bit-identical to local plans.
+#[test]
+fn dead_host_remainder_rebalances_across_all_survivors() {
+    let (addr_a, handle_a) = boot(2);
+    let (addr_b, handle_b) = boot(2);
+    let (addr_c, handle_c) = boot(2);
+    let hosts = vec![addr_a.clone(), addr_b.clone(), addr_c.clone()];
+    let fed = FederatedPlanner::connect(&hosts).unwrap();
+    // Six points all homed on shard 0, so killing host 0 hands the whole
+    // batch to the fail-over path.
+    let homed: Vec<PlanRequest> = (1..400usize)
+        .map(|bs| PlanRequest::named("dqn_cartpole").unwrap().with_batch(bs))
+        .filter(|r| fed.shard_for(r) == 0)
+        .take(6)
+        .collect();
+    assert_eq!(homed.len(), 6, "expected six shard-0 points below batch 400");
+    RemotePlanner::connect(&addr_a).unwrap().shutdown().unwrap();
+    handle_a.join().unwrap();
+
+    let outcomes = fed.plan_many(&homed).unwrap();
+    // Merged order unchanged: outcome i is request i, bit-identical to
+    // the local control.
+    let local = LocalPlanner.plan_many(&homed).unwrap();
+    assert_identical("re-sharded vs local", &outcomes, &local);
+    // The remainder spread across BOTH survivors, balanced 3/3 — not one
+    // survivor absorbing all six.
+    let mut counts = [0usize; 3];
+    for o in &outcomes {
+        match o.provenance {
+            Provenance::Federated { shard } => counts[shard] += 1,
+            ref p => panic!("unexpected provenance {p:?}"),
+        }
+    }
+    assert_eq!(counts, [0, 3, 3], "round-robin must balance the dead host's remainder");
+    // Round-robin is positional: pending requests alternate survivors.
+    for (i, o) in outcomes.iter().enumerate() {
+        let expect = [1, 2][i % 2];
+        assert_eq!(o.provenance, Provenance::Federated { shard: expect }, "point {i}");
+    }
+
+    for addr in [&addr_b, &addr_c] {
+        RemotePlanner::connect(addr).unwrap().shutdown().unwrap();
+    }
+    handle_b.join().unwrap();
+    handle_c.join().unwrap();
+}
+
 /// Errors (unknown combos, inexpressible customized combos) surface
 /// through every backend as reported errors, not panics or misplans.
 #[test]

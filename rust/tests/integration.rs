@@ -159,7 +159,8 @@ fn cartpole_training_improves_over_random() {
     let Some(mut rt) = runtime() else { return };
     let c = combo("dqn_cartpole");
     let limits = TrainLimits { max_env_steps: 6_000, max_episodes: 400 };
-    let result = train_combo(&mut rt, &c, "mixed", 11, limits, false).unwrap();
+    let mut backend = apdrl::exec::PjrtBackend::new(&mut rt, "mixed");
+    let result = train_combo(&mut backend, &c, 11, limits, false).unwrap();
     let random_baseline = 25.0; // random CartPole episodes last ~20-25 steps
     let late = result.metrics.converged_reward(30);
     assert!(
