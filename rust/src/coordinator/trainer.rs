@@ -34,6 +34,11 @@ pub struct TrainResult {
     pub combo: String,
     /// Which execution backend (and precision) produced the run.
     pub backend: String,
+    /// Kernel threads the backend computed with (`APDRL_THREADS` /
+    /// `--threads`).  Reporting only: the CPU executor's kernels are
+    /// bit-exact across thread counts, so two runs differing only here
+    /// produce identical rewards and FSM logs (tests/train.rs).
+    pub threads: usize,
     pub seed: u64,
 }
 
@@ -47,6 +52,13 @@ pub fn train_combo(
 ) -> Result<TrainResult> {
     let t0 = Instant::now();
     let mut agent = backend.make_agent(combo, seed)?;
+    if verbose && backend.threads() > 1 {
+        eprintln!(
+            "  [{} seed {seed}] kernels on {} threads (bit-exact vs 1)",
+            combo.name,
+            backend.threads()
+        );
+    }
     let mut env = combo.try_make_env()?;
     let mut rng = Rng::new(seed);
     let mut env_rng = rng.fork(0xE74);
@@ -98,5 +110,11 @@ pub fn train_combo(
     }
     metrics.train_steps = agent.train_steps();
     metrics.wallclock_s = t0.elapsed().as_secs_f64();
-    Ok(TrainResult { metrics, combo: combo.name.into(), backend: backend.describe(), seed })
+    Ok(TrainResult {
+        metrics,
+        combo: combo.name.into(),
+        backend: backend.describe(),
+        threads: backend.threads(),
+        seed,
+    })
 }

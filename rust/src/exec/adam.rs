@@ -64,6 +64,10 @@ impl Adam {
         let bc2 = 1.0 - self.beta2.powi(self.t);
         for (pi, p) in params.iter_mut().enumerate() {
             let (ms, vs) = (&mut self.m[pi], &mut self.v[pi]);
+            // Stage the full-precision update element-wise, then derive
+            // the working copy in one vectorized `round_slice` pass
+            // (`Param::commit`) — bit-identical to per-element rounding,
+            // but the master-weight round-trip runs at slice throughput.
             for j in 0..p.elems() {
                 let g = p.grad[j] * inv_scale;
                 ms[j] = self.beta1 * ms[j] + (1.0 - self.beta1) * g;
@@ -71,8 +75,9 @@ impl Adam {
                 let mhat = ms[j] / bc1;
                 let vhat = vs[j] / bc2;
                 let x = p.accum_at(j) - self.lr * mhat / (vhat.sqrt() + self.eps);
-                p.set(j, x);
+                p.write_accum(j, x);
             }
+            p.commit();
         }
         self.steps_applied += 1;
         false

@@ -11,6 +11,8 @@
 //! * [`PjrtBackend`] — the lowered-artifact executors (`pjrt` feature),
 //!   where formats live inside the compiled computation.
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, ensure, Result};
 
 use crate::coordinator::config::ComboConfig;
@@ -25,6 +27,7 @@ use crate::quant::LossScaler;
 
 use super::models::{CpuA2c, CpuDdpg, CpuDqn, CpuPpo};
 use super::policy::ExecPolicy;
+use super::pool::Pool;
 
 /// An execution backend: builds agents whose network math it executes.
 pub trait Backend {
@@ -34,6 +37,12 @@ pub trait Backend {
 
     /// Build a fresh agent for `combo`, seeded deterministically.
     fn make_agent(&mut self, combo: &ComboConfig, seed: u64) -> Result<Box<dyn Agent>>;
+
+    /// Kernel threads this backend computes with — reporting only; the
+    /// CPU kernels are bit-exact at any thread count.
+    fn threads(&self) -> usize {
+        1
+    }
 }
 
 fn obs_shape_of(combo: &ComboConfig) -> Vec<usize> {
@@ -109,10 +118,14 @@ struct Tuning {
     batch: Option<usize>,
 }
 
-/// The pure-Rust CPU backend, precision-routed by an [`ExecPolicy`].
+/// The pure-Rust CPU backend, precision-routed by an [`ExecPolicy`],
+/// with its kernels fanned out over a [`Pool`] (the process-wide
+/// `APDRL_THREADS` pool unless [`CpuBackend::with_pool`] rebinds it —
+/// thread count changes wall-clock, never results).
 pub struct CpuBackend {
     policy: ExecPolicy,
     tuning: Tuning,
+    pool: Arc<Pool>,
 }
 
 impl CpuBackend {
@@ -122,7 +135,14 @@ impl CpuBackend {
     }
 
     pub fn from_policy(policy: ExecPolicy) -> CpuBackend {
-        CpuBackend { policy, tuning: Tuning::default() }
+        CpuBackend { policy, tuning: Tuning::default(), pool: Pool::global() }
+    }
+
+    /// Run the executor's kernels on an explicit pool (tests pin thread
+    /// counts; `apdrl train --threads N` routes through here).
+    pub fn with_pool(mut self, pool: Arc<Pool>) -> CpuBackend {
+        self.pool = pool;
+        self
     }
 
     /// Backend executing the precision routing of a solved plan — this
@@ -175,6 +195,7 @@ impl Backend for CpuBackend {
 
     fn make_agent(&mut self, combo: &ComboConfig, seed: u64) -> Result<Box<dyn Agent>> {
         let batch = self.tuning.batch.unwrap_or(combo.batch);
+        let pool = self.pool.clone();
         Ok(match combo.algo {
             Algo::Dqn => {
                 let mut cfg = DqnConfig::for_combo(batch, obs_shape_of(combo), combo.act_dim);
@@ -186,7 +207,7 @@ impl Backend for CpuBackend {
                 }
                 Box::new(DqnAgent::from_parts(
                     cfg,
-                    CpuDqn::new(combo, &self.policy, seed),
+                    CpuDqn::new_pooled(combo, &self.policy, seed, pool),
                     self.scaler(),
                 ))
             }
@@ -200,7 +221,7 @@ impl Backend for CpuBackend {
                 }
                 Box::new(DdpgAgent::from_parts(
                     cfg,
-                    CpuDdpg::new(combo, &self.policy, seed),
+                    CpuDdpg::new_pooled(combo, &self.policy, seed, pool),
                     self.scaler(),
                 ))
             }
@@ -208,7 +229,7 @@ impl Backend for CpuBackend {
                 let cfg = A2cConfig::for_combo(batch, combo.obs_dim, combo.act_dim);
                 Box::new(A2cAgent::from_parts(
                     cfg,
-                    CpuA2c::new(combo, &self.policy, seed),
+                    CpuA2c::new_pooled(combo, &self.policy, seed, pool),
                     self.scaler(),
                 ))
             }
@@ -216,11 +237,15 @@ impl Backend for CpuBackend {
                 let cfg = PpoConfig::for_combo(batch, obs_shape_of(combo), combo.act_dim);
                 Box::new(PpoAgent::from_parts(
                     cfg,
-                    CpuPpo::new(combo, &self.policy, seed),
+                    CpuPpo::new_pooled(combo, &self.policy, seed, pool),
                     self.scaler(),
                 ))
             }
         })
+    }
+
+    fn threads(&self) -> usize {
+        self.pool.threads()
     }
 }
 

@@ -10,12 +10,15 @@
 //! as ±inf in the rounded gradients, which is exactly the `found_inf`
 //! signal the loss-scaling FSM consumes.
 
+use std::sync::Arc;
+
 use crate::graph::NetSpec;
 use crate::hw::Format;
-use crate::quant::formats::round_to;
+use crate::quant::formats::{round_slice, round_to};
 use crate::util::Rng;
 
 use super::policy::{ExecPolicy, LayerFormats};
+use super::pool::Pool;
 use super::tensor::Tensor;
 
 /// Activation applied after a layer's GEMM.
@@ -60,6 +63,29 @@ impl Param {
             m[j] = x;
         }
         self.value.data[j] = round_to(x, self.store);
+    }
+
+    /// Stage a full-precision element without touching the working
+    /// copy's rounding: into the master when armed, else straight into
+    /// the working buffer.  Pair every staging sweep with one
+    /// [`Param::commit`] — together they do exactly what per-element
+    /// [`Param::set`] does, but with the storage rounding batched into
+    /// a single vectorized [`round_slice`] pass.
+    pub fn write_accum(&mut self, j: usize, x: f32) {
+        match &mut self.master {
+            Some(m) => m[j] = x,
+            None => self.value.data[j] = x,
+        }
+    }
+
+    /// Re-derive the working copy from the full-precision accumulator:
+    /// copy the master over (when armed) and round the whole buffer to
+    /// the storage format in one slice pass.
+    pub fn commit(&mut self) {
+        if let Some(m) = &self.master {
+            self.value.data.copy_from_slice(m);
+        }
+        round_slice(&mut self.value.data, self.store);
     }
 
     pub fn elems(&self) -> usize {
@@ -220,20 +246,22 @@ impl Layer {
         }
     }
 
-    /// Forward compute; returns `(cached input, output)` where the cached
-    /// input is the dense input itself or the conv im2col patch matrix.
-    fn compute(&self, x: &Tensor) -> (Tensor, Tensor) {
+    /// Forward compute on `pool`; returns `(cached input, output)` where
+    /// the cached input is the dense input itself or the conv im2col
+    /// patch matrix (whose GEMM rows — `batch · oh · ow` — are where
+    /// the conv path actually fans out over the pool).
+    fn compute(&self, x: &Tensor, pool: &Pool) -> (Tensor, Tensor) {
         let (gemm_in, mut z) = match &self.wiring {
             Wiring::Dense { din, .. } => {
                 assert_eq!(x.cols(), *din, "layer {}: input dim", self.name);
-                let mut z = x.matmul(&self.w.value);
+                let mut z = x.matmul_with(&self.w.value, pool);
                 z.add_bias(&self.b.value.data);
                 (x.clone(), z)
             }
             Wiring::Conv2d { in_hw, in_ch, out_ch, k, stride, out_hw } => {
                 assert_eq!(x.cols(), in_hw * in_hw * in_ch, "layer {}: input dim", self.name);
                 let patches = im2col(x, *in_hw, *in_ch, *k, *stride, *out_hw);
-                let mut z = patches.matmul(&self.w.value);
+                let mut z = patches.matmul_with(&self.w.value, pool);
                 // Per-channel bias while still in (rows, out_ch) GEMM
                 // shape, then fold back to (batch, oh·ow·oc) rows.
                 z.add_bias(&self.b.value.data);
@@ -263,23 +291,23 @@ impl Layer {
     }
 
     /// Forward for training: caches the state backward needs.
-    pub fn forward(&mut self, x: &Tensor) -> Tensor {
-        let (cx, a) = self.compute(x);
+    pub fn forward(&mut self, x: &Tensor, pool: &Pool) -> Tensor {
+        let (cx, a) = self.compute(x, pool);
         self.cache_x = Some(cx);
         self.cache_a = Some(a.clone());
         a
     }
 
     /// Forward for inference: no cache writes.
-    pub fn eval(&self, x: &Tensor) -> Tensor {
-        self.compute(x).1
+    pub fn eval(&self, x: &Tensor, pool: &Pool) -> Tensor {
+        self.compute(x, pool).1
     }
 
     /// Backward from the output gradient `g`; fills `w.grad`/`b.grad`
     /// when `accum` (a pass that only needs input gradients — DDPG's
     /// critic-through-actor — passes false) and returns the input
     /// gradient.
-    pub fn backward(&mut self, g: &Tensor, accum: bool) -> Tensor {
+    pub fn backward(&mut self, g: &Tensor, accum: bool, pool: &Pool) -> Tensor {
         let a = self.cache_a.as_ref().expect("layer backward without forward");
         let mut dz = g.clone();
         match self.act {
@@ -302,16 +330,14 @@ impl Layer {
         match &self.wiring {
             Wiring::Dense { .. } => {
                 if accum {
-                    let mut dw = x.matmul_tn(&dz);
+                    let mut dw = x.matmul_tn_with(&dz, pool);
                     dw.round_to(self.fmt.bwd);
                     self.w.grad.copy_from_slice(&dw.data);
                     let mut db = dz.col_sums();
-                    for v in db.iter_mut() {
-                        *v = round_to(*v, self.fmt.bwd);
-                    }
+                    round_slice(&mut db, self.fmt.bwd);
                     self.b.grad.copy_from_slice(&db);
                 }
-                let mut dx = dz.matmul_nt(&self.w.value);
+                let mut dx = dz.matmul_nt_with(&self.w.value, pool);
                 dx.round_to(self.fmt.bwd);
                 dx
             }
@@ -319,16 +345,14 @@ impl Layer {
                 let bs = dz.shape[0];
                 dz.shape = vec![bs * out_hw * out_hw, *out_ch];
                 if accum {
-                    let mut dw = x.matmul_tn(&dz);
+                    let mut dw = x.matmul_tn_with(&dz, pool);
                     dw.round_to(self.fmt.bwd);
                     self.w.grad.copy_from_slice(&dw.data);
                     let mut db = dz.col_sums();
-                    for v in db.iter_mut() {
-                        *v = round_to(*v, self.fmt.bwd);
-                    }
+                    round_slice(&mut db, self.fmt.bwd);
                     self.b.grad.copy_from_slice(&db);
                 }
-                let dpatches = dz.matmul_nt(&self.w.value);
+                let dpatches = dz.matmul_nt_with(&self.w.value, pool);
                 let mut dx = col2im(&dpatches, bs, *in_hw, *in_ch, *k, *stride, *out_hw);
                 dx.round_to(self.fmt.bwd);
                 dx
@@ -338,11 +362,15 @@ impl Layer {
 }
 
 /// A stack of layers built from a [`NetSpec`], with precision routed per
-/// layer from an [`ExecPolicy`] network tag.
+/// layer from an [`ExecPolicy`] network tag.  The network owns the
+/// [`Pool`] its kernels fan out over (the process-wide `APDRL_THREADS`
+/// pool by default; [`Network::with_pool`] rebinds it) — thread count
+/// never changes results, only wall-clock.
 #[derive(Clone, Debug)]
 pub struct Network {
     pub layers: Vec<Layer>,
     pub in_dim: usize,
+    pool: Arc<Pool>,
 }
 
 impl Network {
@@ -368,6 +396,17 @@ impl Network {
         Self::build(spec, final_act, |_| fmt, rng)
     }
 
+    /// Rebind the pool the kernels run on (builder style).
+    pub fn with_pool(mut self, pool: Arc<Pool>) -> Network {
+        self.pool = pool;
+        self
+    }
+
+    /// The pool this network computes on.
+    pub fn pool(&self) -> &Arc<Pool> {
+        &self.pool
+    }
+
     fn build(
         spec: &NetSpec,
         final_act: Act,
@@ -384,7 +423,7 @@ impl Network {
                     let fmt = fmt_of(&name);
                     layers.push(Layer::dense(name, sizes[i], sizes[i + 1], act, fmt, rng));
                 }
-                Network { layers, in_dim: sizes[0] }
+                Network { layers, in_dim: sizes[0], pool: Pool::global() }
             }
             NetSpec::Conv { in_hw, in_ch, conv, fc } => {
                 let total = conv.len() + fc.len();
@@ -408,7 +447,7 @@ impl Network {
                     din = dout;
                     idx += 1;
                 }
-                Network { layers, in_dim: in_hw * in_hw * in_ch }
+                Network { layers, in_dim: in_hw * in_hw * in_ch, pool: Pool::global() }
             }
         }
     }
@@ -419,9 +458,10 @@ impl Network {
 
     /// Training forward (caches per-layer state).
     pub fn forward(&mut self, x: &Tensor) -> Tensor {
+        let pool = self.pool.clone();
         let mut cur = x.clone();
         for layer in self.layers.iter_mut() {
-            cur = layer.forward(&cur);
+            cur = layer.forward(&cur, &pool);
         }
         cur
     }
@@ -430,16 +470,17 @@ impl Network {
     pub fn infer(&self, x: &Tensor) -> Tensor {
         let mut cur = x.clone();
         for layer in &self.layers {
-            cur = layer.eval(&cur);
+            cur = layer.eval(&cur, &self.pool);
         }
         cur
     }
 
     /// Backward from the output gradient; returns the input gradient.
     pub fn backward(&mut self, g: &Tensor, accum: bool) -> Tensor {
+        let pool = self.pool.clone();
         let mut grad = g.clone();
         for layer in self.layers.iter_mut().rev() {
-            grad = layer.backward(&grad, accum);
+            grad = layer.backward(&grad, accum, &pool);
         }
         grad
     }
@@ -498,16 +539,18 @@ fn copy_param(dst: &mut Param, src: &Param) {
     assert_eq!(dst.elems(), src.elems());
     for j in 0..dst.elems() {
         let x = src.accum_at(j);
-        dst.set(j, x);
+        dst.write_accum(j, x);
     }
+    dst.commit();
 }
 
 fn soft_param(dst: &mut Param, src: &Param, tau: f32) {
     assert_eq!(dst.elems(), src.elems());
     for j in 0..dst.elems() {
         let x = tau * src.accum_at(j) + (1.0 - tau) * dst.accum_at(j);
-        dst.set(j, x);
+        dst.write_accum(j, x);
     }
+    dst.commit();
 }
 
 #[cfg(test)]
@@ -664,6 +707,54 @@ mod tests {
         assert!((m - 1.0001).abs() < 1e-6, "master drifted: {m}");
         // Working copy is the fp16 rounding of the master.
         assert_eq!(p.value.data[0], crate::quant::formats::fp16_round(m));
+    }
+
+    /// The batched staging path (`write_accum` sweep + one `commit`)
+    /// must land bit-identically where per-element `set` does, for both
+    /// master-armed and master-less storage formats.
+    #[test]
+    fn write_accum_commit_matches_per_element_set() {
+        for (store, master) in [(Format::Fp16, true), (Format::Bf16, false), (Format::Fp32, false)]
+        {
+            let vals = vec![0.1f32, -2.5, 1e-3, 700.0, -0.0];
+            let mut a = Param::new(vals.clone(), &[5], store, master);
+            let mut b = Param::new(vals, &[5], store, master);
+            let mut rng = Rng::new(0xC0);
+            for step in 0..4 {
+                for j in 0..a.elems() {
+                    let x = rng.uniform_in(-3.0, 3.0) as f32 + step as f32;
+                    a.set(j, x);
+                    b.write_accum(j, x);
+                }
+                b.commit();
+                for j in 0..a.elems() {
+                    assert_eq!(
+                        a.value.data[j].to_bits(),
+                        b.value.data[j].to_bits(),
+                        "{store:?} step {step} elem {j}: working copies diverged"
+                    );
+                    assert_eq!(a.accum_at(j).to_bits(), b.accum_at(j).to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn networks_compute_identically_on_any_pool() {
+        use std::sync::Arc;
+        let spec = NetSpec::mlp(&[6, 48, 3]);
+        let x = {
+            let mut rng = Rng::new(40);
+            Tensor::from_vec(
+                (0..40 * 6).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect(),
+                &[40, 6],
+            )
+        };
+        let base = fp32_net(&spec, Act::None, 23).infer(&x);
+        for threads in [1usize, 3] {
+            let net = fp32_net(&spec, Act::None, 23).with_pool(Arc::new(Pool::new(threads)));
+            assert_eq!(net.infer(&x).data, base.data, "{threads}-thread pool diverged");
+        }
     }
 
     #[test]

@@ -7,7 +7,13 @@
 //! [`crate::quant::formats`]:
 //!
 //! * [`tensor`] — dense f32 tensors + the three GEMM variants the layer
-//!   math needs, with in-place format rounding;
+//!   math needs (cache-blocked, packed, row-parallel — bit-identical to
+//!   the `*_naive` references at any thread count), with in-place
+//!   format rounding through the vectorized
+//!   [`crate::quant::formats::round_slice`] fast path;
+//! * [`pool`] — the reusable scoped worker pool the kernels fan out
+//!   over, sized by `APDRL_THREADS` (thread count never changes
+//!   numerics, only wall-clock);
 //! * [`layers`] — dense/conv layers (im2col) with cached forward,
 //!   hand-written reverse-mode backward, per-layer [`LayerFormats`]
 //!   hooks and FP32 master copies where the policy arms them;
@@ -28,6 +34,7 @@ pub mod backend;
 pub mod layers;
 pub mod models;
 pub mod policy;
+pub mod pool;
 pub mod tensor;
 
 pub use adam::Adam;
@@ -37,4 +44,5 @@ pub use backend::PjrtBackend;
 pub use layers::{Act, Network, Param};
 pub use models::{CpuA2c, CpuDdpg, CpuDqn, CpuPpo};
 pub use policy::{ExecPolicy, LayerFormats};
+pub use pool::Pool;
 pub use tensor::Tensor;

@@ -15,6 +15,8 @@
 //! [`Adam`] optimizers detect scaled-gradient overflow (`found_inf`) and
 //! skip the update, completing the Fig 9 loop.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::coordinator::config::ComboConfig;
@@ -28,6 +30,7 @@ use crate::util::Rng;
 use super::adam::Adam;
 use super::layers::{Act, Network, Param};
 use super::policy::ExecPolicy;
+use super::pool::Pool;
 use super::tensor::Tensor;
 
 fn obs_tensor(obs: &[f32]) -> Tensor {
@@ -63,9 +66,21 @@ pub struct CpuDqn {
 
 impl CpuDqn {
     pub fn new(combo: &ComboConfig, policy: &ExecPolicy, seed: u64) -> CpuDqn {
+        Self::new_pooled(combo, policy, seed, Pool::global())
+    }
+
+    /// Same, with the networks' kernels bound to an explicit pool.
+    pub fn new_pooled(
+        combo: &ComboConfig,
+        policy: &ExecPolicy,
+        seed: u64,
+        pool: Arc<Pool>,
+    ) -> CpuDqn {
         let mut rng = Rng::new(seed ^ 0xD09);
-        let online = Network::from_spec(&combo.net, Act::None, policy, "online", &mut rng);
-        let mut target = Network::from_spec(&combo.net, Act::None, policy, "target", &mut rng);
+        let online = Network::from_spec(&combo.net, Act::None, policy, "online", &mut rng)
+            .with_pool(pool.clone());
+        let mut target = Network::from_spec(&combo.net, Act::None, policy, "target", &mut rng)
+            .with_pool(pool);
         target.copy_weights_from(&online);
         CpuDqn { online, target, opt: Adam::new(1e-3), gamma: 0.99, policy: policy.clone() }
     }
@@ -134,9 +149,21 @@ pub struct CpuA2c {
 
 impl CpuA2c {
     pub fn new(combo: &ComboConfig, policy: &ExecPolicy, seed: u64) -> CpuA2c {
+        Self::new_pooled(combo, policy, seed, Pool::global())
+    }
+
+    /// Same, with the networks' kernels bound to an explicit pool.
+    pub fn new_pooled(
+        combo: &ComboConfig,
+        policy: &ExecPolicy,
+        seed: u64,
+        pool: Arc<Pool>,
+    ) -> CpuA2c {
         let mut rng = Rng::new(seed ^ 0xA2C);
-        let pi = Network::from_spec(&combo.net, Act::None, policy, "actor", &mut rng);
-        let vf = Network::from_spec(&value_spec(&combo.net), Act::None, policy, "value", &mut rng);
+        let pi = Network::from_spec(&combo.net, Act::None, policy, "actor", &mut rng)
+            .with_pool(pool.clone());
+        let vf = Network::from_spec(&value_spec(&combo.net), Act::None, policy, "value", &mut rng)
+            .with_pool(pool);
         // log_std is a coordinator-resident FP32 parameter (no CDFG node).
         let log_std = Param::new(vec![0.0; combo.act_dim], &[combo.act_dim], Format::Fp32, false);
         CpuA2c {
@@ -232,12 +259,26 @@ pub struct CpuDdpg {
 
 impl CpuDdpg {
     pub fn new(combo: &ComboConfig, policy: &ExecPolicy, seed: u64) -> CpuDdpg {
+        Self::new_pooled(combo, policy, seed, Pool::global())
+    }
+
+    /// Same, with the networks' kernels bound to an explicit pool.
+    pub fn new_pooled(
+        combo: &ComboConfig,
+        policy: &ExecPolicy,
+        seed: u64,
+        pool: Arc<Pool>,
+    ) -> CpuDdpg {
         let mut rng = Rng::new(seed ^ 0xDD96);
         let cnet = critic_spec(&combo.net, combo.obs_dim, combo.act_dim);
-        let actor = Network::from_spec(&combo.net, Act::Tanh, policy, "actor", &mut rng);
-        let critic = Network::from_spec(&cnet, Act::None, policy, "critic", &mut rng);
-        let mut t_actor = Network::from_spec(&combo.net, Act::Tanh, policy, "t_actor", &mut rng);
-        let mut t_critic = Network::from_spec(&cnet, Act::None, policy, "t_critic", &mut rng);
+        let actor = Network::from_spec(&combo.net, Act::Tanh, policy, "actor", &mut rng)
+            .with_pool(pool.clone());
+        let critic = Network::from_spec(&cnet, Act::None, policy, "critic", &mut rng)
+            .with_pool(pool.clone());
+        let mut t_actor = Network::from_spec(&combo.net, Act::Tanh, policy, "t_actor", &mut rng)
+            .with_pool(pool.clone());
+        let mut t_critic = Network::from_spec(&cnet, Act::None, policy, "t_critic", &mut rng)
+            .with_pool(pool);
         t_actor.copy_weights_from(&actor);
         t_critic.copy_weights_from(&critic);
         CpuDdpg {
@@ -342,9 +383,21 @@ pub struct CpuPpo {
 
 impl CpuPpo {
     pub fn new(combo: &ComboConfig, policy: &ExecPolicy, seed: u64) -> CpuPpo {
+        Self::new_pooled(combo, policy, seed, Pool::global())
+    }
+
+    /// Same, with the networks' kernels bound to an explicit pool.
+    pub fn new_pooled(
+        combo: &ComboConfig,
+        policy: &ExecPolicy,
+        seed: u64,
+        pool: Arc<Pool>,
+    ) -> CpuPpo {
         let mut rng = Rng::new(seed ^ 0x990);
-        let pi = Network::from_spec(&combo.net, Act::None, policy, "actor", &mut rng);
-        let vf = Network::from_spec(&value_spec(&combo.net), Act::None, policy, "value", &mut rng);
+        let pi = Network::from_spec(&combo.net, Act::None, policy, "actor", &mut rng)
+            .with_pool(pool.clone());
+        let vf = Network::from_spec(&value_spec(&combo.net), Act::None, policy, "value", &mut rng)
+            .with_pool(pool);
         CpuPpo {
             pi,
             vf,

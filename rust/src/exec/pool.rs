@@ -1,0 +1,384 @@
+//! A small reusable scoped-thread pool for the CPU executor's kernels.
+//!
+//! The GEMM kernels split their *output rows* into independent blocks;
+//! this pool runs those blocks concurrently.  Because every output
+//! element is written by exactly one task and each task performs the
+//! same f32 accumulation sequence as the sequential blocked kernel,
+//! results are **bit-exact regardless of thread count** — the pool
+//! changes wall-clock, never numerics (asserted in `tests/kernels.rs`
+//! and the cross-thread training-determinism tests).
+//!
+//! Design constraints (same as the rest of the crate): `std` only, no
+//! crates.io.  Workers are long-lived (`spawn` per GEMM would dwarf the
+//! small training-step kernels) and coordinate through one mutex +
+//! two condvars:
+//!
+//! * [`Pool::run`] installs a job (an erased `&dyn Fn(usize)` plus an
+//!   atomic task cursor), bumps an epoch and wakes every worker;
+//! * each worker claims task indices from the shared cursor until the
+//!   job drains, then checks out of the epoch;
+//! * `run` itself participates (so a 1-thread pool is just an inline
+//!   loop) and only returns once **every** worker has checked out —
+//!   that check-out protocol is what makes the borrowed closure safe
+//!   to share without `'static`.
+//!
+//! Sizing: [`Pool::global`] reads the `APDRL_THREADS` environment
+//! variable once (default: `available_parallelism` capped at 8, the
+//! regime where the executor's row-block granularity still scales).
+//! Tests and `apdrl train --threads N` build explicit [`Pool::new`]
+//! instances instead of mutating the process environment.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Environment variable naming the executor's thread count.
+pub const ENV_THREADS: &str = "APDRL_THREADS";
+
+/// Hard cap on pool size (a tripwire against `APDRL_THREADS=1e9`).
+pub const MAX_THREADS: usize = 64;
+
+/// Default thread count: the machine's parallelism, capped at 8.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+}
+
+/// Parse an `APDRL_THREADS`-shaped value: a positive integer is clamped
+/// to [`MAX_THREADS`]; unset, empty, zero or unparsable values fall
+/// back to [`default_threads`].  Pure so tests cover it without
+/// touching the process environment.
+pub fn threads_from(val: Option<&str>) -> usize {
+    match val.map(str::trim) {
+        Some(v) if !v.is_empty() => match v.parse::<usize>() {
+            Ok(n) if n >= 1 => n.min(MAX_THREADS),
+            _ => default_threads(),
+        },
+        _ => default_threads(),
+    }
+}
+
+/// Type-erased borrowed task closure, lifetime-extended for storage in
+/// the shared slot.  The `'static` is a lie the epoch protocol makes
+/// good on: `run` installs the job, and does not return until every
+/// worker has checked out of the epoch — so no worker holds this
+/// reference once the real borrow ends.  (`&dyn Fn + Sync` is `Send`
+/// because the pointee is `Sync`, so no unsafe `Send` impl is needed;
+/// the only unsafety is the transmute at the install site.)
+struct TaskPtr(&'static (dyn Fn(usize) + Sync));
+
+/// Mutex-protected job slot shared with the workers.
+struct Slot {
+    /// Bumped once per job; workers run each epoch exactly once.
+    epoch: u64,
+    task: Option<TaskPtr>,
+    ntasks: usize,
+    /// Shared task cursor for the current epoch.
+    cursor: Arc<AtomicUsize>,
+    /// Workers that have not yet checked out of the current epoch.
+    active: usize,
+    /// A worker task panicked this epoch (re-raised by `run`).
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    work: Condvar,
+    done: Condvar,
+}
+
+/// Reusable worker pool; see the module docs for the protocol.
+pub struct Pool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    /// Serializes `run` callers; contenders fall back to inline
+    /// execution (bit-identical by construction), which also makes an
+    /// accidental nested `run` safe instead of a deadlock.
+    running: Mutex<()>,
+}
+
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pool").field("threads", &self.threads()).finish()
+    }
+}
+
+impl Pool {
+    /// Pool executing on `threads` threads total (the caller counts as
+    /// one: `new(1)` spawns nothing and runs inline).  Zero is treated
+    /// as one; the count is clamped to [`MAX_THREADS`].
+    pub fn new(threads: usize) -> Pool {
+        let threads = threads.clamp(1, MAX_THREADS);
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(Slot {
+                epoch: 0,
+                task: None,
+                ntasks: 0,
+                cursor: Arc::new(AtomicUsize::new(0)),
+                active: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let workers = (1..threads)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("apdrl-pool-{i}"))
+                    .spawn(move || worker(shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Pool { shared, workers, running: Mutex::new(()) }
+    }
+
+    /// The process-wide pool, sized once from `APDRL_THREADS`.
+    pub fn global() -> Arc<Pool> {
+        static GLOBAL: OnceLock<Arc<Pool>> = OnceLock::new();
+        GLOBAL
+            .get_or_init(|| {
+                Arc::new(Pool::new(threads_from(std::env::var(ENV_THREADS).ok().as_deref())))
+            })
+            .clone()
+    }
+
+    /// Total threads this pool computes with (workers + caller).
+    pub fn threads(&self) -> usize {
+        self.workers.len() + 1
+    }
+
+    /// Run `f(0), f(1), …, f(ntasks-1)` to completion, distributing
+    /// tasks over the workers and the calling thread.  Tasks must be
+    /// independent; the assignment of tasks to threads is unspecified
+    /// and varies between calls.  Panics in any task are re-raised
+    /// here after the whole job has drained.
+    pub fn run(&self, ntasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if ntasks == 0 {
+            return;
+        }
+        // Inline paths: trivial jobs, a 1-thread pool, or a second
+        // concurrent/nested caller (the workers are busy — results are
+        // identical either way, so just compute here).
+        let _guard = match (self.workers.is_empty() || ntasks == 1, self.running.try_lock()) {
+            (false, Ok(g)) => g,
+            _ => {
+                for i in 0..ntasks {
+                    f(i);
+                }
+                return;
+            }
+        };
+        let cursor = Arc::new(AtomicUsize::new(0));
+        // SAFETY: lifetime-extending transmute (see [`TaskPtr`]) — the
+        // epoch check-out barrier below keeps the borrow live for every
+        // dereference a worker can make.
+        let task: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            debug_assert!(slot.task.is_none(), "pool job slot not drained");
+            slot.epoch += 1;
+            slot.task = Some(TaskPtr(task));
+            slot.ntasks = ntasks;
+            slot.cursor = cursor.clone();
+            slot.active = self.workers.len();
+            self.shared.work.notify_all();
+        }
+        // The caller participates under the same cursor.
+        let caller = catch_unwind(AssertUnwindSafe(|| loop {
+            let i = cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= ntasks {
+                break;
+            }
+            f(i);
+        }));
+        // Epoch barrier: `f` must stay alive (and this frame must not
+        // unwind) until every worker has checked out.
+        let worker_panic = {
+            let mut slot = self.shared.slot.lock().unwrap();
+            while slot.active != 0 {
+                slot = self.shared.done.wait(slot).unwrap();
+            }
+            slot.task = None;
+            std::mem::take(&mut slot.panicked)
+        };
+        // Release the run lock *before* re-raising so a panicking task
+        // never poisons it (poison would silently force every later
+        // run onto the inline path).
+        drop(_guard);
+        if let Err(payload) = caller {
+            resume_unwind(payload);
+        }
+        if worker_panic {
+            panic!("apdrl pool: a parallel kernel task panicked");
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            slot.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker(shared: Arc<Shared>) {
+    let mut seen = 0u64;
+    loop {
+        // Wait for a new epoch (or shutdown), then lift the job out.
+        let (task, ntasks, cursor) = {
+            let mut slot = shared.slot.lock().unwrap();
+            loop {
+                if slot.shutdown {
+                    return;
+                }
+                if slot.epoch != seen && slot.task.is_some() {
+                    break;
+                }
+                slot = shared.work.wait(slot).unwrap();
+            }
+            seen = slot.epoch;
+            let task = slot.task.as_ref().expect("job present").0;
+            (task, slot.ntasks, slot.cursor.clone())
+        };
+        // `run` keeps the (transmuted) closure alive until this
+        // worker's check-out below.
+        let f = task;
+        let result = catch_unwind(AssertUnwindSafe(|| loop {
+            let i = cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= ntasks {
+                break;
+            }
+            f(i);
+        }));
+        let mut slot = shared.slot.lock().unwrap();
+        if result.is_err() {
+            slot.panicked = true;
+        }
+        slot.active -= 1;
+        if slot.active == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let pool = Pool::new(4);
+        for tasks in [0usize, 1, 2, 3, 17, 100] {
+            let hits: Vec<AtomicUsize> = (0..tasks).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(tasks, &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "task {i} of {tasks}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_is_inline() {
+        let pool = Pool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let sum = AtomicU64::new(0);
+        pool.run(10, &|i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 45);
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_jobs() {
+        let pool = Pool::new(3);
+        let total = AtomicU64::new(0);
+        for _ in 0..200 {
+            pool.run(8, &|i| {
+                total.fetch_add(i as u64 + 1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 200 * 36);
+    }
+
+    #[test]
+    fn oversubscribed_pool_still_completes() {
+        // More threads than cores and more tasks than threads.
+        let pool = Pool::new(8);
+        let hits = AtomicUsize::new(0);
+        pool.run(64, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn nested_run_falls_back_inline_instead_of_deadlocking() {
+        let pool = Pool::new(2);
+        let inner_hits = AtomicUsize::new(0);
+        pool.run(2, &|_| {
+            pool.run(3, &|_| {
+                inner_hits.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(inner_hits.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn worker_panic_is_propagated_and_pool_survives() {
+        let pool = Pool::new(4);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(16, &|i| {
+                if i == 7 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "task panic must surface to the caller");
+        // The pool still works afterwards.
+        let hits = AtomicUsize::new(0);
+        pool.run(5, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn threads_from_parses_and_defaults() {
+        assert_eq!(threads_from(Some("1")), 1);
+        assert_eq!(threads_from(Some("4")), 4);
+        assert_eq!(threads_from(Some(" 2 ")), 2);
+        assert_eq!(threads_from(Some("1000000")), MAX_THREADS);
+        let d = default_threads();
+        assert!(d >= 1);
+        assert_eq!(threads_from(None), d);
+        assert_eq!(threads_from(Some("")), d);
+        assert_eq!(threads_from(Some("0")), d);
+        assert_eq!(threads_from(Some("lots")), d);
+    }
+
+    #[test]
+    fn clamps_degenerate_sizes() {
+        assert_eq!(Pool::new(0).threads(), 1);
+        assert_eq!(Pool::new(2).threads(), 2);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_sized() {
+        let a = Pool::global();
+        let b = Pool::global();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(a.threads() >= 1 && a.threads() <= MAX_THREADS);
+    }
+}

@@ -8,11 +8,49 @@
 //! rounding via [`crate::quant::formats`].
 //!
 //! All accumulation is f32; the coordinated formats (BF16/FP16) are
-//! applied *between* ops by [`Tensor::round_to`], mirroring how the AIE /
-//! PL datapaths store operands in the narrow format but accumulate wide.
+//! applied *between* ops by [`Tensor::round_to`] (the vectorized
+//! [`round_slice`] fast path), mirroring how the AIE / PL datapaths store
+//! operands in the narrow format but accumulate wide.
+//!
+//! ## Fast kernels, bit-exact by construction
+//!
+//! Each GEMM variant ships in two implementations:
+//!
+//! * `matmul{,_tn,_nt}_naive` — the original triple loops, kept as the
+//!   reference the kernel-equivalence suite (`tests/kernels.rs`) pins
+//!   everything else against;
+//! * `matmul{,_tn,_nt}` / `*_with(pool)` — cache-blocked kernels: the
+//!   right operand is packed once into `NR`-wide panels, the left
+//!   operand into `MR`-row groups per (row-block × k-block), and an
+//!   `MR×NR` register-accumulator micro-kernel walks the reduction.
+//!   Output row-blocks are independent, so they fan out over a
+//!   [`Pool`] (`APDRL_THREADS`).
+//!
+//! The blocked kernels keep the **per-output-element f32 accumulation
+//! order identical to the naive references**: reduction blocks are
+//! visited in ascending order and every partial sum round-trips through
+//! f32 exactly, so `blocked == naive` bit-for-bit — at any thread
+//! count, because each output row is owned by exactly one task.  That
+//! is what lets the mixed-precision training loop (loss-scale FSM,
+//! reward trajectories) stay bit-identical when `APDRL_THREADS` changes.
 
 use crate::hw::Format;
-use crate::quant::formats::round_to;
+use crate::quant::formats::round_slice;
+
+use super::pool::Pool;
+
+/// Micro-kernel rows (left-operand register tile height).
+const MR: usize = 4;
+/// Micro-kernel lanes (packed right-operand panel width).
+const NR: usize = 8;
+/// Output rows per parallel task / cache block.
+const MC: usize = 32;
+/// Reduction-dimension block (keeps the packed A panel L1/L2-resident).
+const KC: usize = 256;
+/// Below this many multiply-accumulates a GEMM stays sequential — the
+/// pool's wake/join latency would dominate (results are identical
+/// either way; this is purely a latency knob).
+const PAR_MIN_MACS: usize = 65_536;
 
 /// Row-major dense tensor.
 #[derive(Clone, Debug, PartialEq)]
@@ -42,19 +80,23 @@ impl Tensor {
         self.shape[0]
     }
 
-    /// Trailing element count per row (features).
+    /// Trailing element count per row: the product of `shape[1..]`.
+    ///
+    /// Defined from the *shape*, not `data.len() / rows`, so empty
+    /// tensors keep their true row width (`shape == [0, n]` → `n`) —
+    /// zero-sized GEMM operands would otherwise lose their inner
+    /// dimension and fail the conformance asserts.  Rank-1 tensors are
+    /// column vectors (`cols() == 1`); rank-0 tensors are rejected —
+    /// every executor tensor carries at least one dimension.
     pub fn cols(&self) -> usize {
-        self.data.len() / self.shape[0].max(1)
+        assert!(!self.shape.is_empty(), "cols() on a rank-0 tensor");
+        self.shape[1..].iter().product()
     }
 
-    /// In-place round of every element into `fmt` (identity for FP32).
+    /// In-place round of every element into `fmt` (identity for FP32),
+    /// through the vectorized [`round_slice`] fast path.
     pub fn round_to(&mut self, fmt: Format) {
-        if fmt == Format::Fp32 {
-            return;
-        }
-        for x in self.data.iter_mut() {
-            *x = round_to(*x, fmt);
-        }
+        round_slice(&mut self.data, fmt);
     }
 
     /// True when any element is NaN/±inf — the `found_inf` probe the
@@ -63,8 +105,11 @@ impl Tensor {
         self.data.iter().any(|x| !x.is_finite())
     }
 
-    /// `(m,k) · (k,n)` GEMM, f32 accumulation, ikj loop order.
-    pub fn matmul(&self, b: &Tensor) -> Tensor {
+    // ------------------------------------------------ naive references --
+
+    /// `(m,k) · (k,n)` GEMM, f32 accumulation, ikj loop order — the
+    /// reference implementation the blocked kernels are bit-pinned to.
+    pub fn matmul_naive(&self, b: &Tensor) -> Tensor {
         let (m, k) = (self.shape[0], self.cols());
         assert_eq!(k, b.shape[0], "matmul inner dims: {k} vs {}", b.shape[0]);
         let n = b.cols();
@@ -82,9 +127,9 @@ impl Tensor {
         Tensor { shape: vec![m, n], data: out }
     }
 
-    /// `selfᵀ · b`: self is `(m,k)`, b is `(m,n)`, result `(k,n)` —
-    /// the dw GEMM (`xᵀ · dz`) of a dense layer's backward pass.
-    pub fn matmul_tn(&self, b: &Tensor) -> Tensor {
+    /// `selfᵀ · b` reference: self is `(m,k)`, b is `(m,n)`, result
+    /// `(k,n)` — the dw GEMM (`xᵀ · dz`) of a dense backward pass.
+    pub fn matmul_tn_naive(&self, b: &Tensor) -> Tensor {
         let (m, k) = (self.shape[0], self.cols());
         assert_eq!(m, b.shape[0], "matmul_tn outer dims: {m} vs {}", b.shape[0]);
         let n = b.cols();
@@ -102,9 +147,9 @@ impl Tensor {
         Tensor { shape: vec![k, n], data: out }
     }
 
-    /// `self · bᵀ`: self is `(m,k)`, b is `(n,k)`, result `(m,n)` —
-    /// the dx GEMM (`dz · wᵀ`) of a dense layer's backward pass.
-    pub fn matmul_nt(&self, b: &Tensor) -> Tensor {
+    /// `self · bᵀ` reference: self is `(m,k)`, b is `(n,k)`, result
+    /// `(m,n)` — the dx GEMM (`dz · wᵀ`) of a dense backward pass.
+    pub fn matmul_nt_naive(&self, b: &Tensor) -> Tensor {
         let (m, k) = (self.shape[0], self.cols());
         let n = b.shape[0];
         assert_eq!(k, b.cols(), "matmul_nt inner dims: {k} vs {}", b.cols());
@@ -121,6 +166,60 @@ impl Tensor {
             }
         }
         Tensor { shape: vec![m, n], data: out }
+    }
+
+    // ------------------------------------------------- blocked kernels --
+
+    /// `(m,k) · (k,n)` GEMM — blocked/packed, parallel on `pool`,
+    /// bit-identical to [`Tensor::matmul_naive`].
+    pub fn matmul_with(&self, b: &Tensor, pool: &Pool) -> Tensor {
+        let (m, k) = (self.shape[0], self.cols());
+        assert_eq!(k, b.shape[0], "matmul inner dims: {k} vs {}", b.shape[0]);
+        let n = b.cols();
+        let bpack = pack_b_rows(&b.data, k, n);
+        let data = gemm(&self.data, k, false, &bpack, m, n, k, pool);
+        Tensor { shape: vec![m, n], data }
+    }
+
+    /// `selfᵀ · b` — blocked/packed, bit-identical to
+    /// [`Tensor::matmul_tn_naive`].  The reduction runs over this
+    /// tensor's rows, so the packed left panel reads contiguous
+    /// `MR`-chunks of each row (no strided gather).
+    pub fn matmul_tn_with(&self, b: &Tensor, pool: &Pool) -> Tensor {
+        let (m, k) = (self.shape[0], self.cols());
+        assert_eq!(m, b.shape[0], "matmul_tn outer dims: {m} vs {}", b.shape[0]);
+        let n = b.cols();
+        let bpack = pack_b_rows(&b.data, m, n);
+        let data = gemm(&self.data, k, true, &bpack, k, n, m, pool);
+        Tensor { shape: vec![k, n], data }
+    }
+
+    /// `self · bᵀ` — blocked, with `b` packed *transposed* so the
+    /// micro-kernel streams contiguous panels; bit-identical to
+    /// [`Tensor::matmul_nt_naive`] (same per-element term order; the
+    /// partial sums round-trip through f32 exactly).
+    pub fn matmul_nt_with(&self, b: &Tensor, pool: &Pool) -> Tensor {
+        let (m, k) = (self.shape[0], self.cols());
+        let n = b.shape[0];
+        assert_eq!(k, b.cols(), "matmul_nt inner dims: {k} vs {}", b.cols());
+        let bpack = pack_b_cols(&b.data, k, n);
+        let data = gemm(&self.data, k, false, &bpack, m, n, k, pool);
+        Tensor { shape: vec![m, n], data }
+    }
+
+    /// [`Tensor::matmul_with`] on the process-wide pool.
+    pub fn matmul(&self, b: &Tensor) -> Tensor {
+        self.matmul_with(b, &Pool::global())
+    }
+
+    /// [`Tensor::matmul_tn_with`] on the process-wide pool.
+    pub fn matmul_tn(&self, b: &Tensor) -> Tensor {
+        self.matmul_tn_with(b, &Pool::global())
+    }
+
+    /// [`Tensor::matmul_nt_with`] on the process-wide pool.
+    pub fn matmul_nt(&self, b: &Tensor) -> Tensor {
+        self.matmul_nt_with(b, &Pool::global())
     }
 
     /// Add `bias` (len = cols) to every row.
@@ -147,6 +246,222 @@ impl Tensor {
     }
 }
 
+// ------------------------------------------------------------------------
+// Blocked GEMM internals.  The logical problem is always
+// `out[row][j] = Σ_p A(row, p) · Bp(p, j)` with `row < mout`,
+// `j < nout`, `p < red`; the three public variants differ only in how
+// `A(row, p)` maps onto this tensor's storage (`atrans`) and how `Bp`
+// was packed (row-major vs transposed source).
+
+/// Pack row-major `b` (`red × nout`) into `NR`-wide strip-major panels:
+/// `out[s·red·NR + p·NR + l] = b[p][s·NR + l]`, zero-padding the last
+/// strip's missing lanes (padded lanes are never stored back).
+fn pack_b_rows(b: &[f32], red: usize, nout: usize) -> Vec<f32> {
+    let nstrips = nout.div_ceil(NR);
+    let mut out = vec![0.0f32; nstrips * red * NR];
+    for s in 0..nstrips {
+        let j0 = s * NR;
+        let w = NR.min(nout - j0);
+        let base = s * red * NR;
+        for p in 0..red {
+            let src = &b[p * nout + j0..p * nout + j0 + w];
+            out[base + p * NR..base + p * NR + w].copy_from_slice(src);
+        }
+    }
+    out
+}
+
+/// Pack row-major `b` (`nout × red`) *transposed* into the same panel
+/// layout: `out[s·red·NR + p·NR + l] = b[s·NR + l][p]`.
+fn pack_b_cols(b: &[f32], red: usize, nout: usize) -> Vec<f32> {
+    let nstrips = nout.div_ceil(NR);
+    let mut out = vec![0.0f32; nstrips * red * NR];
+    for s in 0..nstrips {
+        let j0 = s * NR;
+        let w = NR.min(nout - j0);
+        let base = s * red * NR;
+        for l in 0..w {
+            let row = &b[(j0 + l) * red..(j0 + l + 1) * red];
+            for (p, &v) in row.iter().enumerate() {
+                out[base + p * NR + l] = v;
+            }
+        }
+    }
+    out
+}
+
+/// Pack the left operand's rows `[row0, row0+rowc)` × reduction block
+/// `[k0, k0+kc)` into `MR`-row groups, reduction-major within a group
+/// (`out[g·kc·MR + p·MR + r]`), zero-padding the tail group's rows.
+/// `atrans` selects the storage map: `false` → `A(row, p) =
+/// a[row·astride + p]` (matmul / matmul_nt), `true` → `A(row, p) =
+/// a[p·astride + row]` (matmul_tn's transposed view, where each
+/// reduction step's `MR`-chunk is contiguous).
+#[allow(clippy::too_many_arguments)]
+fn pack_a(
+    a: &[f32],
+    astride: usize,
+    atrans: bool,
+    row0: usize,
+    rowc: usize,
+    k0: usize,
+    kc: usize,
+    out: &mut Vec<f32>,
+) {
+    let groups = rowc.div_ceil(MR);
+    out.clear();
+    out.resize(groups * kc * MR, 0.0);
+    for g in 0..groups {
+        let r0 = row0 + g * MR;
+        let h = MR.min(row0 + rowc - r0);
+        let dst = &mut out[g * kc * MR..(g + 1) * kc * MR];
+        if atrans {
+            for p in 0..kc {
+                let src0 = (k0 + p) * astride + r0;
+                dst[p * MR..p * MR + h].copy_from_slice(&a[src0..src0 + h]);
+            }
+        } else {
+            for r in 0..h {
+                let row = &a[(r0 + r) * astride + k0..(r0 + r) * astride + k0 + kc];
+                for (p, &v) in row.iter().enumerate() {
+                    dst[p * MR + r] = v;
+                }
+            }
+        }
+    }
+}
+
+/// `MR×NR` register-tile micro-kernel: accumulate one packed A group
+/// against one packed B strip over `kc` reduction steps, loading and
+/// storing the live `mr × nr` corner of `out_rows`.  Terms are added in
+/// ascending reduction order — the bit-exactness contract.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn micro_kernel(
+    out_rows: &mut [f32],
+    nout: usize,
+    r0: usize,
+    mr: usize,
+    j0: usize,
+    nr: usize,
+    apack: &[f32],
+    bpack: &[f32],
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for r in 0..mr {
+        let at = (r0 + r) * nout + j0;
+        acc[r][..nr].copy_from_slice(&out_rows[at..at + nr]);
+    }
+    for (av, bv) in apack.chunks_exact(MR).zip(bpack.chunks_exact(NR)) {
+        for r in 0..MR {
+            let a = av[r];
+            for l in 0..NR {
+                acc[r][l] += a * bv[l];
+            }
+        }
+    }
+    for r in 0..mr {
+        let at = (r0 + r) * nout + j0;
+        out_rows[at..at + nr].copy_from_slice(&acc[r][..nr]);
+    }
+}
+
+/// One row-block task: every k-block × strip for output rows
+/// `[row0, row0+rowc)`.  `out_rows` covers exactly those rows.
+#[allow(clippy::too_many_arguments)]
+fn gemm_rows(
+    a: &[f32],
+    astride: usize,
+    atrans: bool,
+    bpack: &[f32],
+    nout: usize,
+    red: usize,
+    out_rows: &mut [f32],
+    row0: usize,
+    rowc: usize,
+    apack: &mut Vec<f32>,
+) {
+    let nstrips = nout.div_ceil(NR);
+    let groups = rowc.div_ceil(MR);
+    let mut k0 = 0usize;
+    while k0 < red {
+        let kc = KC.min(red - k0);
+        pack_a(a, astride, atrans, row0, rowc, k0, kc, apack);
+        for s in 0..nstrips {
+            let j0 = s * NR;
+            let nr = NR.min(nout - j0);
+            let b0 = s * red * NR + k0 * NR;
+            let bblk = &bpack[b0..b0 + kc * NR];
+            for g in 0..groups {
+                let ablk = &apack[g * kc * MR..(g + 1) * kc * MR];
+                micro_kernel(out_rows, nout, g * MR, MR.min(rowc - g * MR), j0, nr, ablk, bblk);
+            }
+        }
+        k0 += kc;
+    }
+}
+
+/// Shared pointer into the output buffer; tasks write disjoint row
+/// ranges (see the SAFETY note at the use site).
+struct OutPtr(*mut f32);
+unsafe impl Sync for OutPtr {}
+
+/// Blocked-GEMM dispatch: sequential for small jobs or 1-thread pools,
+/// row-block parallel otherwise.  Every path is bit-identical — the
+/// thresholds are latency knobs, never numerics.
+#[allow(clippy::too_many_arguments)]
+fn gemm(
+    a: &[f32],
+    astride: usize,
+    atrans: bool,
+    bpack: &[f32],
+    mout: usize,
+    nout: usize,
+    red: usize,
+    pool: &Pool,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; mout * nout];
+    if mout == 0 || nout == 0 || red == 0 {
+        return out; // the empty reduction is exactly the zero matrix
+    }
+    let nblocks = mout.div_ceil(MC);
+    let macs = mout.saturating_mul(nout).saturating_mul(red);
+    if pool.threads() == 1 || nblocks == 1 || macs < PAR_MIN_MACS {
+        let mut apack = Vec::new();
+        for blk in 0..nblocks {
+            let row0 = blk * MC;
+            let rowc = MC.min(mout - row0);
+            gemm_rows(
+                a,
+                astride,
+                atrans,
+                bpack,
+                nout,
+                red,
+                &mut out[row0 * nout..(row0 + rowc) * nout],
+                row0,
+                rowc,
+                &mut apack,
+            );
+        }
+    } else {
+        let optr = OutPtr(out.as_mut_ptr());
+        pool.run(nblocks, &|blk| {
+            let row0 = blk * MC;
+            let rowc = MC.min(mout - row0);
+            // SAFETY: each task reconstructs a &mut over *its own*
+            // disjoint row range of `out`, which outlives `pool.run`
+            // (run returns only after every task completed).
+            let out_rows = unsafe {
+                std::slice::from_raw_parts_mut(optr.0.add(row0 * nout), rowc * nout)
+            };
+            let mut apack = Vec::new();
+            gemm_rows(a, astride, atrans, bpack, nout, red, out_rows, row0, rowc, &mut apack);
+        });
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -163,6 +478,7 @@ mod tests {
         let c = a.matmul(&b);
         assert_eq!(c.shape, vec![2, 2]);
         assert_eq!(c.data, vec![58.0, 64.0, 139.0, 154.0]);
+        assert_eq!(c.data, a.matmul_naive(&b).data);
     }
 
     #[test]
@@ -175,6 +491,90 @@ mod tests {
         // a·bᵀ via matmul_nt == a·transpose(b)
         let bt = t(&[2.0, -1.0, 1.0, 1.5, 0.0, 2.5], &[3, 2]);
         assert_eq!(a.matmul_nt(&b).data, a.matmul(&bt).data);
+    }
+
+    /// Spans several row-blocks, strips and a k-block boundary so the
+    /// packed/blocked machinery (not just the micro path) is exercised
+    /// in-module; the exhaustive sweep lives in tests/kernels.rs.
+    #[test]
+    fn blocked_kernels_match_naive_across_block_boundaries() {
+        let mut rng = crate::util::Rng::new(0x9E77);
+        let (m, k, n) = (2 * MC + 3, KC + 17, 3 * NR + 5);
+        let a = Tensor::from_vec(
+            (0..m * k).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect(),
+            &[m, k],
+        );
+        let b = Tensor::from_vec(
+            (0..k * n).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect(),
+            &[k, n],
+        );
+        let bt = Tensor::from_vec(
+            (0..n * k).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect(),
+            &[n, k],
+        );
+        let pool = Pool::new(2);
+        assert_eq!(a.matmul_with(&b, &pool).data, a.matmul_naive(&b).data);
+        assert_eq!(a.matmul_nt_with(&bt, &pool).data, a.matmul_nt_naive(&bt).data);
+        let g = Tensor::from_vec(
+            (0..m * n).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect(),
+            &[m, n],
+        );
+        assert_eq!(a.matmul_tn_with(&g, &pool).data, a.matmul_tn_naive(&g).data);
+    }
+
+    #[test]
+    fn cols_is_the_trailing_shape_product() {
+        // Regression for the old `data.len() / shape[0].max(1)`, which
+        // silently collapsed empty tensors to zero width.
+        assert_eq!(t(&[], &[0, 5]).cols(), 5, "empty tensor keeps its row width");
+        assert_eq!(t(&[0.0; 6], &[2, 3]).cols(), 3);
+        assert_eq!(t(&[0.0; 24], &[2, 3, 4]).cols(), 12, "trailing dims multiply");
+        assert_eq!(t(&[0.0; 3], &[3]).cols(), 1, "rank-1 tensors are column vectors");
+        assert_eq!(t(&[], &[0]).cols(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "rank-0")]
+    fn cols_rejects_rank0() {
+        let scalar = Tensor { shape: vec![], data: vec![1.0] };
+        let _ = scalar.cols();
+    }
+
+    /// Zero-sized dims flow through every variant: shapes stay
+    /// conformable (the old cols() made these panic) and outputs are
+    /// the exact zero/empty matrices the naive loops produce.
+    #[test]
+    fn zero_sized_gemm_dims_are_well_defined() {
+        let pool = Pool::new(2);
+        let a = Tensor::zeros(&[0, 5]);
+        let b = t(&(0..15).map(|x| x as f32).collect::<Vec<_>>(), &[5, 3]);
+        let c = a.matmul_with(&b, &pool);
+        assert_eq!(c.shape, vec![0, 3]);
+        assert!(c.data.is_empty());
+
+        let a = t(&[1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        let b = Tensor::zeros(&[2, 0]);
+        let c = a.matmul_with(&b, &pool);
+        assert_eq!((c.shape.clone(), c.data.len()), (vec![2, 0], 0));
+
+        // k == 0: the empty reduction is the zero matrix.
+        let a = Tensor::zeros(&[3, 0]);
+        let b = Tensor::zeros(&[0, 4]);
+        let c = a.matmul_with(&b, &pool);
+        assert_eq!(c.shape, vec![3, 4]);
+        assert_eq!(c.data, vec![0.0; 12]);
+        assert_eq!(c.data, a.matmul_naive(&b).data);
+
+        // And the transposed variants.
+        let x = Tensor::zeros(&[0, 4]);
+        let g = Tensor::zeros(&[0, 2]);
+        let dw = x.matmul_tn_with(&g, &pool);
+        assert_eq!(dw.shape, vec![4, 2]);
+        assert_eq!(dw.data, vec![0.0; 8]);
+        let dz = Tensor::zeros(&[0, 2]);
+        let w = Tensor::zeros(&[4, 2]);
+        let dx = dz.matmul_nt_with(&w, &pool);
+        assert_eq!((dx.shape.clone(), dx.data.len()), (vec![0, 4], 0));
     }
 
     #[test]
@@ -195,5 +595,17 @@ mod tests {
         let mut y = t(&[1.0, 2.0], &[2]);
         y.round_to(Format::Fp32);
         assert_eq!(y.data, vec![1.0, 2.0]);
+        // The slice fast path must surface ±inf overflow at any
+        // position, including unaligned chunk tails: a 19-element
+        // tensor (16-lane chunk + 3-lane tail) with overflows in both
+        // regions and both signs.
+        let mut z = Tensor::zeros(&[19]);
+        z.data[3] = 1e6; // in the vector body
+        z.data[17] = -1e6; // in the scalar tail
+        z.round_to(Format::Fp16);
+        assert_eq!(z.data[3], f32::INFINITY, "body overflow must round to +inf");
+        assert_eq!(z.data[17], f32::NEG_INFINITY, "tail overflow must round to -inf");
+        assert!(z.has_non_finite());
+        assert_eq!(z.data[0], 0.0, "non-overflowing lanes unaffected");
     }
 }

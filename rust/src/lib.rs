@@ -31,8 +31,18 @@
 //!
 //! | backend | what executes | formats | availability |
 //! |---------|---------------|---------|--------------|
-//! | [`exec::CpuBackend`] | pure-Rust tensors ([`exec::tensor`]), hand-written backprop, Adam with masters | routed per layer from the partition plan via [`exec::ExecPolicy`], bit-exact BF16/FP16 emulation ([`quant::formats`]) | always (tier-1 CI trains through it) |
+//! | [`exec::CpuBackend`] | pure-Rust tensors ([`exec::tensor`]): cache-blocked/packed GEMM fanned out over the `APDRL_THREADS` worker pool ([`exec::pool`]), hand-written backprop, Adam with masters | routed per layer from the partition plan via [`exec::ExecPolicy`], bit-exact BF16/FP16 emulation at slice throughput ([`quant::formats::round_slice`]) | always (tier-1 CI trains through it) |
 //! | `exec::PjrtBackend` | AOT-lowered XLA artifacts over PJRT | baked into the lowered computation (`fp32`/`mixed`/`bf16` modes) | `pjrt` feature |
+//!
+//! **Bit-exactness guarantee:** the CPU executor's blocked and
+//! parallel GEMM kernels keep the per-output-element f32 accumulation
+//! order of the naive references, and the vectorized rounding path is
+//! bit-identical to the scalar one — so `APDRL_THREADS` (or
+//! `apdrl train --threads N`) changes wall-clock only.  Rewards,
+//! losses and loss-scale FSM transitions are bit-identical at any
+//! thread count (asserted in `tests/kernels.rs` and `tests/train.rs`);
+//! `cargo bench --bench bench_exec` tracks the speedups and writes
+//! `BENCH_exec.json`.
 //!
 //! The CPU path makes the plan → training hand-off literal: an FP16
 //! (PL) update node arms an FP32 master copy and the [`quant::LossScaler`]
@@ -143,6 +153,7 @@
 //! | `APDRL_SERVER`        | clients           | daemon `host:port`, or a comma list (federation) |
 //! | `APDRL_PLAN_CACHE`    | planner (both)    | JSON persistence path of the cache   |
 //! | `APDRL_PLAN_CACHE_MAX`| planner (both)    | LRU entry cap of the cache (def 4096)|
+//! | `APDRL_THREADS`       | CPU executor      | kernel worker-pool size (default: cores, capped at 8); bit-exact at any value |
 
 pub mod coordinator;
 pub mod drl;

@@ -1,6 +1,21 @@
 //! Bit-exact software emulation of the coordinated formats (paper Fig 3 /
 //! Table II), mirroring `python/compile/kernels/quantize.py` so the
 //! coordinator can reason about on-the-wire values without PJRT.
+//!
+//! Two independent implementations of each rounding:
+//!
+//! * the scalar reference path ([`bf16_round`], [`fp16_round`] via the
+//!   explicit [`f32_to_f16`]/[`f16_to_f32`] codec) — readable,
+//!   case-by-case, used element-wise;
+//! * the [`round_slice`] fast path — branch-free bit manipulation on
+//!   `u32` lanes, chunked so the compiler auto-vectorizes it.  This is
+//!   what the executor's hot loops (`Tensor::round_to`, the per-layer
+//!   format hooks, Adam's master-weight round-trips) run through.
+//!
+//! The two are pinned bit-identical by the exhaustive tests below (all
+//! 65,536 binary16 patterns, the bf16 RNE reference sweep, and random
+//! full-width bit patterns) — that equivalence is what lets the fast
+//! path replace the scalar one without perturbing the loss-scale FSM.
 
 use crate::hw::Format;
 
@@ -46,9 +61,13 @@ pub fn f32_to_f16(x: f32) -> u16 {
         }
         return sign | m as u16;
     }
-    if e >= -24 {
-        // subnormal
-        let shift = (-14 - e) as u32; // 1..=10 additional shift
+    if e >= -25 {
+        // Subnormal.  e == -25 values can still round *up* to the
+        // smallest subnormal 2⁻²⁴ (anything strictly above the 2⁻²⁵
+        // midpoint does; the exact tie goes to even, i.e. zero) — an
+        // earlier cut at -24 flushed that whole band to zero, which is
+        // not round-to-nearest-even.
+        let shift = (-14 - e) as u32; // 1..=11 additional shift
         let full = frac | 0x80_0000; // implicit leading 1
         let mant = full >> (13 + shift);
         let rest = full & ((1 << (13 + shift)) - 1);
@@ -90,6 +109,94 @@ pub fn round_to(x: f32, fmt: Format) -> f32 {
         Format::Fp32 | Format::Fx16 => x,
         Format::Bf16 => bf16_round(x),
         Format::Fp16 => fp16_round(x),
+    }
+}
+
+// ------------------------------------------------------------------------
+// Vectorized slice rounding: branch-free per-lane bit manipulation so
+// the chunked loops below auto-vectorize.  Bit-identical to the scalar
+// reference path — asserted exhaustively in the tests.
+
+/// Branch-free select: `mask ? a : b` with an all-ones/all-zeros mask.
+#[inline(always)]
+fn lane_select(mask: u32, a: u32, b: u32) -> u32 {
+    (a & mask) | (b & !mask)
+}
+
+/// All-ones when `cond`, else zero.
+#[inline(always)]
+fn lane_mask(cond: bool) -> u32 {
+    (cond as u32).wrapping_neg()
+}
+
+/// One f32 bit pattern → the bit pattern of its nearest bf16 value
+/// (RNE, NaN passthrough) — bit-identical to [`bf16_round`].
+#[inline(always)]
+fn bf16_round_bits(bits: u32) -> u32 {
+    let bias = ((bits >> 16) & 1).wrapping_add(0x7FFF);
+    let rounded = bits.wrapping_add(bias) & 0xFFFF_0000;
+    // NaN (mag above the inf pattern) passes through unchanged: the
+    // bias add could otherwise carry a payload into the exponent.
+    let nan = lane_mask((bits & 0x7FFF_FFFF) > 0x7F80_0000);
+    lane_select(nan, bits, rounded)
+}
+
+/// One f32 bit pattern → the bit pattern of `f16_to_f32(f32_to_f16(x))`
+/// (RNE with overflow→±inf, subnormals, NaN canonicalized to the quiet
+/// pattern) — bit-identical to [`fp16_round`], without the per-case
+/// branches:
+///
+/// * normal range: add `0xFFF + lsb(bit 13)` below the 13 dropped
+///   mantissa bits — the classic RNE-by-addition trick; the carry
+///   walks into the exponent exactly like the scalar encoder's;
+/// * overflow: any rounded magnitude ≥ 2¹⁶ selects ±inf;
+/// * subnormals: `(|x| + 0.5) - 0.5` — the sum's ULP at exponent −1 is
+///   2⁻²⁴ (one f16 subnormal step), so the f32 addition itself performs
+///   the RNE quantization and the Sterbenz-exact subtraction recovers
+///   the rounded value.
+#[inline(always)]
+fn fp16_round_bits(bits: u32) -> u32 {
+    let sign = bits & 0x8000_0000;
+    let mag = bits & 0x7FFF_FFFF;
+    // Normal path (also maps inf → inf via the overflow select).
+    let rounded = (mag + (0xFFF + ((mag >> 13) & 1))) & 0xFFFF_E000;
+    let inf = lane_mask(rounded >= 0x4780_0000);
+    let normal = lane_select(inf, 0x7F80_0000, rounded);
+    // Subnormal path (computed unconditionally; NaN lanes are benign).
+    let sub = ((f32::from_bits(mag) + 0.5) - 0.5).to_bits();
+    let finite = lane_select(lane_mask(mag < 0x3880_0000), sub, normal);
+    let nan = lane_mask(mag > 0x7F80_0000);
+    sign | lane_select(nan, 0x7FC0_0000, finite)
+}
+
+/// In-place slice rounding into `fmt` — the fast path behind
+/// [`crate::exec::Tensor::round_to`], the per-layer format hooks and
+/// the optimizer's master-weight round-trips.  Identity for FP32/FX16;
+/// otherwise bit-identical to mapping [`round_to`] over the slice
+/// (including ±inf overflow surfacing and NaN handling), at vector
+/// throughput: fixed-width chunks of branch-free lane ops plus a
+/// scalar-shaped tail for unaligned lengths.
+pub fn round_slice(xs: &mut [f32], fmt: Format) {
+    match fmt {
+        Format::Fp32 | Format::Fx16 => {}
+        Format::Bf16 => round_lanes(xs, bf16_round_bits),
+        Format::Fp16 => round_lanes(xs, fp16_round_bits),
+    }
+}
+
+/// Apply a lane function over fixed-size chunks (vectorizable: the
+/// chunk trip count is compile-time constant) plus the remainder.
+#[inline]
+fn round_lanes(xs: &mut [f32], lane: impl Fn(u32) -> u32 + Copy) {
+    const LANES: usize = 16;
+    let mut chunks = xs.chunks_exact_mut(LANES);
+    for chunk in &mut chunks {
+        for x in chunk.iter_mut() {
+            *x = f32::from_bits(lane(x.to_bits()));
+        }
+    }
+    for x in chunks.into_remainder() {
+        *x = f32::from_bits(lane(x.to_bits()));
     }
 }
 
@@ -352,6 +459,108 @@ mod tests {
         forall(2000, 0xB16E, |rng| {
             check(f32::from_bits(rng.next_u64() as u32));
         });
+    }
+
+    /// Exhaustive fast-path pin: every one of the 65,536 binary16 bit
+    /// patterns, decoded to f32 and pushed through [`round_slice`],
+    /// must agree bit-for-bit with the scalar [`round_to`] — including
+    /// NaNs (both canonicalize identically) and with slice lengths that
+    /// leave unaligned chunk tails.
+    #[test]
+    fn round_slice_fp16_matches_scalar_for_all_65536_patterns() {
+        let decoded: Vec<f32> = (0..=u16::MAX).map(f16_to_f32).collect();
+        // Lengths chosen to cover: full array, a 15-lane tail, a
+        // sub-chunk slice, and single elements.
+        for (off, len) in [(0usize, 65536usize), (1, 65535), (7, 4098), (13, 11), (65535, 1)] {
+            let mut fast = decoded[off..off + len].to_vec();
+            round_slice(&mut fast, Format::Fp16);
+            for (i, (&got, &x)) in fast.iter().zip(&decoded[off..off + len]).enumerate() {
+                let want = round_to(x, Format::Fp16);
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "pattern {:#06x} (slice [{off}; {len}] idx {i}): {got} vs {want}",
+                    off + i
+                );
+            }
+        }
+    }
+
+    /// The bf16 fast path against the scalar RNE reference over the
+    /// same structured sweep as `bf16_rne_matches_nearest_even_reference`
+    /// (every upper half-word × the rounding-edge low bits).
+    #[test]
+    fn round_slice_bf16_matches_scalar_reference_sweep() {
+        let mut vals = Vec::with_capacity(65536 * 6);
+        for hi in 0..=u16::MAX {
+            let base = (hi as u32) << 16;
+            for lo in [0u32, 1, 0x7FFF, 0x8000, 0x8001, 0xFFFF] {
+                vals.push(f32::from_bits(base | lo));
+            }
+        }
+        let mut fast = vals.clone();
+        round_slice(&mut fast, Format::Bf16);
+        for (&got, &x) in fast.iter().zip(&vals) {
+            let want = bf16_round(x);
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "bits {:#010x}: {got} vs {want}",
+                x.to_bits()
+            );
+        }
+    }
+
+    /// Random full-width f32 bit patterns (normals, subnormals, ±inf,
+    /// NaNs) through both formats: slice path == scalar path.
+    #[test]
+    fn round_slice_matches_scalar_on_random_bit_patterns() {
+        let mut rng = crate::util::Rng::new(0x51);
+        let vals: Vec<f32> = (0..20_000).map(|_| f32::from_bits(rng.next_u64() as u32)).collect();
+        for fmt in [Format::Fp16, Format::Bf16] {
+            let mut fast = vals.clone();
+            round_slice(&mut fast, fmt);
+            for (&got, &x) in fast.iter().zip(&vals) {
+                let want = round_to(x, fmt);
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "{fmt:?} bits {:#010x}: {got} vs {want}",
+                    x.to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn round_slice_fp32_and_fx16_are_identity() {
+        let vals = vec![1.0f32, -0.0, f32::NAN, f32::INFINITY, 3.1e-41, 65520.0];
+        for fmt in [Format::Fp32, Format::Fx16] {
+            let mut out = vals.clone();
+            round_slice(&mut out, fmt);
+            for (o, v) in out.iter().zip(&vals) {
+                assert_eq!(o.to_bits(), v.to_bits());
+            }
+        }
+    }
+
+    /// Regression for the e = −25 band: values in (2⁻²⁵, 2⁻²⁴) must
+    /// round RNE to the smallest subnormal 2⁻²⁴ (an earlier encoder
+    /// flushed the whole band to zero); the exact 2⁻²⁵ midpoint ties
+    /// to even (zero), and below it everything underflows.
+    #[test]
+    fn fp16_e25_subnormal_band_rounds_to_nearest_even() {
+        let min_sub = 2.0f32.powi(-24);
+        let midpoint = 2.0f32.powi(-25);
+        assert_eq!(fp16_round(1.5 * midpoint), min_sub, "above midpoint rounds up");
+        assert_eq!(fp16_round(-1.5 * midpoint), -min_sub);
+        assert_eq!(fp16_round(midpoint), 0.0, "exact tie goes to even (zero)");
+        assert_eq!(
+            fp16_round(f32::from_bits(midpoint.to_bits() + 1)),
+            min_sub,
+            "one ULP above the tie rounds up"
+        );
+        assert_eq!(fp16_round(0.99 * midpoint), 0.0, "below midpoint underflows");
     }
 
     #[test]

@@ -1,0 +1,174 @@
+//! Kernel-equivalence suite: the cache-blocked and pool-parallel GEMM
+//! kernels must be **bit-identical** (`==` on `data`) to the naive
+//! triple-loop references for all three variants, at every thread
+//! count.  This is the contract that lets plan-driven mixed-precision
+//! training change thread counts without perturbing the loss-scale FSM
+//! or reward trajectories.
+//!
+//! The sweep crosses every blocking boundary of the implementation
+//! (MR=4 / NR=8 micro-tiles, MC=32 row blocks, KC=256 reduction
+//! blocks): degenerate dims {0, 1}, sub-tile {7}, exactly-one-block
+//! {64}, off-by-one-past-blocks {129}, plus rectangular extremes.
+
+use std::sync::Arc;
+
+use apdrl::exec::{Pool, Tensor};
+use apdrl::util::Rng;
+
+/// Values with a wide dynamic range so any reordered f32 summation
+/// would actually produce different bits (uniform [-1,1] sums can
+/// mask reassociation).
+fn rand_tensor(rng: &mut Rng, rows: usize, cols: usize) -> Tensor {
+    let data = (0..rows * cols)
+        .map(|_| {
+            let mag = 2.0f64.powi((rng.below(17) as i32) - 8);
+            (rng.normal() * mag) as f32
+        })
+        .collect();
+    Tensor::from_vec(data, &[rows, cols])
+}
+
+fn assert_bits_eq(got: &Tensor, want: &Tensor, what: &str) {
+    assert_eq!(got.shape, want.shape, "{what}: shape");
+    assert_eq!(got.data.len(), want.data.len(), "{what}: len");
+    for (i, (g, w)) in got.data.iter().zip(want.data.iter()).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{what}: elem {i} diverged ({g} vs {w})"
+        );
+    }
+}
+
+/// The shape sweep: the full cross product over the boundary dims plus
+/// rectangular extremes (long-thin, thin-long, KC-crossing).
+fn sweep_shapes() -> Vec<(usize, usize, usize)> {
+    const DIMS: [usize; 5] = [0, 1, 7, 64, 129];
+    let mut shapes = Vec::new();
+    for &m in &DIMS {
+        for &k in &DIMS {
+            for &n in &DIMS {
+                shapes.push((m, k, n));
+            }
+        }
+    }
+    shapes.extend([
+        (1, 513, 1),    // dot product crossing the KC=256 boundary twice
+        (257, 3, 2),    // many row blocks, tiny panel
+        (2, 300, 33),   // KC boundary + strip tail
+        (33, 65, 257),  // every dimension one past a block boundary
+        (5, 1024, 5),   // reduction-dominant
+    ]);
+    shapes
+}
+
+#[test]
+fn blocked_and_parallel_gemm_bit_identical_to_naive() {
+    let pools: Vec<Arc<Pool>> =
+        [1usize, 2, 8].iter().map(|&t| Arc::new(Pool::new(t))).collect();
+    let mut rng = Rng::new(0x6E44);
+    let shapes = sweep_shapes();
+    assert!(shapes.len() >= 40, "sweep must cover at least ~40 shape triples");
+    for (m, k, n) in shapes {
+        // Operands per variant: matmul a(m,k)·b(k,n); tn a(m,k)ᵀ·g(m,n);
+        // nt a(m,k)·bt(n,k)ᵀ.
+        let a = rand_tensor(&mut rng, m, k);
+        let b = rand_tensor(&mut rng, k, n);
+        let g = rand_tensor(&mut rng, m, n);
+        let bt = rand_tensor(&mut rng, n, k);
+        let want_mm = a.matmul_naive(&b);
+        let want_tn = a.matmul_tn_naive(&g);
+        let want_nt = a.matmul_nt_naive(&bt);
+        for pool in &pools {
+            let tag = format!("({m},{k},{n}) @ {} threads", pool.threads());
+            assert_bits_eq(&a.matmul_with(&b, pool), &want_mm, &format!("matmul {tag}"));
+            assert_bits_eq(&a.matmul_tn_with(&g, pool), &want_tn, &format!("matmul_tn {tag}"));
+            assert_bits_eq(&a.matmul_nt_with(&bt, pool), &want_nt, &format!("matmul_nt {tag}"));
+        }
+    }
+}
+
+/// The default entry points (process-wide `APDRL_THREADS` pool) obey
+/// the same contract — whatever that pool's size happens to be.
+#[test]
+fn default_entry_points_match_naive() {
+    let mut rng = Rng::new(0xDEF);
+    let a = rand_tensor(&mut rng, 70, 45);
+    let b = rand_tensor(&mut rng, 45, 33);
+    let g = rand_tensor(&mut rng, 70, 33);
+    let bt = rand_tensor(&mut rng, 33, 45);
+    assert_bits_eq(&a.matmul(&b), &a.matmul_naive(&b), "matmul/global");
+    assert_bits_eq(&a.matmul_tn(&g), &a.matmul_tn_naive(&g), "matmul_tn/global");
+    assert_bits_eq(&a.matmul_nt(&bt), &a.matmul_nt_naive(&bt), "matmul_nt/global");
+}
+
+/// Repeated invocations on one pool (the training-loop pattern: many
+/// GEMMs reusing the same workers) stay bit-stable call after call.
+#[test]
+fn repeated_runs_on_one_pool_are_stable() {
+    let pool = Arc::new(Pool::new(4));
+    let mut rng = Rng::new(0x5AB);
+    let a = rand_tensor(&mut rng, 129, 80);
+    let b = rand_tensor(&mut rng, 80, 65);
+    let want = a.matmul_naive(&b);
+    for round in 0..20 {
+        let got = a.matmul_with(&b, &pool);
+        assert_bits_eq(&got, &want, &format!("round {round}"));
+    }
+}
+
+/// Non-finite inputs (overflowed FP16 gradients carry ±inf into the
+/// GEMMs that follow) propagate identically: every finite and ±inf
+/// element matches the naive reference bit-for-bit, and NaNs appear at
+/// exactly the same positions.  (NaN *payloads* are the one thing left
+/// unpinned: IEEE lets `fadd` operand commutation pick either quiet
+/// payload, and the `found_inf` probe only asks `is_finite`.)
+#[test]
+fn non_finite_propagation_matches_naive() {
+    let mut rng = Rng::new(0x1F);
+    for threads in [1usize, 8] {
+        let pool = Arc::new(Pool::new(threads));
+        let mut a = rand_tensor(&mut rng, 40, 37);
+        a.data[5] = f32::INFINITY;
+        a.data[41] = f32::NEG_INFINITY;
+        a.data[80] = f32::NAN;
+        let b = rand_tensor(&mut rng, 37, 19);
+        let want = a.matmul_naive(&b);
+        let got = a.matmul_with(&b, &pool);
+        assert!(want.has_non_finite() && got.has_non_finite());
+        for (i, (g, w)) in got.data.iter().zip(want.data.iter()).enumerate() {
+            if w.is_nan() {
+                assert!(g.is_nan(), "elem {i} @ {threads} threads: NaN position lost");
+            } else {
+                assert_eq!(g.to_bits(), w.to_bits(), "elem {i} @ {threads} threads");
+            }
+        }
+    }
+}
+
+/// Zero-sized-dim regression (found while hardening `Tensor::cols`):
+/// empty operands must flow through all variants with conformable
+/// shapes and exact-zero outputs, identically to the naive loops.
+#[test]
+fn zero_dim_shapes_are_conformable_and_exact() {
+    let pool = Arc::new(Pool::new(2));
+    // Empty batch through a dense-layer-shaped pipeline: fwd, dw, dx.
+    let x = Tensor::zeros(&[0, 8]); // (batch=0, din)
+    let w = Tensor::zeros(&[8, 4]);
+    let y = x.matmul_with(&w, &pool);
+    assert_eq!(y.shape, vec![0, 4]);
+    let dz = Tensor::zeros(&[0, 4]);
+    let dw = x.matmul_tn_with(&dz, &pool);
+    assert_eq!(dw.shape, vec![8, 4]);
+    assert_eq!(dw.data, vec![0.0; 32], "dw over an empty batch is exactly zero");
+    assert_eq!(dw.data, x.matmul_tn_naive(&dz).data);
+    let dx = dz.matmul_nt_with(&w, &pool);
+    assert_eq!(dx.shape, vec![0, 8]);
+    // Zero-width features (k = 0).
+    let a = Tensor::zeros(&[6, 0]);
+    let b = Tensor::zeros(&[0, 9]);
+    let c = a.matmul_with(&b, &pool);
+    assert_eq!(c.shape, vec![6, 9]);
+    assert_eq!(c.data, vec![0.0; 54]);
+    assert_eq!(c.data, a.matmul_naive(&b).data);
+}

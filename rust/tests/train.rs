@@ -10,11 +10,13 @@
 //!   training, and the quantized run tracks the FP32 control within a
 //!   stated tolerance.
 
+use std::sync::Arc;
+
 use apdrl::coordinator::config::ComboConfig;
 use apdrl::coordinator::{combo, train_combo, LocalPlanner, PlanRequest, Planner, TrainLimits};
 use apdrl::drl::compute::DqnCompute;
 use apdrl::drl::replay::{ReplayBuffer, StoredAction};
-use apdrl::exec::{Backend, CpuBackend, CpuDqn, ExecPolicy};
+use apdrl::exec::{Backend, CpuBackend, CpuDqn, ExecPolicy, Pool};
 use apdrl::graph::{Algo, NetSpec};
 use apdrl::hw::Format;
 use apdrl::quant::formats::round_to;
@@ -183,6 +185,71 @@ fn quantized_training_routes_formats_from_the_plan() {
         }
     }
     assert!(moved, "masters must accumulate off-format values during training");
+}
+
+/// Acceptance: training is **bit-identical across thread counts**.
+/// The mixed-precision DQN-CartPole run (live loss-scale FSM) with the
+/// kernel pool at 1 vs 4 threads must produce identical per-episode
+/// rewards (f64-exact) and an identical FSM transition log — the
+/// blocked/parallel GEMM's per-element accumulation order never
+/// depends on the thread count.
+#[test]
+fn dqn_training_is_bit_identical_across_thread_counts() {
+    let c = combo("dqn_cartpole");
+    let plan = LocalPlanner
+        .plan(&PlanRequest::new(c.clone(), c.batch, true))
+        .expect("static phase");
+    let mut runs = Vec::new();
+    for threads in [1usize, 4] {
+        let mut backend = CpuBackend::from_outcome(&plan)
+            .expect("backend")
+            .with_train_every(2)
+            .with_pool(Arc::new(Pool::new(threads)));
+        let r = run(&c, &mut backend, 2_500);
+        assert_eq!(r.threads, threads, "backend must report its pool size");
+        assert!(r.metrics.train_steps > 100, "run too short to be meaningful");
+        runs.push(r);
+    }
+    let (a, b) = (&runs[0].metrics, &runs[1].metrics);
+    assert_eq!(
+        a.episode_rewards, b.episode_rewards,
+        "per-episode rewards diverged between 1 and 4 threads"
+    );
+    assert_eq!(
+        a.scale_transitions, b.scale_transitions,
+        "loss-scale FSM transition logs diverged between 1 and 4 threads"
+    );
+    assert_eq!(a.overflows, b.overflows);
+    assert_eq!(a.final_loss_scale.to_bits(), b.final_loss_scale.to_bits());
+    assert!(
+        !a.scale_transitions.is_empty(),
+        "the FSM must actually transition for this test to mean anything"
+    );
+}
+
+/// Same contract through the conv/im2col path, whose large patch-row
+/// GEMMs (batch·oh·ow rows) genuinely engage the parallel row-block
+/// kernels at 4 threads.
+#[test]
+fn conv_training_is_bit_identical_across_thread_counts() {
+    let c = tiny_combo(
+        "ppo_thr",
+        Algo::Ppo,
+        "mspacman_mini",
+        NetSpec::Conv { in_hw: 12, in_ch: 4, conv: vec![(4, 4, 2)], fc: vec![32, 9] },
+        12 * 12 * 4,
+        9,
+    );
+    let mut rewards = Vec::new();
+    for threads in [1usize, 4] {
+        let mut backend =
+            CpuBackend::fp32().with_batch(32).with_pool(Arc::new(Pool::new(threads)));
+        let r = run(&c, &mut backend, 600);
+        assert!(r.metrics.train_steps >= 30, "got {}", r.metrics.train_steps);
+        rewards.push((r.metrics.episode_rewards.clone(), r.metrics.losses.clone()));
+    }
+    assert_eq!(rewards[0].0, rewards[1].0, "conv episode rewards diverged across threads");
+    assert_eq!(rewards[0].1, rewards[1].1, "conv per-step losses diverged across threads");
 }
 
 /// The FP32 control routes everything FP32 with no scaler and no masters.
