@@ -36,20 +36,27 @@ fn main() {
         let mut rng = Rng::new(1);
         let mut obs = env.reset(&mut rng);
         // warm the replay buffer so observe() trains every step
+        let mut stats = Vec::new();
         for _ in 0..80 {
-            let a = agent.act(&obs, &mut rng).unwrap();
-            let t = env.step(&a, &mut rng);
-            agent.observe(&obs, &a, t.reward as f32, &t.obs, t.done, &mut rng).unwrap();
+            let a = agent.act(&obs, 1, &mut rng).unwrap();
+            let t = env.step(&a[0], &mut rng);
+            stats.clear();
+            agent
+                .observe(&obs, &a, &[t.reward as f32], &t.obs, &[t.done], &mut rng, &mut stats)
+                .unwrap();
             obs = if t.done { env.reset(&mut rng) } else { t.obs };
         }
         let r = bench(&format!("act/{name}/{mode}"), Duration::from_secs(2), || {
-            let _ = agent.act_greedy(&obs).unwrap();
+            let _ = agent.act_greedy(&obs, 1).unwrap();
         });
         r.print();
         let r = bench(&format!("env_act_train_step/{name}/{mode}"), Duration::from_secs(4), || {
-            let a = agent.act(&obs, &mut rng).unwrap();
-            let t = env.step(&a, &mut rng);
-            agent.observe(&obs, &a, t.reward as f32, &t.obs, t.done, &mut rng).unwrap();
+            let a = agent.act(&obs, 1, &mut rng).unwrap();
+            let t = env.step(&a[0], &mut rng);
+            stats.clear();
+            agent
+                .observe(&obs, &a, &[t.reward as f32], &t.obs, &[t.done], &mut rng, &mut stats)
+                .unwrap();
             obs = if t.done { env.reset(&mut rng) } else { t.obs };
         });
         r.print();

@@ -21,7 +21,8 @@
 //!   "gemm": [ {"m","k","n","kernel","median_ns","mean_ns","p95_ns",
 //!              "iters","gflops"} ... ],
 //!   "speedups": { "blocked_vs_naive_256"?: x, ... },
-//!   "train_step": [ {"combo","net","threads","median_ns",...} ... ]
+//!   "train_step": [ {"combo","net","threads","median_ns",...} ... ],
+//!   "actors": [ {"actors","env_steps_per_sec","median_ns",...} ... ]
 //! }
 //! ```
 
@@ -32,7 +33,9 @@ use std::time::Duration;
 use apdrl::coordinator::config::{combo, ComboConfig};
 use apdrl::drl::compute::DqnCompute;
 use apdrl::drl::replay::{ReplayBuffer, StoredAction};
-use apdrl::exec::{CpuDqn, ExecPolicy, Pool, Tensor};
+use apdrl::drl::Agent;
+use apdrl::envs::{lane_rngs, BatchedEnv, Env};
+use apdrl::exec::{Backend, CpuBackend, CpuDqn, ExecPolicy, Pool, Tensor};
 use apdrl::graph::{Algo, NetSpec};
 use apdrl::util::bench::{bench, fmt_ns, observe, BenchResult};
 use apdrl::util::json::Json;
@@ -197,6 +200,60 @@ fn main() {
         }
     }
 
+    // Batched collection throughput: one DQN-CartPole agent driving a
+    // BatchedEnv fleet through the full act → step → observe round, at
+    // a lane ladder.  Warmup far beyond the budget keeps training out
+    // of the loop, so this isolates what `--actors` exists to buy:
+    // amortized inference + pooled env stepping.
+    println!("== bench_exec [{mode}]: batched collection (env-steps/sec) ==");
+    let lane_counts: &[usize] = if smoke { &[1, 8] } else { &[1, 8, 64] };
+    let mut actor_rows = Vec::new();
+    for &nlanes in lane_counts {
+        let mut backend = CpuBackend::fp32().with_warmup(1_000_000_000);
+        let mut agent = backend.make_agent(&mlp, 21).expect("agent");
+        let envs = (0..nlanes)
+            .map(|_| mlp.try_make_env())
+            .collect::<Result<Vec<Box<dyn Env>>, _>>()
+            .expect("envs");
+        let mut root = Rng::new(21);
+        let rngs = lane_rngs(&mut root, 0xE74, nlanes);
+        let mut fleet = BatchedEnv::new(envs, rngs, Pool::global()).expect("fleet");
+        let mut act_rng = root;
+        let mut prev_obs = vec![0.0f32; nlanes * fleet.obs_dim()];
+        let mut rew = vec![0.0f32; nlanes];
+        let mut stats = Vec::new();
+        let r = bench(&format!("collect/{nlanes}lanes"), budget, || {
+            prev_obs.copy_from_slice(fleet.obs());
+            let actions = agent.act(&prev_obs, nlanes, &mut act_rng).expect("act");
+            fleet.step(&actions).expect("step");
+            for (x, &raw) in rew.iter_mut().zip(fleet.rewards()) {
+                *x = raw as f32;
+            }
+            stats.clear();
+            agent
+                .observe(
+                    &prev_obs,
+                    &actions,
+                    &rew,
+                    fleet.next_obs(),
+                    fleet.dones(),
+                    &mut act_rng,
+                    &mut stats,
+                )
+                .expect("observe");
+        });
+        r.print();
+        let steps_per_sec = nlanes as f64 / r.median_ns * 1e9;
+        println!("   -> {steps_per_sec:.0} env-steps/s at {nlanes} lanes");
+        actor_rows.push(result_json(
+            &r,
+            &[
+                ("actors", Json::Num(nlanes as f64)),
+                ("env_steps_per_sec", Json::Num(steps_per_sec)),
+            ],
+        ));
+    }
+
     let mut top = BTreeMap::new();
     top.insert("bench".to_string(), Json::Str("exec".to_string()));
     top.insert("mode".to_string(), Json::Str(mode.to_string()));
@@ -204,6 +261,7 @@ fn main() {
     top.insert("gemm".to_string(), Json::Arr(gemm_rows));
     top.insert("speedups".to_string(), Json::Obj(speedups));
     top.insert("train_step".to_string(), Json::Arr(train_rows));
+    top.insert("actors".to_string(), Json::Arr(actor_rows));
     let line = Json::Obj(top).to_line().expect("bench results serialize");
     std::fs::write("BENCH_exec.json", line + "\n").expect("write BENCH_exec.json");
     println!("wrote BENCH_exec.json");

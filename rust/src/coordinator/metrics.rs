@@ -28,6 +28,17 @@ impl RunMetrics {
         stats::moving_average(&self.episode_rewards, 100)
     }
 
+    /// Collection throughput: environment steps per wall-clock second
+    /// (0 before `wallclock_s` is stamped).  The figure `--actors N`
+    /// exists to move.
+    pub fn env_steps_per_sec(&self) -> f64 {
+        if self.wallclock_s > 0.0 {
+            self.env_steps as f64 / self.wallclock_s
+        } else {
+            0.0
+        }
+    }
+
     /// Converged reward = mean of the last `tail` episodes (the value the
     /// paper compares between quantized and FP32 runs).
     pub fn converged_reward(&self, tail: usize) -> f64 {
@@ -61,6 +72,15 @@ mod tests {
         assert_eq!(m.converged_reward(2), 10.0);
         assert_eq!(m.converged_reward(100), 5.0);
         assert_eq!(RunMetrics::default().converged_reward(5), 0.0);
+    }
+
+    #[test]
+    fn env_steps_per_sec_guards_zero_wallclock() {
+        let mut m = RunMetrics::default();
+        assert_eq!(m.env_steps_per_sec(), 0.0);
+        m.env_steps = 500;
+        m.wallclock_s = 2.0;
+        assert_eq!(m.env_steps_per_sec(), 250.0);
     }
 
     #[test]

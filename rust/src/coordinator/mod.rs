@@ -17,4 +17,4 @@ pub mod trainer;
 pub use config::{combo, try_combo, ComboConfig, COMBO_NAMES};
 pub use pipeline::{plan_sweep, plan_sweep_grid, static_phase, StaticPlan};
 pub use planner::{LocalPlanner, PlanOutcome, PlanRequest, PlanStep, Planner, Provenance};
-pub use trainer::{train_combo, TrainLimits, TrainResult};
+pub use trainer::{train_combo, train_combo_actors, TrainLimits, TrainResult};

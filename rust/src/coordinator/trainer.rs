@@ -3,12 +3,20 @@
 //! an execution [`Backend`] — the pure-Rust CPU executor by default, the
 //! PJRT artifacts under the `pjrt` feature — and the hardware-aware
 //! quantization FSM live.
+//!
+//! Collection is N-wide: [`train_combo_actors`] drives a
+//! [`BatchedEnv`] fleet of `actors` lanes in lockstep, so actor
+//! inference issues one GEMM per layer for all lanes at once.  At
+//! `actors == 1` the loop is bit-identical to the historical scalar
+//! path — same RNG stream, same rewards, same loss-scale FSM
+//! transitions, same final weights (proved in `tests/train.rs`).
 
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
-use crate::exec::Backend;
+use crate::envs::{lane_rngs, BatchedEnv, Env};
+use crate::exec::{Backend, Pool};
 use crate::util::Rng;
 
 use super::config::ComboConfig;
@@ -39,10 +47,14 @@ pub struct TrainResult {
     /// bit-exact across thread counts, so two runs differing only here
     /// produce identical rewards and FSM logs (tests/train.rs).
     pub threads: usize,
+    /// Env lanes collected in lockstep (`--actors`); 1 is the scalar
+    /// path.
+    pub actors: usize,
     pub seed: u64,
 }
 
-/// Train `combo` on `backend` for one seed.
+/// Train `combo` on `backend` for one seed — the scalar (`actors == 1`)
+/// entry point kept for existing call sites.
 pub fn train_combo(
     backend: &mut dyn Backend,
     combo: &ComboConfig,
@@ -50,6 +62,24 @@ pub fn train_combo(
     limits: TrainLimits,
     verbose: bool,
 ) -> Result<TrainResult> {
+    train_combo_actors(backend, combo, seed, limits, 1, verbose)
+}
+
+/// Train `combo` on `backend` for one seed with an `actors`-lane env
+/// fleet.  Lane RNG streams fork off the master seed (lane 0 is the
+/// scalar path's stream), episode bookkeeping is per lane, and training
+/// cadence follows per-lane observation counts inside the agents — so
+/// `actors == 1` reproduces the scalar run bit-for-bit while larger
+/// fleets amortize inference over one batched forward per round.
+pub fn train_combo_actors(
+    backend: &mut dyn Backend,
+    combo: &ComboConfig,
+    seed: u64,
+    limits: TrainLimits,
+    actors: usize,
+    verbose: bool,
+) -> Result<TrainResult> {
+    ensure!(actors >= 1, "--actors must be at least 1");
     let t0 = Instant::now();
     let mut agent = backend.make_agent(combo, seed)?;
     if verbose && backend.threads() > 1 {
@@ -59,22 +89,53 @@ pub fn train_combo(
             backend.threads()
         );
     }
-    let mut env = combo.try_make_env()?;
     let mut rng = Rng::new(seed);
-    let mut env_rng = rng.fork(0xE74);
+    let envs = (0..actors)
+        .map(|_| combo.try_make_env())
+        .collect::<Result<Vec<Box<dyn Env>>>>()?;
+    let rngs = lane_rngs(&mut rng, 0xE74, actors);
+    let mut fleet = BatchedEnv::new(envs, rngs, Pool::global())?;
+    ensure!(
+        fleet.is_discrete() == combo.algo.discrete_actions(),
+        "combo {}: {} emits {} actions but env {:?} has a {} action space",
+        combo.name,
+        combo.algo.name(),
+        if combo.algo.discrete_actions() { "discrete" } else { "continuous" },
+        combo.env,
+        if fleet.is_discrete() { "discrete" } else { "continuous" }
+    );
+    let d = fleet.obs_dim();
     let mut metrics = RunMetrics::default();
     let mut last_scale: Option<f32> = None;
 
-    let mut obs = env.reset(&mut env_rng);
-    let mut ep_reward = 0.0f64;
+    let mut prev_obs = vec![0.0f32; actors * d];
+    let mut rew_f32 = vec![0.0f32; actors];
+    let mut ep_rewards = vec![0.0f64; actors];
+    let mut stats_buf = Vec::new();
     while metrics.env_steps < limits.max_env_steps
         && metrics.episode_rewards.len() < limits.max_episodes
     {
-        let action = agent.act(&obs, &mut rng)?;
-        let tr = env.step(&action, &mut env_rng);
-        if let Some(stats) =
-            agent.observe(&obs, &action, tr.reward as f32, &tr.obs, tr.done, &mut rng)?
-        {
+        // All of this round's train steps log against the pre-round env
+        // step count — at `actors == 1` that is exactly the scalar
+        // path's pre-increment recording.
+        let step_at = metrics.env_steps;
+        prev_obs.copy_from_slice(fleet.obs());
+        let actions = agent.act(&prev_obs, actors, &mut rng)?;
+        fleet.step(&actions)?;
+        for (r, &raw) in rew_f32.iter_mut().zip(fleet.rewards()) {
+            *r = raw as f32;
+        }
+        stats_buf.clear();
+        agent.observe(
+            &prev_obs,
+            &actions,
+            &rew_f32,
+            fleet.next_obs(),
+            fleet.dones(),
+            &mut rng,
+            &mut stats_buf,
+        )?;
+        for stats in &stats_buf {
             metrics.losses.push(stats.loss as f64);
             if stats.found_inf {
                 metrics.overflows += 1;
@@ -82,30 +143,29 @@ pub fn train_combo(
             // Record every loss-scale FSM transition (grow or backoff).
             if let Some(prev) = last_scale {
                 if prev != stats.loss_scale {
-                    metrics.scale_transitions.push((metrics.env_steps, prev, stats.loss_scale));
+                    metrics.scale_transitions.push((step_at, prev, stats.loss_scale));
                 }
             }
             last_scale = Some(stats.loss_scale);
             metrics.final_loss_scale = stats.loss_scale;
         }
-        ep_reward += tr.reward;
-        metrics.env_steps += 1;
-        if tr.done {
-            metrics.episode_rewards.push(ep_reward);
-            if verbose && metrics.episode_rewards.len() % 25 == 0 {
-                let n = metrics.episode_rewards.len();
-                let recent = metrics.converged_reward(25);
-                eprintln!(
-                    "  [{}/{} seed {seed}] ep {n}: avg25 {recent:.1} (steps {})",
-                    combo.name,
-                    backend.describe(),
-                    metrics.env_steps
-                );
+        for l in 0..actors {
+            ep_rewards[l] += fleet.rewards()[l];
+            metrics.env_steps += 1;
+            if fleet.dones()[l] {
+                metrics.episode_rewards.push(ep_rewards[l]);
+                if verbose && metrics.episode_rewards.len() % 25 == 0 {
+                    let n = metrics.episode_rewards.len();
+                    let recent = metrics.converged_reward(25);
+                    eprintln!(
+                        "  [{}/{} seed {seed}] ep {n}: avg25 {recent:.1} (steps {})",
+                        combo.name,
+                        backend.describe(),
+                        metrics.env_steps
+                    );
+                }
+                ep_rewards[l] = 0.0;
             }
-            ep_reward = 0.0;
-            obs = env.reset(&mut env_rng);
-        } else {
-            obs = tr.obs;
         }
     }
     metrics.train_steps = agent.train_steps();
@@ -115,6 +175,7 @@ pub fn train_combo(
         combo: combo.name.into(),
         backend: backend.describe(),
         threads: backend.threads(),
+        actors,
         seed,
     })
 }

@@ -11,7 +11,7 @@ use crate::util::Rng;
 
 use super::agent::{Agent, StepStats};
 use super::compute::A2cCompute;
-use super::rollout::{RolloutBuffer, RolloutStep};
+use super::rollout::{RolloutBatch, RolloutBuffer, RolloutStep};
 
 #[derive(Clone, Debug)]
 pub struct A2cConfig {
@@ -34,15 +34,25 @@ pub struct A2cAgent<C: A2cCompute> {
     compute: C,
     rollout: RolloutBuffer,
     scaler: LossScaler,
-    /// Cached policy outputs from the last `act` (reused in `observe`).
-    last: Option<(Vec<f32>, Vec<f32>, f32)>, // (mean, log_std, value)
+    scratch: RolloutBatch,
+    /// Cached policy outputs from the last `act` (reused in `observe`):
+    /// (means lanes × act_dim, log_std act_dim, values lanes).
+    last: Option<(Vec<f32>, Vec<f32>, Vec<f32>)>,
     train_steps: u64,
 }
 
 impl<C: A2cCompute> A2cAgent<C> {
     pub fn from_parts(cfg: A2cConfig, compute: C, scaler: LossScaler) -> Self {
         let rollout = RolloutBuffer::new(cfg.horizon, cfg.gamma, cfg.gae_lambda);
-        A2cAgent { cfg, compute, rollout, scaler, last: None, train_steps: 0 }
+        A2cAgent {
+            cfg,
+            compute,
+            rollout,
+            scaler,
+            scratch: RolloutBatch::default(),
+            last: None,
+            train_steps: 0,
+        }
     }
 
     fn gaussian_logp(a: &[f32], mean: &[f32], log_std: &[f32]) -> f32 {
@@ -58,10 +68,28 @@ impl<C: A2cCompute> A2cAgent<C> {
             .sum()
     }
 
-    fn train_rollout(&mut self, last_value: f32) -> Result<StepStats> {
-        let batch = self.rollout.finish(last_value, true);
+    /// Per-lane bootstrap values for the state after the final round:
+    /// 0 where the lane terminated, the value head otherwise.  Skips the
+    /// forward entirely when every lane terminated — at `lanes == 1`
+    /// that reproduces the scalar path's `if done { 0.0 } else { … }`
+    /// exactly (same calls, same inputs).
+    fn bootstrap_values(&mut self, next_obs: &[f32], dones: &[bool]) -> Result<Vec<f32>> {
+        if dones.iter().all(|&d| d) {
+            return Ok(vec![0.0; dones.len()]);
+        }
+        let mut values = self.compute.policy(next_obs, dones.len())?.2;
+        for (v, &d) in values.iter_mut().zip(dones) {
+            if d {
+                *v = 0.0;
+            }
+        }
+        Ok(values)
+    }
+
+    fn train_rollout(&mut self, last_values: &[f32]) -> Result<StepStats> {
+        self.rollout.finish_into(last_values, true, &mut self.scratch);
         let scale_used = self.scaler.scale();
-        let out = self.compute.train(&batch, scale_used)?;
+        let out = self.compute.train(&self.scratch, scale_used)?;
         if self.scaler.update(out.found_inf) {
             self.train_steps += 1;
         }
@@ -70,51 +98,73 @@ impl<C: A2cCompute> A2cAgent<C> {
 }
 
 impl<C: A2cCompute> Agent for A2cAgent<C> {
-    fn act(&mut self, obs: &[f32], rng: &mut Rng) -> Result<Action> {
-        let (mean, log_std, value) = self.compute.policy(obs)?;
-        let action: Vec<f32> = mean
-            .iter()
-            .zip(&log_std)
-            .map(|(m, l)| (m + l.exp() * rng.normal() as f32).clamp(-1.0, 1.0))
-            .collect();
-        self.last = Some((mean, log_std, value));
-        Ok(Action::Continuous(action))
+    fn act(&mut self, obs: &[f32], lanes: usize, rng: &mut Rng) -> Result<Vec<Action>> {
+        // One batched policy forward, then per-lane Gaussian draws in
+        // lane order — the same RNG stream as the scalar path at
+        // `lanes == 1`.
+        let (means, log_std, values) = self.compute.policy(obs, lanes)?;
+        let ad = self.cfg.act_dim;
+        let mut out = Vec::with_capacity(lanes);
+        for l in 0..lanes {
+            let action: Vec<f32> = means[l * ad..(l + 1) * ad]
+                .iter()
+                .zip(&log_std)
+                .map(|(m, s)| (m + s.exp() * rng.normal() as f32).clamp(-1.0, 1.0))
+                .collect();
+            out.push(Action::Continuous(action));
+        }
+        self.last = Some((means, log_std, values));
+        Ok(out)
     }
 
-    fn act_greedy(&mut self, obs: &[f32]) -> Result<Action> {
-        let (mean, _, _) = self.compute.policy(obs)?;
-        Ok(Action::Continuous(mean.iter().map(|m| m.clamp(-1.0, 1.0)).collect()))
+    fn act_greedy(&mut self, obs: &[f32], lanes: usize) -> Result<Vec<Action>> {
+        let (means, _, _) = self.compute.policy(obs, lanes)?;
+        let ad = self.cfg.act_dim;
+        Ok((0..lanes)
+            .map(|l| {
+                Action::Continuous(
+                    means[l * ad..(l + 1) * ad].iter().map(|m| m.clamp(-1.0, 1.0)).collect(),
+                )
+            })
+            .collect())
     }
 
     fn observe(
         &mut self,
         obs: &[f32],
-        action: &Action,
-        reward: f32,
+        actions: &[Action],
+        rewards: &[f32],
         next_obs: &[f32],
-        done: bool,
+        dones: &[bool],
         _rng: &mut Rng,
-    ) -> Result<Option<StepStats>> {
-        let (mean, log_std, value) = self
+        stats: &mut Vec<StepStats>,
+    ) -> Result<()> {
+        let lanes = actions.len();
+        let ad = self.cfg.act_dim;
+        let d = self.cfg.obs_dim;
+        self.rollout.ensure_lanes(lanes);
+        let (means, log_std, values) = self
             .last
             .take()
-            .unwrap_or((vec![0.0; self.cfg.act_dim], vec![0.0; self.cfg.act_dim], 0.0));
-        let a = action.continuous();
-        let logp = Self::gaussian_logp(a, &mean, &log_std);
-        self.rollout.push(RolloutStep {
-            obs: obs.to_vec(),
-            action_i: 0,
-            action_c: a.to_vec(),
-            logp,
-            value,
-            reward,
-            done,
-        });
-        if self.rollout.full() {
-            let last_value = if done { 0.0 } else { self.compute.policy(next_obs)?.2 };
-            return self.train_rollout(last_value).map(Some);
+            .unwrap_or((vec![0.0; lanes * ad], vec![0.0; ad], vec![0.0; lanes]));
+        for l in 0..lanes {
+            let a = actions[l].try_continuous()?;
+            let logp = Self::gaussian_logp(a, &means[l * ad..(l + 1) * ad], &log_std);
+            self.rollout.push(RolloutStep {
+                obs: obs[l * d..(l + 1) * d].to_vec(),
+                action_i: 0,
+                action_c: a.to_vec(),
+                logp,
+                value: values[l],
+                reward: rewards[l],
+                done: dones[l],
+            });
         }
-        Ok(None)
+        if self.rollout.full() {
+            let last_values = self.bootstrap_values(next_obs, dones)?;
+            stats.push(self.train_rollout(&last_values)?);
+        }
+        Ok(())
     }
 
     fn train_steps(&self) -> u64 {

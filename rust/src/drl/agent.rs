@@ -19,24 +19,35 @@ pub struct StepStats {
 /// A DRL agent: picks actions and learns from transitions.  All network
 /// math goes through a compute backend ([`super::compute`]) — the CPU
 /// executor or the PJRT artifacts; the implementations only coordinate.
+///
+/// The interface is N-wide: `obs` stacks `lanes` observations lane-major
+/// (`lanes × obs_dim`) so actor inference issues *one* GEMM per layer
+/// for the whole fleet.  At `lanes == 1` every implementation is
+/// bit-identical to the scalar path it replaced: the batched forward
+/// degenerates to the same row math, and per-lane RNG draws happen in
+/// the same order (asserted in `tests/train.rs`).
 pub trait Agent {
-    /// Select an action for `obs` (exploration noise included).
-    fn act(&mut self, obs: &[f32], rng: &mut Rng) -> Result<Action>;
+    /// Select one action per lane for `obs` (`lanes × obs_dim`,
+    /// exploration noise included).
+    fn act(&mut self, obs: &[f32], lanes: usize, rng: &mut Rng) -> Result<Vec<Action>>;
 
-    /// Record a transition; returns train-step stats whenever the agent
-    /// decided to run one (buffer warm, rollout full, ...).
+    /// Record one transition per lane; appends train-step stats to
+    /// `stats` whenever a push triggered a train step (buffer warm,
+    /// rollout full, ...) — possibly several per call at `lanes > 1`.
+    #[allow(clippy::too_many_arguments)]
     fn observe(
         &mut self,
         obs: &[f32],
-        action: &Action,
-        reward: f32,
+        actions: &[Action],
+        rewards: &[f32],
         next_obs: &[f32],
-        done: bool,
+        dones: &[bool],
         rng: &mut Rng,
-    ) -> Result<Option<StepStats>>;
+        stats: &mut Vec<StepStats>,
+    ) -> Result<()>;
 
-    /// Greedy action (evaluation, no exploration).
-    fn act_greedy(&mut self, obs: &[f32]) -> Result<Action>;
+    /// Greedy actions (evaluation, no exploration), one per lane.
+    fn act_greedy(&mut self, obs: &[f32], lanes: usize) -> Result<Vec<Action>>;
 
     /// Number of optimizer steps taken so far.
     fn train_steps(&self) -> u64;

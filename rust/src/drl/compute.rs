@@ -41,9 +41,15 @@ pub trait ComputeBackend {
 }
 
 /// DQN: online/target Q-networks, one train step per sampled batch.
+///
+/// Inference methods are N-wide: `obs` stacks `lanes` observations
+/// lane-major (`lanes × obs_dim`) and outputs come back lane-major too,
+/// so the actor fleet costs one GEMM per layer.  Rows are independent
+/// in every kernel, so `lanes == 1` is bit-identical to the old scalar
+/// signatures.
 pub trait DqnCompute: ComputeBackend {
-    /// Q-values for a single observation.
-    fn qvalues(&mut self, obs: &[f32]) -> Result<Vec<f32>>;
+    /// Q-values for `lanes` stacked observations (`lanes × n_actions`).
+    fn qvalues(&mut self, obs: &[f32], lanes: usize) -> Result<Vec<f32>>;
     fn train(&mut self, batch: &Batch, loss_scale: f32) -> Result<TrainOut>;
     /// Hard-sync the target network from the online one (agent-scheduled).
     fn sync_target(&mut self) -> Result<()>;
@@ -51,21 +57,24 @@ pub trait DqnCompute: ComputeBackend {
 
 /// A2C: Gaussian policy + value net over GAE rollouts.
 pub trait A2cCompute: ComputeBackend {
-    /// `(mean, log_std, value)` for a single observation.
-    fn policy(&mut self, obs: &[f32]) -> Result<(Vec<f32>, Vec<f32>, f32)>;
+    /// `(means lanes × act_dim, log_std act_dim, values lanes)` for
+    /// `lanes` stacked observations (log_std is state-independent).
+    fn policy(&mut self, obs: &[f32], lanes: usize) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)>;
     fn train(&mut self, batch: &RolloutBatch, loss_scale: f32) -> Result<TrainOut>;
 }
 
 /// DDPG: deterministic actor + Q critic with soft-updated targets.
 pub trait DdpgCompute: ComputeBackend {
-    /// Deterministic action for a single observation.
-    fn action(&mut self, obs: &[f32]) -> Result<Vec<f32>>;
+    /// Deterministic actions for `lanes` stacked observations
+    /// (`lanes × act_dim`).
+    fn action(&mut self, obs: &[f32], lanes: usize) -> Result<Vec<f32>>;
     fn train(&mut self, batch: &Batch, loss_scale: f32) -> Result<TrainOut>;
 }
 
 /// PPO: discrete actor-critic, clipped-surrogate epochs over one rollout.
 pub trait PpoCompute: ComputeBackend {
-    /// `(logits, value)` for a single observation.
-    fn policy(&mut self, obs: &[f32]) -> Result<(Vec<f32>, f32)>;
+    /// `(logits lanes × n_actions, values lanes)` for `lanes` stacked
+    /// observations.
+    fn policy(&mut self, obs: &[f32], lanes: usize) -> Result<(Vec<f32>, Vec<f32>)>;
     fn train(&mut self, batch: &RolloutBatch, loss_scale: f32) -> Result<TrainOut>;
 }

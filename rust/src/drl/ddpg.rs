@@ -11,7 +11,7 @@ use crate::util::Rng;
 
 use super::agent::{Agent, StepStats};
 use super::compute::DdpgCompute;
-use super::replay::{ReplayBuffer, StoredAction};
+use super::replay::{Batch, ReplayBuffer, StoredAction};
 
 #[derive(Clone, Debug)]
 pub struct DdpgConfig {
@@ -47,29 +47,43 @@ pub struct DdpgAgent<C: DdpgCompute> {
     compute: C,
     replay: ReplayBuffer,
     scaler: LossScaler,
-    ou_state: Vec<f64>,
+    scratch: Batch,
+    /// One OU process per actor lane, reset lane-locally on episode end.
+    ou_states: Vec<Vec<f64>>,
     env_steps: u64,
+    /// Replay pushes — drives the `train_every` cadence per observation
+    /// (equal to `env_steps` at `lanes == 1`).
+    obs_steps: u64,
     train_steps: u64,
 }
 
 impl<C: DdpgCompute> DdpgAgent<C> {
     pub fn from_parts(cfg: DdpgConfig, compute: C, scaler: LossScaler) -> Self {
         let replay = ReplayBuffer::new(cfg.replay_capacity, cfg.obs_dim);
-        let ou_state = vec![0.0; cfg.act_dim];
-        DdpgAgent { cfg, compute, replay, scaler, ou_state, env_steps: 0, train_steps: 0 }
+        let ou_states = vec![vec![0.0; cfg.act_dim]];
+        DdpgAgent {
+            cfg,
+            compute,
+            replay,
+            scaler,
+            scratch: Batch::default(),
+            ou_states,
+            env_steps: 0,
+            obs_steps: 0,
+            train_steps: 0,
+        }
     }
 
-    fn ou_noise(&mut self, rng: &mut Rng) -> Vec<f64> {
-        for x in self.ou_state.iter_mut() {
-            *x += -self.cfg.ou_theta * *x + self.cfg.ou_sigma * rng.normal();
+    fn ensure_lanes(&mut self, lanes: usize) {
+        while self.ou_states.len() < lanes {
+            self.ou_states.push(vec![0.0; self.cfg.act_dim]);
         }
-        self.ou_state.clone()
     }
 
     fn train_batch(&mut self, rng: &mut Rng) -> Result<StepStats> {
-        let batch = self.replay.sample(self.cfg.batch, rng);
+        self.replay.sample_into(self.cfg.batch, rng, &mut self.scratch);
         let scale_used = self.scaler.scale();
-        let out = self.compute.train(&batch, scale_used)?;
+        let out = self.compute.train(&self.scratch, scale_used)?;
         if self.scaler.update(out.found_inf) {
             self.train_steps += 1;
         }
@@ -78,45 +92,64 @@ impl<C: DdpgCompute> DdpgAgent<C> {
 }
 
 impl<C: DdpgCompute> Agent for DdpgAgent<C> {
-    fn act(&mut self, obs: &[f32], rng: &mut Rng) -> Result<Action> {
-        self.env_steps += 1;
-        let mut a = self.compute.action(obs)?;
-        let noise = self.ou_noise(rng);
-        for (ai, ni) in a.iter_mut().zip(noise) {
-            *ai = (*ai + ni as f32).clamp(-1.0, 1.0);
+    fn act(&mut self, obs: &[f32], lanes: usize, rng: &mut Rng) -> Result<Vec<Action>> {
+        self.ensure_lanes(lanes);
+        // One batched actor forward (RNG-free) before the per-lane OU
+        // draws — same order as the scalar path at `lanes == 1`.
+        let a = self.compute.action(obs, lanes)?;
+        let ad = self.cfg.act_dim;
+        let mut out = Vec::with_capacity(lanes);
+        for l in 0..lanes {
+            self.env_steps += 1;
+            let mut al = a[l * ad..(l + 1) * ad].to_vec();
+            for (ai, x) in al.iter_mut().zip(self.ou_states[l].iter_mut()) {
+                *x += -self.cfg.ou_theta * *x + self.cfg.ou_sigma * rng.normal();
+                *ai = (*ai + *x as f32).clamp(-1.0, 1.0);
+            }
+            out.push(Action::Continuous(al));
         }
-        Ok(Action::Continuous(a))
+        Ok(out)
     }
 
-    fn act_greedy(&mut self, obs: &[f32]) -> Result<Action> {
-        Ok(Action::Continuous(self.compute.action(obs)?))
+    fn act_greedy(&mut self, obs: &[f32], lanes: usize) -> Result<Vec<Action>> {
+        let a = self.compute.action(obs, lanes)?;
+        let ad = self.cfg.act_dim;
+        Ok((0..lanes).map(|l| Action::Continuous(a[l * ad..(l + 1) * ad].to_vec())).collect())
     }
 
     fn observe(
         &mut self,
         obs: &[f32],
-        action: &Action,
-        reward: f32,
+        actions: &[Action],
+        rewards: &[f32],
         next_obs: &[f32],
-        done: bool,
+        dones: &[bool],
         rng: &mut Rng,
-    ) -> Result<Option<StepStats>> {
-        self.replay.push(
-            obs,
-            StoredAction::Continuous(action.continuous().to_vec()),
-            reward,
-            next_obs,
-            done,
-        );
-        if done {
-            self.ou_state.iter_mut().for_each(|x| *x = 0.0);
+        stats: &mut Vec<StepStats>,
+    ) -> Result<()> {
+        let lanes = actions.len();
+        self.ensure_lanes(lanes);
+        let d = self.cfg.obs_dim;
+        for l in 0..lanes {
+            let a = actions[l].try_continuous()?.to_vec();
+            self.replay.push(
+                &obs[l * d..(l + 1) * d],
+                StoredAction::Continuous(a),
+                rewards[l],
+                &next_obs[l * d..(l + 1) * d],
+                dones[l],
+            );
+            if dones[l] {
+                self.ou_states[l].iter_mut().for_each(|x| *x = 0.0);
+            }
+            self.obs_steps += 1;
+            if self.replay.len() >= self.cfg.warmup
+                && self.obs_steps % self.cfg.train_every as u64 == 0
+            {
+                stats.push(self.train_batch(rng)?);
+            }
         }
-        if self.replay.len() >= self.cfg.warmup
-            && self.env_steps % self.cfg.train_every as u64 == 0
-        {
-            return self.train_batch(rng).map(Some);
-        }
-        Ok(None)
+        Ok(())
     }
 
     fn train_steps(&self) -> u64 {

@@ -14,7 +14,7 @@ use crate::util::Rng;
 
 use super::agent::{Agent, StepStats};
 use super::compute::DqnCompute;
-use super::replay::{ReplayBuffer, StoredAction};
+use super::replay::{Batch, ReplayBuffer, StoredAction};
 
 /// DQN hyper-parameters (coordinator-side; the compute backend owns
 /// lr/γ).
@@ -59,7 +59,12 @@ pub struct DqnAgent<C: DqnCompute> {
     compute: C,
     replay: ReplayBuffer,
     scaler: LossScaler,
+    scratch: Batch,
     env_steps: u64,
+    /// Transitions pushed into replay — drives the `train_every` cadence
+    /// per observation (equal to `env_steps` at `lanes == 1`, since
+    /// `act` and `observe` alternate once per round).
+    obs_steps: u64,
     train_steps: u64,
 }
 
@@ -68,7 +73,16 @@ impl<C: DqnCompute> DqnAgent<C> {
     /// loss scaler.
     pub fn from_parts(cfg: DqnConfig, compute: C, scaler: LossScaler) -> Self {
         let replay = ReplayBuffer::new(cfg.replay_capacity, cfg.obs_dim());
-        DqnAgent { cfg, compute, replay, scaler, env_steps: 0, train_steps: 0 }
+        DqnAgent {
+            cfg,
+            compute,
+            replay,
+            scaler,
+            scratch: Batch::default(),
+            env_steps: 0,
+            obs_steps: 0,
+            train_steps: 0,
+        }
     }
 
     fn epsilon(&self) -> f64 {
@@ -77,9 +91,9 @@ impl<C: DqnCompute> DqnAgent<C> {
     }
 
     fn train_batch(&mut self, rng: &mut Rng) -> Result<StepStats> {
-        let batch = self.replay.sample(self.cfg.batch, rng);
+        self.replay.sample_into(self.cfg.batch, rng, &mut self.scratch);
         let scale_used = self.scaler.scale();
-        let out = self.compute.train(&batch, scale_used)?;
+        let out = self.compute.train(&self.scratch, scale_used)?;
         let applied = self.scaler.update(out.found_inf);
         if applied {
             self.train_steps += 1;
@@ -91,47 +105,65 @@ impl<C: DqnCompute> DqnAgent<C> {
     }
 }
 
+fn argmax_row(q: &[f32]) -> usize {
+    q.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).map(|(i, _)| i).unwrap_or(0)
+}
+
 impl<C: DqnCompute> Agent for DqnAgent<C> {
-    fn act(&mut self, obs: &[f32], rng: &mut Rng) -> Result<Action> {
-        self.env_steps += 1;
-        if rng.uniform() < self.epsilon() {
-            return Ok(Action::Discrete(rng.below(self.cfg.n_actions)));
+    fn act(&mut self, obs: &[f32], lanes: usize, rng: &mut Rng) -> Result<Vec<Action>> {
+        // One batched forward for all lanes *before* the per-lane ε
+        // draws: `qvalues` is RNG-free and side-effect-free, so at
+        // `lanes == 1` the exploration stream is bit-identical to the
+        // scalar path (which only ran the forward when exploiting).
+        let q = self.compute.qvalues(obs, lanes)?;
+        let na = q.len() / lanes;
+        let mut out = Vec::with_capacity(lanes);
+        for l in 0..lanes {
+            self.env_steps += 1;
+            if rng.uniform() < self.epsilon() {
+                out.push(Action::Discrete(rng.below(self.cfg.n_actions)));
+            } else {
+                out.push(Action::Discrete(argmax_row(&q[l * na..(l + 1) * na])));
+            }
         }
-        self.act_greedy(obs)
+        Ok(out)
     }
 
-    fn act_greedy(&mut self, obs: &[f32]) -> Result<Action> {
-        let q = self.compute.qvalues(obs)?;
-        let best = q
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.total_cmp(b.1))
-            .map(|(i, _)| i)
-            .unwrap_or(0);
-        Ok(Action::Discrete(best))
+    fn act_greedy(&mut self, obs: &[f32], lanes: usize) -> Result<Vec<Action>> {
+        let q = self.compute.qvalues(obs, lanes)?;
+        let na = q.len() / lanes;
+        Ok((0..lanes).map(|l| Action::Discrete(argmax_row(&q[l * na..(l + 1) * na]))).collect())
     }
 
     fn observe(
         &mut self,
         obs: &[f32],
-        action: &Action,
-        reward: f32,
+        actions: &[Action],
+        rewards: &[f32],
         next_obs: &[f32],
-        done: bool,
+        dones: &[bool],
         rng: &mut Rng,
-    ) -> Result<Option<StepStats>> {
-        self.replay.push(
-            obs,
-            StoredAction::Discrete(action.discrete() as i32),
-            reward,
-            next_obs,
-            done,
-        );
-        if self.replay.len() >= self.cfg.warmup && self.env_steps % self.cfg.train_every as u64 == 0
-        {
-            return self.train_batch(rng).map(Some);
+        stats: &mut Vec<StepStats>,
+    ) -> Result<()> {
+        let lanes = actions.len();
+        let d = self.cfg.obs_dim();
+        for l in 0..lanes {
+            let a = actions[l].try_discrete()? as i32;
+            self.replay.push(
+                &obs[l * d..(l + 1) * d],
+                StoredAction::Discrete(a),
+                rewards[l],
+                &next_obs[l * d..(l + 1) * d],
+                dones[l],
+            );
+            self.obs_steps += 1;
+            if self.replay.len() >= self.cfg.warmup
+                && self.obs_steps % self.cfg.train_every as u64 == 0
+            {
+                stats.push(self.train_batch(rng)?);
+            }
         }
-        Ok(None)
+        Ok(())
     }
 
     fn train_steps(&self) -> u64 {

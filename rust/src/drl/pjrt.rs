@@ -88,14 +88,22 @@ impl PjrtDqn {
 impl ComputeBackend for PjrtDqn {}
 
 impl DqnCompute for PjrtDqn {
-    fn qvalues(&mut self, obs: &[f32]) -> Result<Vec<f32>> {
+    fn qvalues(&mut self, obs: &[f32], lanes: usize) -> Result<Vec<f32>> {
+        // The act artifact is lowered at batch 1; run it per lane and
+        // concatenate (lane rows are independent, so this matches a
+        // natively batched forward).
+        let d = obs.len() / lanes;
         let mut shape = vec![1usize];
         shape.extend(&self.obs_shape);
-        let obs_lit = literal_f32(obs, &shape)?;
-        let mut inputs: Vec<&xla::Literal> = self.params.tensors.iter().collect();
-        inputs.push(&obs_lit);
-        let outs = self.act_exe.run(&inputs)?;
-        to_vec_f32(&outs[0])
+        let mut all = Vec::new();
+        for l in 0..lanes {
+            let obs_lit = literal_f32(&obs[l * d..(l + 1) * d], &shape)?;
+            let mut inputs: Vec<&xla::Literal> = self.params.tensors.iter().collect();
+            inputs.push(&obs_lit);
+            let outs = self.act_exe.run(&inputs)?;
+            all.extend(to_vec_f32(&outs[0])?);
+        }
+        Ok(all)
     }
 
     fn train(&mut self, batch: &Batch, loss_scale: f32) -> Result<TrainOut> {
@@ -165,15 +173,25 @@ impl PjrtA2c {
 impl ComputeBackend for PjrtA2c {}
 
 impl A2cCompute for PjrtA2c {
-    fn policy(&mut self, obs: &[f32]) -> Result<(Vec<f32>, Vec<f32>, f32)> {
-        let obs_lit = literal_f32(obs, &[1, self.obs_dim])?;
-        let mut inputs: Vec<&xla::Literal> = self.params.tensors.iter().collect();
-        inputs.push(&obs_lit);
-        let outs = self.act_exe.run(&inputs)?;
-        let mean = to_vec_f32(&outs[0])?;
-        let log_std = to_vec_f32(&outs[1])?;
-        let value = scalar_of(&outs[2])?;
-        Ok((mean, log_std, value))
+    fn policy(&mut self, obs: &[f32], lanes: usize) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        // Batch-1 artifact run per lane; log_std is state-independent so
+        // the first lane's copy serves all lanes.
+        let d = self.obs_dim;
+        let mut means = Vec::with_capacity(lanes * self.act_dim);
+        let mut values = Vec::with_capacity(lanes);
+        let mut log_std = Vec::new();
+        for l in 0..lanes {
+            let obs_lit = literal_f32(&obs[l * d..(l + 1) * d], &[1, d])?;
+            let mut inputs: Vec<&xla::Literal> = self.params.tensors.iter().collect();
+            inputs.push(&obs_lit);
+            let outs = self.act_exe.run(&inputs)?;
+            means.extend(to_vec_f32(&outs[0])?);
+            if l == 0 {
+                log_std = to_vec_f32(&outs[1])?;
+            }
+            values.push(scalar_of(&outs[2])?);
+        }
+        Ok((means, log_std, values))
     }
 
     fn train(&mut self, batch: &RolloutBatch, loss_scale: f32) -> Result<TrainOut> {
@@ -255,12 +273,17 @@ impl PjrtDdpg {
 impl ComputeBackend for PjrtDdpg {}
 
 impl DdpgCompute for PjrtDdpg {
-    fn action(&mut self, obs: &[f32]) -> Result<Vec<f32>> {
-        let obs_lit = literal_f32(obs, &[1, self.obs_dim])?;
-        let mut inputs: Vec<&xla::Literal> = self.actor.tensors.iter().collect();
-        inputs.push(&obs_lit);
-        let outs = self.act_exe.run(&inputs)?;
-        to_vec_f32(&outs[0])
+    fn action(&mut self, obs: &[f32], lanes: usize) -> Result<Vec<f32>> {
+        let d = self.obs_dim;
+        let mut all = Vec::with_capacity(lanes * self.act_dim);
+        for l in 0..lanes {
+            let obs_lit = literal_f32(&obs[l * d..(l + 1) * d], &[1, d])?;
+            let mut inputs: Vec<&xla::Literal> = self.actor.tensors.iter().collect();
+            inputs.push(&obs_lit);
+            let outs = self.act_exe.run(&inputs)?;
+            all.extend(to_vec_f32(&outs[0])?);
+        }
+        Ok(all)
     }
 
     fn train(&mut self, batch: &Batch, loss_scale: f32) -> Result<TrainOut> {
@@ -335,14 +358,21 @@ impl PjrtPpo {
 impl ComputeBackend for PjrtPpo {}
 
 impl PpoCompute for PjrtPpo {
-    fn policy(&mut self, obs: &[f32]) -> Result<(Vec<f32>, f32)> {
+    fn policy(&mut self, obs: &[f32], lanes: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+        let d = obs.len() / lanes;
         let mut shape = vec![1usize];
         shape.extend(&self.obs_shape);
-        let obs_lit = literal_f32(obs, &shape)?;
-        let mut inputs: Vec<&xla::Literal> = self.params.tensors.iter().collect();
-        inputs.push(&obs_lit);
-        let outs = self.act_exe.run(&inputs)?;
-        Ok((to_vec_f32(&outs[0])?, scalar_of(&outs[1])?))
+        let mut logits = Vec::new();
+        let mut values = Vec::with_capacity(lanes);
+        for l in 0..lanes {
+            let obs_lit = literal_f32(&obs[l * d..(l + 1) * d], &shape)?;
+            let mut inputs: Vec<&xla::Literal> = self.params.tensors.iter().collect();
+            inputs.push(&obs_lit);
+            let outs = self.act_exe.run(&inputs)?;
+            logits.extend(to_vec_f32(&outs[0])?);
+            values.push(scalar_of(&outs[1])?);
+        }
+        Ok((logits, values))
     }
 
     fn train(&mut self, batch: &RolloutBatch, loss_scale: f32) -> Result<TrainOut> {

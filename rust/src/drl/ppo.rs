@@ -11,7 +11,7 @@ use crate::util::Rng;
 
 use super::agent::{Agent, StepStats};
 use super::compute::PpoCompute;
-use super::rollout::{RolloutBuffer, RolloutStep};
+use super::rollout::{RolloutBatch, RolloutBuffer, RolloutStep};
 
 #[derive(Clone, Debug)]
 pub struct PpoConfig {
@@ -37,20 +37,46 @@ pub struct PpoAgent<C: PpoCompute> {
     compute: C,
     rollout: RolloutBuffer,
     scaler: LossScaler,
-    last: Option<(Vec<f32>, f32)>, // (log-probs, value) from act()
+    scratch: RolloutBatch,
+    /// Cached `act` outputs (log-probs lanes × n_actions, values lanes).
+    last: Option<(Vec<f32>, Vec<f32>)>,
     train_steps: u64,
 }
 
 impl<C: PpoCompute> PpoAgent<C> {
     pub fn from_parts(cfg: PpoConfig, compute: C, scaler: LossScaler) -> Self {
         let rollout = RolloutBuffer::new(cfg.horizon, cfg.gamma, cfg.gae_lambda);
-        PpoAgent { cfg, compute, rollout, scaler, last: None, train_steps: 0 }
+        PpoAgent {
+            cfg,
+            compute,
+            rollout,
+            scaler,
+            scratch: RolloutBatch::default(),
+            last: None,
+            train_steps: 0,
+        }
     }
 
     fn log_softmax(logits: &[f32]) -> Vec<f32> {
         let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let logz = logits.iter().map(|l| (l - max).exp()).sum::<f32>().ln() + max;
         logits.iter().map(|l| l - logz).collect()
+    }
+
+    /// Per-lane bootstrap values: 0 where the lane terminated, the value
+    /// head otherwise; the forward is skipped entirely when every lane
+    /// terminated (scalar-path behavior at `lanes == 1`).
+    fn bootstrap_values(&mut self, next_obs: &[f32], dones: &[bool]) -> Result<Vec<f32>> {
+        if dones.iter().all(|&d| d) {
+            return Ok(vec![0.0; dones.len()]);
+        }
+        let mut values = self.compute.policy(next_obs, dones.len())?.1;
+        for (v, &d) in values.iter_mut().zip(dones) {
+            if d {
+                *v = 0.0;
+            }
+        }
+        Ok(values)
     }
 
     /// Run `epochs` optimizer steps over one finished rollout.  The
@@ -60,13 +86,13 @@ impl<C: PpoCompute> PpoAgent<C> {
     /// fed to the first epoch (consecutive rollouts therefore expose
     /// every inter-rollout FSM transition, including the first
     /// backoff), and `loss` is the final epoch's.
-    fn train_rollout(&mut self, last_value: f32) -> Result<StepStats> {
-        let batch = self.rollout.finish(last_value, true);
+    fn train_rollout(&mut self, last_values: &[f32]) -> Result<StepStats> {
+        self.rollout.finish_into(last_values, true, &mut self.scratch);
         let first_scale = self.scaler.scale();
         let mut any_inf = false;
         let mut loss = 0.0;
         for _ in 0..self.cfg.epochs {
-            let out = self.compute.train(&batch, self.scaler.scale())?;
+            let out = self.compute.train(&self.scratch, self.scaler.scale())?;
             any_inf |= out.found_inf;
             if self.scaler.update(out.found_inf) {
                 self.train_steps += 1;
@@ -78,52 +104,74 @@ impl<C: PpoCompute> PpoAgent<C> {
 }
 
 impl<C: PpoCompute> Agent for PpoAgent<C> {
-    fn act(&mut self, obs: &[f32], rng: &mut Rng) -> Result<Action> {
-        let (logits, value) = self.compute.policy(obs)?;
-        let logp = Self::log_softmax(&logits);
-        let probs: Vec<f64> = logp.iter().map(|l| l.exp() as f64).collect();
-        let a = rng.categorical(&probs);
-        self.last = Some((logp, value));
-        Ok(Action::Discrete(a))
+    fn act(&mut self, obs: &[f32], lanes: usize, rng: &mut Rng) -> Result<Vec<Action>> {
+        // One batched policy forward, then per-lane categorical draws in
+        // lane order (one `uniform()` each) — the scalar RNG stream at
+        // `lanes == 1`.
+        let (logits, values) = self.compute.policy(obs, lanes)?;
+        let na = logits.len() / lanes;
+        let mut logp_all = Vec::with_capacity(logits.len());
+        let mut out = Vec::with_capacity(lanes);
+        for l in 0..lanes {
+            let logp = Self::log_softmax(&logits[l * na..(l + 1) * na]);
+            let probs: Vec<f64> = logp.iter().map(|x| x.exp() as f64).collect();
+            out.push(Action::Discrete(rng.categorical(&probs)));
+            logp_all.extend_from_slice(&logp);
+        }
+        self.last = Some((logp_all, values));
+        Ok(out)
     }
 
-    fn act_greedy(&mut self, obs: &[f32]) -> Result<Action> {
-        let (logits, _) = self.compute.policy(obs)?;
-        let best = logits
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.total_cmp(b.1))
-            .map(|(i, _)| i)
-            .unwrap_or(0);
-        Ok(Action::Discrete(best))
+    fn act_greedy(&mut self, obs: &[f32], lanes: usize) -> Result<Vec<Action>> {
+        let (logits, _) = self.compute.policy(obs, lanes)?;
+        let na = logits.len() / lanes;
+        Ok((0..lanes)
+            .map(|l| {
+                let row = &logits[l * na..(l + 1) * na];
+                let best = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                Action::Discrete(best)
+            })
+            .collect())
     }
 
     fn observe(
         &mut self,
         obs: &[f32],
-        action: &Action,
-        reward: f32,
+        actions: &[Action],
+        rewards: &[f32],
         next_obs: &[f32],
-        done: bool,
+        dones: &[bool],
         _rng: &mut Rng,
-    ) -> Result<Option<StepStats>> {
-        let a = action.discrete();
-        let (logp_all, value) =
-            self.last.take().unwrap_or((vec![0.0; self.cfg.n_actions], 0.0));
-        self.rollout.push(RolloutStep {
-            obs: obs.to_vec(),
-            action_i: a as i32,
-            action_c: vec![],
-            logp: logp_all.get(a).copied().unwrap_or(0.0),
-            value,
-            reward,
-            done,
-        });
-        if self.rollout.full() {
-            let last_value = if done { 0.0 } else { self.compute.policy(next_obs)?.1 };
-            return self.train_rollout(last_value).map(Some);
+        stats: &mut Vec<StepStats>,
+    ) -> Result<()> {
+        let lanes = actions.len();
+        let na = self.cfg.n_actions;
+        let d: usize = self.cfg.obs_shape.iter().product();
+        self.rollout.ensure_lanes(lanes);
+        let (logp_all, values) =
+            self.last.take().unwrap_or((vec![0.0; lanes * na], vec![0.0; lanes]));
+        for l in 0..lanes {
+            let a = actions[l].try_discrete()?;
+            self.rollout.push(RolloutStep {
+                obs: obs[l * d..(l + 1) * d].to_vec(),
+                action_i: a as i32,
+                action_c: vec![],
+                logp: logp_all.get(l * na + a).copied().unwrap_or(0.0),
+                value: values[l],
+                reward: rewards[l],
+                done: dones[l],
+            });
         }
-        Ok(None)
+        if self.rollout.full() {
+            let last_values = self.bootstrap_values(next_obs, dones)?;
+            stats.push(self.train_rollout(&last_values)?);
+        }
+        Ok(())
     }
 
     fn train_steps(&self) -> u64 {

@@ -3,6 +3,13 @@
 //! Advantage estimation is coordinator work in AP-DRL's mapping (the
 //! paper cites HEPPO's hardware GAE as related work; here it is cheap
 //! L3 arithmetic between artifact invocations).
+//!
+//! The buffer is lane-aware for the batched rollout path: with
+//! [`RolloutBuffer::ensure_lanes`]`(n)`, pushes interleave `n` actor
+//! lanes round-major/lane-minor (storage index `t * lanes + l`) and
+//! GAE runs a per-lane strided backward recursion.  At `lanes == 1`
+//! the stride is 1, so the arithmetic (and hence every bit of the
+//! output) is identical to the scalar recursion it replaced.
 
 /// One on-policy step record.
 #[derive(Clone, Debug)]
@@ -21,11 +28,13 @@ pub struct RolloutStep {
 pub struct RolloutBuffer {
     pub steps: Vec<RolloutStep>,
     horizon: usize,
+    lanes: usize,
     gamma: f64,
     lambda: f64,
 }
 
 /// Flat on-policy batch (artifact-ready).
+#[derive(Default)]
 pub struct RolloutBatch {
     pub obs: Vec<f32>,
     pub actions_i32: Vec<i32>,
@@ -38,15 +47,32 @@ pub struct RolloutBatch {
 
 impl RolloutBuffer {
     pub fn new(horizon: usize, gamma: f64, lambda: f64) -> Self {
-        RolloutBuffer { steps: Vec::with_capacity(horizon), horizon, gamma, lambda }
+        RolloutBuffer { steps: Vec::with_capacity(horizon), horizon, lanes: 1, gamma, lambda }
+    }
+
+    /// Declare the actor-lane count (default 1).  Pushes must then
+    /// interleave lanes round-major (`t * lanes + l`), which is what an
+    /// agent observing a `BatchedEnv` round does naturally.  Only legal
+    /// on an empty buffer — lanes cannot change mid-rollout.
+    pub fn ensure_lanes(&mut self, lanes: usize) {
+        assert!(lanes >= 1, "lane count must be >= 1");
+        if self.lanes != lanes {
+            assert!(self.is_empty(), "cannot change lane count mid-rollout");
+            self.lanes = lanes;
+        }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
     }
 
     pub fn push(&mut self, step: RolloutStep) {
         self.steps.push(step);
     }
 
+    /// A full rollout holds `horizon` rounds of all lanes.
     pub fn full(&self) -> bool {
-        self.steps.len() >= self.horizon
+        self.steps.len() >= self.horizon * self.lanes
     }
 
     pub fn len(&self) -> usize {
@@ -58,49 +84,65 @@ impl RolloutBuffer {
     }
 
     /// Compute GAE advantages + returns and drain the buffer.
-    /// `last_value` bootstraps the value of the state after the final
-    /// step (0 if that step terminated).
-    pub fn finish(&mut self, last_value: f32, normalize_adv: bool) -> RolloutBatch {
+    /// `last_values` bootstraps the value of the state after the final
+    /// round, one entry per lane (0 where that lane's step terminated).
+    pub fn finish(&mut self, last_values: &[f32], normalize_adv: bool) -> RolloutBatch {
+        let mut batch = RolloutBatch::default();
+        self.finish_into(last_values, normalize_adv, &mut batch);
+        batch
+    }
+
+    /// [`finish`](Self::finish) into a caller-owned batch, reusing its
+    /// capacity so steady-state training allocates nothing per rollout.
+    /// Identical output (asserted in the module tests).
+    pub fn finish_into(
+        &mut self,
+        last_values: &[f32],
+        normalize_adv: bool,
+        batch: &mut RolloutBatch,
+    ) {
         let n = self.steps.len();
-        let mut adv = vec![0.0f32; n];
-        let mut gae = 0.0f64;
-        let mut next_value = last_value as f64;
-        for t in (0..n).rev() {
-            let s = &self.steps[t];
-            let nonterminal = if s.done { 0.0 } else { 1.0 };
-            let delta = s.reward as f64 + self.gamma * next_value * nonterminal - s.value as f64;
-            gae = delta + self.gamma * self.lambda * nonterminal * gae;
-            adv[t] = gae as f32;
-            next_value = s.value as f64;
+        let lanes = self.lanes;
+        assert_eq!(last_values.len(), lanes, "one bootstrap value per lane");
+        assert_eq!(n % lanes, 0, "rollout length must be whole rounds of all lanes");
+        batch.advantages.clear();
+        batch.advantages.resize(n, 0.0);
+        for (l, &last_value) in last_values.iter().enumerate() {
+            let mut gae = 0.0f64;
+            let mut next_value = last_value as f64;
+            for t in (0..n / lanes).rev() {
+                let i = t * lanes + l;
+                let s = &self.steps[i];
+                let nonterminal = if s.done { 0.0 } else { 1.0 };
+                let delta =
+                    s.reward as f64 + self.gamma * next_value * nonterminal - s.value as f64;
+                gae = delta + self.gamma * self.lambda * nonterminal * gae;
+                batch.advantages[i] = gae as f32;
+                next_value = s.value as f64;
+            }
         }
-        let returns: Vec<f32> =
-            adv.iter().zip(&self.steps).map(|(a, s)| a + s.value).collect();
-        let mut advantages = adv;
+        batch.returns.clear();
+        batch.returns.extend(batch.advantages.iter().zip(&self.steps).map(|(a, s)| a + s.value));
         if normalize_adv && n > 1 {
-            let xs: Vec<f64> = advantages.iter().map(|&x| x as f64).collect();
+            let xs: Vec<f64> = batch.advantages.iter().map(|&x| x as f64).collect();
             let m = crate::util::stats::mean(&xs);
             let s = crate::util::stats::std_dev(&xs).max(1e-8);
-            for a in advantages.iter_mut() {
+            for a in batch.advantages.iter_mut() {
                 *a = ((*a as f64 - m) / s) as f32;
             }
         }
-        let mut batch = RolloutBatch {
-            obs: Vec::with_capacity(n * self.steps[0].obs.len()),
-            actions_i32: Vec::with_capacity(n),
-            actions_f32: Vec::new(),
-            logp_old: Vec::with_capacity(n),
-            returns,
-            advantages,
-            size: n,
-        };
+        batch.obs.clear();
+        batch.actions_i32.clear();
+        batch.actions_f32.clear();
+        batch.logp_old.clear();
         for s in &self.steps {
             batch.obs.extend_from_slice(&s.obs);
             batch.actions_i32.push(s.action_i);
             batch.actions_f32.extend_from_slice(&s.action_c);
             batch.logp_old.push(s.logp);
         }
+        batch.size = n;
         self.steps.clear();
-        batch
     }
 }
 
@@ -126,7 +168,7 @@ mod tests {
         let mut rb = RolloutBuffer::new(2, 0.5, 0.5);
         rb.push(step(1.0, 0.5, false));
         rb.push(step(2.0, 0.25, false));
-        let b = rb.finish(1.0, false);
+        let b = rb.finish(&[1.0], false);
         // δ1 = 2 + 0.5·1 − 0.25 = 2.25 ; A1 = 2.25
         // δ0 = 1 + 0.5·0.25 − 0.5 = 0.625 ; A0 = 0.625 + 0.25·2.25 = 1.1875
         assert!((b.advantages[1] - 2.25).abs() < 1e-6);
@@ -139,7 +181,7 @@ mod tests {
         let mut rb = RolloutBuffer::new(2, 0.99, 0.95);
         rb.push(step(1.0, 0.7, true));
         rb.push(step(1.0, 0.3, false));
-        let b = rb.finish(5.0, false);
+        let b = rb.finish(&[5.0], false);
         // step0 terminal: A0 = r - v = 0.3, no leakage from step1/bootstrap
         assert!((b.advantages[0] - 0.3).abs() < 1e-6);
     }
@@ -150,7 +192,7 @@ mod tests {
         for k in 0..8 {
             rb.push(step(k as f32, 0.0, false));
         }
-        let b = rb.finish(0.0, true);
+        let b = rb.finish(&[0.0], true);
         let xs: Vec<f64> = b.advantages.iter().map(|&x| x as f64).collect();
         assert!(crate::util::stats::mean(&xs).abs() < 1e-5);
         assert!((crate::util::stats::std_dev(&xs) - 1.0).abs() < 1e-4);
@@ -162,7 +204,69 @@ mod tests {
         rb.push(step(0.0, 0.0, false));
         rb.push(step(0.0, 0.0, false));
         assert!(rb.full());
-        rb.finish(0.0, false);
+        rb.finish(&[0.0], false);
+        assert!(rb.is_empty());
+    }
+
+    #[test]
+    fn interleaved_lanes_equal_independent_scalar_buffers() {
+        // Two lanes interleaved round-major must produce, per lane, the
+        // exact advantages/returns two scalar buffers produce.
+        let lane0: [(f32, f32, bool); 3] =
+            [(1.0, 0.5, false), (0.5, 0.4, true), (2.0, 0.1, false)];
+        let lane1: [(f32, f32, bool); 3] =
+            [(0.2, 0.3, false), (0.7, 0.6, false), (1.5, 0.2, false)];
+        let boots = [0.8f32, 0.9];
+
+        let mut interleaved = RolloutBuffer::new(3, 0.99, 0.95);
+        interleaved.ensure_lanes(2);
+        for t in 0..3 {
+            for (l, lane) in [lane0, lane1].iter().enumerate() {
+                let (r, v, d) = lane[t];
+                let mut s = step(r, v, d);
+                s.obs = vec![(t * 2 + l) as f32];
+                interleaved.push(s);
+            }
+        }
+        assert!(interleaved.full());
+        let b = interleaved.finish(&boots, false);
+
+        for (l, lane) in [lane0, lane1].iter().enumerate() {
+            let mut scalar = RolloutBuffer::new(3, 0.99, 0.95);
+            for &(r, v, d) in lane {
+                scalar.push(step(r, v, d));
+            }
+            let sb = scalar.finish(&[boots[l]], false);
+            for t in 0..3 {
+                let i = t * 2 + l;
+                assert_eq!(b.advantages[i].to_bits(), sb.advantages[t].to_bits());
+                assert_eq!(b.returns[i].to_bits(), sb.returns[t].to_bits());
+                assert_eq!(b.obs[i], i as f32, "push-order layout");
+            }
+        }
+    }
+
+    #[test]
+    fn finish_into_reuses_capacity_without_behavior_change() {
+        let fill = |rb: &mut RolloutBuffer| {
+            for k in 0..4 {
+                rb.push(step(k as f32, 0.1 * k as f32, k == 2));
+            }
+        };
+        let mut rb = RolloutBuffer::new(4, 0.99, 0.95);
+        let mut reused = RolloutBatch::default();
+        fill(&mut rb);
+        rb.finish_into(&[0.5], true, &mut reused); // warm the capacity
+        fill(&mut rb);
+        rb.finish_into(&[0.5], true, &mut reused);
+        let mut rb2 = RolloutBuffer::new(4, 0.99, 0.95);
+        fill(&mut rb2);
+        let fresh = rb2.finish(&[0.5], true);
+        assert_eq!(reused.advantages, fresh.advantages);
+        assert_eq!(reused.returns, fresh.returns);
+        assert_eq!(reused.obs, fresh.obs);
+        assert_eq!(reused.logp_old, fresh.logp_old);
+        assert_eq!(reused.size, fresh.size);
         assert!(rb.is_empty());
     }
 }

@@ -1,0 +1,239 @@
+//! `BatchedEnv` — N independently-seeded instances of any [`Env`] stepped
+//! in lockstep, the actor-fleet side of the batched rollout path.
+//!
+//! Each lane owns its env plus a private RNG stream, so the fleet is a
+//! pure function of the lane seeds: lane `l` of a `BatchedEnv` replays
+//! exactly the stream of a standalone env driven with the same RNG
+//! (asserted for all 8 env combos in `tests/envs.rs`).  Lanes that
+//! finish an episode auto-reset, so [`BatchedEnv::obs`] always holds a
+//! live observation per lane and the agent never sees a terminal state
+//! as input.  Stepping fans out over `exec::pool` (envs run on the PS
+//! side of the paper's mapping — CPU threads are the right substrate),
+//! while collection into the flat lane-major buffers stays sequential
+//! and allocation-free.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, ensure, Result};
+
+use super::{Action, Env, Transition};
+use crate::exec::Pool;
+use crate::util::Rng;
+
+/// Fork `n` per-lane RNG streams off a master RNG.  Lane 0 is the first
+/// fork with `tag`, so at `n == 1` this is bit-identical to the scalar
+/// path's single `rng.fork(tag)` — the seeding half of the `--actors 1`
+/// bit-identity guarantee.
+pub fn lane_rngs(rng: &mut Rng, tag: u64, n: usize) -> Vec<Rng> {
+    (0..n).map(|l| rng.fork(tag.wrapping_add(l as u64))).collect()
+}
+
+/// One lane: an env, its RNG stream, and the latest raw transition.
+struct Lane {
+    env: Box<dyn Env>,
+    rng: Rng,
+    /// Current observation fed to the agent next round (post-auto-reset).
+    cur: Vec<f32>,
+    /// Raw outcome of the last step (pre-auto-reset `obs`).
+    tr: Transition,
+}
+
+/// N env lanes stepped in lockstep with per-lane auto-reset.
+pub struct BatchedEnv {
+    lanes: Vec<Mutex<Lane>>,
+    obs_dim: usize,
+    action_dim: usize,
+    discrete: bool,
+    pool: Arc<Pool>,
+    obs: Vec<f32>,
+    next_obs: Vec<f32>,
+    rewards: Vec<f64>,
+    dones: Vec<bool>,
+}
+
+impl BatchedEnv {
+    /// Build a fleet from pre-seeded lanes and reset each one.  All envs
+    /// must agree on dims/action kind; lanes reset in order, so lane
+    /// RNG states after construction match the scalar `reset` path.
+    pub fn new(envs: Vec<Box<dyn Env>>, rngs: Vec<Rng>, pool: Arc<Pool>) -> Result<BatchedEnv> {
+        ensure!(!envs.is_empty(), "BatchedEnv needs at least one lane");
+        ensure!(
+            envs.len() == rngs.len(),
+            "BatchedEnv: {} envs but {} lane RNGs",
+            envs.len(),
+            rngs.len()
+        );
+        let obs_dim = envs[0].obs_dim();
+        let action_dim = envs[0].action_dim();
+        let discrete = envs[0].is_discrete();
+        for e in &envs {
+            ensure!(
+                e.obs_dim() == obs_dim
+                    && e.action_dim() == action_dim
+                    && e.is_discrete() == discrete,
+                "BatchedEnv lanes must be homogeneous (obs_dim/action_dim/action kind)"
+            );
+        }
+        let n = envs.len();
+        let mut lanes = Vec::with_capacity(n);
+        let mut obs = Vec::with_capacity(n * obs_dim);
+        for (mut env, mut rng) in envs.into_iter().zip(rngs) {
+            let cur = env.reset(&mut rng);
+            ensure!(
+                cur.len() == obs_dim,
+                "env reset returned {} values, expected {obs_dim}",
+                cur.len()
+            );
+            obs.extend_from_slice(&cur);
+            lanes.push(Mutex::new(Lane {
+                env,
+                rng,
+                cur,
+                tr: Transition { obs: Vec::new(), reward: 0.0, done: false },
+            }));
+        }
+        Ok(BatchedEnv {
+            lanes,
+            obs_dim,
+            action_dim,
+            discrete,
+            pool,
+            obs,
+            next_obs: vec![0.0; n * obs_dim],
+            rewards: vec![0.0; n],
+            dones: vec![false; n],
+        })
+    }
+
+    /// Step every lane with its action; done lanes auto-reset.  After the
+    /// call, [`obs`](Self::obs) holds next-round inputs (reset obs where
+    /// done), while [`next_obs`](Self::next_obs) / [`rewards`](Self::rewards)
+    /// / [`dones`](Self::dones) hold the raw transition for `observe`.
+    pub fn step(&mut self, actions: &[Action]) -> Result<()> {
+        ensure!(
+            actions.len() == self.lanes.len(),
+            "BatchedEnv::step: {} actions for {} lanes",
+            actions.len(),
+            self.lanes.len()
+        );
+        // Validate the action kind up-front so a mis-wired env/agent
+        // combo fails with a clear error, not a panic inside a worker.
+        for (l, a) in actions.iter().enumerate() {
+            if self.discrete {
+                a.try_discrete().map_err(|e| anyhow!("lane {l}: {e}"))?;
+            } else {
+                a.try_continuous().map_err(|e| anyhow!("lane {l}: {e}"))?;
+            }
+        }
+        let lanes = &self.lanes;
+        let task = |l: usize| {
+            let mut guard = lanes[l].lock().expect("lane mutex poisoned");
+            let lane = &mut *guard;
+            let tr = lane.env.step(&actions[l], &mut lane.rng);
+            if tr.done {
+                lane.cur = lane.env.reset(&mut lane.rng);
+            } else {
+                lane.cur.clone_from(&tr.obs);
+            }
+            lane.tr = tr;
+        };
+        self.pool.run(lanes.len(), &task);
+        let d = self.obs_dim;
+        for (l, m) in self.lanes.iter().enumerate() {
+            let lane = m.lock().expect("lane mutex poisoned");
+            self.next_obs[l * d..(l + 1) * d].copy_from_slice(&lane.tr.obs);
+            self.obs[l * d..(l + 1) * d].copy_from_slice(&lane.cur);
+            self.rewards[l] = lane.tr.reward;
+            self.dones[l] = lane.tr.done;
+        }
+        Ok(())
+    }
+
+    /// Lane count N.
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+
+    pub fn action_dim(&self) -> usize {
+        self.action_dim
+    }
+
+    pub fn is_discrete(&self) -> bool {
+        self.discrete
+    }
+
+    /// Current per-lane observations (N × obs_dim, lane-major) — the
+    /// agent's next `act` input; reset obs where a lane just finished.
+    pub fn obs(&self) -> &[f32] {
+        &self.obs
+    }
+
+    /// Raw post-step observations of the last step (pre-auto-reset),
+    /// the `next_obs` argument to `Agent::observe`.
+    pub fn next_obs(&self) -> &[f32] {
+        &self.next_obs
+    }
+
+    pub fn rewards(&self) -> &[f64] {
+        &self.rewards
+    }
+
+    pub fn dones(&self) -> &[bool] {
+        &self.dones
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::CartPole;
+
+    fn fleet(n: usize) -> BatchedEnv {
+        let envs: Vec<Box<dyn Env>> =
+            (0..n).map(|_| Box::new(CartPole::new()) as Box<dyn Env>).collect();
+        let mut root = Rng::new(42);
+        let rngs = lane_rngs(&mut root, 0xE74, n);
+        BatchedEnv::new(envs, rngs, Pool::global()).expect("fleet")
+    }
+
+    #[test]
+    fn lane0_matches_scalar_env() {
+        let mut benv = fleet(3);
+        let mut env = CartPole::new();
+        let mut root = Rng::new(42);
+        let mut rng = root.fork(0xE74);
+        let mut cur = env.reset(&mut rng);
+        assert_eq!(benv.obs()[..4], cur[..]);
+        for _ in 0..50 {
+            let actions = vec![Action::Discrete(1), Action::Discrete(0), Action::Discrete(1)];
+            benv.step(&actions).expect("step");
+            let tr = env.step(&actions[0], &mut rng);
+            assert_eq!(benv.next_obs()[..4], tr.obs[..]);
+            assert_eq!(benv.rewards()[0], tr.reward);
+            assert_eq!(benv.dones()[0], tr.done);
+            cur = if tr.done { env.reset(&mut rng) } else { tr.obs };
+            assert_eq!(benv.obs()[..4], cur[..]);
+        }
+    }
+
+    #[test]
+    fn miswired_action_kind_is_a_clean_error() {
+        let mut benv = fleet(2);
+        let err = benv
+            .step(&[Action::Discrete(0), Action::Continuous(vec![0.5])])
+            .expect_err("continuous action into CartPole must fail");
+        let msg = format!("{err}");
+        assert!(msg.contains("lane 1"), "{msg}");
+        assert!(msg.contains("discrete"), "{msg}");
+    }
+
+    #[test]
+    fn wrong_action_count_is_an_error() {
+        let mut benv = fleet(2);
+        assert!(benv.step(&[Action::Discrete(0)]).is_err());
+    }
+}

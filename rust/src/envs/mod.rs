@@ -10,16 +10,20 @@
 //!   12×12×4 (convergence runs) or 84×84×4 (timing shapes) frames.
 
 pub mod atari_sim;
+pub mod batched;
 pub mod cartpole;
 pub mod lunar_lander;
 pub mod mountain_car;
 pub mod pendulum;
 
 pub use atari_sim::{MiniBreakout, MiniMsPacman};
+pub use batched::{lane_rngs, BatchedEnv};
 pub use cartpole::CartPole;
 pub use lunar_lander::LunarLanderCont;
 pub use mountain_car::MountainCarCont;
 pub use pendulum::InvertedPendulum;
+
+use anyhow::{anyhow, Result};
 
 use crate::util::Rng;
 
@@ -31,18 +35,41 @@ pub enum Action {
 }
 
 impl Action {
-    pub fn discrete(&self) -> usize {
+    /// Variant name, for mis-wire diagnostics.
+    pub fn kind(&self) -> &'static str {
         match self {
-            Action::Discrete(a) => *a,
-            Action::Continuous(_) => panic!("expected discrete action"),
+            Action::Discrete(_) => "discrete",
+            Action::Continuous(_) => "continuous",
         }
     }
 
-    pub fn continuous(&self) -> &[f32] {
+    /// Checked accessor: the discrete action index, or a clear error when
+    /// a continuous-policy agent was wired to a discrete-action env.
+    pub fn try_discrete(&self) -> Result<usize> {
         match self {
-            Action::Continuous(a) => a,
-            Action::Discrete(_) => panic!("expected continuous action"),
+            Action::Discrete(a) => Ok(*a),
+            Action::Continuous(_) => Err(anyhow!(
+                "expected a discrete action, got a continuous one (mis-wired env/agent combo?)"
+            )),
         }
+    }
+
+    /// Checked accessor: the continuous action vector, or a clear error.
+    pub fn try_continuous(&self) -> Result<&[f32]> {
+        match self {
+            Action::Continuous(a) => Ok(a),
+            Action::Discrete(_) => Err(anyhow!(
+                "expected a continuous action, got a discrete one (mis-wired env/agent combo?)"
+            )),
+        }
+    }
+
+    pub fn discrete(&self) -> usize {
+        self.try_discrete().unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    pub fn continuous(&self) -> &[f32] {
+        self.try_continuous().unwrap_or_else(|e| panic!("{e}"))
     }
 }
 
@@ -56,7 +83,10 @@ pub struct Transition {
 
 /// Common environment interface (PS-side in the paper's mapping: the
 /// Environment Step stage runs on the CPU, Fig 1).
-pub trait Env {
+///
+/// `Send` is a supertrait so [`BatchedEnv`] can step lanes on the
+/// `exec::pool` workers; every env here is plain data.
+pub trait Env: Send {
     /// Observation dimension (flattened).
     fn obs_dim(&self) -> usize;
     /// Discrete action count, or continuous action dimension.

@@ -33,10 +33,6 @@ use super::policy::ExecPolicy;
 use super::pool::Pool;
 use super::tensor::Tensor;
 
-fn obs_tensor(obs: &[f32]) -> Tensor {
-    Tensor::from_vec(obs.to_vec(), &[1, obs.len()])
-}
-
 fn batch_tensor(data: &[f32], bs: usize) -> Tensor {
     Tensor::from_vec(data.to_vec(), &[bs, data.len() / bs])
 }
@@ -98,8 +94,11 @@ impl ComputeBackend for CpuDqn {
 }
 
 impl DqnCompute for CpuDqn {
-    fn qvalues(&mut self, obs: &[f32]) -> Result<Vec<f32>> {
-        Ok(self.online.infer(&obs_tensor(obs)).data)
+    fn qvalues(&mut self, obs: &[f32], lanes: usize) -> Result<Vec<f32>> {
+        // One GEMM per layer for all lanes; rows are independent in
+        // every kernel, so lanes == 1 matches the old scalar forward
+        // bit-for-bit.
+        Ok(self.online.infer(&batch_tensor(obs, lanes)).data)
     }
 
     fn train(&mut self, batch: &Batch, loss_scale: f32) -> Result<TrainOut> {
@@ -189,11 +188,11 @@ impl ComputeBackend for CpuA2c {
 }
 
 impl A2cCompute for CpuA2c {
-    fn policy(&mut self, obs: &[f32]) -> Result<(Vec<f32>, Vec<f32>, f32)> {
-        let x = obs_tensor(obs);
-        let mean = self.pi.infer(&x).data;
-        let value = self.vf.infer(&x).data[0];
-        Ok((mean, self.log_std.value.data.clone(), value))
+    fn policy(&mut self, obs: &[f32], lanes: usize) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let x = batch_tensor(obs, lanes);
+        let means = self.pi.infer(&x).data;
+        let values = self.vf.infer(&x).data;
+        Ok((means, self.log_std.value.data.clone(), values))
     }
 
     fn train(&mut self, batch: &RolloutBatch, loss_scale: f32) -> Result<TrainOut> {
@@ -311,8 +310,8 @@ impl ComputeBackend for CpuDdpg {
 }
 
 impl DdpgCompute for CpuDdpg {
-    fn action(&mut self, obs: &[f32]) -> Result<Vec<f32>> {
-        Ok(self.actor.infer(&obs_tensor(obs)).data)
+    fn action(&mut self, obs: &[f32], lanes: usize) -> Result<Vec<f32>> {
+        Ok(self.actor.infer(&batch_tensor(obs, lanes)).data)
     }
 
     fn train(&mut self, batch: &Batch, loss_scale: f32) -> Result<TrainOut> {
@@ -421,11 +420,11 @@ impl ComputeBackend for CpuPpo {
 }
 
 impl PpoCompute for CpuPpo {
-    fn policy(&mut self, obs: &[f32]) -> Result<(Vec<f32>, f32)> {
-        let x = obs_tensor(obs);
+    fn policy(&mut self, obs: &[f32], lanes: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+        let x = batch_tensor(obs, lanes);
         let logits = self.pi.infer(&x).data;
-        let value = self.vf.infer(&x).data[0];
-        Ok((logits, value))
+        let values = self.vf.infer(&x).data;
+        Ok((logits, values))
     }
 
     fn train(&mut self, batch: &RolloutBatch, loss_scale: f32) -> Result<TrainOut> {
@@ -528,11 +527,11 @@ mod tests {
             model.train(&batch, 1.0).unwrap();
         }
         let obs = vec![0.1, -0.2, 0.3, 0.0];
-        let q_online = model.qvalues(&obs).unwrap();
-        let q_target = model.target.infer(&obs_tensor(&obs)).data;
+        let q_online = model.qvalues(&obs, 1).unwrap();
+        let q_target = model.target.infer(&batch_tensor(&obs, 1)).data;
         assert_ne!(q_online, q_target, "training must move online away from target");
         model.sync_target().unwrap();
-        let q_target = model.target.infer(&obs_tensor(&obs)).data;
+        let q_target = model.target.infer(&batch_tensor(&obs, 1)).data;
         assert_eq!(q_online, q_target, "sync must align target with online");
     }
 
@@ -541,7 +540,7 @@ mod tests {
         let c = combo("ddpg_mntncar");
         let mut model = CpuDdpg::new(&c, &fp32_policy(), 11);
         let mut rng = Rng::new(5);
-        let a = model.action(&[0.3, -0.1]).unwrap();
+        let a = model.action(&[0.3, -0.1], 1).unwrap();
         assert_eq!(a.len(), c.act_dim);
         assert!(a.iter().all(|x| x.abs() <= 1.0), "tanh head must bound actions");
         let mut rb = ReplayBuffer::new(64, c.obs_dim);
@@ -558,6 +557,26 @@ mod tests {
             last = model.train(&batch, 1.0).unwrap().loss;
         }
         assert!(last < first.loss, "critic loss must fall: {} -> {last}", first.loss);
+    }
+
+    #[test]
+    fn batched_inference_rows_match_batch1_calls() {
+        // The N-wide actor forward must reproduce each lane's batch-1
+        // result bit-for-bit (rows are independent in every kernel) —
+        // the compute-level half of the --actors 1 bit-identity story.
+        let c = combo("dqn_cartpole");
+        let mut model = CpuDqn::new(&c, &fp32_policy(), 21);
+        let mut rng = Rng::new(6);
+        let lanes = 5;
+        let obs: Vec<f32> =
+            (0..lanes * c.obs_dim).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect();
+        let q = model.qvalues(&obs, lanes).unwrap();
+        let na = q.len() / lanes;
+        assert_eq!(na, 2);
+        for l in 0..lanes {
+            let ql = model.qvalues(&obs[l * c.obs_dim..(l + 1) * c.obs_dim], 1).unwrap();
+            assert_eq!(&q[l * na..(l + 1) * na], &ql[..], "lane {l}");
+        }
     }
 
     #[test]

@@ -69,6 +69,13 @@ impl Algo {
             Algo::Ppo => "PPO",
         }
     }
+
+    /// Whether the algorithm emits discrete actions (DQN/PPO) rather
+    /// than continuous vectors (DDPG/A2C) — checked against the env's
+    /// action space before training starts.
+    pub fn discrete_actions(self) -> bool {
+        matches!(self, Algo::Dqn | Algo::Ppo)
+    }
 }
 
 /// Everything needed to build one training-step graph.

@@ -44,6 +44,30 @@
 //! `cargo bench --bench bench_exec` tracks the speedups and writes
 //! `BENCH_exec.json`.
 //!
+//! ## Batched collection: `BatchedEnv` and `--actors N`
+//!
+//! The acting/collection path is N-wide end to end: an
+//! [`envs::BatchedEnv`] steps N independently-seeded env lanes in
+//! lockstep (fan-out over the [`exec::pool`] worker pool, per-lane
+//! auto-reset), the [`drl::Agent`] trait acts and observes over all
+//! lanes at once (`&[f32]` of N × obs_dim in, `Vec<Action>` out), and
+//! actor inference issues **one GEMM per layer for all N lanes**
+//! instead of N batch-1 forwards.  [`drl::rollout::RolloutBuffer`] is
+//! lane-aware (per-lane GAE over interleaved pushes) and replay
+//! training cadence counts per-lane observations, so every algorithm
+//! trains correctly at any width.  `apdrl train --actors N` (default 1)
+//! selects the fleet width and reports env-steps/sec.
+//!
+//! **N = 1 bit-identity guarantee:** with `--actors 1` the batched
+//! loop reproduces the historical scalar path bit-for-bit — same lane
+//! RNG stream (lane 0's fork *is* the scalar fork), same rewards, same
+//! loss-scale FSM transitions, same final weights.  Asserted against a
+//! verbatim scalar reference loop in `tests/train.rs`, and the env half
+//! (N lanes ≡ N independent scalar envs, auto-reset included) in
+//! `tests/envs.rs` for every registry env.  `bench_exec` tracks
+//! env-steps/sec at a 1/8/64 lane ladder under the `"actors"` key of
+//! `BENCH_exec.json`.
+//!
 //! The CPU path makes the plan → training hand-off literal: an FP16
 //! (PL) update node arms an FP32 master copy and the [`quant::LossScaler`]
 //! FSM; a BF16 (AIE) node stores weights in BF16 with no master; PS
@@ -57,14 +81,17 @@
 //! apdrl train --combo dqn-cartpole --steps 5000 --train-every 2 --quantized
 //! # FP32 control only:
 //! apdrl train --combo dqn-cartpole --steps 5000
+//! # collect with an 8-lane env fleet (batched inference; same API,
+//! # higher env-steps/sec — `--actors 1` is bit-identical to scalar):
+//! apdrl train --combo dqn-cartpole --steps 5000 --actors 8
 //! # plan remotely (daemon or federation), train locally:
 //! apdrl train --combo ddpg-lunar --remote host1:7040,host2:7040 --quantized
 //! ```
 //!
 //! Reported per run: per-episode rewards, loss-scale FSM transitions
-//! (grows and overflow backoffs), converged reward, and — with
-//! `--quantized` — the reward-error summary against the FP32 control
-//! (paper Table III).
+//! (grows and overflow backoffs), converged reward, collection
+//! throughput (env-steps/sec), and — with `--quantized` — the
+//! reward-error summary against the FP32 control (paper Table III).
 //!
 //! ## Feature flags
 //!

@@ -5,9 +5,10 @@
 //! different seed must diverge.
 
 use apdrl::envs::{
-    Action, CartPole, Env, InvertedPendulum, LunarLanderCont, MiniBreakout, MiniMsPacman,
-    MountainCarCont,
+    Action, BatchedEnv, CartPole, Env, InvertedPendulum, LunarLanderCont, MiniBreakout,
+    MiniMsPacman, MountainCarCont,
 };
+use apdrl::exec::Pool;
 use apdrl::util::Rng;
 
 /// Drive `env` for 200 steps (resetting on done) with seed-derived
@@ -93,5 +94,89 @@ fn fresh_instance_equals_reused_instance_after_reset() {
         let a = stream(env.as_mut(), 9);
         let b = stream(env.as_mut(), 9);
         assert_eq!(a, b, "{name}: reused instance diverged from its own seed-9 stream");
+    }
+}
+
+/// `BatchedEnv` determinism: a fleet of N seeded lanes must replay N
+/// independent scalar envs *bit-for-bit* — raw transitions, rewards,
+/// done flags and the post-auto-reset observations — for every env in
+/// the registry.  This is the env half of the `--actors 1` bit-identity
+/// guarantee, checked at every lane (not just lane 0) so the pool
+/// fan-out can never leak state across lanes.
+#[test]
+fn batched_lanes_equal_independent_scalar_envs() {
+    const LANES: usize = 3;
+    const STEPS: usize = 220;
+    let registry = fresh_envs();
+    for (i, (name, _)) in registry.iter().enumerate() {
+        let envs: Vec<Box<dyn Env>> = (0..LANES).map(|_| fresh_envs().swap_remove(i).1).collect();
+        let rngs: Vec<Rng> = (0..LANES).map(|l| Rng::new(1_000 + l as u64)).collect();
+        let mut fleet = BatchedEnv::new(envs, rngs, Pool::global()).expect("fleet");
+        let d = fleet.obs_dim();
+
+        // Scalar twins: same env kind, same per-lane RNG streams.
+        let mut scalars: Vec<(Box<dyn Env>, Rng, Vec<f32>)> = (0..LANES)
+            .map(|l| {
+                let mut env = fresh_envs().swap_remove(i).1;
+                let mut rng = Rng::new(1_000 + l as u64);
+                let cur = env.reset(&mut rng);
+                (env, rng, cur)
+            })
+            .collect();
+        for (l, (_, _, cur)) in scalars.iter().enumerate() {
+            assert_eq!(fleet.obs()[l * d..(l + 1) * d], cur[..], "{name}: lane {l} reset obs");
+        }
+
+        let mut act_rng = Rng::new(9);
+        let mut dones_seen = 0usize;
+        for step in 0..STEPS {
+            let actions: Vec<Action> = (0..LANES)
+                .map(|_| {
+                    if fleet.is_discrete() {
+                        Action::Discrete(act_rng.below(fleet.action_dim()))
+                    } else {
+                        Action::Continuous(
+                            (0..fleet.action_dim())
+                                .map(|_| act_rng.uniform_in(-1.0, 1.0) as f32)
+                                .collect(),
+                        )
+                    }
+                })
+                .collect();
+            fleet.step(&actions).expect("step");
+            for l in 0..LANES {
+                let (env, rng, cur) = &mut scalars[l];
+                let tr = env.step(&actions[l], rng);
+                assert_eq!(
+                    fleet.next_obs()[l * d..(l + 1) * d],
+                    tr.obs[..],
+                    "{name} lane {l} step {step}: raw next_obs diverged"
+                );
+                assert_eq!(
+                    fleet.rewards()[l].to_bits(),
+                    tr.reward.to_bits(),
+                    "{name} lane {l} step {step}: reward diverged"
+                );
+                assert_eq!(
+                    fleet.dones()[l],
+                    tr.done,
+                    "{name} lane {l} step {step}: done flag diverged"
+                );
+                *cur = if tr.done {
+                    dones_seen += 1;
+                    env.reset(rng)
+                } else {
+                    tr.obs
+                };
+                assert_eq!(
+                    fleet.obs()[l * d..(l + 1) * d],
+                    cur[..],
+                    "{name} lane {l} step {step}: post-auto-reset obs diverged"
+                );
+            }
+        }
+        if *name == "cartpole" {
+            assert!(dones_seen > 0, "cartpole fleet must auto-reset within {STEPS} random steps");
+        }
     }
 }

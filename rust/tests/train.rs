@@ -13,9 +13,14 @@
 use std::sync::Arc;
 
 use apdrl::coordinator::config::ComboConfig;
-use apdrl::coordinator::{combo, train_combo, LocalPlanner, PlanRequest, Planner, TrainLimits};
+use apdrl::coordinator::metrics::RunMetrics;
+use apdrl::coordinator::{
+    combo, train_combo, train_combo_actors, LocalPlanner, PlanRequest, Planner, TrainLimits,
+};
 use apdrl::drl::compute::DqnCompute;
 use apdrl::drl::replay::{ReplayBuffer, StoredAction};
+use apdrl::drl::Agent;
+use apdrl::envs::Env;
 use apdrl::exec::{Backend, CpuBackend, CpuDqn, ExecPolicy, Pool};
 use apdrl::graph::{Algo, NetSpec};
 use apdrl::hw::Format;
@@ -250,6 +255,175 @@ fn conv_training_is_bit_identical_across_thread_counts() {
     }
     assert_eq!(rewards[0].0, rewards[1].0, "conv episode rewards diverged across threads");
     assert_eq!(rewards[0].1, rewards[1].1, "conv per-step losses diverged across threads");
+}
+
+/// The historical scalar training loop, replicated verbatim from the
+/// pre-batching trainer (one env, `rng.fork(0xE74)` env stream, stats
+/// recorded at the pre-increment step count) — the reference the
+/// `--actors 1` bit-identity guarantee is proved against.
+fn scalar_reference_run(
+    backend: &mut CpuBackend,
+    c: &ComboConfig,
+    seed: u64,
+    limits: TrainLimits,
+) -> RunMetrics {
+    let mut agent = backend.make_agent(c, seed).expect("agent");
+    let mut env = c.try_make_env().expect("env");
+    let mut rng = Rng::new(seed);
+    let mut env_rng = rng.fork(0xE74);
+    let mut metrics = RunMetrics::default();
+    let mut last_scale: Option<f32> = None;
+    let mut obs = env.reset(&mut env_rng);
+    let mut ep_reward = 0.0f64;
+    let mut stats_buf = Vec::new();
+    while metrics.env_steps < limits.max_env_steps
+        && metrics.episode_rewards.len() < limits.max_episodes
+    {
+        let actions = agent.act(&obs, 1, &mut rng).expect("act");
+        let tr = env.step(&actions[0], &mut env_rng);
+        stats_buf.clear();
+        agent
+            .observe(
+                &obs,
+                &actions,
+                &[tr.reward as f32],
+                &tr.obs,
+                &[tr.done],
+                &mut rng,
+                &mut stats_buf,
+            )
+            .expect("observe");
+        for stats in &stats_buf {
+            metrics.losses.push(stats.loss as f64);
+            if stats.found_inf {
+                metrics.overflows += 1;
+            }
+            if let Some(prev) = last_scale {
+                if prev != stats.loss_scale {
+                    metrics.scale_transitions.push((metrics.env_steps, prev, stats.loss_scale));
+                }
+            }
+            last_scale = Some(stats.loss_scale);
+            metrics.final_loss_scale = stats.loss_scale;
+        }
+        ep_reward += tr.reward;
+        metrics.env_steps += 1;
+        if tr.done {
+            metrics.episode_rewards.push(ep_reward);
+            ep_reward = 0.0;
+            obs = env.reset(&mut env_rng);
+        } else {
+            obs = tr.obs;
+        }
+    }
+    metrics.train_steps = agent.train_steps();
+    metrics
+}
+
+/// Acceptance: `--actors 1` is **bit-identical** to the pre-refactor
+/// scalar path.  Mixed-precision DQN-CartPole (live loss-scale FSM):
+/// per-episode rewards, the full FSM transition log, per-step losses
+/// and final scale must all match the scalar reference loop exactly.
+#[test]
+fn actors_1_is_bit_identical_to_the_scalar_path_dqn() {
+    let c = combo("dqn_cartpole");
+    let plan = LocalPlanner
+        .plan(&PlanRequest::new(c.clone(), c.batch, true))
+        .expect("static phase");
+    let limits = TrainLimits { max_env_steps: 2_500, max_episodes: 10_000 };
+    let mut ref_backend = CpuBackend::from_outcome(&plan).expect("backend").with_train_every(2);
+    let reference = scalar_reference_run(&mut ref_backend, &c, 1, limits);
+    let mut backend = CpuBackend::from_outcome(&plan).expect("backend").with_train_every(2);
+    let r = train_combo_actors(&mut backend, &c, 1, limits, 1, false).expect("train");
+    assert_eq!(r.actors, 1);
+    assert!(
+        !reference.scale_transitions.is_empty(),
+        "the FSM must actually transition for this test to mean anything"
+    );
+    let m = &r.metrics;
+    assert_eq!(reference.episode_rewards, m.episode_rewards, "episode rewards diverged");
+    assert_eq!(reference.scale_transitions, m.scale_transitions, "FSM logs diverged");
+    assert_eq!(reference.losses, m.losses, "per-step losses diverged");
+    assert_eq!(reference.overflows, m.overflows);
+    assert_eq!(reference.final_loss_scale.to_bits(), m.final_loss_scale.to_bits());
+    assert_eq!(reference.train_steps, m.train_steps);
+    assert_eq!(reference.env_steps, m.env_steps);
+}
+
+/// Same bit-identity contract through the conv/im2col path (on-policy
+/// PPO: rollout buffer, GAE and bootstrap instead of replay sampling).
+#[test]
+fn actors_1_is_bit_identical_to_the_scalar_path_conv_ppo() {
+    let c = tiny_combo(
+        "ppo_bit",
+        Algo::Ppo,
+        "mspacman_mini",
+        NetSpec::Conv { in_hw: 12, in_ch: 4, conv: vec![(4, 4, 2)], fc: vec![32, 9] },
+        12 * 12 * 4,
+        9,
+    );
+    let limits = TrainLimits { max_env_steps: 600, max_episodes: 10_000 };
+    let mut ref_backend = CpuBackend::fp32().with_batch(32);
+    let reference = scalar_reference_run(&mut ref_backend, &c, 1, limits);
+    let mut backend = CpuBackend::fp32().with_batch(32);
+    let r = train_combo_actors(&mut backend, &c, 1, limits, 1, false).expect("train");
+    assert!(reference.train_steps >= 30, "run too short to be meaningful");
+    assert_eq!(reference.episode_rewards, r.metrics.episode_rewards);
+    assert_eq!(reference.losses, r.metrics.losses);
+    assert_eq!(reference.train_steps, r.metrics.train_steps);
+    assert_eq!(reference.env_steps, r.metrics.env_steps);
+}
+
+/// Acceptance: an 8-lane fleet still *learns* — DQN-CartPole reward
+/// improves over training and reaches a sane converged level.  (The
+/// per-lane RNG streams differ from the scalar run's, so thresholds are
+/// generous; exact equivalence at N=1 is proved separately above.)
+#[test]
+fn actors_8_dqn_cartpole_converges() {
+    let c = combo("dqn_cartpole");
+    let plan = LocalPlanner
+        .plan(&PlanRequest::new(c.clone(), c.batch, true))
+        .expect("static phase");
+    let mut backend = CpuBackend::from_outcome(&plan).expect("backend").with_train_every(2);
+    let limits = TrainLimits { max_env_steps: 6_000, max_episodes: 10_000 };
+    let r = train_combo_actors(&mut backend, &c, 1, limits, 8, false).expect("train");
+    assert_eq!(r.actors, 8);
+    let n = r.metrics.episode_rewards.len();
+    assert!(n >= 40, "too few episodes: {n}");
+    let quarter = (n / 4).max(1);
+    let early: f64 = r.metrics.episode_rewards[..quarter].iter().sum::<f64>() / quarter as f64;
+    let late: f64 = r.metrics.episode_rewards[n - quarter..].iter().sum::<f64>() / quarter as f64;
+    assert!(
+        late >= 1.3 * early,
+        "8-actor reward must improve over training (early {early:.1}, late {late:.1})"
+    );
+    let last25 = r.metrics.converged_reward(25);
+    assert!(last25 >= 30.0, "8-actor converged reward too low: {last25:.1}");
+    assert!(r.metrics.train_steps > 100, "fleet run took too few train steps");
+}
+
+/// Acceptance: batching actually buys collection throughput.  Measured
+/// on a collection-only config (warmup larger than the budget, so no
+/// train steps run and the comparison isolates act + env stepping):
+/// 8 lanes must collect more env-steps/sec than 1.
+#[test]
+fn actors_8_out_collects_the_scalar_path() {
+    let c = combo("dqn_cartpole");
+    let limits = TrainLimits { max_env_steps: 5_000, max_episodes: 100_000 };
+    let mut rates = Vec::new();
+    for actors in [1usize, 8] {
+        let mut backend = CpuBackend::fp32().with_warmup(1_000_000);
+        let r = train_combo_actors(&mut backend, &c, 7, limits, actors, false).expect("train");
+        assert_eq!(r.metrics.train_steps, 0, "warmup must suppress training here");
+        assert!(r.metrics.env_steps >= limits.max_env_steps);
+        rates.push(r.metrics.env_steps_per_sec());
+    }
+    assert!(
+        rates[1] > rates[0],
+        "8 actors must out-collect 1 ({:.0} vs {:.0} env-steps/s)",
+        rates[1],
+        rates[0]
+    );
 }
 
 /// The FP32 control routes everything FP32 with no scaler and no masters.
