@@ -15,6 +15,8 @@ pub mod report;
 pub mod trainer;
 
 pub use config::{combo, try_combo, ComboConfig, COMBO_NAMES};
-pub use pipeline::{plan_sweep, plan_sweep_grid, static_phase, StaticPlan};
+pub use pipeline::{
+    plan_sweep, plan_sweep_grid, plan_sweep_progress, static_phase, StaticPlan, SweepPoint,
+};
 pub use planner::{LocalPlanner, PlanOutcome, PlanRequest, PlanStep, Planner, Provenance};
 pub use trainer::{train_combo, train_combo_actors, TrainLimits, TrainResult};

@@ -25,8 +25,10 @@ use std::cell::Cell;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::time::Instant;
 
 use crate::graph::{build_train_graph, Dag};
+use crate::obs;
 use crate::hw::{vek280, Platform};
 use crate::partition::cache::{self, PlanKey};
 use crate::partition::schedule::Schedule;
@@ -69,6 +71,15 @@ pub fn static_phase(combo: &ComboConfig, bs: usize, quantized: bool) -> StaticPl
 
     let key = PlanKey::new(&spec, quantized, &platform);
     let cached = cache::global().lock().unwrap().lookup(&key, &profiles);
+    if obs::active() {
+        obs::publish(
+            obs::Event::new("plan.cache")
+                .tag("combo", combo.name)
+                .num("batch", bs as f64)
+                .flag("quantized", quantized)
+                .flag("hit", cached.is_some()),
+        );
+    }
     let (solution, schedule, cache_hit) = match cached {
         Some(solution) => {
             let schedule = evaluate(&problem, &solution.assignment);
@@ -148,6 +159,38 @@ fn solve_and_memoize(
 /// B&B pool is not nested inside it.  Separate overlapping sweeps are
 /// not strictly deduplicated, but share the global plan cache.
 pub fn plan_sweep(requests: &[PlanRequest]) -> Vec<StaticPlan> {
+    plan_sweep_progress(requests, &|_| {})
+}
+
+/// One completed point of a sweep, as handed to a progress observer the
+/// moment it resolves (completion order, not request order — `index`
+/// says where it lands in the request slice, `done`/`total` drive
+/// progress bars).
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub index: usize,
+    /// Points completed so far, this one included.
+    pub done: usize,
+    pub total: usize,
+    pub combo: String,
+    pub batch: usize,
+    pub quantized: bool,
+    pub cache_hit: bool,
+    pub explored: usize,
+    /// Wall time of this point's static phase (0 for deduped copies).
+    pub solve_us: u64,
+}
+
+/// [`plan_sweep`] with a live progress observer: `progress` fires once
+/// per point — deduped duplicates included, so `done` always reaches
+/// `total` — from whichever worker finished it.  The same completions
+/// go to the event bus as `sweep.start`/`sweep.point`/`sweep.done`,
+/// which the daemon's streaming sweep mode and `apdrl dash` render as
+/// progress bars.
+pub fn plan_sweep_progress(
+    requests: &[PlanRequest],
+    progress: &(dyn Fn(&SweepPoint) + Sync),
+) -> Vec<StaticPlan> {
     let n = requests.len();
     if n == 0 {
         return Vec::new();
@@ -166,6 +209,44 @@ pub fn plan_sweep(requests: &[PlanRequest]) -> Vec<StaticPlan> {
             unique.push(i);
         }
     }
+    let t_sweep = Instant::now();
+    if obs::active() {
+        obs::publish(
+            obs::Event::new("sweep.start")
+                .num("points", n as f64)
+                .num("distinct", unique.len() as f64),
+        );
+    }
+    let done = AtomicUsize::new(0);
+    let report = |i: usize, plan: &StaticPlan, solve_us: u64| {
+        let req = &requests[i];
+        let point = SweepPoint {
+            index: i,
+            done: done.fetch_add(1, Ordering::SeqCst) + 1,
+            total: n,
+            combo: req.combo.name.to_string(),
+            batch: req.batch,
+            quantized: req.quantized,
+            cache_hit: plan.cache_hit,
+            explored: plan.solution.explored,
+            solve_us,
+        };
+        if obs::active() {
+            obs::publish(
+                obs::Event::new("sweep.point")
+                    .tag("combo", &point.combo)
+                    .num("index", point.index as f64)
+                    .num("done", point.done as f64)
+                    .num("total", point.total as f64)
+                    .num("batch", point.batch as f64)
+                    .flag("quantized", point.quantized)
+                    .flag("cache_hit", point.cache_hit)
+                    .num("explored", point.explored as f64)
+                    .num("solve_us", point.solve_us as f64),
+            );
+        }
+        progress(&point);
+    };
     let workers = std::thread::available_parallelism()
         .map(|c| c.get())
         .unwrap_or(1)
@@ -177,7 +258,9 @@ pub fn plan_sweep(requests: &[PlanRequest]) -> Vec<StaticPlan> {
         // so the lone solve keeps its internal B&B parallelism.
         for &i in &unique {
             let req = &requests[i];
+            let t0 = Instant::now();
             let plan = static_phase(&req.combo, req.batch, req.quantized);
+            report(i, &plan, t0.elapsed().as_micros() as u64);
             *slots[i].lock().unwrap() = Some(plan);
         }
     } else {
@@ -190,7 +273,9 @@ pub fn plan_sweep(requests: &[PlanRequest]) -> Vec<StaticPlan> {
                         let j = next.fetch_add(1, Ordering::Relaxed);
                         let Some(&i) = unique.get(j) else { break };
                         let req = &requests[i];
+                        let t0 = Instant::now();
                         let plan = static_phase(&req.combo, req.batch, req.quantized);
+                        report(i, &plan, t0.elapsed().as_micros() as u64);
                         *slots[i].lock().unwrap() = Some(plan);
                     }
                 });
@@ -209,8 +294,16 @@ pub fn plan_sweep(requests: &[PlanRequest]) -> Vec<StaticPlan> {
             // The copy is a memoized duplicate, whatever the original was.
             copy.solution.explored = 0;
             copy.cache_hit = true;
+            report(i, &copy, 0);
             plans[i] = Some(copy);
         }
+    }
+    if obs::active() {
+        obs::publish(
+            obs::Event::new("sweep.done")
+                .num("points", n as f64)
+                .num("wall_us", t_sweep.elapsed().as_micros() as f64),
+        );
     }
     plans.into_iter().map(|p| p.unwrap()).collect()
 }
@@ -380,4 +473,26 @@ mod tests {
         );
     }
 
+    #[test]
+    fn sweep_progress_reports_every_point_once_including_duplicates() {
+        let reqs = vec![
+            PlanRequest::new(combo("a2c_invpend"), 72, true),
+            PlanRequest::new(combo("a2c_invpend"), 72, true),
+            PlanRequest::new(combo("dqn_cartpole"), 72, true),
+        ];
+        let seen: Mutex<Vec<SweepPoint>> = Mutex::new(Vec::new());
+        let plans = plan_sweep_progress(&reqs, &|p| seen.lock().unwrap().push(p.clone()));
+        assert_eq!(plans.len(), 3);
+        let seen = seen.into_inner().unwrap();
+        assert_eq!(seen.len(), 3, "one progress report per point, duplicates included");
+        let mut indices: Vec<usize> = seen.iter().map(|p| p.index).collect();
+        indices.sort_unstable();
+        assert_eq!(indices, vec![0, 1, 2]);
+        assert!(seen.iter().any(|p| p.done == 3 && p.total == 3), "done must reach total");
+        // The duplicate point arrives as a memoized copy with no solve time.
+        let dup = seen.iter().find(|p| p.index == 1).expect("index 1 reported");
+        assert!(dup.cache_hit);
+        assert_eq!(dup.solve_us, 0);
+        assert_eq!(dup.explored, 0);
+    }
 }

@@ -17,6 +17,8 @@ use anyhow::{ensure, Result};
 
 use crate::envs::{lane_rngs, BatchedEnv, Env};
 use crate::exec::{Backend, Pool};
+use crate::obs;
+use crate::util::json::Json;
 use crate::util::Rng;
 
 use super::config::ComboConfig;
@@ -51,6 +53,20 @@ pub struct TrainResult {
     /// path.
     pub actors: usize,
     pub seed: u64,
+}
+
+/// Render a `train.episode` event as the verbose progress line.  Kept
+/// as a view over the event fields (not a parallel format string) so
+/// the eprintln output and the dashboard can never drift apart.
+fn episode_line(event: &obs::Event, avg25: f64) -> String {
+    let f = |key: &str| event.fields.get(key).and_then(Json::as_f64).unwrap_or(0.0);
+    format!(
+        "lane {} ep {}: reward {:.0}, avg25 {avg25:.1} (steps {})",
+        f("lane") as usize,
+        f("episode") as usize,
+        f("reward"),
+        f("env_steps") as usize
+    )
 }
 
 /// Train `combo` on `backend` for one seed — the scalar (`actors == 1`)
@@ -144,6 +160,17 @@ pub fn train_combo_actors(
             if let Some(prev) = last_scale {
                 if prev != stats.loss_scale {
                     metrics.scale_transitions.push((step_at, prev, stats.loss_scale));
+                    if obs::active() {
+                        obs::publish(
+                            obs::Event::new("train.scale")
+                                .tag("combo", combo.name)
+                                .num("seed", seed as f64)
+                                .num("step", step_at as f64)
+                                .num("from", prev as f64)
+                                .num("to", stats.loss_scale as f64)
+                                .flag("overflow", stats.loss_scale < prev),
+                        );
+                    }
                 }
             }
             last_scale = Some(stats.loss_scale);
@@ -154,15 +181,29 @@ pub fn train_combo_actors(
             metrics.env_steps += 1;
             if fleet.dones()[l] {
                 metrics.episode_rewards.push(ep_rewards[l]);
-                if verbose && metrics.episode_rewards.len() % 25 == 0 {
+                // Verbose lines are a *rendering* of the same event the
+                // bus carries, so `--actors N` logs name their lane and
+                // can never disagree with what a dashboard shows.  The
+                // quiet, unobserved path pays one atomic load here.
+                if verbose || obs::active() {
                     let n = metrics.episode_rewards.len();
-                    let recent = metrics.converged_reward(25);
-                    eprintln!(
-                        "  [{}/{} seed {seed}] ep {n}: avg25 {recent:.1} (steps {})",
-                        combo.name,
-                        backend.describe(),
-                        metrics.env_steps
-                    );
+                    let event = obs::Event::new("train.episode")
+                        .tag("combo", combo.name)
+                        .num("seed", seed as f64)
+                        .num("lane", l as f64)
+                        .num("episode", n as f64)
+                        .num("reward", ep_rewards[l])
+                        .num("env_steps", metrics.env_steps as f64)
+                        .num("actors", actors as f64);
+                    if verbose && n % 25 == 0 {
+                        eprintln!(
+                            "  [{}/{} seed {seed}] {}",
+                            combo.name,
+                            backend.describe(),
+                            episode_line(&event, metrics.converged_reward(25))
+                        );
+                    }
+                    obs::publish(event);
                 }
                 ep_rewards[l] = 0.0;
             }
@@ -170,6 +211,20 @@ pub fn train_combo_actors(
     }
     metrics.train_steps = agent.train_steps();
     metrics.wallclock_s = t0.elapsed().as_secs_f64();
+    if obs::active() {
+        obs::publish(
+            obs::Event::new("train.done")
+                .tag("combo", combo.name)
+                .tag("backend", &backend.describe())
+                .num("seed", seed as f64)
+                .num("actors", actors as f64)
+                .num("episodes", metrics.episode_rewards.len() as f64)
+                .num("env_steps", metrics.env_steps as f64)
+                .num("train_steps", metrics.train_steps as f64)
+                .num("overflows", metrics.overflows as f64)
+                .num("steps_per_sec", metrics.env_steps_per_sec()),
+        );
+    }
     Ok(TrainResult {
         metrics,
         combo: combo.name.into(),

@@ -173,6 +173,42 @@
 //! *fresh* solo solve may pick a different co-optimal assignment than
 //! an independent local solve when symmetric placements tie.
 //!
+//! ## Observability (`apdrl dash`)
+//!
+//! Every long-running subsystem publishes structured events onto one
+//! process-wide, bounded, lock-light bus ([`obs`]): the trainer
+//! (`train.episode`, `train.scale` FSM transitions, `train.done`), the
+//! planning pipeline (`plan.cache`, `sweep.start`/`sweep.point`/
+//! `sweep.done`), the daemon (`serve.request`) and the federation
+//! client (`fed.shard`, `fed.down`, `fed.failover`).  Publishing is
+//! **zero-cost when nothing subscribes** — one relaxed atomic load —
+//! and events only *observe* (no RNG, no training state), so an
+//! attached dashboard can never perturb a run: the `--actors 1`
+//! bit-identity tests in `tests/train.rs` hold with a live subscriber.
+//!
+//! `apdrl dash` serves the bus over plain HTTP (`std::net`, no
+//! dependencies): `GET /events` is a `text/event-stream` SSE feed for
+//! any number of concurrent subscribers, `GET /snapshot` a JSON view of
+//! the retained ring, `GET /` an embedded single-file HTML dashboard
+//! (reward curves, FSM transition log, sweep progress, federation
+//! health — no external assets), and `POST /emit` the ingest endpoint
+//! other processes push through.  The full event taxonomy is tabled in
+//! the [`obs`] module docs.
+//!
+//! ```bash
+//! apdrl dash --addr 127.0.0.1:7044          # hub + dashboard
+//! APDRL_DASH=127.0.0.1:7044 apdrl train --combo dqn-cartpole  # forwards events
+//! APDRL_DASH=127.0.0.1:7044 apdrl serve     # daemon events too
+//! # then open http://127.0.0.1:7044/ in a browser
+//! ```
+//!
+//! Setting `APDRL_DASH` in a producer process starts a background
+//! forwarder that batches local bus events to the dash over `POST
+//! /emit`; unset, nothing runs and nothing is paid.  Binding the dash
+//! to a non-loopback address requires a shared secret in
+//! `APDRL_DASH_TOKEN` (checked as `?token=` or `Authorization:
+//! Bearer` on every request).
+//!
 //! ### Environment variables
 //!
 //! | variable              | consumer          | meaning                              |
@@ -181,6 +217,8 @@
 //! | `APDRL_PLAN_CACHE`    | planner (both)    | JSON persistence path of the cache   |
 //! | `APDRL_PLAN_CACHE_MAX`| planner (both)    | LRU entry cap of the cache (def 4096)|
 //! | `APDRL_THREADS`       | CPU executor      | kernel worker-pool size (default: cores, capped at 8); bit-exact at any value |
+//! | `APDRL_DASH`          | producers + dash  | dashboard `host:port`: producers forward events to it, `apdrl dash` binds it |
+//! | `APDRL_DASH_TOKEN`    | producers + dash  | shared auth token; required for non-loopback dash binds |
 
 pub mod coordinator;
 pub mod drl;
@@ -188,6 +226,7 @@ pub mod envs;
 pub mod exec;
 pub mod graph;
 pub mod hw;
+pub mod obs;
 pub mod partition;
 pub mod profile;
 pub mod quant;

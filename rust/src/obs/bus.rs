@@ -1,0 +1,326 @@
+//! The process-wide event bus: a bounded, ring-buffered fan-out of
+//! structured [`Event`]s from the trainer, planner, and federation
+//! layers to any number of live subscribers.
+//!
+//! Design constraints (in priority order):
+//!
+//! 1. **Zero-cost when nobody is watching.** [`Bus::publish`] starts
+//!    with one relaxed atomic load of the subscriber count and returns
+//!    immediately when it is zero — no lock, no allocation, no clone.
+//!    Hot paths additionally guard event *construction* behind
+//!    [`active`] so an unobserved training loop never formats a field.
+//! 2. **A publisher never blocks on a slow consumer.** The ring is
+//!    bounded ([`RING_CAPACITY`]); when full, the oldest event is
+//!    dropped and subscribers learn how many they missed via
+//!    [`Drained::dropped`] (computed from the monotone sequence
+//!    numbers), so back-pressure flows to the dashboard, never into
+//!    the training loop.
+//! 3. **Observation never mutates.** Publishing touches no RNG and no
+//!    training state; the `--actors 1` bit-identity tests in
+//!    `tests/train.rs` run with a live subscriber attached to pin this.
+//!
+//! Events are plain `kind` + field-map records serialized through
+//! [`util::json`](crate::util::json), so the same struct rides the SSE
+//! wire, the `/snapshot` view, and the `/emit` ingest path.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+/// Bounded ring size: enough to replay a recent history to a freshly
+/// attached dashboard without letting an abandoned stream grow the heap.
+pub const RING_CAPACITY: usize = 1024;
+
+/// One structured telemetry record. `seq` is assigned by the bus at
+/// publish time and is monotone per bus, which is how subscribers
+/// detect overflow drops.
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub seq: u64,
+    /// Dotted taxonomy name, e.g. `train.episode` or `sweep.point`
+    /// (the full taxonomy is tabulated in [`crate::obs`]).
+    pub kind: String,
+    pub fields: BTreeMap<String, Json>,
+}
+
+impl Event {
+    pub fn new(kind: &str) -> Event {
+        Event { seq: 0, kind: kind.to_string(), fields: BTreeMap::new() }
+    }
+
+    /// Attach an arbitrary JSON field (builder style).
+    pub fn with(mut self, key: &str, value: Json) -> Event {
+        self.fields.insert(key.to_string(), value);
+        self
+    }
+
+    pub fn num(self, key: &str, value: f64) -> Event {
+        self.with(key, Json::Num(value))
+    }
+
+    pub fn tag(self, key: &str, value: &str) -> Event {
+        self.with(key, Json::Str(value.to_string()))
+    }
+
+    pub fn flag(self, key: &str, value: bool) -> Event {
+        self.with(key, Json::Bool(value))
+    }
+
+    /// Flatten to one JSON object: the fields plus reserved `seq` and
+    /// `kind` keys (which shadow any field of the same name).
+    pub fn to_json(&self) -> Json {
+        let mut obj = self.fields.clone();
+        obj.insert("seq".to_string(), Json::Num(self.seq as f64));
+        obj.insert("kind".to_string(), Json::Str(self.kind.clone()));
+        Json::Obj(obj)
+    }
+
+    /// Parse an ingested object back into an event (`/emit` path).
+    /// `seq` is ignored — the receiving bus assigns its own. Kinds are
+    /// validated because they are echoed verbatim into SSE `event:`
+    /// frame headers.
+    pub fn from_json(v: &Json) -> Result<Event> {
+        let obj = v.as_obj().ok_or_else(|| anyhow!("event must be a JSON object"))?;
+        let kind = v
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("event is missing its `kind` field"))?;
+        let tame = |c: char| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-');
+        if kind.is_empty() || kind.len() > 64 || !kind.chars().all(tame) {
+            return Err(anyhow!("event kind {kind:?} is not a dotted identifier"));
+        }
+        let mut fields = BTreeMap::new();
+        for (key, value) in obj {
+            if key != "kind" && key != "seq" {
+                fields.insert(key.clone(), value.clone());
+            }
+        }
+        Ok(Event { seq: 0, kind: kind.to_string(), fields })
+    }
+}
+
+struct Ring {
+    buf: VecDeque<Event>,
+    /// Sequence number the next published event will get; the oldest
+    /// retained event is therefore `next_seq - buf.len()`.
+    next_seq: u64,
+    capacity: usize,
+}
+
+impl Ring {
+    fn oldest_seq(&self) -> u64 {
+        self.next_seq - self.buf.len() as u64
+    }
+}
+
+/// The bus itself. Cheap to share (`Arc`); one global instance serves
+/// the whole process via [`global`].
+pub struct Bus {
+    subscribers: AtomicUsize,
+    inner: Mutex<Ring>,
+    wake: Condvar,
+}
+
+impl Bus {
+    pub fn new() -> Arc<Bus> {
+        Bus::with_capacity(RING_CAPACITY)
+    }
+
+    /// Custom ring size — for tests that want to force overflow fast.
+    pub fn with_capacity(capacity: usize) -> Arc<Bus> {
+        Arc::new(Bus {
+            subscribers: AtomicUsize::new(0),
+            inner: Mutex::new(Ring {
+                buf: VecDeque::with_capacity(capacity.max(1)),
+                next_seq: 0,
+                capacity: capacity.max(1),
+            }),
+            wake: Condvar::new(),
+        })
+    }
+
+    /// The publish fast path hinges on this: a single relaxed load.
+    pub fn has_subscribers(&self) -> bool {
+        self.subscribers.load(Ordering::Relaxed) > 0
+    }
+
+    /// Publish one event. Returns immediately when no subscriber is
+    /// attached; otherwise stamps a sequence number and pushes, evicting
+    /// the oldest event if the ring is full. Never blocks on consumers.
+    pub fn publish(&self, mut event: Event) {
+        if self.subscribers.load(Ordering::Relaxed) == 0 {
+            return;
+        }
+        {
+            let mut ring = self.inner.lock().unwrap();
+            event.seq = ring.next_seq;
+            ring.next_seq += 1;
+            if ring.buf.len() == ring.capacity {
+                ring.buf.pop_front();
+            }
+            ring.buf.push_back(event);
+        }
+        self.wake.notify_all();
+    }
+
+    /// Attach a subscriber cursor starting at "now" (no backlog).
+    pub fn subscribe(self: &Arc<Bus>) -> Subscription {
+        self.subscribers.fetch_add(1, Ordering::SeqCst);
+        let next = self.inner.lock().unwrap().next_seq;
+        Subscription { bus: Arc::clone(self), next }
+    }
+
+    /// Attach a subscriber that first replays everything still in the
+    /// ring — the dashboard uses this so a fresh browser tab sees recent
+    /// history, not just the live tail.
+    pub fn subscribe_with_backlog(self: &Arc<Bus>) -> Subscription {
+        self.subscribers.fetch_add(1, Ordering::SeqCst);
+        let next = self.inner.lock().unwrap().oldest_seq();
+        Subscription { bus: Arc::clone(self), next }
+    }
+
+    /// Copy out the retained ring (the `/snapshot` view): the sequence
+    /// number the next event will get, plus every buffered event.
+    pub fn snapshot(&self) -> (u64, Vec<Event>) {
+        let ring = self.inner.lock().unwrap();
+        (ring.next_seq, ring.buf.iter().cloned().collect())
+    }
+}
+
+/// What one [`Subscription::poll`] returned: the events themselves plus
+/// how many were evicted before this consumer got to them.
+#[derive(Debug, Default)]
+pub struct Drained {
+    pub events: Vec<Event>,
+    pub dropped: u64,
+}
+
+/// A consumer cursor into one bus. Dropping it decrements the
+/// subscriber count — when the last one detaches, publishing collapses
+/// back to the single-atomic-load no-op.
+pub struct Subscription {
+    bus: Arc<Bus>,
+    next: u64,
+}
+
+impl Subscription {
+    /// Non-blocking: take everything published since the last call.
+    pub fn drain(&mut self) -> Drained {
+        let bus = Arc::clone(&self.bus);
+        let ring = bus.inner.lock().unwrap();
+        self.collect(&ring)
+    }
+
+    /// Wait up to `wait` for at least one new event, then drain.
+    /// Returns empty on timeout; never blocks past the deadline.
+    pub fn poll(&mut self, wait: Duration) -> Drained {
+        let bus = Arc::clone(&self.bus);
+        let mut ring = bus.inner.lock().unwrap();
+        if ring.next_seq <= self.next {
+            let (guard, _timed_out) = bus.wake.wait_timeout(ring, wait).unwrap();
+            ring = guard;
+        }
+        self.collect(&ring)
+    }
+
+    fn collect(&mut self, ring: &Ring) -> Drained {
+        let oldest = ring.oldest_seq();
+        let dropped = oldest.saturating_sub(self.next);
+        let skip = self.next.saturating_sub(oldest) as usize;
+        let events: Vec<Event> = ring.buf.iter().skip(skip).cloned().collect();
+        self.next = ring.next_seq;
+        Drained { events, dropped }
+    }
+}
+
+impl Drop for Subscription {
+    fn drop(&mut self) {
+        self.bus.subscribers.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// The process-wide bus every instrumented layer publishes into.
+pub fn global() -> &'static Arc<Bus> {
+    static GLOBAL: OnceLock<Arc<Bus>> = OnceLock::new();
+    GLOBAL.get_or_init(Bus::new)
+}
+
+/// Is anyone listening to the global bus? Hot paths check this before
+/// even constructing an event, so the unobserved cost is one atomic
+/// load (and the observed cost is still bounded by the ring).
+pub fn active() -> bool {
+    global().has_subscribers()
+}
+
+/// Publish to the global bus (no-op without subscribers).
+pub fn publish(event: Event) {
+    global().publish(event);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publish_without_subscribers_is_dropped_and_cheap() {
+        let bus = Bus::with_capacity(4);
+        assert!(!bus.has_subscribers());
+        bus.publish(Event::new("test.lost").num("i", 1.0));
+        let mut sub = bus.subscribe();
+        let drained = sub.drain();
+        assert!(drained.events.is_empty());
+        assert_eq!(drained.dropped, 0);
+    }
+
+    #[test]
+    fn overflow_evicts_oldest_and_reports_the_gap() {
+        let bus = Bus::with_capacity(4);
+        let mut sub = bus.subscribe();
+        for i in 0..10 {
+            bus.publish(Event::new("test.tick").num("i", i as f64));
+        }
+        let drained = sub.drain();
+        assert_eq!(drained.events.len(), 4, "ring keeps only the newest capacity events");
+        assert_eq!(drained.dropped, 6);
+        let seqs: Vec<u64> = drained.events.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9]);
+        // Fully drained: a second poll is empty with no new drops.
+        let again = sub.drain();
+        assert!(again.events.is_empty());
+        assert_eq!(again.dropped, 0);
+    }
+
+    #[test]
+    fn backlog_subscription_replays_the_ring() {
+        let bus = Bus::with_capacity(8);
+        let _pin = bus.subscribe(); // keep the ring recording
+        bus.publish(Event::new("test.early").num("i", 0.0));
+        bus.publish(Event::new("test.early").num("i", 1.0));
+        let mut late = bus.subscribe_with_backlog();
+        let drained = late.drain();
+        assert_eq!(drained.events.len(), 2);
+        assert_eq!(drained.dropped, 0);
+    }
+
+    #[test]
+    fn events_round_trip_their_json_encoding() {
+        let ev = Event::new("train.episode")
+            .tag("combo", "dqn_cartpole")
+            .num("reward", 123.5)
+            .flag("done", true);
+        let json = ev.to_json();
+        assert_eq!(json.get("kind").and_then(Json::as_str), Some("train.episode"));
+        let back = Event::from_json(&json).expect("round trip");
+        assert_eq!(back.kind, ev.kind);
+        assert_eq!(back.fields, ev.fields);
+        // Hostile kinds are rejected before they can corrupt SSE frames.
+        let bad = Json::parse("{\"kind\":\"evil\\nheader\"}").unwrap();
+        assert!(Event::from_json(&bad).is_err());
+        assert!(Event::from_json(&Json::parse("{\"x\":1}").unwrap()).is_err());
+    }
+}

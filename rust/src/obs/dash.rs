@@ -1,0 +1,453 @@
+//! `apdrl dash` — the hand-rolled HTTP endpoint (std::net only) that
+//! turns the event bus into a live dashboard.
+//!
+//! Routes:
+//!
+//! | route            | method | body                                        |
+//! |------------------|--------|---------------------------------------------|
+//! | `/`              | GET    | embedded single-file HTML client            |
+//! | `/events`        | GET    | `text/event-stream` SSE: one frame per event|
+//! | `/snapshot`      | GET    | JSON view of the retained ring              |
+//! | `/emit`          | POST   | ingest `{"events":[…]}` from producers      |
+//! | `/shutdown`      | any    | stop the dash (used by CI for clean exits)  |
+//!
+//! SSE frames are the classic three-line form the spec requires —
+//! `event: <kind>`, `data: <one-line json>`, blank line — plus
+//! `: ping` comment heartbeats so dead clients are detected. The dash
+//! holds a pin subscription for its whole lifetime, which keeps the
+//! ring recording (and `/snapshot` meaningful) even with no browser
+//! attached.
+//!
+//! **Auth.** Loopback binds are open. Binding any non-loopback address
+//! refuses to start unless a token is configured ([`ENV_DASH_TOKEN`] or
+//! `--token`); with a token set, every request must present it as
+//! `?token=…` or `Authorization: Bearer …` or it gets a 401. Tokens
+//! must be URL-safe (they are compared verbatim, no percent-decoding).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::bus::{Bus, Event};
+use crate::util::json::Json;
+
+/// Token required for non-loopback dashes (and checked on every
+/// request whenever it is set, loopback included).
+pub const ENV_DASH_TOKEN: &str = "APDRL_DASH_TOKEN";
+
+/// Where `apdrl dash` binds when neither `--addr` nor `APDRL_DASH`
+/// says otherwise.
+pub const DEFAULT_DASH_ADDR: &str = "127.0.0.1:7044";
+
+/// Cadence of the accept loop's shutdown check and of the idle
+/// keep-alive read poll.
+const ACCEPT_POLL: Duration = Duration::from_millis(100);
+/// Once a request line has arrived, the rest (headers + body) must
+/// follow within this window or the connection is dropped.
+const BODY_TIMEOUT: Duration = Duration::from_secs(5);
+/// How long an SSE writer waits on the bus before re-checking shutdown.
+const SSE_POLL: Duration = Duration::from_millis(250);
+/// Comment-frame heartbeat interval on otherwise-quiet SSE streams.
+const HEARTBEAT: Duration = Duration::from_secs(10);
+/// `/emit` bodies larger than this are rejected outright.
+const MAX_BODY: usize = 1 << 20;
+
+/// The embedded client: reward curves, FSM transition log, sweep
+/// progress bars, federation health — one file, no external assets.
+const CLIENT_HTML: &str = include_str!("dash.html");
+
+/// The dashboard server. Bind, then [`run`](DashServer::run) (blocking;
+/// one thread per connection, all watching a shared shutdown flag).
+pub struct DashServer {
+    listener: TcpListener,
+    bus: Arc<Bus>,
+    token: Option<String>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl DashServer {
+    /// Bind `addr` and enforce the token policy: non-loopback binds
+    /// without a token are refused before any byte is served.
+    pub fn bind(addr: &str, bus: Arc<Bus>, token: Option<String>) -> Result<DashServer> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding the dash endpoint on {addr}"))?;
+        let local = listener.local_addr().context("reading the dash local address")?;
+        let token = token.filter(|t| !t.is_empty());
+        if !local.ip().is_loopback() && token.is_none() {
+            bail!(
+                "refusing to serve the dashboard on non-loopback {local} without a token; \
+                 set {ENV_DASH_TOKEN} or pass --token"
+            );
+        }
+        Ok(DashServer { listener, bus, token, shutdown: Arc::new(AtomicBool::new(false)) })
+    }
+
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        self.listener.local_addr().context("reading the dash local address")
+    }
+
+    /// Shared stop flag: store `true` (or hit `/shutdown`) and the
+    /// accept loop plus every live SSE stream wind down within a poll.
+    pub fn shutdown_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.shutdown)
+    }
+
+    /// Serve until shut down. Holds a pin subscription so the ring
+    /// keeps recording while the dash is up.
+    pub fn run(self) -> Result<()> {
+        let DashServer { listener, bus, token, shutdown } = self;
+        let _pin = bus.subscribe();
+        listener.set_nonblocking(true).context("making the dash listener non-blocking")?;
+        let token = Arc::new(token);
+        loop {
+            if shutdown.load(Ordering::SeqCst) {
+                return Ok(());
+            }
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    let bus = Arc::clone(&bus);
+                    let token = Arc::clone(&token);
+                    let shutdown = Arc::clone(&shutdown);
+                    std::thread::spawn(move || {
+                        // Client-gone write errors are the normal way
+                        // SSE streams end; nothing to report.
+                        let _ = serve_conn(stream, &bus, (*token).as_deref(), &shutdown);
+                    });
+                }
+                Err(_) => std::thread::sleep(ACCEPT_POLL),
+            }
+        }
+    }
+}
+
+/// One parsed HTTP request (just enough of HTTP/1.1 for the dash).
+struct HttpRequest {
+    method: String,
+    target: String,
+    headers: Vec<(String, String)>,
+    body: Vec<u8>,
+}
+
+impl HttpRequest {
+    fn path(&self) -> &str {
+        self.target.split('?').next().unwrap_or("")
+    }
+
+    fn query(&self, key: &str) -> Option<&str> {
+        let q = self.target.splitn(2, '?').nth(1)?;
+        q.split('&').find_map(|kv| {
+            let mut it = kv.splitn(2, '=');
+            (it.next()? == key).then(|| it.next().unwrap_or(""))
+        })
+    }
+
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn authorized(&self, token: Option<&str>) -> bool {
+        let Some(token) = token else { return true };
+        if self.query("token") == Some(token) {
+            return true;
+        }
+        self.header("authorization")
+            .and_then(|h| h.strip_prefix("Bearer "))
+            .is_some_and(|bearer| bearer.trim() == token)
+    }
+}
+
+/// Keep-alive request loop for one connection. The 100ms read timeout
+/// doubles as the shutdown poll while idling between requests.
+fn serve_conn(
+    stream: TcpStream,
+    bus: &Arc<Bus>,
+    token: Option<&str>,
+    shutdown: &AtomicBool,
+) -> std::io::Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(ACCEPT_POLL))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut pending = String::new();
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        match reader.read_line(&mut pending) {
+            Ok(0) => return Ok(()),
+            Ok(_) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e),
+        }
+        let request_line = std::mem::take(&mut pending);
+        if request_line.trim().is_empty() {
+            continue;
+        }
+        // The request line is here; give headers + body a firmer
+        // deadline, then fall back to the idle poll. Socket options are
+        // shared with the reader's cloned handle.
+        writer.set_read_timeout(Some(BODY_TIMEOUT))?;
+        let request = read_rest(&mut reader, &request_line)?;
+        writer.set_read_timeout(Some(ACCEPT_POLL))?;
+
+        if !request.authorized(token) {
+            let body = b"{\"ok\":false,\"error\":\"missing or bad token\"}";
+            return write_response(&mut writer, 401, "application/json", body, false);
+        }
+        match (request.method.as_str(), request.path()) {
+            ("GET", "/") | ("GET", "/index.html") => {
+                return write_response(
+                    &mut writer,
+                    200,
+                    "text/html; charset=utf-8",
+                    CLIENT_HTML.as_bytes(),
+                    false,
+                );
+            }
+            ("GET", "/events") => return serve_sse(&mut writer, bus, shutdown),
+            ("GET", "/snapshot") => {
+                let body = snapshot_json(bus).to_string();
+                return write_response(&mut writer, 200, "application/json", body.as_bytes(), false);
+            }
+            ("POST", "/emit") => {
+                // Producers hold this connection open and POST batches;
+                // keep-alive matters here, so stay in the loop.
+                match ingest(bus, &request.body) {
+                    Ok(n) => {
+                        let body = format!("{{\"ok\":true,\"accepted\":{n}}}");
+                        let body = body.as_bytes();
+                        write_response(&mut writer, 200, "application/json", body, true)?;
+                    }
+                    Err(e) => {
+                        let msg = Json::Str(format!("{e:#}"));
+                        let body = format!("{{\"ok\":false,\"error\":{msg}}}");
+                        let body = body.as_bytes();
+                        write_response(&mut writer, 400, "application/json", body, true)?;
+                    }
+                }
+            }
+            (_, "/shutdown") => {
+                shutdown.store(true, Ordering::SeqCst);
+                let body = b"{\"ok\":true,\"stopping\":true}";
+                return write_response(&mut writer, 200, "application/json", body, false);
+            }
+            _ => {
+                let body = b"{\"ok\":false,\"error\":\"no such route\"}";
+                return write_response(&mut writer, 404, "application/json", body, false);
+            }
+        }
+    }
+}
+
+/// Finish reading one request whose request line is already in hand.
+fn read_rest(
+    reader: &mut BufReader<TcpStream>,
+    request_line: &str,
+) -> std::io::Result<HttpRequest> {
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let target = parts.next().unwrap_or("/").to_string();
+    let mut headers = Vec::new();
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed mid-headers",
+            ));
+        }
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some((key, value)) = line.split_once(':') {
+            headers.push((key.trim().to_string(), value.trim().to_string()));
+        }
+    }
+    let length = headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+        .and_then(|(_, v)| v.parse::<usize>().ok())
+        .unwrap_or(0);
+    if length > MAX_BODY {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "request body over the 1 MiB dash limit",
+        ));
+    }
+    let mut body = vec![0u8; length];
+    if length > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    Ok(HttpRequest { method, target, headers, body })
+}
+
+fn write_response(
+    writer: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        401 => "Unauthorized",
+        _ => "Not Found",
+    };
+    let connection = if keep_alive { "keep-alive" } else { "close" };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nAccess-Control-Allow-Origin: *\r\nConnection: {connection}\r\n\r\n",
+        body.len()
+    );
+    writer.write_all(head.as_bytes())?;
+    writer.write_all(body)?;
+    writer.flush()
+}
+
+/// Stream the bus over SSE until the client hangs up or the dash stops.
+/// Subscribes (with backlog) *before* the response header goes out, so
+/// anything published after the client sees headers is guaranteed to
+/// reach it.
+fn serve_sse(writer: &mut TcpStream, bus: &Arc<Bus>, shutdown: &AtomicBool) -> std::io::Result<()> {
+    let mut sub = bus.subscribe_with_backlog();
+    writer.set_write_timeout(Some(Duration::from_secs(10)))?;
+    writer.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\n\
+          Access-Control-Allow-Origin: *\r\nConnection: close\r\n\r\n",
+    )?;
+    writer.write_all(b"retry: 2000\n\n")?;
+    let mut last_write = Instant::now();
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let drained = sub.poll(SSE_POLL);
+        if drained.dropped > 0 {
+            let frame =
+                format!("event: obs.dropped\ndata: {{\"dropped\":{}}}\n\n", drained.dropped);
+            writer.write_all(frame.as_bytes())?;
+        }
+        for event in &drained.events {
+            writer.write_all(frame_for(event).as_bytes())?;
+        }
+        if !drained.events.is_empty() || drained.dropped > 0 {
+            writer.flush()?;
+            last_write = Instant::now();
+        } else if last_write.elapsed() >= HEARTBEAT {
+            writer.write_all(b": ping\n\n")?;
+            writer.flush()?;
+            last_write = Instant::now();
+        }
+    }
+}
+
+/// The three-line SSE frame for one event. `Json`'s `Display` is a
+/// strict single line (strings escaped, non-finite numbers as null), so
+/// the `data:` field can never split across lines.
+fn frame_for(event: &Event) -> String {
+    format!("event: {}\ndata: {}\n\n", event.kind, event.to_json())
+}
+
+fn snapshot_json(bus: &Bus) -> Json {
+    let (next_seq, events) = bus.snapshot();
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("seq".to_string(), Json::Num(next_seq as f64));
+    obj.insert("count".to_string(), Json::Num(events.len() as f64));
+    obj.insert("events".to_string(), Json::Arr(events.iter().map(Event::to_json).collect()));
+    Json::Obj(obj)
+}
+
+/// Parse an `/emit` body and publish its events. Accepts either
+/// `{"events":[…]}` or a bare array.
+fn ingest(bus: &Bus, body: &[u8]) -> Result<usize> {
+    let text = std::str::from_utf8(body).map_err(|_| anyhow!("emit body must be UTF-8"))?;
+    let root = Json::parse(text).map_err(|e| anyhow!("emit body: {e}"))?;
+    let events = root
+        .get("events")
+        .and_then(Json::as_arr)
+        .or_else(|| root.as_arr())
+        .ok_or_else(|| anyhow!("emit body must be {{\"events\":[…]}} or a bare array"))?;
+    let mut accepted = 0;
+    for raw in events {
+        bus.publish(Event::from_json(raw)?);
+        accepted += 1;
+    }
+    Ok(accepted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_auth_accepts_query_and_bearer_rejects_the_rest() {
+        let req = |target: &str, headers: Vec<(&str, &str)>| HttpRequest {
+            method: "GET".to_string(),
+            target: target.to_string(),
+            headers: headers
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect(),
+            body: Vec::new(),
+        };
+        let open = req("/events", vec![]);
+        assert!(open.authorized(None));
+        assert!(!open.authorized(Some("s3cret")));
+        assert!(req("/events?token=s3cret", vec![]).authorized(Some("s3cret")));
+        assert!(!req("/events?token=wrong", vec![]).authorized(Some("s3cret")));
+        let bearer = req("/events", vec![("Authorization", "Bearer s3cret")]);
+        assert!(bearer.authorized(Some("s3cret")));
+        assert!(!req("/events", vec![("Authorization", "Bearer nope")]).authorized(Some("s3cret")));
+        // Query parsing keeps the path and extra params straight.
+        let q = req("/snapshot?a=1&token=t&b=2", vec![]);
+        assert_eq!(q.path(), "/snapshot");
+        assert_eq!(q.query("token"), Some("t"));
+        assert_eq!(q.query("b"), Some("2"));
+        assert_eq!(q.query("missing"), None);
+    }
+
+    #[test]
+    fn sse_frames_are_the_three_line_form() {
+        let mut ev = Event::new("train.episode").num("reward", 42.0);
+        ev.seq = 7;
+        let frame = frame_for(&ev);
+        let mut lines = frame.lines();
+        assert_eq!(lines.next(), Some("event: train.episode"));
+        let data = lines.next().expect("data line");
+        let json = Json::parse(data.strip_prefix("data: ").expect("data prefix")).expect("json");
+        assert_eq!(json.get("reward").and_then(Json::as_f64), Some(42.0));
+        assert_eq!(json.get("seq").and_then(Json::as_usize), Some(7));
+        assert!(frame.ends_with("\n\n"));
+    }
+
+    #[test]
+    fn ingest_publishes_both_body_shapes_and_rejects_garbage() {
+        let bus = Bus::with_capacity(16);
+        let mut sub = bus.subscribe();
+        assert_eq!(ingest(&bus, br#"{"events":[{"kind":"a.b","x":1}]}"#).unwrap(), 1);
+        assert_eq!(ingest(&bus, br#"[{"kind":"c.d"},{"kind":"e.f"}]"#).unwrap(), 2);
+        assert!(ingest(&bus, b"not json").is_err());
+        assert!(ingest(&bus, br#"{"events":[{"no_kind":1}]}"#).is_err());
+        let drained = sub.drain();
+        assert_eq!(drained.events.len(), 3);
+        assert_eq!(drained.events[0].kind, "a.b");
+    }
+}

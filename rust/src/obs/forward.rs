@@ -1,0 +1,170 @@
+//! Cross-process event forwarding: producers (`apdrl train`, `apdrl
+//! sweep`, `apdrl serve`) publish into their own process-local bus; a
+//! [`Forwarder`] drains that bus on a background thread and POSTs the
+//! batches to a dash's `/emit` ingest route, so one `apdrl dash` can
+//! watch a whole fleet.
+//!
+//! Enabled by pointing [`ENV_DASH`] at the dash address (the CLI calls
+//! [`Forwarder::from_env`] in every producer subcommand). Forwarding is
+//! strictly best-effort — a dead or slow dash costs the producer
+//! nothing beyond the bounded ring: batches that fail to POST are
+//! dropped, never retried, and never block publishing.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::bus::{self, Event, Subscription};
+use super::dash::ENV_DASH_TOKEN;
+use crate::util::json::Json;
+
+/// Producers forward their bus to the dash at this address; `apdrl
+/// dash` itself also reads it as its default bind address, so one
+/// exported variable wires up the whole workflow.
+pub const ENV_DASH: &str = "APDRL_DASH";
+
+/// How often the forwarding thread wakes to check for events/stop.
+const FORWARD_POLL: Duration = Duration::from_millis(100);
+/// Socket deadlines for one `/emit` POST round trip.
+const POST_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Handle to the background forwarding thread. Call
+/// [`finish`](Forwarder::finish) before process exit so the tail of the
+/// event stream (e.g. `train.done`) reaches the dash.
+pub struct Forwarder {
+    stop: Arc<AtomicBool>,
+    handle: JoinHandle<()>,
+}
+
+impl Forwarder {
+    /// Start forwarding the global bus to the dash ingest at `addr`.
+    pub fn start(addr: &str, token: Option<String>) -> Forwarder {
+        let stop = Arc::new(AtomicBool::new(false));
+        let sub = bus::global().subscribe();
+        let addr = addr.to_string();
+        let stop_flag = Arc::clone(&stop);
+        let handle = std::thread::spawn(move || {
+            forward_loop(sub, &addr, token.as_deref(), &stop_flag);
+        });
+        Forwarder { stop, handle }
+    }
+
+    /// Start from the environment: `APDRL_DASH` names the dash,
+    /// `APDRL_DASH_TOKEN` rides along when set. `None` when unset —
+    /// the common case, costing producers nothing.
+    pub fn from_env() -> Option<Forwarder> {
+        let addr = std::env::var(ENV_DASH).ok().filter(|v| !v.is_empty())?;
+        let token = std::env::var(ENV_DASH_TOKEN).ok().filter(|v| !v.is_empty());
+        Some(Forwarder::start(&addr, token))
+    }
+
+    /// Flush whatever is still buffered, then stop the thread.
+    pub fn finish(self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = self.handle.join();
+    }
+}
+
+fn forward_loop(mut sub: Subscription, addr: &str, token: Option<&str>, stop: &AtomicBool) {
+    let mut conn: Option<EmitConn> = None;
+    loop {
+        let stopping = stop.load(Ordering::SeqCst);
+        let drained = if stopping { sub.drain() } else { sub.poll(FORWARD_POLL) };
+        if !drained.events.is_empty() {
+            // One reconnect attempt per batch; a batch that still fails
+            // is dropped (observability must never wedge a producer).
+            if post_batch(&mut conn, addr, token, &drained.events).is_err() {
+                conn = None;
+                let _ = post_batch(&mut conn, addr, token, &drained.events);
+            }
+        }
+        if stopping {
+            return;
+        }
+    }
+}
+
+/// A kept-alive connection to the dash's `/emit` route.
+struct EmitConn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl EmitConn {
+    fn open(addr: &str) -> std::io::Result<EmitConn> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(POST_TIMEOUT))?;
+        stream.set_write_timeout(Some(POST_TIMEOUT))?;
+        Ok(EmitConn { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+}
+
+fn post_batch(
+    conn: &mut Option<EmitConn>,
+    addr: &str,
+    token: Option<&str>,
+    events: &[Event],
+) -> std::io::Result<()> {
+    if conn.is_none() {
+        *conn = Some(EmitConn::open(addr)?);
+    }
+    let live = conn.as_mut().expect("emit connection just opened");
+    let body = {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("events".to_string(), Json::Arr(events.iter().map(Event::to_json).collect()));
+        Json::Obj(obj).to_string()
+    };
+    let target = match token {
+        Some(t) => format!("/emit?token={t}"),
+        None => "/emit".to_string(),
+    };
+    let head = format!(
+        "POST {target} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+        body.len()
+    );
+    let result = (|| {
+        live.writer.write_all(head.as_bytes())?;
+        live.writer.write_all(body.as_bytes())?;
+        live.writer.flush()?;
+        // Read and discard the response so keep-alive framing stays in
+        // sync: status line, headers, then content-length body bytes.
+        let mut status = String::new();
+        if live.reader.read_line(&mut status)? == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "dash closed the emit connection",
+            ));
+        }
+        let mut length = 0usize;
+        loop {
+            let mut line = String::new();
+            if live.reader.read_line(&mut line)? == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "dash closed mid-response",
+                ));
+            }
+            let line = line.trim_end();
+            if line.is_empty() {
+                break;
+            }
+            if let Some((key, value)) = line.split_once(':') {
+                if key.trim().eq_ignore_ascii_case("content-length") {
+                    length = value.trim().parse().unwrap_or(0);
+                }
+            }
+        }
+        let mut sink = vec![0u8; length];
+        std::io::Read::read_exact(&mut live.reader, &mut sink)?;
+        Ok(())
+    })();
+    if result.is_err() {
+        *conn = None;
+    }
+    result
+}

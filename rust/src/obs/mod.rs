@@ -1,0 +1,34 @@
+//! Live observability for the planner/trainer fleet: a bounded,
+//! lock-light [event bus](bus) every instrumented layer publishes into,
+//! the [`apdrl dash` HTTP/SSE endpoint](dash) that streams it to
+//! browsers and scripts, and a [cross-process forwarder](forward) that
+//! lets one dash watch many producer processes.
+//!
+//! # Event taxonomy
+//!
+//! | kind            | source                 | fields                                                        |
+//! |-----------------|------------------------|---------------------------------------------------------------|
+//! | `train.episode` | trainer                | combo, seed, lane, episode, reward, env_steps, actors         |
+//! | `train.scale`   | trainer (FSM)          | combo, seed, step, from, to, overflow                         |
+//! | `train.done`    | trainer                | combo, backend, seed, actors, episodes, env_steps, train_steps, overflows, steps_per_sec |
+//! | `plan.cache`    | static phase           | combo, batch, quantized, hit                                  |
+//! | `sweep.start`   | coordinator            | points, distinct                                              |
+//! | `sweep.point`   | coordinator            | index, done, total, combo, batch, quantized, cache_hit, explored, solve_us |
+//! | `sweep.done`    | coordinator            | points, wall_us                                               |
+//! | `serve.request` | daemon                 | verb, ok, wall_us                                             |
+//! | `fed.shard`     | federation client      | host, shard, points, wall_us                                  |
+//! | `fed.down`      | federation client      | host, shard, error                                            |
+//! | `fed.failover`  | federation client      | pending, survivors                                            |
+//! | `obs.dropped`   | dash (per SSE client)  | dropped                                                       |
+//!
+//! The invariants the whole layer is built around — zero cost with no
+//! subscriber, publishers never block, observation never perturbs
+//! training — are documented (and tested) in [`bus`].
+
+pub mod bus;
+pub mod dash;
+pub mod forward;
+
+pub use bus::{active, global, publish, Bus, Drained, Event, Subscription};
+pub use dash::{DashServer, DEFAULT_DASH_ADDR, ENV_DASH_TOKEN};
+pub use forward::{Forwarder, ENV_DASH};

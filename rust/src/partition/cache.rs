@@ -191,6 +191,9 @@ pub struct PlanCache {
     limit: usize,
     pub hits: u64,
     pub misses: u64,
+    /// Entries dropped by the LRU cap over this cache's lifetime
+    /// (inserts and loads; merge-on-save scratch caches don't count).
+    pub evictions: u64,
 }
 
 impl Default for PlanCache {
@@ -202,6 +205,7 @@ impl Default for PlanCache {
             limit: env_limit(),
             hits: 0,
             misses: 0,
+            evictions: 0,
         }
     }
 }
@@ -299,7 +303,7 @@ impl PlanCache {
                 stamp: self.clock,
             },
         );
-        evict_over_limit(&mut self.entries, self.limit);
+        self.evictions += evict_over_limit(&mut self.entries, self.limit) as u64;
     }
 
     /// Write the cache file (no-op for memory-only caches), merging the
@@ -360,17 +364,19 @@ impl PlanCache {
                 );
             }
         }
-        evict_over_limit(&mut self.entries, self.limit);
+        self.evictions += evict_over_limit(&mut self.entries, self.limit) as u64;
     }
 }
 
-/// Drop least-recently-used entries until `entries` fits `limit`.
-/// One sort + one retain — a per-eviction min-scan would go quadratic
-/// when loading a file written under a much larger cap.
-fn evict_over_limit(entries: &mut HashMap<String, Entry>, limit: usize) {
+/// Drop least-recently-used entries until `entries` fits `limit`,
+/// returning how many were dropped.  One sort + one retain — a
+/// per-eviction min-scan would go quadratic when loading a file written
+/// under a much larger cap.
+fn evict_over_limit(entries: &mut HashMap<String, Entry>, limit: usize) -> usize {
     let limit = limit.max(1);
-    if entries.len() <= limit {
-        return;
+    let before = entries.len();
+    if before <= limit {
+        return 0;
     }
     let mut stamps: Vec<u64> = entries.values().map(|e| e.stamp).collect();
     stamps.sort_unstable_by(|a, b| b.cmp(a));
@@ -389,6 +395,7 @@ fn evict_over_limit(entries: &mut HashMap<String, Entry>, limit: usize) {
             false
         }
     });
+    before - entries.len()
 }
 
 fn entries_to_json(entries: &HashMap<String, Entry>) -> Json {
@@ -443,7 +450,7 @@ fn write_merged(path: &Path, entries: HashMap<String, Entry>) {
         entry.stamp = base + 1 + i as u64;
         disk.entries.insert(key, entry);
     }
-    evict_over_limit(&mut disk.entries, disk.limit);
+    let _ = evict_over_limit(&mut disk.entries, disk.limit);
     if let Some(dir) = path.parent() {
         let _ = std::fs::create_dir_all(dir);
     }
@@ -618,6 +625,22 @@ mod tests {
         assert!(cache.lookup(&key_c, &profiles_c).is_some(), "new entry survives");
         let (_, _, profiles_b) = solved(48);
         assert!(cache.lookup(&key_b, &profiles_b).is_none(), "LRU entry evicted");
+    }
+
+    #[test]
+    fn eviction_counter_tracks_lru_drops() {
+        let (key_a, sol_a, _) = solved(32);
+        let (key_b, sol_b, _) = solved(48);
+        let (key_c, sol_c, _) = solved(64);
+        let mut cache = PlanCache::with_limit(2);
+        cache.insert(&key_a, &sol_a);
+        cache.insert(&key_b, &sol_b);
+        assert_eq!(cache.evictions, 0, "under the cap nothing is evicted");
+        cache.insert(&key_c, &sol_c);
+        assert_eq!(cache.evictions, 1, "overflowing the cap evicts exactly one");
+        // Re-inserting an existing key replaces in place: no eviction.
+        cache.insert(&key_c, &sol_c);
+        assert_eq!(cache.evictions, 1);
     }
 
     #[test]

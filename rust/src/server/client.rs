@@ -66,6 +66,12 @@ impl Conn {
         self.writer.write_all(line.as_bytes())?;
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
+        self.read_line()
+    }
+
+    /// Read one further response line (streaming verbs send several per
+    /// request).  EOF mid-stream is an error, not an empty line.
+    fn read_line(&mut self) -> std::io::Result<String> {
         let mut buf = String::new();
         let n = self.reader.read_line(&mut buf)?;
         if n == 0 {
@@ -187,8 +193,82 @@ impl RemotePlanner {
             combos: combos.to_vec(),
             batches: batches.to_vec(),
             quantized,
+            stream: false,
         })?;
         self.parse_plans(&resp, combos.len() * batches.len())
+    }
+
+    /// Remote grid sweep with live progress: sets the protocol-v2
+    /// `stream` flag, invokes `on_progress` for every per-point progress
+    /// line the daemon pushes, and returns the final plans.  Against an
+    /// older daemon (which ignores the flag) the first line is already
+    /// the final response and `on_progress` never fires — callers get
+    /// graceful degradation, not an error.
+    pub fn sweep_stream(
+        &self,
+        combos: &[String],
+        batches: &[usize],
+        quantized: bool,
+        on_progress: &mut dyn FnMut(&Json),
+    ) -> Result<Vec<PlanOutcome>> {
+        let req = Request::Sweep {
+            combos: combos.to_vec(),
+            batches: batches.to_vec(),
+            quantized,
+            stream: true,
+        };
+        let line = req.to_line()?;
+        let mut guard = self.conn.lock().unwrap();
+        if guard.is_none() {
+            *guard = Some(Conn::open(&self.addr)?);
+        }
+        // One reconnect-and-retry on the opening exchange, mirroring
+        // `call` — but once progress lines start flowing the stream is
+        // not replayable, so mid-stream EOF surfaces as an error.
+        let first = guard.as_mut().expect("connection just ensured").transport(&line);
+        let mut buf = match first {
+            Ok(buf) => buf,
+            Err(_) => {
+                *guard = None;
+                let mut conn = Conn::open(&self.addr).with_context(|| {
+                    format!("reconnecting to planning server at {}", self.addr)
+                })?;
+                let buf = conn.transport(&line).with_context(|| {
+                    format!("planning server at {} dropped the connection twice", self.addr)
+                })?;
+                *guard = Some(conn);
+                buf
+            }
+        };
+        loop {
+            let resp = parse_response(&buf)?;
+            match resp.get("progress") {
+                Some(point) => {
+                    on_progress(point);
+                    buf = guard
+                        .as_mut()
+                        .expect("streaming connection is live")
+                        .read_line()
+                        .with_context(|| {
+                            format!(
+                                "planning server at {} dropped the connection mid-sweep",
+                                self.addr
+                            )
+                        })?;
+                }
+                None => return self.parse_plans(&resp, combos.len() * batches.len()),
+            }
+        }
+    }
+
+    /// Fetch the DSE candidate table for one combo/batch point (the
+    /// protocol-v2 `profile` verb): per-node PL/AIE candidates with
+    /// latency and resource figures, as the daemon's profiler sees them.
+    pub fn profile(&self, combo: &str, batch: usize, quantized: bool) -> Result<Json> {
+        let resp = self.call(&Request::Profile { combo: combo.to_string(), batch, quantized })?;
+        resp.get("profile")
+            .cloned()
+            .ok_or_else(|| anyhow!("profile response missing `profile`"))
     }
 
     /// Fetch the daemon's telemetry object (the `stats` verb).

@@ -31,10 +31,15 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::planner::{LocalPlanner, PlanRequest, Planner};
+use crate::coordinator::planner::{LocalPlanner, PlanOutcome, PlanRequest, Planner};
+use crate::coordinator::plan_sweep_progress;
+use crate::obs;
 use crate::util::json::Json;
 
-use super::protocol::{error_response, ok_response, plan_to_json, Request, WirePoint};
+use super::protocol::{
+    error_response, ok_response, plan_to_json, profile_payload, progress_response, Request,
+    WirePoint,
+};
 use super::stats::ServerStats;
 
 /// Default listen address of `apdrl serve` (loopback: the daemon trusts
@@ -208,8 +213,41 @@ fn service_one(conn: &mut Conn, stats: &ServerStats) -> Disposition {
             }
             stats.requests.fetch_add(1, Ordering::Relaxed);
             stats.in_flight.fetch_add(1, Ordering::Relaxed);
-            let (response, stop) = respond(&line, stats);
+            let t0 = Instant::now();
+            let parsed = Request::parse_line(&line);
+            let verb = parsed.as_ref().map(Request::verb).unwrap_or("invalid");
+            // A streaming sweep writes its own progress lines before the
+            // final response; every other verb is one response line.
+            let (response, stop) = match parsed {
+                Ok(Request::Sweep { combos, batches, quantized, stream: true }) => {
+                    stats.sweep_requests.fetch_add(1, Ordering::Relaxed);
+                    let streamed = handle_sweep_streaming(
+                        &mut conn.writer,
+                        &combos,
+                        &batches,
+                        quantized,
+                        stats,
+                    );
+                    let response = streamed.unwrap_or_else(|e| {
+                        stats.errors.fetch_add(1, Ordering::Relaxed);
+                        error_response(&format!("{e:#}"))
+                    });
+                    (response, false)
+                }
+                other => respond(other, stats),
+            };
             stats.in_flight.fetch_sub(1, Ordering::Relaxed);
+            let wall_us = t0.elapsed().as_micros() as u64;
+            stats.record_latency(verb, wall_us);
+            if obs::active() {
+                let ok = response.get("ok").and_then(Json::as_bool).unwrap_or(false);
+                obs::publish(
+                    obs::Event::new("serve.request")
+                        .tag("verb", verb)
+                        .flag("ok", ok)
+                        .num("wall_us", wall_us as f64),
+                );
+            }
             let wire = response.to_line().unwrap_or_else(|e| {
                 // Unreachable for well-formed plans (latencies are
                 // finite by construction), but the daemon must never
@@ -249,9 +287,11 @@ fn service_one(conn: &mut Conn, stats: &ServerStats) -> Disposition {
     }
 }
 
-/// Dispatch one request line → (response, shutdown?).
-fn respond(line: &str, stats: &ServerStats) -> (Json, bool) {
-    let req = match Request::parse_line(line) {
+/// Dispatch one parsed request → (response, shutdown?).  Streaming
+/// sweeps never get here — `service_one` intercepts them because they
+/// need the connection's writer mid-request.
+fn respond(parsed: Result<Request>, stats: &ServerStats) -> (Json, bool) {
+    let req = match parsed {
         Ok(req) => req,
         Err(e) => {
             stats.errors.fetch_add(1, Ordering::Relaxed);
@@ -263,10 +303,11 @@ fn respond(line: &str, stats: &ServerStats) -> (Json, bool) {
             stats.plan_requests.fetch_add(1, Ordering::Relaxed);
             handle_plan(&combo, batch, quantized, stats)
         }
-        Request::Sweep { combos, batches, quantized } => {
+        Request::Sweep { combos, batches, quantized, stream: _ } => {
             stats.sweep_requests.fetch_add(1, Ordering::Relaxed);
             handle_sweep(&combos, &batches, quantized, stats)
         }
+        Request::Profile { combo, batch, quantized } => handle_profile(&combo, batch, quantized),
         Request::PlanMany { points } => {
             // Batched like a sweep for the telemetry (it is one).
             stats.sweep_requests.fetch_add(1, Ordering::Relaxed);
@@ -350,6 +391,48 @@ fn handle_sweep(
 ) -> Result<Json> {
     let reqs = PlanRequest::named_grid(combos, batches, quantized)?;
     serve_batch(&reqs, stats)
+}
+
+/// The `sweep` verb with `"stream":true`: one `progress` line per
+/// completed grid point (completion order), then the usual `plans[]`
+/// response as the final line.  Mid-stream write failures are swallowed
+/// — the sweep finishes for the shared cache's sake, and the final
+/// write in `service_one` fails the same way and closes the connection.
+fn handle_sweep_streaming(
+    writer: &mut TcpStream,
+    combos: &[String],
+    batches: &[usize],
+    quantized: bool,
+    stats: &ServerStats,
+) -> Result<Json> {
+    let reqs = PlanRequest::named_grid(combos, batches, quantized)?;
+    let t0 = Instant::now();
+    let sink = Mutex::new(&mut *writer);
+    let plans = plan_sweep_progress(&reqs, &|point| {
+        if let Ok(line) = progress_response(point).to_line() {
+            let mut w = sink.lock().unwrap();
+            let _ = w
+                .write_all(line.as_bytes())
+                .and_then(|_| w.write_all(b"\n"))
+                .and_then(|_| w.flush());
+        }
+    });
+    let wall = t0.elapsed().as_micros() as u64;
+    let outcomes: Vec<PlanOutcome> =
+        plans.iter().zip(&reqs).map(|(p, r)| PlanOutcome::from_static(p, r)).collect();
+    let hits = outcomes.iter().filter(|o| o.cache_hit).count() as u64;
+    let explored: u64 = outcomes.iter().map(|o| o.explored as u64).sum();
+    stats.record_request(outcomes.len() as u64, hits, explored, wall);
+    let wire_plans: Vec<Json> = outcomes.iter().map(plan_to_json).collect();
+    let mut body = BTreeMap::new();
+    body.insert("plans".to_string(), Json::Arr(wire_plans));
+    Ok(ok_response(body))
+}
+
+fn handle_profile(combo: &str, batch: usize, quantized: bool) -> Result<Json> {
+    let mut body = BTreeMap::new();
+    body.insert("profile".to_string(), profile_payload(combo, batch, quantized)?);
+    Ok(ok_response(body))
 }
 
 fn handle_plan_many(points: &[WirePoint], stats: &ServerStats) -> Result<Json> {

@@ -25,12 +25,14 @@
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::planner::{
     LocalPlanner, PlanOutcome, PlanRequest, Planner, Provenance,
 };
+use crate::obs;
 use crate::partition::cache::PlanKey;
 
 use super::client::{server_addr, wire_point, RemotePlanner, ENV_ADDR};
@@ -154,6 +156,7 @@ fn serve_shard(
     reqs: &[PlanRequest],
     slots: &[Mutex<Option<PlanOutcome>>],
 ) -> Result<()> {
+    let t0 = Instant::now();
     let client = RemotePlanner::connect(host)?;
     let subset: Vec<PlanRequest> = idxs.iter().map(|&i| reqs[i].clone()).collect();
     let outcomes = client.plan_many(&subset)?;
@@ -161,7 +164,29 @@ fn serve_shard(
         outcome.provenance = Provenance::Federated { shard };
         *slots[i].lock().unwrap() = Some(outcome);
     }
+    if obs::active() {
+        obs::publish(
+            obs::Event::new("fed.shard")
+                .tag("host", host)
+                .num("shard", shard as f64)
+                .num("points", idxs.len() as f64)
+                .num("wall_us", t0.elapsed().as_micros() as f64),
+        );
+    }
     Ok(())
+}
+
+/// Publish a `fed.down` event for a host that just failed (connection
+/// refused, died mid-sweep, protocol error).
+fn publish_host_down(host: &str, shard: usize, err: &anyhow::Error) {
+    if obs::active() {
+        obs::publish(
+            obs::Event::new("fed.down")
+                .tag("host", host)
+                .num("shard", shard as f64)
+                .tag("error", &format!("{err:#}")),
+        );
+    }
 }
 
 impl Planner for FederatedPlanner {
@@ -189,7 +214,10 @@ impl Planner for FederatedPlanner {
                     outcome.provenance = Provenance::Federated { shard };
                     return Ok(outcome);
                 }
-                Err(e) => last_err = Some(e),
+                Err(e) => {
+                    publish_host_down(&self.hosts[shard], shard, &e);
+                    last_err = Some(e);
+                }
             }
         }
         Err(last_err
@@ -223,6 +251,7 @@ impl Planner for FederatedPlanner {
                 s.spawn(move || {
                     if let Err(e) = serve_shard(host, shard, idxs, reqs, slots) {
                         alive[shard].store(false, Ordering::SeqCst);
+                        publish_host_down(host, shard, &e);
                         first_error.lock().unwrap().get_or_insert(e);
                     }
                 });
@@ -252,6 +281,13 @@ impl Planner for FederatedPlanner {
                     n
                 )));
             }
+            if obs::active() {
+                obs::publish(
+                    obs::Event::new("fed.failover")
+                        .num("pending", pending.len() as f64)
+                        .num("survivors", survivors.len() as f64),
+                );
+            }
             let mut chunks: Vec<Vec<usize>> = vec![Vec::new(); survivors.len()];
             for (pos, &req_idx) in pending.iter().enumerate() {
                 chunks[pos % survivors.len()].push(req_idx);
@@ -267,6 +303,7 @@ impl Planner for FederatedPlanner {
                     s.spawn(move || {
                         if let Err(e) = serve_shard(host, shard, chunk, reqs, slots) {
                             alive[shard].store(false, Ordering::SeqCst);
+                            publish_host_down(host, shard, &e);
                             first_error.lock().unwrap().get_or_insert(e);
                         }
                     });

@@ -11,18 +11,24 @@
 //!   connections sharing the process-wide `partition::cache`; every verb
 //!   is served through the in-process `Planner` backend.
 //! * [`protocol`] — the versioned JSON-lines request/response protocol
-//!   (`plan`, `sweep`, `plan_many`, `stats`, `cache_flush`, `shutdown`);
-//!   plan payloads are serialized `coordinator::planner::PlanOutcome`s.
+//!   (`plan`, `sweep` — optionally streaming per-point progress lines —
+//!   `plan_many`, `profile`, `stats`, `cache_flush`, `shutdown`); plan
+//!   payloads are serialized `coordinator::planner::PlanOutcome`s.
 //! * [`client`] — the blocking [`RemotePlanner`]: the single-daemon
 //!   remote implementation of the `Planner` trait, with transparent
 //!   reconnect-and-retry.
 //! * [`federation`] — [`FederatedPlanner`]: N daemons, `plan_many`
 //!   sharded by plan key with fail-over onto surviving hosts; plus
 //!   [`select_planner`], the CLI's one backend-choice point.
-//! * [`stats`] — daemon telemetry (request counters, solve wall time,
-//!   queue depth) surfaced by the `stats` verb, plus the process-global
-//!   solve telemetry that auto-tunes the parallel B&B fan-out in
-//!   `partition::ilp`.
+//! * [`stats`] — daemon telemetry (request counters, per-verb latency
+//!   percentiles, solve wall time, queue depth) surfaced by the `stats`
+//!   verb, plus the process-global solve telemetry that auto-tunes the
+//!   parallel B&B fan-out in `partition::ilp`.
+//!
+//! The daemon and federation client also publish structured events
+//! (`serve.request`, `fed.shard`, `fed.down`, `fed.failover`) onto the
+//! process-wide [`crate::obs`] bus — free when nothing subscribes, live
+//! on an `apdrl dash` dashboard when something does.
 //!
 //! Everything is `std::net` + `std::thread`: no async runtime, no
 //! external dependencies, per the offline build contract.

@@ -12,8 +12,9 @@
 //! | verb          | request fields                         | response payload |
 //! |---------------|----------------------------------------|------------------|
 //! | `plan`        | `combo`, `batch`, `quantized`          | `plan`           |
-//! | `sweep`       | `combos[]`, `batches[]`, `quantized`   | `plans[]`        |
+//! | `sweep`       | `combos[]`, `batches[]`, `quantized`, optional `stream` | `plans[]` (after `progress` lines when streaming) |
 //! | `plan_many`   | `points[]` of `{combo,batch,quantized}`| `plans[]`        |
+//! | `profile`     | `combo`, `batch`, `quantized`          | `profile`        |
 //! | `stats`       | —                                      | `stats`          |
 //! | `cache_flush` | —                                      | `flushed`        |
 //! | `shutdown`    | —                                      | `stopping`       |
@@ -24,6 +25,17 @@
 //! entries; the flag changed the *response* shape, so the version was
 //! bumped and a new client talking to a v1 daemon gets a clean
 //! version-mismatch error instead of a missing-field parse failure.
+//!
+//! Two later additions stay within v2 because they are strictly
+//! additive: `"stream":true` on `sweep` asks the daemon to write one
+//! `{"v":2,"ok":true,"progress":{…}}` line per completed grid point
+//! before the final `plans` line (an old daemon ignores the flag and
+//! sends the final line only — a streaming client must treat the first
+//! line *without* a `progress` key as the final response); and the
+//! `profile` verb exposes the DSE candidate table (per-node PL/AIE
+//! latency, resource and kLUT candidates plus the PS reference) that
+//! [`profile_payload`] builds — an old daemon answers it with its
+//! normal unknown-verb error.
 //!
 //! Responses are `{"v":2,"ok":true,...payload}` or
 //! `{"v":2,"ok":false,"error":"..."}`.  The plan payload is the
@@ -63,8 +75,9 @@ pub struct WirePoint {
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
     Plan { combo: String, batch: usize, quantized: bool },
-    Sweep { combos: Vec<String>, batches: Vec<usize>, quantized: bool },
+    Sweep { combos: Vec<String>, batches: Vec<usize>, quantized: bool, stream: bool },
     PlanMany { points: Vec<WirePoint> },
+    Profile { combo: String, batch: usize, quantized: bool },
     Stats,
     CacheFlush,
     Shutdown,
@@ -141,7 +154,23 @@ impl Request {
                 }
                 let quantized =
                     root.get("quantized").and_then(Json::as_bool).unwrap_or(true);
-                Ok(Request::Sweep { combos, batches, quantized })
+                let stream = root.get("stream").and_then(Json::as_bool).unwrap_or(false);
+                Ok(Request::Sweep { combos, batches, quantized, stream })
+            }
+            "profile" => {
+                let combo = root
+                    .get("combo")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("profile: missing `combo`"))?
+                    .to_string();
+                let batch = root
+                    .get("batch")
+                    .and_then(exact_usize)
+                    .filter(|&n| n > 0)
+                    .ok_or_else(|| anyhow!("profile: `batch` must be a positive integer"))?;
+                let quantized =
+                    root.get("quantized").and_then(Json::as_bool).unwrap_or(true);
+                Ok(Request::Profile { combo, batch, quantized })
             }
             "plan_many" => {
                 let points = root
@@ -190,7 +219,7 @@ impl Request {
                 obj.insert("batch".into(), Json::Num(*batch as f64));
                 obj.insert("quantized".into(), Json::Bool(*quantized));
             }
-            Request::Sweep { combos, batches, quantized } => {
+            Request::Sweep { combos, batches, quantized, stream } => {
                 obj.insert("verb".into(), Json::Str("sweep".into()));
                 obj.insert(
                     "combos".into(),
@@ -201,6 +230,11 @@ impl Request {
                     Json::Arr(batches.iter().map(|&b| Json::Num(b as f64)).collect()),
                 );
                 obj.insert("quantized".into(), Json::Bool(*quantized));
+                // Omitted when false so non-streaming lines are byte-
+                // identical to what pre-streaming clients sent.
+                if *stream {
+                    obj.insert("stream".into(), Json::Bool(true));
+                }
             }
             Request::PlanMany { points } => {
                 obj.insert("verb".into(), Json::Str("plan_many".into()));
@@ -223,6 +257,12 @@ impl Request {
                     ),
                 );
             }
+            Request::Profile { combo, batch, quantized } => {
+                obj.insert("verb".into(), Json::Str("profile".into()));
+                obj.insert("combo".into(), Json::Str(combo.clone()));
+                obj.insert("batch".into(), Json::Num(*batch as f64));
+                obj.insert("quantized".into(), Json::Bool(*quantized));
+            }
             Request::Stats => {
                 obj.insert("verb".into(), Json::Str("stats".into()));
             }
@@ -235,6 +275,20 @@ impl Request {
         }
         Ok(Json::Obj(obj).to_line()?)
     }
+
+    /// The wire verb name — the key the daemon's per-verb latency
+    /// reservoirs and `serve.request` events are tagged with.
+    pub fn verb(&self) -> &'static str {
+        match self {
+            Request::Plan { .. } => "plan",
+            Request::Sweep { .. } => "sweep",
+            Request::PlanMany { .. } => "plan_many",
+            Request::Profile { .. } => "profile",
+            Request::Stats => "stats",
+            Request::CacheFlush => "cache_flush",
+            Request::Shutdown => "shutdown",
+        }
+    }
 }
 
 /// `{"v":2,"ok":true}` extended with the payload fields of `body`.
@@ -243,6 +297,71 @@ pub fn ok_response(body: BTreeMap<String, Json>) -> Json {
     obj.insert("v".to_string(), Json::Num(PROTOCOL_VERSION as f64));
     obj.insert("ok".to_string(), Json::Bool(true));
     Json::Obj(obj)
+}
+
+/// One mid-stream line of a streaming sweep:
+/// `{"v":2,"ok":true,"progress":{…}}`.  Clients distinguish these from
+/// the final response by the presence of the `progress` key.
+pub fn progress_response(point: &crate::coordinator::SweepPoint) -> Json {
+    let mut p = BTreeMap::new();
+    p.insert("index".to_string(), Json::Num(point.index as f64));
+    p.insert("done".to_string(), Json::Num(point.done as f64));
+    p.insert("total".to_string(), Json::Num(point.total as f64));
+    p.insert("combo".to_string(), Json::Str(point.combo.clone()));
+    p.insert("batch".to_string(), Json::Num(point.batch as f64));
+    p.insert("quantized".to_string(), Json::Bool(point.quantized));
+    p.insert("cache_hit".to_string(), Json::Bool(point.cache_hit));
+    p.insert("explored".to_string(), Json::Num(point.explored as f64));
+    p.insert("solve_us".to_string(), Json::Num(point.solve_us as f64));
+    let mut obj = BTreeMap::new();
+    obj.insert("progress".to_string(), Json::Obj(p));
+    ok_response(obj)
+}
+
+/// Build the `profile` verb's payload: run the DSE profiler for a
+/// registry combo and serialize the full candidate table.  Shared by
+/// the daemon and by `apdrl profile` running locally, so both sides of
+/// the wire show the same shape.
+pub fn profile_payload(combo: &str, batch: usize, quantized: bool) -> Result<Json> {
+    let c = crate::coordinator::try_combo(combo)?;
+    let platform = crate::hw::vek280();
+    let spec = c.train_spec(batch);
+    let dag = crate::graph::build_train_graph(&spec);
+    let profiles = crate::profile::profile_dag(&dag, &platform, quantized);
+    let candidates = |list: &[crate::profile::Candidate]| {
+        Json::Arr(
+            list.iter()
+                .map(|cand| {
+                    let mut obj = BTreeMap::new();
+                    obj.insert("fmt".to_string(), Json::Str(cand.fmt.name().to_string()));
+                    obj.insert("latency_us".to_string(), Json::Num(cand.latency_us));
+                    obj.insert("resource".to_string(), Json::Num(cand.resource as f64));
+                    obj.insert("kluts".to_string(), Json::Num(cand.kluts));
+                    Json::Obj(obj)
+                })
+                .collect(),
+        )
+    };
+    let nodes = Json::Arr(
+        profiles
+            .iter()
+            .map(|p| {
+                let mut obj = BTreeMap::new();
+                obj.insert("node".to_string(), Json::Num(p.node as f64));
+                obj.insert("name".to_string(), Json::Str(dag.nodes[p.node].name.clone()));
+                obj.insert("ps_latency_us".to_string(), Json::Num(p.ps_latency_us));
+                obj.insert("pl".to_string(), candidates(&p.pl));
+                obj.insert("aie".to_string(), candidates(&p.aie));
+                Json::Obj(obj)
+            })
+            .collect(),
+    );
+    let mut profile = BTreeMap::new();
+    profile.insert("combo".to_string(), Json::Str(c.name.to_string()));
+    profile.insert("batch".to_string(), Json::Num(batch as f64));
+    profile.insert("quantized".to_string(), Json::Bool(quantized));
+    profile.insert("nodes".to_string(), nodes);
+    Ok(Json::Obj(profile))
 }
 
 /// `{"v":2,"ok":false,"error":"..."}`.
@@ -430,7 +549,15 @@ mod tests {
                 combos: vec!["a2c_invpend".into(), "ddpg_lunar".into()],
                 batches: vec![64, 256],
                 quantized: false,
+                stream: false,
             },
+            Request::Sweep {
+                combos: vec!["dqn_cartpole".into()],
+                batches: vec![48],
+                quantized: true,
+                stream: true,
+            },
+            Request::Profile { combo: "ddpg_lunar".into(), batch: 128, quantized: true },
             Request::PlanMany {
                 points: vec![
                     WirePoint { combo: "dqn_cartpole".into(), batch: 48, quantized: true },
@@ -487,6 +614,57 @@ mod tests {
         assert!(format!("{e}").contains("missing") || format!("{e}").contains("empty"), "{e}");
         let e = Request::parse_line(r#"{"v":2,"verb":"plan_many","points":[]}"#).unwrap_err();
         assert!(format!("{e}").contains("empty points"), "{e}");
+    }
+
+    #[test]
+    fn sweep_stream_flag_is_additive_and_profile_parses_strictly() {
+        // A pre-streaming line (no `stream` key) parses as non-streaming,
+        // and serializing it back omits the key — byte-compatible both ways.
+        let legacy =
+            r#"{"v":2,"verb":"sweep","combos":["dqn_cartpole"],"batches":[64],"quantized":true}"#;
+        let req = Request::parse_line(legacy).unwrap();
+        let Request::Sweep { stream, .. } = &req else { panic!("parsed as sweep") };
+        assert!(!stream);
+        assert!(!req.to_line().unwrap().contains("stream"));
+        // Streaming form carries the flag.
+        let line = Request::Sweep {
+            combos: vec!["dqn_cartpole".into()],
+            batches: vec![64],
+            quantized: true,
+            stream: true,
+        }
+        .to_line()
+        .unwrap();
+        assert!(line.contains("\"stream\":true"));
+        // Profile rejects a zero batch like the other planning verbs.
+        let e = Request::parse_line(r#"{"v":2,"verb":"profile","combo":"dqn_cartpole","batch":0}"#)
+            .unwrap_err();
+        assert!(format!("{e}").contains("positive integer"), "{e}");
+        assert_eq!(
+            Request::parse_line(r#"{"v":2,"verb":"profile","combo":"dqn_cartpole","batch":32}"#)
+                .unwrap()
+                .verb(),
+            "profile"
+        );
+    }
+
+    #[test]
+    fn profile_payload_carries_the_candidate_table() {
+        let payload = profile_payload("dqn_cartpole", 64, true).unwrap();
+        let nodes = payload.get("nodes").and_then(Json::as_arr).expect("nodes array");
+        assert!(!nodes.is_empty());
+        for node in nodes {
+            assert!(node.get("name").and_then(Json::as_str).is_some());
+            assert!(node.get("ps_latency_us").and_then(Json::as_f64).is_some());
+            let pl = node.get("pl").and_then(Json::as_arr).expect("pl candidates");
+            assert!(!pl.is_empty(), "every node has at least one PL candidate");
+            for cand in pl {
+                assert!(cand.get("latency_us").and_then(Json::as_f64).unwrap() > 0.0);
+                assert!(cand.get("fmt").and_then(Json::as_str).is_some());
+            }
+        }
+        // Unknown combos surface the registry error, not a panic.
+        assert!(profile_payload("dqn_nonsense", 64, true).is_err());
     }
 
     #[test]

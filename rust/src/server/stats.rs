@@ -16,7 +16,9 @@
 //! Everything is lock-free atomics: the counters sit on the solver hot
 //! path and must never serialize concurrent workers.
 
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use crate::partition::cache;
 use crate::util::json::Json;
@@ -24,6 +26,11 @@ use crate::util::json::Json;
 /// Minimum observed solves before the adaptive fan-out hint activates;
 /// below this the solver keeps its fixed fallback constant.
 const HINT_MIN_SOLVES: u64 = 4;
+
+/// Per-verb latency reservoir depth: percentiles are computed over the
+/// most recent this-many requests of each verb, so a long-lived daemon
+/// reports current behaviour rather than its lifetime average.
+const LATENCY_SAMPLES: usize = 512;
 
 /// Per-daemon request counters.  All monotonic except `queue_depth`
 /// (connections accepted but not yet picked up by a worker) and
@@ -50,6 +57,11 @@ pub struct ServerStats {
     pub connections: AtomicU64,
     pub queue_depth: AtomicUsize,
     pub in_flight: AtomicUsize,
+    /// Sliding window of request wall times per verb, µs — the one
+    /// non-atomic member.  Touched once per *request* (not per solve
+    /// iteration), so a short critical section off the solver hot path
+    /// is fine.
+    verb_latency: Mutex<BTreeMap<String, VecDeque<u64>>>,
 }
 
 impl ServerStats {
@@ -66,6 +78,17 @@ impl ServerStats {
         self.explored_total.fetch_add(explored, Ordering::Relaxed);
         self.solve_us_total.fetch_add(wall_us, Ordering::Relaxed);
         self.solve_us_max.fetch_max(wall_us, Ordering::Relaxed);
+    }
+
+    /// Record the end-to-end wall time of one request of `verb`, µs.
+    /// Keeps the most recent [`LATENCY_SAMPLES`] per verb.
+    pub fn record_latency(&self, verb: &str, wall_us: u64) {
+        let mut map = self.verb_latency.lock().unwrap();
+        let window = map.entry(verb.to_string()).or_default();
+        if window.len() == LATENCY_SAMPLES {
+            window.pop_front();
+        }
+        window.push_back(wall_us);
     }
 
     /// Snapshot every counter — plus the process-wide plan-cache state
@@ -96,17 +119,33 @@ impl ServerStats {
 
         // Process-wide plan cache: every client shares it, so hit/miss
         // rates here are the fleet-level figure, not per-connection.
-        let (len, hits, misses) = {
+        let (len, hits, misses, evictions) = {
             let guard = cache::global().lock().unwrap();
-            (guard.len() as u64, guard.hits, guard.misses)
+            (guard.len() as u64, guard.hits, guard.misses, guard.evictions)
         };
         let mut c = std::collections::BTreeMap::new();
         c.insert("entries".into(), num(len));
         c.insert("hits".into(), num(hits));
         c.insert("misses".into(), num(misses));
+        c.insert("evictions".into(), num(evictions));
         let rate = if hits + misses > 0 { hits as f64 / (hits + misses) as f64 } else { 0.0 };
         c.insert("hit_rate".into(), Json::Num(rate));
         obj.insert("cache".into(), Json::Obj(c));
+
+        // Per-verb request latency percentiles over the recent window.
+        let mut lat = std::collections::BTreeMap::new();
+        for (verb, window) in self.verb_latency.lock().unwrap().iter() {
+            let mut sorted: Vec<u64> = window.iter().copied().collect();
+            sorted.sort_unstable();
+            let mut v = std::collections::BTreeMap::new();
+            v.insert("count".into(), num(sorted.len() as u64));
+            v.insert("p50_us".into(), num(percentile(&sorted, 0.50)));
+            v.insert("p90_us".into(), num(percentile(&sorted, 0.90)));
+            v.insert("p99_us".into(), num(percentile(&sorted, 0.99)));
+            v.insert("max_us".into(), num(*sorted.last().unwrap_or(&0)));
+            lat.insert(verb.clone(), Json::Obj(v));
+        }
+        obj.insert("latency_us".into(), Json::Obj(lat));
 
         // Solver telemetry (all solves in this process, remote or not).
         let t = telemetry();
@@ -125,6 +164,15 @@ impl ServerStats {
 
         Json::Obj(obj)
     }
+}
+
+/// Nearest-rank percentile over an already-sorted sample, 0 when empty.
+fn percentile(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx]
 }
 
 /// Process-global solve telemetry, recorded by `partition::ilp::solve`
@@ -221,6 +269,42 @@ mod tests {
         assert_eq!(j.get("plans_from_cache").and_then(Json::as_usize), Some(1));
         assert_eq!(j.get("solve_us_max").and_then(Json::as_usize), Some(1_500));
         assert!(j.get("cache").and_then(|c| c.get("hit_rate")).is_some());
+        assert!(j.get("cache").and_then(|c| c.get("evictions")).is_some());
         assert!(j.get("solver").and_then(|s| s.get("solves")).is_some());
+    }
+
+    #[test]
+    fn verb_latency_reports_windowed_percentiles() {
+        let stats = ServerStats::new();
+        // 1..=100 µs in order: p50 hits the middle, max the top.
+        for us in 1..=100u64 {
+            stats.record_latency("plan", us);
+        }
+        stats.record_latency("stats", 7);
+        let j = stats.to_json();
+        let plan = j.get("latency_us").and_then(|l| l.get("plan")).expect("plan window");
+        assert_eq!(plan.get("count").and_then(Json::as_usize), Some(100));
+        assert_eq!(plan.get("p50_us").and_then(Json::as_usize), Some(51));
+        assert_eq!(plan.get("p99_us").and_then(Json::as_usize), Some(99));
+        assert_eq!(plan.get("max_us").and_then(Json::as_usize), Some(100));
+        let s = j.get("latency_us").and_then(|l| l.get("stats")).expect("stats window");
+        assert_eq!(s.get("p50_us").and_then(Json::as_usize), Some(7));
+
+        // The window slides: after LATENCY_SAMPLES more, old samples age out.
+        for _ in 0..LATENCY_SAMPLES {
+            stats.record_latency("plan", 1_000);
+        }
+        let j = stats.to_json();
+        let plan = j.get("latency_us").and_then(|l| l.get("plan")).expect("plan window");
+        assert_eq!(plan.get("count").and_then(Json::as_usize), Some(LATENCY_SAMPLES));
+        assert_eq!(plan.get("p50_us").and_then(Json::as_usize), Some(1_000));
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank_and_total_on_singletons() {
+        assert_eq!(percentile(&[], 0.5), 0);
+        assert_eq!(percentile(&[42], 0.0), 42);
+        assert_eq!(percentile(&[42], 0.99), 42);
+        assert_eq!(percentile(&[10, 20, 30, 40], 0.5), 30);
     }
 }

@@ -1,0 +1,346 @@
+//! The observability layer end to end — the contract `apdrl dash`
+//! depends on:
+//!
+//! * the bounded ring drops oldest and never blocks a publisher, even
+//!   with concurrent publishers on `exec::pool` threads;
+//! * the SSE endpoint emits frames a plain line client can parse back,
+//!   and feeds any number of concurrent subscribers;
+//! * token auth rejects bad/missing tokens and refuses non-loopback
+//!   binds without one;
+//! * `/emit` ingest round-trips into `/snapshot`, which is how the
+//!   [`Forwarder`] relays a producer's bus into a remote dash;
+//! * a live subscriber never perturbs training: a DQN-CartPole run with
+//!   the global bus hot is bit-identical to one without.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use apdrl::coordinator::config::ComboConfig;
+use apdrl::coordinator::metrics::RunMetrics;
+use apdrl::coordinator::{train_combo, TrainLimits};
+use apdrl::exec::{CpuBackend, Pool};
+use apdrl::graph::{Algo, NetSpec};
+use apdrl::obs::{Bus, DashServer, Event, Forwarder};
+use apdrl::util::json::Json;
+
+const CLIENT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Bind a dash on an ephemeral loopback port and run it on a thread.
+fn start_dash(bus: Arc<Bus>, token: Option<&str>) -> (SocketAddr, Arc<AtomicBool>, JoinHandle<()>) {
+    let server =
+        DashServer::bind("127.0.0.1:0", bus, token.map(str::to_string)).expect("dash must bind");
+    let addr = server.local_addr().expect("dash must report its address");
+    let flag = server.shutdown_flag();
+    let handle = std::thread::spawn(move || {
+        server.run().expect("dash run loop must exit cleanly");
+    });
+    (addr, flag, handle)
+}
+
+fn stop_dash(flag: &AtomicBool, handle: JoinHandle<()>) {
+    flag.store(true, Ordering::SeqCst);
+    handle.join().expect("dash thread must join");
+}
+
+/// Read one HTTP/1.1 response: status line, headers, content-length
+/// body. Works for both close and keep-alive responses.
+fn read_http_response(reader: &mut BufReader<TcpStream>) -> (String, String) {
+    let mut status = String::new();
+    reader.read_line(&mut status).expect("response status line");
+    let mut length = 0usize;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("response header line");
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some((key, value)) = line.split_once(':') {
+            if key.trim().eq_ignore_ascii_case("content-length") {
+                length = value.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; length];
+    reader.read_exact(&mut body).expect("response body");
+    (status.trim_end().to_string(), String::from_utf8(body).expect("UTF-8 body"))
+}
+
+fn http_get(addr: &SocketAddr, target: &str, extra_header: Option<&str>) -> (String, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect to dash");
+    stream.set_read_timeout(Some(CLIENT_TIMEOUT)).expect("read timeout");
+    let extra = extra_header.map(|h| format!("{h}\r\n")).unwrap_or_default();
+    let request = format!("GET {target} HTTP/1.1\r\nHost: dash\r\n{extra}\r\n");
+    stream.write_all(request.as_bytes()).expect("send request");
+    let mut reader = BufReader::new(stream);
+    read_http_response(&mut reader)
+}
+
+/// A minimal `text/event-stream` client: handshake, then parse
+/// `event:`/`data:` frames, skipping `retry:` and `: ping` noise.
+struct SseClient {
+    reader: BufReader<TcpStream>,
+}
+
+impl SseClient {
+    fn connect(addr: &SocketAddr) -> SseClient {
+        let mut stream = TcpStream::connect(addr).expect("connect to dash");
+        stream.set_read_timeout(Some(CLIENT_TIMEOUT)).expect("read timeout");
+        stream.write_all(b"GET /events HTTP/1.1\r\nHost: dash\r\n\r\n").expect("send SSE request");
+        let mut reader = BufReader::new(stream);
+        let mut status = String::new();
+        reader.read_line(&mut status).expect("SSE status line");
+        assert!(status.contains("200 OK"), "SSE handshake refused: {status}");
+        let mut saw_content_type = false;
+        loop {
+            let mut line = String::new();
+            reader.read_line(&mut line).expect("SSE header line");
+            let line = line.trim_end();
+            if line.is_empty() {
+                break;
+            }
+            saw_content_type |= line.to_ascii_lowercase().contains("text/event-stream");
+        }
+        assert!(saw_content_type, "SSE response must declare text/event-stream");
+        SseClient { reader }
+    }
+
+    fn next_frames(&mut self, n: usize) -> Vec<(String, Json)> {
+        let mut frames = Vec::new();
+        let mut kind: Option<String> = None;
+        while frames.len() < n {
+            let mut line = String::new();
+            self.reader.read_line(&mut line).expect("SSE frame line");
+            let line = line.trim_end_matches('\n');
+            if let Some(k) = line.strip_prefix("event: ") {
+                kind = Some(k.to_string());
+            } else if let Some(d) = line.strip_prefix("data: ") {
+                let k = kind.take().expect("data line must follow an event line");
+                let data = Json::parse(d).expect("SSE data must be one line of JSON");
+                frames.push((k, data));
+            }
+        }
+        frames
+    }
+}
+
+#[test]
+fn ring_overflow_drops_oldest_and_never_blocks_publishers() {
+    let bus = Bus::with_capacity(8);
+    let mut sub = bus.subscribe();
+    // 20 publishes into an 8-slot ring: all return instantly, the 12
+    // oldest fall off the front.
+    for i in 0..20 {
+        bus.publish(Event::new("ovf").num("i", i as f64));
+    }
+    let drained = sub.drain();
+    assert_eq!(drained.dropped, 12);
+    assert_eq!(drained.events.len(), 8);
+    let seqs: Vec<u64> = drained.events.iter().map(|e| e.seq).collect();
+    assert_eq!(seqs, (12..20).collect::<Vec<u64>>());
+    let payload: Vec<usize> =
+        drained.events.iter().map(|e| e.fields["i"].as_usize().expect("i field")).collect();
+    assert_eq!(payload, (12..20).collect::<Vec<usize>>());
+    // A later drain starts clean.
+    let again = sub.drain();
+    assert_eq!(again.dropped, 0);
+    assert!(again.events.is_empty());
+}
+
+#[test]
+fn concurrent_publishers_on_pool_threads_lose_nothing_below_capacity() {
+    let bus = Bus::with_capacity(1024);
+    let mut sub = bus.subscribe();
+    let pool = Pool::new(4);
+    pool.run(256, &|i| {
+        bus.publish(Event::new("pool.evt").num("task", i as f64));
+    });
+    let drained = sub.drain();
+    assert_eq!(drained.dropped, 0);
+    assert_eq!(drained.events.len(), 256);
+    for (k, event) in drained.events.iter().enumerate() {
+        assert_eq!(event.seq, k as u64, "sequence numbers stay contiguous under contention");
+    }
+    let mut tasks: Vec<usize> =
+        drained.events.iter().map(|e| e.fields["task"].as_usize().expect("task field")).collect();
+    tasks.sort_unstable();
+    assert_eq!(tasks, (0..256).collect::<Vec<usize>>(), "every task's event arrived exactly once");
+}
+
+#[test]
+fn sse_frames_parse_back_with_kind_and_one_line_json_payload() {
+    let bus = Bus::with_capacity(64);
+    let (addr, flag, handle) = start_dash(Arc::clone(&bus), None);
+    let mut client = SseClient::connect(&addr);
+    // The stream subscribes before its headers go out, so everything
+    // published from here on is guaranteed to reach the client.
+    bus.publish(Event::new("train.episode").num("reward", 31.5).num("lane", 1.0));
+    bus.publish(Event::new("train.scale").tag("from", "65536").tag("to", "32768"));
+    let frames = client.next_frames(2);
+    assert_eq!(frames[0].0, "train.episode");
+    assert_eq!(frames[0].1.get("reward").and_then(Json::as_f64), Some(31.5));
+    assert_eq!(frames[0].1.get("kind").and_then(Json::as_str), Some("train.episode"));
+    assert!(frames[0].1.get("seq").and_then(Json::as_f64).is_some());
+    assert_eq!(frames[1].0, "train.scale");
+    assert_eq!(frames[1].1.get("to").and_then(Json::as_str), Some("32768"));
+    stop_dash(&flag, handle);
+}
+
+#[test]
+fn two_concurrent_subscribers_both_see_events_from_all_three_sources() {
+    let bus = Bus::with_capacity(64);
+    let (addr, flag, handle) = start_dash(Arc::clone(&bus), None);
+    let mut first = SseClient::connect(&addr);
+    let mut second = SseClient::connect(&addr);
+    // One event per producer family: trainer, planner, federation.
+    bus.publish(Event::new("train.episode").num("reward", 12.0).num("episode", 4.0));
+    bus.publish(Event::new("sweep.point").num("done", 3.0).num("total", 8.0));
+    bus.publish(Event::new("fed.shard").tag("host", "h0").num("wall_us", 120.0));
+    for client in [&mut first, &mut second] {
+        let frames = client.next_frames(3);
+        let kinds: Vec<&str> = frames.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(kinds, ["train.episode", "sweep.point", "fed.shard"]);
+        assert_eq!(frames[0].1.get("reward").and_then(Json::as_f64), Some(12.0));
+        assert_eq!(frames[1].1.get("total").and_then(Json::as_f64), Some(8.0));
+        assert_eq!(frames[2].1.get("host").and_then(Json::as_str), Some("h0"));
+    }
+    stop_dash(&flag, handle);
+}
+
+#[test]
+fn token_auth_rejects_bad_or_missing_tokens() {
+    let bus = Bus::with_capacity(64);
+    let (addr, flag, handle) = start_dash(Arc::clone(&bus), Some("sekrit"));
+    let (denied, _) = http_get(&addr, "/snapshot", None);
+    assert!(denied.starts_with("HTTP/1.1 401"), "missing token must 401, got: {denied}");
+    let (wrong, _) = http_get(&addr, "/snapshot?token=nope", None);
+    assert!(wrong.starts_with("HTTP/1.1 401"), "bad token must 401, got: {wrong}");
+    let (via_query, _) = http_get(&addr, "/snapshot?token=sekrit", None);
+    assert!(via_query.starts_with("HTTP/1.1 200"), "query token must pass, got: {via_query}");
+    let (via_bearer, _) = http_get(&addr, "/snapshot", Some("Authorization: Bearer sekrit"));
+    assert!(via_bearer.starts_with("HTTP/1.1 200"), "bearer token must pass, got: {via_bearer}");
+    stop_dash(&flag, handle);
+}
+
+#[test]
+fn nonloopback_bind_without_a_token_is_refused() {
+    let err = match DashServer::bind("0.0.0.0:0", Bus::with_capacity(8), None) {
+        Ok(_) => panic!("non-loopback bind without a token must be refused"),
+        Err(e) => e,
+    };
+    assert!(format!("{err:#}").contains("token"), "error must explain the fix: {err:#}");
+    // The same bind with a token is fine.
+    let server = DashServer::bind("0.0.0.0:0", Bus::with_capacity(8), Some("sekrit".to_string()))
+        .expect("non-loopback bind with a token must succeed");
+    drop(server);
+}
+
+#[test]
+fn emit_ingest_round_trips_into_the_snapshot_view() {
+    let bus = Bus::with_capacity(64);
+    let (addr, flag, handle) = start_dash(Arc::clone(&bus), None);
+
+    let body = concat!(
+        r#"{"events":[{"kind":"train.episode","reward":12.5,"lane":0},"#,
+        r#"{"kind":"plan.cache","hit":true}]}"#
+    );
+    let mut stream = TcpStream::connect(addr).expect("connect to dash");
+    stream.set_read_timeout(Some(CLIENT_TIMEOUT)).expect("read timeout");
+    let request = format!(
+        "POST /emit HTTP/1.1\r\nHost: dash\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(request.as_bytes()).expect("send emit");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone emit socket"));
+    let (status, response) = read_http_response(&mut reader);
+    assert!(status.starts_with("HTTP/1.1 200"), "emit must succeed, got: {status}");
+    assert!(response.contains("\"accepted\":2"), "got: {response}");
+
+    // The connection is keep-alive: a malformed second batch answers
+    // 400 on the same socket without desynchronizing it.
+    let garbage = "not json at all";
+    let request = format!(
+        "POST /emit HTTP/1.1\r\nHost: dash\r\nContent-Length: {}\r\n\r\n{garbage}",
+        garbage.len()
+    );
+    stream.write_all(request.as_bytes()).expect("send bad emit");
+    let (status, _) = read_http_response(&mut reader);
+    assert!(status.starts_with("HTTP/1.1 400"), "garbage must 400, got: {status}");
+
+    let (status, snapshot) = http_get(&addr, "/snapshot", None);
+    assert!(status.starts_with("HTTP/1.1 200"), "got: {status}");
+    let snap = Json::parse(&snapshot).expect("snapshot must be JSON");
+    let events = snap.get("events").and_then(Json::as_arr).expect("events array");
+    let kinds: Vec<&str> =
+        events.iter().filter_map(|e| e.get("kind").and_then(Json::as_str)).collect();
+    assert_eq!(kinds, ["train.episode", "plan.cache"]);
+    let episode = &events[0];
+    assert_eq!(episode.get("reward").and_then(Json::as_f64), Some(12.5));
+    assert!(episode.get("seq").and_then(Json::as_f64).is_some(), "dash assigns seq on ingest");
+    stop_dash(&flag, handle);
+}
+
+#[test]
+fn forwarder_relays_the_global_bus_into_a_remote_dash() {
+    let bus = Bus::with_capacity(1024);
+    let (addr, flag, handle) = start_dash(Arc::clone(&bus), None);
+    let forwarder = Forwarder::start(&addr.to_string(), None);
+    // The kind is unique to this test: the global bus is shared across
+    // the whole test binary, so the snapshot may carry other events.
+    apdrl::obs::publish(Event::new("test.forward.unique").num("x", 7.0));
+    forwarder.finish();
+    let (status, snapshot) = http_get(&addr, "/snapshot", None);
+    assert!(status.starts_with("HTTP/1.1 200"), "got: {status}");
+    let snap = Json::parse(&snapshot).expect("snapshot must be JSON");
+    let events = snap.get("events").and_then(Json::as_arr).expect("events array");
+    let relayed = events
+        .iter()
+        .find(|e| e.get("kind").and_then(Json::as_str) == Some("test.forward.unique"))
+        .expect("the forwarded event must reach the dash before finish() returns");
+    assert_eq!(relayed.get("x").and_then(Json::as_f64), Some(7.0));
+    stop_dash(&flag, handle);
+}
+
+fn bits(values: &[f64]) -> Vec<u64> {
+    values.iter().map(|v| v.to_bits()).collect()
+}
+
+fn train_dqn_cartpole() -> RunMetrics {
+    let combo = ComboConfig {
+        name: "dqn_obs_pin",
+        algo: Algo::Dqn,
+        env: "cartpole",
+        net: NetSpec::mlp(&[4, 24, 2]),
+        batch: 16,
+        obs_dim: 4,
+        act_dim: 2,
+        paper_flops_per_row: 0.0,
+        paper_reward_error_pct: 0.0,
+    };
+    let limits = TrainLimits { max_env_steps: 600, max_episodes: 10_000 };
+    let mut backend = CpuBackend::fp32().with_warmup(32).with_train_every(4);
+    train_combo(&mut backend, &combo, 1, limits, false).expect("training must run").metrics
+}
+
+/// Acceptance pin: events observe only — no RNG draws, no training
+/// state — so a live subscriber on the global bus cannot perturb a run.
+#[test]
+fn training_with_a_live_subscriber_is_bit_identical_to_training_without() {
+    let quiet = train_dqn_cartpole();
+    let observed = {
+        let _watch = apdrl::obs::global().subscribe();
+        train_dqn_cartpole()
+    };
+    assert_eq!(bits(&quiet.episode_rewards), bits(&observed.episode_rewards));
+    assert_eq!(bits(&quiet.losses), bits(&observed.losses));
+    assert_eq!(quiet.env_steps, observed.env_steps);
+    assert_eq!(quiet.train_steps, observed.train_steps);
+    assert_eq!(quiet.overflows, observed.overflows);
+    assert_eq!(quiet.scale_transitions, observed.scale_transitions);
+    assert_eq!(quiet.final_loss_scale.to_bits(), observed.final_loss_scale.to_bits());
+}

@@ -226,6 +226,116 @@ fn duplicate_combos_in_one_sweep_request_are_not_replanned() {
     handle.join().unwrap();
 }
 
+/// The protocol-v2 streaming sweep over a raw socket: `"stream":true`
+/// pushes one `progress` line per grid point (each a well-formed ok
+/// response), then the usual `plans[]` line last — and a legacy-style
+/// request without the flag still gets exactly one response line.
+#[test]
+fn streaming_sweep_pushes_progress_lines_then_the_final_plans() {
+    let (addr, handle) = boot(2);
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let line = concat!(
+        r#"{"v":2,"verb":"sweep","combos":["dqn_cartpole","a2c_invpend"],"#,
+        r#""batches":[41],"quantized":true,"stream":true}"#
+    );
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    stream.flush().unwrap();
+    let mut progress = Vec::new();
+    let final_resp = loop {
+        let mut buf = String::new();
+        reader.read_line(&mut buf).unwrap();
+        let resp = Json::parse(buf.trim()).expect("every pushed line must be valid JSON");
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp}");
+        match resp.get("progress") {
+            Some(p) => progress.push(p.clone()),
+            None => break resp,
+        }
+    };
+    assert_eq!(progress.len(), 2, "one progress line per grid point");
+    for p in &progress {
+        assert_eq!(p.get("total").and_then(Json::as_usize), Some(2));
+        assert!(p.get("combo").and_then(Json::as_str).is_some());
+        assert!(p.get("done").and_then(Json::as_usize).is_some());
+        assert!(p.get("solve_us").is_some());
+    }
+    assert!(
+        progress.iter().any(|p| p.get("done").and_then(Json::as_usize) == Some(2)),
+        "the last progress line must report the full count"
+    );
+    let plans = final_resp.get("plans").and_then(Json::as_arr).unwrap();
+    assert_eq!(plans.len(), 2, "final line carries the whole grid");
+    drop(reader);
+    drop(stream);
+    RemotePlanner::connect(&addr).unwrap().shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+/// Client-level streaming: `sweep_stream` fires the progress callback
+/// once per grid point and returns plans bit-identical to the plain
+/// (non-streaming) sweep of the same grid.
+#[test]
+fn sweep_stream_reports_every_point_and_matches_the_plain_sweep() {
+    let (addr, handle) = boot(2);
+    let client = RemotePlanner::connect(&addr).unwrap();
+    let combos = vec!["ddpg_mntncar".to_string(), "dqn_cartpole".to_string()];
+    let batches = [45usize, 61];
+    let mut seen = Vec::new();
+    let streamed = client
+        .sweep_stream(&combos, &batches, true, &mut |p| {
+            seen.push((
+                p.get("combo").and_then(Json::as_str).unwrap_or("?").to_string(),
+                p.get("done").and_then(Json::as_usize).unwrap_or(0),
+            ));
+        })
+        .unwrap();
+    assert_eq!(seen.len(), combos.len() * batches.len(), "one callback per point");
+    assert_eq!(seen.iter().map(|(_, d)| *d).max(), Some(seen.len()));
+    let plain = client.sweep(&combos, &batches, true).unwrap();
+    assert_eq!(streamed.len(), plain.len());
+    for (s, p) in streamed.iter().zip(&plain) {
+        assert_eq!(s.combo, p.combo);
+        assert_eq!(s.batch, p.batch);
+        assert_eq!(s.makespan_us.to_bits(), p.makespan_us.to_bits());
+    }
+    client.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+/// The `profile` verb exposes the DSE candidate tables over the wire:
+/// per node, the PS latency and every PL/AIE (format, latency, resource)
+/// candidate the ILP chooses from.
+#[test]
+fn profile_verb_serves_the_dse_candidate_table() {
+    let (addr, handle) = boot(2);
+    let client = RemotePlanner::connect(&addr).unwrap();
+    let payload = client.profile("dqn_cartpole", 32, true).unwrap();
+    assert_eq!(payload.get("combo").and_then(Json::as_str), Some("dqn_cartpole"));
+    assert_eq!(payload.get("batch").and_then(Json::as_usize), Some(32));
+    let nodes = payload.get("nodes").and_then(Json::as_arr).expect("nodes array");
+    assert!(!nodes.is_empty(), "a real graph has nodes");
+    for n in nodes {
+        assert!(n.get("name").and_then(Json::as_str).is_some());
+        assert!(n.get("ps_latency_us").and_then(Json::as_f64).is_some());
+        let pl = n.get("pl").and_then(Json::as_arr).expect("pl candidates");
+        assert!(!pl.is_empty(), "every node has at least one PL candidate");
+        for cand in pl {
+            assert!(cand.get("fmt").and_then(Json::as_str).is_some());
+            assert!(cand.get("latency_us").and_then(Json::as_f64).unwrap() > 0.0);
+        }
+    }
+    // Unknown combos are a clean protocol error, not a dead daemon.
+    assert!(client.profile("dqn_tetris", 32, true).is_err());
+    let stats = client.stats().unwrap();
+    assert!(
+        stats.get("latency_us").and_then(|l| l.get("profile")).is_some(),
+        "per-verb latency must cover the profile verb: {stats}"
+    );
+    client.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
 /// FP32 vs quantized travel the wire as distinct plans, and the remote
 /// side sees the same precision-dependent formats the local one does.
 #[test]

@@ -326,6 +326,10 @@ fn scalar_reference_run(
 /// and final scale must all match the scalar reference loop exactly.
 #[test]
 fn actors_1_is_bit_identical_to_the_scalar_path_dqn() {
+    // A live observability subscriber on the global bus must not perturb
+    // the run: events only observe (no RNG, no training state), so the
+    // bit-identity below holds with the bus hot.
+    let _watch = apdrl::obs::global().subscribe();
     let c = combo("dqn_cartpole");
     let plan = LocalPlanner
         .plan(&PlanRequest::new(c.clone(), c.batch, true))
