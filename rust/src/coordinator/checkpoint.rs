@@ -1,0 +1,184 @@
+//! Training checkpoints (protocol v3's hand-off currency): the complete
+//! bit-exact state of a mid-run training job, serialized through
+//! [`crate::util::json`].
+//!
+//! A checkpoint captures four layers, all with raw-bit float encoding so
+//! a restore continues the *identical* trajectory (asserted per-combo in
+//! `tests/train.rs`):
+//!
+//! 1. **Job identity** — combo, seed, actor count, quantized flag.  A
+//!    resume must rebuild a structurally identical backend before the
+//!    state can be poured back in; mismatches are reported errors.
+//! 2. **Trainer bookkeeping** — [`RunMetrics`] (reward/loss histories,
+//!    FSM transitions, accumulated wall-clock), the last seen loss
+//!    scale, per-lane in-flight episode rewards, and the master RNG.
+//! 3. **Env fleet** — per lane: env dynamics, RNG stream, current obs
+//!    ([`crate::envs::BatchedEnv::save_state`]).
+//! 4. **Agent** — weights + FP32 masters, Adam moments, replay/rollout
+//!    buffers, loss-scale FSM, cadence counters
+//!    ([`crate::drl::Agent::save_state`]).
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::util::json::{hex_f64s, hex_u64, parse_hex_f64s, Json};
+
+use super::metrics::RunMetrics;
+
+/// Format version; bump on incompatible schema changes.
+pub const CHECKPOINT_VERSION: u64 = 1;
+
+/// One resumable training snapshot (see the module docs for layout).
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub combo: String,
+    pub seed: u64,
+    pub actors: usize,
+    /// Whether the run executes a quantized plan (vs the FP32 control) —
+    /// the resuming host must rebuild the same precision routing.
+    pub quantized: bool,
+    /// Metrics accumulated up to the snapshot; `wallclock_s` is the
+    /// wall-clock consumed so far and keeps accumulating across resumes.
+    pub metrics: RunMetrics,
+    /// Loss scale fed to the most recent train step, if any (drives
+    /// transition detection across the resume boundary).
+    pub last_scale: Option<f32>,
+    /// Per-lane in-flight (unfinished-episode) reward accumulators.
+    pub ep_rewards: Vec<f64>,
+    /// Master trainer RNG (exploration + sampling stream).
+    pub rng_state: u64,
+    pub rng_spare: Option<f64>,
+    /// [`crate::envs::BatchedEnv::save_state`] payload.
+    pub fleet: Json,
+    /// [`crate::drl::Agent::save_state`] payload.
+    pub agent: Json,
+}
+
+impl Checkpoint {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("ckpt_version", Json::Num(CHECKPOINT_VERSION as f64)),
+            ("combo", Json::Str(self.combo.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("actors", Json::Num(self.actors as f64)),
+            ("quantized", Json::Bool(self.quantized)),
+            ("metrics", self.metrics.to_json()),
+            ("ep_rewards", Json::Str(hex_f64s(&self.ep_rewards))),
+            ("rng", Json::Str(hex_u64(self.rng_state))),
+            ("fleet", self.fleet.clone()),
+            ("agent", self.agent.clone()),
+        ];
+        if let Some(s) = self.last_scale {
+            pairs.push(("last_scale", Json::Str(crate::util::json::hex_f32s(&[s]))));
+        }
+        if let Some(sp) = self.rng_spare {
+            pairs.push(("rng_spare", Json::Str(hex_f64s(&[sp]))));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Checkpoint> {
+        let version = v.req_u64("ckpt_version")?;
+        ensure!(
+            version == CHECKPOINT_VERSION,
+            "checkpoint version {version} not supported (this build reads {CHECKPOINT_VERSION})"
+        );
+        let last_scale = match v.get("last_scale") {
+            None => None,
+            Some(_) => Some(v.req_f32_bits("last_scale")?),
+        };
+        let rng_spare = match v.get("rng_spare") {
+            None => None,
+            Some(j) => {
+                let s = j.as_str().ok_or_else(|| anyhow!("checkpoint: bad rng_spare"))?;
+                let d = parse_hex_f64s(s)?;
+                ensure!(d.len() == 1, "checkpoint: bad rng_spare length");
+                Some(d[0])
+            }
+        };
+        Ok(Checkpoint {
+            combo: v.req_str("combo")?.to_string(),
+            seed: v.req_u64("seed")?,
+            actors: v.req_u64("actors")? as usize,
+            quantized: v
+                .req("quantized")?
+                .as_bool()
+                .ok_or_else(|| anyhow!("checkpoint: bad quantized flag"))?,
+            metrics: RunMetrics::from_json(v.req("metrics")?)?,
+            last_scale,
+            ep_rewards: parse_hex_f64s(v.req_str("ep_rewards")?)?,
+            rng_state: v.req_u64_hex("rng")?,
+            rng_spare,
+            fleet: v.req("fleet")?.clone(),
+            agent: v.req("agent")?.clone(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            combo: "dqn_cartpole".into(),
+            seed: 7,
+            actors: 2,
+            quantized: true,
+            metrics: RunMetrics {
+                episode_rewards: vec![12.0, 9.5],
+                losses: vec![0.7],
+                env_steps: 42,
+                train_steps: 3,
+                overflows: 1,
+                wallclock_s: 0.25,
+                scale_transitions: vec![(10, 1024.0, 512.0)],
+                final_loss_scale: 512.0,
+            },
+            last_scale: Some(512.0),
+            ep_rewards: vec![3.0, -1.5],
+            rng_state: 0xDEAD_BEEF_0BAD_F00D,
+            rng_spare: Some(-0.125),
+            fleet: Json::Arr(vec![Json::Str("lane".into())]),
+            agent: Json::obj(vec![("k", Json::Num(1.0))]),
+        }
+    }
+
+    #[test]
+    fn round_trips_through_wire_text() {
+        let c = sample();
+        // Through actual serialized text, as the daemon streams it.
+        let line = c.to_json().to_line().unwrap();
+        let r = Checkpoint::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(r.combo, c.combo);
+        assert_eq!(r.seed, c.seed);
+        assert_eq!(r.actors, c.actors);
+        assert_eq!(r.quantized, c.quantized);
+        assert_eq!(r.metrics.env_steps, c.metrics.env_steps);
+        assert_eq!(r.metrics.scale_transitions, c.metrics.scale_transitions);
+        assert_eq!(r.last_scale.unwrap().to_bits(), 512.0f32.to_bits());
+        assert_eq!(r.ep_rewards[1].to_bits(), (-1.5f64).to_bits());
+        assert_eq!(r.rng_state, c.rng_state);
+        assert_eq!(r.rng_spare.unwrap().to_bits(), (-0.125f64).to_bits());
+        assert_eq!(r.fleet, c.fleet);
+        assert_eq!(r.agent, c.agent);
+    }
+
+    #[test]
+    fn optional_fields_default_to_none() {
+        let mut c = sample();
+        c.last_scale = None;
+        c.rng_spare = None;
+        let r = Checkpoint::from_json(&c.to_json()).unwrap();
+        assert!(r.last_scale.is_none());
+        assert!(r.rng_spare.is_none());
+    }
+
+    #[test]
+    fn future_versions_are_rejected() {
+        let mut v = sample().to_json();
+        if let Json::Obj(map) = &mut v {
+            map.insert("ckpt_version".into(), Json::Num(99.0));
+        }
+        assert!(Checkpoint::from_json(&v).is_err());
+    }
+}

@@ -2,6 +2,7 @@
 //! moving average), reward-error computation (Table III) and loss-scale
 //! telemetry.
 
+use crate::util::json::{hex_f32s, hex_f64s, parse_hex_f32s, parse_hex_f64s, Json, JsonError};
 use crate::util::stats;
 
 /// Accumulated telemetry for one training run.
@@ -49,6 +50,62 @@ impl RunMetrics {
         let start = n.saturating_sub(tail);
         stats::mean(&self.episode_rewards[start..])
     }
+
+    /// Serialize bit-exactly for checkpoints: reward/loss histories as
+    /// hex f64 bits, scale transitions with their f32 bits, counters as
+    /// plain numbers (shortest-round-trip f64 is exact for u64 < 2^53).
+    pub fn to_json(&self) -> Json {
+        let transitions = self
+            .scale_transitions
+            .iter()
+            .map(|(step, from, to)| {
+                Json::obj(vec![
+                    ("step", Json::Num(*step as f64)),
+                    ("scales", Json::Str(hex_f32s(&[*from, *to]))),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("episode_rewards", Json::Str(hex_f64s(&self.episode_rewards))),
+            ("losses", Json::Str(hex_f64s(&self.losses))),
+            ("env_steps", Json::Num(self.env_steps as f64)),
+            ("train_steps", Json::Num(self.train_steps as f64)),
+            ("overflows", Json::Num(self.overflows as f64)),
+            ("wallclock_s", Json::Str(hex_f64s(&[self.wallclock_s]))),
+            ("scale_transitions", Json::Arr(transitions)),
+            ("final_loss_scale", Json::Str(hex_f32s(&[self.final_loss_scale]))),
+        ])
+    }
+
+    /// Rebuild metrics from a [`RunMetrics::to_json`] snapshot.
+    pub fn from_json(v: &Json) -> Result<RunMetrics, JsonError> {
+        let bad = |msg: &str| JsonError { msg: msg.into(), pos: 0 };
+        let scale_transitions = v
+            .req_arr("scale_transitions")?
+            .iter()
+            .map(|t| {
+                let scales = parse_hex_f32s(t.req_str("scales")?)?;
+                if scales.len() != 2 {
+                    return Err(bad("metrics: bad scale transition"));
+                }
+                Ok((t.req_u64("step")?, scales[0], scales[1]))
+            })
+            .collect::<Result<Vec<_>, JsonError>>()?;
+        let wallclock = parse_hex_f64s(v.req_str("wallclock_s")?)?;
+        if wallclock.len() != 1 {
+            return Err(bad("metrics: bad wallclock"));
+        }
+        Ok(RunMetrics {
+            episode_rewards: parse_hex_f64s(v.req_str("episode_rewards")?)?,
+            losses: parse_hex_f64s(v.req_str("losses")?)?,
+            env_steps: v.req_u64("env_steps")?,
+            train_steps: v.req_u64("train_steps")?,
+            overflows: v.req_u64("overflows")?,
+            wallclock_s: wallclock[0],
+            scale_transitions,
+            final_loss_scale: v.req_f32_bits("final_loss_scale")?,
+        })
+    }
 }
 
 /// Table III reward error (%): |quantized − fp32| / |fp32| over converged
@@ -87,6 +144,33 @@ mod tests {
     fn reward_error_pct_basic() {
         assert!((reward_error_pct(&[100.0], &[98.0]) - 2.0).abs() < 1e-9);
         assert!((reward_error_pct(&[100.0, 100.0], &[101.0, 101.0]) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_round_trip_is_bit_exact() {
+        let m = RunMetrics {
+            episode_rewards: vec![1.5, -2.25, 0.1],
+            losses: vec![0.33, 0.31],
+            env_steps: 1234,
+            train_steps: 567,
+            overflows: 2,
+            wallclock_s: 3.125,
+            scale_transitions: vec![(100, 1024.0, 512.0), (200, 512.0, 1024.0)],
+            final_loss_scale: 1024.0,
+        };
+        let r = RunMetrics::from_json(&m.to_json()).unwrap();
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+        assert_eq!(bits(&r.episode_rewards), bits(&m.episode_rewards));
+        assert_eq!(bits(&r.losses), bits(&m.losses));
+        assert_eq!(r.env_steps, m.env_steps);
+        assert_eq!(r.train_steps, m.train_steps);
+        assert_eq!(r.overflows, m.overflows);
+        assert_eq!(r.wallclock_s.to_bits(), m.wallclock_s.to_bits());
+        assert_eq!(r.scale_transitions, m.scale_transitions);
+        assert_eq!(r.final_loss_scale.to_bits(), m.final_loss_scale.to_bits());
+        // Empty metrics round-trip too (fresh-run checkpoint at step 0).
+        let e = RunMetrics::from_json(&RunMetrics::default().to_json()).unwrap();
+        assert!(e.episode_rewards.is_empty() && e.losses.is_empty());
     }
 
     #[test]

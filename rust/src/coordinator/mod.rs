@@ -7,6 +7,7 @@
 //! baseline timing models (AIE-only, FIXAR) and report emission.
 
 pub mod baselines;
+pub mod checkpoint;
 pub mod config;
 pub mod metrics;
 pub mod pipeline;
@@ -14,9 +15,12 @@ pub mod planner;
 pub mod report;
 pub mod trainer;
 
+pub use checkpoint::{Checkpoint, CHECKPOINT_VERSION};
 pub use config::{combo, try_combo, ComboConfig, COMBO_NAMES};
 pub use pipeline::{
     plan_sweep, plan_sweep_grid, plan_sweep_progress, static_phase, StaticPlan, SweepPoint,
 };
 pub use planner::{LocalPlanner, PlanOutcome, PlanRequest, PlanStep, Planner, Provenance};
-pub use trainer::{train_combo, train_combo_actors, TrainLimits, TrainResult};
+pub use trainer::{
+    train_combo, train_combo_actors, train_combo_job, JobOptions, TrainLimits, TrainResult,
+};

@@ -11,16 +11,19 @@
 //! path — same RNG stream, same rewards, same loss-scale FSM
 //! transitions, same final weights (proved in `tests/train.rs`).
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
+use crate::drl::Agent;
 use crate::envs::{lane_rngs, BatchedEnv, Env};
 use crate::exec::{Backend, Pool};
 use crate::obs;
 use crate::util::json::Json;
 use crate::util::Rng;
 
+use super::checkpoint::Checkpoint;
 use super::config::ComboConfig;
 use super::metrics::RunMetrics;
 
@@ -53,6 +56,80 @@ pub struct TrainResult {
     /// path.
     pub actors: usize,
     pub seed: u64,
+    /// True when a [`JobOptions::cancel`] flag stopped the run before
+    /// its limits — the metrics cover the completed prefix.
+    pub cancelled: bool,
+}
+
+/// Per-job hooks for [`train_combo_job`] — streaming frame sink,
+/// cooperative cancel, checkpoint cadence and resume payload.
+/// `Default` is the plain local run: no frames, no checkpoints, never
+/// cancelled — bit-identical to the historical loop.
+#[derive(Default)]
+pub struct JobOptions<'a> {
+    /// Job id tagged onto every `train.*` obs event and streamed frame;
+    /// non-scheduled runs default to `local/<combo>/<seed>`.
+    pub job_id: Option<String>,
+    /// Cooperative cancellation/drain flag, checked once per round; when
+    /// set the loop stops at the next round boundary and (with a sink
+    /// attached) emits a final checkpoint frame for hand-off.
+    pub cancel: Option<&'a AtomicBool>,
+    /// Env steps between checkpoint frames (0 disables periodic
+    /// checkpoints; a final one is still emitted when a sink is
+    /// attached and this is non-zero).
+    pub checkpoint_every: u64,
+    /// Env steps between progress frames (0 disables them).
+    pub progress_every: u64,
+    /// Streaming sink: called in-loop with JSON frames
+    /// (`episode` / `scale` / `progress` / `checkpoint`).
+    pub sink: Option<&'a mut dyn FnMut(&Json)>,
+    /// Snapshot to resume from (validated against combo/seed/actors).
+    pub resume: Option<&'a Checkpoint>,
+    /// Precision identity stamped into emitted checkpoints so the
+    /// resuming host rebuilds the same routing.
+    pub quantized: bool,
+}
+
+/// Assemble a [`Checkpoint`] from the live loop state at a round
+/// boundary (every float captured by raw bits).
+#[allow(clippy::too_many_arguments)]
+fn snapshot(
+    combo: &ComboConfig,
+    seed: u64,
+    actors: usize,
+    quantized: bool,
+    agent: &dyn Agent,
+    fleet: &BatchedEnv,
+    rng: &Rng,
+    metrics: &RunMetrics,
+    last_scale: Option<f32>,
+    ep_rewards: &[f64],
+    wallclock_s: f64,
+) -> Result<Checkpoint> {
+    let (rng_state, rng_spare) = rng.state_parts();
+    let mut m = metrics.clone();
+    m.train_steps = agent.train_steps();
+    m.wallclock_s = wallclock_s;
+    Ok(Checkpoint {
+        combo: combo.name.to_string(),
+        seed,
+        actors,
+        quantized,
+        metrics: m,
+        last_scale,
+        ep_rewards: ep_rewards.to_vec(),
+        rng_state,
+        rng_spare,
+        fleet: fleet.save_state(),
+        agent: agent.save_state()?,
+    })
+}
+
+/// Push one frame into the optional sink.
+fn emit(sink: &mut Option<&mut dyn FnMut(&Json)>, frame: Json) {
+    if let Some(s) = sink {
+        s(&frame);
+    }
 }
 
 /// Render a `train.episode` event as the verbose progress line.  Kept
@@ -95,6 +172,22 @@ pub fn train_combo_actors(
     actors: usize,
     verbose: bool,
 ) -> Result<TrainResult> {
+    train_combo_job(backend, combo, seed, limits, actors, verbose, JobOptions::default())
+}
+
+/// [`train_combo_actors`] with job hooks: streaming frames, cooperative
+/// cancel, periodic bit-exact checkpoints and checkpoint resume.  With
+/// default [`JobOptions`] this *is* `train_combo_actors` — same RNG
+/// stream, same rewards, same FSM transitions, same final weights.
+pub fn train_combo_job(
+    backend: &mut dyn Backend,
+    combo: &ComboConfig,
+    seed: u64,
+    limits: TrainLimits,
+    actors: usize,
+    verbose: bool,
+    mut opts: JobOptions<'_>,
+) -> Result<TrainResult> {
     ensure!(actors >= 1, "--actors must be at least 1");
     let t0 = Instant::now();
     let mut agent = backend.make_agent(combo, seed)?;
@@ -128,9 +221,97 @@ pub fn train_combo_actors(
     let mut rew_f32 = vec![0.0f32; actors];
     let mut ep_rewards = vec![0.0f64; actors];
     let mut stats_buf = Vec::new();
+    let job = opts.job_id.clone().unwrap_or_else(|| format!("local/{}/{seed}", combo.name));
+
+    // Wall-clock accumulated by earlier segments of a resumed job.
+    let mut wallclock_base = 0.0;
+    if let Some(ckpt) = opts.resume {
+        ensure!(
+            ckpt.combo == combo.name,
+            "checkpoint is for combo {}, job runs {}",
+            ckpt.combo,
+            combo.name
+        );
+        ensure!(
+            ckpt.seed == seed && ckpt.actors == actors,
+            "checkpoint seed/actors {}/{} disagree with the job's {seed}/{actors}",
+            ckpt.seed,
+            ckpt.actors
+        );
+        ensure!(
+            ckpt.ep_rewards.len() == actors,
+            "checkpoint carries {} lane accumulators for {actors} lanes",
+            ckpt.ep_rewards.len()
+        );
+        agent.restore_state(&ckpt.agent)?;
+        fleet.restore_state(&ckpt.fleet)?;
+        rng = Rng::from_parts(ckpt.rng_state, ckpt.rng_spare);
+        metrics = ckpt.metrics.clone();
+        wallclock_base = metrics.wallclock_s;
+        metrics.wallclock_s = 0.0;
+        last_scale = ckpt.last_scale;
+        ep_rewards.copy_from_slice(&ckpt.ep_rewards);
+    }
+
+    let cadence_after = |steps: u64, every: u64| {
+        if every > 0 {
+            (steps / every + 1) * every
+        } else {
+            u64::MAX
+        }
+    };
+    let mut next_ckpt = cadence_after(metrics.env_steps, opts.checkpoint_every);
+    let mut next_progress = cadence_after(metrics.env_steps, opts.progress_every);
+    let mut cancelled = false;
     while metrics.env_steps < limits.max_env_steps
         && metrics.episode_rewards.len() < limits.max_episodes
     {
+        if opts.cancel.map(|c| c.load(Ordering::Relaxed)).unwrap_or(false) {
+            cancelled = true;
+            break;
+        }
+        // Round boundaries are the only legal snapshot points: the
+        // agents' act caches are drained and all transition buffers
+        // consumed, so the checkpoint closes over complete state.
+        if metrics.env_steps >= next_ckpt {
+            next_ckpt = cadence_after(metrics.env_steps, opts.checkpoint_every);
+            let ckpt = snapshot(
+                combo,
+                seed,
+                actors,
+                opts.quantized,
+                agent.as_ref(),
+                &fleet,
+                &rng,
+                &metrics,
+                last_scale,
+                &ep_rewards,
+                wallclock_base + t0.elapsed().as_secs_f64(),
+            )?;
+            emit(
+                &mut opts.sink,
+                Json::obj(vec![
+                    ("frame", Json::Str("checkpoint".into())),
+                    ("job", Json::Str(job.clone())),
+                    ("env_steps", Json::Num(metrics.env_steps as f64)),
+                    ("data", ckpt.to_json()),
+                ]),
+            );
+        }
+        if metrics.env_steps >= next_progress {
+            next_progress = cadence_after(metrics.env_steps, opts.progress_every);
+            emit(
+                &mut opts.sink,
+                Json::obj(vec![
+                    ("frame", Json::Str("progress".into())),
+                    ("job", Json::Str(job.clone())),
+                    ("env_steps", Json::Num(metrics.env_steps as f64)),
+                    ("episodes", Json::Num(metrics.episode_rewards.len() as f64)),
+                    ("train_steps", Json::Num(agent.train_steps() as f64)),
+                    ("reward_avg25", Json::Num(metrics.converged_reward(25))),
+                ]),
+            );
+        }
         // All of this round's train steps log against the pre-round env
         // step count — at `actors == 1` that is exactly the scalar
         // path's pre-increment recording.
@@ -164,6 +345,7 @@ pub fn train_combo_actors(
                         obs::publish(
                             obs::Event::new("train.scale")
                                 .tag("combo", combo.name)
+                                .tag("job", &job)
                                 .num("seed", seed as f64)
                                 .num("step", step_at as f64)
                                 .num("from", prev as f64)
@@ -171,6 +353,16 @@ pub fn train_combo_actors(
                                 .flag("overflow", stats.loss_scale < prev),
                         );
                     }
+                    emit(
+                        &mut opts.sink,
+                        Json::obj(vec![
+                            ("frame", Json::Str("scale".into())),
+                            ("job", Json::Str(job.clone())),
+                            ("step", Json::Num(step_at as f64)),
+                            ("from", Json::Num(f64::from(prev))),
+                            ("to", Json::Num(f64::from(stats.loss_scale))),
+                        ]),
+                    );
                 }
             }
             last_scale = Some(stats.loss_scale);
@@ -181,14 +373,15 @@ pub fn train_combo_actors(
             metrics.env_steps += 1;
             if fleet.dones()[l] {
                 metrics.episode_rewards.push(ep_rewards[l]);
+                let n = metrics.episode_rewards.len();
                 // Verbose lines are a *rendering* of the same event the
                 // bus carries, so `--actors N` logs name their lane and
                 // can never disagree with what a dashboard shows.  The
                 // quiet, unobserved path pays one atomic load here.
                 if verbose || obs::active() {
-                    let n = metrics.episode_rewards.len();
                     let event = obs::Event::new("train.episode")
                         .tag("combo", combo.name)
+                        .tag("job", &job)
                         .num("seed", seed as f64)
                         .num("lane", l as f64)
                         .num("episode", n as f64)
@@ -205,24 +398,64 @@ pub fn train_combo_actors(
                     }
                     obs::publish(event);
                 }
+                emit(
+                    &mut opts.sink,
+                    Json::obj(vec![
+                        ("frame", Json::Str("episode".into())),
+                        ("job", Json::Str(job.clone())),
+                        ("lane", Json::Num(l as f64)),
+                        ("episode", Json::Num(n as f64)),
+                        ("reward", Json::Num(ep_rewards[l])),
+                        ("env_steps", Json::Num(metrics.env_steps as f64)),
+                    ]),
+                );
                 ep_rewards[l] = 0.0;
             }
         }
     }
     metrics.train_steps = agent.train_steps();
-    metrics.wallclock_s = t0.elapsed().as_secs_f64();
+    metrics.wallclock_s = wallclock_base + t0.elapsed().as_secs_f64();
+    // Final checkpoint frame: a drain (cancel) hands the job off from
+    // here; a natural finish leaves a resume-to-extend point.
+    if opts.sink.is_some() && opts.checkpoint_every > 0 {
+        let ckpt = snapshot(
+            combo,
+            seed,
+            actors,
+            opts.quantized,
+            agent.as_ref(),
+            &fleet,
+            &rng,
+            &metrics,
+            last_scale,
+            &ep_rewards,
+            metrics.wallclock_s,
+        )?;
+        emit(
+            &mut opts.sink,
+            Json::obj(vec![
+                ("frame", Json::Str("checkpoint".into())),
+                ("job", Json::Str(job.clone())),
+                ("env_steps", Json::Num(metrics.env_steps as f64)),
+                ("final", Json::Bool(true)),
+                ("data", ckpt.to_json()),
+            ]),
+        );
+    }
     if obs::active() {
         obs::publish(
             obs::Event::new("train.done")
                 .tag("combo", combo.name)
                 .tag("backend", &backend.describe())
+                .tag("job", &job)
                 .num("seed", seed as f64)
                 .num("actors", actors as f64)
                 .num("episodes", metrics.episode_rewards.len() as f64)
                 .num("env_steps", metrics.env_steps as f64)
                 .num("train_steps", metrics.train_steps as f64)
                 .num("overflows", metrics.overflows as f64)
-                .num("steps_per_sec", metrics.env_steps_per_sec()),
+                .num("steps_per_sec", metrics.env_steps_per_sec())
+                .flag("cancelled", cancelled),
         );
     }
     Ok(TrainResult {
@@ -232,5 +465,6 @@ pub fn train_combo_actors(
         threads: backend.threads(),
         actors,
         seed,
+        cancelled,
     })
 }

@@ -2,11 +2,12 @@
 //! jointly from fixed-horizon GAE rollouts.  Network math is delegated
 //! to an [`A2cCompute`] backend (CPU executor or PJRT artifacts).
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::envs::Action;
 use crate::exec::ExecPolicy;
 use crate::quant::LossScaler;
+use crate::util::json::Json;
 use crate::util::Rng;
 
 use super::agent::{Agent, StepStats};
@@ -173,5 +174,24 @@ impl<C: A2cCompute> Agent for A2cAgent<C> {
 
     fn exec_policy(&self) -> Option<&ExecPolicy> {
         self.compute.exec_policy()
+    }
+
+    fn save_state(&self) -> Result<Json> {
+        ensure!(self.last.is_none(), "A2C agent cannot snapshot between act and observe");
+        Ok(Json::obj(vec![
+            ("compute", self.compute.save_state()?),
+            ("rollout", self.rollout.to_json()),
+            ("scaler", self.scaler.to_json()),
+            ("train_steps", Json::Num(self.train_steps as f64)),
+        ]))
+    }
+
+    fn restore_state(&mut self, state: &Json) -> Result<()> {
+        self.compute.restore_state(state.req("compute")?)?;
+        self.rollout = RolloutBuffer::from_json(state.req("rollout")?)?;
+        self.scaler = LossScaler::from_json(state.req("scaler")?)?;
+        self.train_steps = state.req_u64("train_steps")?;
+        self.last = None;
+        Ok(())
     }
 }

@@ -1,9 +1,10 @@
 //! Common agent interface driven by the coordinator's env loop.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::envs::Action;
 use crate::exec::ExecPolicy;
+use crate::util::json::Json;
 use crate::util::Rng;
 
 /// Telemetry from one executed train step.
@@ -57,5 +58,21 @@ pub trait Agent {
     /// formats are baked into lowered artifacts (PJRT).
     fn exec_policy(&self) -> Option<&ExecPolicy> {
         None
+    }
+
+    /// Bit-exact snapshot of the agent's full learning state — compute
+    /// backend (weights, masters, optimizer moments), experience
+    /// buffers, loss-scale FSM and cadence counters.  Must be taken at
+    /// a round boundary (after `observe`, before the next `act`).
+    /// Defaults to an error for agents whose backend cannot export its
+    /// parameters (PJRT artifacts).
+    fn save_state(&self) -> Result<Json> {
+        bail!("this agent does not support checkpointing")
+    }
+
+    /// Restore an [`Agent::save_state`] snapshot into a structurally
+    /// identical agent (same combo, exec policy and config).
+    fn restore_state(&mut self, _state: &Json) -> Result<()> {
+        bail!("this agent does not support checkpointing")
     }
 }

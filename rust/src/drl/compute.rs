@@ -14,9 +14,10 @@
 //! receives the batch plus the FSM's current loss scale and reports the
 //! (unscaled) loss and the overflow flag the FSM consumes.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::exec::ExecPolicy;
+use crate::util::json::Json;
 
 use super::replay::Batch;
 use super::rollout::RolloutBatch;
@@ -37,6 +38,19 @@ pub trait ComputeBackend {
     /// baked into the lowered computation and return `None`.
     fn exec_policy(&self) -> Option<&ExecPolicy> {
         None
+    }
+
+    /// Serialize all learnable state — weights, masters, optimizer
+    /// moments — bit-exactly for checkpoints.  Backends that cannot
+    /// export their parameters (PJRT artifacts) keep the default error.
+    fn save_state(&self) -> Result<Json> {
+        bail!("this compute backend does not support checkpointing")
+    }
+
+    /// Restore state saved by [`ComputeBackend::save_state`] into a
+    /// structurally identical backend (same combo + policy).
+    fn restore_state(&mut self, _state: &Json) -> Result<()> {
+        bail!("this compute backend does not support checkpointing")
     }
 }
 

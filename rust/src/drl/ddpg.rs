@@ -2,11 +2,12 @@
 //! soft updates (inside the compute backend), OU exploration noise here
 //! at the coordination layer.
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::envs::Action;
 use crate::exec::ExecPolicy;
 use crate::quant::LossScaler;
+use crate::util::json::{hex_f64s, parse_hex_f64s, Json};
 use crate::util::Rng;
 
 use super::agent::{Agent, StepStats};
@@ -158,5 +159,43 @@ impl<C: DdpgCompute> Agent for DdpgAgent<C> {
 
     fn exec_policy(&self) -> Option<&ExecPolicy> {
         self.compute.exec_policy()
+    }
+
+    fn save_state(&self) -> Result<Json> {
+        let ou = self.ou_states.iter().map(|s| Json::Str(hex_f64s(s))).collect();
+        Ok(Json::obj(vec![
+            ("compute", self.compute.save_state()?),
+            ("replay", self.replay.to_json()),
+            ("scaler", self.scaler.to_json()),
+            ("ou", Json::Arr(ou)),
+            ("env_steps", Json::Num(self.env_steps as f64)),
+            ("obs_steps", Json::Num(self.obs_steps as f64)),
+            ("train_steps", Json::Num(self.train_steps as f64)),
+        ]))
+    }
+
+    fn restore_state(&mut self, state: &Json) -> Result<()> {
+        self.compute.restore_state(state.req("compute")?)?;
+        self.replay = ReplayBuffer::from_json(state.req("replay")?)?;
+        self.scaler = LossScaler::from_json(state.req("scaler")?)?;
+        let ou = state
+            .req_arr("ou")?
+            .iter()
+            .map(|e| {
+                let s =
+                    e.as_str().ok_or_else(|| anyhow::anyhow!("ddpg state: bad OU entry"))?;
+                Ok(parse_hex_f64s(s)?)
+            })
+            .collect::<Result<Vec<Vec<f64>>>>()?;
+        ensure!(!ou.is_empty(), "ddpg state: OU lanes missing");
+        ensure!(
+            ou.iter().all(|s| s.len() == self.cfg.act_dim),
+            "ddpg state: OU dimension mismatch"
+        );
+        self.ou_states = ou;
+        self.env_steps = state.req_u64("env_steps")?;
+        self.obs_steps = state.req_u64("obs_steps")?;
+        self.train_steps = state.req_u64("train_steps")?;
+        Ok(())
     }
 }

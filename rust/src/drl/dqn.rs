@@ -10,6 +10,7 @@ use anyhow::Result;
 use crate::envs::Action;
 use crate::exec::ExecPolicy;
 use crate::quant::LossScaler;
+use crate::util::json::Json;
 use crate::util::Rng;
 
 use super::agent::{Agent, StepStats};
@@ -172,5 +173,26 @@ impl<C: DqnCompute> Agent for DqnAgent<C> {
 
     fn exec_policy(&self) -> Option<&ExecPolicy> {
         self.compute.exec_policy()
+    }
+
+    fn save_state(&self) -> Result<Json> {
+        Ok(Json::obj(vec![
+            ("compute", self.compute.save_state()?),
+            ("replay", self.replay.to_json()),
+            ("scaler", self.scaler.to_json()),
+            ("env_steps", Json::Num(self.env_steps as f64)),
+            ("obs_steps", Json::Num(self.obs_steps as f64)),
+            ("train_steps", Json::Num(self.train_steps as f64)),
+        ]))
+    }
+
+    fn restore_state(&mut self, state: &Json) -> Result<()> {
+        self.compute.restore_state(state.req("compute")?)?;
+        self.replay = ReplayBuffer::from_json(state.req("replay")?)?;
+        self.scaler = LossScaler::from_json(state.req("scaler")?)?;
+        self.env_steps = state.req_u64("env_steps")?;
+        self.obs_steps = state.req_u64("obs_steps")?;
+        self.train_steps = state.req_u64("train_steps")?;
+        Ok(())
     }
 }

@@ -11,6 +11,8 @@
 //! the stride is 1, so the arithmetic (and hence every bit of the
 //! output) is identical to the scalar recursion it replaced.
 
+use crate::util::json::{hex_f32s, hex_f64s, parse_hex_f32s, parse_hex_f64s, Json, JsonError};
+
 /// One on-policy step record.
 #[derive(Clone, Debug)]
 pub struct RolloutStep {
@@ -81,6 +83,53 @@ impl RolloutBuffer {
 
     pub fn is_empty(&self) -> bool {
         self.steps.is_empty()
+    }
+
+    /// Serialize the partially-filled rollout bit-exactly — a checkpoint
+    /// can land mid-horizon, and the restored buffer must finish the
+    /// rollout with identical GAE output.
+    pub fn to_json(&self) -> Json {
+        let step_json = |s: &RolloutStep| {
+            Json::obj(vec![
+                ("obs", Json::Str(hex_f32s(&s.obs))),
+                ("action_i", Json::Num(f64::from(s.action_i))),
+                ("action_c", Json::Str(hex_f32s(&s.action_c))),
+                ("lvr", Json::Str(hex_f32s(&[s.logp, s.value, s.reward]))),
+                ("done", Json::Bool(s.done)),
+            ])
+        };
+        Json::obj(vec![
+            ("horizon", Json::Num(self.horizon as f64)),
+            ("lanes", Json::Num(self.lanes as f64)),
+            ("gl", Json::Str(hex_f64s(&[self.gamma, self.lambda]))),
+            ("steps", Json::Arr(self.steps.iter().map(step_json).collect())),
+        ])
+    }
+
+    /// Rebuild a buffer from a [`RolloutBuffer::to_json`] snapshot.
+    pub fn from_json(v: &Json) -> Result<RolloutBuffer, JsonError> {
+        let gl = parse_hex_f64s(v.req_str("gl")?)?;
+        if gl.len() != 2 {
+            return Err(JsonError { msg: "rollout: bad gamma/lambda".into(), pos: 0 });
+        }
+        let mut rb = RolloutBuffer::new(v.req_u64("horizon")? as usize, gl[0], gl[1]);
+        rb.lanes = v.req_u64("lanes")?.max(1) as usize;
+        for s in v.req_arr("steps")? {
+            let lvr = parse_hex_f32s(s.req_str("lvr")?)?;
+            if lvr.len() != 3 {
+                return Err(JsonError { msg: "rollout: bad step scalars".into(), pos: 0 });
+            }
+            rb.steps.push(RolloutStep {
+                obs: parse_hex_f32s(s.req_str("obs")?)?,
+                action_i: s.req_f64("action_i")? as i32,
+                action_c: parse_hex_f32s(s.req_str("action_c")?)?,
+                logp: lvr[0],
+                value: lvr[1],
+                reward: lvr[2],
+                done: s.req("done")?.as_bool().unwrap_or(false),
+            });
+        }
+        Ok(rb)
     }
 
     /// Compute GAE advantages + returns and drain the buffer.
@@ -244,6 +293,37 @@ mod tests {
                 assert_eq!(b.obs[i], i as f32, "push-order layout");
             }
         }
+    }
+
+    #[test]
+    fn json_round_trip_mid_horizon_finishes_identically() {
+        let mut rb = RolloutBuffer::new(3, 0.99, 0.95);
+        rb.ensure_lanes(2);
+        for t in 0..4 {
+            // two of three rounds pushed: checkpoint lands mid-horizon
+            let mut s = step(0.3 * t as f32, 0.1 * t as f32, t == 1);
+            s.obs = vec![t as f32, -1.0];
+            s.logp = -0.25 * t as f32;
+            rb.push(s);
+        }
+        let mut restored = RolloutBuffer::from_json(&rb.to_json()).unwrap();
+        assert_eq!(restored.lanes(), 2);
+        assert!(!restored.full());
+        for b in [&mut rb, &mut restored] {
+            b.push(step(1.0, 0.5, false));
+            b.push(step(2.0, 0.6, false));
+        }
+        let a = rb.finish(&[0.7, 0.8], true);
+        let b = restored.finish(&[0.7, 0.8], true);
+        assert_eq!(a.size, b.size);
+        for (x, y) in a.advantages.iter().zip(&b.advantages) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (x, y) in a.returns.iter().zip(&b.returns) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(a.logp_old, b.logp_old);
+        assert_eq!(a.obs, b.obs);
     }
 
     #[test]

@@ -12,11 +12,33 @@
 //!   reward +1 per pellet, -100 on capture, 9 actions (8 directions +
 //!   stay) like MsPacman's |A| = 9.
 
+use anyhow::{ensure, Result};
+
+use crate::util::json::{hex_f32s, hex_f64s, parse_hex_f32s, parse_hex_f64s, Json};
 use crate::util::Rng;
 
-use super::{Action, Env, Transition};
+use super::{bits_to_bools, bools_to_bits, Action, Env, Transition};
 
 const FRAMES: usize = 4;
+
+/// Serialize a frame stack as an array of per-frame hex strings.
+fn stack_to_json(stack: &[Vec<f32>]) -> Json {
+    Json::Arr(stack.iter().map(|f| Json::Str(hex_f32s(f))).collect())
+}
+
+/// Restore a frame stack saved by [`stack_to_json`], validating shape.
+fn stack_from_json(v: &Json, frame_len: usize) -> Result<Vec<Vec<f32>>> {
+    let arr = v.as_arr().ok_or_else(|| anyhow::anyhow!("frame stack: expected array"))?;
+    ensure!(arr.len() == FRAMES, "frame stack: expected {FRAMES} frames, got {}", arr.len());
+    arr.iter()
+        .map(|f| {
+            let s = f.as_str().ok_or_else(|| anyhow::anyhow!("frame stack: bad frame"))?;
+            let frame = parse_hex_f32s(s)?;
+            ensure!(frame.len() == frame_len, "frame stack: bad frame length");
+            Ok(frame)
+        })
+        .collect()
+}
 
 fn push_frame(stack: &mut Vec<Vec<f32>>, frame: Vec<f32>) {
     stack.remove(0);
@@ -186,6 +208,35 @@ impl Env for MiniBreakout {
         let done = lost || cleared || self.steps >= self.max_steps();
         Transition { obs: stacked_obs(&self.stack), reward, done }
     }
+
+    fn save_state(&self) -> Json {
+        Json::obj(vec![
+            ("size", Json::Num(self.size as f64)),
+            ("paddle", Json::Num(f64::from(self.paddle))),
+            ("ball", Json::Str(hex_f64s(&[self.ball.0, self.ball.1, self.vel.0, self.vel.1]))),
+            ("bricks", Json::Str(bools_to_bits(&self.bricks))),
+            ("stack", stack_to_json(&self.stack)),
+            ("steps", Json::Num(self.steps as f64)),
+        ])
+    }
+
+    fn restore_state(&mut self, state: &Json) -> Result<()> {
+        ensure!(
+            state.req_u64("size")? as usize == self.size,
+            "breakout state: board size mismatch"
+        );
+        let b = parse_hex_f64s(state.req_str("ball")?)?;
+        ensure!(b.len() == 4, "breakout state: expected 4 ball values, got {}", b.len());
+        let bricks = bits_to_bools(state.req_str("bricks")?)?;
+        ensure!(bricks.len() == self.brick_rows * self.size, "breakout state: brick count");
+        self.paddle = state.req_u64("paddle")? as i32;
+        self.ball = (b[0], b[1]);
+        self.vel = (b[2], b[3]);
+        self.bricks = bricks;
+        self.stack = stack_from_json(state.req("stack")?, self.size * self.size)?;
+        self.steps = state.req_u64("steps")? as usize;
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -308,6 +359,34 @@ impl Env for MiniMsPacman {
         push_frame(&mut self.stack, frame);
         let done = caught || cleared || self.steps >= self.max_steps();
         Transition { obs: stacked_obs(&self.stack), reward, done }
+    }
+
+    fn save_state(&self) -> Json {
+        Json::obj(vec![
+            ("size", Json::Num(self.size as f64)),
+            ("player_x", Json::Num(f64::from(self.player.0))),
+            ("player_y", Json::Num(f64::from(self.player.1))),
+            ("ghost_x", Json::Num(f64::from(self.ghost.0))),
+            ("ghost_y", Json::Num(f64::from(self.ghost.1))),
+            ("pellets", Json::Str(bools_to_bits(&self.pellets))),
+            ("stack", stack_to_json(&self.stack)),
+            ("steps", Json::Num(self.steps as f64)),
+        ])
+    }
+
+    fn restore_state(&mut self, state: &Json) -> Result<()> {
+        ensure!(
+            state.req_u64("size")? as usize == self.size,
+            "pacman state: board size mismatch"
+        );
+        let pellets = bits_to_bools(state.req_str("pellets")?)?;
+        ensure!(pellets.len() == self.size * self.size, "pacman state: pellet count");
+        self.player = (state.req_u64("player_x")? as i32, state.req_u64("player_y")? as i32);
+        self.ghost = (state.req_u64("ghost_x")? as i32, state.req_u64("ghost_y")? as i32);
+        self.pellets = pellets;
+        self.stack = stack_from_json(state.req("stack")?, self.size * self.size)?;
+        self.steps = state.req_u64("steps")? as usize;
+        Ok(())
     }
 }
 

@@ -18,6 +18,7 @@ use anyhow::{anyhow, ensure, Result};
 
 use super::{Action, Env, Transition};
 use crate::exec::Pool;
+use crate::util::json::{hex_f32s, hex_f64s, hex_u64, parse_hex_f32s, parse_hex_f64s, Json};
 use crate::util::Rng;
 
 /// Fork `n` per-lane RNG streams off a master RNG.  Lane 0 is the first
@@ -185,6 +186,66 @@ impl BatchedEnv {
     pub fn dones(&self) -> &[bool] {
         &self.dones
     }
+
+    /// Snapshot every lane — env state, RNG stream position and current
+    /// observation — at a step boundary.  The raw transition buffers
+    /// (`next_obs`/`rewards`/`dones`) are deliberately excluded: they are
+    /// consumed by `observe` before a checkpoint is taken and fully
+    /// overwritten by the next [`BatchedEnv::step`].
+    pub fn save_state(&self) -> Json {
+        let lanes: Vec<Json> = self
+            .lanes
+            .iter()
+            .map(|m| {
+                let lane = m.lock().expect("lane mutex poisoned");
+                let (state, spare) = lane.rng.state_parts();
+                let mut pairs = vec![
+                    ("env", lane.env.save_state()),
+                    ("rng", Json::Str(hex_u64(state))),
+                    ("cur", Json::Str(hex_f32s(&lane.cur))),
+                ];
+                if let Some(sp) = spare {
+                    pairs.push(("rng_spare", Json::Str(hex_f64s(&[sp]))));
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        Json::Arr(lanes)
+    }
+
+    /// Restore a [`BatchedEnv::save_state`] snapshot into a freshly-built
+    /// fleet of the same shape, rebuilding the `obs` buffer so the next
+    /// `act` sees exactly what the snapshotted fleet would have fed it.
+    pub fn restore_state(&mut self, state: &Json) -> Result<()> {
+        let arr = state.as_arr().ok_or_else(|| anyhow!("fleet state: expected an array"))?;
+        ensure!(
+            arr.len() == self.lanes.len(),
+            "fleet state: snapshot has {} lanes, fleet has {}",
+            arr.len(),
+            self.lanes.len()
+        );
+        let d = self.obs_dim;
+        for (l, saved) in arr.iter().enumerate() {
+            let mut lane = self.lanes[l].lock().expect("lane mutex poisoned");
+            lane.env.restore_state(saved.req("env")?)?;
+            let spare = match saved.get("rng_spare") {
+                Some(j) => {
+                    let s =
+                        j.as_str().ok_or_else(|| anyhow!("fleet state: bad rng_spare"))?;
+                    let v = parse_hex_f64s(s)?;
+                    ensure!(v.len() == 1, "fleet state: bad rng_spare length");
+                    Some(v[0])
+                }
+                None => None,
+            };
+            lane.rng = Rng::from_parts(saved.req_u64_hex("rng")?, spare);
+            let cur = parse_hex_f32s(saved.req_str("cur")?)?;
+            ensure!(cur.len() == d, "fleet state: lane {l} has a bad obs length");
+            self.obs[l * d..(l + 1) * d].copy_from_slice(&cur);
+            lane.cur = cur;
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -235,5 +296,41 @@ mod tests {
     fn wrong_action_count_is_an_error() {
         let mut benv = fleet(2);
         assert!(benv.step(&[Action::Discrete(0)]).is_err());
+    }
+
+    #[test]
+    fn fleet_snapshot_resumes_bit_identically() {
+        // MsPacman's ghost consumes lane RNG every step, so this covers
+        // env state + RNG stream + current-obs restoration together.
+        use crate::envs::MiniMsPacman;
+        let make = || {
+            let envs: Vec<Box<dyn Env>> =
+                (0..3).map(|_| Box::new(MiniMsPacman::mini()) as Box<dyn Env>).collect();
+            let mut root = Rng::new(9);
+            let rngs = lane_rngs(&mut root, 0xE74, 3);
+            BatchedEnv::new(envs, rngs, Pool::global()).expect("fleet")
+        };
+        let mut a = make();
+        for k in 0..17usize {
+            let actions: Vec<Action> = (0..3).map(|l| Action::Discrete((k + l) % 9)).collect();
+            a.step(&actions).expect("step");
+        }
+        let snap = a.save_state();
+        let mut b = make();
+        b.restore_state(&snap).expect("restore");
+        assert_eq!(a.obs(), b.obs(), "restored fleet must feed identical next obs");
+        for k in 0..29usize {
+            let actions: Vec<Action> =
+                (0..3).map(|l| Action::Discrete((2 * k + l) % 9)).collect();
+            a.step(&actions).expect("step a");
+            b.step(&actions).expect("step b");
+            assert_eq!(a.obs(), b.obs(), "obs diverged at step {k}");
+            assert_eq!(a.next_obs(), b.next_obs(), "next_obs diverged at step {k}");
+            assert_eq!(a.rewards(), b.rewards(), "rewards diverged at step {k}");
+            assert_eq!(a.dones(), b.dones(), "dones diverged at step {k}");
+        }
+        // Shape mismatch is a clean error, not a silent partial restore.
+        let mut small = fleet(2);
+        assert!(small.restore_state(&snap).is_err());
     }
 }

@@ -6,6 +6,9 @@
 //! Actions (2, continuous): main engine [-1,1] (fires above 0), lateral
 //! engine [-1,1] (|a|>0.5 fires left/right).
 
+use anyhow::{ensure, Result};
+
+use crate::util::json::{hex_f64s, parse_hex_f64s, Json};
 use crate::util::Rng;
 
 use super::{Action, Env, Transition};
@@ -137,6 +140,55 @@ impl Env for LunarLanderCont {
             done = true;
         }
         Transition { obs: self.obs(), reward, done }
+    }
+
+    fn save_state(&self) -> Json {
+        let phase = [self.x, self.y, self.vx, self.vy, self.theta, self.omega];
+        Json::obj(vec![
+            ("phase", Json::Str(hex_f64s(&phase))),
+            ("left_contact", Json::Bool(self.left_contact)),
+            ("right_contact", Json::Bool(self.right_contact)),
+            ("steps", Json::Num(self.steps as f64)),
+            (
+                "prev_shaping",
+                match self.prev_shaping {
+                    Some(s) => Json::Str(hex_f64s(&[s])),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    fn restore_state(&mut self, state: &Json) -> Result<()> {
+        let p = parse_hex_f64s(state.req_str("phase")?)?;
+        ensure!(p.len() == 6, "lander state: expected 6 phase values, got {}", p.len());
+        self.x = p[0];
+        self.y = p[1];
+        self.vx = p[2];
+        self.vy = p[3];
+        self.theta = p[4];
+        self.omega = p[5];
+        self.left_contact = state
+            .req("left_contact")?
+            .as_bool()
+            .ok_or_else(|| anyhow::anyhow!("lander state: bad left_contact"))?;
+        self.right_contact = state
+            .req("right_contact")?
+            .as_bool()
+            .ok_or_else(|| anyhow::anyhow!("lander state: bad right_contact"))?;
+        self.steps = state.req_u64("steps")? as usize;
+        self.prev_shaping = match state.req("prev_shaping")? {
+            Json::Null => None,
+            other => {
+                let s = other
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("lander state: bad prev_shaping"))?;
+                let v = parse_hex_f64s(s)?;
+                ensure!(v.len() == 1, "lander state: bad prev_shaping length");
+                Some(v[0])
+            }
+        };
+        Ok(())
     }
 }
 

@@ -25,6 +25,7 @@ pub use pendulum::InvertedPendulum;
 
 use anyhow::{anyhow, Result};
 
+use crate::util::json::Json;
 use crate::util::Rng;
 
 /// Action passed to an environment step.
@@ -98,6 +99,30 @@ pub trait Env: Send {
     fn step(&mut self, action: &Action, rng: &mut Rng) -> Transition;
     /// Episode step limit (truncation).
     fn max_steps(&self) -> usize;
+    /// Bit-exact snapshot of the env's full internal state, for
+    /// checkpointing mid-episode (f64 dynamics are hex-encoded so
+    /// chaotic systems resume on the identical trajectory).
+    fn save_state(&self) -> Json;
+    /// Restore a [`Env::save_state`] snapshot into an
+    /// identically-configured env.
+    fn restore_state(&mut self, state: &Json) -> Result<()>;
+}
+
+/// Pack a bool grid (bricks, pellets, contact flags…) as a '0'/'1'
+/// string — compact and trivially bit-exact.
+pub(crate) fn bools_to_bits(v: &[bool]) -> String {
+    v.iter().map(|&b| if b { '1' } else { '0' }).collect()
+}
+
+/// Inverse of [`bools_to_bits`]; errors on any character outside {0,1}.
+pub(crate) fn bits_to_bools(s: &str) -> Result<Vec<bool>> {
+    s.chars()
+        .map(|c| match c {
+            '0' => Ok(false),
+            '1' => Ok(true),
+            _ => Err(anyhow!("bad bit character {c:?} in env state")),
+        })
+        .collect()
 }
 
 /// Shared test helper: roll an env for a full episode with random actions
@@ -127,4 +152,72 @@ pub(crate) fn contract_check(env: &mut dyn Env, seed: u64) {
         }
     }
     assert!(steps <= env.max_steps() + 1, "episode never terminated/truncated");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_action(env: &dyn Env, rng: &mut Rng) -> Action {
+        if env.is_discrete() {
+            Action::Discrete(rng.below(env.action_dim()))
+        } else {
+            Action::Continuous(
+                (0..env.action_dim()).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect(),
+            )
+        }
+    }
+
+    /// Roll to mid-episode, snapshot env + rng, restore into a fresh env,
+    /// and assert both resume on the bit-identical trajectory (obs bits,
+    /// reward bits, done flags) — including RNG-consuming steps/resets.
+    fn state_check(mut make: impl FnMut() -> Box<dyn Env>, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let mut env = make();
+        env.reset(&mut rng);
+        for _ in 0..7 {
+            let a = rand_action(env.as_ref(), &mut rng);
+            if env.step(&a, &mut rng).done {
+                env.reset(&mut rng);
+            }
+        }
+        let snap = env.save_state();
+        let (st, spare) = rng.state_parts();
+        let mut env2 = make();
+        env2.restore_state(&snap).unwrap();
+        let mut rng2 = Rng::from_parts(st, spare);
+        for step in 0..11 {
+            let a1 = rand_action(env.as_ref(), &mut rng);
+            let a2 = rand_action(env2.as_ref(), &mut rng2);
+            let t1 = env.step(&a1, &mut rng);
+            let t2 = env2.step(&a2, &mut rng2);
+            let bits = |o: &[f32]| o.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+            assert_eq!(bits(&t1.obs), bits(&t2.obs), "obs diverged at step {step}");
+            assert_eq!(t1.reward.to_bits(), t2.reward.to_bits(), "reward diverged");
+            assert_eq!(t1.done, t2.done, "done diverged at step {step}");
+            if t1.done {
+                env.reset(&mut rng);
+                env2.reset(&mut rng2);
+            }
+        }
+    }
+
+    #[test]
+    fn save_restore_resumes_identically_for_all_envs() {
+        state_check(|| Box::new(CartPole::new()) as Box<dyn Env>, 11);
+        state_check(|| Box::new(InvertedPendulum::new()) as Box<dyn Env>, 12);
+        state_check(|| Box::new(MountainCarCont::new()) as Box<dyn Env>, 13);
+        state_check(|| Box::new(LunarLanderCont::new()) as Box<dyn Env>, 14);
+        state_check(|| Box::new(MiniBreakout::mini()) as Box<dyn Env>, 15);
+        state_check(|| Box::new(MiniMsPacman::mini()) as Box<dyn Env>, 16);
+    }
+
+    #[test]
+    fn bit_strings_round_trip_and_reject_junk() {
+        let v = vec![true, false, false, true, true];
+        assert_eq!(bools_to_bits(&v), "10011");
+        assert_eq!(bits_to_bools("10011").unwrap(), v);
+        assert!(bits_to_bools("10x1").is_err());
+        assert!(bits_to_bools("").unwrap().is_empty());
+    }
 }

@@ -2,6 +2,9 @@
 //! car must build momentum to escape a valley.  Reward: +100 at the goal
 //! minus action energy.
 
+use anyhow::{ensure, Result};
+
+use crate::util::json::{hex_f64s, parse_hex_f64s, Json};
 use crate::util::Rng;
 
 use super::{Action, Env, Transition};
@@ -66,6 +69,22 @@ impl Env for MountainCarCont {
         let truncated = self.steps >= self.max_steps();
         let reward = if reached { 100.0 } else { 0.0 } - 0.1 * force * force;
         Transition { obs: self.obs(), reward, done: reached || truncated }
+    }
+
+    fn save_state(&self) -> Json {
+        Json::obj(vec![
+            ("phase", Json::Str(hex_f64s(&[self.pos, self.vel]))),
+            ("steps", Json::Num(self.steps as f64)),
+        ])
+    }
+
+    fn restore_state(&mut self, state: &Json) -> Result<()> {
+        let p = parse_hex_f64s(state.req_str("phase")?)?;
+        ensure!(p.len() == 2, "mountain-car state: expected 2 phase values, got {}", p.len());
+        self.pos = p[0];
+        self.vel = p[1];
+        self.steps = state.req_u64("steps")? as usize;
+        Ok(())
     }
 }
 

@@ -2,6 +2,9 @@
 //! on a cart with continuous force control.  State (x, ẋ, θ, θ̇); reward
 //! +1 per step alive; terminates when |θ| > 0.2 rad (MuJoCo's threshold).
 
+use anyhow::{ensure, Result};
+
+use crate::util::json::{hex_f64s, parse_hex_f64s, Json};
 use crate::util::Rng;
 
 use super::{Action, Env, Transition};
@@ -77,6 +80,24 @@ impl Env for InvertedPendulum {
         let failed = self.theta.abs() > THETA_LIMIT || self.x.abs() > X_LIMIT;
         let truncated = self.steps >= self.max_steps();
         Transition { obs: self.obs(), reward: 1.0, done: failed || truncated }
+    }
+
+    fn save_state(&self) -> Json {
+        Json::obj(vec![
+            ("phase", Json::Str(hex_f64s(&[self.x, self.x_dot, self.theta, self.theta_dot]))),
+            ("steps", Json::Num(self.steps as f64)),
+        ])
+    }
+
+    fn restore_state(&mut self, state: &Json) -> Result<()> {
+        let p = parse_hex_f64s(state.req_str("phase")?)?;
+        ensure!(p.len() == 4, "pendulum state: expected 4 phase values, got {}", p.len());
+        self.x = p[0];
+        self.x_dot = p[1];
+        self.theta = p[2];
+        self.theta_dot = p[3];
+        self.steps = state.req_u64("steps")? as usize;
+        Ok(())
     }
 }
 

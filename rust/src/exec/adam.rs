@@ -10,6 +10,8 @@
 //! working copy itself for BF16/FP32 layers — Table II's master-weight
 //! column), re-rounding the working copy to its storage format.
 
+use crate::util::json::{hex_f32s, parse_hex_f32s, Json, JsonError};
+
 use super::layers::Param;
 
 /// Adam (Kingma & Ba) with bias correction.
@@ -40,6 +42,49 @@ impl Adam {
             steps_applied: 0,
             steps_skipped: 0,
         }
+    }
+
+    /// Serialize the full optimizer state — step count, first/second
+    /// moments (per parameter, in `params_mut()` order) and telemetry —
+    /// bit-exactly.  The moment vectors may be empty if no step has run.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("lr", Json::Str(hex_f32s(&[self.lr]))),
+            ("beta1", Json::Str(hex_f32s(&[self.beta1]))),
+            ("beta2", Json::Str(hex_f32s(&[self.beta2]))),
+            ("eps", Json::Str(hex_f32s(&[self.eps]))),
+            ("t", Json::Num(f64::from(self.t))),
+            ("m", Json::Arr(self.m.iter().map(|v| Json::Str(hex_f32s(v))).collect())),
+            ("v", Json::Arr(self.v.iter().map(|v| Json::Str(hex_f32s(v))).collect())),
+            ("steps_applied", Json::Num(self.steps_applied as f64)),
+            ("steps_skipped", Json::Num(self.steps_skipped as f64)),
+        ])
+    }
+
+    /// Rebuild an optimizer from an [`Adam::to_json`] snapshot.
+    pub fn from_json(v: &Json) -> Result<Adam, JsonError> {
+        let moments = |key: &str| -> Result<Vec<Vec<f32>>, JsonError> {
+            v.req_arr(key)?
+                .iter()
+                .map(|e| {
+                    let s = e
+                        .as_str()
+                        .ok_or_else(|| JsonError { msg: format!("bad {key} entry"), pos: 0 })?;
+                    parse_hex_f32s(s)
+                })
+                .collect()
+        };
+        Ok(Adam {
+            lr: v.req_f32_bits("lr")?,
+            beta1: v.req_f32_bits("beta1")?,
+            beta2: v.req_f32_bits("beta2")?,
+            eps: v.req_f32_bits("eps")?,
+            t: v.req_u64("t")? as i32,
+            m: moments("m")?,
+            v: moments("v")?,
+            steps_applied: v.req_u64("steps_applied")?,
+            steps_skipped: v.req_u64("steps_skipped")?,
+        })
     }
 
     /// Apply one step over `params` whose `grad` buffers hold gradients
@@ -140,6 +185,31 @@ mod tests {
         for (x, y) in a.value.data.iter().zip(&b.value.data) {
             assert!((x - y).abs() < 1e-6, "{x} vs {y}");
         }
+    }
+
+    #[test]
+    fn json_round_trip_continues_trajectory_bit_identically() {
+        let mut p1 = param(&[0.3, -0.7, 1.1]);
+        let mut opt = Adam::new(0.05);
+        for step in 0..13usize {
+            p1.grad.iter_mut().enumerate().for_each(|(i, g)| *g = 0.1 * (step + i) as f32);
+            opt.step(vec![&mut p1], 1.0);
+        }
+        let mut p2 = p1.clone();
+        let mut restored = Adam::from_json(&opt.to_json()).unwrap();
+        for step in 0..20usize {
+            let gs: Vec<f32> = (0..3).map(|i| -0.03 * (step * i) as f32).collect();
+            p1.grad.copy_from_slice(&gs);
+            p2.grad.copy_from_slice(&gs);
+            assert_eq!(opt.step(vec![&mut p1], 2.0), restored.step(vec![&mut p2], 2.0));
+            for (a, b) in p1.value.data.iter().zip(&p2.value.data) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        // Fresh (never-stepped) optimizer round-trips its empty moments.
+        let fresh = Adam::from_json(&Adam::new(0.01).to_json()).unwrap();
+        assert!(fresh.m.is_empty() && fresh.v.is_empty());
+        assert_eq!(fresh.t, 0);
     }
 
     #[test]

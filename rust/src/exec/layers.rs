@@ -15,6 +15,7 @@ use std::sync::Arc;
 use crate::graph::NetSpec;
 use crate::hw::Format;
 use crate::quant::formats::{round_slice, round_to};
+use crate::util::json::{hex_f32s, parse_hex_f32s, Json, JsonError};
 use crate::util::Rng;
 
 use super::policy::{ExecPolicy, LayerFormats};
@@ -533,6 +534,92 @@ impl Network {
     pub fn layer_formats(&self) -> Vec<(String, LayerFormats)> {
         self.layers.iter().map(|l| (l.name.clone(), l.fmt)).collect()
     }
+
+    /// Serialize every parameter bit-exactly for checkpoints: per layer
+    /// the working copy and (when armed) the FP32 master, as IEEE-754
+    /// hex.  Gradients are not saved — they are fully overwritten before
+    /// each optimizer step.
+    pub fn weights_to_json(&self) -> Json {
+        let layer_json = |l: &Layer| {
+            let mut pairs = vec![
+                ("name", Json::Str(l.name.clone())),
+                ("w", Json::Str(hex_f32s(&l.w.value.data))),
+                ("b", Json::Str(hex_f32s(&l.b.value.data))),
+            ];
+            if let Some(m) = &l.w.master {
+                pairs.push(("w_master", Json::Str(hex_f32s(m))));
+            }
+            if let Some(m) = &l.b.master {
+                pairs.push(("b_master", Json::Str(hex_f32s(m))));
+            }
+            Json::obj(pairs)
+        };
+        Json::Arr(self.layers.iter().map(layer_json).collect())
+    }
+
+    /// Restore parameters saved by [`Network::weights_to_json`] into a
+    /// structurally identical network (same spec + policy).  Raw bits are
+    /// written back without re-rounding, so the restored network computes
+    /// bit-identically to the one that was saved.
+    pub fn restore_weights(&mut self, v: &Json) -> Result<(), JsonError> {
+        let arr = v
+            .as_arr()
+            .ok_or_else(|| JsonError { msg: "weights: expected array".into(), pos: 0 })?;
+        if arr.len() != self.layers.len() {
+            return Err(JsonError {
+                msg: format!("weights: {} layers saved, {} built", arr.len(), self.layers.len()),
+                pos: 0,
+            });
+        }
+        for (layer, saved) in self.layers.iter_mut().zip(arr) {
+            let name = saved.req_str("name")?;
+            if name != layer.name {
+                return Err(JsonError {
+                    msg: format!("weights: layer {:?} saved as {name:?}", layer.name),
+                    pos: 0,
+                });
+            }
+            restore_param(&mut layer.w, saved, "w", "w_master")?;
+            restore_param(&mut layer.b, saved, "b", "b_master")?;
+        }
+        Ok(())
+    }
+}
+
+fn restore_param(
+    p: &mut Param,
+    saved: &Json,
+    key: &str,
+    master_key: &str,
+) -> Result<(), JsonError> {
+    let data = parse_hex_f32s(saved.req_str(key)?)?;
+    if data.len() != p.elems() {
+        return Err(JsonError {
+            msg: format!("weights: {key} has {} elems, expected {}", data.len(), p.elems()),
+            pos: 0,
+        });
+    }
+    p.value.data = data;
+    match (&mut p.master, saved.get(master_key)) {
+        (Some(m), Some(j)) => {
+            let data = parse_hex_f32s(
+                j.as_str()
+                    .ok_or_else(|| JsonError { msg: format!("bad {master_key}"), pos: 0 })?,
+            )?;
+            if data.len() != m.len() {
+                return Err(JsonError { msg: format!("{master_key} length mismatch"), pos: 0 });
+            }
+            *m = data;
+        }
+        (None, None) => {}
+        _ => {
+            return Err(JsonError {
+                msg: format!("weights: master mismatch on {key} (saved vs built policy differ)"),
+                pos: 0,
+            })
+        }
+    }
+    Ok(())
 }
 
 fn copy_param(dst: &mut Param, src: &Param) {
@@ -755,6 +842,47 @@ mod tests {
             let net = fp32_net(&spec, Act::None, 23).with_pool(Arc::new(Pool::new(threads)));
             assert_eq!(net.infer(&x).data, base.data, "{threads}-thread pool diverged");
         }
+    }
+
+    #[test]
+    fn weight_round_trip_is_bit_identical_including_masters() {
+        let fmt = LayerFormats {
+            fwd: Format::Fp16,
+            act: Format::Fp16,
+            bwd: Format::Fp16,
+            update: Format::Fp32,
+            master: true,
+        };
+        let spec = NetSpec::mlp(&[4, 8, 2]);
+        let mut rng = Rng::new(77);
+        let mut src = Network::from_spec_uniform(&spec, Act::None, fmt, &mut rng);
+        // Nudge masters off the working copies so the round trip proves
+        // both are carried independently.
+        for p in src.params_mut() {
+            for j in 0..p.elems() {
+                let x = p.accum_at(j) + 1e-5;
+                p.write_accum(j, x);
+            }
+            p.commit();
+        }
+        let saved = src.weights_to_json();
+        let mut rng2 = Rng::new(1234); // different init — must be overwritten
+        let mut dst = Network::from_spec_uniform(&spec, Act::None, fmt, &mut rng2);
+        dst.restore_weights(&saved).unwrap();
+        for (a, b) in src.layers.iter().zip(&dst.layers) {
+            for (x, y) in a.w.value.data.iter().zip(&b.w.value.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            for (x, y) in
+                a.w.master.as_ref().unwrap().iter().zip(b.w.master.as_ref().unwrap())
+            {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        // Shape/name mismatches are hard errors, not silent corruption.
+        let mut other =
+            Network::from_spec_uniform(&NetSpec::mlp(&[4, 6, 2]), Act::None, fmt, &mut rng2);
+        assert!(other.restore_weights(&saved).is_err());
     }
 
     #[test]

@@ -25,6 +25,7 @@ use crate::drl::replay::Batch;
 use crate::drl::rollout::RolloutBatch;
 use crate::graph::{critic_spec, value_spec};
 use crate::hw::Format;
+use crate::util::json::{hex_f32s, parse_hex_f32s, Json};
 use crate::util::Rng;
 
 use super::adam::Adam;
@@ -90,6 +91,21 @@ impl CpuDqn {
 impl ComputeBackend for CpuDqn {
     fn exec_policy(&self) -> Option<&ExecPolicy> {
         Some(&self.policy)
+    }
+
+    fn save_state(&self) -> Result<Json> {
+        Ok(Json::obj(vec![
+            ("online", self.online.weights_to_json()),
+            ("target", self.target.weights_to_json()),
+            ("opt", self.opt.to_json()),
+        ]))
+    }
+
+    fn restore_state(&mut self, state: &Json) -> Result<()> {
+        self.online.restore_weights(state.req("online")?)?;
+        self.target.restore_weights(state.req("target")?)?;
+        self.opt = Adam::from_json(state.req("opt")?)?;
+        Ok(())
     }
 }
 
@@ -184,6 +200,25 @@ impl CpuA2c {
 impl ComputeBackend for CpuA2c {
     fn exec_policy(&self) -> Option<&ExecPolicy> {
         Some(&self.policy)
+    }
+
+    fn save_state(&self) -> Result<Json> {
+        Ok(Json::obj(vec![
+            ("pi", self.pi.weights_to_json()),
+            ("vf", self.vf.weights_to_json()),
+            ("log_std", Json::Str(hex_f32s(&self.log_std.value.data))),
+            ("opt", self.opt.to_json()),
+        ]))
+    }
+
+    fn restore_state(&mut self, state: &Json) -> Result<()> {
+        self.pi.restore_weights(state.req("pi")?)?;
+        self.vf.restore_weights(state.req("vf")?)?;
+        let ls = parse_hex_f32s(state.req_str("log_std")?)?;
+        anyhow::ensure!(ls.len() == self.log_std.elems(), "log_std length mismatch");
+        self.log_std.value.data = ls;
+        self.opt = Adam::from_json(state.req("opt")?)?;
+        Ok(())
     }
 }
 
@@ -307,6 +342,27 @@ impl ComputeBackend for CpuDdpg {
     fn exec_policy(&self) -> Option<&ExecPolicy> {
         Some(&self.policy)
     }
+
+    fn save_state(&self) -> Result<Json> {
+        Ok(Json::obj(vec![
+            ("actor", self.actor.weights_to_json()),
+            ("critic", self.critic.weights_to_json()),
+            ("t_actor", self.t_actor.weights_to_json()),
+            ("t_critic", self.t_critic.weights_to_json()),
+            ("opt_a", self.opt_a.to_json()),
+            ("opt_c", self.opt_c.to_json()),
+        ]))
+    }
+
+    fn restore_state(&mut self, state: &Json) -> Result<()> {
+        self.actor.restore_weights(state.req("actor")?)?;
+        self.critic.restore_weights(state.req("critic")?)?;
+        self.t_actor.restore_weights(state.req("t_actor")?)?;
+        self.t_critic.restore_weights(state.req("t_critic")?)?;
+        self.opt_a = Adam::from_json(state.req("opt_a")?)?;
+        self.opt_c = Adam::from_json(state.req("opt_c")?)?;
+        Ok(())
+    }
 }
 
 impl DdpgCompute for CpuDdpg {
@@ -416,6 +472,21 @@ impl CpuPpo {
 impl ComputeBackend for CpuPpo {
     fn exec_policy(&self) -> Option<&ExecPolicy> {
         Some(&self.policy)
+    }
+
+    fn save_state(&self) -> Result<Json> {
+        Ok(Json::obj(vec![
+            ("pi", self.pi.weights_to_json()),
+            ("vf", self.vf.weights_to_json()),
+            ("opt", self.opt.to_json()),
+        ]))
+    }
+
+    fn restore_state(&mut self, state: &Json) -> Result<()> {
+        self.pi.restore_weights(state.req("pi")?)?;
+        self.vf.restore_weights(state.req("vf")?)?;
+        self.opt = Adam::from_json(state.req("opt")?)?;
+        Ok(())
     }
 }
 

@@ -84,8 +84,13 @@
 //! # collect with an 8-lane env fleet (batched inference; same API,
 //! # higher env-steps/sec — `--actors 1` is bit-identical to scalar):
 //! apdrl train --combo dqn-cartpole --steps 5000 --actors 8
-//! # plan remotely (daemon or federation), train locally:
-//! apdrl train --combo ddpg-lunar --remote host1:7040,host2:7040 --quantized
+//! # plan remotely via APDRL_SERVER (daemon or federation), train locally:
+//! APDRL_SERVER=host1:7040 apdrl train --combo ddpg-lunar --quantized
+//! # or submit the whole run as a streaming daemon job (protocol v3):
+//! # least-loaded host wins, frames stream back live, and if the
+//! # serving host dies the newest checkpoint resumes on a survivor.
+//! apdrl train --combo ddpg-lunar --remote host1:7040,host2:7040 --checkpoint-every 1000
+//! apdrl jobs --remote host1:7040,host2:7040            # list; --cancel ID stops one
 //! ```
 //!
 //! Reported per run: per-episode rewards, loss-scale FSM transitions
@@ -149,18 +154,18 @@
 //! per request, one per response:
 //!
 //! ```text
-//! → {"v":2,"verb":"plan","combo":"ddpg_lunar","batch":256,"quantized":true}
-//! ← {"v":2,"ok":true,"plan":{"makespan_us":…,"schedule":[…],"cache_hit":false,…}}
-//! → {"v":2,"verb":"sweep","combos":["dqn_cartpole","ddpg_lunar"],"batches":[64,256],"quantized":true}
-//! ← {"v":2,"ok":true,"plans":[…]}
-//! → {"v":2,"verb":"plan_many","points":[{"combo":"dqn_cartpole","batch":48,"quantized":true},…]}
-//! ← {"v":2,"ok":true,"plans":[…]}
-//! → {"v":2,"verb":"stats"}
-//! ← {"v":2,"ok":true,"stats":{"requests":…,"cache":{"hits":…,"hit_rate":…},…}}
-//! → {"v":2,"verb":"cache_flush"}
-//! ← {"v":2,"ok":true,"flushed":12}
-//! → {"v":2,"verb":"shutdown"}
-//! ← {"v":2,"ok":true,"stopping":true}
+//! → {"v":3,"verb":"plan","combo":"ddpg_lunar","batch":256,"quantized":true}
+//! ← {"v":3,"ok":true,"plan":{"makespan_us":…,"schedule":[…],"cache_hit":false,…}}
+//! → {"v":3,"verb":"sweep","combos":["dqn_cartpole","ddpg_lunar"],"batches":[64,256],"quantized":true}
+//! ← {"v":3,"ok":true,"plans":[…]}
+//! → {"v":3,"verb":"plan_many","points":[{"combo":"dqn_cartpole","batch":48,"quantized":true},…]}
+//! ← {"v":3,"ok":true,"plans":[…]}
+//! → {"v":3,"verb":"stats"}
+//! ← {"v":3,"ok":true,"stats":{"requests":…,"cache":{"hits":…,"hit_rate":…},…}}
+//! → {"v":3,"verb":"cache_flush"}
+//! ← {"v":3,"ok":true,"flushed":12}
+//! → {"v":3,"verb":"shutdown"}
+//! ← {"v":3,"ok":true,"stopping":true}
 //! ```
 //!
 //! Duplicate (combo, batch) pairs within one `sweep`/`plan_many`
@@ -172,6 +177,45 @@
 //! `tests/server.rs`.  The optimal makespan is always identical; only a
 //! *fresh* solo solve may pick a different co-optimal assignment than
 //! an independent local solve when symmetric placements tie.
+//!
+//! ## Training as a service (protocol v3)
+//!
+//! Protocol v3 adds three verbs that make the daemon a multi-tenant
+//! *training* service on top of the planning service: `train` submits a
+//! job to the daemon's [`server::jobs::Scheduler`] (bounded
+//! priority-then-FIFO queue, dedicated runner threads) and holds the
+//! connection open while the daemon **streams** one frame line per
+//! event — per-episode rewards, loss-scale FSM transitions, periodic
+//! progress summaries, and checkpoints — before the final result line;
+//! `jobs` lists every queued/running/finished job; `cancel` stops one
+//! (queued jobs immediately, running jobs at the next round boundary):
+//!
+//! ```text
+//! → {"v":3,"verb":"train","combo":"dqn_cartpole","seed":1,"max_env_steps":5000,"checkpoint_every":1000,…}
+//! ← {"v":3,"ok":true,"frame":"episode","job":"job-1","episode":1,"reward":…,"env_steps":…}
+//! ← {"v":3,"ok":true,"frame":"scale","job":"job-1","step":…,"from":…,"to":…}
+//! ← {"v":3,"ok":true,"frame":"checkpoint","job":"job-1","env_steps":1000,"data":{…}}
+//! ← {"v":3,"ok":true,"result":{"job":"job-1","status":"done","metrics":{…},…}}
+//! → {"v":3,"verb":"jobs"}            ← {"v":3,"ok":true,"jobs":[…],"draining":false}
+//! → {"v":3,"verb":"cancel","job":"job-1"}   ← {"v":3,"ok":true,"job":"job-1","phase":"running"}
+//! ```
+//!
+//! Checkpoint frames carry a complete [`coordinator::Checkpoint`]:
+//! weights (and FP32 masters), Adam moments, replay/rollout-free lane
+//! RNG state, the loss-scale FSM, and the full metrics prefix — floats
+//! as raw-bit hex, so a resumed job continues **bit-identically**, not
+//! approximately (asserted per algorithm in `tests/train.rs`).  That
+//! makes fail-over an ordinary client move: `apdrl train --combo …
+//! --remote host1:7040,host2:7040` submits to the least-loaded host,
+//! retains the newest streamed checkpoint, and — when the serving host
+//! dies mid-stream or answers with its *draining* flag (graceful
+//! shutdown drains running jobs to one final hand-off checkpoint) —
+//! re-submits that checkpoint to a survivor, which replays the
+//! remainder of the run bit-for-bit ([`server::RemoteTrainer`];
+//! two-daemon kill covered in `tests/server.rs` and the CI smoke).
+//! `apdrl jobs --remote <hosts> [--cancel ID]` is the matching
+//! federation-wide listing/cancel CLI, and the `stats` verb reports
+//! job lifecycle counters plus per-job wall-time percentiles.
 //!
 //! ## Observability (`apdrl dash`)
 //!

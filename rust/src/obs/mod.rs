@@ -8,9 +8,9 @@
 //!
 //! | kind            | source                 | fields                                                        |
 //! |-----------------|------------------------|---------------------------------------------------------------|
-//! | `train.episode` | trainer                | combo, seed, lane, episode, reward, env_steps, actors         |
-//! | `train.scale`   | trainer (FSM)          | combo, seed, step, from, to, overflow                         |
-//! | `train.done`    | trainer                | combo, backend, seed, actors, episodes, env_steps, train_steps, overflows, steps_per_sec |
+//! | `train.episode` | trainer                | combo, job, seed, lane, episode, reward, env_steps, actors    |
+//! | `train.scale`   | trainer (FSM)          | combo, job, seed, step, from, to, overflow                    |
+//! | `train.done`    | trainer                | combo, backend, job, seed, actors, episodes, env_steps, train_steps, overflows, steps_per_sec |
 //! | `plan.cache`    | static phase           | combo, batch, quantized, hit                                  |
 //! | `sweep.start`   | coordinator            | points, distinct                                              |
 //! | `sweep.point`   | coordinator            | index, done, total, combo, batch, quantized, cache_hit, explored, solve_us |

@@ -4,6 +4,8 @@
 //! conditional skip) are inside the lowered artifacts, which take the
 //! scale as input and report `found_inf`.
 
+use crate::util::json::{hex_f32s, Json, JsonError};
+
 /// Dynamic loss scaler with the standard grow/backoff policy.
 #[derive(Clone, Debug)]
 pub struct LossScaler {
@@ -55,6 +57,40 @@ impl LossScaler {
     /// Scale to feed the next train-step artifact invocation.
     pub fn scale(&self) -> f32 {
         self.scale
+    }
+
+    /// Serialize the full FSM — scale, policy knobs and streak position —
+    /// bit-exactly for checkpoints.  `from_json` reconstructs a scaler
+    /// that continues the grow/backoff trajectory identically.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scale", Json::Str(hex_f32s(&[self.scale]))),
+            ("growth_factor", Json::Str(hex_f32s(&[self.growth_factor]))),
+            ("backoff_factor", Json::Str(hex_f32s(&[self.backoff_factor]))),
+            ("growth_interval", Json::Num(f64::from(self.growth_interval))),
+            ("clean_steps", Json::Num(f64::from(self.clean_steps))),
+            ("min_scale", Json::Str(hex_f32s(&[self.min_scale]))),
+            ("max_scale", Json::Str(hex_f32s(&[self.max_scale]))),
+            ("overflows", Json::Num(self.overflows as f64)),
+            ("updates_skipped", Json::Num(self.updates_skipped as f64)),
+            ("steps", Json::Num(self.steps as f64)),
+        ])
+    }
+
+    /// Rebuild a scaler from a [`LossScaler::to_json`] snapshot.
+    pub fn from_json(v: &Json) -> Result<LossScaler, JsonError> {
+        Ok(LossScaler {
+            scale: v.req_f32_bits("scale")?,
+            growth_factor: v.req_f32_bits("growth_factor")?,
+            backoff_factor: v.req_f32_bits("backoff_factor")?,
+            growth_interval: v.req_u64("growth_interval")? as u32,
+            clean_steps: v.req_u64("clean_steps")? as u32,
+            min_scale: v.req_f32_bits("min_scale")?,
+            max_scale: v.req_f32_bits("max_scale")?,
+            overflows: v.req_u64("overflows")?,
+            updates_skipped: v.req_u64("updates_skipped")?,
+            steps: v.req_u64("steps")?,
+        })
     }
 
     /// Record a step outcome (the artifact's `found_inf` output);
@@ -132,6 +168,28 @@ mod tests {
             s.update(i % 7 == 0);
         }
         assert_eq!(s.scale(), 1.0);
+    }
+
+    #[test]
+    fn json_round_trip_continues_fsm_identically() {
+        let mut s = LossScaler::new(1024.0, 2.0, 0.5, 3);
+        for i in 0..17 {
+            s.update(i % 5 == 0);
+        }
+        let mut restored = LossScaler::from_json(&s.to_json()).unwrap();
+        for i in 0..50 {
+            let inf = i % 7 == 0;
+            assert_eq!(s.update(inf), restored.update(inf));
+            assert_eq!(s.scale().to_bits(), restored.scale().to_bits());
+        }
+        assert_eq!(s.overflows, restored.overflows);
+        assert_eq!(s.steps, restored.steps);
+        // The disabled scaler round-trips too (u32::MAX interval).
+        let d = LossScaler::disabled();
+        let rd = LossScaler::from_json(&d.to_json()).unwrap();
+        assert_eq!(rd.scale(), 1.0);
+        assert_eq!(rd.growth_interval, u32::MAX);
+        assert_eq!(rd.max_scale, 1.0);
     }
 
     #[test]

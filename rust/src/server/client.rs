@@ -4,6 +4,14 @@
 //! Benches, examples and `apdrl plan|sweep --remote <addr>` drive whole
 //! grids through it; `FederatedPlanner` composes several of these.
 //!
+//! [`RemoteTrainer`] is the training-side counterpart (protocol-v3
+//! `train` / `jobs` / `cancel`): it submits a job to the least-loaded
+//! host of a federation, streams the job's frames, and — because every
+//! `checkpoint` frame carries a complete bit-exact snapshot — follows a
+//! dying or draining host by re-submitting the newest checkpoint to a
+//! survivor.  The job continues from the snapshot; only when every host
+//! has failed does it error.
+//!
 //! Addressing: pass an explicit `host:port`, or set the `APDRL_SERVER`
 //! environment variable and use [`RemotePlanner::from_env`] /
 //! [`server_addr`].
@@ -23,6 +31,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::coordinator::planner::{PlanOutcome, PlanRequest, Planner, Provenance};
 use crate::util::json::Json;
 
+use super::federation::parse_host_list;
 use super::protocol::{parse_response, plan_from_json, Request, WirePoint};
 
 /// Environment variable naming the planning server — one `host:port`, or
@@ -277,6 +286,27 @@ impl RemotePlanner {
         resp.get("stats").cloned().ok_or_else(|| anyhow!("stats response missing `stats`"))
     }
 
+    /// Fetch the daemon's training-job listing (the protocol-v3 `jobs`
+    /// verb): the job array plus the daemon's draining flag.
+    pub fn jobs(&self) -> Result<(Json, bool)> {
+        let resp = self.call(&Request::Jobs)?;
+        let jobs =
+            resp.get("jobs").cloned().ok_or_else(|| anyhow!("jobs response missing `jobs`"))?;
+        let draining = resp.get("draining").and_then(Json::as_bool).unwrap_or(false);
+        Ok((jobs, draining))
+    }
+
+    /// Cancel a training job (the protocol-v3 `cancel` verb); returns
+    /// the phase the job was in when the daemon processed the cancel.
+    pub fn cancel_job(&self, job: &str) -> Result<String> {
+        let resp = self.call(&Request::Cancel { job: job.to_string() })?;
+        Ok(resp
+            .get("phase")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("cancel response missing `phase`"))?
+            .to_string())
+    }
+
     /// Drop every entry of the server's in-memory plan cache; returns
     /// how many were flushed.
     pub fn cache_flush(&self) -> Result<usize> {
@@ -331,6 +361,231 @@ impl Planner for RemotePlanner {
     }
 }
 
+/// Parameters of one remote training job, as `apdrl train --remote`
+/// lowers them onto the wire.  The `resume` checkpoint travels
+/// separately: hand-off payloads are owned by [`RemoteTrainer::train`],
+/// which re-submits the newest streamed checkpoint on fail-over.
+#[derive(Clone, Debug)]
+pub struct TrainSubmission {
+    pub combo: String,
+    pub seed: u64,
+    pub actors: usize,
+    pub max_env_steps: usize,
+    pub max_episodes: usize,
+    pub quantized: bool,
+    /// Scheduler priority: higher runs first among queued jobs.
+    pub priority: i64,
+    /// Env steps between streamed checkpoint frames (0 = none — which
+    /// also means a fail-over restarts training from scratch).
+    pub checkpoint_every: u64,
+    /// Env steps between streamed progress frames (0 = none).
+    pub progress_every: u64,
+}
+
+impl TrainSubmission {
+    fn request(&self, resume: Option<Json>) -> Request {
+        Request::Train {
+            combo: self.combo.clone(),
+            seed: self.seed,
+            actors: self.actors,
+            max_env_steps: self.max_env_steps,
+            max_episodes: self.max_episodes,
+            quantized: self.quantized,
+            priority: self.priority,
+            checkpoint_every: self.checkpoint_every,
+            progress_every: self.progress_every,
+            resume,
+        }
+    }
+}
+
+/// Federation-aware client of the protocol-v3 `train` verb (see the
+/// module docs): least-loaded submission, frame streaming, checkpoint
+/// hand-off across host deaths and drains.
+pub struct RemoteTrainer {
+    hosts: Vec<String>,
+}
+
+impl RemoteTrainer {
+    /// Build over a host list (comma-separated specs accepted, deduped,
+    /// order preserved).  Probed eagerly: a fully unreachable federation
+    /// is reported here, a partially reachable one is fine — fail-over
+    /// covers the rest.
+    pub fn connect(hosts: &[String]) -> Result<RemoteTrainer> {
+        let mut deduped: Vec<String> = Vec::new();
+        for host in hosts.iter().flat_map(|spec| parse_host_list(spec)) {
+            if !deduped.contains(&host) {
+                deduped.push(host);
+            }
+        }
+        if deduped.is_empty() {
+            bail!("remote training needs at least one daemon address");
+        }
+        if !deduped.iter().any(|h| RemotePlanner::connect(h).is_ok()) {
+            bail!(
+                "none of the {} training hosts are reachable ({})",
+                deduped.len(),
+                deduped.join(", ")
+            );
+        }
+        Ok(RemoteTrainer { hosts: deduped })
+    }
+
+    /// The (deduped) host list, in submission-preference order.
+    pub fn hosts(&self) -> &[String] {
+        &self.hosts
+    }
+
+    pub fn describe(&self) -> String {
+        match self.hosts.len() {
+            1 => format!("remote {}", self.hosts[0]),
+            n => format!("federated over {n} hosts ({})", self.hosts.join(", ")),
+        }
+    }
+
+    /// Pick the least-loaded live host: queued + running jobs from each
+    /// host's `stats` verb, skipping the `dead` ones.  Unreachable hosts
+    /// are skipped for this pick but not marked dead — a daemon that was
+    /// briefly down may be back by the next hand-off.
+    fn pick_host(&self, dead: &[bool]) -> Option<usize> {
+        let mut best: Option<(u64, usize)> = None;
+        for (i, host) in self.hosts.iter().enumerate() {
+            if dead[i] {
+                continue;
+            }
+            let Ok(stats) = RemotePlanner::connect(host).and_then(|c| c.stats()) else {
+                continue;
+            };
+            let jobs = stats.get("jobs");
+            let field =
+                |k: &str| jobs.and_then(|j| j.get(k)).and_then(Json::as_usize).unwrap_or(0) as u64;
+            let load = field("queue_depth") + field("running");
+            if best.map(|(b, _)| load < b).unwrap_or(true) {
+                best = Some((load, i));
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+
+    /// Run one training job across the federation.  Every streamed frame
+    /// is handed to `on_frame(serving_host, frame)` — episodes, scale
+    /// transitions, progress, checkpoints — and the newest checkpoint
+    /// frame's `data` is retained as the hand-off payload: when the
+    /// serving host dies mid-stream or drains for shutdown, the job is
+    /// re-submitted to the least-loaded survivor with `resume` set, and
+    /// training continues from the snapshot.  Returns the final `result`
+    /// payload from whichever host finished the job; errors only when
+    /// every host has failed.
+    pub fn train(
+        &self,
+        sub: &TrainSubmission,
+        on_frame: &mut dyn FnMut(&str, &Json),
+    ) -> Result<Json> {
+        let mut resume: Option<Json> = None;
+        let mut dead = vec![false; self.hosts.len()];
+        let mut last_err: Option<anyhow::Error> = None;
+        loop {
+            let Some(hi) = self.pick_host(&dead) else {
+                let n = self.hosts.len();
+                return Err(last_err
+                    .unwrap_or_else(|| anyhow!("no training host reachable"))
+                    .context(format!("train: all {n} hosts failed or are draining")));
+            };
+            let host = &self.hosts[hi];
+            match stream_train(host, sub, &mut resume, on_frame) {
+                Ok(Some(result)) => return Ok(result),
+                // Graceful drain: this host is going away — hand off.
+                Ok(None) => {
+                    dead[hi] = true;
+                    last_err = Some(anyhow!("training host {host} is draining"));
+                }
+                Err(e) => {
+                    dead[hi] = true;
+                    last_err = Some(e);
+                }
+            }
+        }
+    }
+
+    /// The `jobs` listing of every reachable host: `(host, jobs array,
+    /// draining flag)` per daemon.  Errors only when no host answered.
+    pub fn jobs(&self) -> Result<Vec<(String, Json, bool)>> {
+        let mut out = Vec::new();
+        let mut last_err = None;
+        for host in &self.hosts {
+            match RemotePlanner::connect(host).and_then(|c| c.jobs()) {
+                Ok((jobs, draining)) => out.push((host.clone(), jobs, draining)),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        match (out.is_empty(), last_err) {
+            (true, Some(e)) => Err(e.context("no training host answered `jobs`")),
+            _ => Ok(out),
+        }
+    }
+
+    /// Cancel `job` wherever it lives: each host is asked in turn until
+    /// one recognizes the id.  Returns `(host, phase)` from that host.
+    pub fn cancel(&self, job: &str) -> Result<(String, String)> {
+        let mut last_err: Option<anyhow::Error> = None;
+        for host in &self.hosts {
+            match RemotePlanner::connect(host).and_then(|c| c.cancel_job(job)) {
+                Ok(phase) => return Ok((host.clone(), phase)),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err
+            .unwrap_or_else(|| anyhow!("no training hosts configured"))
+            .context(format!("cancelling job {job:?}")))
+    }
+}
+
+/// Submit `sub` to `host` and stream its frames.  `resume` is both the
+/// input hand-off payload and the output: each streamed checkpoint
+/// frame replaces it, so a mid-stream death loses at most one
+/// checkpoint interval of work.  `Ok(None)` means the host drained the
+/// job for shutdown (re-submit to a survivor); `Ok(Some(result))` is
+/// the job's terminal payload — done, user-cancelled, or failed
+/// server-side.
+fn stream_train(
+    host: &str,
+    sub: &TrainSubmission,
+    resume: &mut Option<Json>,
+    on_frame: &mut dyn FnMut(&str, &Json),
+) -> Result<Option<Json>> {
+    let line = sub.request(resume.clone()).to_line()?;
+    let mut conn = Conn::open(host)?;
+    let mut buf =
+        conn.transport(&line).with_context(|| format!("submitting train job to {host}"))?;
+    loop {
+        let resp = parse_response(&buf)?;
+        match resp.get("frame").and_then(Json::as_str) {
+            Some(kind) => {
+                if kind == "checkpoint" {
+                    if let Some(data) = resp.get("data") {
+                        *resume = Some(data.clone());
+                    }
+                }
+                on_frame(host, &resp);
+                buf = conn
+                    .read_line()
+                    .with_context(|| format!("training host {host} died mid-job"))?;
+            }
+            None => {
+                let result = resp.get("result").cloned().ok_or_else(|| {
+                    anyhow!("train response from {host} has neither `frame` nor `result`")
+                })?;
+                let status = result.get("status").and_then(Json::as_str).unwrap_or("");
+                let draining = result.get("draining").and_then(Json::as_bool).unwrap_or(false);
+                if draining && status == "cancelled" {
+                    return Ok(None);
+                }
+                return Ok(Some(result));
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -356,6 +611,41 @@ mod tests {
             Ok(_) => return, // something *is* listening; nothing to assert
         };
         assert!(format!("{e:#}").contains("127.0.0.1:1"), "{e:#}");
+    }
+
+    #[test]
+    fn train_submissions_lower_onto_the_wire_and_back() {
+        let sub = TrainSubmission {
+            combo: "dqn_cartpole".into(),
+            seed: 11,
+            actors: 2,
+            max_env_steps: 4_000,
+            max_episodes: 60,
+            quantized: true,
+            priority: 5,
+            checkpoint_every: 500,
+            progress_every: 250,
+        };
+        let req = sub.request(None);
+        let line = req.to_line().unwrap();
+        assert_eq!(Request::parse_line(&line).unwrap(), req);
+        // A retained checkpoint payload rides the resume field verbatim.
+        let resumed = sub.request(Some(Json::obj(vec![("ckpt_version", Json::Num(1.0))])));
+        let line = resumed.to_line().unwrap();
+        assert!(line.contains("ckpt_version"), "{line}");
+        assert_eq!(Request::parse_line(&line).unwrap(), resumed);
+    }
+
+    #[test]
+    fn unreachable_trainer_federation_is_reported_at_connect() {
+        // Loopback port 1 is essentially never listening.
+        let hosts = vec!["127.0.0.1:1".to_string()];
+        let e = match RemoteTrainer::connect(&hosts) {
+            Err(e) => e,
+            Ok(_) => return, // something *is* listening; nothing to assert
+        };
+        assert!(format!("{e}").contains("reachable"), "{e}");
+        assert!(RemoteTrainer::connect(&[]).is_err());
     }
 
     #[test]

@@ -17,10 +17,24 @@
 //! which is the point of running the planner as a daemon instead of a
 //! library.
 //!
-//! Shutdown is cooperative: the `shutdown` verb is acknowledged on its
-//! own connection, then a flag flips; the accept loop (a nonblocking
-//! poll) and the workers observe it within one poll quantum and exit
-//! (queued connections are closed).
+//! Protocol-v3 `train` requests do not run on the connection workers:
+//! they are submitted to the in-process job [`Scheduler`], which
+//! executes them on its own small pool of *runner* threads while the
+//! submitting worker streams the job's frames back over the held-open
+//! connection (`jobs` and `cancel` administer the same scheduler from
+//! any connection).  The training *compute* therefore never occupies a
+//! connection worker — though a streaming connection pins its worker
+//! for the stream's duration, exactly like a streaming sweep, so size
+//! `--workers` above the number of concurrent train clients.
+//!
+//! Shutdown is cooperative and *draining*: the `shutdown` verb first
+//! drains the scheduler — new submissions are rejected, queued jobs are
+//! cancelled, running jobs stop at their next round boundary and emit a
+//! final checkpoint frame for hand-off — and is then acknowledged on
+//! its own connection before the flag flips; the accept loop (a
+//! nonblocking poll), the workers and the runners observe it within one
+//! poll quantum and exit (queued connections are closed, streaming
+//! connections finish their final `result` line first).
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
@@ -29,16 +43,17 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::planner::{LocalPlanner, PlanOutcome, PlanRequest, Planner};
-use crate::coordinator::plan_sweep_progress;
+use crate::coordinator::{plan_sweep_progress, Checkpoint, TrainLimits};
 use crate::obs;
 use crate::util::json::Json;
 
+use super::jobs::{JobSpec, Scheduler, DEFAULT_MAX_QUEUE, DEFAULT_RUNNERS};
 use super::protocol::{
-    error_response, ok_response, plan_to_json, profile_payload, progress_response, Request,
-    WirePoint,
+    error_response, frame_response, ok_response, plan_to_json, profile_payload,
+    progress_response, Request, WirePoint,
 };
 use super::stats::ServerStats;
 
@@ -64,18 +79,22 @@ pub struct Server {
     workers: usize,
     stats: Arc<ServerStats>,
     shutdown: Arc<AtomicBool>,
+    scheduler: Arc<Scheduler>,
 }
 
 impl Server {
     /// Bind `addr` (use port 0 for an ephemeral port — tests do) with a
-    /// pool of `workers` connection handlers.
+    /// pool of `workers` connection handlers (plus
+    /// [`DEFAULT_RUNNERS`] training-job runners).
     pub fn bind(addr: &str, workers: usize) -> Result<Server> {
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding planning server on {addr}"))?;
+        let stats = Arc::new(ServerStats::new());
         Ok(Server {
             listener,
             workers: workers.max(1),
-            stats: Arc::new(ServerStats::new()),
+            scheduler: Arc::new(Scheduler::new(DEFAULT_MAX_QUEUE, Arc::clone(&stats))),
+            stats,
             shutdown: Arc::new(AtomicBool::new(false)),
         })
     }
@@ -94,7 +113,7 @@ impl Server {
     /// thread; spawn it if you need to keep going (tests, the
     /// `remote_sweep` example).
     pub fn run(self) -> Result<()> {
-        let Server { listener, workers, stats, shutdown } = self;
+        let Server { listener, workers, stats, shutdown, scheduler } = self;
         // Nonblocking accept, polled against the shutdown flag: no
         // blocked `accept()` to wake, so shutdown needs no self-connect
         // trick and cannot be lost to a failed wake-up.
@@ -102,9 +121,13 @@ impl Server {
         let (tx, rx) = mpsc::channel::<Conn>();
         let rx = Mutex::new(rx);
         std::thread::scope(|s| {
+            for _ in 0..DEFAULT_RUNNERS {
+                let (scheduler, shutdown) = (&scheduler, &shutdown);
+                s.spawn(move || scheduler.run_runner(shutdown));
+            }
             for _ in 0..workers {
                 let tx = tx.clone();
-                let (rx, stats, shutdown) = (&rx, &stats, &shutdown);
+                let (rx, stats, shutdown, scheduler) = (&rx, &stats, &shutdown, &scheduler);
                 s.spawn(move || loop {
                     if shutdown.load(Ordering::SeqCst) {
                         break;
@@ -118,7 +141,7 @@ impl Server {
                         Err(mpsc::RecvTimeoutError::Disconnected) => break,
                     };
                     stats.queue_depth.fetch_sub(1, Ordering::Relaxed);
-                    match service_one(&mut conn, stats) {
+                    match service_one(&mut conn, stats, scheduler) {
                         Disposition::Requeue => {
                             stats.queue_depth.fetch_add(1, Ordering::Relaxed);
                             // A send error means the server is tearing
@@ -200,7 +223,7 @@ enum Disposition {
 
 /// Serve at most one request from `conn`.  Errors are per-request: a
 /// malformed line gets an error response and the connection lives on.
-fn service_one(conn: &mut Conn, stats: &ServerStats) -> Disposition {
+fn service_one(conn: &mut Conn, stats: &ServerStats, scheduler: &Scheduler) -> Disposition {
     match conn.reader.read_line(&mut conn.pending) {
         Ok(0) => Disposition::Close,
         Ok(_) => {
@@ -216,8 +239,9 @@ fn service_one(conn: &mut Conn, stats: &ServerStats) -> Disposition {
             let t0 = Instant::now();
             let parsed = Request::parse_line(&line);
             let verb = parsed.as_ref().map(Request::verb).unwrap_or("invalid");
-            // A streaming sweep writes its own progress lines before the
-            // final response; every other verb is one response line.
+            // Streaming verbs (sweeps with `stream:true`, every `train`)
+            // write their own lines before the final response; every
+            // other verb is one response line.
             let (response, stop) = match parsed {
                 Ok(Request::Sweep { combos, batches, quantized, stream: true }) => {
                     stats.sweep_requests.fetch_add(1, Ordering::Relaxed);
@@ -234,7 +258,49 @@ fn service_one(conn: &mut Conn, stats: &ServerStats) -> Disposition {
                     });
                     (response, false)
                 }
-                other => respond(other, stats),
+                Ok(Request::Train {
+                    combo,
+                    seed,
+                    actors,
+                    max_env_steps,
+                    max_episodes,
+                    quantized,
+                    priority,
+                    checkpoint_every,
+                    progress_every,
+                    resume,
+                }) => {
+                    // The resume payload is opaque at the protocol layer;
+                    // parse it here so a corrupt checkpoint is a
+                    // synchronous error on the submitter's own line.
+                    let parsed_resume = match resume {
+                        None => Ok(None),
+                        Some(v) => Checkpoint::from_json(&v).map(Some),
+                    };
+                    let streamed = parsed_resume.and_then(|resume| {
+                        let spec = JobSpec {
+                            combo,
+                            seed,
+                            actors,
+                            limits: TrainLimits {
+                                max_env_steps: max_env_steps as u64,
+                                max_episodes,
+                            },
+                            quantized,
+                            priority,
+                            checkpoint_every,
+                            progress_every,
+                            resume,
+                        };
+                        handle_train_streaming(&mut conn.writer, spec, scheduler, stats)
+                    });
+                    let response = streamed.unwrap_or_else(|e| {
+                        stats.errors.fetch_add(1, Ordering::Relaxed);
+                        error_response(&format!("{e:#}"))
+                    });
+                    (response, false)
+                }
+                other => respond(other, stats, scheduler),
             };
             stats.in_flight.fetch_sub(1, Ordering::Relaxed);
             let wall_us = t0.elapsed().as_micros() as u64;
@@ -288,9 +354,9 @@ fn service_one(conn: &mut Conn, stats: &ServerStats) -> Disposition {
 }
 
 /// Dispatch one parsed request → (response, shutdown?).  Streaming
-/// sweeps never get here — `service_one` intercepts them because they
-/// need the connection's writer mid-request.
-fn respond(parsed: Result<Request>, stats: &ServerStats) -> (Json, bool) {
+/// sweeps and `train` never get here — `service_one` intercepts them
+/// because they need the connection's writer mid-request.
+fn respond(parsed: Result<Request>, stats: &ServerStats, scheduler: &Scheduler) -> (Json, bool) {
     let req = match parsed {
         Ok(req) => req,
         Err(e) => {
@@ -331,7 +397,30 @@ fn respond(parsed: Result<Request>, stats: &ServerStats) -> (Json, bool) {
             body.insert("flushed".to_string(), Json::Num(flushed as f64));
             Ok(ok_response(body))
         }
+        Request::Jobs => {
+            stats.stats_requests.fetch_add(1, Ordering::Relaxed);
+            let mut body = BTreeMap::new();
+            body.insert("jobs".to_string(), scheduler.jobs_json());
+            body.insert("draining".to_string(), Json::Bool(scheduler.draining()));
+            Ok(ok_response(body))
+        }
+        Request::Cancel { job } => scheduler.cancel(&job).map(|phase| {
+            let mut body = BTreeMap::new();
+            body.insert("job".to_string(), Json::Str(job.clone()));
+            body.insert("phase".to_string(), Json::Str(phase.to_string()));
+            ok_response(body)
+        }),
+        Request::Train { .. } => {
+            // Intercepted in `service_one` (it needs the connection's
+            // writer); reaching here is a bug, answered not panicked.
+            Err(anyhow!("train requests must be streamed"))
+        }
         Request::Shutdown => {
+            // Graceful drain before the ack: reject new jobs, cancel
+            // queued ones, and stop running ones at their next round
+            // boundary (their streams finish with a final checkpoint
+            // frame and a `result` line before the workers exit).
+            scheduler.drain();
             let mut body = BTreeMap::new();
             body.insert("stopping".to_string(), Json::Bool(true));
             return (ok_response(body), true);
@@ -426,6 +515,43 @@ fn handle_sweep_streaming(
     let wire_plans: Vec<Json> = outcomes.iter().map(plan_to_json).collect();
     let mut body = BTreeMap::new();
     body.insert("plans".to_string(), Json::Arr(wire_plans));
+    Ok(ok_response(body))
+}
+
+/// The `train` verb: submit the job to the scheduler, then stream every
+/// frame the runner emits as its own response line, ending with the
+/// `result` final once the job reaches a terminal phase.  A submit
+/// rejection (unknown combo, bad resume checkpoint, full queue,
+/// draining daemon) surfaces as the one and only response line.  A
+/// mid-stream write failure cancels the job — the client is gone, so
+/// training on is wasted work — and keeps draining the queue so the
+/// runner is never left feeding a dead stream.
+fn handle_train_streaming(
+    writer: &mut TcpStream,
+    spec: JobSpec,
+    scheduler: &Scheduler,
+    stats: &ServerStats,
+) -> Result<Json> {
+    let (id, frames) = scheduler.submit(spec)?;
+    let mut client_gone = false;
+    while let Some(frame) = frames.next() {
+        if client_gone {
+            continue;
+        }
+        if let Ok(line) = frame_response(&frame).to_line() {
+            let sent = writer
+                .write_all(line.as_bytes())
+                .and_then(|_| writer.write_all(b"\n"))
+                .and_then(|_| writer.flush());
+            if sent.is_err() {
+                client_gone = true;
+                stats.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = scheduler.cancel(&id);
+            }
+        }
+    }
+    let mut body = BTreeMap::new();
+    body.insert("result".to_string(), scheduler.final_result(&id));
     Ok(ok_response(body))
 }
 

@@ -1,0 +1,107 @@
+//! Frame mailbox between a job's runner thread and the connection that
+//! streams it.
+//!
+//! The trainer's sink pushes frames from the runner thread; the daemon's
+//! streaming handler blocks on [`FrameQueue::next`] from the connection
+//! worker and writes each frame as one protocol line.  Closing the queue
+//! (job reached a terminal phase, or a queued job was cancelled before
+//! running) wakes the reader with `None` — but only after every frame
+//! pushed before the close has been drained, so a cancelled job's final
+//! checkpoint frame always reaches the client.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+use crate::util::json::Json;
+
+/// A close-able FIFO of streamed training frames.
+#[derive(Debug, Default)]
+pub struct FrameQueue {
+    inner: Mutex<Inner>,
+    cond: Condvar,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    frames: VecDeque<Json>,
+    closed: bool,
+}
+
+impl FrameQueue {
+    pub fn new() -> FrameQueue {
+        FrameQueue::default()
+    }
+
+    /// Enqueue one frame (a no-op after close — a late frame from a
+    /// racing producer is dropped rather than leaked into nowhere).
+    pub fn push(&self, frame: Json) {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.closed {
+            inner.frames.push_back(frame);
+            self.cond.notify_all();
+        }
+    }
+
+    /// Blocking pop: the next frame, or `None` once the queue is closed
+    /// *and* drained.
+    pub fn next(&self) -> Option<Json> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(f) = inner.frames.pop_front() {
+                return Some(f);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.cond.wait(inner).unwrap();
+        }
+    }
+
+    /// Mark the stream complete, waking any blocked reader.
+    pub fn close(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.closed = true;
+        self.cond.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_drain_in_order_then_none_after_close() {
+        let q = FrameQueue::new();
+        q.push(Json::Num(1.0));
+        q.push(Json::Num(2.0));
+        q.close();
+        // Pushes after close are dropped, not queued.
+        q.push(Json::Num(3.0));
+        assert_eq!(q.next(), Some(Json::Num(1.0)));
+        assert_eq!(q.next(), Some(Json::Num(2.0)));
+        assert_eq!(q.next(), None);
+        assert_eq!(q.next(), None);
+    }
+
+    #[test]
+    fn close_wakes_a_blocked_reader() {
+        let q = FrameQueue::new();
+        std::thread::scope(|s| {
+            let reader = s.spawn(|| q.next());
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            q.close();
+            assert_eq!(reader.join().unwrap(), None);
+        });
+    }
+
+    #[test]
+    fn push_wakes_a_blocked_reader() {
+        let q = FrameQueue::new();
+        std::thread::scope(|s| {
+            let reader = s.spawn(|| q.next());
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            q.push(Json::Bool(true));
+            assert_eq!(reader.join().unwrap(), Some(Json::Bool(true)));
+        });
+    }
+}

@@ -1,0 +1,583 @@
+//! Multi-tenant training-job scheduler behind the daemon's protocol-v3
+//! `train` verb.
+//!
+//! The daemon submits each `train` request here and holds the
+//! connection open; a small pool of *runner* threads (separate from the
+//! connection workers, so planning verbs stay responsive while jobs
+//! train) claims queued jobs and executes them exactly the way `apdrl
+//! train` runs locally — static-phase plan through the shared plan
+//! cache, CPU backend from the plan, then
+//! [`train_combo_job`] with the job hooks attached.  Frames flow to the
+//! submitting connection through a per-job [`FrameQueue`].
+//!
+//! Scheduling is priority-then-FIFO over a bounded queue: among queued
+//! jobs the highest `priority` wins, ties run in submission order, and
+//! submissions beyond [`DEFAULT_MAX_QUEUE`] waiting jobs are rejected
+//! synchronously (the client sees the error on its `train` line, not a
+//! job that silently never starts).  Lifecycle is `queued → running →
+//! done | cancelled | failed`; `cancel` stops a queued job immediately
+//! and flips a running job's cooperative flag so the trainer stops at
+//! the next round boundary — emitting a final checkpoint frame for
+//! hand-off when the submitter asked for checkpoints.  [`drain`]
+//! (graceful shutdown) rejects new submissions and pushes every live
+//! job down the cancel path, so a killed daemon's clients all end with
+//! a resumable checkpoint.
+//!
+//! [`drain`]: Scheduler::drain
+
+pub mod frames;
+
+pub use frames::FrameQueue;
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::coordinator::{
+    train_combo_job, try_combo, Checkpoint, JobOptions, LocalPlanner, PlanRequest, Planner,
+    TrainLimits, TrainResult,
+};
+use crate::exec::CpuBackend;
+use crate::util::json::Json;
+
+use super::stats::ServerStats;
+
+/// Default bound on jobs waiting in the queue (running jobs excluded).
+pub const DEFAULT_MAX_QUEUE: usize = 32;
+
+/// Runner threads the daemon spawns alongside its connection workers.
+pub const DEFAULT_RUNNERS: usize = 2;
+
+/// Terminal jobs kept for `jobs` listings before the oldest are evicted.
+const FINISHED_RETAINED: usize = 64;
+
+/// Idle-runner wakeup cadence (shutdown-flag poll while queue is empty).
+const RUNNER_POLL: Duration = Duration::from_millis(100);
+
+/// Everything the scheduler needs to run one training job.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub combo: String,
+    pub seed: u64,
+    pub actors: usize,
+    pub limits: TrainLimits,
+    pub quantized: bool,
+    /// Higher runs first among queued jobs; ties run in submission order.
+    pub priority: i64,
+    /// Env steps between checkpoint frames (0 = none).
+    pub checkpoint_every: u64,
+    /// Env steps between progress frames (0 = none).
+    pub progress_every: u64,
+    /// Snapshot to resume from (a handed-off job from a dead host).
+    pub resume: Option<Checkpoint>,
+}
+
+/// Job lifecycle phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobPhase {
+    Queued,
+    Running,
+    Done,
+    Cancelled,
+    Failed,
+}
+
+impl JobPhase {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobPhase::Queued => "queued",
+            JobPhase::Running => "running",
+            JobPhase::Done => "done",
+            JobPhase::Cancelled => "cancelled",
+            JobPhase::Failed => "failed",
+        }
+    }
+}
+
+struct JobEntry {
+    spec: JobSpec,
+    phase: JobPhase,
+    cancel: Arc<AtomicBool>,
+    frames: Arc<FrameQueue>,
+    /// Submission order: priority tiebreak and eviction order.
+    seq: u64,
+    wall_us: Option<u64>,
+    error: Option<String>,
+    /// Success payload fields for the final response line.
+    result: Option<BTreeMap<String, Json>>,
+}
+
+#[derive(Default)]
+struct SchedState {
+    jobs: BTreeMap<String, JobEntry>,
+    /// Queued ids in submission order; picks scan for highest priority.
+    queue: VecDeque<String>,
+    next_id: u64,
+    /// Terminal ids in finish order, for bounded retention.
+    finished: VecDeque<String>,
+}
+
+/// What a runner takes off the queue: id, spec, cancel flag, sink.
+type Claimed = (String, JobSpec, Arc<AtomicBool>, Arc<FrameQueue>);
+
+/// The daemon's job scheduler (see the module docs).
+pub struct Scheduler {
+    max_queue: usize,
+    state: Mutex<SchedState>,
+    cond: Condvar,
+    draining: AtomicBool,
+    stats: Arc<ServerStats>,
+}
+
+impl Scheduler {
+    pub fn new(max_queue: usize, stats: Arc<ServerStats>) -> Scheduler {
+        Scheduler {
+            max_queue,
+            state: Mutex::new(SchedState::default()),
+            cond: Condvar::new(),
+            draining: AtomicBool::new(false),
+            stats,
+        }
+    }
+
+    /// Submit one job.  Validates combo and resume checkpoint
+    /// synchronously — the submitter gets the error on its own request
+    /// line, never a job that fails on a runner it cannot see — and
+    /// bounces when the daemon is draining or the queue is full.
+    /// Returns the job id and the frame queue the runner will feed.
+    pub fn submit(&self, spec: JobSpec) -> Result<(String, Arc<FrameQueue>)> {
+        if self.draining.load(Ordering::SeqCst) {
+            self.stats.jobs_rejected.fetch_add(1, Ordering::Relaxed);
+            bail!("daemon is draining: new jobs are not accepted");
+        }
+        try_combo(&spec.combo)?;
+        ensure!(spec.actors >= 1, "train: actors must be at least 1");
+        if let Some(ckpt) = &spec.resume {
+            ensure!(
+                ckpt.combo == spec.combo,
+                "resume checkpoint is for combo {}, job submits {}",
+                ckpt.combo,
+                spec.combo
+            );
+            ensure!(
+                ckpt.seed == spec.seed && ckpt.actors == spec.actors,
+                "resume checkpoint seed/actors {}/{} disagree with the job's {}/{}",
+                ckpt.seed,
+                ckpt.actors,
+                spec.seed,
+                spec.actors
+            );
+            ensure!(
+                ckpt.quantized == spec.quantized,
+                "resume checkpoint precision (quantized={}) disagrees with the job's ({})",
+                ckpt.quantized,
+                spec.quantized
+            );
+        }
+        let mut state = self.state.lock().unwrap();
+        if state.queue.len() >= self.max_queue {
+            self.stats.jobs_rejected.fetch_add(1, Ordering::Relaxed);
+            bail!("job queue is full ({} waiting)", state.queue.len());
+        }
+        let seq = state.next_id;
+        state.next_id += 1;
+        let id = format!("job-{seq}");
+        let frames = Arc::new(FrameQueue::new());
+        state.jobs.insert(
+            id.clone(),
+            JobEntry {
+                spec,
+                phase: JobPhase::Queued,
+                cancel: Arc::new(AtomicBool::new(false)),
+                frames: Arc::clone(&frames),
+                seq,
+                wall_us: None,
+                error: None,
+                result: None,
+            },
+        );
+        state.queue.push_back(id.clone());
+        self.stats.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        self.stats.job_queue_depth.store(state.queue.len(), Ordering::Relaxed);
+        drop(state);
+        self.cond.notify_all();
+        Ok((id, frames))
+    }
+
+    /// Cancel a job.  Queued jobs stop immediately; running jobs stop at
+    /// the trainer's next round boundary (with a final checkpoint frame
+    /// when the submitter asked for checkpoints).  Terminal jobs are a
+    /// no-op.  Returns the phase name reported to the canceller.
+    pub fn cancel(&self, id: &str) -> Result<&'static str> {
+        let mut state = self.state.lock().unwrap();
+        let Some(entry) = state.jobs.get_mut(id) else {
+            bail!("unknown job {id:?}");
+        };
+        match entry.phase {
+            JobPhase::Queued => {
+                entry.phase = JobPhase::Cancelled;
+                entry.frames.close();
+                state.queue.retain(|q| q != id);
+                state.finished.push_back(id.to_string());
+                self.stats.jobs_cancelled.fetch_add(1, Ordering::Relaxed);
+                self.stats.job_queue_depth.store(state.queue.len(), Ordering::Relaxed);
+                Self::evict_finished(&mut state);
+                Ok(JobPhase::Cancelled.name())
+            }
+            JobPhase::Running => {
+                entry.cancel.store(true, Ordering::SeqCst);
+                Ok(JobPhase::Running.name())
+            }
+            phase => Ok(phase.name()),
+        }
+    }
+
+    /// Graceful-shutdown drain: reject all new submissions, cancel every
+    /// queued job outright and flip every running job's cancel flag so
+    /// each trainer stops at its next round boundary, emitting a final
+    /// checkpoint frame for hand-off before the daemon exits.
+    pub fn drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+        let mut state = self.state.lock().unwrap();
+        let queued: Vec<String> = state.queue.drain(..).collect();
+        for id in queued {
+            if let Some(entry) = state.jobs.get_mut(&id) {
+                entry.phase = JobPhase::Cancelled;
+                entry.frames.close();
+                self.stats.jobs_cancelled.fetch_add(1, Ordering::Relaxed);
+            }
+            state.finished.push_back(id);
+        }
+        self.stats.job_queue_depth.store(0, Ordering::Relaxed);
+        for entry in state.jobs.values() {
+            if entry.phase == JobPhase::Running {
+                entry.cancel.store(true, Ordering::SeqCst);
+            }
+        }
+        Self::evict_finished(&mut state);
+        drop(state);
+        self.cond.notify_all();
+    }
+
+    pub fn draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// The `jobs` verb payload: one entry per known job, newest first.
+    pub fn jobs_json(&self) -> Json {
+        let state = self.state.lock().unwrap();
+        let mut entries: Vec<(&String, &JobEntry)> = state.jobs.iter().collect();
+        entries.sort_by_key(|(_, e)| std::cmp::Reverse(e.seq));
+        let list = entries
+            .into_iter()
+            .map(|(id, e)| {
+                let mut o = BTreeMap::new();
+                o.insert("job".to_string(), Json::Str(id.clone()));
+                o.insert("combo".to_string(), Json::Str(e.spec.combo.clone()));
+                o.insert("seed".to_string(), Json::Num(e.spec.seed as f64));
+                o.insert("actors".to_string(), Json::Num(e.spec.actors as f64));
+                o.insert("quantized".to_string(), Json::Bool(e.spec.quantized));
+                o.insert("priority".to_string(), Json::Num(e.spec.priority as f64));
+                o.insert("phase".to_string(), Json::Str(e.phase.name().to_string()));
+                if let Some(us) = e.wall_us {
+                    o.insert("wall_us".to_string(), Json::Num(us as f64));
+                }
+                if let Some(err) = &e.error {
+                    o.insert("error".to_string(), Json::Str(err.clone()));
+                }
+                Json::Obj(o)
+            })
+            .collect();
+        Json::Arr(list)
+    }
+
+    /// The final-response payload for a job whose frame queue closed:
+    /// terminal status, the cancelled flag, the runner's result fields
+    /// (backend, threads, bit-exact metrics) or error, and the live
+    /// draining flag so a handed-off client knows to resubmit elsewhere.
+    pub fn final_result(&self, id: &str) -> Json {
+        let state = self.state.lock().unwrap();
+        let mut body = BTreeMap::new();
+        body.insert("job".to_string(), Json::Str(id.to_string()));
+        match state.jobs.get(id) {
+            Some(entry) => {
+                body.insert("status".to_string(), Json::Str(entry.phase.name().to_string()));
+                body.insert(
+                    "cancelled".to_string(),
+                    Json::Bool(entry.phase == JobPhase::Cancelled),
+                );
+                if let Some(err) = &entry.error {
+                    body.insert("error".to_string(), Json::Str(err.clone()));
+                }
+                if let Some(result) = &entry.result {
+                    for (k, v) in result {
+                        body.insert(k.clone(), v.clone());
+                    }
+                }
+            }
+            None => {
+                body.insert("status".to_string(), Json::Str("evicted".to_string()));
+            }
+        }
+        body.insert("draining".to_string(), Json::Bool(self.draining()));
+        Json::Obj(body)
+    }
+
+    /// One runner thread: claim the highest-priority queued job, train
+    /// it, record the outcome, repeat.  Returns once `shutdown` is set
+    /// and nothing is claimable (a drain cancels queued jobs first, so
+    /// exit is prompt).
+    pub fn run_runner(&self, shutdown: &AtomicBool) {
+        loop {
+            let claimed = {
+                let mut state = self.state.lock().unwrap();
+                loop {
+                    if let Some(id) = Self::pick(&state) {
+                        break Some(Self::claim(&mut state, &id, &self.stats));
+                    }
+                    if shutdown.load(Ordering::SeqCst) {
+                        break None;
+                    }
+                    let (s, _) = self.cond.wait_timeout(state, RUNNER_POLL).unwrap();
+                    state = s;
+                }
+            };
+            let Some((id, spec, cancel, frames)) = claimed else { return };
+            self.execute(id, spec, &cancel, &frames);
+        }
+    }
+
+    /// Highest priority wins; among equals, lowest submission seq.
+    fn pick(state: &SchedState) -> Option<String> {
+        state
+            .queue
+            .iter()
+            .filter_map(|id| state.jobs.get(id).map(|e| (id, e)))
+            .max_by_key(|(_, e)| (e.spec.priority, std::cmp::Reverse(e.seq)))
+            .map(|(id, _)| id.clone())
+    }
+
+    fn claim(state: &mut SchedState, id: &str, stats: &ServerStats) -> Claimed {
+        state.queue.retain(|q| q != id);
+        stats.job_queue_depth.store(state.queue.len(), Ordering::Relaxed);
+        stats.jobs_running.fetch_add(1, Ordering::Relaxed);
+        let entry = state.jobs.get_mut(id).expect("claimed job exists");
+        entry.phase = JobPhase::Running;
+        (
+            id.to_string(),
+            entry.spec.clone(),
+            Arc::clone(&entry.cancel),
+            Arc::clone(&entry.frames),
+        )
+    }
+
+    fn execute(&self, id: String, spec: JobSpec, cancel: &AtomicBool, frames: &FrameQueue) {
+        let t0 = Instant::now();
+        let outcome = run_job(&id, &spec, cancel, frames);
+        let wall_us = t0.elapsed().as_micros() as u64;
+        let mut state = self.state.lock().unwrap();
+        self.stats.jobs_running.fetch_sub(1, Ordering::Relaxed);
+        self.stats.record_job_wall(wall_us);
+        if let Some(entry) = state.jobs.get_mut(&id) {
+            entry.wall_us = Some(wall_us);
+            match outcome {
+                Ok(result) => {
+                    entry.phase =
+                        if result.cancelled { JobPhase::Cancelled } else { JobPhase::Done };
+                    entry.result = Some(result_body(&result));
+                }
+                Err(e) => {
+                    entry.phase = JobPhase::Failed;
+                    entry.error = Some(format!("{e:#}"));
+                }
+            }
+            match entry.phase {
+                JobPhase::Done => self.stats.jobs_completed.fetch_add(1, Ordering::Relaxed),
+                JobPhase::Cancelled => {
+                    self.stats.jobs_cancelled.fetch_add(1, Ordering::Relaxed)
+                }
+                _ => self.stats.jobs_failed.fetch_add(1, Ordering::Relaxed),
+            };
+            entry.frames.close();
+        }
+        state.finished.push_back(id);
+        Self::evict_finished(&mut state);
+    }
+
+    /// Keep the most recent [`FINISHED_RETAINED`] terminal jobs so a
+    /// long-lived daemon's `jobs` listing stays bounded.
+    fn evict_finished(state: &mut SchedState) {
+        while state.finished.len() > FINISHED_RETAINED {
+            if let Some(old) = state.finished.pop_front() {
+                state.jobs.remove(&old);
+            }
+        }
+    }
+}
+
+/// Run one job exactly the way `apdrl train` runs locally: static-phase
+/// plan (through the shared process-wide plan cache), CPU backend from
+/// the plan, then the training loop with job hooks attached.
+fn run_job(
+    id: &str,
+    spec: &JobSpec,
+    cancel: &AtomicBool,
+    frames: &FrameQueue,
+) -> Result<TrainResult> {
+    let c = try_combo(&spec.combo)?;
+    let plan = LocalPlanner.plan(&PlanRequest::new(c.clone(), c.batch, spec.quantized))?;
+    let mut backend = CpuBackend::from_outcome(&plan)?;
+    let mut sink = |frame: &Json| frames.push(frame.clone());
+    let opts = JobOptions {
+        job_id: Some(id.to_string()),
+        cancel: Some(cancel),
+        checkpoint_every: spec.checkpoint_every,
+        progress_every: spec.progress_every,
+        sink: Some(&mut sink),
+        resume: spec.resume.as_ref(),
+        quantized: spec.quantized,
+    };
+    train_combo_job(&mut backend, &c, spec.seed, spec.limits, spec.actors, false, opts)
+}
+
+/// The success payload stored for the final response line.
+fn result_body(result: &TrainResult) -> BTreeMap<String, Json> {
+    let mut body = BTreeMap::new();
+    body.insert("combo".to_string(), Json::Str(result.combo.clone()));
+    body.insert("backend".to_string(), Json::Str(result.backend.clone()));
+    body.insert("threads".to_string(), Json::Num(result.threads as f64));
+    body.insert("actors".to_string(), Json::Num(result.actors as f64));
+    body.insert("seed".to_string(), Json::Num(result.seed as f64));
+    body.insert("metrics".to_string(), result.metrics.to_json());
+    body
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(priority: i64) -> JobSpec {
+        JobSpec {
+            combo: "dqn_cartpole".into(),
+            seed: 1,
+            actors: 1,
+            limits: TrainLimits { max_env_steps: 300, max_episodes: 8 },
+            quantized: false,
+            priority,
+            checkpoint_every: 0,
+            progress_every: 0,
+            resume: None,
+        }
+    }
+
+    #[test]
+    fn submissions_validate_synchronously() {
+        let sched = Scheduler::new(4, Arc::new(ServerStats::new()));
+        let mut bad = spec(0);
+        bad.combo = "dqn_nonsense".into();
+        assert!(sched.submit(bad).is_err());
+        let mut mismatched = spec(0);
+        mismatched.resume = Some(Checkpoint {
+            combo: "a2c_invpend".into(),
+            seed: 1,
+            actors: 1,
+            quantized: false,
+            metrics: Default::default(),
+            last_scale: None,
+            ep_rewards: vec![0.0],
+            rng_state: 1,
+            rng_spare: None,
+            fleet: Json::Null,
+            agent: Json::Null,
+        });
+        let e = sched.submit(mismatched).unwrap_err();
+        assert!(format!("{e}").contains("combo"), "{e}");
+    }
+
+    #[test]
+    fn queue_is_bounded_and_priority_ordered() {
+        let stats = Arc::new(ServerStats::new());
+        let sched = Scheduler::new(3, Arc::clone(&stats));
+        let (_a, _) = sched.submit(spec(0)).unwrap();
+        let (b, _) = sched.submit(spec(5)).unwrap();
+        let (c, _) = sched.submit(spec(5)).unwrap();
+        let e = sched.submit(spec(9)).unwrap_err();
+        assert!(format!("{e}").contains("queue is full"), "{e}");
+        assert_eq!(stats.jobs_rejected.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.job_queue_depth.load(Ordering::Relaxed), 3);
+        // Highest priority first; FIFO among equals (b before c).
+        let mut state = sched.state.lock().unwrap();
+        let first = Scheduler::pick(&state).unwrap();
+        assert_eq!(first, b);
+        Scheduler::claim(&mut state, &first, &stats);
+        assert_eq!(Scheduler::pick(&state).unwrap(), c);
+    }
+
+    #[test]
+    fn cancelling_a_queued_job_closes_it_immediately() {
+        let stats = Arc::new(ServerStats::new());
+        let sched = Scheduler::new(4, Arc::clone(&stats));
+        let (id, frames) = sched.submit(spec(0)).unwrap();
+        assert_eq!(sched.cancel(&id).unwrap(), "cancelled");
+        assert!(frames.next().is_none());
+        let body = sched.final_result(&id);
+        assert_eq!(body.get("status").and_then(Json::as_str), Some("cancelled"));
+        assert_eq!(body.get("cancelled").and_then(Json::as_bool), Some(true));
+        assert_eq!(stats.jobs_cancelled.load(Ordering::Relaxed), 1);
+        // Cancelling again is a no-op reporting the terminal phase.
+        assert_eq!(sched.cancel(&id).unwrap(), "cancelled");
+        assert!(sched.cancel("job-999").is_err());
+    }
+
+    #[test]
+    fn drain_rejects_new_jobs_and_cancels_queued_ones() {
+        let stats = Arc::new(ServerStats::new());
+        let sched = Scheduler::new(4, Arc::clone(&stats));
+        let (id, frames) = sched.submit(spec(0)).unwrap();
+        sched.drain();
+        assert!(frames.next().is_none());
+        let body = sched.final_result(&id);
+        assert_eq!(body.get("status").and_then(Json::as_str), Some("cancelled"));
+        assert_eq!(body.get("draining").and_then(Json::as_bool), Some(true));
+        let e = sched.submit(spec(0)).unwrap_err();
+        assert!(format!("{e}").contains("draining"), "{e}");
+        assert_eq!(stats.jobs_rejected.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn jobs_run_stream_frames_and_reach_done() {
+        let stats = Arc::new(ServerStats::new());
+        let sched = Scheduler::new(4, Arc::clone(&stats));
+        let shutdown = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            s.spawn(|| sched.run_runner(&shutdown));
+            let mut want = spec(0);
+            want.checkpoint_every = 100;
+            want.progress_every = 75;
+            let (id, frames) = sched.submit(want).unwrap();
+            let mut kinds = Vec::new();
+            while let Some(f) = frames.next() {
+                assert_eq!(f.get("job").and_then(Json::as_str), Some(id.as_str()));
+                kinds.push(f.get("frame").and_then(Json::as_str).unwrap_or("?").to_string());
+            }
+            let body = sched.final_result(&id);
+            assert_eq!(body.get("status").and_then(Json::as_str), Some("done"));
+            assert_eq!(body.get("cancelled").and_then(Json::as_bool), Some(false));
+            assert!(body.get("metrics").is_some());
+            assert!(kinds.iter().any(|k| k == "episode"), "{kinds:?}");
+            assert!(kinds.iter().any(|k| k == "checkpoint"), "{kinds:?}");
+            assert!(kinds.iter().any(|k| k == "progress"), "{kinds:?}");
+            let listing = sched.jobs_json();
+            let arr = listing.as_arr().unwrap();
+            assert_eq!(arr.len(), 1);
+            assert_eq!(arr[0].get("phase").and_then(Json::as_str), Some("done"));
+            assert!(arr[0].get("wall_us").is_some());
+            shutdown.store(true, Ordering::SeqCst);
+        });
+        assert_eq!(stats.jobs_completed.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.jobs_running.load(Ordering::Relaxed), 0);
+    }
+}

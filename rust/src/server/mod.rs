@@ -12,16 +12,23 @@
 //!   is served through the in-process `Planner` backend.
 //! * [`protocol`] — the versioned JSON-lines request/response protocol
 //!   (`plan`, `sweep` — optionally streaming per-point progress lines —
-//!   `plan_many`, `profile`, `stats`, `cache_flush`, `shutdown`); plan
-//!   payloads are serialized `coordinator::planner::PlanOutcome`s.
+//!   `plan_many`, `profile`, `stats`, `cache_flush`, `shutdown`, and
+//!   the v3 training verbs `train` / `jobs` / `cancel`); plan payloads
+//!   are serialized `coordinator::planner::PlanOutcome`s.
+//! * [`jobs`] — the multi-tenant training-job [`Scheduler`] behind the
+//!   `train` verb: bounded priority queue, runner-thread pool, per-job
+//!   frame streams, cancel and graceful drain; training-as-a-service on
+//!   top of the checkpoint format in `coordinator::checkpoint`.
 //! * [`client`] — the blocking [`RemotePlanner`]: the single-daemon
 //!   remote implementation of the `Planner` trait, with transparent
-//!   reconnect-and-retry.
+//!   reconnect-and-retry; plus [`RemoteTrainer`], the federation-aware
+//!   `train` client that follows checkpoint hand-offs across hosts.
 //! * [`federation`] — [`FederatedPlanner`]: N daemons, `plan_many`
 //!   sharded by plan key with fail-over onto surviving hosts; plus
 //!   [`select_planner`], the CLI's one backend-choice point.
 //! * [`stats`] — daemon telemetry (request counters, per-verb latency
-//!   percentiles, solve wall time, queue depth) surfaced by the `stats`
+//!   percentiles, solve wall time, queue depth, job-scheduler lifecycle
+//!   counts and per-job wall-time percentiles) surfaced by the `stats`
 //!   verb, plus the process-global solve telemetry that auto-tunes the
 //!   parallel B&B fan-out in `partition::ilp`.
 //!
@@ -36,11 +43,13 @@
 pub mod client;
 pub mod daemon;
 pub mod federation;
+pub mod jobs;
 pub mod protocol;
 pub mod stats;
 
-pub use client::{server_addr, RemotePlanner, ENV_ADDR};
+pub use client::{server_addr, RemotePlanner, RemoteTrainer, TrainSubmission, ENV_ADDR};
 pub use daemon::{serve, Server, DEFAULT_ADDR};
 pub use federation::{parse_host_list, select_planner, FederatedPlanner};
+pub use jobs::{JobSpec, Scheduler};
 pub use protocol::PROTOCOL_VERSION;
 pub use stats::ServerStats;

@@ -18,6 +18,9 @@
 //! | `stats`       | —                                      | `stats`          |
 //! | `cache_flush` | —                                      | `flushed`        |
 //! | `shutdown`    | —                                      | `stopping`       |
+//! | `train`       | `combo`, optional `seed`/`actors`/`max_env_steps`/`max_episodes`/`quantized`/`priority`/`checkpoint_every`/`progress_every`/`resume` | streamed `frame` lines, then `result` |
+//! | `jobs`        | —                                      | `jobs[]`, `draining` |
+//! | `cancel`      | `job`                                  | `job`, `phase`   |
 //!
 //! `sweep` is the cross-product grid form; `plan_many` carries an
 //! arbitrary point list — it is how `Planner::plan_many` travels the
@@ -26,9 +29,9 @@
 //! bumped and a new client talking to a v1 daemon gets a clean
 //! version-mismatch error instead of a missing-field parse failure.
 //!
-//! Two later additions stay within v2 because they are strictly
+//! Two later additions stayed within v2 because they are strictly
 //! additive: `"stream":true` on `sweep` asks the daemon to write one
-//! `{"v":2,"ok":true,"progress":{…}}` line per completed grid point
+//! `{"v":3,"ok":true,"progress":{…}}` line per completed grid point
 //! before the final `plans` line (an old daemon ignores the flag and
 //! sends the final line only — a streaming client must treat the first
 //! line *without* a `progress` key as the final response); and the
@@ -37,8 +40,25 @@
 //! [`profile_payload`] builds — an old daemon answers it with its
 //! normal unknown-verb error.
 //!
-//! Responses are `{"v":2,"ok":true,...payload}` or
-//! `{"v":2,"ok":false,"error":"..."}`.  The plan payload is the
+//! v3 adds training-as-a-service.  `train` submits a job to the
+//! daemon's scheduler and holds the connection open while the runner
+//! streams the trainer's frames hoisted into the response envelope via
+//! [`frame_response`] —
+//! `{"v":3,"ok":true,"frame":"episode"|"scale"|"progress"|"checkpoint",…}`
+//! — until the final line, which carries `result` instead of `frame`
+//! (that key is how clients tell the two apart).  `checkpoint` frames
+//! embed a full [`Checkpoint`] under `data`, which is also what the
+//! optional `resume` request field carries back on re-submission after
+//! a host death.  `jobs` lists the scheduler's queue and `cancel`
+//! flips a job's cancel flag.  The version was bumped (rather than
+//! staying additive like streaming sweeps) because a `train` client
+//! must *know* the daemon schedules jobs: a v2 daemon would accept the
+//! connection, then answer with unknown-verb after the client already
+//! committed to streaming, and a half-understood `resume` checkpoint
+//! would silently restart training from scratch.
+//!
+//! Responses are `{"v":3,"ok":true,...payload}` or
+//! `{"v":3,"ok":false,"error":"..."}`.  The plan payload is the
 //! serialized form of [`PlanOutcome`] minus provenance (the *receiving*
 //! side knows which backend it asked) and carries the full schedule with
 //! raw `f64` start/finish times; the serializer's
@@ -47,6 +67,7 @@
 //! `tests/server.rs`).
 //!
 //! [`PlanOutcome`]: crate::coordinator::planner::PlanOutcome
+//! [`Checkpoint`]: crate::coordinator::Checkpoint
 
 use std::collections::BTreeMap;
 
@@ -58,7 +79,9 @@ use crate::util::json::Json;
 
 /// Bump on any incompatible change to the request or response shapes.
 /// v2: `plan_many` verb; schedule entries carry a required `mm` flag.
-pub const PROTOCOL_VERSION: u64 = 2;
+/// v3: training-as-a-service — `train` (streamed `frame` lines before a
+/// `result` final), `jobs`, and `cancel` verbs.
+pub const PROTOCOL_VERSION: u64 = 3;
 
 /// One point of a `plan_many` request as it travels the wire: combos go
 /// by registry name (a customized `ComboConfig` cannot be expressed —
@@ -81,6 +104,26 @@ pub enum Request {
     Stats,
     CacheFlush,
     Shutdown,
+    /// Submit a training job.  `resume` carries an opaque checkpoint
+    /// object (validated by the scheduler at submit time, not here — the
+    /// protocol layer does not depend on checkpoint internals).
+    Train {
+        combo: String,
+        seed: u64,
+        actors: usize,
+        max_env_steps: usize,
+        max_episodes: usize,
+        quantized: bool,
+        /// Scheduler priority: higher runs first among queued jobs.
+        priority: i64,
+        /// Emit a `checkpoint` frame every N env steps (0 = off).
+        checkpoint_every: u64,
+        /// Emit a `progress` frame every N env steps (0 = off).
+        progress_every: u64,
+        resume: Option<Json>,
+    },
+    Jobs,
+    Cancel { job: String },
 }
 
 /// Strict integer read: `Json::as_usize` truncates fractions and
@@ -90,6 +133,19 @@ pub enum Request {
 fn exact_usize(v: &Json) -> Option<usize> {
     let n = v.as_f64()?;
     (n >= 0.0 && n.fract() == 0.0 && n <= u32::MAX as f64).then_some(n as usize)
+}
+
+/// Strict wide read for seeds and step cadences: exact non-negative
+/// integers up to 2^53 (the JSON-number exactness bound).
+fn exact_u64(v: &Json) -> Option<u64> {
+    let n = v.as_f64()?;
+    (n >= 0.0 && n.fract() == 0.0 && n <= 9_007_199_254_740_992.0).then_some(n as u64)
+}
+
+/// Strict signed read for priorities.
+fn exact_i64(v: &Json) -> Option<i64> {
+    let n = v.as_f64()?;
+    (n.fract() == 0.0 && n.abs() <= 9_007_199_254_740_992.0).then_some(n as i64)
 }
 
 impl Request {
@@ -201,6 +257,63 @@ impl Request {
                 }
                 Ok(Request::PlanMany { points })
             }
+            "train" => {
+                let combo = root
+                    .get("combo")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("train: missing `combo`"))?
+                    .to_string();
+                let opt_u64 = |k: &str, default: u64| match root.get(k) {
+                    None => Ok(default),
+                    Some(v) => exact_u64(v)
+                        .ok_or_else(|| anyhow!("train: `{k}` must be a non-negative integer")),
+                };
+                let opt_pos = |k: &str, default: usize| match root.get(k) {
+                    None => Ok(default),
+                    Some(v) => exact_usize(v)
+                        .filter(|&n| n > 0)
+                        .ok_or_else(|| anyhow!("train: `{k}` must be a positive integer")),
+                };
+                let seed = opt_u64("seed", 1)?;
+                let actors = opt_pos("actors", 1)?;
+                let max_env_steps = opt_pos("max_env_steps", 8_000)?;
+                let max_episodes = opt_pos("max_episodes", 300)?;
+                let quantized =
+                    root.get("quantized").and_then(Json::as_bool).unwrap_or(true);
+                let priority = match root.get("priority") {
+                    None => 0,
+                    Some(v) => exact_i64(v)
+                        .ok_or_else(|| anyhow!("train: `priority` must be an integer"))?,
+                };
+                let checkpoint_every = opt_u64("checkpoint_every", 0)?;
+                let progress_every = opt_u64("progress_every", 0)?;
+                let resume = match root.get("resume") {
+                    None => None,
+                    Some(v @ Json::Obj(_)) => Some(v.clone()),
+                    Some(_) => bail!("train: `resume` must be a checkpoint object"),
+                };
+                Ok(Request::Train {
+                    combo,
+                    seed,
+                    actors,
+                    max_env_steps,
+                    max_episodes,
+                    quantized,
+                    priority,
+                    checkpoint_every,
+                    progress_every,
+                    resume,
+                })
+            }
+            "jobs" => Ok(Request::Jobs),
+            "cancel" => {
+                let job = root
+                    .get("job")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("cancel: missing `job`"))?
+                    .to_string();
+                Ok(Request::Cancel { job })
+            }
             "stats" => Ok(Request::Stats),
             "cache_flush" => Ok(Request::CacheFlush),
             "shutdown" => Ok(Request::Shutdown),
@@ -263,6 +376,41 @@ impl Request {
                 obj.insert("batch".into(), Json::Num(*batch as f64));
                 obj.insert("quantized".into(), Json::Bool(*quantized));
             }
+            Request::Train {
+                combo,
+                seed,
+                actors,
+                max_env_steps,
+                max_episodes,
+                quantized,
+                priority,
+                checkpoint_every,
+                progress_every,
+                resume,
+            } => {
+                obj.insert("verb".into(), Json::Str("train".into()));
+                obj.insert("combo".into(), Json::Str(combo.clone()));
+                obj.insert("seed".into(), Json::Num(*seed as f64));
+                obj.insert("actors".into(), Json::Num(*actors as f64));
+                obj.insert("max_env_steps".into(), Json::Num(*max_env_steps as f64));
+                obj.insert("max_episodes".into(), Json::Num(*max_episodes as f64));
+                obj.insert("quantized".into(), Json::Bool(*quantized));
+                obj.insert("priority".into(), Json::Num(*priority as f64));
+                obj.insert("checkpoint_every".into(), Json::Num(*checkpoint_every as f64));
+                obj.insert("progress_every".into(), Json::Num(*progress_every as f64));
+                // Omitted when absent: fresh submissions stay small and
+                // a missing key is unambiguous on the wire.
+                if let Some(ckpt) = resume {
+                    obj.insert("resume".into(), ckpt.clone());
+                }
+            }
+            Request::Jobs => {
+                obj.insert("verb".into(), Json::Str("jobs".into()));
+            }
+            Request::Cancel { job } => {
+                obj.insert("verb".into(), Json::Str("cancel".into()));
+                obj.insert("job".into(), Json::Str(job.clone()));
+            }
             Request::Stats => {
                 obj.insert("verb".into(), Json::Str("stats".into()));
             }
@@ -287,11 +435,14 @@ impl Request {
             Request::Stats => "stats",
             Request::CacheFlush => "cache_flush",
             Request::Shutdown => "shutdown",
+            Request::Train { .. } => "train",
+            Request::Jobs => "jobs",
+            Request::Cancel { .. } => "cancel",
         }
     }
 }
 
-/// `{"v":2,"ok":true}` extended with the payload fields of `body`.
+/// `{"v":3,"ok":true}` extended with the payload fields of `body`.
 pub fn ok_response(body: BTreeMap<String, Json>) -> Json {
     let mut obj = body;
     obj.insert("v".to_string(), Json::Num(PROTOCOL_VERSION as f64));
@@ -300,7 +451,7 @@ pub fn ok_response(body: BTreeMap<String, Json>) -> Json {
 }
 
 /// One mid-stream line of a streaming sweep:
-/// `{"v":2,"ok":true,"progress":{…}}`.  Clients distinguish these from
+/// `{"v":3,"ok":true,"progress":{…}}`.  Clients distinguish these from
 /// the final response by the presence of the `progress` key.
 pub fn progress_response(point: &crate::coordinator::SweepPoint) -> Json {
     let mut p = BTreeMap::new();
@@ -316,6 +467,22 @@ pub fn progress_response(point: &crate::coordinator::SweepPoint) -> Json {
     let mut obj = BTreeMap::new();
     obj.insert("progress".to_string(), Json::Obj(p));
     ok_response(obj)
+}
+
+/// One mid-stream line of a streaming `train` job: the trainer's frame
+/// object (always a `Json::Obj` with a `frame` kind, a `job` id and the
+/// kind-specific fields) hoisted into the response envelope —
+/// `{"v":3,"ok":true,"frame":"episode",…}`.  Clients distinguish frames
+/// from the final response by the presence of the `frame` key; the
+/// final line carries `result` instead.
+pub fn frame_response(frame: &Json) -> Json {
+    let body = match frame {
+        Json::Obj(map) => map.clone(),
+        // Trainer frames are objects by construction; anything else
+        // would be a bug, surfaced as a bare ok line rather than a hang.
+        _ => BTreeMap::new(),
+    };
+    ok_response(body)
 }
 
 /// Build the `profile` verb's payload: run the DSE profiler for a
@@ -364,7 +531,7 @@ pub fn profile_payload(combo: &str, batch: usize, quantized: bool) -> Result<Jso
     Ok(Json::Obj(profile))
 }
 
-/// `{"v":2,"ok":false,"error":"..."}`.
+/// `{"v":3,"ok":false,"error":"..."}`.
 pub fn error_response(msg: &str) -> Json {
     let mut obj = BTreeMap::new();
     obj.insert("v".to_string(), Json::Num(PROTOCOL_VERSION as f64));
@@ -567,6 +734,20 @@ mod tests {
             Request::Stats,
             Request::CacheFlush,
             Request::Shutdown,
+            Request::Train {
+                combo: "dqn_cartpole".into(),
+                seed: 7,
+                actors: 4,
+                max_env_steps: 5_000,
+                max_episodes: 120,
+                quantized: false,
+                priority: -3,
+                checkpoint_every: 1_000,
+                progress_every: 500,
+                resume: Some(Json::obj(vec![("ckpt_version", Json::Num(1.0))])),
+            },
+            Request::Jobs,
+            Request::Cancel { job: "job-3".into() },
         ];
         for req in reqs {
             let line = req.to_line().unwrap();
@@ -590,29 +771,29 @@ mod tests {
         for bad in [
             r#"{"v":1.9,"verb":"stats"}"#,
             r#"{"v":-1,"verb":"stats"}"#,
-            r#"{"v":2,"verb":"plan","combo":"dqn_cartpole","batch":63.7}"#,
-            r#"{"v":2,"verb":"plan","combo":"dqn_cartpole","batch":-8}"#,
-            r#"{"v":2,"verb":"sweep","combos":["dqn_cartpole"],"batches":[64.5]}"#,
-            r#"{"v":2,"verb":"plan_many","points":[{"combo":"dqn_cartpole","batch":0}]}"#,
-            r#"{"v":2,"verb":"plan_many","points":[{"combo":"dqn_cartpole","batch":8.5}]}"#,
+            r#"{"v":3,"verb":"plan","combo":"dqn_cartpole","batch":63.7}"#,
+            r#"{"v":3,"verb":"plan","combo":"dqn_cartpole","batch":-8}"#,
+            r#"{"v":3,"verb":"sweep","combos":["dqn_cartpole"],"batches":[64.5]}"#,
+            r#"{"v":3,"verb":"plan_many","points":[{"combo":"dqn_cartpole","batch":0}]}"#,
+            r#"{"v":3,"verb":"plan_many","points":[{"combo":"dqn_cartpole","batch":8.5}]}"#,
         ] {
             assert!(Request::parse_line(bad).is_err(), "{bad} must not parse");
         }
         // Integral floats (JSON has no int type) are of course fine.
-        assert!(Request::parse_line(r#"{"v":2.0,"verb":"stats"}"#).is_ok());
+        assert!(Request::parse_line(r#"{"v":3.0,"verb":"stats"}"#).is_ok());
     }
 
     #[test]
     fn malformed_requests_error_cleanly() {
         assert!(Request::parse_line("not json").is_err());
-        let e = Request::parse_line(r#"{"v":2,"verb":"fly"}"#).unwrap_err();
+        let e = Request::parse_line(r#"{"v":3,"verb":"fly"}"#).unwrap_err();
         assert!(format!("{e}").contains("unknown verb"), "{e}");
-        let e = Request::parse_line(r#"{"v":2,"verb":"plan","batch":64}"#).unwrap_err();
+        let e = Request::parse_line(r#"{"v":3,"verb":"plan","batch":64}"#).unwrap_err();
         assert!(format!("{e}").contains("missing `combo`"), "{e}");
-        let e = Request::parse_line(r#"{"v":2,"verb":"sweep","combos":[],"batches":[]}"#)
+        let e = Request::parse_line(r#"{"v":3,"verb":"sweep","combos":[],"batches":[]}"#)
             .unwrap_err();
         assert!(format!("{e}").contains("missing") || format!("{e}").contains("empty"), "{e}");
-        let e = Request::parse_line(r#"{"v":2,"verb":"plan_many","points":[]}"#).unwrap_err();
+        let e = Request::parse_line(r#"{"v":3,"verb":"plan_many","points":[]}"#).unwrap_err();
         assert!(format!("{e}").contains("empty points"), "{e}");
     }
 
@@ -621,7 +802,7 @@ mod tests {
         // A pre-streaming line (no `stream` key) parses as non-streaming,
         // and serializing it back omits the key — byte-compatible both ways.
         let legacy =
-            r#"{"v":2,"verb":"sweep","combos":["dqn_cartpole"],"batches":[64],"quantized":true}"#;
+            r#"{"v":3,"verb":"sweep","combos":["dqn_cartpole"],"batches":[64],"quantized":true}"#;
         let req = Request::parse_line(legacy).unwrap();
         let Request::Sweep { stream, .. } = &req else { panic!("parsed as sweep") };
         assert!(!stream);
@@ -637,15 +818,76 @@ mod tests {
         .unwrap();
         assert!(line.contains("\"stream\":true"));
         // Profile rejects a zero batch like the other planning verbs.
-        let e = Request::parse_line(r#"{"v":2,"verb":"profile","combo":"dqn_cartpole","batch":0}"#)
+        let e = Request::parse_line(r#"{"v":3,"verb":"profile","combo":"dqn_cartpole","batch":0}"#)
             .unwrap_err();
         assert!(format!("{e}").contains("positive integer"), "{e}");
         assert_eq!(
-            Request::parse_line(r#"{"v":2,"verb":"profile","combo":"dqn_cartpole","batch":32}"#)
+            Request::parse_line(r#"{"v":3,"verb":"profile","combo":"dqn_cartpole","batch":32}"#)
                 .unwrap()
                 .verb(),
             "profile"
         );
+    }
+
+    #[test]
+    fn train_requests_default_sensibly_and_validate_strictly() {
+        // A minimal submission gets the documented defaults.
+        let min =
+            Request::parse_line(r#"{"v":3,"verb":"train","combo":"dqn_cartpole"}"#).unwrap();
+        let Request::Train {
+            combo,
+            seed,
+            actors,
+            max_env_steps,
+            max_episodes,
+            quantized,
+            priority,
+            checkpoint_every,
+            progress_every,
+            resume,
+        } = &min
+        else {
+            panic!("parsed as train")
+        };
+        assert_eq!(combo, "dqn_cartpole");
+        assert_eq!((*seed, *actors, *max_env_steps, *max_episodes), (1, 1, 8_000, 300));
+        assert!(*quantized);
+        assert_eq!(*priority, 0);
+        assert_eq!((*checkpoint_every, *progress_every), (0, 0));
+        assert!(resume.is_none());
+        // A fresh submission never ships a `resume` key.
+        assert!(!min.to_line().unwrap().contains("resume"));
+        assert_eq!(min.verb(), "train");
+        // Strict field validation: no silent truncation, no scalar resume.
+        for bad in [
+            r#"{"v":3,"verb":"train"}"#,
+            r#"{"v":3,"verb":"train","combo":"dqn_cartpole","actors":0}"#,
+            r#"{"v":3,"verb":"train","combo":"dqn_cartpole","seed":1.5}"#,
+            r#"{"v":3,"verb":"train","combo":"dqn_cartpole","priority":0.5}"#,
+            r#"{"v":3,"verb":"train","combo":"dqn_cartpole","checkpoint_every":-5}"#,
+            r#"{"v":3,"verb":"train","combo":"dqn_cartpole","resume":42}"#,
+            r#"{"v":3,"verb":"cancel"}"#,
+        ] {
+            assert!(Request::parse_line(bad).is_err(), "{bad} must not parse");
+        }
+        let c = Request::parse_line(r#"{"v":3,"verb":"cancel","job":"job-3"}"#).unwrap();
+        assert_eq!(c, Request::Cancel { job: "job-3".into() });
+        assert_eq!(c.verb(), "cancel");
+        assert_eq!(Request::parse_line(r#"{"v":3,"verb":"jobs"}"#).unwrap(), Request::Jobs);
+    }
+
+    #[test]
+    fn frame_lines_hoist_the_trainer_frame() {
+        let frame = Json::obj(vec![
+            ("frame", Json::Str("episode".into())),
+            ("job", Json::Str("job-1".into())),
+            ("reward", Json::Num(10.5)),
+        ]);
+        let line = frame_response(&frame).to_line().unwrap();
+        let parsed = parse_response(&line).unwrap();
+        assert_eq!(parsed.get("frame").and_then(Json::as_str), Some("episode"));
+        assert_eq!(parsed.get("job").and_then(Json::as_str), Some("job-1"));
+        assert_eq!(parsed.get("v").and_then(Json::as_f64), Some(3.0));
     }
 
     #[test]

@@ -57,11 +57,28 @@ pub struct ServerStats {
     pub connections: AtomicU64,
     pub queue_depth: AtomicUsize,
     pub in_flight: AtomicUsize,
-    /// Sliding window of request wall times per verb, µs — the one
-    /// non-atomic member.  Touched once per *request* (not per solve
-    /// iteration), so a short critical section off the solver hot path
-    /// is fine.
+    /// Training jobs accepted by the scheduler (protocol v3 `train`).
+    pub jobs_submitted: AtomicU64,
+    /// Jobs that ran to their limits.
+    pub jobs_completed: AtomicU64,
+    /// Jobs stopped by `cancel` or a drain, whether queued or running.
+    pub jobs_cancelled: AtomicU64,
+    /// Jobs whose runner returned an error.
+    pub jobs_failed: AtomicU64,
+    /// Submissions bounced (queue full or daemon draining).
+    pub jobs_rejected: AtomicU64,
+    /// Jobs currently waiting in the scheduler queue.
+    pub job_queue_depth: AtomicUsize,
+    /// Jobs currently executing on a runner thread.
+    pub jobs_running: AtomicUsize,
+    /// Sliding window of request wall times per verb, µs — touched once
+    /// per *request* (not per solve iteration), so a short critical
+    /// section off the solver hot path is fine.
     verb_latency: Mutex<BTreeMap<String, VecDeque<u64>>>,
+    /// Sliding window of per-job wall times, µs (one sample per job that
+    /// reached a terminal phase — the `stats` verb turns it into p50/p90/
+    /// p99 percentiles).
+    job_wall_us: Mutex<VecDeque<u64>>,
 }
 
 impl ServerStats {
@@ -85,6 +102,16 @@ impl ServerStats {
     pub fn record_latency(&self, verb: &str, wall_us: u64) {
         let mut map = self.verb_latency.lock().unwrap();
         let window = map.entry(verb.to_string()).or_default();
+        if window.len() == LATENCY_SAMPLES {
+            window.pop_front();
+        }
+        window.push_back(wall_us);
+    }
+
+    /// Record the wall time of one finished training job, µs.  Same
+    /// sliding-window policy as [`ServerStats::record_latency`].
+    pub fn record_job_wall(&self, wall_us: u64) {
+        let mut window = self.job_wall_us.lock().unwrap();
         if window.len() == LATENCY_SAMPLES {
             window.pop_front();
         }
@@ -146,6 +173,30 @@ impl ServerStats {
             lat.insert(verb.clone(), Json::Obj(v));
         }
         obj.insert("latency_us".into(), Json::Obj(lat));
+
+        // Training-job scheduler: lifecycle counters plus per-job
+        // wall-time percentiles over the recent window.
+        let mut jobs = std::collections::BTreeMap::new();
+        jobs.insert("submitted".into(), num(self.jobs_submitted.load(Ordering::Relaxed)));
+        jobs.insert("completed".into(), num(self.jobs_completed.load(Ordering::Relaxed)));
+        jobs.insert("cancelled".into(), num(self.jobs_cancelled.load(Ordering::Relaxed)));
+        jobs.insert("failed".into(), num(self.jobs_failed.load(Ordering::Relaxed)));
+        jobs.insert("rejected".into(), num(self.jobs_rejected.load(Ordering::Relaxed)));
+        jobs.insert(
+            "queue_depth".into(),
+            num(self.job_queue_depth.load(Ordering::Relaxed) as u64),
+        );
+        jobs.insert("running".into(), num(self.jobs_running.load(Ordering::Relaxed) as u64));
+        let mut sorted: Vec<u64> = self.job_wall_us.lock().unwrap().iter().copied().collect();
+        sorted.sort_unstable();
+        let mut w = std::collections::BTreeMap::new();
+        w.insert("count".into(), num(sorted.len() as u64));
+        w.insert("p50_us".into(), num(percentile(&sorted, 0.50)));
+        w.insert("p90_us".into(), num(percentile(&sorted, 0.90)));
+        w.insert("p99_us".into(), num(percentile(&sorted, 0.99)));
+        w.insert("max_us".into(), num(*sorted.last().unwrap_or(&0)));
+        jobs.insert("wall_us".into(), Json::Obj(w));
+        obj.insert("jobs".into(), Json::Obj(jobs));
 
         // Solver telemetry (all solves in this process, remote or not).
         let t = telemetry();
@@ -271,6 +322,26 @@ mod tests {
         assert!(j.get("cache").and_then(|c| c.get("hit_rate")).is_some());
         assert!(j.get("cache").and_then(|c| c.get("evictions")).is_some());
         assert!(j.get("solver").and_then(|s| s.get("solves")).is_some());
+        let jobs = j.get("jobs").expect("jobs section");
+        for key in ["submitted", "completed", "cancelled", "failed", "rejected"] {
+            assert_eq!(jobs.get(key).and_then(Json::as_usize), Some(0), "{key}");
+        }
+        assert_eq!(jobs.get("queue_depth").and_then(Json::as_usize), Some(0));
+        assert_eq!(jobs.get("running").and_then(Json::as_usize), Some(0));
+    }
+
+    #[test]
+    fn job_wall_times_report_windowed_percentiles() {
+        let stats = ServerStats::new();
+        for us in 1..=100u64 {
+            stats.record_job_wall(us);
+        }
+        let j = stats.to_json();
+        let w = j.get("jobs").and_then(|s| s.get("wall_us")).expect("wall window");
+        assert_eq!(w.get("count").and_then(Json::as_usize), Some(100));
+        assert_eq!(w.get("p50_us").and_then(Json::as_usize), Some(51));
+        assert_eq!(w.get("p90_us").and_then(Json::as_usize), Some(90));
+        assert_eq!(w.get("max_us").and_then(Json::as_usize), Some(100));
     }
 
     #[test]

@@ -76,6 +76,60 @@ impl Json {
         }
     }
 
+    /// Build an object from `(key, value)` pairs — sugar for decoders and
+    /// checkpoint writers that would otherwise thread a `BTreeMap`.
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Required-key lookup: like [`Json::get`] but a hard error when the
+    /// key is absent, for decoding checkpoints/wire frames where a missing
+    /// field means a corrupt or incompatible payload.
+    pub fn req(&self, key: &str) -> Result<&Json, JsonError> {
+        self.get(key).ok_or_else(|| JsonError { msg: format!("missing key {key:?}"), pos: 0 })
+    }
+
+    pub fn req_f64(&self, key: &str) -> Result<f64, JsonError> {
+        self.req(key)?
+            .as_f64()
+            .ok_or_else(|| JsonError { msg: format!("key {key:?} is not a number"), pos: 0 })
+    }
+
+    pub fn req_u64(&self, key: &str) -> Result<u64, JsonError> {
+        let n = self.req_f64(key)?;
+        if n < 0.0 || n.fract() != 0.0 || n > (1u64 << 53) as f64 {
+            return Err(JsonError { msg: format!("key {key:?} is not a small u64"), pos: 0 });
+        }
+        Ok(n as u64)
+    }
+
+    pub fn req_str(&self, key: &str) -> Result<&str, JsonError> {
+        self.req(key)?
+            .as_str()
+            .ok_or_else(|| JsonError { msg: format!("key {key:?} is not a string"), pos: 0 })
+    }
+
+    pub fn req_arr(&self, key: &str) -> Result<&[Json], JsonError> {
+        self.req(key)?
+            .as_arr()
+            .ok_or_else(|| JsonError { msg: format!("key {key:?} is not an array"), pos: 0 })
+    }
+
+    /// Required key holding a bit-exact f32 (stored via [`hex_f32s`] of a
+    /// one-element slice).
+    pub fn req_f32_bits(&self, key: &str) -> Result<f32, JsonError> {
+        let v = parse_hex_f32s(self.req_str(key)?)?;
+        if v.len() != 1 {
+            return Err(JsonError { msg: format!("key {key:?} is not a single f32"), pos: 0 });
+        }
+        Ok(v[0])
+    }
+
+    /// Required key holding a hex-encoded u64 (stored via [`hex_u64`]).
+    pub fn req_u64_hex(&self, key: &str) -> Result<u64, JsonError> {
+        parse_hex_u64(self.req_str(key)?)
+    }
+
     /// Strict one-line serializer for wire protocols (the planning
     /// server's JSON-lines framing).  Unlike `Display` — which degrades
     /// non-finite numbers to `null` for best-effort report files — a
@@ -318,6 +372,75 @@ impl<'a> Parser<'a> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Bit-exact numeric codecs for checkpoints.
+//
+// Checkpoints must restore training state *bit-identically*: weights, Adam
+// moments and RNG states cannot tolerate a decimal round-trip (NaN payloads
+// and u64 > 2^53 would not survive `Json::Num`).  Dense float arrays are
+// therefore carried as hex strings of their IEEE-754 bit patterns — 8 hex
+// chars per f32, 16 per f64 — and u64 state words as 16-char hex strings.
+
+/// Encode an f32 slice as a hex string (8 chars per element, big-endian bits).
+pub fn hex_f32s(xs: &[f32]) -> String {
+    let mut out = String::with_capacity(xs.len() * 8);
+    for x in xs {
+        out.push_str(&format!("{:08x}", x.to_bits()));
+    }
+    out
+}
+
+/// Decode a string produced by [`hex_f32s`].
+pub fn parse_hex_f32s(s: &str) -> Result<Vec<f32>, JsonError> {
+    if s.len() % 8 != 0 || !s.is_ascii() {
+        return Err(JsonError { msg: "bad f32 hex array".into(), pos: 0 });
+    }
+    s.as_bytes()
+        .chunks(8)
+        .map(|c| {
+            let chunk = std::str::from_utf8(c).expect("ascii checked above");
+            u32::from_str_radix(chunk, 16)
+                .map(f32::from_bits)
+                .map_err(|_| JsonError { msg: format!("bad f32 hex {chunk:?}"), pos: 0 })
+        })
+        .collect()
+}
+
+/// Encode an f64 slice as a hex string (16 chars per element).
+pub fn hex_f64s(xs: &[f64]) -> String {
+    let mut out = String::with_capacity(xs.len() * 16);
+    for x in xs {
+        out.push_str(&format!("{:016x}", x.to_bits()));
+    }
+    out
+}
+
+/// Decode a string produced by [`hex_f64s`].
+pub fn parse_hex_f64s(s: &str) -> Result<Vec<f64>, JsonError> {
+    if s.len() % 16 != 0 || !s.is_ascii() {
+        return Err(JsonError { msg: "bad f64 hex array".into(), pos: 0 });
+    }
+    s.as_bytes()
+        .chunks(16)
+        .map(|c| {
+            let chunk = std::str::from_utf8(c).expect("ascii checked above");
+            u64::from_str_radix(chunk, 16)
+                .map(f64::from_bits)
+                .map_err(|_| JsonError { msg: format!("bad f64 hex {chunk:?}"), pos: 0 })
+        })
+        .collect()
+}
+
+/// Encode a u64 (e.g. an RNG state word) losslessly as a hex string.
+pub fn hex_u64(x: u64) -> String {
+    format!("{x:016x}")
+}
+
+/// Decode a string produced by [`hex_u64`].
+pub fn parse_hex_u64(s: &str) -> Result<u64, JsonError> {
+    u64::from_str_radix(s, 16).map_err(|_| JsonError { msg: format!("bad u64 hex {s:?}"), pos: 0 })
+}
+
 /// Escape a string for JSON output (report writers).
 pub fn escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
@@ -460,6 +583,26 @@ mod tests {
         for bad in ["NaN", "Infinity", "-Infinity", "[1,NaN]", "{\"x\":Infinity}"] {
             assert!(Json::parse(bad).is_err(), "{bad} must not parse");
         }
+    }
+
+    #[test]
+    fn hex_codecs_are_bit_exact() {
+        let f32s = [0.0f32, -0.0, 1.5, f32::NAN, f32::INFINITY, f32::MIN_POSITIVE, -123.456];
+        let back = parse_hex_f32s(&hex_f32s(&f32s)).unwrap();
+        for (a, b) in f32s.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let f64s = [0.0f64, -0.0, 1.5e-300, f64::NAN, f64::NEG_INFINITY];
+        let back = parse_hex_f64s(&hex_f64s(&f64s)).unwrap();
+        for (a, b) in f64s.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for x in [0u64, u64::MAX, 0x9E37_79B9_7F4A_7C15] {
+            assert_eq!(parse_hex_u64(&hex_u64(x)).unwrap(), x);
+        }
+        assert!(parse_hex_f32s("zzzzzzzz").is_err());
+        assert!(parse_hex_f32s("abc").is_err());
+        assert!(parse_hex_u64("not hex").is_err());
     }
 
     #[test]

@@ -70,6 +70,18 @@ impl Rng {
         weights.len() - 1
     }
 
+    /// Snapshot the full generator state (SplitMix64 word + cached
+    /// Box-Muller spare) for checkpointing.  `from_parts` restores a
+    /// generator that continues the stream bit-identically.
+    pub fn state_parts(&self) -> (u64, Option<f64>) {
+        (self.state, self.spare_normal)
+    }
+
+    /// Rebuild a generator from a [`Rng::state_parts`] snapshot.
+    pub fn from_parts(state: u64, spare_normal: Option<f64>) -> Self {
+        Self { state, spare_normal }
+    }
+
     /// He-uniform tensor init, mirroring `python/compile/nets.py::init_scale`.
     pub fn he_uniform(&mut self, n: usize, fan_in: usize) -> Vec<f32> {
         let lim = (6.0 / fan_in as f64).sqrt();
@@ -135,6 +147,18 @@ mod tests {
         let mut a = root.fork(0);
         let mut b = root.fork(1);
         assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn state_round_trip_continues_stream() {
+        let mut rng = Rng::new(11);
+        rng.normal(); // leave a cached spare in place
+        let (state, spare) = rng.state_parts();
+        let mut copy = Rng::from_parts(state, spare);
+        for _ in 0..16 {
+            assert_eq!(rng.normal().to_bits(), copy.normal().to_bits());
+            assert_eq!(rng.next_u64(), copy.next_u64());
+        }
     }
 
     #[test]

@@ -2,14 +2,24 @@
 //! ephemeral port, drive it with concurrent `plan`/`sweep` clients,
 //! assert remote schedules are *byte-identical* to the in-process
 //! planner's, and exercise the malformed-request and protocol-version
-//! error paths.  Everything runs on the default (non-`pjrt`) feature
-//! set over loopback TCP.
+//! error paths.  The protocol-v3 training verbs get the same
+//! treatment: `train` streams a job whose final metrics are
+//! bit-identical to the in-process trainer's, `jobs`/`cancel` manage
+//! the scheduler over the wire, a shutdown drains running jobs to a
+//! hand-off checkpoint, and a two-daemon fail-over completes a job on
+//! the survivor bit-exactly.  Everything runs on the default
+//! (non-`pjrt`) feature set over loopback TCP.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::time::Duration;
 
-use apdrl::coordinator::{combo, static_phase};
-use apdrl::server::{RemotePlanner, Server, PROTOCOL_VERSION};
+use apdrl::coordinator::metrics::RunMetrics;
+use apdrl::coordinator::{
+    combo, static_phase, train_combo_actors, LocalPlanner, PlanRequest, Planner, TrainLimits,
+};
+use apdrl::exec::CpuBackend;
+use apdrl::server::{RemotePlanner, RemoteTrainer, Server, TrainSubmission, PROTOCOL_VERSION};
 use apdrl::util::json::Json;
 
 /// Boot a server on an ephemeral loopback port; returns its address and
@@ -162,17 +172,17 @@ fn malformed_and_mismatched_requests_error_without_killing_the_connection() {
     let resp = ask(r#"{"verb":"stats"}"#);
     assert!(err_of(&resp).contains("missing protocol version"), "{resp}");
     // Unknown verb.
-    let resp = ask(r#"{"v":2,"verb":"transmogrify"}"#);
+    let resp = ask(r#"{"v":3,"verb":"transmogrify"}"#);
     assert!(err_of(&resp).contains("unknown verb"), "{resp}");
     // Unknown combo: a *planning* error, still a clean protocol answer.
-    let resp = ask(r#"{"v":2,"verb":"plan","combo":"dqn_tetris","batch":8}"#);
+    let resp = ask(r#"{"v":3,"verb":"plan","combo":"dqn_tetris","batch":8}"#);
     assert!(err_of(&resp).contains("unknown combo"), "{resp}");
     // Zero batch.
-    let resp = ask(r#"{"v":2,"verb":"plan","combo":"dqn_cartpole","batch":0}"#);
+    let resp = ask(r#"{"v":3,"verb":"plan","combo":"dqn_cartpole","batch":0}"#);
     assert!(err_of(&resp).contains("batch"), "{resp}");
 
     // After all those errors the same connection still serves requests.
-    let resp = ask(r#"{"v":2,"verb":"stats"}"#);
+    let resp = ask(r#"{"v":3,"verb":"stats"}"#);
     assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp}");
     let errors = resp
         .get("stats")
@@ -236,7 +246,7 @@ fn streaming_sweep_pushes_progress_lines_then_the_final_plans() {
     let mut stream = TcpStream::connect(&addr).unwrap();
     let mut reader = BufReader::new(stream.try_clone().unwrap());
     let line = concat!(
-        r#"{"v":2,"verb":"sweep","combos":["dqn_cartpole","a2c_invpend"],"#,
+        r#"{"v":3,"verb":"sweep","combos":["dqn_cartpole","a2c_invpend"],"#,
         r#""batches":[41],"quantized":true,"stream":true}"#
     );
     stream.write_all(line.as_bytes()).unwrap();
@@ -355,4 +365,239 @@ fn remote_respects_precision_mode() {
     assert_eq!(fp32.makespan_us.to_bits(), local_f.schedule.makespan_us.to_bits());
     client.shutdown().unwrap();
     handle.join().unwrap();
+}
+
+/// The protocol-v3 `train` verb end to end: the daemon schedules the
+/// job, streams episode/checkpoint/progress frames all tagged with the
+/// job id, and the final payload's metrics are **bit-identical** to
+/// the same run trained in-process — every streamed episode reward is
+/// the reward log entry itself, not an approximation of it.
+#[test]
+fn train_verb_streams_frames_and_returns_bit_exact_metrics() {
+    let (addr, handle) = boot(2);
+    let trainer = RemoteTrainer::connect(&[addr.clone()]).unwrap();
+    let sub = TrainSubmission {
+        combo: "dqn_cartpole".into(),
+        seed: 1,
+        actors: 1,
+        max_env_steps: 400,
+        max_episodes: 10_000,
+        quantized: false,
+        priority: 0,
+        checkpoint_every: 150,
+        progress_every: 100,
+    };
+    let mut frames = Vec::new();
+    let result = trainer.train(&sub, &mut |_, f| frames.push(f.clone())).unwrap();
+    assert_eq!(result.get("status").and_then(Json::as_str), Some("done"), "{result}");
+    assert_eq!(result.get("cancelled").and_then(Json::as_bool), Some(false));
+    let job = result.get("job").and_then(Json::as_str).unwrap().to_string();
+    let kinds: Vec<&str> =
+        frames.iter().filter_map(|f| f.get("frame").and_then(Json::as_str)).collect();
+    for want in ["episode", "checkpoint", "progress"] {
+        assert!(kinds.contains(&want), "missing {want} frame in {kinds:?}");
+    }
+    assert!(
+        frames.iter().all(|f| f.get("job").and_then(Json::as_str) == Some(job.as_str())),
+        "every streamed frame must carry its job id"
+    );
+    let metrics = RunMetrics::from_json(result.get("metrics").expect("metrics")).unwrap();
+    for f in &frames {
+        if f.get("frame").and_then(Json::as_str) != Some("episode") {
+            continue;
+        }
+        let n = f.get("episode").and_then(Json::as_usize).unwrap();
+        let r = f.get("reward").and_then(Json::as_f64).unwrap();
+        assert_eq!(r.to_bits(), metrics.episode_rewards[n - 1].to_bits());
+    }
+    // In-process control over the identical plan path: the remote job
+    // must reproduce the local trajectory bit for bit.
+    let c = combo("dqn_cartpole");
+    let plan = LocalPlanner.plan(&PlanRequest::new(c.clone(), c.batch, false)).unwrap();
+    let mut backend = CpuBackend::from_outcome(&plan).unwrap();
+    let limits = TrainLimits { max_env_steps: 400, max_episodes: 10_000 };
+    let local = train_combo_actors(&mut backend, &c, 1, limits, 1, false).unwrap();
+    assert_eq!(local.metrics.episode_rewards, metrics.episode_rewards);
+    assert_eq!(local.metrics.losses, metrics.losses);
+    assert_eq!(local.metrics.train_steps, metrics.train_steps);
+    assert_eq!(local.metrics.env_steps, metrics.env_steps);
+    // Job telemetry made it into the stats verb.
+    let client = RemotePlanner::connect(&addr).unwrap();
+    let stats = client.stats().unwrap();
+    let jobs = stats.get("jobs").expect("stats must carry a jobs section");
+    assert_eq!(jobs.get("completed").and_then(Json::as_usize), Some(1), "{stats}");
+    client.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+/// `jobs` and `cancel` manage the scheduler over the wire: a running
+/// job shows up in the listing, a cancel stops it at the next round
+/// boundary with its prefix metrics intact, and cancelling an unknown
+/// id is a clean protocol error — not a dead daemon.
+#[test]
+fn jobs_listing_and_cancel_stop_a_running_job() {
+    let (addr, handle) = boot(2);
+    let addr2 = addr.clone();
+    let worker = std::thread::spawn(move || {
+        let trainer = RemoteTrainer::connect(&[addr2]).unwrap();
+        let sub = TrainSubmission {
+            combo: "dqn_cartpole".into(),
+            seed: 3,
+            actors: 1,
+            max_env_steps: 50_000_000, // far beyond any test budget: only cancel ends it
+            max_episodes: 10_000_000,
+            quantized: false,
+            priority: 0,
+            checkpoint_every: 1_000,
+            progress_every: 0,
+        };
+        trainer.train(&sub, &mut |_, _| {}).unwrap()
+    });
+    let client = RemotePlanner::connect(&addr).unwrap();
+    let mut tries = 0;
+    let job = loop {
+        tries += 1;
+        assert!(tries < 2_000, "job never reached the runner");
+        let (jobs, draining) = client.jobs().unwrap();
+        assert!(!draining);
+        let running = jobs
+            .as_arr()
+            .unwrap()
+            .iter()
+            .find(|j| j.get("phase").and_then(Json::as_str) == Some("running"))
+            .and_then(|j| j.get("job").and_then(Json::as_str))
+            .map(str::to_string);
+        if let Some(id) = running {
+            break id;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    assert_eq!(client.cancel_job(&job).unwrap(), "running");
+    let result = worker.join().unwrap();
+    assert_eq!(result.get("status").and_then(Json::as_str), Some("cancelled"), "{result}");
+    assert_eq!(result.get("cancelled").and_then(Json::as_bool), Some(true));
+    assert!(result.get("metrics").is_some(), "prefix metrics must be reported: {result}");
+    assert!(client.cancel_job("job-404").is_err());
+    client.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+/// Graceful shutdown drains running jobs: the streaming client gets
+/// exactly one final hand-off checkpoint frame, then a cancelled
+/// result flagged `draining` — which, with no survivor to resubmit to,
+/// the trainer surfaces as an every-host-is-draining error.
+#[test]
+fn shutdown_drains_a_running_job_to_a_handoff_checkpoint() {
+    let (addr, handle) = boot(2);
+    let addr2 = addr.clone();
+    let worker = std::thread::spawn(move || {
+        let trainer = RemoteTrainer::connect(&[addr2]).unwrap();
+        let sub = TrainSubmission {
+            combo: "dqn_cartpole".into(),
+            seed: 5,
+            actors: 1,
+            max_env_steps: 50_000_000, // runs until the drain cancels it
+            max_episodes: 10_000_000,
+            quantized: false,
+            priority: 0,
+            checkpoint_every: 200,
+            progress_every: 0,
+        };
+        let mut finals = 0usize;
+        let err = trainer
+            .train(&sub, &mut |_, f| {
+                if f.get("frame").and_then(Json::as_str) == Some("checkpoint")
+                    && f.get("final").and_then(Json::as_bool) == Some(true)
+                {
+                    finals += 1;
+                }
+            })
+            .unwrap_err();
+        (finals, format!("{err:#}"))
+    });
+    let client = RemotePlanner::connect(&addr).unwrap();
+    let mut tries = 0;
+    loop {
+        tries += 1;
+        assert!(tries < 2_000, "job never reached the runner");
+        let (jobs, _) = client.jobs().unwrap();
+        let running = jobs
+            .as_arr()
+            .unwrap()
+            .iter()
+            .any(|j| j.get("phase").and_then(Json::as_str) == Some("running"));
+        if running {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    client.shutdown().unwrap();
+    let (finals, err) = worker.join().unwrap();
+    assert_eq!(finals, 1, "a drained job must stream exactly one final hand-off checkpoint");
+    assert!(err.contains("draining"), "{err}");
+    handle.join().unwrap();
+}
+
+/// The acceptance fail-over scenario: two daemons, a mid-job drain of
+/// the serving host, and the client resubmitting its newest streamed
+/// checkpoint to the survivor.  The job completes on the second host
+/// and the full streamed episode log — the dying host's prefix plus
+/// the survivor's replayed remainder — matches the final reward log
+/// bit for bit.
+#[test]
+fn dying_host_hands_the_job_off_to_a_survivor_bit_exactly() {
+    let (addr_a, handle_a) = boot(2);
+    let (addr_b, handle_b) = boot(2);
+    let trainer = RemoteTrainer::connect(&[addr_a.clone(), addr_b.clone()]).unwrap();
+    let sub = TrainSubmission {
+        combo: "dqn_cartpole".into(),
+        seed: 2,
+        actors: 1,
+        max_env_steps: 6_000,
+        max_episodes: 10_000,
+        quantized: false,
+        priority: 0,
+        checkpoint_every: 100,
+        progress_every: 0,
+    };
+    let mut episodes: Vec<(usize, f64)> = Vec::new();
+    let mut hosts_seen: Vec<String> = Vec::new();
+    let mut killed: Option<String> = None;
+    let result = trainer
+        .train(&sub, &mut |host, f| {
+            if !hosts_seen.contains(&host.to_string()) {
+                hosts_seen.push(host.to_string());
+            }
+            match f.get("frame").and_then(Json::as_str) {
+                Some("episode") => episodes.push((
+                    f.get("episode").and_then(Json::as_usize).unwrap(),
+                    f.get("reward").and_then(Json::as_f64).unwrap(),
+                )),
+                // First checkpoint: take down the serving host mid-job,
+                // forcing the hand-off path.
+                Some("checkpoint") if killed.is_none() => {
+                    killed = Some(host.to_string());
+                    RemotePlanner::connect(host).unwrap().shutdown().unwrap();
+                }
+                _ => {}
+            }
+        })
+        .unwrap();
+    assert_eq!(result.get("status").and_then(Json::as_str), Some("done"), "{result}");
+    let killed = killed.expect("a checkpoint frame must have arrived");
+    assert_eq!(hosts_seen.len(), 2, "the job must stream from both hosts: {hosts_seen:?}");
+    let metrics = RunMetrics::from_json(result.get("metrics").expect("metrics")).unwrap();
+    assert!(metrics.env_steps >= 6_000, "the resumed job must run to its step limit");
+    assert!(!episodes.is_empty());
+    for (n, r) in &episodes {
+        assert_eq!(
+            r.to_bits(),
+            metrics.episode_rewards[n - 1].to_bits(),
+            "streamed episode {n} diverged from the final reward log"
+        );
+    }
+    let survivor = if killed == addr_a { &addr_b } else { &addr_a };
+    RemotePlanner::connect(survivor).unwrap().shutdown().unwrap();
+    handle_a.join().unwrap();
+    handle_b.join().unwrap();
 }

@@ -8,14 +8,20 @@
 //!   level — not logged);
 //! * a DQN-CartPole convergence smoke: mean reward improves over
 //!   training, and the quantized run tracks the FP32 control within a
-//!   stated tolerance.
+//!   stated tolerance;
+//! * the training-as-a-service checkpoint contract: a job snapshotted
+//!   every K env steps resumes **bit-identically** from any snapshot on
+//!   a fresh backend — per algorithm, including the cancelled-job
+//!   hand-off path the daemon federation rides.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use apdrl::coordinator::config::ComboConfig;
 use apdrl::coordinator::metrics::RunMetrics;
 use apdrl::coordinator::{
-    combo, train_combo, train_combo_actors, LocalPlanner, PlanRequest, Planner, TrainLimits,
+    combo, train_combo, train_combo_actors, train_combo_job, Checkpoint, JobOptions, LocalPlanner,
+    PlanRequest, Planner, TrainLimits,
 };
 use apdrl::drl::compute::DqnCompute;
 use apdrl::drl::replay::{ReplayBuffer, StoredAction};
@@ -25,6 +31,7 @@ use apdrl::exec::{Backend, CpuBackend, CpuDqn, ExecPolicy, Pool};
 use apdrl::graph::{Algo, NetSpec};
 use apdrl::hw::Format;
 use apdrl::quant::formats::round_to;
+use apdrl::util::json::Json;
 use apdrl::util::Rng;
 
 /// A small custom combo so per-algorithm loop tests stay fast; envs and
@@ -428,6 +435,212 @@ fn actors_8_out_collects_the_scalar_path() {
         rates[1],
         rates[0]
     );
+}
+
+/// Run one `train_combo_job` with job hooks attached (seed 1, one
+/// actor, quiet), collecting every streamed frame.
+fn run_job(
+    backend: &mut CpuBackend,
+    c: &ComboConfig,
+    limits: TrainLimits,
+    checkpoint_every: u64,
+    quantized: bool,
+    cancel: Option<&AtomicBool>,
+    resume: Option<&Checkpoint>,
+) -> (apdrl::coordinator::TrainResult, Vec<Json>) {
+    let mut frames: Vec<Json> = Vec::new();
+    let mut sink = |f: &Json| frames.push(f.clone());
+    let opts = JobOptions {
+        job_id: Some("ckpt-test".into()),
+        cancel,
+        checkpoint_every,
+        progress_every: 0,
+        sink: Some(&mut sink),
+        resume,
+        quantized,
+    };
+    let r = train_combo_job(backend, c, 1, limits, 1, false, opts).expect("training must run");
+    (r, frames)
+}
+
+/// Every checkpoint carried by the streamed frames, in emission order
+/// (periodic snapshots first, the final one last).
+fn checkpoints_of(frames: &[Json]) -> Vec<Checkpoint> {
+    frames
+        .iter()
+        .filter(|f| f.get("frame").and_then(Json::as_str) == Some("checkpoint"))
+        .map(|f| {
+            Checkpoint::from_json(f.get("data").expect("checkpoint data"))
+                .expect("checkpoint must parse")
+        })
+        .collect()
+}
+
+/// Everything a training trajectory is, compared bit-for-bit (wall
+/// clock excepted — it is the one field allowed to differ).
+fn assert_metrics_bit_identical(a: &RunMetrics, b: &RunMetrics) {
+    assert_eq!(a.episode_rewards, b.episode_rewards, "episode rewards diverged");
+    assert_eq!(a.losses, b.losses, "per-step losses diverged");
+    assert_eq!(a.scale_transitions, b.scale_transitions, "loss-scale FSM logs diverged");
+    assert_eq!(a.overflows, b.overflows, "overflow counts diverged");
+    assert_eq!(a.final_loss_scale.to_bits(), b.final_loss_scale.to_bits());
+    assert_eq!(a.train_steps, b.train_steps, "train step counts diverged");
+    assert_eq!(a.env_steps, b.env_steps, "env step counts diverged");
+}
+
+/// The checkpoint-resume contract for one combo/backend: an
+/// uninterrupted reference run vs. the same job resumed on a *fresh*
+/// backend from its first mid-run snapshot.  Rewards, losses, FSM log
+/// and final state (agent weights + Adam moments + loss-scale FSM, env
+/// fleet, master RNG) must match bit-for-bit — checkpoint payloads
+/// encode floats as raw bits, so `Json` equality *is* bit equality.
+/// Returns the reference metrics for combo-specific extra assertions.
+fn assert_resume_is_bit_identical(
+    c: &ComboConfig,
+    make_backend: &dyn Fn() -> CpuBackend,
+    steps: u64,
+    every: u64,
+    quantized: bool,
+) -> RunMetrics {
+    let limits = TrainLimits { max_env_steps: steps, max_episodes: 10_000 };
+    let (reference, ref_frames) =
+        run_job(&mut make_backend(), c, limits, every, quantized, None, None);
+    assert!(!reference.cancelled);
+    let ref_ckpts = checkpoints_of(&ref_frames);
+    assert!(ref_ckpts.len() >= 2, "need a mid-run checkpoint and a final one");
+    let mid = &ref_ckpts[0];
+    assert!(
+        mid.metrics.env_steps > 0 && mid.metrics.env_steps < reference.metrics.env_steps,
+        "first checkpoint must be mid-run ({} of {})",
+        mid.metrics.env_steps,
+        reference.metrics.env_steps
+    );
+    let (resumed, res_frames) =
+        run_job(&mut make_backend(), c, limits, every, quantized, None, Some(mid));
+    assert!(!resumed.cancelled);
+    assert_metrics_bit_identical(&reference.metrics, &resumed.metrics);
+    let ref_final = ref_ckpts.last().expect("final checkpoint");
+    let res_final = checkpoints_of(&res_frames).pop().expect("final checkpoint");
+    assert_eq!(
+        ref_final.agent, res_final.agent,
+        "final agent state (weights, moments, FSM) diverged after resume"
+    );
+    assert_eq!(ref_final.fleet, res_final.fleet, "env fleet state diverged after resume");
+    assert_eq!(ref_final.rng_state, res_final.rng_state, "master RNG diverged after resume");
+    assert_eq!(
+        ref_final.rng_spare.map(f64::to_bits),
+        res_final.rng_spare.map(f64::to_bits),
+        "master RNG spare diverged after resume"
+    );
+    reference.metrics
+}
+
+/// Acceptance (training-as-a-service): quantized DQN — replay buffer,
+/// FP32 masters and the *live* loss-scale FSM must all survive the
+/// checkpoint round trip.
+#[test]
+fn checkpoint_resume_is_bit_identical_quantized_dqn() {
+    let c = combo("dqn_cartpole");
+    let plan = LocalPlanner
+        .plan(&PlanRequest::new(c.clone(), c.batch, true))
+        .expect("static phase");
+    let make = || CpuBackend::from_outcome(&plan).expect("backend").with_train_every(2);
+    let m = assert_resume_is_bit_identical(&c, &make, 2_500, 500, true);
+    assert!(
+        !m.scale_transitions.is_empty(),
+        "the FSM must actually transition for this test to mean anything"
+    );
+}
+
+/// Conv PPO (im2col trunk, on-policy rollout buffer + GAE state).
+#[test]
+fn checkpoint_resume_is_bit_identical_conv_ppo() {
+    let c = tiny_combo(
+        "ppo_ckpt",
+        Algo::Ppo,
+        "mspacman_mini",
+        NetSpec::Conv { in_hw: 12, in_ch: 4, conv: vec![(4, 4, 2)], fc: vec![32, 9] },
+        12 * 12 * 4,
+        9,
+    );
+    let make = || CpuBackend::fp32().with_batch(32);
+    let m = assert_resume_is_bit_identical(&c, &make, 600, 150, false);
+    assert!(m.train_steps >= 30, "run too short to be meaningful: {}", m.train_steps);
+}
+
+/// A2C (on-policy, registry InvertedPendulum combo).
+#[test]
+fn checkpoint_resume_is_bit_identical_a2c() {
+    let c = combo("a2c_invpend");
+    let make = || CpuBackend::fp32().with_batch(32);
+    let m = assert_resume_is_bit_identical(&c, &make, 700, 200, false);
+    assert!(m.train_steps >= 20, "run too short to be meaningful: {}", m.train_steps);
+}
+
+/// DDPG (off-policy continuous control: actor/critic/targets + replay).
+#[test]
+fn checkpoint_resume_is_bit_identical_ddpg() {
+    let c = tiny_combo(
+        "ddpg_ckpt",
+        Algo::Ddpg,
+        "mntncarcont",
+        NetSpec::mlp(&[2, 32, 32, 1]),
+        2,
+        1,
+    );
+    let make = || CpuBackend::fp32().with_warmup(64).with_train_every(4);
+    let m = assert_resume_is_bit_identical(&c, &make, 600, 150, false);
+    assert!(m.train_steps >= 50, "run too short to be meaningful: {}", m.train_steps);
+}
+
+/// The hand-off path end to end, in-process: a job cancelled mid-run
+/// emits a final checkpoint (what a draining daemon streams to its
+/// client), and a fresh backend resuming from it finishes with metrics
+/// and weights bit-identical to the never-interrupted reference.
+#[test]
+fn cancelled_dqn_job_hands_off_and_resumes_bit_identically() {
+    let c = combo("dqn_cartpole");
+    let plan = LocalPlanner
+        .plan(&PlanRequest::new(c.clone(), c.batch, true))
+        .expect("static phase");
+    let limits = TrainLimits { max_env_steps: 2_500, max_episodes: 10_000 };
+    let mut backend = CpuBackend::from_outcome(&plan).expect("backend").with_train_every(2);
+    let (reference, ref_frames) = run_job(&mut backend, &c, limits, 500, true, None, None);
+    let ref_final = checkpoints_of(&ref_frames).pop().expect("final checkpoint");
+
+    // Cancelled half: flip the cooperative flag from the sink once the
+    // stream passes 1 000 env steps — a round boundary later, the loop
+    // stops and emits its hand-off checkpoint.
+    let cancel = AtomicBool::new(false);
+    let mut frames: Vec<Json> = Vec::new();
+    let mut sink = |f: &Json| {
+        if f.get("env_steps").and_then(Json::as_f64).unwrap_or(0.0) >= 1_000.0 {
+            cancel.store(true, Ordering::SeqCst);
+        }
+        frames.push(f.clone());
+    };
+    let mut backend = CpuBackend::from_outcome(&plan).expect("backend").with_train_every(2);
+    let opts = JobOptions {
+        job_id: Some("handoff".into()),
+        cancel: Some(&cancel),
+        checkpoint_every: 500,
+        progress_every: 0,
+        sink: Some(&mut sink),
+        resume: None,
+        quantized: true,
+    };
+    let half = train_combo_job(&mut backend, &c, 1, limits, 1, false, opts).expect("train");
+    assert!(half.cancelled, "the cancel flag must stop the run");
+    assert!(half.metrics.env_steps < reference.metrics.env_steps, "cancel must stop mid-run");
+    let handoff = checkpoints_of(&frames).pop().expect("hand-off checkpoint");
+
+    // Survivor half: resume from the hand-off snapshot to completion.
+    let mut backend = CpuBackend::from_outcome(&plan).expect("backend").with_train_every(2);
+    let (resumed, res_frames) = run_job(&mut backend, &c, limits, 500, true, None, Some(&handoff));
+    assert!(!resumed.cancelled);
+    assert_metrics_bit_identical(&reference.metrics, &resumed.metrics);
+    let res_final = checkpoints_of(&res_frames).pop().expect("final checkpoint");
+    assert_eq!(res_final.agent, ref_final.agent, "weights diverged across the hand-off");
 }
 
 /// The FP32 control routes everything FP32 with no scaler and no masters.
