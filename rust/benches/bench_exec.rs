@@ -22,9 +22,18 @@
 //!              "iters","gflops"} ... ],
 //!   "speedups": { "blocked_vs_naive_256"?: x, ... },
 //!   "train_step": [ {"combo","net","threads","median_ns",...} ... ],
-//!   "actors": [ {"actors","env_steps_per_sec","median_ns",...} ... ]
+//!   "actors": [ {"actors","env_steps_per_sec","median_ns",...} ... ],
+//!   "micro": [ {"name","median_ns",...} ... ]
 //! }
 //! ```
+//!
+//! Perf-regression guard: before overwriting its output, the bench
+//! compares fresh medians against `BENCH_exec.baseline.json` (the
+//! committed smoke-mode baseline; falls back to the previous run's
+//! `BENCH_exec.json`) and prints a `WARN` for any key that regressed
+//! more than 2× — it never fails, because shared CI boxes are noisy and
+//! the baseline may come from different hardware (keys that don't match,
+//! e.g. a different pool width, are simply skipped).
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -59,6 +68,73 @@ fn result_json(r: &BenchResult, extra: &[(&str, Json)]) -> Json {
         obj.insert(k.to_string(), v.clone());
     }
     Json::Obj(obj)
+}
+
+/// Stable comparison key of one `gemm` entry.
+fn gemm_key(r: &Json) -> String {
+    let n = |k: &str| r.get(k).and_then(Json::as_f64).unwrap_or(0.0) as usize;
+    format!(
+        "{}/{}x{}x{}/{}thr",
+        r.get("kernel").and_then(Json::as_str).unwrap_or("?"),
+        n("m"),
+        n("k"),
+        n("n"),
+        n("threads")
+    )
+}
+
+/// Stable comparison key of one `train_step` entry.
+fn train_key(r: &Json) -> String {
+    format!(
+        "{}/{}thr",
+        r.get("combo").and_then(Json::as_str).unwrap_or("?"),
+        r.get("threads").and_then(Json::as_f64).unwrap_or(0.0) as usize
+    )
+}
+
+/// Stable comparison key of one `micro` entry.
+fn micro_key(r: &Json) -> String {
+    r.get("name").and_then(Json::as_str).unwrap_or("?").to_string()
+}
+
+/// The warn-only perf guard: every fresh median whose key exists in the
+/// baseline section is compared; >2x slower prints a WARN.  Returns
+/// (medians compared, regressions warned).
+fn warn_regressions(
+    base: &Json,
+    sections: &[(&str, &[Json], fn(&Json) -> String)],
+) -> (usize, usize) {
+    let mut compared = 0usize;
+    let mut warned = 0usize;
+    let empty: Vec<Json> = Vec::new();
+    for &(name, fresh, key_of) in sections {
+        let base_medians: BTreeMap<String, f64> = base
+            .get(name)
+            .and_then(Json::as_arr)
+            .unwrap_or(&empty)
+            .iter()
+            .filter_map(|r| Some((key_of(r), r.get("median_ns").and_then(Json::as_f64)?)))
+            .collect();
+        for row in fresh {
+            let key = key_of(row);
+            let (Some(&base_ns), Some(now_ns)) =
+                (base_medians.get(&key), row.get("median_ns").and_then(Json::as_f64))
+            else {
+                continue;
+            };
+            compared += 1;
+            if now_ns > base_ns * 2.0 {
+                warned += 1;
+                println!(
+                    "WARN perf regression {name}/{key}: median {} vs baseline {} ({:.1}x)",
+                    fmt_ns(now_ns),
+                    fmt_ns(base_ns),
+                    now_ns / base_ns
+                );
+            }
+        }
+    }
+    (compared, warned)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -254,6 +330,59 @@ fn main() {
         ));
     }
 
+    // Trace-layer overhead: the disarmed span() fast path (one relaxed
+    // atomic load + branch) per call, batched 1k per closure so the
+    // harness timer resolution doesn't dominate.  tests/trace_overhead.rs
+    // pins the no-allocation contract; this pins the wall cost.
+    println!("== bench_exec [{mode}]: trace-layer disarmed overhead ==");
+    assert!(
+        !apdrl::obs::trace::active(),
+        "bench_exec must run with tracing disarmed (unset APDRL_TRACE)"
+    );
+    let mut micro_rows = Vec::new();
+    let r = bench("trace_disarmed_span/1k", budget, || {
+        for _ in 0..1_000 {
+            observe(apdrl::obs::trace::span(
+                apdrl::obs::trace::Kernel::GemmNn,
+                [8, 8, 8],
+                1,
+            ));
+        }
+    });
+    r.print();
+    println!("   -> {:.2} ns per disarmed span", r.median_ns / 1_000.0);
+    micro_rows.push(result_json(
+        &r,
+        &[("per_span_ns", Json::Num(r.median_ns / 1_000.0))],
+    ));
+
+    // Perf-regression guard: committed baseline first, else the previous
+    // run's output.  Warn-only — see the module docs.
+    let baseline = ["BENCH_exec.baseline.json", "BENCH_exec.json"].iter().find_map(|p| {
+        let base = Json::parse(&std::fs::read_to_string(p).ok()?).ok()?;
+        Some((p.to_string(), base))
+    });
+    match baseline {
+        Some((path, base)) if base.get("mode").and_then(Json::as_str) == Some(mode) => {
+            let (compared, warned) = warn_regressions(
+                &base,
+                &[
+                    ("gemm", gemm_rows.as_slice(), gemm_key as fn(&Json) -> String),
+                    ("train_step", train_rows.as_slice(), train_key),
+                    ("micro", micro_rows.as_slice(), micro_key),
+                ],
+            );
+            println!(
+                "perf guard vs {path}: {compared} medians compared, {warned} regressed >2x \
+                 (warn-only)"
+            );
+        }
+        Some((path, _)) => {
+            println!("perf guard: {path} is a different mode than {mode:?} — comparison skipped")
+        }
+        None => println!("perf guard: no readable baseline in cwd — comparison skipped"),
+    }
+
     let mut top = BTreeMap::new();
     top.insert("bench".to_string(), Json::Str("exec".to_string()));
     top.insert("mode".to_string(), Json::Str(mode.to_string()));
@@ -262,6 +391,7 @@ fn main() {
     top.insert("speedups".to_string(), Json::Obj(speedups));
     top.insert("train_step".to_string(), Json::Arr(train_rows));
     top.insert("actors".to_string(), Json::Arr(actor_rows));
+    top.insert("micro".to_string(), Json::Arr(micro_rows));
     let line = Json::Obj(top).to_line().expect("bench results serialize");
     std::fs::write("BENCH_exec.json", line + "\n").expect("write BENCH_exec.json");
     println!("wrote BENCH_exec.json");

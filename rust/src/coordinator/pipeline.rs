@@ -72,12 +72,17 @@ pub fn static_phase(combo: &ComboConfig, bs: usize, quantized: bool) -> StaticPl
     let key = PlanKey::new(&spec, quantized, &platform);
     let cached = cache::global().lock().unwrap().lookup(&key, &profiles);
     if obs::active() {
+        // How many node profiles were priced from kernel measurements
+        // (calibration table) rather than the analytic cost model.
+        let calib_nodes = profiles.iter().filter(|p| p.ps_measured).count();
         obs::publish(
             obs::Event::new("plan.cache")
                 .tag("combo", combo.name)
                 .num("batch", bs as f64)
                 .flag("quantized", quantized)
-                .flag("hit", cached.is_some()),
+                .flag("hit", cached.is_some())
+                .flag("calibrated", calib_nodes > 0)
+                .num("calib_nodes", calib_nodes as f64),
         );
     }
     let (solution, schedule, cache_hit) = match cached {

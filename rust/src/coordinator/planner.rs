@@ -74,6 +74,17 @@ pub struct PlanStep {
     pub mm: bool,
     pub start_us: f64,
     pub finish_us: f64,
+    /// The CPU (PS) cost the planner priced this node at — measured,
+    /// when the active calibration table covers the shape, analytic
+    /// otherwise.  This is the executor-side reality check every step
+    /// carries regardless of where the ILP placed it.
+    pub cpu_us: f64,
+    /// What the analytic PS cost model predicts for the same node; the
+    /// per-step modeled-vs-measured error is `cpu_us` against this.
+    pub modeled_us: f64,
+    /// True when `cpu_us` came from kernel measurements
+    /// (`APDRL_CALIB`) rather than the analytic model.
+    pub measured: bool,
 }
 
 /// The backend-agnostic result of planning one (combo, batch, precision)
@@ -101,6 +112,15 @@ pub struct PlanOutcome {
     /// `(component name, DSE candidate index)` per DAG node.
     pub assignment: Vec<(String, usize)>,
     pub schedule: Vec<PlanStep>,
+    /// Schedule steps whose node's CPU cost was priced from kernel
+    /// measurements (0 on a cold start — the analytic-model fallback).
+    pub calib_steps: usize,
+    /// Total modeled-vs-measured CPU latency error over the measured
+    /// steps, in percent of the modeled total (0 when none).
+    pub calib_err_pct: f64,
+    /// Fingerprint of the calibration table the plan priced against
+    /// (empty on cold start) — the plan's measurement provenance.
+    pub calib_fingerprint: String,
     pub provenance: Provenance,
 }
 
@@ -121,12 +141,21 @@ impl PlanOutcome {
     /// `StaticPlan` is read field-by-field outside the coordinator, so
     /// local and remote consumers cannot drift apart.
     pub fn from_static(plan: &StaticPlan, req: &PlanRequest) -> PlanOutcome {
+        let mut calib_steps = 0usize;
+        let mut measured_sum = 0.0f64;
+        let mut modeled_sum = 0.0f64;
         let schedule = plan
             .schedule
             .entries
             .iter()
             .map(|e| {
                 let node = &plan.dag.nodes[e.node];
+                let prof = &plan.profiles[e.node];
+                if prof.ps_measured {
+                    calib_steps += 1;
+                    measured_sum += prof.ps_latency_us;
+                    modeled_sum += prof.ps_modeled_us;
+                }
                 PlanStep {
                     node: e.node,
                     name: node.name.clone(),
@@ -135,9 +164,17 @@ impl PlanOutcome {
                     mm: node.kind.is_mm(),
                     start_us: e.start_us,
                     finish_us: e.finish_us,
+                    cpu_us: prof.ps_latency_us,
+                    modeled_us: prof.ps_modeled_us,
+                    measured: prof.ps_measured,
                 }
             })
             .collect();
+        let calib_err_pct = if modeled_sum > 0.0 {
+            (measured_sum - modeled_sum).abs() / modeled_sum * 100.0
+        } else {
+            0.0
+        };
         let assignment = plan
             .solution
             .assignment
@@ -159,6 +196,9 @@ impl PlanOutcome {
             cache_hit: plan.cache_hit,
             assignment,
             schedule,
+            calib_steps,
+            calib_err_pct,
+            calib_fingerprint: crate::profile::calib::active_fingerprint().unwrap_or_default(),
             provenance: Provenance::Local { cache_hit: plan.cache_hit },
         }
     }

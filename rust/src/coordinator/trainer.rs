@@ -316,6 +316,11 @@ pub fn train_combo_job(
         // step count — at `actors == 1` that is exactly the scalar
         // path's pre-increment recording.
         let step_at = metrics.env_steps;
+        let collect_span = obs::trace::span(
+            obs::trace::Kernel::Collect,
+            [actors, 0, 0],
+            Pool::global().threads(),
+        );
         prev_obs.copy_from_slice(fleet.obs());
         let actions = agent.act(&prev_obs, actors, &mut rng)?;
         fleet.step(&actions)?;
@@ -332,6 +337,7 @@ pub fn train_combo_job(
             &mut rng,
             &mut stats_buf,
         )?;
+        drop(collect_span);
         for stats in &stats_buf {
             metrics.losses.push(stats.loss as f64);
             if stats.found_inf {

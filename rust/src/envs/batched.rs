@@ -117,6 +117,11 @@ impl BatchedEnv {
             actions.len(),
             self.lanes.len()
         );
+        let _span = crate::obs::trace::span(
+            crate::obs::trace::Kernel::EnvStep,
+            [self.lanes.len(), 0, 0],
+            self.pool.threads(),
+        );
         // Validate the action kind up-front so a mis-wired env/agent
         // combo fails with a clear error, not a panic inside a worker.
         for (l, a) in actions.iter().enumerate() {

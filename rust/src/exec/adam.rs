@@ -92,6 +92,9 @@ impl Adam {
     /// gradient is non-finite, in which case nothing is updated (the
     /// conditional-skip path of scaled training).
     pub fn step(&mut self, mut params: Vec<&mut Param>, loss_scale: f32) -> bool {
+        let total_elems: usize = params.iter().map(|p| p.elems()).sum();
+        let _span =
+            crate::obs::trace::span(crate::obs::trace::Kernel::AdamStep, [total_elems, 0, 0], 1);
         if self.m.is_empty() {
             self.m = params.iter().map(|p| vec![0.0; p.elems()]).collect();
             self.v = params.iter().map(|p| vec![0.0; p.elems()]).collect();

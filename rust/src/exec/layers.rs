@@ -14,6 +14,7 @@ use std::sync::Arc;
 
 use crate::graph::NetSpec;
 use crate::hw::Format;
+use crate::obs::trace;
 use crate::quant::formats::{round_slice, round_to};
 use crate::util::json::{hex_f32s, parse_hex_f32s, Json, JsonError};
 use crate::util::Rng;
@@ -128,6 +129,7 @@ fn im2col(
     let bs = x.rows();
     let img_elems = in_hw * in_hw * in_ch;
     let pcols = k * k * in_ch;
+    let _span = trace::span(trace::Kernel::Im2col, [bs * out_hw * out_hw, pcols, 0], 1);
     let mut data = vec![0.0f32; bs * out_hw * out_hw * pcols];
     for b in 0..bs {
         let img = &x.data[b * img_elems..(b + 1) * img_elems];
@@ -160,6 +162,7 @@ fn col2im(
 ) -> Tensor {
     let img_elems = in_hw * in_hw * in_ch;
     let pcols = k * k * in_ch;
+    let _span = trace::span(trace::Kernel::Col2im, [bs * out_hw * out_hw, pcols, 0], 1);
     let mut out = Tensor::zeros(&[bs, img_elems]);
     for b in 0..bs {
         let img = &mut out.data[b * img_elems..(b + 1) * img_elems];

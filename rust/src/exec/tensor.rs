@@ -35,6 +35,7 @@
 //! reward trajectories) stay bit-identical when `APDRL_THREADS` changes.
 
 use crate::hw::Format;
+use crate::obs::trace;
 use crate::quant::formats::round_slice;
 
 use super::pool::Pool;
@@ -96,6 +97,14 @@ impl Tensor {
     /// In-place round of every element into `fmt` (identity for FP32),
     /// through the vectorized [`round_slice`] fast path.
     pub fn round_to(&mut self, fmt: Format) {
+        // Identity formats skip the span: only real f16/bf16 rounding
+        // work should calibrate the `round_slice` cost entry.
+        let _span = match fmt {
+            Format::Fp16 | Format::Bf16 => {
+                trace::span(trace::Kernel::RoundSlice, [self.data.len(), 0, 0], 1)
+            }
+            _ => None,
+        };
         round_slice(&mut self.data, fmt);
     }
 
@@ -176,6 +185,7 @@ impl Tensor {
         let (m, k) = (self.shape[0], self.cols());
         assert_eq!(k, b.shape[0], "matmul inner dims: {k} vs {}", b.shape[0]);
         let n = b.cols();
+        let _span = trace::span(trace::Kernel::GemmNn, [m, k, n], pool.threads());
         let bpack = pack_b_rows(&b.data, k, n);
         let data = gemm(&self.data, k, false, &bpack, m, n, k, pool);
         Tensor { shape: vec![m, n], data }
@@ -189,6 +199,7 @@ impl Tensor {
         let (m, k) = (self.shape[0], self.cols());
         assert_eq!(m, b.shape[0], "matmul_tn outer dims: {m} vs {}", b.shape[0]);
         let n = b.cols();
+        let _span = trace::span(trace::Kernel::GemmTn, [k, m, n], pool.threads());
         let bpack = pack_b_rows(&b.data, m, n);
         let data = gemm(&self.data, k, true, &bpack, k, n, m, pool);
         Tensor { shape: vec![k, n], data }
@@ -202,6 +213,7 @@ impl Tensor {
         let (m, k) = (self.shape[0], self.cols());
         let n = b.shape[0];
         assert_eq!(k, b.cols(), "matmul_nt inner dims: {k} vs {}", b.cols());
+        let _span = trace::span(trace::Kernel::GemmNt, [m, k, n], pool.threads());
         let bpack = pack_b_cols(&b.data, k, n);
         let data = gemm(&self.data, k, false, &bpack, m, n, k, pool);
         Tensor { shape: vec![m, n], data }

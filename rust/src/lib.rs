@@ -253,6 +253,41 @@
 //! `APDRL_DASH_TOKEN` (checked as `?token=` or `Authorization:
 //! Bearer` on every request).
 //!
+//! ### Kernel tracing and the self-calibrating cost model
+//!
+//! The hot kernels (GEMM variants, im2col/col2im, `round_slice`, the
+//! Adam step, env stepping, collection rounds) are instrumented with
+//! [`obs::trace`] spans: shape-keyed wall-clock samples aggregated by
+//! (kernel, log2-work bucket, thread count).  Like the bus, the span
+//! entry point is **one relaxed atomic load when no recorder is armed**
+//! — no clock read, no allocation — so instrumentation rides in every
+//! build (`bench_exec` tracks the disarmed cost under the `"micro"`
+//! key, and `tests/trace_overhead.rs` asserts zero allocations).
+//! Spans record *time only*, never values, so tracing cannot perturb
+//! bit-exactness: the 1-vs-N-thread and `--actors 1` identity suites
+//! pass with tracing armed and a live bus subscriber attached.
+//!
+//! `apdrl calibrate` arms a recorder, sweeps the kernels across a
+//! work ladder on 1-thread and pooled configurations, and saves a
+//! [`profile::CalibrationTable`] (schema-versioned JSON, raw-bit hex
+//! floats, so it round-trips bit-exactly).  Point `APDRL_CALIB` at the
+//! file and the planner's PS cost model ([`profile::ps_model`]) prices
+//! covered shapes from **measurements** (linear interpolation over
+//! the table) instead of the analytic model, which remains the
+//! cold-start fallback.  Every plan then reports its provenance:
+//! `apdrl plan`/`profile` print per-step measured-vs-modeled error and
+//! star the measured costs, `PlanOutcome` carries
+//! `calib_steps`/`calib_err_pct`/`calib_fingerprint` (also on the v3
+//! wire), the `stats` verb gains `obs` + `calibration` sections, and
+//! the dash shows live `trace.kernel` rows.
+//!
+//! ```bash
+//! apdrl calibrate --reps 5 --out calib.json   # measure this machine's kernels
+//! export APDRL_CALIB=calib.json               # planner now prices measured costs
+//! apdrl plan dqn_cartpole                     # "calibration: N/M steps measured, err …%"
+//! APDRL_TRACE=1 apdrl train --combo dqn-cartpole --steps 2000  # live trace.kernel events
+//! ```
+//!
 //! ### Environment variables
 //!
 //! | variable              | consumer          | meaning                              |
@@ -263,6 +298,8 @@
 //! | `APDRL_THREADS`       | CPU executor      | kernel worker-pool size (default: cores, capped at 8); bit-exact at any value |
 //! | `APDRL_DASH`          | producers + dash  | dashboard `host:port`: producers forward events to it, `apdrl dash` binds it |
 //! | `APDRL_DASH_TOKEN`    | producers + dash  | shared auth token; required for non-loopback dash binds |
+//! | `APDRL_TRACE`         | any process       | set non-`0` to arm a kernel trace recorder at startup (spans publish `trace.kernel` bus events) |
+//! | `APDRL_CALIB`         | planner (both)    | path to an `apdrl calibrate` table; PS costs of covered shapes come from measurements |
 
 pub mod coordinator;
 pub mod drl;

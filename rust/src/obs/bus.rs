@@ -24,7 +24,7 @@
 //! wire, the `/snapshot` view, and the `/emit` ingest path.
 
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Duration;
 
@@ -124,6 +124,21 @@ pub struct Bus {
     subscribers: AtomicUsize,
     inner: Mutex<Ring>,
     wake: Condvar,
+    /// Events accepted into the ring over the bus lifetime.
+    published: AtomicU64,
+    /// Events evicted unread by ring overflow — the fleet-wide view of
+    /// the per-subscriber [`Drained::dropped`] gaps.
+    dropped: AtomicU64,
+}
+
+/// A self-telemetry snapshot of one bus (the `obs.stats` payload and
+/// the `stats` verb's `obs` section). The no-subscriber fast path is
+/// deliberately uncounted so it stays a single atomic load.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BusCounters {
+    pub published: u64,
+    pub dropped: u64,
+    pub subscribers: usize,
 }
 
 impl Bus {
@@ -141,6 +156,8 @@ impl Bus {
                 capacity: capacity.max(1),
             }),
             wake: Condvar::new(),
+            published: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
         })
     }
 
@@ -162,10 +179,32 @@ impl Bus {
             ring.next_seq += 1;
             if ring.buf.len() == ring.capacity {
                 ring.buf.pop_front();
+                self.dropped.fetch_add(1, Ordering::Relaxed);
             }
             ring.buf.push_back(event);
         }
+        self.published.fetch_add(1, Ordering::Relaxed);
         self.wake.notify_all();
+    }
+
+    /// Lifetime publish/eviction counters plus the live subscriber
+    /// count — the bus's own health telemetry.
+    pub fn counters(&self) -> BusCounters {
+        BusCounters {
+            published: self.published.load(Ordering::Relaxed),
+            dropped: self.dropped.load(Ordering::Relaxed),
+            subscribers: self.subscribers.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Build the `obs.stats` self-telemetry event from the current
+    /// counters (the daemon publishes one per `stats` verb).
+    pub fn stats_event(&self) -> Event {
+        let c = self.counters();
+        Event::new("obs.stats")
+            .num("published", c.published as f64)
+            .num("dropped", c.dropped as f64)
+            .num("subscribers", c.subscribers as f64)
     }
 
     /// Attach a subscriber cursor starting at "now" (no backlog).
@@ -305,6 +344,26 @@ mod tests {
         let drained = late.drain();
         assert_eq!(drained.events.len(), 2);
         assert_eq!(drained.dropped, 0);
+    }
+
+    #[test]
+    fn counters_track_published_and_evicted() {
+        let bus = Bus::with_capacity(4);
+        // No subscriber: the fast path counts nothing.
+        bus.publish(Event::new("test.lost"));
+        assert_eq!(bus.counters(), BusCounters::default());
+        let _sub = bus.subscribe();
+        for i in 0..6 {
+            bus.publish(Event::new("test.tick").num("i", i as f64));
+        }
+        let c = bus.counters();
+        assert_eq!(c.published, 6);
+        assert_eq!(c.dropped, 2, "6 published into a 4-slot ring evicts 2");
+        assert_eq!(c.subscribers, 1);
+        let stats = bus.stats_event();
+        assert_eq!(stats.kind, "obs.stats");
+        assert_eq!(stats.fields.get("published").and_then(Json::as_f64), Some(6.0));
+        assert_eq!(stats.fields.get("dropped").and_then(Json::as_f64), Some(2.0));
     }
 
     #[test]

@@ -1,8 +1,11 @@
 //! Live observability for the planner/trainer fleet: a bounded,
 //! lock-light [event bus](bus) every instrumented layer publishes into,
 //! the [`apdrl dash` HTTP/SSE endpoint](dash) that streams it to
-//! browsers and scripts, and a [cross-process forwarder](forward) that
-//! lets one dash watch many producer processes.
+//! browsers and scripts, a [cross-process forwarder](forward) that
+//! lets one dash watch many producer processes, and a
+//! [kernel-level span tracer](trace) whose shape-keyed timings feed
+//! the planner's self-calibrating cost model
+//! ([`profile::calib`](crate::profile::calib)).
 //!
 //! # Event taxonomy
 //!
@@ -11,7 +14,7 @@
 //! | `train.episode` | trainer                | combo, job, seed, lane, episode, reward, env_steps, actors    |
 //! | `train.scale`   | trainer (FSM)          | combo, job, seed, step, from, to, overflow                    |
 //! | `train.done`    | trainer                | combo, backend, job, seed, actors, episodes, env_steps, train_steps, overflows, steps_per_sec |
-//! | `plan.cache`    | static phase           | combo, batch, quantized, hit                                  |
+//! | `plan.cache`    | static phase           | combo, batch, quantized, hit, calibrated, calib_nodes         |
 //! | `sweep.start`   | coordinator            | points, distinct                                              |
 //! | `sweep.point`   | coordinator            | index, done, total, combo, batch, quantized, cache_hit, explored, solve_us |
 //! | `sweep.done`    | coordinator            | points, wall_us                                               |
@@ -20,6 +23,8 @@
 //! | `fed.down`      | federation client      | host, shard, error                                            |
 //! | `fed.failover`  | federation client      | pending, survivors                                            |
 //! | `obs.dropped`   | dash (per SSE client)  | dropped                                                       |
+//! | `obs.stats`     | daemon (`stats` verb)  | published, dropped, subscribers                               |
+//! | `trace.kernel`  | [`trace`] spans        | kernel, threads, m, k, n, work, calls, mean_ns, last_ns       |
 //!
 //! The invariants the whole layer is built around — zero cost with no
 //! subscriber, publishers never block, observation never perturbs
@@ -28,7 +33,8 @@
 pub mod bus;
 pub mod dash;
 pub mod forward;
+pub mod trace;
 
-pub use bus::{active, global, publish, Bus, Drained, Event, Subscription};
+pub use bus::{active, global, publish, Bus, BusCounters, Drained, Event, Subscription};
 pub use dash::{DashServer, DEFAULT_DASH_ADDR, ENV_DASH_TOKEN};
 pub use forward::{Forwarder, ENV_DASH};

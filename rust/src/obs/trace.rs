@@ -1,0 +1,307 @@
+//! Kernel-level span tracing: shape-keyed wall-clock timings of the
+//! executor's hot kernels, aggregated online so the planner can price
+//! the CPU path from *measured* costs instead of the analytic model
+//! (`profile::ps_model`).
+//!
+//! The layer copies the [`bus`](super::bus) discipline exactly:
+//!
+//! 1. **Zero-cost when disarmed.** [`span`] starts with one relaxed
+//!    atomic load of the recorder count and returns `None` when it is
+//!    zero — no clock read, no lock, no allocation. Instrumented
+//!    kernels therefore cost one predictable branch when tracing is
+//!    off, which the no-allocation test in `tests/trace_overhead.rs`
+//!    and the `trace_disarmed_span_ns` entry in `bench_exec` pin.
+//! 2. **Observation never mutates.** A span records wall time only —
+//!    no RNG, no numeric state — so the kernel-equivalence and
+//!    `--actors 1` bit-identity suites pass with tracing hot
+//!    (`tests/calib.rs` runs them armed with a live bus subscriber).
+//! 3. **Bounded telemetry.** When the obs bus has a subscriber,
+//!    aggregated `trace.kernel` events are published on a
+//!    power-of-two cadence per (kernel, bucket, threads) cell, so a
+//!    million GEMM calls produce ~20 events, not a flooded ring.
+//!
+//! Arming: [`record`] returns an RAII [`Recorder`] guard (the
+//! `apdrl calibrate` sweep uses this), and [`arm_from_env`] arms the
+//! process permanently when `APDRL_TRACE` is set to anything but `0`.
+//! Samples aggregate into per-(kernel × log2-work-bucket × threads)
+//! cells that [`drain_aggregate`] hands to
+//! [`profile::calib::CalibrationTable`](crate::profile::calib).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use super::bus;
+
+/// Set to any value but `0`/empty to arm tracing for the whole
+/// process lifetime (see [`arm_from_env`]).
+pub const ENV_TRACE: &str = "APDRL_TRACE";
+
+/// The instrumented kernels. Names are stable identifiers: they key
+/// the persisted calibration table and ride `trace.kernel` events.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Kernel {
+    /// `Tensor::matmul_with` — blocked/parallel C = A·B.
+    GemmNn,
+    /// `Tensor::matmul_tn_with` — C = Aᵀ·B (backprop weight grads).
+    GemmTn,
+    /// `Tensor::matmul_nt_with` — C = A·Bᵀ (backprop input grads).
+    GemmNt,
+    /// Conv forward patch extraction.
+    Im2col,
+    /// Conv backward patch scatter-accumulate.
+    Col2im,
+    /// `quant::round_slice` f16/bf16 rounding (identity formats skip).
+    RoundSlice,
+    /// One full `Adam::step` over every parameter tensor.
+    AdamStep,
+    /// `BatchedEnv::step` — one lockstep step of every lane.
+    EnvStep,
+    /// One trainer collection round: act + env step + observe.
+    Collect,
+}
+
+impl Kernel {
+    pub const ALL: [Kernel; 9] = [
+        Kernel::GemmNn,
+        Kernel::GemmTn,
+        Kernel::GemmNt,
+        Kernel::Im2col,
+        Kernel::Col2im,
+        Kernel::RoundSlice,
+        Kernel::AdamStep,
+        Kernel::EnvStep,
+        Kernel::Collect,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::GemmNn => "gemm_nn",
+            Kernel::GemmTn => "gemm_tn",
+            Kernel::GemmNt => "gemm_nt",
+            Kernel::Im2col => "im2col",
+            Kernel::Col2im => "col2im",
+            Kernel::RoundSlice => "round_slice",
+            Kernel::AdamStep => "adam_step",
+            Kernel::EnvStep => "env_step",
+            Kernel::Collect => "collect",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Kernel> {
+        Kernel::ALL.into_iter().find(|k| k.name() == s)
+    }
+}
+
+/// Scalar work estimate for a shape: the product of its non-trivial
+/// dims — MACs for a GEMM `[m, k, n]`, element count for `[elems, 0, 0]`.
+pub fn work_of(dims: [usize; 3]) -> u64 {
+    dims.iter().map(|&d| d.max(1) as u64).product()
+}
+
+/// log2 bucket a work value falls into; shapes within a bucket share
+/// one aggregation cell and the calibration table interpolates between
+/// bucket means.
+pub fn bucket_of(work: u64) -> u32 {
+    63 - work.max(1).leading_zeros()
+}
+
+static RECORDERS: AtomicUsize = AtomicUsize::new(0);
+
+/// Is any recorder armed? One relaxed load — the whole fast path.
+#[inline]
+pub fn active() -> bool {
+    RECORDERS.load(Ordering::Relaxed) != 0
+}
+
+/// RAII arming guard: tracing records while at least one exists.
+pub struct Recorder(());
+
+/// Arm tracing; samples aggregate until the guard drops.
+pub fn record() -> Recorder {
+    RECORDERS.fetch_add(1, Ordering::SeqCst);
+    Recorder(())
+}
+
+impl Drop for Recorder {
+    fn drop(&mut self) {
+        RECORDERS.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Arm tracing for the rest of the process when `APDRL_TRACE` is set
+/// (to anything but `0`/empty). Idempotent; `main` calls it once so
+/// any verb can run with tracing hot.
+pub fn arm_from_env() {
+    static ONCE: OnceLock<Option<Recorder>> = OnceLock::new();
+    ONCE.get_or_init(|| {
+        std::env::var(ENV_TRACE)
+            .ok()
+            .filter(|v| !v.is_empty() && v != "0")
+            .map(|_| record())
+    });
+}
+
+/// A live timing span; records into the aggregate when dropped.
+pub struct Span {
+    kernel: Kernel,
+    dims: [usize; 3],
+    threads: usize,
+    start: Instant,
+}
+
+/// Open a span over one kernel invocation. Returns `None` (without
+/// reading the clock) when no recorder is armed — callers bind it to
+/// `let _span = ...;` so the drop at scope exit stamps the duration.
+#[inline]
+pub fn span(kernel: Kernel, dims: [usize; 3], threads: usize) -> Option<Span> {
+    if RECORDERS.load(Ordering::Relaxed) == 0 {
+        return None;
+    }
+    Some(Span { kernel, dims, threads, start: Instant::now() })
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let ns = self.start.elapsed().as_nanos() as u64;
+        record_sample(self.kernel, self.dims, self.threads, ns);
+    }
+}
+
+#[derive(Clone, Copy, Default)]
+struct Cell {
+    count: u64,
+    total_ns: f64,
+    total_work: f64,
+    min_ns: u64,
+}
+
+type AggKey = (Kernel, u32, usize);
+
+fn agg() -> &'static Mutex<BTreeMap<AggKey, Cell>> {
+    static AGG: OnceLock<Mutex<BTreeMap<AggKey, Cell>>> = OnceLock::new();
+    AGG.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+fn record_sample(kernel: Kernel, dims: [usize; 3], threads: usize, ns: u64) {
+    let work = work_of(dims);
+    let key = (kernel, bucket_of(work), threads);
+    let (count, mean_ns) = {
+        let mut map = agg().lock().unwrap();
+        let cell = map.entry(key).or_default();
+        cell.count += 1;
+        cell.total_ns += ns as f64;
+        cell.total_work += work as f64;
+        cell.min_ns = if cell.count == 1 { ns } else { cell.min_ns.min(ns) };
+        (cell.count, cell.total_ns / cell.count as f64)
+    };
+    // Power-of-two cadence per cell: the first sample is visible
+    // immediately and steady-state traffic decays logarithmically, so
+    // tracing a hot GEMM cannot flood the 1024-event ring.
+    if count & (count - 1) == 0 && bus::active() {
+        bus::publish(
+            bus::Event::new("trace.kernel")
+                .tag("kernel", kernel.name())
+                .num("threads", threads as f64)
+                .num("m", dims[0] as f64)
+                .num("k", dims[1] as f64)
+                .num("n", dims[2] as f64)
+                .num("work", work as f64)
+                .num("calls", count as f64)
+                .num("mean_ns", mean_ns)
+                .num("last_ns", ns as f64),
+        );
+    }
+}
+
+/// One aggregated cell: every sample of `kernel` whose work fell in
+/// `bucket`, run at `threads` pool width.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AggRow {
+    pub kernel: Kernel,
+    pub threads: usize,
+    pub bucket: u32,
+    pub count: u64,
+    pub mean_work: f64,
+    pub mean_ns: f64,
+    pub min_ns: u64,
+}
+
+fn rows_of(map: &BTreeMap<AggKey, Cell>) -> Vec<AggRow> {
+    map.iter()
+        .map(|(&(kernel, bucket, threads), cell)| AggRow {
+            kernel,
+            threads,
+            bucket,
+            count: cell.count,
+            mean_work: cell.total_work / cell.count.max(1) as f64,
+            mean_ns: cell.total_ns / cell.count.max(1) as f64,
+            min_ns: cell.min_ns,
+        })
+        .collect()
+}
+
+/// Copy out the current aggregate without clearing it.
+pub fn snapshot_aggregate() -> Vec<AggRow> {
+    rows_of(&agg().lock().unwrap())
+}
+
+/// Take the aggregate and reset it — the calibrate sweep drains once
+/// at the end so concurrent sweeps don't double-count.
+pub fn drain_aggregate() -> Vec<AggRow> {
+    let mut map = agg().lock().unwrap();
+    let rows = rows_of(&map);
+    map.clear();
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_is_none_when_disarmed() {
+        // Other tests may have a recorder armed concurrently; only
+        // assert the disarmed contract when nothing is armed.
+        if !active() {
+            assert!(span(Kernel::GemmNn, [8, 8, 8], 1).is_none());
+        }
+    }
+
+    #[test]
+    fn armed_spans_aggregate_by_kernel_bucket_threads() {
+        let _rec = record();
+        assert!(active());
+        {
+            let _a = span(Kernel::GemmTn, [16, 16, 16], 3);
+            let _b = span(Kernel::GemmTn, [17, 16, 16], 3); // same log2 bucket
+        }
+        let rows = snapshot_aggregate();
+        let cell = rows
+            .iter()
+            .find(|r| r.kernel == Kernel::GemmTn && r.threads == 3)
+            .expect("aggregated cell");
+        assert_eq!(cell.bucket, bucket_of(16 * 16 * 16));
+        assert!(cell.count >= 2);
+        assert!(cell.mean_work >= 4096.0);
+    }
+
+    #[test]
+    fn kernel_names_round_trip() {
+        for k in Kernel::ALL {
+            assert_eq!(Kernel::parse(k.name()), Some(k));
+        }
+        assert_eq!(Kernel::parse("nope"), None);
+    }
+
+    #[test]
+    fn work_and_buckets() {
+        assert_eq!(work_of([4, 5, 6]), 120);
+        assert_eq!(work_of([7, 0, 0]), 7);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of(1536), 10);
+        assert_eq!(bucket_of(2048), 11);
+    }
+}

@@ -75,10 +75,17 @@ pub struct PlanKey(String);
 
 impl PlanKey {
     /// Key for a training-step spec on a platform.  Everything the ILP's
-    /// inputs depend on is folded in; nothing else is.
+    /// inputs depend on is folded in; nothing else is.  That includes
+    /// the active calibration table (`APDRL_CALIB`): measured PS costs
+    /// change the profiles, so calibrated and uncalibrated solves —
+    /// and solves under different measurements — must key apart.
     pub fn new(spec: &TrainSpec, quantized: bool, platform: &Platform) -> PlanKey {
+        let calib = match crate::profile::calib::active_fingerprint() {
+            Some(fp) => format!("|calib:{fp}"),
+            None => String::new(),
+        };
         PlanKey(format!(
-            "{}|{}|bs{}|obs{}|act{}|{}|{}",
+            "{}|{}|bs{}|obs{}|act{}|{}|{}{}",
             spec.algo.name(),
             net_fingerprint(&spec.net),
             spec.batch,
@@ -86,6 +93,7 @@ impl PlanKey {
             spec.act_dim,
             if quantized { "quant" } else { "fp32" },
             platform_fingerprint(platform),
+            calib,
         ))
     }
 
@@ -115,8 +123,9 @@ fn net_fingerprint(net: &NetSpec) -> String {
 /// models read (component specs, link model, resource pools), prefixed
 /// with [`MODEL_VERSION`].  Two platforms with equal fingerprints
 /// produce identical profiles, so a changed model constant can never
-/// serve a stale persisted plan.
-fn platform_fingerprint(p: &Platform) -> String {
+/// serve a stale persisted plan.  Public because `apdrl profile` and
+/// the `profile` verb state which platform they priced.
+pub fn platform_fingerprint(p: &Platform) -> String {
     format!(
         "v{MODEL_VERSION}|{}|ps[{}]pl[{}]aie[{}]|comm[{};{};{};{}]|pools[{};{};{};{};{}]",
         p.name,

@@ -22,7 +22,7 @@ pub mod ilp;
 pub mod model;
 pub mod schedule;
 
-pub use cache::{PlanCache, PlanKey};
+pub use cache::{platform_fingerprint, PlanCache, PlanKey};
 pub use ilp::{solve_ilp, solve_ilp_capped, solve_ilp_sequential};
 pub use model::{Assignment, Placement, Problem, Solution};
 pub use schedule::{evaluate, ScheduleEntry};

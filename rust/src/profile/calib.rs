@@ -1,0 +1,384 @@
+//! The self-calibrating cost model: a persisted table of *measured*
+//! kernel timings (from [`obs::trace`](crate::obs::trace)) that
+//! [`ps_latency`](super::ps_model::ps_latency) consults before falling
+//! back to the analytic PS model, so solved plans optimize real — not
+//! modeled — makespan on the machine that will execute them.
+//!
+//! The table is keyed kernel × shape × thread count: per
+//! `(kernel, threads)` it holds calibration points `(work, ns)` — one
+//! per log2 work bucket the trace aggregate observed — sorted by work.
+//! Lookups interpolate linearly between bracketing points and scale
+//! proportionally just past the measured range; a shape more than one
+//! bucket outside the measured range is *not covered* and the caller
+//! falls back to the analytic model (cold start).
+//!
+//! Persistence mirrors `partition::cache`: a schema-versioned JSON
+//! object under the path named by [`ENV_CALIB`], floats stored as
+//! raw-bit hex so a round trip is bit-exact, and a wrong-schema file
+//! dropped wholesale (never misparsed) back to cold start. The global
+//! accessor re-reads `APDRL_CALIB` per call site and reloads when the
+//! value changes, so tests (and long-lived daemons) can swap tables
+//! without restarting the process.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{anyhow, Result};
+
+use crate::graph::LayerKind;
+use crate::obs::trace::{AggRow, Kernel};
+use crate::util::json::{hex_f64s, parse_hex_f64s, Json};
+use crate::Micros;
+
+/// Path of the persisted calibration table; unset means cold start
+/// (pure analytic model).
+pub const ENV_CALIB: &str = "APDRL_CALIB";
+
+/// File format version. Bumped whenever the serialized layout or the
+/// meaning of a point changes; readers drop other-schema files
+/// wholesale rather than risk misparsing them.
+pub const SCHEMA_VERSION: f64 = 1.0;
+
+/// A shape more than this factor outside the measured work range is
+/// not covered — the analytic model prices it instead.
+const COVERAGE_MARGIN: f64 = 2.0;
+
+/// One measured point: `count` samples with mean work `work` took a
+/// mean of `ns` nanoseconds per call.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CalibPoint {
+    pub work: f64,
+    pub ns: f64,
+    pub count: u64,
+}
+
+/// Measured kernel costs keyed `(kernel name, threads)`, each holding
+/// its calibration points sorted by ascending work.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CalibrationTable {
+    entries: BTreeMap<(String, usize), Vec<CalibPoint>>,
+}
+
+impl CalibrationTable {
+    pub fn new() -> CalibrationTable {
+        CalibrationTable::default()
+    }
+
+    /// Build a table from a drained trace aggregate: one point per
+    /// (kernel, threads, bucket) cell.
+    pub fn from_rows(rows: &[AggRow]) -> CalibrationTable {
+        let mut table = CalibrationTable::new();
+        for row in rows {
+            table.insert_point(
+                row.kernel.name(),
+                row.threads,
+                CalibPoint { work: row.mean_work, ns: row.mean_ns, count: row.count },
+            );
+        }
+        table
+    }
+
+    /// Insert one point, keeping the entry sorted by work.
+    pub fn insert_point(&mut self, kernel: &str, threads: usize, point: CalibPoint) {
+        let points = self.entries.entry((kernel.to_string(), threads)).or_default();
+        let at = points.partition_point(|p| p.work < point.work);
+        points.insert(at, point);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Number of `(kernel, threads)` entries.
+    pub fn entries(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Total calibration points across all entries.
+    pub fn points(&self) -> usize {
+        self.entries.values().map(Vec::len).sum()
+    }
+
+    /// Iterate `(kernel name, threads, points)` in key order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, usize, &[CalibPoint])> {
+        self.entries.iter().map(|((k, t), v)| (k.as_str(), *t, v.as_slice()))
+    }
+
+    /// Measured cost in microseconds for `work` units of `kernel` at
+    /// `threads`, or `None` when no entry covers the shape. Threads
+    /// fall back to the nearest measured width for the kernel (the
+    /// pool the table was calibrated on rarely matches exactly).
+    pub fn lookup_us(&self, kernel: Kernel, threads: usize, work: f64) -> Option<Micros> {
+        let name = kernel.name();
+        let points = self
+            .entries
+            .iter()
+            .filter(|((k, _), _)| k == name)
+            .min_by_key(|((_, t), _)| (t.abs_diff(threads), *t))
+            .map(|(_, points)| points)?;
+        let first = points.first()?;
+        let last = points.last()?;
+        if work < first.work / COVERAGE_MARGIN || work > last.work * COVERAGE_MARGIN {
+            return None;
+        }
+        let ns = if work <= first.work {
+            // Just below the measured range: scale proportionally.
+            first.ns * work / first.work.max(1.0)
+        } else if work >= last.work {
+            last.ns * work / last.work.max(1.0)
+        } else {
+            let hi = points.partition_point(|p| p.work <= work);
+            let (a, b) = (points[hi - 1], points[hi]);
+            let t = (work - a.work) / (b.work - a.work);
+            a.ns + t * (b.ns - a.ns)
+        };
+        Some(ns / 1000.0)
+    }
+
+    /// Stable identity of the measurements: FNV-1a over every key and
+    /// the raw bits of every point. Folded into plan-cache keys so
+    /// calibrated and uncalibrated plans never collide.
+    pub fn fingerprint(&self) -> String {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100_0000_01b3);
+            }
+        };
+        for ((kernel, threads), points) in &self.entries {
+            eat(kernel.as_bytes());
+            eat(&(*threads as u64).to_le_bytes());
+            for p in points {
+                eat(&p.work.to_bits().to_le_bytes());
+                eat(&p.ns.to_bits().to_le_bytes());
+                eat(&p.count.to_le_bytes());
+            }
+        }
+        format!("{h:016x}")
+    }
+
+    /// Serialize: schema header plus one object per `(kernel, threads)`
+    /// entry, floats as raw-bit hex (see `persistence_round_trips` in
+    /// `tests/calib.rs`).
+    pub fn to_json(&self) -> Json {
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|((kernel, threads), points)| {
+                let work: Vec<f64> = points.iter().map(|p| p.work).collect();
+                let ns: Vec<f64> = points.iter().map(|p| p.ns).collect();
+                let count: Vec<Json> =
+                    points.iter().map(|p| Json::Num(p.count as f64)).collect();
+                Json::obj(vec![
+                    ("kernel", Json::Str(kernel.clone())),
+                    ("threads", Json::Num(*threads as f64)),
+                    ("work", Json::Str(hex_f64s(&work))),
+                    ("ns", Json::Str(hex_f64s(&ns))),
+                    ("count", Json::Arr(count)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::Num(SCHEMA_VERSION)),
+            ("entries", Json::Arr(entries)),
+        ])
+    }
+
+    /// Parse a persisted table. `None` when the schema does not match
+    /// (stale files drop to cold start, like the plan cache); within a
+    /// current-schema file, malformed entries are skipped.
+    pub fn from_json(root: &Json) -> Option<CalibrationTable> {
+        if root.get("schema").and_then(Json::as_f64) != Some(SCHEMA_VERSION) {
+            return None;
+        }
+        let mut table = CalibrationTable::new();
+        for entry in root.get("entries").and_then(Json::as_arr).unwrap_or(&[]) {
+            let Some(kernel) = entry.get("kernel").and_then(Json::as_str) else { continue };
+            let Some(threads) = entry.get("threads").and_then(Json::as_usize) else { continue };
+            let work = entry
+                .get("work")
+                .and_then(Json::as_str)
+                .and_then(|s| parse_hex_f64s(s).ok());
+            let ns = entry
+                .get("ns")
+                .and_then(Json::as_str)
+                .and_then(|s| parse_hex_f64s(s).ok());
+            let (Some(work), Some(ns)) = (work, ns) else { continue };
+            let counts = entry.get("count").and_then(Json::as_arr).unwrap_or(&[]);
+            if work.len() != ns.len() {
+                continue;
+            }
+            for (i, (&w, &t)) in work.iter().zip(&ns).enumerate() {
+                let count = counts.get(i).and_then(Json::as_f64).unwrap_or(1.0) as u64;
+                table.insert_point(kernel, threads, CalibPoint { work: w, ns: t, count });
+            }
+        }
+        Some(table)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let line = self.to_json().to_line().map_err(|e| anyhow!("{e}"))?;
+        std::fs::write(path, line + "\n")
+            .map_err(|e| anyhow!("writing calibration table {}: {e}", path.display()))
+    }
+
+    /// Best-effort load: any failure (missing file, parse error, stale
+    /// schema) is a cold start, never an error.
+    pub fn load(path: &Path) -> Option<CalibrationTable> {
+        let text = std::fs::read_to_string(path).ok()?;
+        CalibrationTable::from_json(&Json::parse(&text).ok()?)
+    }
+}
+
+struct GlobalCalib {
+    /// The `APDRL_CALIB` value the cached table was loaded from.
+    source: Option<String>,
+    table: Option<Arc<CalibrationTable>>,
+}
+
+fn global() -> &'static Mutex<GlobalCalib> {
+    static GLOBAL: OnceLock<Mutex<GlobalCalib>> = OnceLock::new();
+    GLOBAL.get_or_init(|| Mutex::new(GlobalCalib { source: None, table: None }))
+}
+
+/// Run `f` against the process-wide calibration table (or `None` when
+/// `APDRL_CALIB` is unset / unloadable). The env value is re-checked
+/// on every call — lookups only happen on the cold profiling path, and
+/// it makes with-vs-without-calibration behavior testable in-process.
+pub fn with_global<R>(f: impl FnOnce(Option<&CalibrationTable>) -> R) -> R {
+    let env = std::env::var(ENV_CALIB).ok().filter(|p| !p.is_empty());
+    let table = {
+        let mut g = global().lock().unwrap();
+        if env != g.source {
+            let loaded = env.as_deref().and_then(|p| CalibrationTable::load(Path::new(p)));
+            g.table = loaded.map(Arc::new);
+            g.source = env;
+        }
+        g.table.clone()
+    };
+    f(table.as_deref())
+}
+
+/// Fingerprint of the active table, or `None` on cold start. Folded
+/// into `PlanKey` so calibrated plans key apart in the plan cache.
+pub fn active_fingerprint() -> Option<String> {
+    with_global(|t| t.map(CalibrationTable::fingerprint))
+}
+
+/// Measured PS-side cost for one graph node, when the active table
+/// covers its shape: `Mm` prices as a `gemm_nn` of `m·k·n` MACs,
+/// elementwise/reduce nodes as a per-element CPU touch (the
+/// `round_slice` entry is the measured proxy for streaming `elems`
+/// floats through the core).
+pub fn measured_ps_latency(kind: &LayerKind) -> Option<Micros> {
+    let threads = crate::exec::pool::Pool::global().threads();
+    let (kernel, work, threads) = match *kind {
+        LayerKind::Mm { m, k, n } => (Kernel::GemmNn, (m * k * n) as f64, threads),
+        LayerKind::Elementwise { elems } | LayerKind::Reduce { elems } => {
+            (Kernel::RoundSlice, elems as f64, 1)
+        }
+    };
+    with_global(|t| t.and_then(|t| t.lookup_us(kernel, threads, work)))
+}
+
+/// Wire/stats provenance: is a table active, where from, its
+/// fingerprint and size. Rides the `profile` and `stats` verbs.
+pub fn provenance_json() -> Json {
+    let source = std::env::var(ENV_CALIB).ok().filter(|p| !p.is_empty());
+    with_global(|t| match t {
+        Some(t) => Json::obj(vec![
+            ("present", Json::Bool(true)),
+            ("source", Json::Str(source.unwrap_or_default())),
+            ("fingerprint", Json::Str(t.fingerprint())),
+            ("entries", Json::Num(t.entries() as f64)),
+            ("points", Json::Num(t.points() as f64)),
+        ]),
+        None => Json::obj(vec![("present", Json::Bool(false))]),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_point_table() -> CalibrationTable {
+        let mut t = CalibrationTable::new();
+        t.insert_point("gemm_nn", 4, CalibPoint { work: 1000.0, ns: 2000.0, count: 10 });
+        t.insert_point("gemm_nn", 4, CalibPoint { work: 9000.0, ns: 10_000.0, count: 10 });
+        t
+    }
+
+    #[test]
+    fn lookup_interpolates_between_points() {
+        let t = two_point_table();
+        // Midpoint of work → midpoint of ns: 5000 work → 6000 ns = 6 µs.
+        let us = t.lookup_us(Kernel::GemmNn, 4, 5000.0).unwrap();
+        assert!((us - 6.0).abs() < 1e-9, "{us}");
+        // Exact endpoints.
+        assert!((t.lookup_us(Kernel::GemmNn, 4, 1000.0).unwrap() - 2.0).abs() < 1e-9);
+        assert!((t.lookup_us(Kernel::GemmNn, 4, 9000.0).unwrap() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lookup_scales_at_the_margins_and_refuses_beyond() {
+        let t = two_point_table();
+        // Half the smallest point is still covered, proportionally.
+        let us = t.lookup_us(Kernel::GemmNn, 4, 500.0).unwrap();
+        assert!((us - 1.0).abs() < 1e-9, "{us}");
+        // Twice the largest point likewise.
+        let us = t.lookup_us(Kernel::GemmNn, 4, 18_000.0).unwrap();
+        assert!((us - 20.0).abs() < 1e-9, "{us}");
+        // Beyond the margin: not covered → analytic fallback.
+        assert!(t.lookup_us(Kernel::GemmNn, 4, 400.0).is_none());
+        assert!(t.lookup_us(Kernel::GemmNn, 4, 50_000.0).is_none());
+        // Unmeasured kernel: never covered.
+        assert!(t.lookup_us(Kernel::Im2col, 4, 5000.0).is_none());
+    }
+
+    #[test]
+    fn lookup_falls_back_to_nearest_thread_width() {
+        let t = two_point_table(); // only threads=4 measured
+        assert!(t.lookup_us(Kernel::GemmNn, 1, 5000.0).is_some());
+        assert!(t.lookup_us(Kernel::GemmNn, 64, 5000.0).is_some());
+    }
+
+    #[test]
+    fn fingerprint_tracks_content() {
+        let a = two_point_table();
+        let mut b = two_point_table();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        b.insert_point("adam_step", 1, CalibPoint { work: 8.0, ns: 9.0, count: 1 });
+        assert_ne!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn json_round_trip_is_bit_exact() {
+        let mut t = two_point_table();
+        // Deliberately awkward bits: subnormal-ish and non-representable
+        // decimals survive only via the hex path.
+        t.insert_point(
+            "round_slice",
+            1,
+            CalibPoint { work: 0.1 + 0.2, ns: f64::from_bits(0x0000_0000_0000_0001), count: 3 },
+        );
+        let back = CalibrationTable::from_json(&t.to_json()).expect("same schema");
+        assert_eq!(back, t);
+        for ((k, th), points) in &t.entries {
+            let b = &back.entries[&(k.clone(), *th)];
+            for (p, q) in points.iter().zip(b) {
+                assert_eq!(p.work.to_bits(), q.work.to_bits());
+                assert_eq!(p.ns.to_bits(), q.ns.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn stale_schema_is_a_cold_start() {
+        let json = Json::parse("{\"schema\":0.5,\"entries\":[]}").unwrap();
+        assert!(CalibrationTable::from_json(&json).is_none());
+        let json = Json::parse("{\"entries\":[]}").unwrap();
+        assert!(CalibrationTable::from_json(&json).is_none());
+    }
+}

@@ -7,11 +7,13 @@
 //! interface selection for TAPCA) over the `hw` component models.
 
 pub mod aie_model;
+pub mod calib;
 pub mod dse;
 pub mod pl_model;
 pub mod ps_model;
 pub mod profiler;
 pub mod tapca;
 
+pub use calib::{CalibPoint, CalibrationTable, ENV_CALIB};
 pub use dse::{pareto, DesignPoint};
 pub use profiler::{profile_dag, Candidate, NodeProfile};

@@ -6,8 +6,9 @@ use crate::graph::Dag;
 use crate::hw::{Component, Format, Platform};
 use crate::Micros;
 
+use super::calib;
 use super::dse::{explore_aie, explore_pl};
-use super::ps_model::ps_latency;
+use super::ps_model::ps_latency_analytic;
 
 /// One (component, config) execution option for a node.
 #[derive(Clone, Debug)]
@@ -29,8 +30,15 @@ pub struct NodeProfile {
     pub pl: Vec<Candidate>,
     /// AIE candidates (empty for non-MM nodes, per §IV-A).
     pub aie: Vec<Candidate>,
-    /// Reference latency on the PS (Fig 4's software row).
+    /// Reference latency on the PS (Fig 4's software row). Measured —
+    /// from the active calibration table — when it covers the shape,
+    /// else the analytic model (`ps_measured` says which).
     pub ps_latency_us: Micros,
+    /// What the analytic PS model predicts, always; with `ps_latency_us`
+    /// this is the per-node modeled-vs-measured comparison plans report.
+    pub ps_modeled_us: Micros,
+    /// True when `ps_latency_us` came from calibration measurements.
+    pub ps_measured: bool,
     /// Outgoing-edge payload in elements (activation tensor).
     pub out_elems: usize,
     /// Master-weight volume updated at this node (elements).
@@ -114,11 +122,16 @@ pub fn profile_dag(dag: &Dag, platform: &Platform, quantized: bool) -> Vec<NodeP
             } else {
                 Vec::new()
             };
+            let ps_modeled_us =
+                ps_latency_analytic(platform.spec(Component::PS), &node.kind, ps_fmt);
+            let measured = calib::measured_ps_latency(&node.kind);
             NodeProfile {
                 node: node.id,
                 pl,
                 aie,
-                ps_latency_us: ps_latency(platform.spec(Component::PS), &node.kind, ps_fmt),
+                ps_latency_us: measured.unwrap_or(ps_modeled_us),
+                ps_modeled_us,
+                ps_measured: measured.is_some(),
                 out_elems: node.out_elems,
                 weight_elems: node.weight_elems,
             }

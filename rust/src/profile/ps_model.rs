@@ -8,8 +8,22 @@ use crate::Micros;
 /// Per-node framework overhead on the PS (loop dispatch, cache warmup).
 const PS_NODE_OVERHEAD_US: Micros = 0.8;
 
-/// Latency of any node on the PS.
+/// Latency of any node on the PS. When the process has a calibration
+/// table (`APDRL_CALIB`, see [`super::calib`]) whose measurements
+/// cover the shape, the *measured* cost is returned and the analytic
+/// model below is only the cold-start fallback — this is the single
+/// seam through which the planner starts optimizing real makespan.
 pub fn ps_latency(spec: &ComponentSpec, kind: &LayerKind, fmt: Format) -> Micros {
+    if let Some(us) = super::calib::measured_ps_latency(kind) {
+        return us;
+    }
+    ps_latency_analytic(spec, kind, fmt)
+}
+
+/// The pure analytic PS model (paper Fig 4/5's software row), never
+/// consulting calibration — the profiler prices both so plans can
+/// report modeled-vs-measured error.
+pub fn ps_latency_analytic(spec: &ComponentSpec, kind: &LayerKind, fmt: Format) -> Micros {
     match *kind {
         LayerKind::Mm { .. } => {
             let bytes = kind.bytes(fmt.bytes());

@@ -381,6 +381,11 @@ fn respond(parsed: Result<Request>, stats: &ServerStats, scheduler: &Scheduler) 
         }
         Request::Stats => {
             stats.stats_requests.fetch_add(1, Ordering::Relaxed);
+            // Mirror the bus's own counters onto the bus so a dashboard
+            // watching the stream sees drop pressure without polling.
+            if crate::obs::active() {
+                crate::obs::publish(crate::obs::global().stats_event());
+            }
             let mut body = BTreeMap::new();
             body.insert("stats".to_string(), stats.to_json());
             Ok(ok_response(body))

@@ -517,6 +517,8 @@ pub fn profile_payload(combo: &str, batch: usize, quantized: bool) -> Result<Jso
                 obj.insert("node".to_string(), Json::Num(p.node as f64));
                 obj.insert("name".to_string(), Json::Str(dag.nodes[p.node].name.clone()));
                 obj.insert("ps_latency_us".to_string(), Json::Num(p.ps_latency_us));
+                obj.insert("ps_modeled_us".to_string(), Json::Num(p.ps_modeled_us));
+                obj.insert("ps_measured".to_string(), Json::Bool(p.ps_measured));
                 obj.insert("pl".to_string(), candidates(&p.pl));
                 obj.insert("aie".to_string(), candidates(&p.aie));
                 Json::Obj(obj)
@@ -527,6 +529,11 @@ pub fn profile_payload(combo: &str, batch: usize, quantized: bool) -> Result<Jso
     profile.insert("combo".to_string(), Json::Str(c.name.to_string()));
     profile.insert("batch".to_string(), Json::Num(batch as f64));
     profile.insert("quantized".to_string(), Json::Bool(quantized));
+    profile.insert(
+        "platform".to_string(),
+        Json::Str(crate::partition::platform_fingerprint(&platform)),
+    );
+    profile.insert("calibration".to_string(), crate::profile::calib::provenance_json());
     profile.insert("nodes".to_string(), nodes);
     Ok(Json::Obj(profile))
 }
@@ -575,6 +582,12 @@ pub fn plan_to_json(outcome: &PlanOutcome) -> Json {
     obj.insert("mm_nodes".to_string(), Json::Num(outcome.mm_nodes as f64));
     obj.insert("explored".to_string(), Json::Num(outcome.explored as f64));
     obj.insert("cache_hit".to_string(), Json::Bool(outcome.cache_hit));
+    obj.insert("calib_steps".to_string(), Json::Num(outcome.calib_steps as f64));
+    obj.insert("calib_err_pct".to_string(), Json::Num(outcome.calib_err_pct));
+    obj.insert(
+        "calib_fingerprint".to_string(),
+        Json::Str(outcome.calib_fingerprint.clone()),
+    );
     obj.insert(
         "assignment".to_string(),
         Json::Arr(
@@ -602,6 +615,9 @@ pub fn plan_to_json(outcome: &PlanOutcome) -> Json {
                     entry.insert("mm".to_string(), Json::Bool(step.mm));
                     entry.insert("start_us".to_string(), Json::Num(step.start_us));
                     entry.insert("finish_us".to_string(), Json::Num(step.finish_us));
+                    entry.insert("cpu_us".to_string(), Json::Num(step.cpu_us));
+                    entry.insert("modeled_us".to_string(), Json::Num(step.modeled_us));
+                    entry.insert("measured".to_string(), Json::Bool(step.measured));
                     Json::Obj(entry)
                 })
                 .collect(),
@@ -667,6 +683,13 @@ pub fn plan_from_json(plan: &Json, provenance: Provenance) -> Result<PlanOutcome
                     .ok_or_else(|| anyhow!("schedule entry missing `{k}`"))?
                     .to_string())
             };
+            // The calibration trio is optional for wire back-compat with
+            // pre-calibration peers: fall back to the scheduled duration
+            // and "not measured".
+            let modeled_us = e
+                .get("modeled_us")
+                .and_then(Json::as_f64)
+                .unwrap_or(get_num("finish_us")? - get_num("start_us")?);
             Ok(PlanStep {
                 node: e
                     .get("node")
@@ -681,6 +704,9 @@ pub fn plan_from_json(plan: &Json, provenance: Provenance) -> Result<PlanOutcome
                     .ok_or_else(|| anyhow!("schedule entry missing `mm`"))?,
                 start_us: get_num("start_us")?,
                 finish_us: get_num("finish_us")?,
+                cpu_us: e.get("cpu_us").and_then(Json::as_f64).unwrap_or(modeled_us),
+                modeled_us,
+                measured: e.get("measured").and_then(Json::as_bool).unwrap_or(false),
             })
         })
         .collect::<Result<Vec<_>>>()?;
@@ -697,6 +723,13 @@ pub fn plan_from_json(plan: &Json, provenance: Provenance) -> Result<PlanOutcome
         mm_nodes: usize_field("mm_nodes")?,
         explored: usize_field("explored")?,
         cache_hit: bool_field("cache_hit")?,
+        calib_steps: plan.get("calib_steps").and_then(exact_usize).unwrap_or(0),
+        calib_err_pct: plan.get("calib_err_pct").and_then(Json::as_f64).unwrap_or(0.0),
+        calib_fingerprint: plan
+            .get("calib_fingerprint")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string(),
         assignment,
         schedule,
         provenance,

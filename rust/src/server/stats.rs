@@ -198,6 +198,19 @@ impl ServerStats {
         jobs.insert("wall_us".into(), Json::Obj(w));
         obj.insert("jobs".into(), Json::Obj(jobs));
 
+        // Observability bus self-telemetry: how many events this process
+        // published / evicted and whether anyone is listening right now.
+        let bc = crate::obs::global().counters();
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("published".into(), num(bc.published));
+        o.insert("dropped".into(), num(bc.dropped));
+        o.insert("subscribers".into(), num(bc.subscribers as u64));
+        obj.insert("obs".into(), Json::Obj(o));
+
+        // Kernel-calibration provenance: which measured cost table (if
+        // any) is pricing this daemon's PS latencies.
+        obj.insert("calibration".into(), crate::profile::calib::provenance_json());
+
         // Solver telemetry (all solves in this process, remote or not).
         let t = telemetry();
         let mut s = std::collections::BTreeMap::new();
@@ -322,6 +335,14 @@ mod tests {
         assert!(j.get("cache").and_then(|c| c.get("hit_rate")).is_some());
         assert!(j.get("cache").and_then(|c| c.get("evictions")).is_some());
         assert!(j.get("solver").and_then(|s| s.get("solves")).is_some());
+        let o = j.get("obs").expect("obs bus section");
+        for key in ["published", "dropped", "subscribers"] {
+            assert!(o.get(key).and_then(Json::as_usize).is_some(), "obs.{key}");
+        }
+        assert!(
+            j.get("calibration").and_then(|c| c.get("present")).is_some(),
+            "calibration provenance section"
+        );
         let jobs = j.get("jobs").expect("jobs section");
         for key in ["submitted", "completed", "cancelled", "failed", "rejected"] {
             assert_eq!(jobs.get(key).and_then(Json::as_usize), Some(0), "{key}");

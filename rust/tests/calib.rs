@@ -1,0 +1,258 @@
+//! Self-calibrating cost model suite: `APDRL_CALIB` persistence is
+//! bit-exact, stale schemas drop to cold start, the planner prices PS
+//! costs from measurements exactly when a covering table is active —
+//! and tracing those measurements can never perturb bit-exactness
+//! (the kernel-equivalence and training-identity contracts hold with a
+//! recorder armed and a live bus subscriber attached).
+//!
+//! These tests mutate process environment (`APDRL_CALIB`), so every
+//! test in this binary serializes on one lock — the env is process
+//! state, and `cargo test` runs tests on concurrent threads.
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use apdrl::coordinator::{
+    combo, static_phase, train_combo_actors, PlanOutcome, PlanRequest, TrainLimits,
+};
+use apdrl::exec::{CpuBackend, Pool, Tensor};
+use apdrl::graph::{build_train_graph, LayerKind};
+use apdrl::obs::trace::{self, Kernel};
+use apdrl::profile::calib::{active_fingerprint, with_global};
+use apdrl::profile::{CalibPoint, CalibrationTable, ENV_CALIB};
+use apdrl::util::Rng;
+
+fn env_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn temp_path(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("apdrl_calib_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{}_{name}", std::process::id()))
+}
+
+/// Wide-dynamic-range values so reordered f32 summation would actually
+/// change bits (mirrors the helper in `tests/kernels.rs`).
+fn rand_tensor(rng: &mut Rng, rows: usize, cols: usize) -> Tensor {
+    let data = (0..rows * cols)
+        .map(|_| {
+            let mag = 2.0f64.powi((rng.below(17) as i32) - 8);
+            (rng.normal() * mag) as f32
+        })
+        .collect();
+    Tensor::from_vec(data, &[rows, cols])
+}
+
+#[test]
+fn apdrl_calib_round_trip_is_bit_exact() {
+    let _env = env_lock();
+    let mut table = CalibrationTable::new();
+    // Deliberately awkward bits: the smallest subnormal, a repeating
+    // binary fraction, and a huge magnitude only hex storage keeps.
+    table.insert_point(
+        "gemm_nn",
+        4,
+        CalibPoint { work: 0.1 + 0.2, ns: f64::from_bits(1), count: 7 },
+    );
+    table.insert_point("gemm_nn", 4, CalibPoint { work: 12_345.0, ns: 1.0 / 3.0, count: 2 });
+    table.insert_point("adam_step", 1, CalibPoint { work: 1e300, ns: 7e-12, count: 1 });
+
+    let path = temp_path("roundtrip.json");
+    table.save(&path).unwrap();
+    let back = CalibrationTable::load(&path).expect("current-schema file must load");
+    assert_eq!(back, table);
+    // The fingerprint hashes raw float bits, so equality here is the
+    // bit-exactness proof (not just approximate equality).
+    assert_eq!(back.fingerprint(), table.fingerprint());
+
+    // The same file through the `APDRL_CALIB` global accessor.
+    std::env::set_var(ENV_CALIB, &path);
+    assert_eq!(active_fingerprint().as_deref(), Some(table.fingerprint().as_str()));
+    with_global(|t| {
+        let t = t.expect("env names a loadable table");
+        assert_eq!(t.entries(), table.entries());
+        assert_eq!(t.points(), table.points());
+    });
+    std::env::remove_var(ENV_CALIB);
+    assert!(active_fingerprint().is_none(), "unset env is a cold start");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn stale_schema_calib_file_is_a_cold_start() {
+    let _env = env_lock();
+    let path = temp_path("stale.json");
+    std::fs::write(&path, "{\"schema\":99.0,\"entries\":[]}\n").unwrap();
+    assert!(CalibrationTable::load(&path).is_none(), "wrong schema must not parse");
+
+    std::env::set_var(ENV_CALIB, &path);
+    assert!(active_fingerprint().is_none());
+    let plan = static_phase(&combo("dqn_cartpole"), 40, true);
+    assert!(
+        plan.profiles.iter().all(|p| !p.ps_measured),
+        "a stale table must leave every node on the analytic model"
+    );
+    std::env::remove_var(ENV_CALIB);
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The acceptance scenario: with `APDRL_CALIB` naming a table that
+/// covers the combo's shapes, `static_phase` prices every node's CPU
+/// cost from the table (bit-identical to a direct lookup) and the
+/// `PlanOutcome` reports the calibrated steps; without the env var the
+/// same plan is fully analytic with zero calibrated steps.
+#[test]
+fn planner_prices_cpu_costs_from_measurements_only_with_a_table() {
+    let _env = env_lock();
+    let c = combo("dqn_cartpole");
+    let batch = 52;
+    let dag = build_train_graph(&c.train_spec(batch));
+
+    // Cover every node shape exactly: one calibration point per
+    // distinct work value, at a deliberately non-analytic cost.
+    let mut gemm_works: BTreeSet<u64> = BTreeSet::new();
+    let mut elem_works: BTreeSet<u64> = BTreeSet::new();
+    for node in &dag.nodes {
+        match node.kind {
+            LayerKind::Mm { m, k, n } => {
+                gemm_works.insert((m * k * n) as u64);
+            }
+            LayerKind::Elementwise { elems } | LayerKind::Reduce { elems } => {
+                elem_works.insert(elems as u64);
+            }
+        }
+    }
+    let mut table = CalibrationTable::new();
+    for &w in &gemm_works {
+        table.insert_point(
+            "gemm_nn",
+            1,
+            CalibPoint { work: w as f64, ns: w as f64 * 5.0, count: 8 },
+        );
+    }
+    for &w in &elem_works {
+        table.insert_point(
+            "round_slice",
+            1,
+            CalibPoint { work: w as f64, ns: w as f64 * 3.0, count: 8 },
+        );
+    }
+    let path = temp_path("acceptance.json");
+    table.save(&path).unwrap();
+
+    std::env::set_var(ENV_CALIB, &path);
+    let calibrated = static_phase(&c, batch, true);
+    assert!(
+        calibrated.profiles.iter().all(|p| p.ps_measured),
+        "the table covers every shape, so every node must price as measured"
+    );
+    let threads = Pool::global().threads();
+    let mut diverged = 0;
+    for (node, p) in dag.nodes.iter().zip(&calibrated.profiles) {
+        let (kernel, work, thr) = match node.kind {
+            LayerKind::Mm { m, k, n } => (Kernel::GemmNn, (m * k * n) as f64, threads),
+            LayerKind::Elementwise { elems } | LayerKind::Reduce { elems } => {
+                (Kernel::RoundSlice, elems as f64, 1)
+            }
+        };
+        let expect = table.lookup_us(kernel, thr, work).expect("shape is covered");
+        assert_eq!(
+            p.ps_latency_us.to_bits(),
+            expect.to_bits(),
+            "node {}: planner CPU cost must equal the table lookup",
+            node.name
+        );
+        if p.ps_latency_us.to_bits() != p.ps_modeled_us.to_bits() {
+            diverged += 1;
+        }
+    }
+    assert!(diverged > 0, "measured costs must actually differ from the analytic model");
+
+    let req = PlanRequest::new(c.clone(), batch, true);
+    let outcome = PlanOutcome::from_static(&calibrated, &req);
+    assert!(outcome.calib_steps > 0, "calibrated plans report their measured steps");
+    assert_eq!(outcome.calib_fingerprint, table.fingerprint());
+    assert!(outcome.schedule.iter().any(|s| s.measured));
+    for s in &outcome.schedule {
+        let p = &calibrated.profiles[s.node];
+        assert_eq!(s.measured, p.ps_measured);
+        assert_eq!(s.cpu_us.to_bits(), p.ps_latency_us.to_bits());
+        assert_eq!(s.modeled_us.to_bits(), p.ps_modeled_us.to_bits());
+    }
+
+    // Same request without the table: pure analytic model.
+    std::env::remove_var(ENV_CALIB);
+    let cold = static_phase(&c, batch, true);
+    assert!(cold.profiles.iter().all(|p| !p.ps_measured));
+    for p in &cold.profiles {
+        assert_eq!(
+            p.ps_latency_us.to_bits(),
+            p.ps_modeled_us.to_bits(),
+            "cold-start CPU cost is the analytic prediction itself"
+        );
+    }
+    let outcome = PlanOutcome::from_static(&cold, &req);
+    assert_eq!(outcome.calib_steps, 0);
+    assert_eq!(outcome.calib_err_pct.to_bits(), 0.0f64.to_bits());
+    assert!(outcome.calib_fingerprint.is_empty());
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Tracing observes, never mutates: with a recorder armed *and* a live
+/// bus subscriber attached, the GEMM kernels stay bit-identical to the
+/// naive reference at 1 and 8 threads, and a short training run
+/// produces bit-identical rewards/FSM state to an untraced run.
+#[test]
+fn bit_identity_survives_tracing_with_a_live_subscriber() {
+    let _env = env_lock();
+    let mut sub = apdrl::obs::global().subscribe();
+    let rec = trace::record();
+    assert!(trace::active());
+
+    // Kernel equivalence with spans hot.
+    let mut rng = Rng::new(0xCA11B);
+    let a = rand_tensor(&mut rng, 65, 33);
+    let b = rand_tensor(&mut rng, 33, 29);
+    let want = a.matmul_naive(&b);
+    for threads in [1usize, 8] {
+        let pool = Arc::new(Pool::new(threads));
+        let got = a.matmul_with(&b, &pool);
+        for (i, (g, w)) in got.data.iter().zip(&want.data).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "elem {i} @ {threads} threads");
+        }
+    }
+
+    // A traced + subscribed training run vs the plain one.
+    let limits = TrainLimits { max_env_steps: 500, max_episodes: 40 };
+    let traced =
+        train_combo_actors(&mut CpuBackend::fp32(), &combo("dqn_cartpole"), 11, limits, 1, false)
+            .unwrap();
+    assert!(
+        trace::snapshot_aggregate().iter().any(|r| r.kernel == Kernel::GemmNn),
+        "armed spans must have aggregated GEMM samples"
+    );
+    let drained = sub.drain();
+    assert!(
+        drained.events.iter().any(|e| e.kind == "trace.kernel"),
+        "a live subscriber must see trace.kernel events"
+    );
+    drop(rec);
+
+    let limits = TrainLimits { max_env_steps: 500, max_episodes: 40 };
+    let plain =
+        train_combo_actors(&mut CpuBackend::fp32(), &combo("dqn_cartpole"), 11, limits, 1, false)
+            .unwrap();
+    assert_eq!(traced.metrics.env_steps, plain.metrics.env_steps);
+    assert_eq!(traced.metrics.episode_rewards.len(), plain.metrics.episode_rewards.len());
+    for (t, p) in traced.metrics.episode_rewards.iter().zip(&plain.metrics.episode_rewards) {
+        assert_eq!(t.to_bits(), p.to_bits(), "tracing must not perturb rewards");
+    }
+    assert_eq!(traced.metrics.scale_transitions, plain.metrics.scale_transitions);
+    assert_eq!(
+        traced.metrics.final_loss_scale.to_bits(),
+        plain.metrics.final_loss_scale.to_bits()
+    );
+}

@@ -1,0 +1,81 @@
+//! The disarmed-tracing overhead contract, asserted structurally: a
+//! counting global allocator proves that the no-recorder span fast
+//! path and the no-subscriber bus publish allocate **nothing** — the
+//! instrumentation left compiled into every hot kernel costs one
+//! relaxed atomic load and a branch.  (The wall-clock side of the same
+//! contract is tracked by `bench_exec`'s `trace_disarmed_span/1k`
+//! micro bench and its committed baseline.)
+//!
+//! This binary holds exactly one test so no concurrent test thread can
+//! allocate inside the measured windows.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use apdrl::obs::trace::{self, Kernel};
+use apdrl::obs::{self, Event};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+#[test]
+fn disarmed_span_and_no_subscriber_publish_allocate_nothing() {
+    // Nothing arms tracing in this binary, and no subscriber attaches.
+    assert!(!trace::active(), "this binary must never arm a recorder");
+    assert!(!obs::active(), "this binary must never attach a subscriber");
+
+    // Warm every lazy global (bus OnceLock, etc.) outside the windows.
+    assert!(trace::span(Kernel::GemmNn, [8, 8, 8], 1).is_none());
+    obs::publish(Event::new("warmup"));
+
+    // Window 1: the disarmed span fast path.
+    let before = allocs();
+    for _ in 0..10_000 {
+        let s = trace::span(Kernel::GemmNn, [64, 64, 64], 4);
+        assert!(s.is_none());
+    }
+    assert_eq!(allocs() - before, 0, "disarmed span must not allocate");
+
+    // Window 2: the trace::active() guard instrumented call sites use.
+    let before = allocs();
+    for _ in 0..10_000 {
+        assert!(!trace::active());
+    }
+    assert_eq!(allocs() - before, 0, "the active() guard must not allocate");
+
+    // Window 3: publishing pre-built events with no subscriber.  Event
+    // construction allocates (strings) and happens before the window;
+    // the publish itself must be a bare counter check.
+    let events: Vec<Event> = (0..1_000)
+        .map(|i| Event::new("trace.kernel").num("calls", i as f64))
+        .collect();
+    let before = allocs();
+    for ev in events {
+        obs::publish(ev);
+    }
+    assert_eq!(allocs() - before, 0, "no-subscriber publish must not allocate");
+}
