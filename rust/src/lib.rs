@@ -217,6 +217,32 @@
 //! federation-wide listing/cancel CLI, and the `stats` verb reports
 //! job lifecycle counters plus per-job wall-time percentiles.
 //!
+//! ### Durable jobs (`APDRL_JOB_DIR`)
+//!
+//! Point `APDRL_JOB_DIR` at a directory and `apdrl serve` journals
+//! every job to disk ([`server::Journal`]): one schema-versioned JSON
+//! file per job (`<dir>/<job-id>.json`, floats as raw-bit hex) holding
+//! the submitted spec, the newest streamed checkpoint (spilled on the
+//! job's `checkpoint_every` cadence), and the lifecycle phase.  All
+//! writes are atomic (temp sibling + rename, [`util::fsio`]), so a
+//! crash can tear nothing: at boot the daemon replays the journal —
+//! running jobs re-queue with their spilled checkpoint as the resume
+//! point and finish **bit-identically** (the CI restart smoke SIGKILLs
+//! a daemon mid-job and `cmp`s the recovered reward log against an
+//! uninterrupted control), queued jobs re-enter in priority order, and
+//! terminal records compact away.  `apdrl jobs` flags replayed entries
+//! as `recovered`, `stats` counts them, and `apdrl journal [--dir D]
+//! [--job ID] [--rewards]` inspects the files offline — no daemon
+//! needed.
+//!
+//! Queued jobs also survive losing their *host*: daemons gossip
+//! lightweight digests of their queue on `jobs`/`stats` responses and
+//! on every streamed checkpoint frame, and when the streaming client
+//! ([`server::RemoteTrainer`]) marks a host dead it resubmits that
+//! host's queued jobs to the survivors — exactly once, keyed by an
+//! `origin` tag (`dead-host/job-id`) the receiving daemon treats as an
+//! idempotency key.
+//!
 //! ## Observability (`apdrl dash`)
 //!
 //! Every long-running subsystem publishes structured events onto one
@@ -300,6 +326,7 @@
 //! | `APDRL_DASH_TOKEN`    | producers + dash  | shared auth token; required for non-loopback dash binds |
 //! | `APDRL_TRACE`         | any process       | set non-`0` to arm a kernel trace recorder at startup (spans publish `trace.kernel` bus events) |
 //! | `APDRL_CALIB`         | planner (both)    | path to an `apdrl calibrate` table; PS costs of covered shapes come from measurements |
+//! | `APDRL_JOB_DIR`       | daemon + `journal`| job-journal directory: specs/checkpoints/phases spill here atomically and replay at boot |
 
 pub mod coordinator;
 pub mod drl;

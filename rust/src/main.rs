@@ -16,6 +16,8 @@
 //!                                             (activate via APDRL_CALIB)
 //!   serve [--addr A] [--workers N]            long-lived planning server
 //!         --stop | --stats [--addr A]         remote-control a running one
+//!                                             (APDRL_JOB_DIR makes its
+//!                                             jobs durable across crashes)
 //!   train --combo <algo-env> [--quantized] [--seed S] [--steps N]
 //!         [--episodes N] [--threads N]        dynamic phase on the CPU
 //!         [--actors N]                        executor: plan → precision
@@ -23,10 +25,16 @@
 //!         --remote <hosts> [--priority P]     …or submit as a streaming
 //!         [--checkpoint-every N]              job to the least-loaded
 //!         [--progress-every N]                daemon (protocol v3), with
-//!                                             checkpoint hand-off to a
-//!                                             survivor if a host dies
+//!         [--detach]                          checkpoint hand-off to a
+//!                                             survivor if a host dies;
+//!                                             --detach submits and exits
 //!   jobs  [--remote <hosts>] [--cancel ID]    list / cancel the daemons'
 //!                                             training jobs
+//!   journal [--dir D] [--job ID] [--rewards]  inspect a daemon's on-disk
+//!                                             job journal (APDRL_JOB_DIR);
+//!                                             --rewards prints the raw-bit
+//!                                             hex reward log for bit-exact
+//!                                             comparison
 //!   dash  [--addr A] [--token T]              live observability hub: SSE
 //!                                             event stream + HTML dashboard
 //!   platform                                  PJRT + artifact info     (pjrt)
@@ -74,7 +82,7 @@
 //!
 //! Figures/tables of the paper are regenerated by the `figures` binary.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use apdrl::coordinator::metrics::{reward_error_pct, RunMetrics};
 use apdrl::coordinator::report::ascii_table;
@@ -88,10 +96,10 @@ use apdrl::obs::{DashServer, Forwarder, DEFAULT_DASH_ADDR, ENV_DASH, ENV_DASH_TO
 #[cfg(feature = "pjrt")]
 use apdrl::runtime::Runtime;
 use apdrl::server::{
-    parse_host_list, select_planner, server_addr, RemotePlanner, RemoteTrainer, Server,
-    TrainSubmission, DEFAULT_ADDR, ENV_ADDR,
+    parse_host_list, select_planner, server_addr, Journal, RemotePlanner, RemoteTrainer, Server,
+    TrainSubmission, DEFAULT_ADDR, ENV_ADDR, ENV_JOB_DIR,
 };
-use apdrl::util::json::Json;
+use apdrl::util::json::{hex_f64s, Json};
 
 /// Tiny argv parser (clap is not in the vendored crate set).
 pub struct Args {
@@ -848,6 +856,14 @@ fn cmd_train_remote(
             .unwrap_or(1_000),
         progress_every: args.flag("progress-every").and_then(|v| v.parse().ok()).unwrap_or(0),
     };
+    // Fire-and-forget: submit to the least-loaded host and exit; the
+    // daemon runs the job headless (track it with `apdrl jobs`, durable
+    // under APDRL_JOB_DIR server-side).
+    if args.flag("detach").is_some() {
+        let (host, job) = trainer.train_detached(&sub)?;
+        println!("submitted {} as {job} on {host} (detached)", sub.combo);
+        return Ok(());
+    }
     println!(
         "== remote training [{}]: {} seed {seed}, {}, checkpoint every {} env steps ==",
         trainer.describe(),
@@ -939,6 +955,15 @@ fn cmd_jobs(args: &Args) -> Result<()> {
         for j in jobs.as_arr().unwrap_or(&[]) {
             let s = |k: &str| j.get(k).and_then(Json::as_str).unwrap_or("-").to_string();
             let f = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+            // Provenance: journal-replayed after a restart, failed over
+            // from a dead host (origin tag), or a fresh submission.
+            let recovered = j.get("recovered").and_then(Json::as_bool).unwrap_or(false);
+            let src = match (recovered, j.get("origin").and_then(Json::as_str)) {
+                (true, Some(o)) => format!("recovered {o}"),
+                (true, None) => "recovered".to_string(),
+                (false, Some(o)) => o.to_string(),
+                (false, None) => "fresh".to_string(),
+            };
             rows.push(vec![
                 label.clone(),
                 s("job"),
@@ -946,6 +971,7 @@ fn cmd_jobs(args: &Args) -> Result<()> {
                 format!("{}", f("seed") as u64),
                 s("phase"),
                 format!("{}", f("priority") as i64),
+                src,
                 j.get("wall_us")
                     .and_then(Json::as_f64)
                     .map(|us| format!("{:.2}", us / 1e6))
@@ -958,9 +984,69 @@ fn cmd_jobs(args: &Args) -> Result<()> {
     } else {
         println!(
             "{}",
-            ascii_table(&["host", "job", "combo", "seed", "phase", "prio", "wall s"], &rows)
+            ascii_table(&["host", "job", "combo", "seed", "phase", "prio", "src", "wall s"], &rows)
         );
     }
+    Ok(())
+}
+
+/// `apdrl journal`: inspect a daemon's durable job journal on disk —
+/// offline, straight from the files, no daemon needed.  Lists every
+/// record under `--dir` (or `APDRL_JOB_DIR`); with `--job ID` prints
+/// that record's newest spilled checkpoint, and `--rewards` narrows it
+/// to the raw-bit hex reward log — the line the CI restart smoke
+/// compares bit-for-bit against an uninterrupted control run.
+fn cmd_journal(args: &Args) -> Result<()> {
+    let dir = match args.flag("dir") {
+        Some(d) => d.to_string(),
+        None => std::env::var(ENV_JOB_DIR).ok().filter(|v| !v.is_empty()).ok_or_else(|| {
+            anyhow!("no journal directory: pass --dir <path> or set {ENV_JOB_DIR}")
+        })?,
+    };
+    let journal = Journal::open(&dir);
+    let records = journal.load_all();
+    if let Some(id) = args.flag("job") {
+        let rec = records
+            .iter()
+            .find(|r| r.id == id)
+            .ok_or_else(|| anyhow!("no journal record for {id} under {dir}"))?;
+        let ckpt = rec.spec.resume.as_ref().ok_or_else(|| {
+            anyhow!("journal record {id} has no spilled checkpoint yet (phase {})", rec.phase)
+        })?;
+        if args.flag("rewards").is_some() {
+            // Raw-bit hex of the per-episode reward log: two runs are
+            // bit-identical iff these lines are byte-identical.
+            println!("{}", hex_f64s(&ckpt.metrics.episode_rewards));
+        } else {
+            println!("{}", ckpt.to_json());
+        }
+        return Ok(());
+    }
+    if records.is_empty() {
+        println!("no journal records under {dir}");
+        return Ok(());
+    }
+    let rows: Vec<Vec<String>> = records
+        .iter()
+        .map(|r| {
+            vec![
+                r.id.clone(),
+                r.phase.clone(),
+                r.spec.combo.clone(),
+                format!("{}", r.spec.seed),
+                r.spec
+                    .resume
+                    .as_ref()
+                    .map(|c| format!("{}", c.metrics.env_steps))
+                    .unwrap_or_else(|| "-".into()),
+                r.origin.clone().unwrap_or_else(|| "-".into()),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        ascii_table(&["job", "phase", "combo", "seed", "ckpt steps", "origin"], &rows)
+    );
     Ok(())
 }
 
@@ -1059,12 +1145,13 @@ fn main() -> Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("train") => cmd_train(&args),
         Some("jobs") => cmd_jobs(&args),
+        Some("journal") => cmd_journal(&args),
         Some("dash") => cmd_dash(&args),
         Some("platform") => cmd_platform(),
         Some("list") | None => {
             println!("combos: {}", COMBO_NAMES.join(", "));
             println!(
-                "usage: apdrl <plan|sweep|profile|calibrate|serve|train|jobs|dash|platform|list> \
+                "usage: apdrl <plan|sweep|profile|calibrate|serve|train|jobs|journal|dash|platform|list> \
                  [combo] [--flags]"
             );
             Ok(())

@@ -25,6 +25,10 @@
 //! | `obs.dropped`   | dash (per SSE client)  | dropped                                                       |
 //! | `obs.stats`     | daemon (`stats` verb)  | published, dropped, subscribers                               |
 //! | `trace.kernel`  | [`trace`] spans        | kernel, threads, m, k, n, work, calls, mean_ns, last_ns       |
+//! | `job.spilled`   | scheduler journal      | job, env_steps                                                |
+//! | `job.recovered` | scheduler boot replay  | job, combo, was, from_checkpoint                              |
+//! | `job.resubmitted` | train client (gossip) | origin, to, job                                               |
+//! | `calib.dropped` | calibration load       | path                                                          |
 //!
 //! The invariants the whole layer is built around — zero cost with no
 //! subscriber, publishers never block, observation never perturbs

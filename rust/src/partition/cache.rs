@@ -250,8 +250,17 @@ impl PlanCache {
             ..PlanCache::default()
         };
         if let Ok(text) = std::fs::read_to_string(&path) {
-            if let Ok(root) = Json::parse(&text) {
-                cache.absorb(&root);
+            match Json::parse(&text) {
+                Ok(root) if root.get("schema").and_then(Json::as_f64) == Some(SCHEMA_VERSION) => {
+                    cache.absorb(&root);
+                }
+                // A readable file that is not a current-schema cache is
+                // dropped wholesale (cold start) — but never silently:
+                // losing every persisted plan deserves a signal.
+                _ => eprintln!(
+                    "warning: plan cache {} is unreadable or from another schema; starting cold",
+                    path.display()
+                ),
             }
         }
         cache
@@ -460,10 +469,13 @@ fn write_merged(path: &Path, entries: HashMap<String, Entry>) {
         disk.entries.insert(key, entry);
     }
     let _ = evict_over_limit(&mut disk.entries, disk.limit);
-    if let Some(dir) = path.parent() {
-        let _ = std::fs::create_dir_all(dir);
-    }
-    let _ = std::fs::write(path, entries_to_json(&disk.entries).to_string());
+    // Temp-sibling + rename: a crash mid-save must leave the previous
+    // file intact, never a torn half-write that the schema check would
+    // silently drop to a cold start (losing every persisted plan).
+    let _ = crate::util::fsio::atomic_write(
+        path,
+        entries_to_json(&disk.entries).to_string().as_bytes(),
+    );
 }
 
 /// Insert into the process-wide cache and persist it (when

@@ -220,15 +220,33 @@ impl CalibrationTable {
 
     pub fn save(&self, path: &Path) -> Result<()> {
         let line = self.to_json().to_line().map_err(|e| anyhow!("{e}"))?;
-        std::fs::write(path, line + "\n")
+        // Temp-sibling + rename (util::fsio): a crash mid-save must not
+        // tear the live table — a torn file would silently revert the
+        // planner to the analytic model.
+        crate::util::fsio::atomic_write(path, (line + "\n").as_bytes())
             .map_err(|e| anyhow!("writing calibration table {}: {e}", path.display()))
     }
 
     /// Best-effort load: any failure (missing file, parse error, stale
-    /// schema) is a cold start, never an error.
+    /// schema) is a cold start, never an error.  A file that *exists*
+    /// but cannot be used is surfaced — stderr warning plus a
+    /// `calib.dropped` obs event — because dropping it silently reverts
+    /// the planner to the analytic model with no signal.
     pub fn load(path: &Path) -> Option<CalibrationTable> {
         let text = std::fs::read_to_string(path).ok()?;
-        CalibrationTable::from_json(&Json::parse(&text).ok()?)
+        let table = Json::parse(&text).ok().and_then(|j| CalibrationTable::from_json(&j));
+        if table.is_none() {
+            eprintln!(
+                "warning: calibration table {} is corrupt or from another schema; \
+                 falling back to the analytic model",
+                path.display()
+            );
+            crate::obs::publish(
+                crate::obs::Event::new("calib.dropped")
+                    .tag("path", &path.display().to_string()),
+            );
+        }
+        table
     }
 }
 

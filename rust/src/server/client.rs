@@ -10,7 +10,11 @@
 //! `checkpoint` frame carries a complete bit-exact snapshot — follows a
 //! dying or draining host by re-submitting the newest checkpoint to a
 //! survivor.  The job continues from the snapshot; only when every host
-//! has failed does it error.
+//! has failed does it error.  Hosts also gossip their queued-job
+//! digests (on `stats` responses and checkpoint frames); when a host is
+//! marked dead, its last-known queued jobs are re-submitted detached to
+//! the survivors, exactly once per job (origin-tagged, idempotent
+//! server-side).
 //!
 //! Addressing: pass an explicit `host:port`, or set the `APDRL_SERVER`
 //! environment variable and use [`RemotePlanner::from_env`] /
@@ -22,6 +26,7 @@
 //! failed re-establishes the connection lazily on the next call instead
 //! of staying dead — the client-side half of fail-over.
 
+use std::collections::HashSet;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::Mutex;
@@ -384,6 +389,10 @@ pub struct TrainSubmission {
 
 impl TrainSubmission {
     fn request(&self, resume: Option<Json>) -> Request {
+        self.request_opts(resume, false, None)
+    }
+
+    fn request_opts(&self, resume: Option<Json>, detach: bool, origin: Option<String>) -> Request {
         Request::Train {
             combo: self.combo.clone(),
             seed: self.seed,
@@ -395,6 +404,8 @@ impl TrainSubmission {
             checkpoint_every: self.checkpoint_every,
             progress_every: self.progress_every,
             resume,
+            detach,
+            origin,
         }
     }
 }
@@ -446,8 +457,11 @@ impl RemoteTrainer {
     /// Pick the least-loaded live host: queued + running jobs from each
     /// host's `stats` verb, skipping the `dead` ones.  Unreachable hosts
     /// are skipped for this pick but not marked dead — a daemon that was
-    /// briefly down may be back by the next hand-off.
-    fn pick_host(&self, dead: &[bool]) -> Option<usize> {
+    /// briefly down may be back by the next hand-off.  Each answering
+    /// host's queued-job digest (gossiped on the stats response) is
+    /// retained in `queued` — the last-known snapshot is what fails over
+    /// when that host later dies.
+    fn pick_host(&self, dead: &[bool], queued: &mut [Vec<Json>]) -> Option<usize> {
         let mut best: Option<(u64, usize)> = None;
         for (i, host) in self.hosts.iter().enumerate() {
             if dead[i] {
@@ -457,6 +471,9 @@ impl RemoteTrainer {
                 continue;
             };
             let jobs = stats.get("jobs");
+            if let Some(Json::Arr(digest)) = jobs.and_then(|j| j.get("queued")) {
+                queued[i] = digest.clone();
+            }
             let field =
                 |k: &str| jobs.and_then(|j| j.get(k)).and_then(Json::as_usize).unwrap_or(0) as u64;
             let load = field("queue_depth") + field("running");
@@ -465,6 +482,68 @@ impl RemoteTrainer {
             }
         }
         best.map(|(_, i)| i)
+    }
+
+    /// Fail a dead host's last-known queued jobs over to the survivors.
+    /// Each digest entry is re-submitted detached, tagged with an
+    /// `origin` key (the entry's own origin if it was itself a
+    /// resubmission, else `dead-host/job-id`) — the client-side
+    /// `resubmitted` set and the server-side origin idempotency together
+    /// guarantee at-most-one live copy per original job.  Best-effort:
+    /// an entry that no survivor accepts is dropped (the whole train
+    /// call is about to error out of hosts anyway).
+    fn fail_over_queue(
+        &self,
+        dead_hi: usize,
+        dead: &[bool],
+        queued: &[Vec<Json>],
+        resubmitted: &mut HashSet<String>,
+    ) {
+        let dead_host = &self.hosts[dead_hi];
+        for entry in &queued[dead_hi] {
+            let Some(job) = entry.get("job").and_then(Json::as_str) else { continue };
+            let origin = entry
+                .get("origin")
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("{dead_host}/{job}"));
+            if resubmitted.contains(&origin) {
+                continue;
+            }
+            let Some(req) = resubmit_request(entry, &origin) else { continue };
+            for (i, host) in self.hosts.iter().enumerate() {
+                if dead[i] || i == dead_hi {
+                    continue;
+                }
+                if let Ok(new_id) = submit_detached(host, &req) {
+                    resubmitted.insert(origin.clone());
+                    if crate::obs::active() {
+                        crate::obs::publish(
+                            crate::obs::Event::new("job.resubmitted")
+                                .tag("origin", &origin)
+                                .tag("to", host)
+                                .tag("job", &new_id),
+                        );
+                    }
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Submit `sub` fire-and-forget to the least-loaded host: the daemon
+    /// acks with the job id on one line and runs the job headless (no
+    /// frame stream; with `APDRL_JOB_DIR` set the journal keeps the
+    /// durable state).  Returns `(host, job_id)`.
+    pub fn train_detached(&self, sub: &TrainSubmission) -> Result<(String, String)> {
+        let dead = vec![false; self.hosts.len()];
+        let mut queued = vec![Vec::new(); self.hosts.len()];
+        let hi = self
+            .pick_host(&dead, &mut queued)
+            .ok_or_else(|| anyhow!("no training host reachable"))?;
+        let host = self.hosts[hi].clone();
+        let job = submit_detached(&host, &sub.request_opts(None, true, None))?;
+        Ok((host, job))
     }
 
     /// Run one training job across the federation.  Every streamed frame
@@ -483,25 +562,30 @@ impl RemoteTrainer {
     ) -> Result<Json> {
         let mut resume: Option<Json> = None;
         let mut dead = vec![false; self.hosts.len()];
+        let mut queued: Vec<Vec<Json>> = vec![Vec::new(); self.hosts.len()];
+        let mut resubmitted: HashSet<String> = HashSet::new();
         let mut last_err: Option<anyhow::Error> = None;
         loop {
-            let Some(hi) = self.pick_host(&dead) else {
+            let Some(hi) = self.pick_host(&dead, &mut queued) else {
                 let n = self.hosts.len();
                 return Err(last_err
                     .unwrap_or_else(|| anyhow!("no training host reachable"))
                     .context(format!("train: all {n} hosts failed or are draining")));
             };
             let host = &self.hosts[hi];
-            match stream_train(host, sub, &mut resume, on_frame) {
+            match stream_train(host, sub, &mut resume, &mut queued[hi], on_frame) {
                 Ok(Some(result)) => return Ok(result),
-                // Graceful drain: this host is going away — hand off.
+                // Graceful drain: this host is going away — hand off,
+                // and fail its queued jobs over to the survivors too.
                 Ok(None) => {
                     dead[hi] = true;
                     last_err = Some(anyhow!("training host {host} is draining"));
+                    self.fail_over_queue(hi, &dead, &queued, &mut resubmitted);
                 }
                 Err(e) => {
                     dead[hi] = true;
                     last_err = Some(e);
+                    self.fail_over_queue(hi, &dead, &queued, &mut resubmitted);
                 }
             }
         }
@@ -551,6 +635,7 @@ fn stream_train(
     host: &str,
     sub: &TrainSubmission,
     resume: &mut Option<Json>,
+    queued: &mut Vec<Json>,
     on_frame: &mut dyn FnMut(&str, &Json),
 ) -> Result<Option<Json>> {
     let line = sub.request(resume.clone()).to_line()?;
@@ -564,6 +649,18 @@ fn stream_train(
                 if kind == "checkpoint" {
                     if let Some(data) = resp.get("data") {
                         *resume = Some(data.clone());
+                    }
+                    // Gossip rides the checkpoint frames: retain the
+                    // host's queued-job digest so its queue can fail
+                    // over if this stream later dies.  Final (hand-off)
+                    // frames are skipped deliberately — a draining host
+                    // has just cancelled its queue, and rescuing those
+                    // jobs needs the pre-drain snapshot.
+                    let is_final = resp.get("final").and_then(Json::as_bool).unwrap_or(false);
+                    if !is_final {
+                        if let Some(Json::Arr(digest)) = resp.get("queued") {
+                            *queued = digest.clone();
+                        }
                     }
                 }
                 on_frame(host, &resp);
@@ -584,6 +681,44 @@ fn stream_train(
             }
         }
     }
+}
+
+/// Lower one queued-job digest entry (see `Scheduler::queued_digest`)
+/// back onto the wire as a detached, origin-tagged `train` request.
+/// `None` when the entry is missing a required field — a foreign or
+/// truncated digest is skipped, never submitted half-parsed.
+fn resubmit_request(entry: &Json, origin: &str) -> Option<Request> {
+    Some(Request::Train {
+        combo: entry.get("combo").and_then(Json::as_str)?.to_string(),
+        seed: entry.get("seed").and_then(Json::as_f64)? as u64,
+        actors: entry.get("actors").and_then(Json::as_usize)?,
+        max_env_steps: entry.get("max_env_steps").and_then(Json::as_usize)?,
+        max_episodes: entry.get("max_episodes").and_then(Json::as_usize)?,
+        quantized: entry.get("quantized").and_then(Json::as_bool).unwrap_or(false),
+        priority: entry.get("priority").and_then(Json::as_f64).unwrap_or(0.0) as i64,
+        checkpoint_every: entry.get("checkpoint_every").and_then(Json::as_f64).unwrap_or(0.0)
+            as u64,
+        progress_every: entry.get("progress_every").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+        resume: None,
+        detach: true,
+        origin: Some(origin.to_string()),
+    })
+}
+
+/// One-shot detached submission: send the request, read the single ack
+/// line, return the job id the daemon assigned (or the one it already
+/// held for this origin — submission is idempotent server-side).
+fn submit_detached(host: &str, req: &Request) -> Result<String> {
+    let line = req.to_line()?;
+    let mut conn = Conn::open(host)?;
+    let buf = conn
+        .transport(&line)
+        .with_context(|| format!("resubmitting queued job to {host}"))?;
+    let resp = parse_response(&buf)?;
+    resp.get("job")
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("detached train response from {host} missing `job`"))
 }
 
 #[cfg(test)]

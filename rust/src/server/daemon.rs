@@ -35,6 +35,15 @@
 //! nonblocking poll), the workers and the runners observe it within one
 //! poll quantum and exit (queued connections are closed, streaming
 //! connections finish their final `result` line first).
+//!
+//! With `APDRL_JOB_DIR` set, jobs are additionally *durable*: the
+//! scheduler journals each job's spec and newest checkpoint to that
+//! directory, and [`Server::bind`] replays the journal so a SIGKILLed
+//! daemon resumes its jobs (bit-identically) on restart — see
+//! [`super::jobs::journal`].  The daemon also gossips its queued-job
+//! digests to clients (on `jobs`/`stats` responses and on every
+//! streamed checkpoint frame), which is how `RemoteTrainer` fails a
+//! dead host's queue over to survivors.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
@@ -50,7 +59,7 @@ use crate::coordinator::{plan_sweep_progress, Checkpoint, TrainLimits};
 use crate::obs;
 use crate::util::json::Json;
 
-use super::jobs::{JobSpec, Scheduler, DEFAULT_MAX_QUEUE, DEFAULT_RUNNERS};
+use super::jobs::{Journal, JobSpec, Scheduler, SubmitOpts, DEFAULT_MAX_QUEUE, DEFAULT_RUNNERS};
 use super::protocol::{
     error_response, frame_response, ok_response, plan_to_json, profile_payload,
     progress_response, Request, WirePoint,
@@ -90,10 +99,19 @@ impl Server {
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding planning server on {addr}"))?;
         let stats = Arc::new(ServerStats::new());
+        // Durable jobs: journal under APDRL_JOB_DIR (when set) and
+        // replay whatever a previous — possibly SIGKILLed — process
+        // left there before accepting new work.
+        let scheduler =
+            Scheduler::with_journal(DEFAULT_MAX_QUEUE, Arc::clone(&stats), Journal::from_env());
+        let recovered = scheduler.recover();
+        if recovered > 0 {
+            eprintln!("recovered {recovered} job(s) from the journal");
+        }
         Ok(Server {
             listener,
             workers: workers.max(1),
-            scheduler: Arc::new(Scheduler::new(DEFAULT_MAX_QUEUE, Arc::clone(&stats))),
+            scheduler: Arc::new(scheduler),
             stats,
             shutdown: Arc::new(AtomicBool::new(false)),
         })
@@ -269,6 +287,8 @@ fn service_one(conn: &mut Conn, stats: &ServerStats, scheduler: &Scheduler) -> D
                     checkpoint_every,
                     progress_every,
                     resume,
+                    detach,
+                    origin,
                 }) => {
                     // The resume payload is opaque at the protocol layer;
                     // parse it here so a corrupt checkpoint is a
@@ -292,7 +312,20 @@ fn service_one(conn: &mut Conn, stats: &ServerStats, scheduler: &Scheduler) -> D
                             progress_every,
                             resume,
                         };
-                        handle_train_streaming(&mut conn.writer, spec, scheduler, stats)
+                        let opts = SubmitOpts { origin, detached: detach };
+                        if detach {
+                            // Fire-and-forget: one ack line, no stream.
+                            // Used by queue fail-over resubmissions and
+                            // `train --detach`; frames are dropped and
+                            // the journal keeps the durable state.
+                            let (id, _frames) = scheduler.submit_opts(spec, opts)?;
+                            let mut body = BTreeMap::new();
+                            body.insert("job".to_string(), Json::Str(id));
+                            body.insert("detached".to_string(), Json::Bool(true));
+                            Ok(ok_response(body))
+                        } else {
+                            handle_train_streaming(&mut conn.writer, spec, opts, scheduler, stats)
+                        }
                     });
                     let response = streamed.unwrap_or_else(|e| {
                         stats.errors.fetch_add(1, Ordering::Relaxed);
@@ -386,8 +419,17 @@ fn respond(parsed: Result<Request>, stats: &ServerStats, scheduler: &Scheduler) 
             if crate::obs::active() {
                 crate::obs::publish(crate::obs::global().stats_event());
             }
+            // Graft the queued-job digest into the jobs section: this is
+            // the gossip channel `RemoteTrainer` harvests so a host's
+            // queue can fail over when the host later dies.
+            let mut stats_json = stats.to_json();
+            if let Json::Obj(map) = &mut stats_json {
+                if let Some(Json::Obj(jobs)) = map.get_mut("jobs") {
+                    jobs.insert("queued".to_string(), scheduler.queued_digest());
+                }
+            }
             let mut body = BTreeMap::new();
-            body.insert("stats".to_string(), stats.to_json());
+            body.insert("stats".to_string(), stats_json);
             Ok(ok_response(body))
         }
         Request::CacheFlush => {
@@ -406,6 +448,7 @@ fn respond(parsed: Result<Request>, stats: &ServerStats, scheduler: &Scheduler) 
             stats.stats_requests.fetch_add(1, Ordering::Relaxed);
             let mut body = BTreeMap::new();
             body.insert("jobs".to_string(), scheduler.jobs_json());
+            body.insert("queued".to_string(), scheduler.queued_digest());
             body.insert("draining".to_string(), Json::Bool(scheduler.draining()));
             Ok(ok_response(body))
         }
@@ -534,15 +577,37 @@ fn handle_sweep_streaming(
 fn handle_train_streaming(
     writer: &mut TcpStream,
     spec: JobSpec,
+    opts: SubmitOpts,
     scheduler: &Scheduler,
     stats: &ServerStats,
 ) -> Result<Json> {
-    let (id, frames) = scheduler.submit(spec)?;
+    let (id, frames) = scheduler.submit_opts(spec, opts)?;
     let mut client_gone = false;
     while let Some(frame) = frames.next() {
         if client_gone {
             continue;
         }
+        // Checkpoint frames double as the gossip channel: each carries
+        // the host's queued-job digest (computed at write time) so a
+        // streaming client continuously knows what would be stranded if
+        // this host died.  Once a drain begins the digest is omitted —
+        // the queue was just cancelled *because the daemon is going
+        // away*, and clients must keep their pre-drain snapshot to
+        // rescue those jobs.  (Digest before the flag check: a drain
+        // racing in between yields a skipped pre-drain digest, never an
+        // attached post-drain one.)
+        let frame = match frame {
+            Json::Obj(mut map)
+                if map.get("frame").and_then(Json::as_str) == Some("checkpoint") =>
+            {
+                let digest = scheduler.queued_digest();
+                if !scheduler.draining() {
+                    map.insert("queued".to_string(), digest);
+                }
+                Json::Obj(map)
+            }
+            other => other,
+        };
         if let Ok(line) = frame_response(&frame).to_line() {
             let sent = writer
                 .write_all(line.as_bytes())

@@ -25,6 +25,7 @@ pub struct FrameQueue {
 struct Inner {
     frames: VecDeque<Json>,
     closed: bool,
+    detached: bool,
 }
 
 impl FrameQueue {
@@ -32,11 +33,21 @@ impl FrameQueue {
         FrameQueue::default()
     }
 
+    /// A queue with no reader: every push is dropped on the floor.
+    /// Detached and journal-recovered jobs run headless — without this,
+    /// their frames would accumulate unboundedly with nobody draining.
+    pub fn detached() -> FrameQueue {
+        FrameQueue {
+            inner: Mutex::new(Inner { detached: true, ..Inner::default() }),
+            cond: Condvar::new(),
+        }
+    }
+
     /// Enqueue one frame (a no-op after close — a late frame from a
     /// racing producer is dropped rather than leaked into nowhere).
     pub fn push(&self, frame: Json) {
         let mut inner = self.inner.lock().unwrap();
-        if !inner.closed {
+        if !inner.closed && !inner.detached {
             inner.frames.push_back(frame);
             self.cond.notify_all();
         }
@@ -92,6 +103,15 @@ mod tests {
             q.close();
             assert_eq!(reader.join().unwrap(), None);
         });
+    }
+
+    #[test]
+    fn detached_queues_drop_every_push() {
+        let q = FrameQueue::detached();
+        q.push(Json::Num(1.0));
+        q.push(Json::Num(2.0));
+        q.close();
+        assert_eq!(q.next(), None, "detached frames are never retained");
     }
 
     #[test]

@@ -1,0 +1,306 @@
+//! Crash-safe job journal: one JSON file per job under `APDRL_JOB_DIR`.
+//!
+//! Every submission writes its spec; every streamed checkpoint frame
+//! re-spills the newest [`Checkpoint`](crate::coordinator::Checkpoint)
+//! (raw-bit-hex floats, exactly the wire format); terminal transitions
+//! stamp the final phase while keeping that checkpoint.  All writes go
+//! through [`fsio::atomic_write`](crate::util::fsio::atomic_write), so
+//! a SIGKILL at any instant leaves either the previous complete record
+//! or the new one — never a torn file.
+//!
+//! On boot the daemon replays the directory ([`Journal::load_all`]):
+//! queued and running entries re-enter the scheduler (running ones
+//! resume from their spilled checkpoint, bit-identically by the
+//! trainer's resume guarantee), terminal entries are compacted away,
+//! and unreadable files are skipped with a warning (a journal must
+//! never stop the daemon from booting).
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::{Checkpoint, TrainLimits};
+use crate::util::fsio::atomic_write;
+use crate::util::json::Json;
+
+use super::JobSpec;
+
+/// Directory holding the per-job journal files; unset means jobs are
+/// memory-only (pre-durability behavior).
+pub const ENV_JOB_DIR: &str = "APDRL_JOB_DIR";
+
+/// Journal record format version.  Readers drop other-schema files
+/// wholesale (with a warning) rather than risk misparsing them.
+pub const JOURNAL_VERSION: f64 = 1.0;
+
+/// A journal entry read back at boot, ready to re-enter the scheduler.
+pub struct RecoveredJob {
+    pub id: String,
+    /// Numeric suffix of `job-N`, so the scheduler can advance its id
+    /// counter past every recovered job.
+    pub seq: u64,
+    /// Phase at crash time (`queued`/`running`/terminal names).
+    pub phase: String,
+    /// Origin tag a fail-over resubmission carried, if any.
+    pub origin: Option<String>,
+    /// The job's spec, with `resume` already pointing at the newest
+    /// spilled checkpoint when one was journalled.
+    pub spec: JobSpec,
+}
+
+impl RecoveredJob {
+    pub fn terminal(&self) -> bool {
+        matches!(self.phase.as_str(), "done" | "cancelled" | "failed")
+    }
+}
+
+/// Handle on one journal directory.  All operations are best-effort:
+/// persistence must never take down the scheduler, so I/O errors are
+/// swallowed (writes) or surfaced as warnings (reads).
+pub struct Journal {
+    dir: PathBuf,
+}
+
+impl Journal {
+    pub fn open(dir: impl Into<PathBuf>) -> Journal {
+        let dir = dir.into();
+        let _ = fs::create_dir_all(&dir);
+        Journal { dir }
+    }
+
+    /// The journal named by `APDRL_JOB_DIR`, or `None` when unset.
+    pub fn from_env() -> Option<Journal> {
+        std::env::var(ENV_JOB_DIR)
+            .ok()
+            .filter(|d| !d.is_empty())
+            .map(Journal::open)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn path(&self, id: &str) -> PathBuf {
+        self.dir.join(format!("{id}.json"))
+    }
+
+    /// Write a fresh record for a just-submitted (or just-recovered)
+    /// job.  A submission that carried a resume checkpoint spills it
+    /// immediately — a crash before the first cadence checkpoint must
+    /// not lose the hand-off state the client already gave up.
+    pub fn record_submit(&self, id: &str, spec: &JobSpec, origin: Option<&str>, recovered: bool) {
+        let mut root = BTreeMap::new();
+        root.insert("schema".to_string(), Json::Num(JOURNAL_VERSION));
+        root.insert("job".to_string(), Json::Str(id.to_string()));
+        root.insert("phase".to_string(), Json::Str("queued".to_string()));
+        root.insert("spec".to_string(), spec_to_json(spec));
+        if let Some(origin) = origin {
+            root.insert("origin".to_string(), Json::Str(origin.to_string()));
+        }
+        if recovered {
+            root.insert("recovered".to_string(), Json::Bool(true));
+        }
+        if let Some(ckpt) = &spec.resume {
+            root.insert("checkpoint".to_string(), ckpt.to_json());
+        }
+        self.write(id, Json::Obj(root));
+    }
+
+    /// Stamp a phase transition, preserving the rest of the record
+    /// (spec, origin, newest checkpoint).
+    pub fn record_phase(&self, id: &str, phase: &str, error: Option<&str>) {
+        self.update(id, |root| {
+            root.insert("phase".to_string(), Json::Str(phase.to_string()));
+            if let Some(err) = error {
+                root.insert("error".to_string(), Json::Str(err.to_string()));
+            }
+        });
+    }
+
+    /// Spill the newest streamed checkpoint (the frame's `data` field,
+    /// already in wire format).
+    pub fn record_checkpoint(&self, id: &str, data: &Json) {
+        self.update(id, |root| {
+            root.insert("phase".to_string(), Json::Str("running".to_string()));
+            root.insert("checkpoint".to_string(), data.clone());
+        });
+    }
+
+    /// Drop a job's record (terminal compaction / finished eviction).
+    pub fn remove(&self, id: &str) {
+        let _ = fs::remove_file(self.path(id));
+    }
+
+    /// Read every journal record in the directory, skipping (with a
+    /// warning) anything torn, garbage, or from another schema.
+    /// Temp siblings from interrupted atomic writes are dot-prefixed
+    /// and skipped by the extension filter.
+    pub fn load_all(&self) -> Vec<RecoveredJob> {
+        let Ok(entries) = fs::read_dir(&self.dir) else { return Vec::new() };
+        let mut jobs = Vec::new();
+        let mut paths: Vec<PathBuf> = entries
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.extension().is_some_and(|x| x == "json")
+                    && p.file_name()
+                        .and_then(|n| n.to_str())
+                        .is_some_and(|n| !n.starts_with('.'))
+            })
+            .collect();
+        paths.sort();
+        for path in paths {
+            match read_record(&path) {
+                Some(job) => jobs.push(job),
+                None => eprintln!(
+                    "warning: job journal entry {} is torn or from another schema; skipping it",
+                    path.display()
+                ),
+            }
+        }
+        jobs
+    }
+
+    /// Read-modify-write one record.  A missing or unreadable record is
+    /// left alone: an update must never resurrect a compacted job.
+    fn update(&self, id: &str, f: impl FnOnce(&mut BTreeMap<String, Json>)) {
+        let path = self.path(id);
+        let Ok(text) = fs::read_to_string(&path) else { return };
+        let Ok(Json::Obj(mut root)) = Json::parse(&text) else { return };
+        if root.get("schema").and_then(Json::as_f64) != Some(JOURNAL_VERSION) {
+            return;
+        }
+        f(&mut root);
+        self.write(id, Json::Obj(root));
+    }
+
+    fn write(&self, id: &str, root: Json) {
+        if let Ok(line) = root.to_line() {
+            let _ = atomic_write(&self.path(id), (line + "\n").as_bytes());
+        }
+    }
+}
+
+fn spec_to_json(spec: &JobSpec) -> Json {
+    Json::obj(vec![
+        ("combo", Json::Str(spec.combo.clone())),
+        ("seed", Json::Num(spec.seed as f64)),
+        ("actors", Json::Num(spec.actors as f64)),
+        ("max_env_steps", Json::Num(spec.limits.max_env_steps as f64)),
+        ("max_episodes", Json::Num(spec.limits.max_episodes as f64)),
+        ("quantized", Json::Bool(spec.quantized)),
+        ("priority", Json::Num(spec.priority as f64)),
+        ("checkpoint_every", Json::Num(spec.checkpoint_every as f64)),
+        ("progress_every", Json::Num(spec.progress_every as f64)),
+    ])
+}
+
+/// Parse one record; `None` on anything unusable (torn JSON, wrong
+/// schema, malformed spec, a checkpoint that fails its own validation).
+fn read_record(path: &Path) -> Option<RecoveredJob> {
+    let text = fs::read_to_string(path).ok()?;
+    let root = Json::parse(&text).ok()?;
+    if root.get("schema").and_then(Json::as_f64) != Some(JOURNAL_VERSION) {
+        return None;
+    }
+    let id = root.get("job").and_then(Json::as_str)?.to_string();
+    let seq = id.strip_prefix("job-").and_then(|s| s.parse::<u64>().ok())?;
+    let phase = root.get("phase").and_then(Json::as_str)?.to_string();
+    let spec = root.get("spec")?;
+    let resume = match root.get("checkpoint") {
+        Some(data) => Some(Checkpoint::from_json(data).ok()?),
+        None => None,
+    };
+    let spec = JobSpec {
+        combo: spec.get("combo").and_then(Json::as_str)?.to_string(),
+        seed: spec.get("seed").and_then(Json::as_f64)? as u64,
+        actors: spec.get("actors").and_then(Json::as_usize)?,
+        limits: TrainLimits {
+            max_env_steps: spec.get("max_env_steps").and_then(Json::as_f64)? as u64,
+            max_episodes: spec.get("max_episodes").and_then(Json::as_usize)?,
+        },
+        quantized: spec.get("quantized").and_then(Json::as_bool)?,
+        priority: spec.get("priority").and_then(Json::as_f64)? as i64,
+        checkpoint_every: spec.get("checkpoint_every").and_then(Json::as_f64)? as u64,
+        progress_every: spec.get("progress_every").and_then(Json::as_f64)? as u64,
+        resume,
+    };
+    let origin = root.get("origin").and_then(Json::as_str).map(str::to_string);
+    Some(RecoveredJob { id, seq, phase, origin, spec })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("apdrl_journal_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn spec() -> JobSpec {
+        JobSpec {
+            combo: "dqn_cartpole".into(),
+            seed: 7,
+            actors: 2,
+            limits: TrainLimits { max_env_steps: 5_000, max_episodes: 40 },
+            quantized: true,
+            priority: 3,
+            checkpoint_every: 250,
+            progress_every: 0,
+            resume: None,
+        }
+    }
+
+    #[test]
+    fn records_round_trip_spec_phase_and_origin() {
+        let dir = scratch("roundtrip");
+        let j = Journal::open(&dir);
+        j.record_submit("job-4", &spec(), Some("h1/job-0"), false);
+        j.record_phase("job-4", "running", None);
+        let jobs = j.load_all();
+        assert_eq!(jobs.len(), 1);
+        let job = &jobs[0];
+        assert_eq!(job.id, "job-4");
+        assert_eq!(job.seq, 4);
+        assert_eq!(job.phase, "running");
+        assert_eq!(job.origin.as_deref(), Some("h1/job-0"));
+        assert_eq!(job.spec.combo, "dqn_cartpole");
+        assert_eq!(job.spec.seed, 7);
+        assert_eq!(job.spec.limits.max_env_steps, 5_000);
+        assert_eq!(job.spec.priority, 3);
+        assert!(!job.terminal());
+        j.record_phase("job-4", "failed", Some("boom"));
+        assert!(j.load_all()[0].terminal());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_and_foreign_files_are_skipped_not_fatal() {
+        let dir = scratch("torn");
+        let j = Journal::open(&dir);
+        j.record_submit("job-0", &spec(), None, false);
+        // A torn half-write, plain garbage, a wrong-schema record, and a
+        // leftover temp sibling from an interrupted atomic write.
+        fs::write(dir.join("job-1.json"), "{\"schema\":1,\"job\":\"job-1\",\"ph").unwrap();
+        fs::write(dir.join("job-2.json"), "not json at all").unwrap();
+        fs::write(dir.join("job-3.json"), "{\"schema\":99,\"job\":\"job-3\"}").unwrap();
+        fs::write(dir.join(".job-4.json.tmp.1.0"), "{}").unwrap();
+        let jobs = j.load_all();
+        assert_eq!(jobs.len(), 1, "only the intact record survives");
+        assert_eq!(jobs[0].id, "job-0");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn updates_never_resurrect_a_removed_record() {
+        let dir = scratch("compact");
+        let j = Journal::open(&dir);
+        j.record_submit("job-0", &spec(), None, false);
+        j.remove("job-0");
+        j.record_phase("job-0", "done", None);
+        j.record_checkpoint("job-0", &Json::Null);
+        assert!(j.load_all().is_empty());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -23,18 +23,33 @@
 //! job down the cancel path, so a killed daemon's clients all end with
 //! a resumable checkpoint.
 //!
+//! When the daemon has an `APDRL_JOB_DIR`, the scheduler additionally
+//! journals every job to disk ([`journal`]): spec at submission, the
+//! newest streamed checkpoint on the job's `checkpoint_every` cadence,
+//! and the terminal phase.  [`recover`](Scheduler::recover) replays
+//! that journal at boot — running jobs re-queue with their spilled
+//! checkpoint as the resume point (bit-identical by the trainer's
+//! resume guarantee), queued jobs re-enter in priority order, terminal
+//! records are compacted — so a SIGKILLed daemon picks its work back
+//! up on restart.  Runner panics are caught and land the job in
+//! `failed` with the panic message; every verb path takes the state
+//! lock poison-tolerantly, so one bad job can never wedge the daemon.
+//!
 //! [`drain`]: Scheduler::drain
 
 pub mod frames;
+pub mod journal;
 
 pub use frames::FrameQueue;
+pub use journal::{Journal, RecoveredJob, ENV_JOB_DIR, JOURNAL_VERSION};
 
 use std::collections::{BTreeMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::coordinator::{
     train_combo_job, try_combo, Checkpoint, JobOptions, LocalPlanner, PlanRequest, Planner,
@@ -57,6 +72,12 @@ const FINISHED_RETAINED: usize = 64;
 /// Idle-runner wakeup cadence (shutdown-flag poll while queue is empty).
 const RUNNER_POLL: Duration = Duration::from_millis(100);
 
+/// Test-only trapdoor: a job submitted with this seed panics inside its
+/// runner, letting unit tests pin the catch-and-fail path without a
+/// special-purpose combo.
+#[cfg(test)]
+pub(crate) const PANIC_INJECTION_SEED: u64 = 0xBAD_5EED;
+
 /// Everything the scheduler needs to run one training job.
 #[derive(Clone, Debug)]
 pub struct JobSpec {
@@ -73,6 +94,19 @@ pub struct JobSpec {
     pub progress_every: u64,
     /// Snapshot to resume from (a handed-off job from a dead host).
     pub resume: Option<Checkpoint>,
+}
+
+/// Submission metadata beyond the spec itself.
+#[derive(Clone, Debug, Default)]
+pub struct SubmitOpts {
+    /// Provenance tag of a fail-over resubmission (`host/job-id` on the
+    /// dead host).  Submissions are idempotent per origin: a duplicate
+    /// returns the existing job instead of queueing a second copy, so
+    /// gossip-driven fail-over lands exactly once.
+    pub origin: Option<String>,
+    /// Run headless: no connection will stream this job, so its frame
+    /// queue drops pushes instead of accumulating them unboundedly.
+    pub detached: bool,
 }
 
 /// Job lifecycle phase.
@@ -108,6 +142,10 @@ struct JobEntry {
     error: Option<String>,
     /// Success payload fields for the final response line.
     result: Option<BTreeMap<String, Json>>,
+    /// Fail-over provenance (`host/job-id` on the host that died).
+    origin: Option<String>,
+    /// Replayed from the journal at boot, vs submitted fresh.
+    recovered: bool,
 }
 
 #[derive(Default)]
@@ -130,17 +168,41 @@ pub struct Scheduler {
     cond: Condvar,
     draining: AtomicBool,
     stats: Arc<ServerStats>,
+    /// Disk spill under `APDRL_JOB_DIR`; `None` = memory-only jobs.
+    journal: Option<Journal>,
 }
 
 impl Scheduler {
     pub fn new(max_queue: usize, stats: Arc<ServerStats>) -> Scheduler {
+        Scheduler::with_journal(max_queue, stats, None)
+    }
+
+    /// A scheduler that journals every job under `journal`'s directory.
+    /// Call [`recover`](Scheduler::recover) afterwards to replay
+    /// whatever a previous process left behind.
+    pub fn with_journal(
+        max_queue: usize,
+        stats: Arc<ServerStats>,
+        journal: Option<Journal>,
+    ) -> Scheduler {
         Scheduler {
             max_queue,
             state: Mutex::new(SchedState::default()),
             cond: Condvar::new(),
             draining: AtomicBool::new(false),
             stats,
+            journal,
         }
+    }
+
+    /// The scheduler state lock, poison-tolerantly.  A runner that
+    /// panics while holding the lock (caught panics re-raise on the
+    /// unwind path) must not turn every later `submit`/`jobs`/`cancel`
+    /// into a panic: the state is a plain bookkeeping map whose
+    /// invariants hold between statements, so continuing with the
+    /// inner guard is safe.
+    fn locked(&self) -> MutexGuard<'_, SchedState> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
     }
 
     /// Submit one job.  Validates combo and resume checkpoint
@@ -149,6 +211,16 @@ impl Scheduler {
     /// bounces when the daemon is draining or the queue is full.
     /// Returns the job id and the frame queue the runner will feed.
     pub fn submit(&self, spec: JobSpec) -> Result<(String, Arc<FrameQueue>)> {
+        self.submit_opts(spec, SubmitOpts::default())
+    }
+
+    /// [`submit`](Scheduler::submit) with fail-over metadata: an origin
+    /// tag (idempotency key) and/or headless (detached) execution.
+    pub fn submit_opts(
+        &self,
+        spec: JobSpec,
+        opts: SubmitOpts,
+    ) -> Result<(String, Arc<FrameQueue>)> {
         if self.draining.load(Ordering::SeqCst) {
             self.stats.jobs_rejected.fetch_add(1, Ordering::Relaxed);
             bail!("daemon is draining: new jobs are not accepted");
@@ -177,7 +249,20 @@ impl Scheduler {
                 spec.quantized
             );
         }
-        let mut state = self.state.lock().unwrap();
+        let mut state = self.locked();
+        // Exactly-once fail-over: a resubmission whose origin is already
+        // known (any phase) returns the existing job instead of queueing
+        // a duplicate.
+        if let Some(origin) = opts.origin.as_deref() {
+            let existing = state
+                .jobs
+                .iter()
+                .find(|(_, e)| e.origin.as_deref() == Some(origin))
+                .map(|(id, e)| (id.clone(), Arc::clone(&e.frames)));
+            if let Some(found) = existing {
+                return Ok(found);
+            }
+        }
         if state.queue.len() >= self.max_queue {
             self.stats.jobs_rejected.fetch_add(1, Ordering::Relaxed);
             bail!("job queue is full ({} waiting)", state.queue.len());
@@ -185,7 +270,11 @@ impl Scheduler {
         let seq = state.next_id;
         state.next_id += 1;
         let id = format!("job-{seq}");
-        let frames = Arc::new(FrameQueue::new());
+        if let Some(journal) = &self.journal {
+            journal.record_submit(&id, &spec, opts.origin.as_deref(), false);
+        }
+        let frames =
+            Arc::new(if opts.detached { FrameQueue::detached() } else { FrameQueue::new() });
         state.jobs.insert(
             id.clone(),
             JobEntry {
@@ -197,6 +286,8 @@ impl Scheduler {
                 wall_us: None,
                 error: None,
                 result: None,
+                origin: opts.origin,
+                recovered: false,
             },
         );
         state.queue.push_back(id.clone());
@@ -207,12 +298,74 @@ impl Scheduler {
         Ok((id, frames))
     }
 
+    /// Replay the journal left by a previous process: live (queued or
+    /// running) records re-enter the queue under their original ids —
+    /// running ones resume from their spilled checkpoint — and terminal
+    /// records are compacted away.  Recovered jobs run headless
+    /// (detached frame queues: their submitting connections died with
+    /// the old process).  Returns how many jobs re-entered.
+    pub fn recover(&self) -> usize {
+        let Some(journal) = &self.journal else { return 0 };
+        let mut live = journal.load_all();
+        live.retain(|job| {
+            if job.terminal() {
+                journal.remove(&job.id);
+                return false;
+            }
+            true
+        });
+        // Original submission order; `pick` re-applies priority on top.
+        live.sort_by_key(|j| j.seq);
+        let mut state = self.locked();
+        let mut count = 0u64;
+        for job in live {
+            state.next_id = state.next_id.max(job.seq + 1);
+            if state.jobs.contains_key(&job.id) {
+                continue;
+            }
+            let resumes = job.spec.resume.is_some();
+            // Re-journal as queued so a second crash replays this entry
+            // the same way (keeping the spilled checkpoint as `resume`).
+            journal.record_submit(&job.id, &job.spec, job.origin.as_deref(), true);
+            crate::obs::publish(
+                crate::obs::Event::new("job.recovered")
+                    .tag("job", &job.id)
+                    .tag("combo", &job.spec.combo)
+                    .tag("was", &job.phase)
+                    .flag("from_checkpoint", resumes),
+            );
+            state.jobs.insert(
+                job.id.clone(),
+                JobEntry {
+                    spec: job.spec,
+                    phase: JobPhase::Queued,
+                    cancel: Arc::new(AtomicBool::new(false)),
+                    frames: Arc::new(FrameQueue::detached()),
+                    seq: job.seq,
+                    wall_us: None,
+                    error: None,
+                    result: None,
+                    origin: job.origin,
+                    recovered: true,
+                },
+            );
+            state.queue.push_back(job.id);
+            count += 1;
+        }
+        self.stats.jobs_submitted.fetch_add(count, Ordering::Relaxed);
+        self.stats.jobs_recovered.fetch_add(count, Ordering::Relaxed);
+        self.stats.job_queue_depth.store(state.queue.len(), Ordering::Relaxed);
+        drop(state);
+        self.cond.notify_all();
+        count as usize
+    }
+
     /// Cancel a job.  Queued jobs stop immediately; running jobs stop at
     /// the trainer's next round boundary (with a final checkpoint frame
     /// when the submitter asked for checkpoints).  Terminal jobs are a
     /// no-op.  Returns the phase name reported to the canceller.
     pub fn cancel(&self, id: &str) -> Result<&'static str> {
-        let mut state = self.state.lock().unwrap();
+        let mut state = self.locked();
         let Some(entry) = state.jobs.get_mut(id) else {
             bail!("unknown job {id:?}");
         };
@@ -224,7 +377,10 @@ impl Scheduler {
                 state.finished.push_back(id.to_string());
                 self.stats.jobs_cancelled.fetch_add(1, Ordering::Relaxed);
                 self.stats.job_queue_depth.store(state.queue.len(), Ordering::Relaxed);
-                Self::evict_finished(&mut state);
+                if let Some(journal) = &self.journal {
+                    journal.record_phase(id, JobPhase::Cancelled.name(), None);
+                }
+                Self::evict_finished(&mut state, self.journal.as_ref());
                 Ok(JobPhase::Cancelled.name())
             }
             JobPhase::Running => {
@@ -241,13 +397,16 @@ impl Scheduler {
     /// checkpoint frame for hand-off before the daemon exits.
     pub fn drain(&self) {
         self.draining.store(true, Ordering::SeqCst);
-        let mut state = self.state.lock().unwrap();
+        let mut state = self.locked();
         let queued: Vec<String> = state.queue.drain(..).collect();
         for id in queued {
             if let Some(entry) = state.jobs.get_mut(&id) {
                 entry.phase = JobPhase::Cancelled;
                 entry.frames.close();
                 self.stats.jobs_cancelled.fetch_add(1, Ordering::Relaxed);
+            }
+            if let Some(journal) = &self.journal {
+                journal.record_phase(&id, JobPhase::Cancelled.name(), None);
             }
             state.finished.push_back(id);
         }
@@ -257,7 +416,7 @@ impl Scheduler {
                 entry.cancel.store(true, Ordering::SeqCst);
             }
         }
-        Self::evict_finished(&mut state);
+        Self::evict_finished(&mut state, self.journal.as_ref());
         drop(state);
         self.cond.notify_all();
     }
@@ -268,7 +427,7 @@ impl Scheduler {
 
     /// The `jobs` verb payload: one entry per known job, newest first.
     pub fn jobs_json(&self) -> Json {
-        let state = self.state.lock().unwrap();
+        let state = self.locked();
         let mut entries: Vec<(&String, &JobEntry)> = state.jobs.iter().collect();
         entries.sort_by_key(|(_, e)| std::cmp::Reverse(e.seq));
         let list = entries
@@ -282,6 +441,12 @@ impl Scheduler {
                 o.insert("quantized".to_string(), Json::Bool(e.spec.quantized));
                 o.insert("priority".to_string(), Json::Num(e.spec.priority as f64));
                 o.insert("phase".to_string(), Json::Str(e.phase.name().to_string()));
+                if e.recovered {
+                    o.insert("recovered".to_string(), Json::Bool(true));
+                }
+                if let Some(origin) = &e.origin {
+                    o.insert("origin".to_string(), Json::Str(origin.clone()));
+                }
                 if let Some(us) = e.wall_us {
                     o.insert("wall_us".to_string(), Json::Num(us as f64));
                 }
@@ -294,12 +459,55 @@ impl Scheduler {
         Json::Arr(list)
     }
 
+    /// Lightweight digests of every *queued* job, in queue order — the
+    /// gossip payload that rides `jobs`/`stats` responses and streamed
+    /// checkpoint frames, giving clients enough to resubmit a dead
+    /// host's queue to survivors (see `server::client::RemoteTrainer`).
+    pub fn queued_digest(&self) -> Json {
+        let state = self.locked();
+        let list = state
+            .queue
+            .iter()
+            .filter_map(|id| {
+                let e = state.jobs.get(id)?;
+                let mut o = BTreeMap::new();
+                o.insert("job".to_string(), Json::Str(id.clone()));
+                o.insert("combo".to_string(), Json::Str(e.spec.combo.clone()));
+                o.insert("seed".to_string(), Json::Num(e.spec.seed as f64));
+                o.insert("actors".to_string(), Json::Num(e.spec.actors as f64));
+                o.insert(
+                    "max_env_steps".to_string(),
+                    Json::Num(e.spec.limits.max_env_steps as f64),
+                );
+                o.insert(
+                    "max_episodes".to_string(),
+                    Json::Num(e.spec.limits.max_episodes as f64),
+                );
+                o.insert("quantized".to_string(), Json::Bool(e.spec.quantized));
+                o.insert("priority".to_string(), Json::Num(e.spec.priority as f64));
+                o.insert(
+                    "checkpoint_every".to_string(),
+                    Json::Num(e.spec.checkpoint_every as f64),
+                );
+                o.insert(
+                    "progress_every".to_string(),
+                    Json::Num(e.spec.progress_every as f64),
+                );
+                if let Some(origin) = &e.origin {
+                    o.insert("origin".to_string(), Json::Str(origin.clone()));
+                }
+                Some(Json::Obj(o))
+            })
+            .collect();
+        Json::Arr(list)
+    }
+
     /// The final-response payload for a job whose frame queue closed:
     /// terminal status, the cancelled flag, the runner's result fields
     /// (backend, threads, bit-exact metrics) or error, and the live
     /// draining flag so a handed-off client knows to resubmit elsewhere.
     pub fn final_result(&self, id: &str) -> Json {
-        let state = self.state.lock().unwrap();
+        let state = self.locked();
         let mut body = BTreeMap::new();
         body.insert("job".to_string(), Json::Str(id.to_string()));
         match state.jobs.get(id) {
@@ -333,7 +541,7 @@ impl Scheduler {
     pub fn run_runner(&self, shutdown: &AtomicBool) {
         loop {
             let claimed = {
-                let mut state = self.state.lock().unwrap();
+                let mut state = self.locked();
                 loop {
                     if let Some(id) = Self::pick(&state) {
                         break Some(Self::claim(&mut state, &id, &self.stats));
@@ -341,7 +549,10 @@ impl Scheduler {
                     if shutdown.load(Ordering::SeqCst) {
                         break None;
                     }
-                    let (s, _) = self.cond.wait_timeout(state, RUNNER_POLL).unwrap();
+                    let (s, _) = self
+                        .cond
+                        .wait_timeout(state, RUNNER_POLL)
+                        .unwrap_or_else(PoisonError::into_inner);
                     state = s;
                 }
             };
@@ -375,10 +586,21 @@ impl Scheduler {
     }
 
     fn execute(&self, id: String, spec: JobSpec, cancel: &AtomicBool, frames: &FrameQueue) {
+        if let Some(journal) = &self.journal {
+            journal.record_phase(&id, JobPhase::Running.name(), None);
+        }
         let t0 = Instant::now();
-        let outcome = run_job(&id, &spec, cancel, frames);
+        // A panic anywhere in the planning/training stack must land the
+        // job in `failed` — not unwind through the runner loop and leave
+        // the daemon one runner short (or, mid-lock, poisoned).
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            run_job(&id, &spec, cancel, frames, self.journal.as_ref())
+        }))
+        .unwrap_or_else(|payload| {
+            Err(anyhow!("job runner panicked: {}", panic_message(payload.as_ref())))
+        });
         let wall_us = t0.elapsed().as_micros() as u64;
-        let mut state = self.state.lock().unwrap();
+        let mut state = self.locked();
         self.stats.jobs_running.fetch_sub(1, Ordering::Relaxed);
         self.stats.record_job_wall(wall_us);
         if let Some(entry) = state.jobs.get_mut(&id) {
@@ -401,36 +623,79 @@ impl Scheduler {
                 }
                 _ => self.stats.jobs_failed.fetch_add(1, Ordering::Relaxed),
             };
+            if let Some(journal) = &self.journal {
+                // The final checkpoint frame (if any) was spilled by the
+                // sink before the trainer returned, so this terminal
+                // stamp rides alongside the job's complete final state.
+                journal.record_phase(&id, entry.phase.name(), entry.error.as_deref());
+            }
             entry.frames.close();
         }
         state.finished.push_back(id);
-        Self::evict_finished(&mut state);
+        Self::evict_finished(&mut state, self.journal.as_ref());
     }
 
     /// Keep the most recent [`FINISHED_RETAINED`] terminal jobs so a
-    /// long-lived daemon's `jobs` listing stays bounded.
-    fn evict_finished(state: &mut SchedState) {
+    /// long-lived daemon's `jobs` listing (and journal directory) stays
+    /// bounded.
+    fn evict_finished(state: &mut SchedState, journal: Option<&Journal>) {
         while state.finished.len() > FINISHED_RETAINED {
             if let Some(old) = state.finished.pop_front() {
+                if let Some(journal) = journal {
+                    journal.remove(&old);
+                }
                 state.jobs.remove(&old);
             }
         }
     }
 }
 
+/// Human-readable panic payload (panics carry `&str` or `String` in
+/// practice; anything else is reported opaquely).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Run one job exactly the way `apdrl train` runs locally: static-phase
 /// plan (through the shared process-wide plan cache), CPU backend from
-/// the plan, then the training loop with job hooks attached.
+/// the plan, then the training loop with job hooks attached.  With a
+/// journal, every checkpoint frame is spilled to disk on its way to the
+/// frame queue (`job.spilled` on the obs bus), so a crash loses at most
+/// one `checkpoint_every` window of progress.
 fn run_job(
     id: &str,
     spec: &JobSpec,
     cancel: &AtomicBool,
     frames: &FrameQueue,
+    journal: Option<&Journal>,
 ) -> Result<TrainResult> {
+    #[cfg(test)]
+    if spec.seed == PANIC_INJECTION_SEED {
+        panic!("injected runner panic");
+    }
     let c = try_combo(&spec.combo)?;
     let plan = LocalPlanner.plan(&PlanRequest::new(c.clone(), c.batch, spec.quantized))?;
     let mut backend = CpuBackend::from_outcome(&plan)?;
-    let mut sink = |frame: &Json| frames.push(frame.clone());
+    let mut sink = |frame: &Json| {
+        if frame.get("frame").and_then(Json::as_str) == Some("checkpoint") {
+            if let (Some(journal), Some(data)) = (journal, frame.get("data")) {
+                journal.record_checkpoint(id, data);
+                crate::obs::publish(
+                    crate::obs::Event::new("job.spilled").tag("job", id).num(
+                        "env_steps",
+                        frame.get("env_steps").and_then(Json::as_f64).unwrap_or(0.0),
+                    ),
+                );
+            }
+        }
+        frames.push(frame.clone());
+    };
     let opts = JobOptions {
         job_id: Some(id.to_string()),
         cancel: Some(cancel),
@@ -471,6 +736,13 @@ mod tests {
             progress_every: 0,
             resume: None,
         }
+    }
+
+    fn scratch(tag: &str) -> std::path::PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("apdrl_sched_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
     }
 
     #[test]
@@ -579,5 +851,161 @@ mod tests {
         });
         assert_eq!(stats.jobs_completed.load(Ordering::Relaxed), 1);
         assert_eq!(stats.jobs_running.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn a_panicking_job_lands_failed_without_wedging_the_scheduler() {
+        let stats = Arc::new(ServerStats::new());
+        let sched = Scheduler::new(4, Arc::clone(&stats));
+        let shutdown = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            s.spawn(|| sched.run_runner(&shutdown));
+            let mut bomb = spec(0);
+            bomb.seed = PANIC_INJECTION_SEED;
+            let (id, frames) = sched.submit(bomb).unwrap();
+            while frames.next().is_some() {}
+            let body = sched.final_result(&id);
+            assert_eq!(body.get("status").and_then(Json::as_str), Some("failed"));
+            let err = body.get("error").and_then(Json::as_str).unwrap_or("");
+            assert!(err.contains("injected runner panic"), "{err:?}");
+            // The scheduler (and the same runner thread) must keep
+            // working: a fresh job runs to completion afterwards.
+            let (id2, frames2) = sched.submit(spec(0)).unwrap();
+            while frames2.next().is_some() {}
+            let body2 = sched.final_result(&id2);
+            assert_eq!(body2.get("status").and_then(Json::as_str), Some("done"));
+            shutdown.store(true, Ordering::SeqCst);
+        });
+        assert_eq!(stats.jobs_failed.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.jobs_completed.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.jobs_running.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn verb_paths_survive_a_poisoned_state_lock() {
+        let sched = Scheduler::new(4, Arc::new(ServerStats::new()));
+        let (id, _) = sched.submit(spec(0)).unwrap();
+        // Poison the state mutex the way an uncaught runner panic under
+        // the lock would.
+        let _ = std::thread::scope(|s| {
+            s.spawn(|| {
+                let _guard = sched.state.lock().unwrap();
+                panic!("poison the scheduler lock");
+            })
+            .join()
+        });
+        assert!(sched.state.lock().is_err(), "the lock really is poisoned");
+        // Every verb path must keep working on the inner state.
+        let (id2, _) = sched.submit(spec(1)).unwrap();
+        assert_eq!(sched.jobs_json().as_arr().unwrap().len(), 2);
+        assert_eq!(sched.cancel(&id).unwrap(), "cancelled");
+        assert!(sched.queued_digest().as_arr().unwrap().len() == 1);
+        assert!(sched.final_result(&id2).get("status").is_some());
+        sched.drain();
+        assert!(sched.submit(spec(0)).is_err());
+    }
+
+    #[test]
+    fn origin_tagged_resubmissions_are_idempotent() {
+        let stats = Arc::new(ServerStats::new());
+        let sched = Scheduler::new(4, Arc::clone(&stats));
+        let opts = SubmitOpts { origin: Some("h1/job-9".into()), detached: true };
+        let (a, _) = sched.submit_opts(spec(0), opts.clone()).unwrap();
+        let (b, _) = sched.submit_opts(spec(0), opts).unwrap();
+        assert_eq!(a, b, "same origin must land the same job");
+        assert_eq!(stats.jobs_submitted.load(Ordering::Relaxed), 1);
+        let digest = sched.queued_digest();
+        let arr = digest.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("origin").and_then(Json::as_str), Some("h1/job-9"));
+        assert_eq!(arr[0].get("max_env_steps").and_then(Json::as_usize), Some(300));
+        let listing = sched.jobs_json();
+        assert_eq!(
+            listing.as_arr().unwrap()[0].get("origin").and_then(Json::as_str),
+            Some("h1/job-9")
+        );
+    }
+
+    #[test]
+    fn journal_replay_requeues_live_jobs_and_compacts_terminal_ones() {
+        let dir = scratch("replay");
+        let stats = Arc::new(ServerStats::new());
+        {
+            let sched = Scheduler::with_journal(
+                8,
+                Arc::clone(&stats),
+                Some(Journal::open(&dir)),
+            );
+            sched.submit(spec(0)).unwrap(); // job-0, stays queued
+            sched.submit(spec(7)).unwrap(); // job-1, higher priority
+            // Process "crashes" here: both jobs sit in the journal.
+        }
+        let journal = Journal::open(&dir);
+        journal.record_phase("job-0", "running", None); // crashed mid-run
+        let sched =
+            Scheduler::with_journal(8, Arc::new(ServerStats::new()), Some(Journal::open(&dir)));
+        assert_eq!(sched.recover(), 2);
+        let listing = sched.jobs_json();
+        let arr = listing.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        for e in arr {
+            assert_eq!(e.get("phase").and_then(Json::as_str), Some("queued"));
+            assert_eq!(e.get("recovered").and_then(Json::as_bool), Some(true));
+        }
+        // Priority survives recovery: job-1 (priority 7) picks first,
+        // and fresh submissions continue past the recovered ids.
+        {
+            let state = sched.locked();
+            assert_eq!(Scheduler::pick(&state).as_deref(), Some("job-1"));
+        }
+        let (fresh, _) = sched.submit(spec(0)).unwrap();
+        assert_eq!(fresh, "job-2");
+        // Terminal records compact away on the next replay.
+        let journal = Journal::open(&dir);
+        journal.record_phase("job-0", "done", None);
+        journal.record_phase("job-1", "cancelled", None);
+        journal.record_phase("job-2", "failed", Some("x"));
+        let sched2 =
+            Scheduler::with_journal(8, Arc::new(ServerStats::new()), Some(Journal::open(&dir)));
+        assert_eq!(sched2.recover(), 0);
+        assert!(Journal::open(&dir).load_all().is_empty(), "terminal entries compacted");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recovered_running_jobs_resume_from_their_spilled_checkpoint() {
+        let dir = scratch("resume");
+        let stats = Arc::new(ServerStats::new());
+        let shutdown = AtomicBool::new(false);
+        // First life: run a checkpointing job to completion so the
+        // journal holds a real final checkpoint, then rewind its phase
+        // to "running" to simulate a crash just before the terminal
+        // stamp landed.
+        {
+            let sched = Scheduler::with_journal(
+                8,
+                Arc::clone(&stats),
+                Some(Journal::open(&dir)),
+            );
+            std::thread::scope(|s| {
+                s.spawn(|| sched.run_runner(&shutdown));
+                let mut want = spec(0);
+                want.checkpoint_every = 100;
+                let (_, frames) = sched.submit(want).unwrap();
+                while frames.next().is_some() {}
+                shutdown.store(true, Ordering::SeqCst);
+            });
+        }
+        Journal::open(&dir).record_phase("job-0", "running", None);
+        let sched =
+            Scheduler::with_journal(8, Arc::new(ServerStats::new()), Some(Journal::open(&dir)));
+        assert_eq!(sched.recover(), 1);
+        let state = sched.locked();
+        let entry = &state.jobs["job-0"];
+        let ckpt = entry.spec.resume.as_ref().expect("recovered job carries its checkpoint");
+        assert_eq!(ckpt.combo, "dqn_cartpole");
+        assert!(!ckpt.ep_rewards.is_empty(), "checkpoint holds streamed reward history");
+        drop(state);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -18,7 +18,10 @@
 //! * [`jobs`] — the multi-tenant training-job [`Scheduler`] behind the
 //!   `train` verb: bounded priority queue, runner-thread pool, per-job
 //!   frame streams, cancel and graceful drain; training-as-a-service on
-//!   top of the checkpoint format in `coordinator::checkpoint`.
+//!   top of the checkpoint format in `coordinator::checkpoint`.  With
+//!   `APDRL_JOB_DIR` set, the scheduler journals every job to disk
+//!   ([`jobs::journal`]) and the daemon replays the journal on boot —
+//!   crash-safe, bit-identical restart recovery.
 //! * [`client`] — the blocking [`RemotePlanner`]: the single-daemon
 //!   remote implementation of the `Planner` trait, with transparent
 //!   reconnect-and-retry; plus [`RemoteTrainer`], the federation-aware
@@ -50,6 +53,6 @@ pub mod stats;
 pub use client::{server_addr, RemotePlanner, RemoteTrainer, TrainSubmission, ENV_ADDR};
 pub use daemon::{serve, Server, DEFAULT_ADDR};
 pub use federation::{parse_host_list, select_planner, FederatedPlanner};
-pub use jobs::{JobSpec, Scheduler};
+pub use jobs::{JobSpec, Journal, Scheduler, SubmitOpts, ENV_JOB_DIR};
 pub use protocol::PROTOCOL_VERSION;
 pub use stats::ServerStats;

@@ -107,6 +107,13 @@ pub enum Request {
     /// Submit a training job.  `resume` carries an opaque checkpoint
     /// object (validated by the scheduler at submit time, not here — the
     /// protocol layer does not depend on checkpoint internals).
+    ///
+    /// `detach` and `origin` are additive v3 fields (old daemons never
+    /// see them — they are omitted when defaulted — and old clients
+    /// never send them): `detach` asks for an immediate ack instead of
+    /// a frame stream (the job runs headless), and `origin` tags a
+    /// fail-over resubmission of a dead host's queued job so survivors
+    /// can dedup it exactly-once.
     Train {
         combo: String,
         seed: u64,
@@ -121,6 +128,10 @@ pub enum Request {
         /// Emit a `progress` frame every N env steps (0 = off).
         progress_every: u64,
         resume: Option<Json>,
+        /// Submit-and-return: no frame streaming, the job runs headless.
+        detach: bool,
+        /// Fail-over idempotency key (`host/job-id` on the dead host).
+        origin: Option<String>,
     },
     Jobs,
     Cancel { job: String },
@@ -292,6 +303,12 @@ impl Request {
                     Some(v @ Json::Obj(_)) => Some(v.clone()),
                     Some(_) => bail!("train: `resume` must be a checkpoint object"),
                 };
+                let detach = root.get("detach").and_then(Json::as_bool).unwrap_or(false);
+                let origin = match root.get("origin") {
+                    None => None,
+                    Some(Json::Str(s)) => Some(s.clone()),
+                    Some(_) => bail!("train: `origin` must be a string"),
+                };
                 Ok(Request::Train {
                     combo,
                     seed,
@@ -303,6 +320,8 @@ impl Request {
                     checkpoint_every,
                     progress_every,
                     resume,
+                    detach,
+                    origin,
                 })
             }
             "jobs" => Ok(Request::Jobs),
@@ -387,6 +406,8 @@ impl Request {
                 checkpoint_every,
                 progress_every,
                 resume,
+                detach,
+                origin,
             } => {
                 obj.insert("verb".into(), Json::Str("train".into()));
                 obj.insert("combo".into(), Json::Str(combo.clone()));
@@ -398,10 +419,17 @@ impl Request {
                 obj.insert("priority".into(), Json::Num(*priority as f64));
                 obj.insert("checkpoint_every".into(), Json::Num(*checkpoint_every as f64));
                 obj.insert("progress_every".into(), Json::Num(*progress_every as f64));
-                // Omitted when absent: fresh submissions stay small and
-                // a missing key is unambiguous on the wire.
+                // Omitted when absent/defaulted: fresh attached
+                // submissions are byte-identical to pre-durability
+                // clients' lines, and a missing key is unambiguous.
                 if let Some(ckpt) = resume {
                     obj.insert("resume".into(), ckpt.clone());
+                }
+                if *detach {
+                    obj.insert("detach".into(), Json::Bool(true));
+                }
+                if let Some(origin) = origin {
+                    obj.insert("origin".into(), Json::Str(origin.clone()));
                 }
             }
             Request::Jobs => {
@@ -778,6 +806,8 @@ mod tests {
                 checkpoint_every: 1_000,
                 progress_every: 500,
                 resume: Some(Json::obj(vec![("ckpt_version", Json::Num(1.0))])),
+                detach: true,
+                origin: Some("127.0.0.1:7040/job-2".into()),
             },
             Request::Jobs,
             Request::Cancel { job: "job-3".into() },
@@ -878,6 +908,8 @@ mod tests {
             checkpoint_every,
             progress_every,
             resume,
+            detach,
+            origin,
         } = &min
         else {
             panic!("parsed as train")
@@ -888,8 +920,14 @@ mod tests {
         assert_eq!(*priority, 0);
         assert_eq!((*checkpoint_every, *progress_every), (0, 0));
         assert!(resume.is_none());
-        // A fresh submission never ships a `resume` key.
-        assert!(!min.to_line().unwrap().contains("resume"));
+        assert!(!detach, "pre-durability lines parse as attached submissions");
+        assert!(origin.is_none());
+        // A fresh attached submission never ships the optional keys: its
+        // wire line is byte-identical to pre-durability clients'.
+        let line = min.to_line().unwrap();
+        assert!(!line.contains("resume"));
+        assert!(!line.contains("detach"));
+        assert!(!line.contains("origin"));
         assert_eq!(min.verb(), "train");
         // Strict field validation: no silent truncation, no scalar resume.
         for bad in [
@@ -899,6 +937,7 @@ mod tests {
             r#"{"v":3,"verb":"train","combo":"dqn_cartpole","priority":0.5}"#,
             r#"{"v":3,"verb":"train","combo":"dqn_cartpole","checkpoint_every":-5}"#,
             r#"{"v":3,"verb":"train","combo":"dqn_cartpole","resume":42}"#,
+            r#"{"v":3,"verb":"train","combo":"dqn_cartpole","origin":7}"#,
             r#"{"v":3,"verb":"cancel"}"#,
         ] {
             assert!(Request::parse_line(bad).is_err(), "{bad} must not parse");

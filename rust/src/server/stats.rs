@@ -67,6 +67,9 @@ pub struct ServerStats {
     pub jobs_failed: AtomicU64,
     /// Submissions bounced (queue full or daemon draining).
     pub jobs_rejected: AtomicU64,
+    /// Jobs replayed from the `APDRL_JOB_DIR` journal at boot (each is
+    /// also counted in `jobs_submitted`): recovered-vs-fresh provenance.
+    pub jobs_recovered: AtomicU64,
     /// Jobs currently waiting in the scheduler queue.
     pub job_queue_depth: AtomicUsize,
     /// Jobs currently executing on a runner thread.
@@ -182,6 +185,7 @@ impl ServerStats {
         jobs.insert("cancelled".into(), num(self.jobs_cancelled.load(Ordering::Relaxed)));
         jobs.insert("failed".into(), num(self.jobs_failed.load(Ordering::Relaxed)));
         jobs.insert("rejected".into(), num(self.jobs_rejected.load(Ordering::Relaxed)));
+        jobs.insert("recovered".into(), num(self.jobs_recovered.load(Ordering::Relaxed)));
         jobs.insert(
             "queue_depth".into(),
             num(self.job_queue_depth.load(Ordering::Relaxed) as u64),
@@ -344,7 +348,7 @@ mod tests {
             "calibration provenance section"
         );
         let jobs = j.get("jobs").expect("jobs section");
-        for key in ["submitted", "completed", "cancelled", "failed", "rejected"] {
+        for key in ["submitted", "completed", "cancelled", "failed", "rejected", "recovered"] {
             assert_eq!(jobs.get(key).and_then(Json::as_usize), Some(0), "{key}");
         }
         assert_eq!(jobs.get("queue_depth").and_then(Json::as_usize), Some(0));

@@ -1,0 +1,113 @@
+//! Crash-safe file persistence.
+//!
+//! Every persisted artifact in this crate (plan cache, calibration
+//! table, job journal) is a single JSON document that readers validate
+//! wholesale: a torn half-written file fails the schema check and
+//! silently degrades to a cold start.  [`atomic_write`] closes that
+//! window — the bytes land in a sibling temp file first, are fsynced,
+//! and then `rename(2)` moves them over the live path.  On the same
+//! filesystem the rename is atomic, so readers observe either the old
+//! complete file or the new complete file, never a prefix.
+
+use std::fs;
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic discriminator so concurrent writers in one process (e.g.
+/// two runner threads journalling different jobs into the same
+/// directory) never collide on a temp name.
+static TEMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Sibling temp path for `path`: same directory (so the final rename
+/// stays on one filesystem), dot-prefixed so directory scans skip it.
+fn temp_sibling(path: &Path) -> PathBuf {
+    let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("file");
+    let pid = std::process::id();
+    let seq = TEMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    path.with_file_name(format!(".{name}.tmp.{pid}.{seq}"))
+}
+
+/// Write `contents` to `path` atomically: temp sibling + fsync +
+/// rename.  Parent directories are created as needed.  On any error
+/// the temp file is removed and the previous `path` contents (if any)
+/// are left untouched.
+pub fn atomic_write(path: &Path, contents: &[u8]) -> io::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            fs::create_dir_all(parent)?;
+        }
+    }
+    let tmp = temp_sibling(path);
+    let result = (|| -> io::Result<()> {
+        let mut f = fs::File::create(&tmp)?;
+        f.write_all(contents)?;
+        // Flush to stable storage before the rename publishes the file:
+        // otherwise a power loss could leave a *renamed* but empty file,
+        // which is exactly the torn state this helper exists to prevent.
+        f.sync_all()?;
+        fs::rename(&tmp, path)
+    })();
+    if result.is_err() {
+        let _ = fs::remove_file(&tmp);
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("apdrl_fsio_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn atomic_write_round_trips_and_creates_parents() {
+        let dir = scratch_dir("roundtrip");
+        let path = dir.join("nested/deeper/out.json");
+        atomic_write(&path, b"{\"v\":1}").unwrap();
+        assert_eq!(fs::read(&path).unwrap(), b"{\"v\":1}");
+        // Overwrite in place: readers see old-complete or new-complete.
+        atomic_write(&path, b"{\"v\":2}").unwrap();
+        assert_eq!(fs::read(&path).unwrap(), b"{\"v\":2}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn atomic_write_leaves_no_temp_droppings() {
+        let dir = scratch_dir("clean");
+        let path = dir.join("out.json");
+        atomic_write(&path, b"data").unwrap();
+        let names: Vec<String> = fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, vec!["out.json".to_string()]);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn failed_write_preserves_the_previous_file() {
+        let dir = scratch_dir("preserve");
+        let path = dir.join("out.json");
+        atomic_write(&path, b"original").unwrap();
+        // Simulate the interruption window: a temp sibling exists but the
+        // rename never happened (writer died).  The live file is intact
+        // and a later successful write still lands atomically.
+        let stale = path.with_file_name(".out.json.tmp.dead.0");
+        fs::write(&stale, b"torn-partial").unwrap();
+        assert_eq!(fs::read(&path).unwrap(), b"original");
+        atomic_write(&path, b"replacement").unwrap();
+        assert_eq!(fs::read(&path).unwrap(), b"replacement");
+        // Writing to a path whose parent is an existing *file* must fail
+        // without disturbing anything.
+        let blocked = path.join("child.json"); // out.json is a file, not a dir
+        assert!(atomic_write(&blocked, b"x").is_err());
+        assert_eq!(fs::read(&path).unwrap(), b"replacement");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -3,6 +3,7 @@
 //! property-testing harness and a micro-benchmark runner.
 
 pub mod bench;
+pub mod fsio;
 pub mod json;
 pub mod proplite;
 pub mod rng;

@@ -19,8 +19,10 @@ use apdrl::coordinator::{
     combo, static_phase, train_combo_actors, LocalPlanner, PlanRequest, Planner, TrainLimits,
 };
 use apdrl::exec::CpuBackend;
-use apdrl::server::{RemotePlanner, RemoteTrainer, Server, TrainSubmission, PROTOCOL_VERSION};
-use apdrl::util::json::Json;
+use apdrl::server::{
+    Journal, RemotePlanner, RemoteTrainer, Server, TrainSubmission, PROTOCOL_VERSION,
+};
+use apdrl::util::json::{hex_f64s, Json};
 
 /// Boot a server on an ephemeral loopback port; returns its address and
 /// the thread that runs it (joined after `shutdown`).
@@ -598,6 +600,275 @@ fn dying_host_hands_the_job_off_to_a_survivor_bit_exactly() {
     }
     let survivor = if killed == addr_a { &addr_b } else { &addr_a };
     RemotePlanner::connect(survivor).unwrap().shutdown().unwrap();
+    handle_a.join().unwrap();
+    handle_b.join().unwrap();
+}
+
+/// One raw request/response round trip over a fresh connection.
+fn raw_request(addr: &str, line: &str) -> Json {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    stream.flush().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut buf = String::new();
+    reader.read_line(&mut buf).unwrap();
+    Json::parse(buf.trim()).expect("server must answer valid JSON")
+}
+
+/// The acceptance crash-recovery scenario: a daemon with `APDRL_JOB_DIR`
+/// set is SIGKILLed mid-job (right after its first spilled checkpoint),
+/// restarted on the same journal directory, and the recovered job runs
+/// to completion headless — with a final reward log **bit-identical**
+/// to an uninterrupted in-process control run of the same spec.  Runs
+/// the real binary: recovery must survive a hard process death, not a
+/// graceful drain.
+#[test]
+fn sigkilled_daemon_resumes_jobs_bit_identically_after_restart() {
+    let exe = env!("CARGO_BIN_EXE_apdrl");
+    let dir = std::env::temp_dir()
+        .join(format!("apdrl_restart_test_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    // Reserve an ephemeral port, then free it for the child to bind.
+    let addr = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap().to_string();
+        drop(l);
+        addr
+    };
+    let spawn = |dir: &std::path::Path| {
+        std::process::Command::new(exe)
+            .args(["serve", "--addr", &addr, "--workers", "2"])
+            .env("APDRL_JOB_DIR", dir)
+            .stdout(std::process::Stdio::null())
+            .stderr(std::process::Stdio::null())
+            .spawn()
+            .expect("spawning apdrl serve must work")
+    };
+    let wait_ready = |addr: &str| {
+        for _ in 0..100 {
+            if TcpStream::connect(addr).is_ok() {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        panic!("daemon at {addr} never came up");
+    };
+
+    let mut child = spawn(&dir);
+    wait_ready(&addr);
+
+    // Submit the job *detached* (no client to fail over — the daemon
+    // restart must do the resuming), watch the journal *file* for the
+    // first spilled checkpoint, and hard-kill the daemon.  No TCP
+    // connection is open at kill time: a SIGKILLed peer of a live
+    // stream would leave the port in TIME_WAIT and the rebind flaky.
+    let ack = raw_request(
+        &addr,
+        r#"{"v":3,"verb":"train","combo":"dqn_cartpole","seed":9,"max_env_steps":12000,"max_episodes":100000,"checkpoint_every":150,"detach":true}"#,
+    );
+    assert_eq!(ack.get("job").and_then(Json::as_str), Some("job-0"), "{ack}");
+    let mut tries = 0;
+    loop {
+        tries += 1;
+        assert!(tries < 3_000, "no checkpoint ever spilled to the journal");
+        let spilled = Journal::open(&dir)
+            .load_all()
+            .iter()
+            .any(|r| r.id == "job-0" && r.phase == "running" && r.spec.resume.is_some());
+        if spilled {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    child.kill().unwrap(); // SIGKILL: no drain, no final checkpoint
+    child.wait().unwrap();
+
+    // Restart on the same journal directory: the job must come back as
+    // a recovered entry and run to completion without any client.
+    let mut child = spawn(&dir);
+    wait_ready(&addr);
+    let client = RemotePlanner::connect(&addr).unwrap();
+    let mut tries = 0;
+    let recovered_entry = loop {
+        tries += 1;
+        assert!(tries < 3_000, "recovered job never completed");
+        let (jobs, _) = client.jobs().unwrap();
+        let done = jobs.as_arr().unwrap().iter().find(|j| {
+            j.get("job").and_then(Json::as_str) == Some("job-0")
+                && j.get("phase").and_then(Json::as_str) == Some("done")
+        });
+        if let Some(j) = done {
+            break j.clone();
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    assert_eq!(
+        recovered_entry.get("recovered").and_then(Json::as_bool),
+        Some(true),
+        "the listing must report journal-replay provenance: {recovered_entry}"
+    );
+    let stats = client.stats().unwrap();
+    assert_eq!(
+        stats.get("jobs").and_then(|j| j.get("recovered")).and_then(Json::as_usize),
+        Some(1),
+        "{stats}"
+    );
+
+    // The journal's terminal record holds the final checkpoint; its
+    // reward log must match an uninterrupted control bit for bit.
+    let records = Journal::open(&dir).load_all();
+    let rec = records.iter().find(|r| r.id == "job-0").expect("journal record for job-0");
+    assert_eq!(rec.phase, "done");
+    let ckpt = rec.spec.resume.as_ref().expect("terminal record keeps the final checkpoint");
+    let c = combo("dqn_cartpole");
+    let plan = LocalPlanner.plan(&PlanRequest::new(c.clone(), c.batch, false)).unwrap();
+    let mut backend = CpuBackend::from_outcome(&plan).unwrap();
+    let limits = TrainLimits { max_env_steps: 12_000, max_episodes: 100_000 };
+    let control = train_combo_actors(&mut backend, &c, 9, limits, 1, false).unwrap();
+    assert_eq!(
+        hex_f64s(&ckpt.metrics.episode_rewards),
+        hex_f64s(&control.metrics.episode_rewards),
+        "SIGKILLed-and-restarted run diverged from the uninterrupted control"
+    );
+    assert_eq!(ckpt.metrics.env_steps, control.metrics.env_steps);
+    assert_eq!(ckpt.metrics.train_steps, control.metrics.train_steps);
+
+    client.shutdown().unwrap();
+    child.wait().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The queue-gossip acceptance scenario: host A runs two jobs (one
+/// streamed, one detached filler) with a third job queued behind them;
+/// checkpoint frames gossip A's queued digest to the streaming client;
+/// when A drains, the client fails the queued job over to survivor B —
+/// exactly once, origin-tagged — while the streamed job itself resumes
+/// on B from its newest checkpoint.
+#[test]
+fn dead_hosts_queued_jobs_fail_over_to_survivors_exactly_once() {
+    let (addr_a, handle_a) = boot(2);
+    let (addr_b, handle_b) = boot(2);
+
+    // The streamed job: long enough to outlive the choreography, short
+    // enough to finish on B.  Hosts are tried in order on a load tie,
+    // so the first submission lands on A.
+    let sub = TrainSubmission {
+        combo: "dqn_cartpole".into(),
+        seed: 4,
+        actors: 1,
+        max_env_steps: 8_000,
+        max_episodes: 100_000,
+        quantized: false,
+        priority: 0,
+        checkpoint_every: 100,
+        progress_every: 0,
+    };
+    let (addr_a2, addr_b2) = (addr_a.clone(), addr_b.clone());
+    let worker = std::thread::spawn(move || {
+        let trainer = RemoteTrainer::connect(&[addr_a2.clone(), addr_b2]).unwrap();
+        let mut killed = false;
+        let result = trainer
+            .train(&sub, &mut |host, f| {
+                if killed || f.get("frame").and_then(Json::as_str) != Some("checkpoint") {
+                    return;
+                }
+                // Shut A down only once its gossiped digest shows the
+                // queued fail-over candidate.
+                let queued_has_candidate = f
+                    .get("queued")
+                    .and_then(Json::as_arr)
+                    .map(|entries| {
+                        entries.iter().any(|e| {
+                            e.get("combo").and_then(Json::as_str) == Some("a2c_invpend")
+                        })
+                    })
+                    .unwrap_or(false);
+                if queued_has_candidate && host == addr_a2 {
+                    killed = true;
+                    RemotePlanner::connect(host).unwrap().shutdown().unwrap();
+                }
+            })
+            .unwrap();
+        (result, killed)
+    });
+
+    // Wait for the streamed job to occupy A's first runner…
+    let client_a = RemotePlanner::connect(&addr_a).unwrap();
+    let wait_running = |client: &RemotePlanner, id: &str| {
+        let mut tries = 0;
+        loop {
+            tries += 1;
+            assert!(tries < 2_000, "{id} never reached a runner");
+            let (jobs, _) = client.jobs().unwrap();
+            let running = jobs.as_arr().unwrap().iter().any(|j| {
+                j.get("job").and_then(Json::as_str) == Some(id)
+                    && j.get("phase").and_then(Json::as_str) == Some("running")
+            });
+            if running {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    };
+    wait_running(&client_a, "job-0");
+    // …fill the second runner with an endless detached job…
+    let filler = raw_request(
+        &addr_a,
+        r#"{"v":3,"verb":"train","combo":"dqn_cartpole","seed":6,"max_env_steps":50000000,"max_episodes":10000000,"detach":true}"#,
+    );
+    assert_eq!(filler.get("detached").and_then(Json::as_bool), Some(true), "{filler}");
+    wait_running(&client_a, "job-1");
+    // …and queue the fail-over candidate behind both.
+    let queued = raw_request(
+        &addr_a,
+        r#"{"v":3,"verb":"train","combo":"a2c_invpend","seed":8,"max_env_steps":400,"max_episodes":100000,"detach":true}"#,
+    );
+    assert_eq!(queued.get("job").and_then(Json::as_str), Some("job-2"), "{queued}");
+
+    // The worker sees the digest, drains A, fails the queue over to B,
+    // and finishes the streamed job there.
+    let (result, killed) = worker.join().unwrap();
+    assert!(killed, "the streaming client never saw job-2 in A's gossiped digest");
+    assert_eq!(result.get("status").and_then(Json::as_str), Some("done"), "{result}");
+    let metrics = RunMetrics::from_json(result.get("metrics").expect("metrics")).unwrap();
+    assert!(metrics.env_steps >= 8_000, "the resumed job must run to its step limit");
+
+    // Survivor B must complete the failed-over job exactly once,
+    // origin-tagged back to A's job id.
+    let client_b = RemotePlanner::connect(&addr_b).unwrap();
+    let mut tries = 0;
+    let origin_jobs: Vec<Json> = loop {
+        tries += 1;
+        assert!(tries < 2_000, "failed-over job never completed on the survivor");
+        let (jobs, _) = client_b.jobs().unwrap();
+        let tagged: Vec<Json> = jobs
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|j| j.get("origin").is_some())
+            .cloned()
+            .collect();
+        let all_done = !tagged.is_empty()
+            && tagged
+                .iter()
+                .all(|j| j.get("phase").and_then(Json::as_str) == Some("done"));
+        if all_done {
+            break tagged;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    assert_eq!(origin_jobs.len(), 1, "exactly one fail-over copy: {origin_jobs:?}");
+    let rescued = &origin_jobs[0];
+    assert_eq!(rescued.get("combo").and_then(Json::as_str), Some("a2c_invpend"));
+    assert_eq!(
+        rescued.get("origin").and_then(Json::as_str),
+        Some(format!("{addr_a}/job-2").as_str()),
+        "the origin tag must name the dead host's job id"
+    );
+    assert_eq!(rescued.get("seed").and_then(Json::as_f64), Some(8.0));
+
+    client_b.shutdown().unwrap();
     handle_a.join().unwrap();
     handle_b.join().unwrap();
 }
